@@ -1,0 +1,123 @@
+//! End-to-end serving driver: the §6 linearizable kvstore under a YCSB
+//! workload, with the AOT Pallas checksum kernel on the prefill path.
+//!
+//! ```text
+//! cargo run --release --example kvstore_ycsb [nodes] [threads] [secs]
+//! ```
+//!
+//! Reports Mops/s and latency percentiles per mix × distribution; this is
+//! the run recorded in EXPERIMENTS.md §End-to-end (serving).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::metrics::{mops, Histogram, Table};
+use loco::runtime::{artifacts_dir, Input, Runtime};
+use loco::workload::{KeyDist, Op, OpMix, WorkloadGen};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let nodes: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(3);
+    let threads: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let secs: f64 = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2.0);
+    let keys: u64 = 1 << 15;
+
+    let cluster =
+        Cluster::new(nodes, FabricConfig::threaded(LatencyModel::fast_sim()).with_mem_words(1 << 23));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let cfg = KvConfig { slots_per_node: (keys as usize).div_ceil(nodes) + 64, ..Default::default() };
+    let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(60));
+    }
+
+    // ---- prefill, checksums via the AOT Pallas kernel when available ----
+    let checksummer = {
+        let path = artifacts_dir().join("checksum1.hlo.txt");
+        if path.exists() {
+            Runtime::cpu().and_then(|rt| rt.load(&path)).ok()
+        } else {
+            None
+        }
+    };
+    println!(
+        "prefill checksums: {}",
+        if checksummer.is_some() { "AOT Pallas kernel (PJRT)" } else { "native fnv64" }
+    );
+    let loaded = (keys as f64 * 0.8) as u64;
+    let t0 = Instant::now();
+    for (i, (m, kv)) in mgrs.iter().zip(&kvs).enumerate() {
+        let ctx = m.ctx();
+        let mine: Vec<u64> = (0..loaded).filter(|&k| kv.home_of(k) == i as NodeId).collect();
+        // The artifact batch is 4096×1; compute checksums in bulk.
+        let cks: Option<Vec<u64>> = checksummer.as_ref().map(|exe| {
+            let mut cks = Vec::with_capacity(mine.len());
+            for chunk in mine.chunks(4096) {
+                let mut batch = vec![0u64; 4096];
+                batch[..chunk.len()].copy_from_slice(chunk); // value == key
+                let out = exe.run(&[Input::U64(&batch, &[4096, 1])]).expect("checksum artifact");
+                cks.extend_from_slice(&out[0].as_u64()[..chunk.len()]);
+            }
+            cks
+        });
+        kv.prefill_local(&ctx, &mine, |k| vec![k], cks.as_deref()).unwrap();
+    }
+    println!("prefilled {loaded} keys in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // ---- timed YCSB runs -------------------------------------------------
+    let mut table = Table::new(&["mix", "dist", "Mops/s", "p50 µs", "p99 µs"]);
+    for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
+        for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
+            let stop = Arc::new(AtomicBool::new(false));
+            let hist = Arc::new(Histogram::new());
+            let handles: Vec<_> = (0..nodes)
+                .flat_map(|ni| (0..threads).map(move |t| (ni, t)))
+                .map(|(ni, t)| {
+                    let m = mgrs[ni].clone();
+                    let kv = kvs[ni].clone();
+                    let stop = stop.clone();
+                    let hist = hist.clone();
+                    std::thread::spawn(move || {
+                        let ctx = m.ctx();
+                        let mut gen =
+                            WorkloadGen::new(keys, dist, mix, (ni * 100 + t + 1) as u64);
+                        let mut ops = 0u64;
+                        while !stop.load(Ordering::Relaxed) {
+                            let t0 = Instant::now();
+                            match gen.next_op() {
+                                Op::Read { key } => {
+                                    let _ = kv.get(&ctx, key);
+                                }
+                                Op::Update { key, value } => {
+                                    let _ = kv.update(&ctx, key, &[value]);
+                                }
+                            }
+                            hist.record_duration(t0.elapsed());
+                            ops += 1;
+                        }
+                        ops
+                    })
+                })
+                .collect();
+            let t0 = Instant::now();
+            std::thread::sleep(Duration::from_secs_f64(secs));
+            stop.store(true, Ordering::SeqCst);
+            let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let elapsed = t0.elapsed();
+            table.row(&[
+                mix.label(),
+                dist.label().into(),
+                format!("{:.4}", mops(total, elapsed)),
+                format!("{:.1}", hist.percentile_ns(50.0) as f64 / 1e3),
+                format!("{:.1}", hist.percentile_ns(99.0) as f64 / 1e3),
+            ]);
+        }
+    }
+    println!("\nkvstore YCSB — {nodes} nodes × {threads} threads, {keys} keys, fast_sim latency");
+    table.print();
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the paper's Fig. 1b application, verbatim in spirit — a
+//! microbenchmark that repeatedly waits on a network barrier and
+//! measures its latency.
+//!
+//! ```text
+//! cargo run --release --example quickstart [nodes] [iters]
+//! ```
+//!
+//! On real hardware each node would be a separate machine given a hosts
+//! file (`loco::parse_hosts` in the paper); here the simulated cluster
+//! plays that role and each "node" runs in its own thread.
+
+use std::time::{Duration, Instant};
+
+use loco::channels::barrier::Barrier;
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let num_nodes: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(4);
+    let iters: u64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(500);
+
+    // The manager/hosts setup of Fig. 1b, lines 33–37.
+    let cluster = Cluster::new(num_nodes, FabricConfig::threaded(LatencyModel::roce25()));
+
+    let handles: Vec<_> = (0..num_nodes as NodeId)
+        .map(|node_id| {
+            let cluster = cluster.clone();
+            std::thread::spawn(move || {
+                let cm = Manager::new(cluster, node_id); // loco::manager cm(...)
+                let bar = Barrier::new(&cm, "bar", cm.num_nodes()); // loco::barrier bar("bar", cm, num_nodes)
+                bar.wait_ready(Duration::from_secs(30)); // cm.wait_for_ready()
+                let ctx = cm.ctx();
+
+                let mut lats = Vec::with_capacity(iters as usize);
+                for _ in 0..iters {
+                    let t0 = Instant::now();
+                    bar.wait(&ctx); // bar.waiting()
+                    lats.push(t0.elapsed());
+                }
+                let avg =
+                    lats.iter().map(|d| d.as_secs_f64()).sum::<f64>() / lats.len() as f64;
+                (node_id, avg * 1e6)
+            })
+        })
+        .collect();
+
+    for h in handles {
+        let (node, avg_us) = h.join().unwrap();
+        println!("node {node}: Avg latency: {avg_us:.2} µs");
+    }
+}

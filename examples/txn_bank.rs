@@ -1,0 +1,123 @@
+//! Transactional bank-transfer demo (the §7.1 workload as an
+//! application): accounts striped across nodes, two ticket locks per
+//! transfer, fenced releases — with an invariant check that the total
+//! balance is conserved, which only holds if locking + fencing are
+//! correct.
+//!
+//! ```text
+//! cargo run --release --example txn_bank [nodes] [threads] [accounts] [txns]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use loco::bench::fig4::AccountArray;
+use loco::channels::ticket_lock::TicketLock;
+use loco::core::ctx::FenceScope;
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::util::rng::Rng;
+
+const NUM_LOCKS: usize = 64;
+const INITIAL: u64 = 1_000;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let nodes: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(3);
+    let threads: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(2);
+    let accounts: u64 = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(4096);
+    let txns: u64 = args.get(3).and_then(|a| a.parse().ok()).unwrap_or(2_000);
+
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(LatencyModel::fast_sim()));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = mgrs
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let locks: Arc<Vec<TicketLock>> = Arc::new(
+                    (0..NUM_LOCKS)
+                        .map(|i| TicketLock::new(&m, &format!("L{i}"), (i % m.num_nodes()) as NodeId))
+                        .collect(),
+                );
+                let accts = Arc::new(AccountArray::new(&m, "bank", accounts));
+                for l in locks.iter() {
+                    l.wait_ready(Duration::from_secs(60));
+                }
+                accts.wait_ready(Duration::from_secs(60));
+                // Node 0 funds every account.
+                if m.me() == 0 {
+                    let ctx = m.ctx();
+                    for a in 0..accounts {
+                        accts.write(&ctx, a, INITIAL);
+                    }
+                    ctx.fence(FenceScope::Thread);
+                }
+                let ths: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let m = m.clone();
+                        let locks = locks.clone();
+                        let accts = accts.clone();
+                        std::thread::spawn(move || {
+                            let ctx = m.ctx();
+                            let mut rng = Rng::seeded((mi * 97 + t) as u64 + 1);
+                            for _ in 0..txns {
+                                let a = rng.gen_range(accounts);
+                                let b = rng.gen_range(accounts);
+                                let (la, lb) = (a as usize % NUM_LOCKS, b as usize % NUM_LOCKS);
+                                let (l1, l2) = (la.min(lb), la.max(lb));
+                                locks[l1].lock(&ctx);
+                                if l2 != l1 {
+                                    locks[l2].lock(&ctx);
+                                }
+                                let va = accts.read(&ctx, a);
+                                let vb = accts.read(&ctx, b);
+                                let amt = rng.gen_range(50);
+                                accts.write(&ctx, a, va.wrapping_sub(amt));
+                                accts.write(&ctx, b, vb.wrapping_add(amt));
+                                ctx.fence(FenceScope::Thread);
+                                if l2 != l1 {
+                                    locks[l2].unlock(&ctx);
+                                }
+                                locks[l1].unlock(&ctx);
+                            }
+                        })
+                    })
+                    .collect();
+                for t in ths {
+                    t.join().unwrap();
+                }
+                // Audit from this node: sum all balances (quiesced).
+                (m.me(), accts)
+            })
+        })
+        .collect();
+
+    let mut audits = Vec::new();
+    for h in handles {
+        audits.push(h.join().unwrap());
+    }
+    let elapsed = t0.elapsed();
+    let total_txns = (nodes * threads) as u64 * txns;
+    println!(
+        "{total_txns} transfers across {nodes} nodes × {threads} threads in {:.2}s ({:.1} Ktxn/s)",
+        elapsed.as_secs_f64(),
+        total_txns as f64 / elapsed.as_secs_f64() / 1e3
+    );
+
+    // Conservation audit.
+    let (me, accts) = &audits[0];
+    let m = &mgrs[*me as usize];
+    let ctx = m.ctx();
+    let mut sum = 0u64;
+    for a in 0..accounts {
+        sum = sum.wrapping_add(accts.read(&ctx, a));
+    }
+    let expect = INITIAL.wrapping_mul(accounts);
+    assert_eq!(sum, expect, "balance not conserved: locking/fencing bug");
+    println!("audit PASS: total balance conserved ({sum})");
+}

@@ -1,0 +1,11 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Python runs ONCE (`make artifacts`) and never on the request path. The
+physics/control constants here are the single source of truth shared with
+the Rust mirror in `rust/src/apps/power.rs` (pinned by tests on both
+sides).
+"""
+import jax
+
+# 64-bit mode: the plant model is f64 and the checksum kernel is uint64.
+jax.config.update("jax_enable_x64", True)

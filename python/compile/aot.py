@@ -1,0 +1,79 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  converter1.hlo.txt      plant step, batch 1   (one per converter node)
+  converter128.hlo.txt    plant step, batch 128 (bulk/bench variant)
+  controller<N>.hlo.txt   PI update for N converters (N = 4, 8, 20)
+  checksum1.hlo.txt       FNV-1a, 4096 rows × 1 word (kvstore prefill)
+  checksum4.hlo.txt       FNV-1a, 1024 rows × 4 words
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+CONTROLLER_SIZES = (4, 8, 20)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_converter(batch: int) -> str:
+    state = jax.ShapeDtypeStruct((2, batch), jnp.float64)
+    duty = jax.ShapeDtypeStruct((batch,), jnp.float64)
+    return to_hlo_text(jax.jit(model.converter_step).lower(state, duty))
+
+
+def lower_controller(n: int) -> str:
+    v = jax.ShapeDtypeStruct((n,), jnp.float64)
+    integ = jax.ShapeDtypeStruct((n,), jnp.float64)
+    dt = jax.ShapeDtypeStruct((1,), jnp.float64)
+    return to_hlo_text(jax.jit(model.controller_step).lower(v, integ, dt))
+
+
+def lower_checksum(rows: int, words: int) -> str:
+    vals = jax.ShapeDtypeStruct((rows, words), jnp.uint64)
+    return to_hlo_text(jax.jit(model.checksum_batch).lower(vals))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {
+        "converter1.hlo.txt": lambda: lower_converter(1),
+        "converter128.hlo.txt": lambda: lower_converter(128),
+        "checksum1.hlo.txt": lambda: lower_checksum(4096, 1),
+        "checksum4.hlo.txt": lambda: lower_checksum(1024, 4),
+    }
+    for n in CONTROLLER_SIZES:
+        artifacts[f"controller{n}.hlo.txt"] = lambda n=n: lower_controller(n)
+
+    for name, build in artifacts.items():
+        path = os.path.join(args.out_dir, name)
+        text = build()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

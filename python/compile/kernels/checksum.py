@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: batched FNV-1a checksum over 64-bit words.
+
+The kvstore's value-atomicity checksum (paper §5.1.1/§6), computed in
+bulk for prefill/verify batches:
+
+    h = OFFSET;  for each word w:  h = (h ^ w) * PRIME   (mod 2^64)
+
+Rows are independent, so the batch axis rides the lanes; the word axis
+(W, small and static) is unrolled inside the kernel. The same function
+is implemented in Rust (`util::fnv64`) for the per-op hot path — the
+python tests and the Rust runtime test pin all three implementations to
+identical outputs.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANE = 128
+
+
+def _kernel(vals_ref, out_ref):
+    b, w = vals_ref.shape
+    h = jnp.full((b,), ref.FNV_OFFSET, dtype=jnp.uint64)
+    for k in range(w):  # static unroll over the word axis
+        h = (h ^ vals_ref[:, k]) * jnp.uint64(ref.FNV_PRIME)
+    out_ref[:] = h
+
+
+def checksum(vals):
+    """vals: u64[B, W] -> u64[B]."""
+    b, w = vals.shape
+    if b % LANE == 0 and b > LANE:
+        return pl.pallas_call(
+            _kernel,
+            grid=(b // LANE,),
+            in_specs=[pl.BlockSpec((LANE, w), lambda j: (j, 0))],
+            out_specs=pl.BlockSpec((LANE,), lambda j: (j,)),
+            out_shape=jax.ShapeDtypeStruct((b,), jnp.uint64),
+            interpret=True,
+        )(vals)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint64),
+        interpret=True,
+    )(vals)

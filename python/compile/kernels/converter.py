@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: batched buck-converter plant step.
+
+One semi-implicit Euler step of the averaged buck-converter dynamics
+(paper Appendix B), vectorized over the converter axis:
+
+    i' = i + dt * (d * Vin - v) / L
+    v' = v + dt * (i' - v / R) / C
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the physics is purely
+elementwise, so the natural layout is converters-along-lanes. The
+BlockSpec tiles the converter axis in lane-width (128) blocks so the
+HBM↔VMEM schedule matches what a real Mosaic lowering would want; VMEM
+footprint per block is 5 × 128 × 8 B ≈ 5 KiB — far under budget, so the
+kernel is bandwidth-trivial and roofline analysis lives in DESIGN.md.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and
+the Rust runtime execute. Correctness is pinned against `ref.py`.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANE = 128
+
+
+def _kernel(state_ref, duty_ref, out_state_ref, v_ref):
+    i_l = state_ref[0, :]
+    v_c = state_ref[1, :]
+    d = duty_ref[:]
+    i2 = i_l + ref.DT_PLANT * (d * ref.VIN - v_c) / ref.IND_L
+    v2 = v_c + ref.DT_PLANT * (i2 - v_c / ref.LOAD_R) / ref.CAP_C
+    out_state_ref[0, :] = i2
+    out_state_ref[1, :] = v2
+    v_ref[:] = v2
+
+
+def converter_step(state, duty):
+    """state: f64[2, B], duty: f64[B] -> (state' f64[2, B], v f64[B])."""
+    b = state.shape[1]
+    if b % LANE == 0 and b > LANE:
+        # Tile the converter axis in lane-width blocks.
+        grid = (b // LANE,)
+        return pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((2, LANE), lambda j: (0, j)),
+                pl.BlockSpec((LANE,), lambda j: (j,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((2, LANE), lambda j: (0, j)),
+                pl.BlockSpec((LANE,), lambda j: (j,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((2, b), state.dtype),
+                jax.ShapeDtypeStruct((b,), state.dtype),
+            ],
+            interpret=True,
+        )(state, duty)
+    # Small batch: single block.
+    return pl.pallas_call(
+        _kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((2, b), state.dtype),
+            jax.ShapeDtypeStruct((b,), state.dtype),
+        ],
+        interpret=True,
+    )(state, duty)

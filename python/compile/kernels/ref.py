@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest (and hypothesis sweeps)
+assert the Pallas kernels match them exactly, and the FNV constants are
+additionally pinned against the Rust implementation's test vectors
+(`rust/src/util/mod.rs::fnv64`).
+"""
+import jax.numpy as jnp
+
+# ---- power-converter plant constants (mirror of rust/src/apps/power.rs) --
+VIN = 48.0
+IND_L = 200e-6
+CAP_C = 470e-6
+LOAD_R = 2.0
+VREF = 24.0
+DT_PLANT = 10e-6
+KP = 0.015
+KI = 32.0
+D0 = 0.5
+WINDUP = 0.5
+
+# ---- FNV-1a over 64-bit words (mirror of rust/src/util/mod.rs) ----------
+# Plain ints: Pallas kernels may not capture array constants, and weak
+# typing keeps uint64 arithmetic exact.
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def converter_step_ref(state, duty):
+    """Semi-implicit Euler buck-converter step.
+
+    state: f64[2, B] rows (i_L, v_C); duty: f64[B].
+    Returns (state', v_out[B]).
+    """
+    i_l, v_c = state[0], state[1]
+    i2 = i_l + DT_PLANT * (duty * VIN - v_c) / IND_L
+    v2 = v_c + DT_PLANT * (i2 - v_c / LOAD_R) / CAP_C
+    return jnp.stack([i2, v2]), v2
+
+
+def checksum_ref(vals):
+    """Row-wise FNV-1a over uint64 words. vals: u64[B, W] -> u64[B]."""
+    h = jnp.full(vals.shape[0], FNV_OFFSET, dtype=jnp.uint64)
+    for w in range(vals.shape[1]):
+        h = (h ^ vals[:, w]) * FNV_PRIME
+    return h
+
+
+def controller_step_ref(v_meas, integ, dt_ctrl):
+    """Vectorized anti-windup PI update. v_meas/integ f64[B], dt_ctrl f64[1].
+
+    Returns (duty', integ').
+    """
+    e = VREF - v_meas
+    lim = WINDUP / KI
+    integ2 = jnp.clip(integ + e * dt_ctrl[0], -lim, lim)
+    duty = jnp.clip(D0 + KP * e + KI * integ2, 0.0, 1.0)
+    return duty, integ2

@@ -1,0 +1,83 @@
+"""L2 JAX model: the power-controller compute graph (paper Appendix B).
+
+Three jittable functions, all calling the L1 Pallas kernels where the
+hot math lives:
+
+* ``converter_step(state, duty)`` — one plant step (Pallas kernel).
+* ``controller_step(v_meas, integ, dt_ctrl)`` — vectorized anti-windup
+  PI update for all converters.
+* ``closed_loop(period_steps, n_steps)`` — the full closed loop under
+  ``lax.scan`` with a one-period measurement delay: the *pure-compute
+  reference* for the Fig. 7 stability boundary, used by the tests and
+  to cross-check the distributed run.
+
+plus ``checksum_batch`` for the kvstore prefill path.
+
+Constants live in ``kernels/ref.py`` and are mirrored bit-for-bit by
+``rust/src/apps/power.rs``.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import checksum as checksum_kernel
+from .kernels import converter as converter_kernel
+from .kernels import ref
+
+
+def converter_step(state, duty):
+    """One plant step for a batch of converters (L1 Pallas kernel)."""
+    return converter_kernel.converter_step(state, duty)
+
+
+def controller_step(v_meas, integ, dt_ctrl):
+    """PI update; dt_ctrl is a length-1 array so one artifact serves all
+    loop periods."""
+    return ref.controller_step_ref(v_meas, integ, dt_ctrl)
+
+
+def checksum_batch(vals):
+    """Bulk FNV-1a checksums (L1 Pallas kernel)."""
+    return checksum_kernel.checksum(vals)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def closed_loop(period_steps: int, n_steps: int, batch: int):
+    """Simulate the closed loop: the controller samples every
+    ``period_steps`` plant steps and sees voltages one period late.
+
+    Returns v_c trace of shape [n_steps, batch].
+    """
+    dt_ctrl = jnp.full((1,), period_steps * ref.DT_PLANT)
+
+    def plant_block(carry, _):
+        state, integ, duty = carry
+        # Controller tick: sample-and-hold on the current voltage (the
+        # converters' push from the end of the previous tick, App. B).
+        duty, integ = controller_step(state[1], integ, dt_ctrl)
+
+        def step(st, _):
+            st2, v = converter_step(st, duty)
+            return st2, v
+
+        state, vs = jax.lax.scan(step, state, None, length=period_steps)
+        return (state, integ, duty), vs
+
+    state0 = jnp.zeros((2, batch))
+    integ0 = jnp.zeros((batch,))
+    duty0 = jnp.zeros((batch,))
+    blocks = n_steps // period_steps
+    _, vs = jax.lax.scan(plant_block, (state0, integ0, duty0), None, length=blocks)
+    return vs.reshape(blocks * period_steps, batch)
+
+
+def tail_ripple(trace):
+    """Peak-to-peak ripple over the last quarter of a [T, B] trace."""
+    tail = trace[trace.shape[0] * 3 // 4 :]
+    return (tail.max(axis=0) - tail.min(axis=0)).max()
+
+
+def tail_mean(trace):
+    tail = trace[trace.shape[0] * 3 // 4 :]
+    return tail.mean()

@@ -1,0 +1,68 @@
+"""L2 correctness: the closed-loop model reproduces the paper's Fig. 7
+stability boundary (stable ≤ 40 µs controller period, unstable beyond),
+and the constants match the Rust mirror."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def run(period_us, t=0.3, batch=1):
+    period_steps = int(round(period_us / 10))
+    n_steps = int(t / ref.DT_PLANT) // period_steps * period_steps
+    trace = model.closed_loop(period_steps, n_steps, batch)
+    return np.asarray(trace)
+
+
+def test_stable_at_20us_and_40us():
+    for period in (20, 40):
+        trace = run(period)
+        ripple = float(model.tail_ripple(jnp.asarray(trace)))
+        mean = float(model.tail_mean(jnp.asarray(trace)))
+        assert ripple < 0.5, f"{period}µs ripple {ripple}"
+        assert abs(mean - ref.VREF) < 0.5, f"{period}µs mean {mean}"
+
+
+def test_unstable_beyond_40us():
+    for period in (60, 80):
+        trace = run(period)
+        ripple = float(model.tail_ripple(jnp.asarray(trace)))
+        assert ripple > 10.0, f"{period}µs should oscillate, ripple {ripple}"
+
+
+def test_batch_converters_independent():
+    # All converters share parameters → identical columns.
+    trace = run(40, t=0.1, batch=8)
+    for b in range(1, 8):
+        np.testing.assert_allclose(trace[:, b], trace[:, 0], rtol=1e-12)
+
+
+def test_constants_match_rust_mirror():
+    # Pin the shared constants so neither side drifts (values also
+    # hard-coded in rust/src/apps/power.rs).
+    assert ref.VIN == 48.0
+    assert ref.IND_L == 200e-6
+    assert ref.CAP_C == 470e-6
+    assert ref.LOAD_R == 2.0
+    assert ref.VREF == 24.0
+    assert ref.DT_PLANT == 10e-6
+    assert ref.KP == 0.015
+    assert ref.KI == 32.0
+    assert ref.D0 == 0.5
+    assert ref.WINDUP == 0.5
+
+
+def test_open_loop_settles_to_d_vin():
+    # Fixed duty 0.5 → v settles to 24 V (plant sanity).
+    import jax
+
+    def step(st, _):
+        s2, v = model.converter_step(st, jnp.full((1,), 0.5))
+        return s2, v
+
+    _, vs = jax.lax.scan(step, jnp.zeros((2, 1)), None, length=30000)
+    tail = np.asarray(vs)[-3000:]
+    assert abs(tail.mean() - 24.0) < 0.01
+    assert tail.max() - tail.min() < 0.01

@@ -1,0 +1,22 @@
+//! Regenerates the paper's Fig. 1b microbenchmark result: network
+//! barrier latency across node counts.
+
+use loco::bench::{fig1b, geomean_runs, Scale};
+use loco::metrics::Table;
+
+fn main() {
+    let scale = Scale::from_env();
+    println!(
+        "Fig. 1b — barrier latency ({} latency model, geomean of {} runs)",
+        if scale.full { "roce25" } else { "fast_sim (÷20)" },
+        scale.runs
+    );
+    let mut t = Table::new(&["nodes", "avg latency µs"]);
+    for nodes in [2usize, 3, 4, 6, 8] {
+        let us = geomean_runs(scale.runs, || {
+            fig1b::barrier_latency_us(nodes, 150, scale.latency.clone())
+        });
+        t.row(&[nodes.to_string(), format!("{us:.2}")]);
+    }
+    t.print();
+}

@@ -1,0 +1,57 @@
+//! Regenerates Fig. 4 (§7.1): single-lock and transactional locking
+//! throughput, LOCO vs the OpenMPI-RMA baseline, across node counts.
+//!
+//! Expected shape (paper): OpenMPI wins the single-lock microbenchmark
+//! consistently; LOCO wins transactional locking because MPI couples
+//! locks to windows and pays the NIC MR-cache penalty on its 341
+//! windows, while LOCO pools regions into huge pages.
+
+use loco::bench::fig4::{single_lock_mops, txn_mops, LockSystem};
+use loco::bench::{geomean_runs, Scale};
+use loco::metrics::Table;
+
+fn main() {
+    let scale = Scale::from_env();
+    // Paper: 100 M accounts; harness default scales down (shape-preserving).
+    let accounts: u64 = if scale.full { 100_000_000 } else { 1_000_000 };
+    println!(
+        "Fig. 4 — locking ({} latency, geomean of {} runs, {} accounts)",
+        if scale.full { "roce25" } else { "fast_sim (÷20)" },
+        scale.runs,
+        accounts
+    );
+
+    let mut t = Table::new(&["bench", "nodes", "OpenMPI Mops/s", "LOCO Mops/s", "LOCO/MPI"]);
+    for nodes in [2usize, 3, 4, 6] {
+        let mpi = geomean_runs(scale.runs, || {
+            single_lock_mops(LockSystem::OpenMpi, nodes, scale.secs, scale.latency.clone())
+        });
+        let loco = geomean_runs(scale.runs, || {
+            single_lock_mops(LockSystem::Loco, nodes, scale.secs, scale.latency.clone())
+        });
+        t.row(&[
+            "single-lock".into(),
+            nodes.to_string(),
+            format!("{mpi:.4}"),
+            format!("{loco:.4}"),
+            format!("{:.2}", loco / mpi),
+        ]);
+    }
+    for nodes in [2usize, 3, 4, 6] {
+        let threads = 2;
+        let mpi = geomean_runs(scale.runs, || {
+            txn_mops(LockSystem::OpenMpi, nodes, threads, accounts, scale.secs, scale.latency.clone())
+        });
+        let loco = geomean_runs(scale.runs, || {
+            txn_mops(LockSystem::Loco, nodes, threads, accounts, scale.secs, scale.latency.clone())
+        });
+        t.row(&[
+            format!("txn ×{threads}thr"),
+            nodes.to_string(),
+            format!("{mpi:.4}"),
+            format!("{loco:.4}"),
+            format!("{:.2}", loco / mpi),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,101 @@
+//! Regenerates Fig. 5 (§7.2): kvstore throughput across
+//! {read-only, 50/50, write-only} × {uniform, zipfian} × node/thread
+//! scaling × window size, for LOCO / Sherman / Scythe / Redis.
+//!
+//! Expected shape (paper): LOCO wins read-only everywhere (single
+//! slot-sized read vs Sherman's whole-leaf + validation and Scythe/Redis
+//! RPC); Sherman wins uniform writes at window 3 (lock/data colocation);
+//! LOCO wins zipfian writes (ticket vs TAS under contention); LOCO with
+//! window 128 gains substantially on reads; Redis trails everything.
+
+use loco::bench::fig5::{run_cell, Fig5Cell, KvSystem};
+use loco::bench::{geomean_runs, Scale};
+use loco::metrics::Table;
+use loco::workload::{KeyDist, OpMix};
+
+fn main() {
+    let scale = Scale::from_env();
+    let keys: u64 = if scale.full { 1 << 20 } else { 1 << 14 };
+    let nodes = 3;
+    let threads = 2;
+    println!(
+        "Fig. 5 — kvstore throughput ({} latency, geomean of {} runs, {} keys, {} nodes × {} threads)",
+        if scale.full { "roce25" } else { "fast_sim (÷20)" },
+        scale.runs,
+        keys,
+        nodes,
+        threads,
+    );
+
+    let mut t = Table::new(&["mix", "dist", "system", "window", "Mops/s"]);
+    for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
+        for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
+            for system in KvSystem::ALL {
+                let cell = Fig5Cell {
+                    system,
+                    nodes,
+                    threads,
+                    mix,
+                    dist,
+                    window: 3,
+                    keys,
+                    secs: scale.secs,
+                };
+                let mops = geomean_runs(scale.runs, || {
+                    run_cell(&cell, scale.latency.clone(), scale.redis_latency())
+                });
+                t.row(&[
+                    mix.label(),
+                    dist.label().into(),
+                    system.label().into(),
+                    "3".into(),
+                    format!("{mops:.4}"),
+                ]);
+            }
+            // The "large window" LOCO series (window = 128).
+            let cell = Fig5Cell {
+                system: KvSystem::Loco,
+                nodes,
+                threads,
+                mix,
+                dist,
+                window: 128,
+                keys,
+                secs: scale.secs,
+            };
+            let mops = geomean_runs(scale.runs, || {
+                run_cell(&cell, scale.latency.clone(), scale.redis_latency())
+            });
+            t.row(&[
+                mix.label(),
+                dist.label().into(),
+                "LOCO".into(),
+                "128".into(),
+                format!("{mops:.4}"),
+            ]);
+        }
+    }
+    t.print();
+
+    // Node-scaling series (read-only uniform, the paper's leftmost panels).
+    let mut t2 = Table::new(&["nodes", "system", "Mops/s (read-only uniform)"]);
+    for nodes in [2usize, 3, 4] {
+        for system in KvSystem::ALL {
+            let cell = Fig5Cell {
+                system,
+                nodes,
+                threads: 2,
+                mix: OpMix::READ_ONLY,
+                dist: KeyDist::Uniform,
+                window: 3,
+                keys,
+                secs: scale.secs,
+            };
+            let mops = geomean_runs(scale.runs, || {
+                run_cell(&cell, scale.latency.clone(), scale.redis_latency())
+            });
+            t2.row(&[nodes.to_string(), system.label().into(), format!("{mops:.4}")]);
+        }
+    }
+    t2.print();
+}

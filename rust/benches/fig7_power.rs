@@ -1,0 +1,38 @@
+//! Regenerates Fig. 7 (App. B.2): DC/DC converter output voltage vs
+//! controller loop period. Stable at ≤ 40 µs, oscillating beyond.
+//!
+//! Uses the AOT JAX/Pallas artifacts through PJRT when present
+//! (`make artifacts`), else the bit-identical native mirror.
+
+use std::time::Duration;
+
+use loco::bench::{fig7, Scale};
+use loco::metrics::Table;
+
+fn main() {
+    let scale = Scale::from_env();
+    let converters = if scale.full { 20 } else { 8 };
+    let (_, hlo) = fig7::load_compute(converters);
+    println!(
+        "Fig. 7 — DC/DC stability sweep (1 + {converters} nodes, compute = {})",
+        if hlo { "AOT HLO via PJRT" } else { "native mirror" }
+    );
+    let rows = fig7::sweep(
+        converters,
+        &[20, 40, 60, 80],
+        Duration::from_millis(if scale.full { 400 } else { 150 }),
+        2,
+        scale.latency.clone(),
+    );
+    let mut t = Table::new(&["period µs", "ripple V/conv", "mean V/conv", "stable", "ref ripple"]);
+    for r in &rows {
+        t.row(&[
+            r.period_us.to_string(),
+            format!("{:.3}", r.ripple),
+            format!("{:.2}", r.mean),
+            r.stable.to_string(),
+            format!("{:.3}", r.ref_ripple),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,59 @@
+//! Design-choice ablations (DESIGN.md §4): fence scopes, the §7.2
+//! update fence (~15 % claim), owned_var propagation strategies, lock
+//! local-handover, and MR pooling (the Fig. 4 mechanism). Run in
+//! isolation so the wall-clock orderings are meaningful.
+
+use loco::bench::{micro, Scale};
+use loco::metrics::Table;
+
+fn main() {
+    let scale = Scale::from_env();
+    let lat = scale.latency.clone();
+    println!(
+        "micro ablations ({} latency)",
+        if scale.full { "roce25" } else { "fast_sim (÷20)" }
+    );
+
+    let mut t = Table::new(&["group", "variant", "value"]);
+
+    let fences = micro::fence_scopes(lat.clone(), 2000);
+    for (l, v) in &fences {
+        t.row(&["fence scope".into(), l.clone(), format!("{v:.2} µs/op")]);
+    }
+
+    let kvf = micro::kv_update_fence(lat.clone(), 2000);
+    for (l, v) in &kvf {
+        t.row(&["kv update fence (§7.2)".into(), l.clone(), format!("{v:.1} Kops/s")]);
+    }
+    if kvf.len() == 2 && kvf[1].1 > 0.0 {
+        let overhead = (kvf[1].1 - kvf[0].1) / kvf[1].1 * 100.0;
+        t.row(&[
+            "kv update fence (§7.2)".into(),
+            "fence overhead".into(),
+            format!("{overhead:.1} % (paper: ~15 %)"),
+        ]);
+    }
+
+    for (l, v) in micro::owned_var_push_vs_pull(lat.clone(), 2000) {
+        t.row(&["owned_var strategy".into(), l, format!("{v:.2} µs/op")]);
+    }
+    for (l, v) in micro::lock_handover(lat.clone(), 1500) {
+        t.row(&["lock handover".into(), l, format!("{v:.1} Kops/s")]);
+    }
+
+    let pooling = micro::mr_pooling(lat, 4000);
+    for (l, v) in &pooling {
+        t.row(&["MR pooling (Fig. 4 mechanism)".into(), l.clone(), format!("{v:.2} µs/op")]);
+    }
+    t.print();
+
+    // Isolated-run sanity: the MR-cache penalty must be visible.
+    if pooling.len() == 2 {
+        let (pooled, per_obj) = (pooling[0].1, pooling[1].1);
+        if per_obj <= pooled {
+            eprintln!("WARN: per-object MRs not slower ({per_obj:.2} vs {pooled:.2} µs) — noisy host?");
+        } else {
+            println!("\nMR-cache penalty visible: per-object +{:.0} ns/op", (per_obj - pooled) * 1e3);
+        }
+    }
+}

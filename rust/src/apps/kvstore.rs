@@ -1,0 +1,710 @@
+//! The LOCO key-value store (paper §6) — provably linearizable
+//! (Appendix C; the history-checking test lives in
+//! `rust/tests/linearizability.rs`).
+//!
+//! Design, exactly as in the paper:
+//!
+//! * Every node allocates a remotely-accessible **data region** holding
+//!   value slots `[value …][checksum][counter‖valid]`.
+//! * Every node keeps a **local index** (hash map under a reader-writer
+//!   lock) mapping key → (home node, slot, counter).
+//! * Mutations are protected by an array of **ticket locks**, indexed by
+//!   `key % NUM_LOCKS`, striped across nodes.
+//! * Inserts write the value *locally* with the valid bit unset,
+//!   broadcast the location on the inserter's **tracker ringbuffer**,
+//!   wait for all nodes to apply + acknowledge, then set the valid bit
+//!   (the insert's linearization point).
+//! * Deletes unset the valid bit (linearization point), broadcast, and
+//!   free the slot once acknowledged.
+//! * Updates write `[value][checksum]` in place under the lock, then
+//!   **fence** before release (the §7.2 "15 % overhead" fence — the
+//!   `fence_updates` knob ablates it).
+//! * Lookups take **no locks**: index lookup, one remote read, then the
+//!   checksum/counter/valid validation protocol of Appendix C.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::channels::ringbuffer::{RingReceiver, RingSender};
+use crate::channels::ticket_lock::TicketLock;
+use crate::core::ack::AckKey;
+use crate::core::ctx::{FenceScope, MemRef, ThreadCtx};
+use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::{fnv64, Backoff};
+use crate::workload::cityhash::city_hash64_u64;
+use crate::{Error, Result};
+
+/// Tracker message opcodes.
+const OP_INSERT: u64 = 1;
+const OP_DELETE: u64 = 2;
+const OP_BATCH: u64 = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub node: NodeId,
+    pub slot: u32,
+    pub counter: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    /// Value slots per node.
+    pub slots_per_node: usize,
+    /// Value width in words.
+    pub value_words: usize,
+    /// Ticket locks striped across nodes (`key % num_locks`).
+    pub num_locks: usize,
+    /// Tracker ring capacity in words.
+    pub tracker_words: u64,
+    /// Fence updates before lock release (§7.2; ablation knob).
+    pub fence_updates: bool,
+    /// Use the local-handover lock fast path.
+    pub lock_handover: bool,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            slots_per_node: 4096,
+            value_words: 1,
+            num_locks: 256,
+            tracker_words: 1 << 14,
+            fence_updates: true,
+            lock_handover: true,
+        }
+    }
+}
+
+/// State shared between application threads and the tracker thread.
+struct KvShared {
+    index: RwLock<HashMap<u64, IndexEntry>>,
+    free: Mutex<Vec<u32>>,
+    /// Authoritative per-slot counters for *local* slots.
+    slot_counter: Vec<AtomicU64>,
+    tracker_ready: AtomicBool,
+    shutdown: AtomicBool,
+}
+
+pub struct KvStore {
+    cfg: KvConfig,
+    me: NodeId,
+    num_nodes: usize,
+    ep: Arc<Endpoint>,
+    data: Region,
+    locks: Vec<TicketLock>,
+    tracker_tx: Mutex<RingSender>,
+    shared: Arc<KvShared>,
+    tracker_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl KvStore {
+    /// Construct the kvstore endpoint on this node. All nodes must call
+    /// with identical `name` and `cfg`.
+    pub fn new(mgr: &Arc<Manager>, name: &str, cfg: KvConfig) -> Arc<KvStore> {
+        let me = mgr.me();
+        let n = mgr.num_nodes();
+        let slot_words = cfg.value_words + 2;
+
+        let ep = Endpoint::new(name, me, n, Expect::AllPeers);
+        let data = mgr.pool().alloc_named(
+            &region_name(name, "data"),
+            cfg.slots_per_node * slot_words,
+            false,
+        );
+        ep.add_local_region("data", data);
+        ep.expect_regions(&["data"]);
+        mgr.register_channel(ep.clone());
+
+        // Lock array, striped across nodes.
+        let locks: Vec<TicketLock> = (0..cfg.num_locks)
+            .map(|i| {
+                TicketLock::with_options(
+                    mgr,
+                    &sub_name(name, &format!("lock{i}")),
+                    (i % n) as NodeId,
+                    FenceScope::Thread,
+                    true,
+                    cfg.lock_handover,
+                )
+            })
+            .collect();
+
+        // Our tracker (we broadcast; peers receive).
+        let tracker_tx = RingSender::new(mgr, &sub_name(name, &format!("trk{me}")), cfg.tracker_words);
+
+        let shared = Arc::new(KvShared {
+            index: RwLock::new(HashMap::new()),
+            free: Mutex::new((0..cfg.slots_per_node as u32).rev().collect()),
+            slot_counter: (0..cfg.slots_per_node).map(|_| AtomicU64::new(0)).collect(),
+            tracker_ready: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+        });
+
+        let kv = Arc::new(KvStore {
+            cfg,
+            me,
+            num_nodes: n,
+            ep,
+            data,
+            locks,
+            tracker_tx: Mutex::new(tracker_tx),
+            shared: shared.clone(),
+            tracker_thread: Mutex::new(None),
+        });
+
+        // Dedicated tracker thread (§6): receives peers' tracker rings,
+        // applies index updates, then acknowledges. It references only
+        // KvShared (never Arc<KvStore>) so Drop/shutdown can run.
+        let mgr2 = mgr.clone();
+        let name2 = name.to_string();
+        let shared2 = shared;
+        let words = kv.cfg.tracker_words;
+        let handle = std::thread::Builder::new()
+            .name(format!("kv-tracker-{me}"))
+            .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2))
+            .expect("spawn tracker");
+        *kv.tracker_thread.lock().unwrap() = Some(handle);
+        kv
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+        for l in &self.locks {
+            l.wait_ready(timeout);
+        }
+        self.tracker_tx.lock().unwrap().wait_ready(timeout);
+        let deadline = std::time::Instant::now() + timeout;
+        while !self.shared.tracker_ready.load(Ordering::Acquire) {
+            assert!(std::time::Instant::now() < deadline, "tracker thread not ready");
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    /// Home node a prefill partitioner should use for `key` (CityHash64
+    /// placement, §7.2). Online inserts always go to the *inserting*
+    /// node's data array, as in the paper.
+    pub fn home_of(&self, key: u64) -> NodeId {
+        (city_hash64_u64(key) % self.num_nodes as u64) as NodeId
+    }
+
+    fn slot_words(&self) -> usize {
+        self.cfg.value_words + 2
+    }
+
+    fn slot_off(&self, slot: u32) -> u64 {
+        slot as u64 * self.slot_words() as u64
+    }
+
+    fn data_region_of(&self, node: NodeId) -> Region {
+        if node == self.me {
+            self.data
+        } else {
+            self.ep.remote_region(node, "data")
+        }
+    }
+
+    fn lock_of(&self, key: u64) -> &TicketLock {
+        &self.locks[(key % self.cfg.num_locks as u64) as usize]
+    }
+
+    // ---- operations -------------------------------------------------
+
+    /// Insert (or update-in-place if present). Returns Ok(true) if a new
+    /// key was inserted.
+    pub fn insert(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
+        assert_eq!(value.len(), self.cfg.value_words);
+        let lock = self.lock_of(key);
+        lock.lock(ctx);
+        let existing = self.shared.index.read().unwrap().get(&key).copied();
+        if let Some(e) = existing {
+            self.write_value(ctx, &e, value);
+            lock.unlock(ctx);
+            return Ok(false);
+        }
+
+        let Some(slot) = self.shared.free.lock().unwrap().pop() else {
+            lock.unlock(ctx);
+            return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
+        };
+        let counter = self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
+        // Local write: value, checksum, counter with valid UNSET.
+        let off = self.slot_off(slot);
+        for (i, w) in value.iter().enumerate() {
+            ctx.local_store(self.data, off + i as u64, *w);
+        }
+        ctx.local_store(self.data, off + value.len() as u64, fnv64(value));
+        ctx.local_store(self.data, off + value.len() as u64 + 1, counter << 1);
+
+        // Our own index first, then broadcast to peers and await acks.
+        self.shared.index.write().unwrap().insert(key, IndexEntry { node: self.me, slot, counter });
+        {
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        // All indices now hold the location: set valid (linearization pt).
+        ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+        lock.unlock(ctx);
+        Ok(true)
+    }
+
+    /// Update an existing key in place. Returns false if absent.
+    pub fn update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
+        assert_eq!(value.len(), self.cfg.value_words);
+        let lock = self.lock_of(key);
+        lock.lock(ctx);
+        let Some(e) = self.shared.index.read().unwrap().get(&key).copied() else {
+            lock.unlock(ctx);
+            return false;
+        };
+        self.write_value(ctx, &e, value);
+        lock.unlock(ctx);
+        true
+    }
+
+    /// The locked write path shared by update and insert-over-existing:
+    /// write `[value][checksum]`, then fence so the write is placed
+    /// before the lock release (§7.2).
+    fn write_value(&self, ctx: &ThreadCtx, e: &IndexEntry, value: &[u64]) {
+        let region = self.data_region_of(e.node);
+        let off = self.slot_off(e.slot);
+        let mut buf = Vec::with_capacity(value.len() + 1);
+        buf.extend_from_slice(value);
+        buf.push(fnv64(value));
+        ctx.write(region, off, &buf); // completion tracked by the fence
+        if self.cfg.fence_updates && e.node != self.me {
+            ctx.fence(FenceScope::Pair(e.node));
+        }
+    }
+
+    /// Lock-free lookup (Appendix C's read protocol).
+    pub fn get(&self, ctx: &ThreadCtx, key: u64) -> Option<Vec<u64>> {
+        let mut bo = Backoff::new();
+        loop {
+            let e = self.shared.index.read().unwrap().get(&key).copied()?;
+            let region = self.data_region_of(e.node);
+            let words = ctx.read(region, self.slot_off(e.slot), self.slot_words());
+            let (value, rest) = words.split_at(self.cfg.value_words);
+            let (ck, cv) = (rest[0], rest[1]);
+            if fnv64(value) != ck {
+                bo.snooze(); // torn update in flight: retry in its entirety
+                continue;
+            }
+            if cv >> 1 != e.counter {
+                return None; // stale index: linearizes after the delete
+            }
+            if cv & 1 == 0 {
+                return None; // insert not yet / delete already linearized
+            }
+            return Some(value.to_vec());
+        }
+    }
+
+    /// Delete. Returns false if absent.
+    pub fn remove(&self, ctx: &ThreadCtx, key: u64) -> bool {
+        let lock = self.lock_of(key);
+        lock.lock(ctx);
+        let Some(e) = self.shared.index.read().unwrap().get(&key).copied() else {
+            lock.unlock(ctx);
+            return false;
+        };
+        // Unset the valid bit (the delete's linearization point).
+        let region = self.data_region_of(e.node);
+        let cv_off = self.slot_off(e.slot) + self.cfg.value_words as u64 + 1;
+        ctx.write1(region, cv_off, e.counter << 1);
+        if e.node != self.me {
+            ctx.fence(FenceScope::Pair(e.node));
+        }
+        // Broadcast; peers drop their index entries (the home peer also
+        // frees the slot); then drop ours.
+        {
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(ctx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        self.shared.index.write().unwrap().remove(&key);
+        if e.node == self.me {
+            self.shared.free.lock().unwrap().push(e.slot);
+        }
+        lock.unlock(ctx);
+        true
+    }
+
+    // ---- windowed (asynchronous) reads --------------------------------
+
+    /// Issue a lookup without waiting: returns the in-flight read. Used
+    /// by the window-size experiments (§7.2): up to `window` of these may
+    /// be outstanding per thread.
+    pub fn get_issue(&self, ctx: &ThreadCtx, key: u64) -> Option<PendingGet> {
+        let e = self.shared.index.read().unwrap().get(&key).copied()?;
+        let region = self.data_region_of(e.node);
+        let (ack, buf) = ctx.read_async(region, self.slot_off(e.slot), self.slot_words());
+        Some(PendingGet { key, entry: e, ack, buf })
+    }
+
+    /// Complete an issued lookup (waits if necessary; falls back to the
+    /// blocking path on torn reads).
+    pub fn get_complete(&self, ctx: &ThreadCtx, pg: PendingGet) -> Option<Vec<u64>> {
+        pg.ack.wait();
+        let words = pg.buf.to_vec();
+        let (value, rest) = words.split_at(self.cfg.value_words);
+        let (ck, cv) = (rest[0], rest[1]);
+        if fnv64(value) != ck {
+            return self.get(ctx, pg.key); // torn: retry in its entirety
+        }
+        if cv >> 1 != pg.entry.counter || cv & 1 == 0 {
+            return None;
+        }
+        Some(value.to_vec())
+    }
+
+    // ---- bulk prefill --------------------------------------------------
+
+    /// Bulk-load `keys` into *this* node's data array, broadcasting index
+    /// updates in batches. `checksums`, if given, must be the per-key
+    /// checksum of each value (e.g. produced by the AOT Pallas checksum
+    /// kernel via [`crate::runtime`]); otherwise they are computed here.
+    pub fn prefill_local(
+        &self,
+        ctx: &ThreadCtx,
+        keys: &[u64],
+        mut value_of: impl FnMut(u64) -> Vec<u64>,
+        checksums: Option<&[u64]>,
+    ) -> Result<()> {
+        const BATCH: usize = 128;
+        for (chunk_idx, chunk) in keys.chunks(BATCH).enumerate() {
+            let mut msg = Vec::with_capacity(3 + chunk.len() * 3);
+            msg.push(OP_BATCH);
+            msg.push(self.me as u64);
+            msg.push(chunk.len() as u64);
+            {
+                let mut index = self.shared.index.write().unwrap();
+                let mut free = self.shared.free.lock().unwrap();
+                for (i, &key) in chunk.iter().enumerate() {
+                    let Some(slot) = free.pop() else {
+                        return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
+                    };
+                    let counter =
+                        self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
+                    let value = value_of(key);
+                    assert_eq!(value.len(), self.cfg.value_words);
+                    let ck = match checksums {
+                        Some(cks) => cks[chunk_idx * BATCH + i],
+                        None => fnv64(&value),
+                    };
+                    let off = self.slot_off(slot);
+                    for (j, w) in value.iter().enumerate() {
+                        ctx.local_store(self.data, off + j as u64, *w);
+                    }
+                    ctx.local_store(self.data, off + value.len() as u64, ck);
+                    ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+                    index.insert(key, IndexEntry { node: self.me, slot, counter });
+                    msg.extend_from_slice(&[key, slot as u64, counter]);
+                }
+            }
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(ctx, &msg);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        Ok(())
+    }
+
+    /// Local index size (for tests).
+    pub fn index_len(&self) -> usize {
+        self.shared.index.read().unwrap().len()
+    }
+
+    pub fn index_entry(&self, key: u64) -> Option<IndexEntry> {
+        self.shared.index.read().unwrap().get(&key).copied()
+    }
+
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.tracker_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KvStore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---- tracker thread (free-standing: must not keep KvStore alive) ------
+
+fn tracker_loop(
+    mgr: Arc<Manager>,
+    name: String,
+    tracker_words: u64,
+    me: NodeId,
+    num_nodes: usize,
+    shared: Arc<KvShared>,
+) {
+    let ctx = mgr.ctx();
+    // Receive every peer's tracker ring.
+    let mut rxs: Vec<(NodeId, RingReceiver)> = (0..num_nodes as NodeId)
+        .filter(|&p| p != me)
+        .map(|p| {
+            let mut rx = RingReceiver::new(&mgr, &sub_name(&name, &format!("trk{p}")), tracker_words);
+            rx.set_manual_ack();
+            (p, rx)
+        })
+        .collect();
+    for (_, rx) in &rxs {
+        rx.wait_ready(Duration::from_secs(30));
+    }
+    shared.tracker_ready.store(true, Ordering::Release);
+
+    let mut bo = Backoff::new();
+    loop {
+        let mut did = false;
+        for (from, rx) in &mut rxs {
+            while let Some(msg) = rx.try_recv(&ctx) {
+                apply_tracker(&shared, me, *from, &msg);
+                rx.ack_now(&ctx); // apply THEN acknowledge (§6)
+                did = true;
+            }
+        }
+        if !did {
+            if shared.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            bo.snooze();
+        } else {
+            bo.reset();
+        }
+    }
+}
+
+fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64]) {
+    match msg[0] {
+        OP_INSERT => {
+            let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
+            debug_assert_eq!(node, from);
+            shared.index.write().unwrap().insert(key, IndexEntry { node, slot, counter });
+        }
+        OP_DELETE => {
+            let (key, node, slot, _counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
+            shared.index.write().unwrap().remove(&key);
+            if node == me {
+                // We are the slot's home but not the deleter: reclaim.
+                shared.free.lock().unwrap().push(slot);
+            }
+        }
+        OP_BATCH => {
+            let node = msg[1] as NodeId;
+            let count = msg[2] as usize;
+            let mut index = shared.index.write().unwrap();
+            for i in 0..count {
+                let base = 3 + i * 3;
+                index.insert(
+                    msg[base],
+                    IndexEntry { node, slot: msg[base + 1] as u32, counter: msg[base + 2] },
+                );
+            }
+        }
+        other => panic!("unknown tracker opcode {other}"),
+    }
+}
+
+/// An in-flight windowed lookup.
+pub struct PendingGet {
+    key: u64,
+    entry: IndexEntry,
+    ack: AckKey,
+    buf: MemRef,
+}
+
+impl PendingGet {
+    pub fn is_complete(&self) -> bool {
+        self.ack.query()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    fn small_cfg() -> KvConfig {
+        KvConfig { slots_per_node: 64, tracker_words: 1 << 10, ..Default::default() }
+    }
+
+    fn setup(n: usize, cfg: FabricConfig) -> (Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+        let cluster = Cluster::new(n, cfg);
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let kvs: Vec<Arc<KvStore>> =
+            mgrs.iter().map(|m| KvStore::new(m, "kv", small_cfg())).collect();
+        for kv in &kvs {
+            kv.wait_ready(Duration::from_secs(30));
+        }
+        (mgrs, kvs)
+    }
+
+    #[test]
+    fn insert_get_update_delete_cross_node() {
+        let (mgrs, kvs) = setup(3, FabricConfig::inline_ideal());
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+        assert!(kvs[0].insert(&ctxs[0], 7, &[100]).unwrap());
+        // Visible from every node (index broadcast + remote read).
+        for i in 0..3 {
+            assert_eq!(kvs[i].get(&ctxs[i], 7), Some(vec![100]), "node {i}");
+        }
+        // Update from a non-home node.
+        assert!(kvs[2].update(&ctxs[2], 7, &[200]));
+        for i in 0..3 {
+            assert_eq!(kvs[i].get(&ctxs[i], 7), Some(vec![200]));
+        }
+        // Delete from a third node.
+        assert!(kvs[1].remove(&ctxs[1], 7));
+        for i in 0..3 {
+            assert_eq!(kvs[i].get(&ctxs[i], 7), None);
+        }
+        // Slot reclaimed at home (node 0).
+        assert_eq!(kvs[0].shared.free.lock().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn missing_key_and_double_ops() {
+        let (mgrs, kvs) = setup(2, FabricConfig::inline_ideal());
+        let ctx = mgrs[0].ctx();
+        assert_eq!(kvs[0].get(&ctx, 42), None);
+        assert!(!kvs[0].update(&ctx, 42, &[1]));
+        assert!(!kvs[0].remove(&ctx, 42));
+        assert!(kvs[0].insert(&ctx, 42, &[1]).unwrap());
+        assert!(!kvs[0].insert(&ctx, 42, &[2]).unwrap(), "second insert is update");
+        assert_eq!(kvs[0].get(&ctx, 42), Some(vec![2]));
+    }
+
+    #[test]
+    fn capacity_exhaustion() {
+        let (mgrs, kvs) = setup(2, FabricConfig::inline_ideal());
+        let ctx = mgrs[0].ctx();
+        for k in 0..64 {
+            kvs[0].insert(&ctx, k, &[k]).unwrap();
+        }
+        assert!(matches!(kvs[0].insert(&ctx, 999, &[0]), Err(Error::Capacity(_))));
+    }
+
+    #[test]
+    fn prefill_batch_visible_everywhere() {
+        let (mgrs, kvs) = setup(3, FabricConfig::inline_ideal());
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        // Each node loads its hash-partitioned shard.
+        let all: Vec<u64> = (0..150).collect();
+        for (i, kv) in kvs.iter().enumerate() {
+            let mine: Vec<u64> =
+                all.iter().copied().filter(|&k| kv.home_of(k) == i as NodeId).collect();
+            kv.prefill_local(&ctxs[i], &mine, |k| vec![k * 10], None).unwrap();
+        }
+        for kv in &kvs {
+            assert_eq!(kv.index_len(), 150);
+        }
+        for &k in &all {
+            assert_eq!(kvs[(k % 3) as usize].get(&ctxs[(k % 3) as usize], k), Some(vec![k * 10]));
+        }
+    }
+
+    #[test]
+    fn windowed_gets() {
+        let (mgrs, kvs) = setup(2, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for k in 0..32 {
+            kvs[0].insert(&ctxs[0], k, &[k + 1000]).unwrap();
+        }
+        // Window of 8 outstanding reads from node 1.
+        let mut pending = Vec::new();
+        let mut results = Vec::new();
+        for k in 0..32u64 {
+            pending.push((k, kvs[1].get_issue(&ctxs[1], k).unwrap()));
+            if pending.len() == 8 {
+                for (k, pg) in pending.drain(..) {
+                    results.push((k, kvs[1].get_complete(&ctxs[1], pg)));
+                }
+            }
+        }
+        for (k, pg) in pending.drain(..) {
+            results.push((k, kvs[1].get_complete(&ctxs[1], pg)));
+        }
+        for (k, v) in results {
+            assert_eq!(v, Some(vec![k + 1000]));
+        }
+    }
+
+    /// Concurrent mixed workload across nodes on the racy fabric: every
+    /// read sees either a fully written value or nothing — never garbage.
+    #[test]
+    fn concurrent_mixed_no_torn_values() {
+        let n = 3;
+        let cluster = Cluster::new(n, FabricConfig::threaded(LatencyModel::fast_sim()).chaotic());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let cfg = KvConfig {
+            slots_per_node: 256,
+            value_words: 4,
+            tracker_words: 1 << 12,
+            ..Default::default()
+        };
+        let kvs: Vec<Arc<KvStore>> =
+            mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+        for kv in &kvs {
+            kv.wait_ready(Duration::from_secs(30));
+        }
+        // Values encode their key 4× so torn mixes are detectable.
+        let handles: Vec<_> = mgrs
+            .iter()
+            .zip(&kvs)
+            .enumerate()
+            .map(|(i, (m, kv))| {
+                let m = m.clone();
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    let mut rng = crate::util::rng::Rng::seeded(i as u64);
+                    for round in 0..150u64 {
+                        let key = rng.gen_range(32);
+                        match rng.gen_range(10) {
+                            0..=2 => {
+                                let tag = round * 10 + i as u64;
+                                let _ = kv.insert(&ctx, key, &[tag; 4]);
+                            }
+                            3..=4 => {
+                                let _ = kv.remove(&ctx, key);
+                            }
+                            5 => {
+                                let tag = round * 10 + i as u64;
+                                let _ = kv.update(&ctx, key, &[tag; 4]);
+                            }
+                            _ => {
+                                if let Some(v) = kv.get(&ctx, key) {
+                                    assert!(
+                                        v.iter().all(|&x| x == v[0]),
+                                        "torn value from get: {v:?}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

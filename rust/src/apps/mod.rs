@@ -1,0 +1,8 @@
+//! LOCO applications: the §6 linearizable key-value store and the
+//! Appendix-B distributed DC/DC power-controller simulation.
+
+pub mod kvstore;
+pub mod power;
+
+pub use kvstore::{KvConfig, KvStore};
+pub use power::{PowerConfig, PowerSystem};

@@ -1,0 +1,501 @@
+//! The distributed DC/DC converter system (paper Appendix B).
+//!
+//! One *controller* node regulates the duty cycles of N *converter*
+//! nodes over LOCO owned_vars (Fig. 6): `d[i]` owned by the controller,
+//! `v[i]` owned by converter *i*. Converters run a fixed 10 µs plant
+//! step; the controller recomputes all duty cycles every loop period.
+//! The system parameters are chosen (see `python/compile/model.py`, which
+//! is the source of truth shared with the L1/L2 artifacts) so that the
+//! output is stable for controller periods ≤ 40 µs and degrades beyond —
+//! the Fig. 7 experiment.
+//!
+//! **Compute path**: the plant physics and the PI controller are the L2
+//! JAX model (calling the L1 Pallas converter kernel), AOT-compiled to
+//! `artifacts/converter1.hlo.txt` / `artifacts/controller<N>.hlo.txt` and
+//! executed through [`crate::runtime`]. A bit-identical native Rust
+//! mirror exists for tests and environments without artifacts; the pytest
+//! suite pins the Python refs to the same constants.
+//!
+//! **Timing**: wall-clock periods are the simulated periods scaled by
+//! `time_scale` (default 20×) so the PJRT dispatch (~tens of µs) and the
+//! simulated fabric latency stay ≪ period, preserving the paper's
+//! latency-to-period ratio regime. Plant *dynamics* always integrate with
+//! the simulated `DT_PLANT`, so the stability boundary is exact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::channels::owned_var::OwnedVar;
+
+use crate::core::endpoint::sub_name;
+use crate::core::manager::Manager;
+use crate::fabric::NodeId;
+use crate::runtime::{Executable, Input};
+
+/// Paper-scale converter count (Appendix B.2: 1 controller + 20).
+pub const NUM_CONVERTERS: usize = 20;
+
+// ---- plant & controller constants (single source of truth with
+// python/compile/model.py; pinned by python/tests/test_power_model.py) --
+pub const VIN: f64 = 48.0;
+pub const IND_L: f64 = 200e-6;
+pub const CAP_C: f64 = 470e-6;
+pub const LOAD_R: f64 = 2.0;
+pub const VREF: f64 = 24.0;
+/// Plant integration step: 10 µs of simulated time (App. B.2).
+pub const DT_PLANT: f64 = 10e-6;
+pub const KP: f64 = 0.015;
+pub const KI: f64 = 32.0;
+/// Duty-cycle feedforward (VREF / VIN).
+pub const D0: f64 = 0.5;
+/// Anti-windup clamp on the integral *contribution*.
+pub const WINDUP: f64 = 0.5;
+
+/// One semi-implicit Euler plant step (native mirror of the Pallas
+/// kernel `python/compile/kernels/converter.py`).
+#[inline]
+pub fn converter_step_native(i_l: f64, v_c: f64, d: f64) -> (f64, f64) {
+    let i2 = i_l + DT_PLANT * (d * VIN - v_c) / IND_L;
+    let v2 = v_c + DT_PLANT * (i2 - v_c / LOAD_R) / CAP_C;
+    (i2, v2)
+}
+
+/// One PI controller update for a single converter (native mirror of
+/// the L2 `controller_step`). Returns (d, integ').
+#[inline]
+pub fn controller_step_native(v_meas: f64, integ: f64, dt_ctrl: f64) -> (f64, f64) {
+    let e = VREF - v_meas;
+    let mut integ2 = integ + e * dt_ctrl;
+    let lim = WINDUP / KI;
+    integ2 = integ2.clamp(-lim, lim);
+    let d = (D0 + KP * e + KI * integ2).clamp(0.0, 1.0);
+    (d, integ2)
+}
+
+/// How the physics/control math is evaluated.
+pub enum Compute {
+    /// AOT artifacts through PJRT (the real three-layer path).
+    Hlo { converter: Arc<Executable>, controller: Arc<Executable> },
+    /// Native mirror (tests / artifact-less runs).
+    Native,
+}
+
+/// How the distributed loop is paced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pacing {
+    /// Real-time: loops spin until their wall deadline (simulated period
+    /// × `time_scale`). Faithful to the paper's latency-sensitivity
+    /// story, but requires enough cores that every node keeps its
+    /// deadline; on an oversubscribed host the effective
+    /// period/plant-step ratio distorts.
+    Wall,
+    /// Logical time: converters advance exactly `period / 10 µs` plant
+    /// steps per controller tick, coordinated *through the channel
+    /// itself* (tick and step-acknowledgement owned_vars ride the same
+    /// fabric as the data). Deterministic; the stability boundary
+    /// reproduces exactly on any host. Default.
+    Lockstep,
+}
+
+#[derive(Clone, Debug)]
+pub struct PowerConfig {
+    pub converters: usize,
+    /// Simulated controller loop period (the Fig. 7 x-axis).
+    pub controller_period: Duration,
+    /// Simulated converter loop period (fixed 10 µs in the paper).
+    pub converter_period: Duration,
+    /// Wall-clock = simulated × time_scale (Wall pacing only).
+    pub time_scale: u32,
+    /// Total simulated run time.
+    pub sim_time: Duration,
+    pub pacing: Pacing,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig {
+            converters: NUM_CONVERTERS,
+            controller_period: Duration::from_micros(40),
+            converter_period: Duration::from_micros(10),
+            time_scale: 20,
+            sim_time: Duration::from_millis(40),
+            pacing: Pacing::Lockstep,
+        }
+    }
+}
+
+/// The `power_controller` channel: two arrays of owned_vars (Fig. 6).
+/// Node 0 is the controller; node `1 + i` simulates converter `i`.
+pub struct PowerChannel {
+    /// Duty cycles, owned by the controller.
+    d: Vec<OwnedVar>,
+    /// Output voltages, owned by each converter.
+    v: Vec<OwnedVar>,
+    /// Run/stop flag, owned by the controller.
+    stop: OwnedVar,
+    /// Controller tick counter (lockstep pacing).
+    tick: OwnedVar,
+    /// Per-converter tick acknowledgement (lockstep pacing).
+    ack: Vec<OwnedVar>,
+}
+
+impl PowerChannel {
+    pub fn new(mgr: &Arc<Manager>, name: &str, converters: usize) -> Self {
+        assert_eq!(mgr.num_nodes(), converters + 1, "cluster = 1 controller + N converters");
+        let d = (0..converters)
+            .map(|i| OwnedVar::new(mgr, &sub_name(name, &format!("d{i}")), 0, 1, false))
+            .collect();
+        let v = (0..converters)
+            .map(|i| {
+                OwnedVar::new(mgr, &sub_name(name, &format!("v{i}")), (i + 1) as NodeId, 1, false)
+            })
+            .collect();
+        let stop = OwnedVar::new(mgr, &sub_name(name, "stop"), 0, 1, false);
+        let tick = OwnedVar::new(mgr, &sub_name(name, "tick"), 0, 1, false);
+        let ack = (0..converters)
+            .map(|i| {
+                OwnedVar::new(mgr, &sub_name(name, &format!("ack{i}")), (i + 1) as NodeId, 1, false)
+            })
+            .collect();
+        PowerChannel { d, v, stop, tick, ack }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        for ov in self.d.iter().chain(&self.v).chain(&self.ack) {
+            ov.wait_ready(timeout);
+        }
+        self.stop.wait_ready(timeout);
+        self.tick.wait_ready(timeout);
+    }
+}
+
+/// A (simulated-time, total output voltage) trace sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub t_sim: f64,
+    pub v_total: f64,
+}
+
+pub struct PowerSystem;
+
+impl PowerSystem {
+    /// Run the controller node's loop. Returns the output-voltage trace.
+    pub fn run_controller(
+        mgr: &Arc<Manager>,
+        chan: &PowerChannel,
+        cfg: &PowerConfig,
+        compute: &Compute,
+    ) -> Vec<Sample> {
+        let ctx = mgr.ctx();
+        let n = cfg.converters;
+        let period_wall = cfg.controller_period * cfg.time_scale;
+        let dt_ctrl = cfg.controller_period.as_secs_f64();
+        let ticks = (cfg.sim_time.as_secs_f64() / dt_ctrl) as u64;
+
+        let mut integ = vec![0.0f64; n];
+        let mut duty = vec![D0; n];
+        let mut trace = Vec::with_capacity(ticks as usize);
+        // Publish initial duties.
+        for (i, dv) in chan.d.iter().enumerate() {
+            dv.publish(&ctx, &[duty[i].to_bits()]);
+        }
+
+        let start = Instant::now();
+        let mut bo = crate::util::Backoff::new();
+        for tick in 0..ticks {
+            if cfg.pacing == Pacing::Lockstep && tick > 0 {
+                // Wait for every converter to acknowledge the previous
+                // tick; their v push precedes the ack on the same QP, so
+                // the ack implies the voltage is placed.
+                for a in &chan.ack {
+                    bo.reset();
+                    while a.read_cached1(&ctx) < tick {
+                        bo.snooze();
+                    }
+                }
+            }
+            // Read converters' latest voltages from the local caches.
+            let v_meas: Vec<f64> =
+                chan.v.iter().map(|ov| f64::from_bits(ov.read_cached1(&ctx))).collect();
+            let v_total: f64 = v_meas.iter().sum();
+            trace.push(Sample { t_sim: tick as f64 * dt_ctrl, v_total });
+
+            // PI update for all converters (L2 model / native mirror).
+            match compute {
+                Compute::Hlo { controller, .. } => {
+                    let dt = [dt_ctrl];
+                    let out = controller
+                        .run(&[
+                            Input::F64(&v_meas, &[n as i64]),
+                            Input::F64(&integ, &[n as i64]),
+                            Input::F64(&dt, &[1]),
+                        ])
+                        .expect("controller artifact");
+                    duty.copy_from_slice(out[0].as_f64());
+                    integ.copy_from_slice(out[1].as_f64());
+                }
+                Compute::Native => {
+                    for i in 0..n {
+                        let (d, ig) = controller_step_native(v_meas[i], integ[i], dt_ctrl);
+                        duty[i] = d;
+                        integ[i] = ig;
+                    }
+                }
+            }
+            // Push new duties to the converters.
+            for (i, dv) in chan.d.iter().enumerate() {
+                dv.store_local(&ctx, &[duty[i].to_bits()]);
+                dv.push_to(&ctx, (i + 1) as NodeId);
+            }
+            match cfg.pacing {
+                Pacing::Wall => {
+                    let next = start + period_wall * (tick as u32 + 1);
+                    while Instant::now() < next {
+                        std::hint::spin_loop();
+                    }
+                }
+                Pacing::Lockstep => {
+                    // Announce the tick; duty pushes precede it per-QP.
+                    chan.tick.publish(&ctx, &[tick + 1]);
+                }
+            }
+        }
+        chan.stop.publish(&ctx, &[1]).wait();
+        trace
+    }
+
+    /// Run one converter node's loop (node `1 + idx`). Returns the number
+    /// of plant steps executed.
+    pub fn run_converter(
+        mgr: &Arc<Manager>,
+        chan: &PowerChannel,
+        cfg: &PowerConfig,
+        compute: &Compute,
+        idx: usize,
+    ) -> u64 {
+        if cfg.pacing == Pacing::Lockstep {
+            return Self::run_converter_lockstep(mgr, chan, cfg, compute, idx);
+        }
+        let ctx = mgr.ctx();
+        let period_wall = cfg.converter_period * cfg.time_scale;
+        let mut i_l = 0.0f64;
+        let mut v_c = 0.0f64;
+        let mut steps = 0u64;
+        let stopped = AtomicBool::new(false);
+        let start = Instant::now();
+        while !stopped.load(Ordering::Relaxed) {
+            if chan.stop.read_cached1(&ctx) == 1 {
+                stopped.store(true, Ordering::Relaxed);
+                break;
+            }
+            let d = f64::from_bits(chan.d[idx].read_cached1(&ctx));
+            match compute {
+                Compute::Hlo { converter, .. } => {
+                    let state = [i_l, v_c];
+                    let out = converter
+                        .run(&[Input::F64(&state, &[2, 1]), Input::F64(&[d], &[1])])
+                        .expect("converter artifact");
+                    let s2 = out[0].as_f64();
+                    i_l = s2[0];
+                    v_c = s2[1];
+                }
+                Compute::Native => {
+                    let (i2, v2) = converter_step_native(i_l, v_c, d);
+                    i_l = i2;
+                    v_c = v2;
+                }
+            }
+            // Push our voltage to the controller.
+            chan.v[idx].store_local(&ctx, &[v_c.to_bits()]);
+            chan.v[idx].push_to(&ctx, 0);
+            steps += 1;
+            let next = start + period_wall * (steps as u32);
+            while Instant::now() < next {
+                std::hint::spin_loop();
+                if chan.stop.read_cached1(&ctx) == 1 {
+                    break;
+                }
+            }
+        }
+        steps
+    }
+
+    fn run_converter_lockstep(
+        mgr: &Arc<Manager>,
+        chan: &PowerChannel,
+        cfg: &PowerConfig,
+        compute: &Compute,
+        idx: usize,
+    ) -> u64 {
+        let ctx = mgr.ctx();
+        let steps_per_tick = (cfg.controller_period.as_secs_f64()
+            / cfg.converter_period.as_secs_f64())
+        .round() as u64;
+        let mut i_l = 0.0f64;
+        let mut v_c = 0.0f64;
+        let mut steps = 0u64;
+        let mut done_tick = 0u64;
+        let mut bo = crate::util::Backoff::new();
+        loop {
+            let t = chan.tick.read_cached1(&ctx);
+            if t <= done_tick {
+                if chan.stop.read_cached1(&ctx) == 1 {
+                    break;
+                }
+                bo.snooze();
+                continue;
+            }
+            bo.reset();
+            // The duty push precedes the tick push on the controller's QP,
+            // so the cached duty is the one for this tick.
+            let d = f64::from_bits(chan.d[idx].read_cached1(&ctx));
+            for _ in 0..steps_per_tick {
+                match compute {
+                    Compute::Hlo { converter, .. } => {
+                        let state = [i_l, v_c];
+                        let out = converter
+                            .run(&[Input::F64(&state, &[2, 1]), Input::F64(&[d], &[1])])
+                            .expect("converter artifact");
+                        let s2 = out[0].as_f64();
+                        i_l = s2[0];
+                        v_c = s2[1];
+                    }
+                    Compute::Native => {
+                        let (i2, v2) = converter_step_native(i_l, v_c, d);
+                        i_l = i2;
+                        v_c = v2;
+                    }
+                }
+                steps += 1;
+            }
+            done_tick = t;
+            // Voltage first, ack second: same QP → controller sees the
+            // ack only after the voltage is placed.
+            chan.v[idx].store_local(&ctx, &[v_c.to_bits()]);
+            chan.v[idx].push_to(&ctx, 0);
+            chan.ack[idx].store_local(&ctx, &[done_tick]);
+            chan.ack[idx].push_to(&ctx, 0);
+        }
+        steps
+    }
+
+    /// Stability metric over the trace tail: peak-to-peak ripple of the
+    /// total output voltage (paper Fig. 7 eyeballs the same thing).
+    pub fn tail_ripple(trace: &[Sample]) -> f64 {
+        let tail = &trace[trace.len() * 3 / 4..];
+        let max = tail.iter().map(|s| s.v_total).fold(f64::MIN, f64::max);
+        let min = tail.iter().map(|s| s.v_total).fold(f64::MAX, f64::min);
+        max - min
+    }
+
+    pub fn tail_mean(trace: &[Sample]) -> f64 {
+        let tail = &trace[trace.len() * 3 / 4..];
+        tail.iter().map(|s| s.v_total).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Pure-compute closed-loop reference (no network): the same dynamics the
+/// Python model simulates, used by tests and the Fig. 7 "analytic" series.
+pub fn closed_loop_reference(period: Duration, sim_time: Duration) -> (f64, f64) {
+    let k = (period.as_secs_f64() / DT_PLANT).round() as usize;
+    let steps = (sim_time.as_secs_f64() / DT_PLANT) as usize;
+    let dt_ctrl = k as f64 * DT_PLANT;
+    let (mut i_l, mut v_c, mut integ, mut d) = (0.0, 0.0, 0.0, 0.0);
+    let mut out = Vec::with_capacity(steps);
+    for s in 0..steps {
+        if s % k == 0 {
+            // Sample-and-hold on the current voltage (the converters'
+            // push at the end of the previous tick), as in App. B.
+            let (dn, ig) = controller_step_native(v_c, integ, dt_ctrl);
+            d = dn;
+            integ = ig;
+        }
+        let (i2, v2) = converter_step_native(i_l, v_c, d);
+        i_l = i2;
+        v_c = v2;
+        out.push(v_c);
+    }
+    let tail = &out[steps * 3 / 4..];
+    let max = tail.iter().copied().fold(f64::MIN, f64::max);
+    let min = tail.iter().copied().fold(f64::MAX, f64::min);
+    let mean = tail.iter().sum::<f64>() / tail.len() as f64;
+    (max - min, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    /// The tuned constants give the paper's stability boundary: stable
+    /// at ≤40 µs, unstable beyond (pure-compute reference).
+    #[test]
+    fn reference_stability_boundary() {
+        let sim = Duration::from_millis(300);
+        let (r20, m20) = closed_loop_reference(Duration::from_micros(20), sim);
+        let (r40, m40) = closed_loop_reference(Duration::from_micros(40), sim);
+        let (r60, _) = closed_loop_reference(Duration::from_micros(60), sim);
+        let (r80, _) = closed_loop_reference(Duration::from_micros(80), sim);
+        assert!(r20 < 0.5, "20µs ripple {r20}");
+        assert!(r40 < 0.5, "40µs ripple {r40}");
+        assert!((m20 - VREF).abs() < 0.5, "20µs mean {m20}");
+        assert!((m40 - VREF).abs() < 0.5, "40µs mean {m40}");
+        assert!(r60 > 10.0, "60µs should oscillate, ripple {r60}");
+        assert!(r80 > 10.0, "80µs should oscillate, ripple {r80}");
+    }
+
+    #[test]
+    fn native_step_matches_reference_formulas() {
+        let (i, v) = converter_step_native(0.0, 0.0, 0.5);
+        assert!((i - DT_PLANT * 0.5 * VIN / IND_L).abs() < 1e-12);
+        assert!((v - DT_PLANT * i / CAP_C).abs() < 1e-12);
+        let (d, ig) = controller_step_native(VREF, 0.0, 40e-6);
+        assert_eq!(ig, 0.0);
+        assert_eq!(d, D0);
+    }
+
+    /// End-to-end distributed run (native compute, small cluster): the
+    /// channel wiring holds the loop together and converges at a stable
+    /// period.
+    #[test]
+    fn distributed_converges_small() {
+        let converters = 3;
+        let cluster =
+            Cluster::new(converters + 1, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let mgrs: Vec<Arc<Manager>> = (0..converters as NodeId + 1)
+            .map(|i| Manager::new(cluster.clone(), i))
+            .collect();
+        let cfg = PowerConfig {
+            converters,
+            controller_period: Duration::from_micros(40),
+            converter_period: Duration::from_micros(10),
+            time_scale: 2,
+            sim_time: Duration::from_millis(250),
+            pacing: Pacing::Lockstep,
+        };
+        let mut handles = Vec::new();
+        for idx in 0..converters {
+            let m = mgrs[idx + 1].clone();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let chan = PowerChannel::new(&m, "pwr", cfg.converters);
+                chan.wait_ready(Duration::from_secs(30));
+                PowerSystem::run_converter(&m, &chan, &cfg, &Compute::Native, idx)
+            }));
+        }
+        let chan = PowerChannel::new(&mgrs[0], "pwr", cfg.converters);
+        chan.wait_ready(Duration::from_secs(30));
+        let trace = PowerSystem::run_controller(&mgrs[0], &chan, &cfg, &Compute::Native);
+        for h in handles {
+            assert!(h.join().unwrap() > 0, "converter never stepped");
+        }
+        let mean = PowerSystem::tail_mean(&trace);
+        let ripple = PowerSystem::tail_ripple(&trace);
+        let target = VREF * converters as f64;
+        assert!(
+            (mean - target).abs() < target * 0.05 && ripple < 1.0,
+            "distributed loop failed to converge: mean {mean} (target {target}), ripple {ripple}"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Comparator systems for the paper's evaluation (§7).
+//!
+//! Each baseline reimplements the *performance-shaping* design choices
+//! of the system the paper compares against, on top of the same
+//! simulated fabric (DESIGN.md §1 documents every substitution):
+//!
+//! * [`mpi_rma`] — OpenMPI-style RMA windows for Fig. 4: locks coupled
+//!   1:1 to windows, one NIC MR per window (the ≤341-window regime that
+//!   thrashes the simulated NIC's MR cache), CAS spinlocks.
+//! * [`sherman`] — Sherman-like write-optimized distributed tree for
+//!   Fig. 5: cached internal levels, two-round-trip validated leaf
+//!   reads, test-and-set locks colocated with leaves, release batched
+//!   with the data write (plus the zero-length-read consistency fix the
+//!   paper applied).
+//! * [`scythe`] — Scythe-like RPC-over-RDMA KV: request/response slots,
+//!   server-side apply thread (insertion used as the paper's
+//!   upper-bound for writes).
+//! * [`rediscluster`] — Redis-cluster-like two-sided baseline: every op
+//!   is a message through a server thread with software-networking-stack
+//!   latency, Memtier-style pipelined clients.
+
+pub mod mpi_rma;
+pub mod rediscluster;
+pub mod scythe;
+pub mod sherman;

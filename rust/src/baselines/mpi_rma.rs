@@ -1,0 +1,206 @@
+//! OpenMPI-style RMA baseline (paper §7.1, Fig. 4).
+//!
+//! Models the three properties the paper identifies as decisive:
+//!
+//! 1. **Windows are 1:1 with NIC memory regions.** Each window calls
+//!    `register_mr` directly (no huge-page pooling), so at the paper's
+//!    341-window configuration the target NIC's MR table far exceeds the
+//!    simulated MR cache and every access pays the miss penalty
+//!    (`LatencyModel::mr_miss_ns`, after [33]). LOCO's pool keeps MR
+//!    count at ~1 regardless of channel count.
+//! 2. **Locks are coupled to windows** (`MPI_Win_lock(EXCLUSIVE,
+//!    rank)`): one exclusive-lock word per (window, target rank), CAS
+//!    spinlock semantics, no finer granularity available — so a
+//!    transactional workload over many accounts must map many accounts
+//!    to each lock.
+//! 3. **A lean single-lock path**: acquire is one CAS, release is one
+//!    CAS after a flush on the same QP — fewer verbs than a ticket
+//!    lock's FAA + polled reads + fenced FAA, which is why OpenMPI wins
+//!    the *single*-lock microbenchmark consistently (Fig. 4 left).
+//!
+//! Ranks are threads with private contexts, as MPI ranks map to
+//! processes; window memory is symmetric across ranks' nodes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::Backoff;
+
+/// Maximum windows the paper found OpenMPI to support.
+pub const MAX_WINDOWS: usize = 341;
+
+/// A set of symmetric RMA windows. Every participating node constructs
+/// it with identical parameters (collective, like `MPI_Win_create`).
+pub struct MpiWindows {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    num_nodes: usize,
+    windows: usize,
+    /// Our local windows: `windows` regions, EACH its own MR.
+    local: Vec<Region>,
+}
+
+impl MpiWindows {
+    pub fn new(mgr: &Arc<Manager>, name: &str, windows: usize, window_words: u64) -> Self {
+        assert!(windows <= MAX_WINDOWS, "OpenMPI supports at most {MAX_WINDOWS} windows");
+        let me = mgr.me();
+        let node = mgr.cluster().node(me).clone();
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        // One MR per window — the defining anti-pattern (vs LOCO's pool).
+        // Window layout: [lock words: one per rank][data words].
+        let lock_words = mgr.num_nodes() as u64;
+        let local: Vec<Region> = (0..windows)
+            .map(|w| {
+                let r = node.register_mr((lock_words + window_words) as usize, false);
+                ep.add_local_region(&format!("w{w}"), r);
+                r
+            })
+            .collect();
+        mgr.register_channel(ep.clone());
+        MpiWindows { ep, me, num_nodes: mgr.num_nodes(), windows, local }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.windows
+    }
+
+    fn window_region(&self, w: usize, rank: NodeId) -> Region {
+        if rank == self.me {
+            self.local[w]
+        } else {
+            self.ep.remote_region(rank, &format!("w{w}"))
+        }
+    }
+
+    /// `MPI_Win_lock(MPI_LOCK_EXCLUSIVE, rank, win)`: CAS spinlock on the
+    /// lock word for (window, target rank).
+    pub fn win_lock(&self, ctx: &ThreadCtx, w: usize, rank: NodeId) {
+        let region = self.window_region(w, rank);
+        let mut bo = Backoff::new();
+        // The lock word for exclusive access lives at offset 0 (one word
+        // per origin is unnecessary for exclusive mode; MPI serializes).
+        // All RMA goes through the HCA, even to the local rank.
+        while ctx.compare_swap_nic(region, 0, 0, 1) != 0 {
+            bo.snooze();
+        }
+    }
+
+    /// `MPI_Win_unlock`: complete all RMA on this (QP, rank) then drop
+    /// the lock with a CAS (flushes are implicit in the atomic).
+    pub fn win_unlock(&self, ctx: &ThreadCtx, w: usize, rank: NodeId) {
+        let region = self.window_region(w, rank);
+        if rank != self.me {
+            // Flush outstanding puts on this peer before releasing.
+            ctx.fence(crate::core::ctx::FenceScope::Pair(rank));
+        }
+        let old = ctx.compare_swap_nic(region, 0, 1, 0);
+        debug_assert_eq!(old, 1, "unlock of unheld window lock");
+    }
+
+    /// `MPI_Get` of one word at `off` in (window, rank).
+    pub fn get(&self, ctx: &ThreadCtx, w: usize, rank: NodeId, off: u64) -> u64 {
+        let region = self.window_region(w, rank);
+        ctx.read1_nic(region, self.num_nodes as u64 + off)
+    }
+
+    /// `MPI_Put` of one word.
+    pub fn put(&self, ctx: &ThreadCtx, w: usize, rank: NodeId, off: u64, val: u64) {
+        let region = self.window_region(w, rank);
+        let key = ctx.write1_nic(region, self.num_nodes as u64 + off, val);
+        ctx.wait(&key);
+    }
+
+    /// `MPI_Fetch_and_op(SUM)`.
+    pub fn fetch_add(&self, ctx: &ThreadCtx, w: usize, rank: NodeId, off: u64, add: u64) -> u64 {
+        let region = self.window_region(w, rank);
+        ctx.fetch_add_nic(region, self.num_nodes as u64 + off, add)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn setup(n: usize, windows: usize, cfg: FabricConfig) -> (Vec<Arc<Manager>>, Vec<Arc<MpiWindows>>) {
+        let cluster = Cluster::new(n, cfg);
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let wins: Vec<Arc<MpiWindows>> = mgrs
+            .iter()
+            .map(|m| Arc::new(MpiWindows::new(m, "win", windows, 8)))
+            .collect();
+        for w in &wins {
+            w.wait_ready(Duration::from_secs(10));
+        }
+        (mgrs, wins)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let (mgrs, wins) = setup(2, 4, FabricConfig::inline_ideal());
+        let ctx0 = mgrs[0].ctx();
+        wins[0].put(&ctx0, 2, 1, 3, 77);
+        assert_eq!(wins[0].get(&ctx0, 2, 1, 3), 77);
+        let ctx1 = mgrs[1].ctx();
+        assert_eq!(wins[1].get(&ctx1, 2, 1, 3), 77); // local view
+    }
+
+    #[test]
+    fn one_mr_per_window() {
+        let cluster = Cluster::new(1, FabricConfig::inline_ideal());
+        let m = Manager::new(cluster.clone(), 0);
+        let base = cluster.node(0).mr_count();
+        let _w = MpiWindows::new(&m, "win", 100, 8);
+        assert_eq!(cluster.node(0).mr_count(), base + 100, "each window registers its own MR");
+    }
+
+    #[test]
+    fn window_lock_mutual_exclusion() {
+        let n = 3;
+        let (mgrs, wins) = setup(n, 2, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let shared = Arc::new((AtomicU64::new(0), AtomicU64::new(0)));
+        let handles: Vec<_> = mgrs
+            .iter()
+            .zip(&wins)
+            .map(|(m, w)| {
+                let m = m.clone();
+                let w = w.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    for _ in 0..50 {
+                        w.win_lock(&ctx, 1, 0);
+                        let a = shared.0.load(Ordering::Relaxed);
+                        let b = shared.1.load(Ordering::Relaxed);
+                        assert_eq!(a, b, "exclusive window lock violated");
+                        shared.0.store(a + 1, Ordering::Relaxed);
+                        shared.1.store(b + 1, Ordering::Relaxed);
+                        w.win_unlock(&ctx, 1, 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(shared.0.load(Ordering::SeqCst), 3 * 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "at most 341")]
+    fn window_cap_enforced() {
+        let cluster = Cluster::new(1, FabricConfig::inline_ideal());
+        let m = Manager::new(cluster.clone(), 0);
+        let _ = MpiWindows::new(&m, "win", 342, 8);
+    }
+}

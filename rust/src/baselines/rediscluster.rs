@@ -1,0 +1,266 @@
+//! Redis-cluster-like two-sided baseline (paper §7.2; [37, 38]).
+//!
+//! The non-RDMA comparator: every operation is a request/response
+//! message pair through a single-threaded server instance, traversing a
+//! software networking stack. The defining costs are modeled directly:
+//!
+//! * the fabric's SEND latency is configured to kernel-TCP scale
+//!   (`redis_latency()`: ~15 µs one-way vs RoCE's 4 µs),
+//! * a server instance processes requests serially (Redis is
+//!   single-threaded per instance; the paper runs ceil(threads/4)
+//!   instances — we shard keys across `servers` instances),
+//! * clients are Memtier-like: each client thread keeps a pipeline of
+//!   `window` outstanding requests.
+//!
+//! Topology: nodes `[0, servers)` run server instances; client threads
+//! run one per node on nodes `[servers, servers+clients)` (one thread
+//! per node so the receive queue needs no demultiplexer).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::fabric::{Cluster, LatencyModel, NodeId, Verb, Wqe};
+use crate::util::Backoff;
+use crate::workload::cityhash::city_hash64_u64;
+
+const OP_GET: u64 = 1;
+const OP_PUT: u64 = 2;
+
+/// Fabric latency profile for the kernel-TCP path.
+pub fn redis_latency() -> LatencyModel {
+    let mut lat = LatencyModel::ideal();
+    lat.send_ns = 15_000; // one-way through the software stack
+    lat.per_word_ns = 2.56;
+    lat.op_overhead_ns = 500;
+    lat
+}
+
+/// Scaled-down variant matching `LatencyModel::fast_sim` (÷20).
+pub fn redis_latency_fast() -> LatencyModel {
+    let mut lat = redis_latency();
+    lat.send_ns /= 20;
+    lat.per_word_ns /= 20.0;
+    lat.op_overhead_ns /= 20;
+    lat
+}
+
+fn encode(words: &[u64]) -> Box<[u8]> {
+    let mut out = Vec::with_capacity(words.len() * 8);
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.into_boxed_slice()
+}
+
+fn decode(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// One server instance (single-threaded, like a Redis process).
+pub struct RedisServer {
+    cluster: Arc<Cluster>,
+    me: NodeId,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl RedisServer {
+    pub fn spawn(cluster: Arc<Cluster>, me: NodeId) -> (Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let server = RedisServer { cluster, me, shutdown: shutdown.clone() };
+        let h = std::thread::Builder::new()
+            .name(format!("redis-{me}"))
+            .spawn(move || server.run())
+            .expect("spawn redis server");
+        (shutdown, h)
+    }
+
+    fn run(&self) {
+        let node = self.cluster.node(self.me).clone();
+        let mut store: HashMap<u64, u64> = HashMap::new();
+        let mut qps: Vec<Option<crate::fabric::QpId>> =
+            vec![None; self.cluster.num_nodes()];
+        loop {
+            match node.recv_timeout(Duration::from_millis(2)) {
+                Some(msg) => {
+                    let req = decode(&msg.bytes);
+                    // [seq, op, key, value]
+                    let (seq, op, key, value) = (req[0], req[1], req[2], req[3]);
+                    let (status, out) = match op {
+                        OP_GET => match store.get(&key) {
+                            Some(v) => (1, *v),
+                            None => (0, 0),
+                        },
+                        OP_PUT => {
+                            store.insert(key, value);
+                            (1, 0)
+                        }
+                        _ => (0, 0),
+                    };
+                    let qp = *qps[msg.from as usize].get_or_insert_with(|| {
+                        self.cluster.create_qp(self.me, msg.from)
+                    });
+                    self.cluster.post(
+                        qp,
+                        Wqe {
+                            wr_id: 0,
+                            verb: Verb::Send { bytes: encode(&[seq, status, out]) },
+                            signaled: false,
+                        },
+                    );
+                }
+                None => {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Memtier-like pipelined client running on its own node.
+pub struct RedisClient {
+    cluster: Arc<Cluster>,
+    me: NodeId,
+    servers: usize,
+    qps: Vec<Option<crate::fabric::QpId>>,
+    seq: u64,
+    /// Outstanding request keys by seq.
+    outstanding: Vec<u64>,
+    window: usize,
+}
+
+impl RedisClient {
+    pub fn new(cluster: Arc<Cluster>, me: NodeId, servers: usize, window: usize) -> Self {
+        RedisClient {
+            cluster,
+            me,
+            servers,
+            qps: vec![None; servers],
+            seq: 0,
+            outstanding: Vec::new(),
+            window: window.max(1),
+        }
+    }
+
+    fn server_of(&self, key: u64) -> NodeId {
+        (city_hash64_u64(key) % self.servers as u64) as NodeId
+    }
+
+    fn send_req(&mut self, op: u64, key: u64, value: u64) {
+        self.seq += 1;
+        let server = self.server_of(key);
+        let qp = *self.qps[server as usize]
+            .get_or_insert_with(|| self.cluster.create_qp(self.me, server));
+        self.cluster.post(
+            qp,
+            Wqe {
+                wr_id: 0,
+                verb: Verb::Send { bytes: encode(&[self.seq, op, key, value]) },
+                signaled: false,
+            },
+        );
+        self.outstanding.push(self.seq);
+    }
+
+    fn reap_one(&mut self, block: bool) -> Option<(u64, u64, u64)> {
+        let node = self.cluster.node(self.me);
+        let mut bo = Backoff::new();
+        loop {
+            if let Some(msg) = node.try_recv() {
+                let resp = decode(&msg.bytes);
+                self.outstanding.retain(|&s| s != resp[0]);
+                return Some((resp[0], resp[1], resp[2]));
+            }
+            if !block {
+                return None;
+            }
+            bo.snooze();
+        }
+    }
+
+    /// Pipelined op: issue, and block only when the window is full.
+    /// Returns the number of responses reaped (throughput accounting).
+    pub fn issue(&mut self, is_get: bool, key: u64, value: u64) -> usize {
+        self.send_req(if is_get { OP_GET } else { OP_PUT }, key, value);
+        let mut reaped = 0;
+        while self.outstanding.len() >= self.window {
+            self.reap_one(true);
+            reaped += 1;
+        }
+        while self.reap_one(false).is_some() {
+            reaped += 1;
+        }
+        reaped
+    }
+
+    /// Drain all outstanding responses.
+    pub fn drain(&mut self) -> usize {
+        let mut reaped = 0;
+        while !self.outstanding.is_empty() {
+            self.reap_one(true);
+            reaped += 1;
+        }
+        reaped
+    }
+
+    /// Blocking get (tests).
+    pub fn get_sync(&mut self, key: u64) -> Option<u64> {
+        self.drain();
+        self.send_req(OP_GET, key, 0);
+        let (_, status, value) = self.reap_one(true).unwrap();
+        (status == 1).then_some(value)
+    }
+
+    /// Blocking put (tests / prefill).
+    pub fn put_sync(&mut self, key: u64, value: u64) {
+        self.drain();
+        self.send_req(OP_PUT, key, value);
+        self.reap_one(true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::FabricConfig;
+
+    #[test]
+    fn get_put_through_servers() {
+        // 2 servers + 1 client node.
+        let cluster = Cluster::new(3, FabricConfig::threaded(redis_latency_fast()));
+        let mut guards = Vec::new();
+        for s in 0..2 {
+            guards.push(RedisServer::spawn(cluster.clone(), s));
+        }
+        let mut client = RedisClient::new(cluster.clone(), 2, 2, 4);
+        for k in 0..20u64 {
+            client.put_sync(k, k + 7);
+        }
+        for k in 0..20u64 {
+            assert_eq!(client.get_sync(k), Some(k + 7));
+        }
+        assert_eq!(client.get_sync(555), None);
+        for (flag, h) in guards {
+            flag.store(true, Ordering::SeqCst);
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_issue_reaps_everything() {
+        let cluster = Cluster::new(2, FabricConfig::threaded(redis_latency_fast()));
+        let (flag, h) = RedisServer::spawn(cluster.clone(), 0);
+        let mut client = RedisClient::new(cluster.clone(), 1, 1, 8);
+        let mut reaped = 0;
+        for k in 0..100u64 {
+            reaped += client.issue(k % 2 == 0, k, k);
+        }
+        reaped += client.drain();
+        assert_eq!(reaped, 100);
+        flag.store(true, Ordering::SeqCst);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,271 @@
+//! Scythe-like RPC-over-RDMA key-value baseline (paper §7.2; after [39]).
+//!
+//! Scythe's MicroDB serves requests through RPC implemented with one-sided
+//! writes: a client writes a request record into a per-(client, thread)
+//! slot on the key's home server; a server thread polls its slots,
+//! applies the operation to its local hash shard, and writes the response
+//! back into the client's response slot. Every operation is therefore two
+//! dependent RDMA-write round trips plus server CPU — the structural
+//! reason it trails one-sided designs on reads.
+//!
+//! Atomicity uses same-QP placement ordering: the payload words are
+//! written first and the sequence word last, each side polling on the
+//! sequence. Writes use the *insert* path, which the paper uses as
+//! Scythe's upper bound (its update path was unstable).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::Backoff;
+use crate::workload::cityhash::city_hash64_u64;
+
+const OP_GET: u64 = 1;
+const OP_PUT: u64 = 2;
+
+/// Request slot: [op][key][value][seq]  (seq written last).
+const REQ_WORDS: u64 = 4;
+/// Response slot: [status][value][seq].
+const RESP_WORDS: u64 = 3;
+
+pub struct Scythe {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    num_nodes: usize,
+    threads_per_node: usize,
+    req: Region,
+    resp: Region,
+    shard: Arc<Mutex<HashMap<u64, u64>>>,
+    shutdown: Arc<AtomicBool>,
+    server: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Scythe {
+    /// `threads_per_node`: max concurrent client threads per node (slot
+    /// capacity; collective constant).
+    pub fn new(mgr: &Arc<Manager>, name: &str, threads_per_node: usize) -> Arc<Scythe> {
+        let me = mgr.me();
+        let n = mgr.num_nodes();
+        let slots = (n * threads_per_node) as u64;
+        let ep = Endpoint::new(name, me, n, Expect::AllPeers);
+        let req = mgr
+            .pool()
+            .alloc_named(&region_name(name, "req"), (slots * REQ_WORDS) as usize, false);
+        let resp = mgr
+            .pool()
+            .alloc_named(&region_name(name, "resp"), (slots * RESP_WORDS) as usize, false);
+        ep.add_local_region("req", req);
+        ep.add_local_region("resp", resp);
+        ep.expect_regions(&["req", "resp"]);
+        mgr.register_channel(ep.clone());
+
+        let s = Arc::new(Scythe {
+            ep,
+            me,
+            num_nodes: n,
+            threads_per_node,
+            req,
+            resp,
+            shard: Arc::new(Mutex::new(HashMap::new())),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            server: Mutex::new(None),
+        });
+        // The server thread references only the cloned parts (never
+        // Arc<Scythe>), so Drop/shutdown can run.
+        let srv = ServerParts {
+            ep: s.ep.clone(),
+            me,
+            num_nodes: n,
+            threads_per_node,
+            req,
+            resp,
+            shard: s.shard.clone(),
+            shutdown: s.shutdown.clone(),
+        };
+        let mgr2 = mgr.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("scythe-server-{me}"))
+            .spawn(move || srv.run(mgr2))
+            .expect("spawn scythe server");
+        *s.server.lock().unwrap() = Some(h);
+        s
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    pub fn home_of(&self, key: u64) -> NodeId {
+        (city_hash64_u64(key) % self.num_nodes as u64) as NodeId
+    }
+
+    fn req_slot(&self, client: NodeId, thread: usize) -> u64 {
+        (client as u64 * self.threads_per_node as u64 + thread as u64) * REQ_WORDS
+    }
+
+    fn resp_slot(&self, server: NodeId, thread: usize) -> u64 {
+        (server as u64 * self.threads_per_node as u64 + thread as u64) * RESP_WORDS
+    }
+
+    /// One blocking RPC from (this node, `thread`). `seq` must increase
+    /// per (thread) across calls.
+    fn rpc(&self, ctx: &ThreadCtx, thread: usize, seq: u64, op: u64, key: u64, value: u64) -> (u64, u64) {
+        let server = self.home_of(key);
+        let req_region = if server == self.me {
+            self.req
+        } else {
+            self.ep.remote_region(server, "req")
+        };
+        let off = self.req_slot(self.me, thread);
+        // Payload first, seq last: same QP → placed in order.
+        ctx.write_unsignaled(req_region, off, &[op, key, value]);
+        ctx.write1(req_region, off + 3, seq);
+        // Poll our local response slot.
+        let roff = self.resp_slot(server, thread);
+        let mut bo = Backoff::new();
+        loop {
+            if ctx.local_load(self.resp, roff + 2) == seq {
+                let status = ctx.local_load(self.resp, roff);
+                let value = ctx.local_load(self.resp, roff + 1);
+                return (status, value);
+            }
+            bo.snooze();
+        }
+    }
+
+    pub fn get(&self, ctx: &ThreadCtx, thread: usize, seq: u64, key: u64) -> Option<u64> {
+        let (status, value) = self.rpc(ctx, thread, seq, OP_GET, key, 0);
+        (status == 1).then_some(value)
+    }
+
+    pub fn put(&self, ctx: &ThreadCtx, thread: usize, seq: u64, key: u64, value: u64) {
+        self.rpc(ctx, thread, seq, OP_PUT, key, value);
+    }
+
+    /// Direct local load (prefill).
+    pub fn prefill_local(&self, keys: impl Iterator<Item = (u64, u64)>) {
+        let mut shard = self.shard.lock().unwrap();
+        for (k, v) in keys {
+            shard.insert(k, v);
+        }
+    }
+
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.server.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scythe {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Everything the server thread needs, cloned out of `Scythe`.
+struct ServerParts {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    num_nodes: usize,
+    threads_per_node: usize,
+    req: Region,
+    resp: Region,
+    shard: Arc<Mutex<HashMap<u64, u64>>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ServerParts {
+    fn resp_slot(&self, server: NodeId, thread: usize) -> u64 {
+        (server as u64 * self.threads_per_node as u64 + thread as u64) * RESP_WORDS
+    }
+
+    fn run(&self, mgr: Arc<Manager>) {
+        let ctx = mgr.ctx();
+        self.ep.wait_ready(Duration::from_secs(30));
+        let slots = self.num_nodes * self.threads_per_node;
+        let mut last_seq = vec![0u64; slots];
+        let mut bo = Backoff::new();
+        while !self.shutdown.load(Ordering::Relaxed) {
+            let mut did = false;
+            for s in 0..slots {
+                let off = s as u64 * REQ_WORDS;
+                let seq = ctx.local_load(self.req, off + 3);
+                if seq > last_seq[s] {
+                    last_seq[s] = seq;
+                    let op = ctx.local_load(self.req, off);
+                    let key = ctx.local_load(self.req, off + 1);
+                    let value = ctx.local_load(self.req, off + 2);
+                    let (status, out) = match op {
+                        OP_GET => match self.shard.lock().unwrap().get(&key) {
+                            Some(v) => (1, *v),
+                            None => (0, 0),
+                        },
+                        OP_PUT => {
+                            self.shard.lock().unwrap().insert(key, value);
+                            (1, 0)
+                        }
+                        _ => (0, 0),
+                    };
+                    // Respond: payload then seq, same QP.
+                    let client = (s / self.threads_per_node) as NodeId;
+                    let thread = s % self.threads_per_node;
+                    let resp_region = if client == self.me {
+                        self.resp
+                    } else {
+                        self.ep.remote_region(client, "resp")
+                    };
+                    let roff = self.resp_slot(self.me, thread);
+                    ctx.write_unsignaled(resp_region, roff, &[status, out]);
+                    ctx.write1(resp_region, roff + 2, seq);
+                    did = true;
+                }
+            }
+            if !did {
+                bo.snooze();
+            } else {
+                bo.reset();
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    #[test]
+    fn rpc_get_put_across_nodes() {
+        let cluster = Cluster::new(3, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..3).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let dbs: Vec<Arc<Scythe>> =
+            mgrs.iter().map(|m| Scythe::new(m, "sc", 2)).collect();
+        for d in &dbs {
+            d.wait_ready(Duration::from_secs(10));
+        }
+        let ctx0 = mgrs[0].ctx();
+        let mut seq = 0u64;
+        for key in 0..20u64 {
+            seq += 1;
+            dbs[0].put(&ctx0, 0, seq, key, key * 3);
+        }
+        for key in 0..20u64 {
+            seq += 1;
+            assert_eq!(dbs[0].get(&ctx0, 0, seq, key), Some(key * 3));
+        }
+        seq += 1;
+        assert_eq!(dbs[0].get(&ctx0, 0, seq, 999), None);
+        // Another node sees the same data.
+        let ctx1 = mgrs[1].ctx();
+        assert_eq!(dbs[1].get(&ctx1, 0, 1, 5), Some(15));
+    }
+}

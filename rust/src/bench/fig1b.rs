@@ -1,0 +1,53 @@
+//! Fig. 1b: the barrier-latency microbenchmark — the paper's first
+//! complete LOCO application (§4.2).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::channels::barrier::Barrier;
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+
+/// Average barrier latency in microseconds across `iters` episodes on an
+/// `n`-node cluster.
+pub fn barrier_latency_us(n: usize, iters: u64, lat: LatencyModel) -> f64 {
+    let cluster = Cluster::new(n, FabricConfig::threaded(lat));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let handles: Vec<_> = mgrs
+        .iter()
+        .map(|m| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let bar = Barrier::new(&m, "bar", m.num_nodes());
+                bar.wait_ready(Duration::from_secs(30));
+                let ctx = m.ctx();
+                // Warm up.
+                for _ in 0..5 {
+                    bar.wait(&ctx);
+                }
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    bar.wait(&ctx);
+                }
+                t0.elapsed().as_secs_f64() / iters as f64 * 1e6
+            })
+        })
+        .collect();
+    let lats: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    lats.iter().sum::<f64>() / lats.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_latency_positive_and_scales() {
+        let l2 = barrier_latency_us(2, 20, LatencyModel::fast_sim());
+        assert!(l2 > 0.0);
+        let l4 = barrier_latency_us(4, 20, LatencyModel::fast_sim());
+        // More nodes → not (much) cheaper. Allow noise.
+        assert!(l4 > l2 * 0.5, "4-node {l4}µs vs 2-node {l2}µs");
+    }
+}

@@ -1,0 +1,340 @@
+//! Fig. 4: transactional locking — LOCO vs OpenMPI-style RMA (§7.1).
+//!
+//! Left panel: throughput of one contended lock-protected
+//! read-modify-write, one thread per node, varying node count.
+//! Right panel: two-lock account-transfer transactions over a large
+//! striped account array (paper: 100 M accounts, ≤341 locks — the
+//! harness scales the account count, see `bench::Scale`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::baselines::mpi_rma::{MpiWindows, MAX_WINDOWS};
+use crate::channels::ticket_lock::TicketLock;
+use crate::core::ctx::{FenceScope, ThreadCtx};
+use crate::core::endpoint::{region_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId, Region};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockSystem {
+    Loco,
+    OpenMpi,
+}
+
+impl LockSystem {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LockSystem::Loco => "LOCO",
+            LockSystem::OpenMpi => "OpenMPI",
+        }
+    }
+}
+
+/// A symmetric striped array of account words (LOCO side): account `a`
+/// lives on node `a % n` at offset `a / n`.
+pub struct AccountArray {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    num_nodes: usize,
+    local: Region,
+}
+
+impl AccountArray {
+    pub fn new(mgr: &Arc<Manager>, name: &str, accounts: u64) -> Self {
+        let me = mgr.me();
+        let n = mgr.num_nodes();
+        let per_node = accounts.div_ceil(n as u64);
+        let ep = Endpoint::new(name, me, n, Expect::AllPeers);
+        let local = mgr.pool().alloc_named(&region_name(name, "acct"), per_node as usize, false);
+        ep.add_local_region("acct", local);
+        ep.expect_regions(&["acct"]);
+        mgr.register_channel(ep.clone());
+        AccountArray { ep, me, num_nodes: n, local }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    fn locate(&self, a: u64) -> (Region, u64) {
+        let node = (a % self.num_nodes as u64) as NodeId;
+        let off = a / self.num_nodes as u64;
+        let region = if node == self.me {
+            self.local
+        } else {
+            self.ep.remote_region(node, "acct")
+        };
+        (region, off)
+    }
+
+    pub fn read(&self, ctx: &ThreadCtx, a: u64) -> u64 {
+        let (r, off) = self.locate(a);
+        ctx.read1(r, off)
+    }
+
+    pub fn write(&self, ctx: &ThreadCtx, a: u64, v: u64) {
+        let (r, off) = self.locate(a);
+        ctx.write1(r, off, v);
+    }
+
+    pub fn node_of(&self, a: u64) -> NodeId {
+        (a % self.num_nodes as u64) as NodeId
+    }
+}
+
+/// Fig. 4 (left): single contended lock, RMW critical section, one
+/// thread per node. Returns Mops/s (aggregate).
+pub fn single_lock_mops(system: LockSystem, nodes: usize, secs: f64, lat: LatencyModel) -> f64 {
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+    let ready = Arc::new(AtomicU64::new(0));
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .map(|m| {
+            let m = m.clone();
+            let stop = stop.clone();
+            let total = total.clone();
+            let ready = ready.clone();
+            std::thread::spawn(move || match system {
+                LockSystem::Loco => {
+                    let lock = TicketLock::new(&m, "L", 0);
+                    let counter = AccountArray::new(&m, "ctr", 1);
+                    lock.wait_ready(Duration::from_secs(30));
+                    counter.wait_ready(Duration::from_secs(30));
+                    ready.fetch_add(1, Ordering::SeqCst);
+                    while ready.load(Ordering::SeqCst) != u64::MAX && !stop.load(Ordering::Relaxed) {
+                        if ready.load(Ordering::SeqCst) == 0 { break; }
+                        std::hint::spin_loop();
+                    }
+                    let ctx = m.ctx();
+                    let mut ops = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        lock.lock(&ctx);
+                        let v = counter.read(&ctx, 0);
+                        counter.write(&ctx, 0, v + 1);
+                        lock.unlock(&ctx); // release fence inside
+                        ops += 1;
+                    }
+                    total.fetch_add(ops, Ordering::Relaxed);
+                }
+                LockSystem::OpenMpi => {
+                    let win = MpiWindows::new(&m, "W", 1, 4);
+                    win.wait_ready(Duration::from_secs(30));
+                    ready.fetch_add(1, Ordering::SeqCst);
+                    while ready.load(Ordering::SeqCst) != 0 && !stop.load(Ordering::Relaxed) {
+                        std::hint::spin_loop();
+                    }
+                    let ctx = m.ctx();
+                    let mut ops = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        win.win_lock(&ctx, 0, 0);
+                        let v = win.get(&ctx, 0, 0, 0);
+                        win.put(&ctx, 0, 0, 0, v + 1);
+                        win.win_unlock(&ctx, 0, 0);
+                        ops += 1;
+                    }
+                    total.fetch_add(ops, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    // Start the clock only after every node is set up.
+    while ready.load(Ordering::SeqCst) < nodes as u64 {
+        std::thread::yield_now();
+    }
+    ready.store(0, Ordering::SeqCst); // release the workers
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::SeqCst);
+    for h in handles {
+        h.join().unwrap();
+    }
+    total.load(Ordering::SeqCst) as f64 / secs / 1e6
+}
+
+/// Fig. 4 (right): two-lock transfer transactions. Returns Mtxn/s.
+pub fn txn_mops(
+    system: LockSystem,
+    nodes: usize,
+    threads_per_node: usize,
+    accounts: u64,
+    secs: f64,
+    lat: LatencyModel,
+) -> f64 {
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+    let ready = Arc::new(AtomicU64::new(0));
+    let num_locks = MAX_WINDOWS; // paper: equal lock counts for fairness
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| {
+            let m = m.clone();
+            let stop = stop.clone();
+            let total = total.clone();
+            let ready = ready.clone();
+            std::thread::spawn(move || match system {
+                LockSystem::Loco => {
+                    // Shared per-node objects; per-thread contexts.
+                    let locks: Arc<Vec<TicketLock>> = Arc::new(
+                        (0..num_locks)
+                            .map(|i| TicketLock::new(&m, &format!("L{i}"), (i % m.num_nodes()) as NodeId))
+                            .collect(),
+                    );
+                    let accts = Arc::new(AccountArray::new(&m, "acct", accounts));
+                    for l in locks.iter() {
+                        l.wait_ready(Duration::from_secs(60));
+                    }
+                    accts.wait_ready(Duration::from_secs(60));
+                    ready.fetch_add(1, Ordering::SeqCst);
+                    while ready.load(Ordering::SeqCst) != 0 && !stop.load(Ordering::Relaxed) {
+                        std::thread::yield_now();
+                    }
+                    let ths: Vec<_> = (0..threads_per_node)
+                        .map(|t| {
+                            let m = m.clone();
+                            let locks = locks.clone();
+                            let accts = accts.clone();
+                            let stop = stop.clone();
+                            std::thread::spawn(move || {
+                                let ctx = m.ctx();
+                                let mut rng = Rng::seeded((mi * 131 + t) as u64);
+                                let mut ops = 0u64;
+                                while !stop.load(Ordering::Relaxed) {
+                                    let a = rng.gen_range(accounts);
+                                    let b = rng.gen_range(accounts);
+                                    let (la, lb) =
+                                        (a as usize % num_locks, b as usize % num_locks);
+                                    let (l1, l2) = (la.min(lb), la.max(lb));
+                                    locks[l1].lock(&ctx);
+                                    if l2 != l1 {
+                                        locks[l2].lock(&ctx);
+                                    }
+                                    let va = accts.read(&ctx, a);
+                                    let vb = accts.read(&ctx, b);
+                                    let amt = rng.gen_range(100);
+                                    accts.write(&ctx, a, va.wrapping_sub(amt));
+                                    accts.write(&ctx, b, vb.wrapping_add(amt));
+                                    // Fence both data nodes before release.
+                                    ctx.fence(FenceScope::Thread);
+                                    if l2 != l1 {
+                                        locks[l2].unlock(&ctx);
+                                    }
+                                    locks[l1].unlock(&ctx);
+                                    ops += 1;
+                                }
+                                ops
+                            })
+                        })
+                        .collect();
+                    let ops: u64 = ths.into_iter().map(|t| t.join().unwrap()).sum();
+                    total.fetch_add(ops, Ordering::Relaxed);
+                }
+                LockSystem::OpenMpi => {
+                    // MPI: separate "ranks" per thread — each its own
+                    // window set handle; windows are shared node state, so
+                    // construct once and share (MPI windows are collective).
+                    let per_window = accounts.div_ceil((num_locks * m.num_nodes()) as u64);
+                    let win =
+                        Arc::new(MpiWindows::new(&m, "W", num_locks, per_window));
+                    win.wait_ready(Duration::from_secs(60));
+                    ready.fetch_add(1, Ordering::SeqCst);
+                    while ready.load(Ordering::SeqCst) != 0 && !stop.load(Ordering::Relaxed) {
+                        std::thread::yield_now();
+                    }
+                    let ths: Vec<_> = (0..threads_per_node)
+                        .map(|t| {
+                            let m = m.clone();
+                            let win = win.clone();
+                            let stop = stop.clone();
+                            std::thread::spawn(move || {
+                                let ctx = m.ctx();
+                                let n = m.num_nodes() as u64;
+                                let mut rng = Rng::seeded((mi * 131 + t) as u64);
+                                let mut ops = 0u64;
+                                while !stop.load(Ordering::Relaxed) {
+                                    let a = rng.gen_range(accounts);
+                                    let b = rng.gen_range(accounts);
+                                    // Account → (window, rank, offset):
+                                    // locks are COUPLED to windows.
+                                    let loc = |x: u64| {
+                                        let w = (x % num_locks as u64) as usize;
+                                        let r = ((x / num_locks as u64) % n) as NodeId;
+                                        let off = x / (num_locks as u64 * n);
+                                        (w, r, off)
+                                    };
+                                    let (wa, ra, oa) = loc(a);
+                                    let (wb, rb, ob) = loc(b);
+                                    let first = (wa, ra) <= (wb, rb);
+                                    let (w1, r1, w2, r2) = if first {
+                                        (wa, ra, wb, rb)
+                                    } else {
+                                        (wb, rb, wa, ra)
+                                    };
+                                    win.win_lock(&ctx, w1, r1);
+                                    if (w1, r1) != (w2, r2) {
+                                        win.win_lock(&ctx, w2, r2);
+                                    }
+                                    let va = win.get(&ctx, wa, ra, oa);
+                                    let vb = win.get(&ctx, wb, rb, ob);
+                                    let amt = rng.gen_range(100);
+                                    win.put(&ctx, wa, ra, oa, va.wrapping_sub(amt));
+                                    win.put(&ctx, wb, rb, ob, vb.wrapping_add(amt));
+                                    if (w1, r1) != (w2, r2) {
+                                        win.win_unlock(&ctx, w2, r2);
+                                    }
+                                    win.win_unlock(&ctx, w1, r1);
+                                    ops += 1;
+                                }
+                                ops
+                            })
+                        })
+                        .collect();
+                    let ops: u64 = ths.into_iter().map(|t| t.join().unwrap()).sum();
+                    total.fetch_add(ops, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    while ready.load(Ordering::SeqCst) < nodes as u64 {
+        std::thread::yield_now();
+    }
+    ready.store(0, Ordering::SeqCst); // release the workers
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::SeqCst);
+    for h in handles {
+        h.join().unwrap();
+    }
+    total.load(Ordering::SeqCst) as f64 / secs / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_lock_both_systems_make_progress() {
+        for sys in [LockSystem::Loco, LockSystem::OpenMpi] {
+            let mops = single_lock_mops(sys, 2, 0.2, LatencyModel::fast_sim());
+            assert!(mops > 0.0, "{sys:?} made no progress");
+        }
+    }
+
+    #[test]
+    fn txn_both_systems_make_progress() {
+        for sys in [LockSystem::Loco, LockSystem::OpenMpi] {
+            let mops = txn_mops(sys, 2, 1, 10_000, 0.2, LatencyModel::fast_sim());
+            assert!(mops > 0.0, "{sys:?} made no progress");
+        }
+    }
+}

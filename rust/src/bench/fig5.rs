@@ -1,0 +1,389 @@
+//! Fig. 5: key-value store throughput — LOCO vs Sherman vs Scythe vs
+//! Redis-cluster (§7.2).
+//!
+//! Grid: {read-only, 50/50, write-only} × {uniform, zipfian θ=0.99} ×
+//! node count × threads/node × window {3, 128 for LOCO}. Every cell
+//! builds a fresh cluster for its system, prefills the keyspace to 80 %,
+//! runs timed per-thread workers, and reports aggregate Mops/s.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::kvstore::{KvConfig, KvStore};
+use crate::baselines::rediscluster::{RedisClient, RedisServer};
+use crate::baselines::scythe::Scythe;
+use crate::baselines::sherman::Sherman;
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use crate::workload::{KeyDist, Op, OpMix, WorkloadGen};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvSystem {
+    Loco,
+    Sherman,
+    Scythe,
+    Redis,
+}
+
+impl KvSystem {
+    pub const ALL: [KvSystem; 4] =
+        [KvSystem::Loco, KvSystem::Sherman, KvSystem::Scythe, KvSystem::Redis];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvSystem::Loco => "LOCO",
+            KvSystem::Sherman => "Sherman",
+            KvSystem::Scythe => "Scythe",
+            KvSystem::Redis => "Redis",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig5Cell {
+    pub system: KvSystem,
+    pub nodes: usize,
+    pub threads: usize,
+    pub mix: OpMix,
+    pub dist: KeyDist,
+    /// Outstanding ops per thread (LOCO reads honor this; see §7.2).
+    pub window: usize,
+    pub keys: u64,
+    pub secs: f64,
+}
+
+/// Run one grid cell; returns aggregate Mops/s.
+pub fn run_cell(cell: &Fig5Cell, lat: LatencyModel, redis_lat: LatencyModel) -> f64 {
+    match cell.system {
+        KvSystem::Loco => run_loco(cell, lat),
+        KvSystem::Sherman => run_sherman(cell, lat),
+        KvSystem::Scythe => run_scythe(cell, lat),
+        KvSystem::Redis => run_redis(cell, redis_lat),
+    }
+}
+
+struct Gate {
+    ready: AtomicU64,
+    stop: AtomicBool,
+    ops: AtomicU64,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { ready: AtomicU64::new(0), stop: AtomicBool::new(false), ops: AtomicU64::new(0) })
+    }
+
+    fn worker_ready_and_wait(&self) {
+        self.ready.fetch_add(1, Ordering::SeqCst);
+        while self.ready.load(Ordering::SeqCst) != 0 && !self.stop.load(Ordering::Relaxed) {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Release the workers once all are set up, run the timed window,
+    /// then signal stop. Call `mops` AFTER joining the workers.
+    fn run_window(&self, workers: u64, secs: f64) {
+        while self.ready.load(Ordering::SeqCst) < workers {
+            std::thread::yield_now();
+        }
+        self.ready.store(0, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    fn mops(&self, secs: f64) -> f64 {
+        self.ops.load(Ordering::SeqCst) as f64 / secs / 1e6
+    }
+}
+
+fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
+    let n = cell.nodes;
+    let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let cfg = KvConfig {
+        slots_per_node: (cell.keys as usize).div_ceil(n) + 64,
+        ..Default::default()
+    };
+    let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(60));
+    }
+    // Prefill 80 %, hash-partitioned.
+    let loaded = (cell.keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+    let prefill: Vec<_> = mgrs
+        .iter()
+        .zip(&kvs)
+        .enumerate()
+        .map(|(i, (m, kv))| {
+            let m = m.clone();
+            let kv = kv.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mine: Vec<u64> =
+                    (0..loaded).filter(|&k| kv.home_of(k) == i as NodeId).collect();
+                kv.prefill_local(&ctx, &mine, |k| vec![k], None).unwrap();
+            })
+        })
+        .collect();
+    for h in prefill {
+        h.join().unwrap();
+    }
+
+    let gate = Gate::new();
+    let handles: Vec<_> = (0..n)
+        .flat_map(|ni| (0..cell.threads).map(move |t| (ni, t)))
+        .map(|(ni, t)| {
+            let m = mgrs[ni].clone();
+            let kv = kvs[ni].clone();
+            let gate = gate.clone();
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut gen = WorkloadGen::new(
+                    cell.keys,
+                    cell.dist,
+                    cell.mix,
+                    (ni * 1000 + t) as u64 + 1,
+                );
+                gate.worker_ready_and_wait();
+                let mut ops = 0u64;
+                let mut pending = Vec::with_capacity(cell.window);
+                while !gate.stop.load(Ordering::Relaxed) {
+                    match gen.next_op() {
+                        Op::Read { key } => {
+                            // Windowed reads (§7.2's window-size knob).
+                            if let Some(pg) = kv.get_issue(&ctx, key) {
+                                pending.push(pg);
+                            } else {
+                                ops += 1; // miss counts as a completed op
+                            }
+                            if pending.len() >= cell.window {
+                                for pg in pending.drain(..) {
+                                    let _ = kv.get_complete(&ctx, pg);
+                                    ops += 1;
+                                }
+                            }
+                        }
+                        Op::Update { key, value } => {
+                            // Updates serialize under the key lock.
+                            for pg in pending.drain(..) {
+                                let _ = kv.get_complete(&ctx, pg);
+                                ops += 1;
+                            }
+                            kv.update(&ctx, key, &[value]);
+                            ops += 1;
+                        }
+                    }
+                }
+                for pg in pending.drain(..) {
+                    let _ = kv.get_complete(&ctx, pg);
+                    ops += 1;
+                }
+                gate.ops.fetch_add(ops, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    gate.run_window((n * cell.threads) as u64, cell.secs);
+    for h in handles {
+        h.join().unwrap();
+    }
+    gate.mops(cell.secs)
+}
+
+fn run_sherman(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
+    let n = cell.nodes;
+    let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let trees: Vec<Arc<Sherman>> =
+        mgrs.iter().map(|m| Arc::new(Sherman::new(m, "sh", cell.keys))).collect();
+    for t in &trees {
+        t.wait_ready(Duration::from_secs(60));
+    }
+    let loaded = (cell.keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+    for (i, (m, t)) in mgrs.iter().zip(&trees).enumerate() {
+        let ctx = m.ctx();
+        let _ = i;
+        t.prefill_local(&ctx, (0..loaded).filter(|&k| t.is_local(k)).map(|k| (k, k + 1)));
+    }
+
+    let gate = Gate::new();
+    let handles: Vec<_> = (0..n)
+        .flat_map(|ni| (0..cell.threads).map(move |t| (ni, t)))
+        .map(|(ni, t)| {
+            let m = mgrs[ni].clone();
+            let tree = trees[ni].clone();
+            let gate = gate.clone();
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut gen =
+                    WorkloadGen::new(cell.keys, cell.dist, cell.mix, (ni * 1000 + t) as u64 + 1);
+                gate.worker_ready_and_wait();
+                let mut ops = 0u64;
+                while !gate.stop.load(Ordering::Relaxed) {
+                    match gen.next_op() {
+                        Op::Read { key } => {
+                            let _ = tree.get(&ctx, key);
+                        }
+                        Op::Update { key, value } => {
+                            tree.put(&ctx, key, value | 1); // nonzero
+                        }
+                    }
+                    ops += 1;
+                }
+                gate.ops.fetch_add(ops, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    gate.run_window((n * cell.threads) as u64, cell.secs);
+    for h in handles {
+        h.join().unwrap();
+    }
+    gate.mops(cell.secs)
+}
+
+fn run_scythe(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
+    let n = cell.nodes;
+    let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let dbs: Vec<Arc<Scythe>> =
+        mgrs.iter().map(|m| Scythe::new(m, "sc", cell.threads)).collect();
+    for d in &dbs {
+        d.wait_ready(Duration::from_secs(60));
+    }
+    let loaded = (cell.keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+    for (i, d) in dbs.iter().enumerate() {
+        d.prefill_local(
+            (0..loaded).filter(|&k| d.home_of(k) == i as NodeId).map(|k| (k, k + 1)),
+        );
+    }
+
+    let gate = Gate::new();
+    let handles: Vec<_> = (0..n)
+        .flat_map(|ni| (0..cell.threads).map(move |t| (ni, t)))
+        .map(|(ni, t)| {
+            let m = mgrs[ni].clone();
+            let db = dbs[ni].clone();
+            let gate = gate.clone();
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut gen =
+                    WorkloadGen::new(cell.keys, cell.dist, cell.mix, (ni * 1000 + t) as u64 + 1);
+                gate.worker_ready_and_wait();
+                let mut ops = 0u64;
+                let mut seq = 0u64;
+                while !gate.stop.load(Ordering::Relaxed) {
+                    seq += 1;
+                    match gen.next_op() {
+                        Op::Read { key } => {
+                            let _ = db.get(&ctx, t, seq, key);
+                        }
+                        // Paper: Scythe writes measured via its insert
+                        // path (upper bound; update was unstable).
+                        Op::Update { key, value } => db.put(&ctx, t, seq, key, value),
+                    }
+                    ops += 1;
+                }
+                gate.ops.fetch_add(ops, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    gate.run_window((n * cell.threads) as u64, cell.secs);
+    for h in handles {
+        h.join().unwrap();
+    }
+    gate.mops(cell.secs)
+}
+
+fn run_redis(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
+    // Topology: one server node per (paper: ceil(threads/4)) instances ×
+    // cell.nodes, plus one client node per (node, thread).
+    let instances = cell.nodes * cell.threads.div_ceil(4).max(1);
+    let clients = cell.nodes * cell.threads;
+    let cluster = Cluster::new(instances + clients, FabricConfig::threaded(lat));
+    let mut servers = Vec::new();
+    for s in 0..instances {
+        servers.push(RedisServer::spawn(cluster.clone(), s as NodeId));
+    }
+    // Prefill through one client.
+    let loaded = (cell.keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+    {
+        let mut c = RedisClient::new(cluster.clone(), instances as NodeId, instances, 64);
+        for k in 0..loaded {
+            c.issue(false, k, k + 1);
+        }
+        c.drain();
+    }
+
+    let gate = Gate::new();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let cluster = cluster.clone();
+            let gate = gate.clone();
+            let cell = cell.clone();
+            std::thread::spawn(move || {
+                let mut client = RedisClient::new(
+                    cluster,
+                    (instances + ci) as NodeId,
+                    instances,
+                    cell.window.max(1),
+                );
+                let mut gen = WorkloadGen::new(cell.keys, cell.dist, cell.mix, ci as u64 + 1);
+                gate.worker_ready_and_wait();
+                let mut ops = 0u64;
+                while !gate.stop.load(Ordering::Relaxed) {
+                    let (is_get, key, value) = match gen.next_op() {
+                        Op::Read { key } => (true, key, 0),
+                        Op::Update { key, value } => (false, key, value),
+                    };
+                    ops += client.issue(is_get, key, value) as u64;
+                }
+                ops += client.drain() as u64;
+                gate.ops.fetch_add(ops, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    gate.run_window(clients as u64, cell.secs);
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Stop the server instances — leaking them would poison every
+    // subsequent cell on a small host.
+    for (flag, h) in servers {
+        flag.store(true, Ordering::SeqCst);
+        let _ = h.join();
+    }
+    gate.mops(cell.secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_system_completes_a_cell() {
+        for system in KvSystem::ALL {
+            let cell = Fig5Cell {
+                system,
+                nodes: 2,
+                threads: 1,
+                mix: OpMix::MIXED_50_50,
+                dist: KeyDist::Uniform,
+                window: 3,
+                keys: 2048,
+                secs: 0.15,
+            };
+            let mops = run_cell(
+                &cell,
+                LatencyModel::fast_sim(),
+                crate::baselines::rediscluster::redis_latency_fast(),
+            );
+            assert!(mops > 0.0, "{system:?} made no progress");
+        }
+    }
+}

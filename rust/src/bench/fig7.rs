@@ -1,0 +1,134 @@
+//! Fig. 7: DC/DC converter output voltage vs controller loop period
+//! (Appendix B.2). One controller + N converters; periods ≤ 40 µs hold a
+//! stable total output voltage, larger periods oscillate.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::power::{
+    closed_loop_reference, Compute, Pacing, PowerChannel, PowerConfig, PowerSystem, Sample,
+    NUM_CONVERTERS, VREF,
+};
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use crate::runtime::{artifacts_dir, Runtime};
+
+pub struct Fig7Row {
+    pub period_us: u64,
+    pub ripple: f64,
+    pub mean: f64,
+    pub stable: bool,
+    /// Pure-compute reference (no network) for the same period.
+    pub ref_ripple: f64,
+}
+
+/// Load the AOT compute path if artifacts exist, else fall back to the
+/// bit-identical native mirror. Returns (compute, used_hlo).
+pub fn load_compute(converters: usize) -> (Compute, bool) {
+    let dir = artifacts_dir();
+    let conv = dir.join("converter1.hlo.txt");
+    let ctrl = dir.join(format!("controller{converters}.hlo.txt"));
+    if conv.exists() && ctrl.exists() {
+        match Runtime::cpu().and_then(|rt| {
+            let c = rt.load(&conv)?;
+            let k = rt.load(&ctrl)?;
+            Ok((Arc::new(c), Arc::new(k)))
+        }) {
+            Ok((converter, controller)) => {
+                return (Compute::Hlo { converter, controller }, true)
+            }
+            Err(e) => eprintln!("fig7: artifact load failed ({e}); using native mirror"),
+        }
+    } else {
+        eprintln!(
+            "fig7: artifacts missing in {} (run `make artifacts`); using native mirror",
+            dir.display()
+        );
+    }
+    (Compute::Native, false)
+}
+
+/// Run the distributed system at one loop period; returns the trace.
+pub fn run_period(
+    converters: usize,
+    period: Duration,
+    sim_time: Duration,
+    time_scale: u32,
+    lat: LatencyModel,
+    use_hlo: bool,
+) -> Vec<Sample> {
+    let cfg = PowerConfig {
+        converters,
+        controller_period: period,
+        converter_period: Duration::from_micros(10),
+        time_scale,
+        sim_time,
+        // Wall pacing needs cores ≥ nodes; opt in via LOCO_POWER_WALL=1.
+        pacing: if std::env::var("LOCO_POWER_WALL").map(|v| v == "1").unwrap_or(false) {
+            Pacing::Wall
+        } else {
+            Pacing::Lockstep
+        },
+    };
+    let cluster = Cluster::new(converters + 1, FabricConfig::threaded(lat));
+    let mgrs: Vec<Arc<Manager>> = (0..=converters as NodeId)
+        .map(|i| Manager::new(cluster.clone(), i))
+        .collect();
+    let mut handles = Vec::new();
+    for idx in 0..converters {
+        let m = mgrs[idx + 1].clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            // Each converter node loads its own executable instance.
+            let compute = if use_hlo {
+                load_compute(cfg.converters).0
+            } else {
+                Compute::Native
+            };
+            let chan = PowerChannel::new(&m, "pwr", cfg.converters);
+            chan.wait_ready(Duration::from_secs(60));
+            PowerSystem::run_converter(&m, &chan, &cfg, &compute, idx)
+        }));
+    }
+    let compute = if use_hlo { load_compute(cfg.converters).0 } else { Compute::Native };
+    let chan = PowerChannel::new(&mgrs[0], "pwr", cfg.converters);
+    chan.wait_ready(Duration::from_secs(60));
+    let trace = PowerSystem::run_controller(&mgrs[0], &chan, &cfg, &compute);
+    for h in handles {
+        let _ = h.join().unwrap();
+    }
+    trace
+}
+
+/// The full Fig. 7 sweep.
+pub fn sweep(
+    converters: usize,
+    periods_us: &[u64],
+    sim_time: Duration,
+    time_scale: u32,
+    lat: LatencyModel,
+) -> Vec<Fig7Row> {
+    let (_, have_hlo) = load_compute(converters);
+    periods_us
+        .iter()
+        .map(|&p| {
+            let period = Duration::from_micros(p);
+            let trace = run_period(converters, period, sim_time, time_scale, lat.clone(), have_hlo);
+            let ripple = PowerSystem::tail_ripple(&trace) / converters as f64;
+            let mean = PowerSystem::tail_mean(&trace) / converters as f64;
+            let (ref_ripple, _) = closed_loop_reference(period, Duration::from_millis(300));
+            Fig7Row {
+                period_us: p,
+                ripple,
+                mean,
+                stable: ripple < 2.0 && (mean - VREF).abs() < 2.0,
+                ref_ripple,
+            }
+        })
+        .collect()
+}
+
+/// Default paper configuration (1 + 20 nodes).
+pub fn paper_sweep(lat: LatencyModel) -> Vec<Fig7Row> {
+    sweep(NUM_CONVERTERS, &[20, 40, 60, 80], Duration::from_millis(120), 2, lat)
+}

@@ -1,0 +1,213 @@
+//! Micro-benchmarks and ablations of LOCO's design choices (DESIGN.md
+//! §4's ablation list): fence scopes, the §7.2 update fence (~15 %),
+//! owned_var push vs pull, lock local-handover, MR pooling vs
+//! per-region registration.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::apps::kvstore::{KvConfig, KvStore};
+use crate::channels::owned_var::OwnedVar;
+use crate::channels::ticket_lock::TicketLock;
+use crate::core::ctx::FenceScope;
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+fn two_nodes(lat: LatencyModel) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
+    let cluster = Cluster::new(2, FabricConfig::threaded(lat));
+    let mgrs = (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
+    (cluster, mgrs)
+}
+
+/// Mean latency (µs) of a remote write followed by a fence of `scope`,
+/// vs an unfenced write. Rows: (label, µs/op).
+pub fn fence_scopes(lat: LatencyModel, iters: u64) -> Vec<(String, f64)> {
+    let (cluster, mgrs) = two_nodes(lat);
+    let dst = cluster.node(1).register_mr(64, false);
+    let ctx = mgrs[0].ctx();
+    let mut rows = Vec::new();
+
+    let t0 = Instant::now();
+    for i in 0..iters {
+        ctx.write1(dst, i % 64, i).wait();
+    }
+    rows.push(("write (no fence)".to_string(), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+
+    for (label, scope) in [("pair fence", FenceScope::Pair(1)), ("thread fence", FenceScope::Thread)]
+    {
+        let t0 = Instant::now();
+        for i in 0..iters {
+            ctx.write1(dst, i % 64, i);
+            ctx.fence(scope);
+        }
+        rows.push((format!("write + {label}"), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        ctx.write1(dst, i % 64, i);
+        mgrs[0].global_fence(&ctx);
+    }
+    rows.push(("write + global fence".to_string(), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+    rows
+}
+
+/// The §7.2 claim: fencing updates costs ~15 %. Rows: (label, Kops/s).
+pub fn kv_update_fence(lat: LatencyModel, iters: u64) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for fence in [true, false] {
+        let (_cluster, mgrs) = {
+            let cluster = Cluster::new(2, FabricConfig::threaded(lat.clone()));
+            let mgrs: Vec<Arc<Manager>> =
+                (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
+            (cluster, mgrs)
+        };
+        let cfg = KvConfig { slots_per_node: 1024, fence_updates: fence, ..Default::default() };
+        let kvs: Vec<Arc<KvStore>> =
+            mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+        for kv in &kvs {
+            kv.wait_ready(Duration::from_secs(30));
+        }
+        let ctx0 = mgrs[0].ctx();
+        let ctx1 = mgrs[1].ctx();
+        for k in 0..256u64 {
+            kvs[0].insert(&ctx0, k, &[k]).unwrap();
+        }
+        // Updates from node 1 (remote home → the fence actually fences).
+        let t0 = Instant::now();
+        for i in 0..iters {
+            kvs[1].update(&ctx1, i % 256, &[i]);
+        }
+        let kops = iters as f64 / t0.elapsed().as_secs_f64() / 1e3;
+        rows.push((format!("update, fence={fence}"), kops));
+    }
+    rows
+}
+
+/// owned_var propagation strategies. Rows: (label, µs/op).
+pub fn owned_var_push_vs_pull(lat: LatencyModel, iters: u64) -> Vec<(String, f64)> {
+    let (_c, mgrs) = two_nodes(lat);
+    let vars: Vec<OwnedVar> =
+        mgrs.iter().map(|m| OwnedVar::new(m, "ov", 0, 4, false)).collect();
+    for v in &vars {
+        v.wait_ready(Duration::from_secs(30));
+    }
+    let ctx0 = mgrs[0].ctx();
+    let ctx1 = mgrs[1].ctx();
+    let mut rows = Vec::new();
+
+    let t0 = Instant::now();
+    for i in 0..iters {
+        vars[0].publish(&ctx0, &[i; 4]).wait();
+    }
+    rows.push(("owner push (4 words)".into(), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = vars[1].pull(&ctx1);
+    }
+    rows.push(("reader pull (4 words)".into(), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = vars[1].read_cached(&ctx1);
+    }
+    rows.push(("cached read (4 words)".into(), t0.elapsed().as_secs_f64() / iters as f64 * 1e6));
+    rows
+}
+
+/// Lock handover ablation: two local threads contending. Rows:
+/// (label, Kops/s aggregate).
+pub fn lock_handover(lat: LatencyModel, iters: u64) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for handover in [true, false] {
+        let (_c, mgrs) = two_nodes(lat.clone());
+        let lock0 = Arc::new(TicketLock::with_options(
+            &mgrs[0],
+            "L",
+            0,
+            FenceScope::Thread,
+            true,
+            handover,
+        ));
+        let _lock1 =
+            TicketLock::with_options(&mgrs[1], "L", 0, FenceScope::Thread, true, handover);
+        lock0.wait_ready(Duration::from_secs(30));
+        let t0 = Instant::now();
+        let ths: Vec<_> = (0..2)
+            .map(|_| {
+                let m = mgrs[0].clone();
+                let lock = lock0.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    for _ in 0..iters {
+                        lock.lock(&ctx);
+                        lock.unlock(&ctx);
+                    }
+                })
+            })
+            .collect();
+        for t in ths {
+            t.join().unwrap();
+        }
+        let kops = (2 * iters) as f64 / t0.elapsed().as_secs_f64() / 1e3;
+        rows.push((format!("2 local threads, handover={handover}"), kops));
+    }
+    rows
+}
+
+/// MR pooling: remote-write latency when the target registers its memory
+/// as a few pooled huge pages vs one MR per object (the Fig. 4
+/// explanation). Rows: (label, µs/op).
+pub fn mr_pooling(lat: LatencyModel, iters: u64) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for pooled in [true, false] {
+        let cluster = Cluster::new(2, FabricConfig::threaded(lat.clone()));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
+        // 128 objects on node 1.
+        let regions: Vec<_> = if pooled {
+            let pool = mgrs[1].pool().clone();
+            (0..128).map(|i| pool.alloc_named(&format!("obj{i}"), 8, false)).collect()
+        } else {
+            (0..128).map(|_| cluster.node(1).register_mr(8, false)).collect()
+        };
+        let mr_count = cluster.node(1).mr_count();
+        let ctx = mgrs[0].ctx();
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let r = &regions[(i % 128) as usize];
+            ctx.write1(*r, 0, i).wait();
+        }
+        let us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        rows.push((format!("{} ({} MRs)", if pooled { "pooled" } else { "per-object" }, mr_count), us));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_run_and_shapes_hold() {
+        // Under parallel `cargo test` the machine is heavily
+        // oversubscribed with sibling clusters' engine threads, so
+        // wall-clock *orderings* are unreliable here; the unit test checks
+        // the ablations run and produce sane rows, and the isolated
+        // `cargo bench --bench micro_channels` run asserts the orderings.
+        let lat = LatencyModel::fast_sim();
+        let fences = fence_scopes(lat.clone(), 200);
+        assert_eq!(fences.len(), 4);
+        assert!(fences.iter().all(|(_, us)| *us > 0.0), "{fences:?}");
+
+        let pooling = mr_pooling(lat.clone(), 300);
+        // Per-object MRs (128 > cache of 64) carry a latency penalty; under
+        // parallel `cargo test` load the wall-clock signal is noisy, so the
+        // unit test only checks both modes run — micro_channels (run in
+        // isolation via `cargo bench`) asserts the ordering.
+        assert!(pooling.iter().all(|(_, us)| *us > 0.0), "{pooling:?}");
+
+        let hand = lock_handover(lat, 150);
+        assert!(hand.iter().all(|(_, kops)| *kops > 0.0), "{hand:?}");
+    }
+}

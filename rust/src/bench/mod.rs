@@ -1,0 +1,64 @@
+//! Benchmark harness: one module per paper artifact. The `rust/benches/`
+//! targets and the `loco` CLI both drive these; each prints rows shaped
+//! like the paper's figures.
+//!
+//! Scale note: the harness defaults to `LatencyModel::fast_sim()` (all
+//! RoCE latencies ÷20) and scaled-down keyspaces/account counts so a full
+//! sweep finishes in minutes on one machine. Set `LOCO_FULL=1` for
+//! paper-calibrated `roce25()` latencies and larger workloads. Ratios —
+//! who wins, by how much, where crossovers fall — are preserved either
+//! way (every system shares the same fabric and scaling); EXPERIMENTS.md
+//! records both modes.
+
+pub mod fig1b;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod micro;
+
+use crate::fabric::LatencyModel;
+
+/// Benchmark scale from the environment.
+pub struct Scale {
+    pub latency: LatencyModel,
+    /// Seconds per measured cell.
+    pub secs: f64,
+    /// Runs per cell (the paper geomeans 5).
+    pub runs: usize,
+    pub full: bool,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        let full = std::env::var("LOCO_FULL").map(|v| v == "1").unwrap_or(false);
+        let secs = std::env::var("LOCO_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if full { 5.0 } else { 0.6 });
+        let runs = std::env::var("LOCO_BENCH_RUNS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(if full { 5 } else { 2 });
+        Scale {
+            latency: if full { LatencyModel::roce25() } else { LatencyModel::fast_sim() },
+            secs,
+            runs,
+            full,
+        }
+    }
+
+    /// Redis gets its own (software-stack) latency profile.
+    pub fn redis_latency(&self) -> LatencyModel {
+        if self.full {
+            crate::baselines::rediscluster::redis_latency()
+        } else {
+            crate::baselines::rediscluster::redis_latency_fast()
+        }
+    }
+}
+
+/// Geomean over `runs` invocations of `f`.
+pub fn geomean_runs(runs: usize, mut f: impl FnMut() -> f64) -> f64 {
+    let samples: Vec<f64> = (0..runs).map(|_| f()).collect();
+    crate::metrics::geomean(&samples)
+}

@@ -1,0 +1,175 @@
+//! `atomic_var`: multi-writer multi-reader word-size register
+//! (paper §5.1.1).
+//!
+//! A single "official" copy lives on the `host` participant; all
+//! participants operate on it with remote atomics (FAA/CAS) and
+//! word-atomic reads/writes. The primary purpose is exposing atomic
+//! operations on remote memory — the building block of the ticket lock
+//! and the shared queue.
+//!
+//! The official copy can live in NIC **device memory** (App. A.2):
+//! state that is only ever accessed through the network (like mutex
+//! words) avoids the PCIe hop.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+
+pub struct AtomicVar {
+    ep: Arc<Endpoint>,
+    host: NodeId,
+    /// Official copy (host only).
+    cell: Option<Region>,
+    num_nodes: usize,
+}
+
+impl AtomicVar {
+    pub fn new(mgr: &Arc<Manager>, name: &str, host: NodeId, device: bool) -> Self {
+        let me = mgr.me();
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        let _ = me;
+        let cell = if me == host {
+            let r = mgr.pool().alloc_named(&region_name(name, "cell"), 1, device);
+            ep.add_local_region("cell", r);
+            Some(r)
+        } else {
+            None
+        };
+        mgr.register_channel(ep.clone());
+        AtomicVar { ep, host, cell, num_nodes: mgr.num_nodes() }
+    }
+
+    /// Construct with an initial value (host side sets it before peers
+    /// can possibly access: they need our connect metadata first).
+    pub fn with_initial(mgr: &Arc<Manager>, name: &str, host: NodeId, device: bool, init: u64) -> Self {
+        let v = Self::new(mgr, name, host, device);
+        if let Some(cell) = v.cell {
+            mgr.cluster().node(mgr.me()).arena().store(cell.at(0), init);
+        }
+        v
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    pub fn host(&self) -> NodeId {
+        self.host
+    }
+
+    fn cell_region(&self) -> Region {
+        match self.cell {
+            Some(r) => r,
+            None => self.ep.remote_region(self.host, "cell"),
+        }
+    }
+
+    /// Word-atomic load of the official copy.
+    pub fn load(&self, ctx: &ThreadCtx) -> u64 {
+        ctx.read1(self.cell_region(), 0)
+    }
+
+    /// Word-atomic store to the official copy. Remote stores are
+    /// completion-tracked but, like any RDMA write, not placed until a
+    /// flushing op or fence (use `fetch_add`/`compare_swap` for
+    /// read-modify-write semantics).
+    pub fn store(&self, ctx: &ThreadCtx, v: u64) {
+        ctx.write1(self.cell_region(), 0, v).wait();
+    }
+
+    /// Atomic fetch-and-add on the official copy; returns the old value.
+    pub fn fetch_add(&self, ctx: &ThreadCtx, add: u64) -> u64 {
+        ctx.fetch_add(self.cell_region(), 0, add)
+    }
+
+    /// Atomic compare-and-swap; returns the old value.
+    pub fn compare_swap(&self, ctx: &ThreadCtx, expect: u64, swap: u64) -> u64 {
+        ctx.compare_swap(self.cell_region(), 0, expect, swap)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig};
+
+    fn setup(n: usize) -> Vec<Arc<Manager>> {
+        let cluster = Cluster::new(n, FabricConfig::inline_ideal());
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect()
+    }
+
+    #[test]
+    fn remote_atomics_from_all_nodes() {
+        let mgrs = setup(3);
+        let vars: Vec<AtomicVar> =
+            mgrs.iter().map(|m| AtomicVar::with_initial(m, "ctr", 1, false, 100)).collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        assert_eq!(vars[0].load(&ctxs[0]), 100);
+        assert_eq!(vars[0].fetch_add(&ctxs[0], 1), 100);
+        assert_eq!(vars[1].fetch_add(&ctxs[1], 1), 101); // host-local fast path
+        assert_eq!(vars[2].fetch_add(&ctxs[2], 1), 102);
+        assert_eq!(vars[1].load(&ctxs[1]), 103);
+        assert_eq!(vars[2].compare_swap(&ctxs[2], 103, 7), 103);
+        assert_eq!(vars[0].load(&ctxs[0]), 7);
+    }
+
+    #[test]
+    fn device_memory_cell() {
+        let mgrs = setup(2);
+        let vars: Vec<AtomicVar> =
+            mgrs.iter().map(|m| AtomicVar::new(m, "dev", 0, true)).collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+        let ctx1 = mgrs[1].ctx();
+        assert_eq!(vars[1].fetch_add(&ctx1, 5), 0);
+        assert_eq!(vars[1].load(&ctx1), 5);
+        // The official copy really is in device space.
+        assert!(vars[1].ep.remote_region(0, "cell").base >= crate::fabric::DEVICE_BASE);
+    }
+
+    /// FAA from many nodes concurrently: no lost updates.
+    #[test]
+    fn concurrent_faa_no_lost_updates() {
+        let cluster = Cluster::new(4, FabricConfig::threaded(crate::fabric::LatencyModel::fast_sim()));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..4).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let vars: Vec<Arc<AtomicVar>> = mgrs
+            .iter()
+            .map(|m| Arc::new(AtomicVar::new(m, "race", 0, false)))
+            .collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+        let handles: Vec<_> = mgrs
+            .iter()
+            .zip(&vars)
+            .map(|(m, v)| {
+                let m = m.clone();
+                let v = v.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    for _ in 0..250 {
+                        v.fetch_add(&ctx, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ctx0 = mgrs[0].ctx();
+        assert_eq!(vars[0].load(&ctx0), 1000);
+    }
+}

@@ -1,0 +1,122 @@
+//! The network barrier (paper §4.1, Fig. 1a; algorithm after [27]).
+//!
+//! Each use: complete all outstanding RDMA (a **global fence**),
+//! increment a private count, publish it through the SST, and spin until
+//! every participant's SST row reaches our count.
+
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::sub_name;
+use crate::core::manager::Manager;
+use crate::fabric::NodeId;
+use crate::util::Backoff;
+
+use super::sst::Sst;
+
+pub struct Barrier {
+    mgr: Arc<Manager>,
+    sst: Sst,
+    count: Cell<u64>,
+    num_nodes: usize,
+}
+
+impl Barrier {
+    /// Construct the barrier endpoint (all `num` nodes participate).
+    /// The SST sub-channel is namespaced `"<name>/sst"` as in the paper.
+    pub fn new(mgr: &Arc<Manager>, name: &str, num: usize) -> Self {
+        assert_eq!(num, mgr.num_nodes(), "partial-participation barriers: use expect_num");
+        let sst = Sst::new(mgr, &sub_name(name, "sst"), 1);
+        Barrier { mgr: mgr.clone(), sst, count: Cell::new(0), num_nodes: num }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.sst.wait_ready(timeout);
+    }
+
+    /// The paper's `waiting()`: returns when all participants have
+    /// arrived at this barrier use.
+    pub fn wait(&self, ctx: &ThreadCtx) {
+        // Complete all outstanding RDMA operations (§5.3).
+        self.mgr.global_fence(ctx);
+        let count = self.count.get() + 1;
+        self.count.set(count);
+        self.sst.store_mine(ctx, &[count]);
+        self.sst.push_broadcast(ctx); // fire and forget; peers spin on rows
+        let mut bo = Backoff::new();
+        loop {
+            let mut waiting = false;
+            for row in 0..self.num_nodes as NodeId {
+                if self.sst.read_row1(ctx, row) < count {
+                    waiting = true;
+                    break;
+                }
+            }
+            if !waiting {
+                return;
+            }
+            bo.snooze();
+        }
+    }
+
+    /// Number of completed barrier episodes on this node.
+    pub fn episodes(&self) -> u64 {
+        self.count.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// No node may leave barrier k before all nodes have entered it.
+    fn barrier_stress(n: usize, cfg: FabricConfig, rounds: u64) {
+        let cluster = Cluster::new(n, cfg);
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let arrived = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = mgrs
+            .iter()
+            .map(|m| {
+                let m = m.clone();
+                let arrived = arrived.clone();
+                let n = n as u64;
+                std::thread::spawn(move || {
+                    let bar = Barrier::new(&m, "bar", n as usize);
+                    bar.wait_ready(Duration::from_secs(10));
+                    let ctx = m.ctx();
+                    for round in 0..rounds {
+                        arrived.fetch_add(1, Ordering::SeqCst);
+                        bar.wait(&ctx);
+                        // Everyone must have arrived at this round.
+                        let a = arrived.load(Ordering::SeqCst);
+                        assert!(
+                            a >= (round + 1) * n,
+                            "left barrier round {round} after only {a} arrivals"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(arrived.load(Ordering::SeqCst), rounds * n as u64);
+    }
+
+    #[test]
+    fn inline_3_nodes() {
+        barrier_stress(3, FabricConfig::inline_ideal(), 25);
+    }
+
+    #[test]
+    fn threaded_4_nodes_with_lag() {
+        let mut lat = LatencyModel::fast_sim();
+        lat.placement_lag_ns = 3000;
+        barrier_stress(4, FabricConfig::threaded(lat), 10);
+    }
+}

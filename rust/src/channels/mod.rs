@@ -1,0 +1,34 @@
+//! The LOCO channel catalogue (paper §5).
+//!
+//! Core memory-access channels:
+//! * [`owned_var`] — single-writer multi-reader register with push/pull
+//!   update strategies and checksum atomicity for >word values (§5.1.1).
+//! * [`atomic_var`] — multi-writer word-size register with an "official"
+//!   copy on one host, exposing remote atomics (§5.1.1).
+//! * [`sst`] — the Shared State Table: one owned_var row per participant
+//!   (§5.1.2, after Derecho).
+//!
+//! Complex channels (§5.4):
+//! * [`ticket_lock`] — cross-node ticket lock with local-handover fast
+//!   path and caller-specified release fence.
+//! * [`barrier`] — SST counting barrier (Fig. 1a).
+//! * [`ringbuffer`] — one-to-many broadcast ring with mixed-size
+//!   messages and SST-based receiver acknowledgements.
+//! * [`shared_queue`] — globally consistent MPMC FIFO queue, striped
+//!   across participants (cyclic ring queue adapted for RDMA).
+
+pub mod atomic_var;
+pub mod barrier;
+pub mod owned_var;
+pub mod ringbuffer;
+pub mod shared_queue;
+pub mod sst;
+pub mod ticket_lock;
+
+pub use atomic_var::AtomicVar;
+pub use barrier::Barrier;
+pub use owned_var::OwnedVar;
+pub use ringbuffer::{RingReceiver, RingSender};
+pub use shared_queue::SharedQueue;
+pub use sst::Sst;
+pub use ticket_lock::TicketLock;

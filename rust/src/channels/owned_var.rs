@@ -1,0 +1,294 @@
+//! `owned_var`: single-writer multi-reader register (paper §5.1.1).
+//!
+//! One participant (the *owner*) holds the authoritative copy; every
+//! participant holds a cached copy. Updates propagate either by the owner
+//! **push**ing to all caches (remote writes) or by readers **pull**ing
+//! from the authoritative copy (remote read) — higher-level channels pick
+//! the strategy.
+//!
+//! Atomicity follows the paper exactly:
+//! * values of one word: aligned access is inherently atomic;
+//! * larger values: a trailing FNV-1a checksum is stored with the value
+//!   and readers retry on mismatch (torn placement is routine on the
+//!   simulated fabric, see `fabric::nic`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ack::AckKey;
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::{fnv64, Backoff};
+
+pub struct OwnedVar {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    owner: NodeId,
+    /// Value width in words (excluding the checksum slot).
+    words: usize,
+    /// Slot width: words (+1 checksum when words > 1).
+    slot: usize,
+    /// Authoritative copy (owner only).
+    own: Option<Region>,
+    /// Local cached copy (all participants).
+    cache: Region,
+    num_nodes: usize,
+}
+
+impl OwnedVar {
+    /// Construct the local endpoint. Every participating node calls this
+    /// with the same `name`, `owner`, and `words`.
+    ///
+    /// Regions: the owner allocates `"<name>.own"`; everyone allocates
+    /// `"<name>.cache"`. `device` places the owner copy in NIC device
+    /// memory (useful for synchronization-only state, App. A.2).
+    pub fn new(mgr: &Arc<Manager>, name: &str, owner: NodeId, words: usize, device: bool) -> Self {
+        assert!(words >= 1);
+        let me = mgr.me();
+        let slot = if words > 1 { words + 1 } else { 1 };
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        let own = if me == owner {
+            let r = mgr.pool().alloc_named(&region_name(name, "own"), slot, device);
+            ep.add_local_region("own", r);
+            Some(r)
+        } else {
+            None
+        };
+        let cache = mgr.pool().alloc_named(&region_name(name, "cache"), slot, false);
+        ep.add_local_region("cache", cache);
+        mgr.register_channel(ep.clone());
+        OwnedVar { ep, me, owner, words, slot, own, cache, num_nodes: mgr.num_nodes() }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    pub fn owner(&self) -> NodeId {
+        self.owner
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    pub fn endpoint(&self) -> &Arc<Endpoint> {
+        &self.ep
+    }
+
+    fn encode(&self, value: &[u64]) -> Vec<u64> {
+        assert_eq!(value.len(), self.words, "owned_var value width mismatch");
+        let mut buf = Vec::with_capacity(self.slot);
+        buf.extend_from_slice(value);
+        if self.words > 1 {
+            buf.push(fnv64(value));
+        }
+        buf
+    }
+
+    /// Owner: store a new value into the authoritative copy (local).
+    pub fn store_local(&self, ctx: &ThreadCtx, value: &[u64]) {
+        let own = self.own.expect("store_local called on non-owner endpoint");
+        let buf = self.encode(value);
+        // Checksum first, then data? No: the authoritative copy is only
+        // read remotely (pull), and remote READs can tear too — readers
+        // validate. Write data then checksum in one local pass.
+        for (i, w) in buf.iter().enumerate() {
+            ctx.local_store(own, i as u64, *w);
+        }
+    }
+
+    /// Owner: push the authoritative value to one peer's cache.
+    pub fn push_to(&self, ctx: &ThreadCtx, peer: NodeId) -> AckKey {
+        assert_eq!(self.me, self.owner, "push from non-owner");
+        let own = self.own.unwrap();
+        let mut buf = vec![0u64; self.slot];
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = ctx.local_load(own, i as u64);
+        }
+        let cache = self.ep.remote_region(peer, "cache");
+        ctx.write(cache, 0, &buf)
+    }
+
+    /// Owner: push to all peers; returns the unioned ack_key (§5.2).
+    pub fn push_broadcast(&self, ctx: &ThreadCtx) -> AckKey {
+        let mut key = AckKey::ready();
+        for peer in 0..self.num_nodes as NodeId {
+            if peer != self.me {
+                key.union(self.push_to(ctx, peer));
+            }
+        }
+        key
+    }
+
+    /// Convenience: store + broadcast in one call.
+    pub fn publish(&self, ctx: &ThreadCtx, value: &[u64]) -> AckKey {
+        self.store_local(ctx, value);
+        self.push_broadcast(ctx)
+    }
+
+    /// Any participant: read the locally cached copy (checksum-validated
+    /// with retry for >1-word values).
+    pub fn read_cached(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        let mut bo = Backoff::new();
+        loop {
+            let mut buf = vec![0u64; self.slot];
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = ctx.local_load(self.cache, i as u64);
+            }
+            if self.words == 1 {
+                buf.truncate(1);
+                return buf;
+            }
+            let (value, ck) = buf.split_at(self.words);
+            if fnv64(value) == ck[0] {
+                return value.to_vec();
+            }
+            bo.snooze();
+        }
+    }
+
+    /// Single-word cached read.
+    pub fn read_cached1(&self, ctx: &ThreadCtx) -> u64 {
+        debug_assert_eq!(self.words, 1);
+        ctx.local_load(self.cache, 0)
+    }
+
+    /// Any participant: pull the authoritative copy from the owner
+    /// (remote read + checksum retry), refreshing the local cache.
+    pub fn pull(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        if self.me == self.owner {
+            return self.read_own(ctx);
+        }
+        let own = self.ep.remote_region(self.owner, "own");
+        let mut bo = Backoff::new();
+        loop {
+            let buf = ctx.read(own, 0, self.slot);
+            if self.words == 1 {
+                ctx.local_store(self.cache, 0, buf[0]);
+                return buf;
+            }
+            let (value, ck) = buf.split_at(self.words);
+            if fnv64(value) == ck[0] {
+                for (i, w) in buf.iter().enumerate() {
+                    ctx.local_store(self.cache, i as u64, *w);
+                }
+                return value.to_vec();
+            }
+            bo.snooze();
+        }
+    }
+
+    fn read_own(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        let own = self.own.unwrap();
+        let mut out = vec![0u64; self.words];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = ctx.local_load(own, i as u64);
+        }
+        out
+    }
+
+    /// The owner-side region (for channels that need raw access).
+    pub fn own_region(&self) -> Option<Region> {
+        self.own
+    }
+
+    pub fn cache_region(&self) -> Region {
+        self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    fn setup(n: usize, cfg: FabricConfig) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
+        let cluster = Cluster::new(n, cfg);
+        let mgrs = (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        (cluster, mgrs)
+    }
+
+    #[test]
+    fn push_and_cached_read_word() {
+        let (_c, mgrs) = setup(3, FabricConfig::inline_ideal());
+        let vars: Vec<OwnedVar> =
+            mgrs.iter().map(|m| OwnedVar::new(m, "ov", 0, 1, false)).collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+        let ctx0 = mgrs[0].ctx();
+        vars[0].publish(&ctx0, &[42]).wait();
+        let ctx1 = mgrs[1].ctx();
+        let ctx2 = mgrs[2].ctx();
+        assert_eq!(vars[1].read_cached(&ctx1), vec![42]);
+        assert_eq!(vars[2].read_cached1(&ctx2), 42);
+    }
+
+    #[test]
+    fn pull_from_owner_multiword() {
+        let (_c, mgrs) = setup(2, FabricConfig::inline_ideal());
+        let vars: Vec<OwnedVar> =
+            mgrs.iter().map(|m| OwnedVar::new(m, "big", 1, 4, false)).collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+        let ctx1 = mgrs[1].ctx();
+        vars[1].store_local(&ctx1, &[10, 20, 30, 40]);
+        let ctx0 = mgrs[0].ctx();
+        assert_eq!(vars[0].pull(&ctx0), vec![10, 20, 30, 40]);
+        // Pull refreshed the cache.
+        assert_eq!(vars[0].read_cached(&ctx0), vec![10, 20, 30, 40]);
+    }
+
+    /// Under chaotic placement, cached reads of multi-word values must
+    /// never observe a torn value (checksum catches and retries).
+    #[test]
+    fn no_torn_reads_under_chaos() {
+        let mut lat = LatencyModel::ideal();
+        lat.placement_lag_ns = 2_000;
+        let (_c, mgrs) = setup(2, FabricConfig::threaded(lat).chaotic());
+        let vars: Vec<Arc<OwnedVar>> = mgrs
+            .iter()
+            .map(|m| Arc::new(OwnedVar::new(m, "chaos", 0, 8, false)))
+            .collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(5));
+        }
+
+        let writer_mgr = mgrs[0].clone();
+        let writer_var = vars[0].clone();
+        let w = std::thread::spawn(move || {
+            let ctx = writer_mgr.ctx();
+            for round in 1..=300u64 {
+                let val = [round; 8];
+                writer_var.publish(&ctx, &val).wait();
+            }
+        });
+        let reader_mgr = mgrs[1].clone();
+        let reader_var = vars[1].clone();
+        let r = std::thread::spawn(move || {
+            let ctx = reader_mgr.ctx();
+            for _ in 0..2000 {
+                let v = reader_var.read_cached(&ctx);
+                // All 8 words must agree — torn values are retried away.
+                assert!(v.iter().all(|&x| x == v[0]), "torn read escaped checksum: {v:?}");
+            }
+        });
+        w.join().unwrap();
+        r.join().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "non-owner")]
+    fn non_owner_push_panics() {
+        let (_c, mgrs) = setup(2, FabricConfig::inline_ideal());
+        let _v0 = OwnedVar::new(&mgrs[0], "ov", 0, 1, false);
+        let v1 = OwnedVar::new(&mgrs[1], "ov", 0, 1, false);
+        v1.wait_ready(Duration::from_secs(5));
+        let ctx1 = mgrs[1].ctx();
+        v1.push_to(&ctx1, 0);
+    }
+}

@@ -1,0 +1,360 @@
+//! The ringbuffer: an asynchronous one-to-many broadcast channel
+//! (paper §5.4; similar to the buffer in FaRM [22]).
+//!
+//! One participant (the *sender*) owns the channel; every other
+//! participant allocates a ring of network memory that the sender writes
+//! messages into. Messages are **mixed-size**; atomicity uses a custom
+//! mechanism: each message is framed as
+//!
+//! ```text
+//!   [ hdr = seq<<32 | len ][ payload … len words ][ tail = fnv64(hdr‖payload) ]
+//! ```
+//!
+//! The receiver knows the `seq` it expects next, so stale ring contents
+//! never validate; a partially placed message fails the tail checksum and
+//! is simply retried. Buffer reuse is governed by receiver
+//! acknowledgements carried on an SST sub-channel (`"<name>/ack"`): each
+//! receiver publishes its cumulative consumed-words counter, and the
+//! sender blocks while any receiver's ring lacks space.
+
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ack::AckKey;
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::{fnv64, Backoff};
+
+use super::sst::Sst;
+
+/// `len` value marking a wrap-to-start filler record.
+const WRAP: u64 = 0xFFFF_FFFF;
+
+fn hdr(seq: u64, len: u64) -> u64 {
+    ((seq & 0xFFFF_FFFF) << 32) | (len & 0xFFFF_FFFF)
+}
+
+fn hdr_seq(h: u64) -> u64 {
+    h >> 32
+}
+
+fn hdr_len(h: u64) -> u64 {
+    h & 0xFFFF_FFFF
+}
+
+/// Sender endpoint.
+pub struct RingSender {
+    ep: Arc<Endpoint>,
+    ack: Sst,
+    me: NodeId,
+    capacity: u64,
+    /// Cumulative words written.
+    head: Cell<u64>,
+    seq: Cell<u64>,
+    num_nodes: usize,
+}
+
+impl RingSender {
+    pub fn new(mgr: &Arc<Manager>, name: &str, capacity_words: u64) -> Self {
+        let me = mgr.me();
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        ep.expect_regions(&["ring"]);
+        mgr.register_channel(ep.clone());
+        let ack = Sst::new(mgr, &sub_name(name, "ack"), 1);
+        RingSender {
+            ep,
+            ack,
+            me,
+            capacity: capacity_words,
+            head: Cell::new(0),
+            seq: Cell::new(0),
+            num_nodes: mgr.num_nodes(),
+        }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+        self.ack.wait_ready(timeout);
+    }
+
+    fn receivers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.num_nodes as NodeId).filter(move |&p| p != self.me)
+    }
+
+    /// Words consumed by the slowest receiver (from the ack SST).
+    fn min_consumed(&self, ctx: &ThreadCtx) -> u64 {
+        self.receivers().map(|r| self.ack.read_row1(ctx, r)).min().unwrap_or(0)
+    }
+
+    /// Broadcast `payload` to every receiver. Blocks while any ring is
+    /// full. Returns the unioned completion key of the remote writes.
+    pub fn send(&self, ctx: &ThreadCtx, payload: &[u64]) -> AckKey {
+        let len = payload.len() as u64;
+        assert!(len + 2 <= self.capacity, "message of {len} words exceeds ring capacity");
+        assert!(len < WRAP, "message too long for framing");
+
+        // Wrap if the frame doesn't fit in the remaining ring tail.
+        let off = self.head.get() % self.capacity;
+        if off + len + 2 > self.capacity {
+            let fill = self.capacity - off;
+            self.wait_space(ctx, fill);
+            let w = hdr(self.seq.get(), WRAP);
+            for r in self.receivers() {
+                let ring = self.ep.remote_region(r, "ring");
+                ctx.write_unsignaled(ring, off, &[w]);
+            }
+            self.head.set(self.head.get() + fill);
+            self.seq.set(self.seq.get() + 1);
+        }
+
+        self.wait_space(ctx, len + 2);
+        let off = self.head.get() % self.capacity;
+        let h = hdr(self.seq.get(), len);
+        let mut frame = Vec::with_capacity(payload.len() + 2);
+        frame.push(h);
+        frame.extend_from_slice(payload);
+        frame.push(fnv64(&frame));
+        let mut key = AckKey::ready();
+        for r in self.receivers() {
+            let ring = self.ep.remote_region(r, "ring");
+            key.union(ctx.write(ring, off, &frame));
+        }
+        self.head.set(self.head.get() + len + 2);
+        self.seq.set(self.seq.get() + 1);
+        key
+    }
+
+    fn wait_space(&self, ctx: &ThreadCtx, need: u64) {
+        let mut bo = Backoff::new();
+        loop {
+            let in_flight = self.head.get() - self.min_consumed(ctx);
+            if in_flight + need <= self.capacity {
+                return;
+            }
+            bo.snooze();
+        }
+    }
+
+    /// Messages sent so far.
+    pub fn sent(&self) -> u64 {
+        self.seq.get()
+    }
+
+    /// Cumulative words written (a "position"; compare with
+    /// [`RingSender::wait_all_acked`]).
+    pub fn position(&self) -> u64 {
+        self.head.get()
+    }
+
+    /// Block until every receiver has acknowledged consumption up to
+    /// `upto` (a position returned by [`RingSender::position`]). The
+    /// kvstore inserter uses this: all indices hold the new location
+    /// once this returns (§6).
+    pub fn wait_all_acked(&self, ctx: &ThreadCtx, upto: u64) {
+        let mut bo = Backoff::new();
+        while self.min_consumed(ctx) < upto {
+            bo.snooze();
+        }
+    }
+}
+
+/// Receiver endpoint.
+pub struct RingReceiver {
+    ep: Arc<Endpoint>,
+    ack: Sst,
+    ring: Region,
+    capacity: u64,
+    /// Cumulative words consumed.
+    tail: Cell<u64>,
+    seq: Cell<u64>,
+    /// Batch acks: publish every `ack_interval` messages.
+    ack_interval: u64,
+    unacked: Cell<u64>,
+}
+
+impl RingReceiver {
+    pub fn new(mgr: &Arc<Manager>, name: &str, capacity_words: u64) -> Self {
+        let me = mgr.me();
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        let ring = mgr.pool().alloc_named(&region_name(name, "ring"), capacity_words as usize, false);
+        ep.add_local_region("ring", ring);
+        mgr.register_channel(ep.clone());
+        let ack = Sst::new(mgr, &sub_name(name, "ack"), 1);
+        RingReceiver {
+            ep,
+            ack,
+            ring,
+            capacity: capacity_words,
+            tail: Cell::new(0),
+            seq: Cell::new(0),
+            ack_interval: 1,
+            unacked: Cell::new(0),
+        }
+    }
+
+    /// Publish consumed-words acks only every `n` messages (batching
+    /// ablation; default 1).
+    pub fn set_ack_interval(&mut self, n: u64) {
+        self.ack_interval = n.max(1);
+    }
+
+    /// Manual-ack mode: `try_recv`/`recv` no longer publish acks; the
+    /// caller must invoke [`RingReceiver::ack_now`] after it has *applied*
+    /// the message. The kvstore tracker uses this — the paper requires
+    /// "applies requested updates to the local index and THEN
+    /// acknowledges" (§6).
+    pub fn set_manual_ack(&mut self) {
+        self.ack_interval = u64::MAX;
+    }
+
+    /// Publish the consumed-words counter now (manual-ack mode).
+    pub fn ack_now(&self, ctx: &ThreadCtx) {
+        self.ack.store_mine(ctx, &[self.tail.get()]);
+        self.ack.push_broadcast(ctx);
+        self.unacked.set(0);
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+        self.ack.wait_ready(timeout);
+    }
+
+    /// Non-blocking receive of the next broadcast message.
+    pub fn try_recv(&self, ctx: &ThreadCtx) -> Option<Vec<u64>> {
+        loop {
+            let off = self.tail.get() % self.capacity;
+            let h = ctx.local_load(self.ring, off);
+            if hdr_seq(h) != self.seq.get() & 0xFFFF_FFFF {
+                return None; // not yet written (or partially placed hdr)
+            }
+            let len = hdr_len(h);
+            if len == WRAP {
+                // Filler: skip to the start of the ring.
+                self.tail.set(self.tail.get() + (self.capacity - off));
+                self.seq.set(self.seq.get() + 1);
+                self.publish_ack(ctx, true);
+                continue;
+            }
+            // Read payload + tail checksum; retry if torn.
+            let mut frame = vec![0u64; len as usize + 2];
+            for (i, f) in frame.iter_mut().enumerate() {
+                *f = ctx.local_load(self.ring, off + i as u64);
+            }
+            let tail_ck = frame[len as usize + 1];
+            if fnv64(&frame[..len as usize + 1]) != tail_ck {
+                return None; // placement in progress; try again later
+            }
+            let payload = frame[1..=len as usize].to_vec();
+            self.tail.set(self.tail.get() + len + 2);
+            self.seq.set(self.seq.get() + 1);
+            self.publish_ack(ctx, false);
+            return Some(payload);
+        }
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        let mut bo = Backoff::new();
+        loop {
+            if let Some(m) = self.try_recv(ctx) {
+                return m;
+            }
+            bo.snooze();
+        }
+    }
+
+    fn publish_ack(&self, ctx: &ThreadCtx, force: bool) {
+        if self.ack_interval == u64::MAX {
+            return; // manual-ack mode
+        }
+        let n = self.unacked.get() + 1;
+        if force || n >= self.ack_interval {
+            self.ack.store_mine(ctx, &[self.tail.get()]);
+            self.ack.push_broadcast(ctx); // fire-and-forget
+            self.unacked.set(0);
+        } else {
+            self.unacked.set(n);
+        }
+    }
+
+    pub fn received(&self) -> u64 {
+        self.seq.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    #[test]
+    fn broadcast_in_order_mixed_sizes() {
+        let cluster = Cluster::new(3, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..3).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let tx = RingSender::new(&mgrs[0], "rb", 64);
+        let rx1 = RingReceiver::new(&mgrs[1], "rb", 64);
+        let rx2 = RingReceiver::new(&mgrs[2], "rb", 64);
+        tx.wait_ready(Duration::from_secs(10));
+        rx1.wait_ready(Duration::from_secs(10));
+        rx2.wait_ready(Duration::from_secs(10));
+
+        let ctx0 = mgrs[0].ctx();
+        let ctx1 = mgrs[1].ctx();
+        let ctx2 = mgrs[2].ctx();
+        let msgs: Vec<Vec<u64>> = (0..40u64)
+            .map(|i| (0..=(i % 7)).map(|j| i * 100 + j).collect())
+            .collect();
+        // Interleave sends and receives so the ring wraps several times.
+        let mut got1 = Vec::new();
+        let mut got2 = Vec::new();
+        for m in &msgs {
+            tx.send(&ctx0, m);
+            while let Some(x) = rx1.try_recv(&ctx1) {
+                got1.push(x);
+            }
+            while let Some(x) = rx2.try_recv(&ctx2) {
+                got2.push(x);
+            }
+        }
+        while got1.len() < msgs.len() {
+            got1.push(rx1.recv(&ctx1));
+        }
+        while got2.len() < msgs.len() {
+            got2.push(rx2.recv(&ctx2));
+        }
+        assert_eq!(got1, msgs, "receiver 1 in-order delivery");
+        assert_eq!(got2, msgs, "receiver 2 in-order delivery");
+    }
+
+    /// Sender blocks on a slow receiver, then drains once acks arrive —
+    /// and nothing is lost under threaded placement lag.
+    #[test]
+    fn flow_control_and_threaded_delivery() {
+        let mut lat = LatencyModel::fast_sim();
+        lat.placement_lag_ns = 2000;
+        let cluster = Cluster::new(2, FabricConfig::threaded(lat).chaotic());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let m1 = Manager::new(cluster.clone(), 1);
+        let tx = RingSender::new(&m0, "rb", 32);
+        let rx = RingReceiver::new(&m1, "rb", 32);
+        tx.wait_ready(Duration::from_secs(10));
+        rx.wait_ready(Duration::from_secs(10));
+
+        let h = std::thread::spawn(move || {
+            let ctx = m0.ctx();
+            for i in 0..200u64 {
+                tx.send(&ctx, &[i, i * 2, i * 3]);
+            }
+        });
+        let ctx1 = m1.ctx();
+        for i in 0..200u64 {
+            let m = rx.recv(&ctx1);
+            assert_eq!(m, vec![i, i * 2, i * 3]);
+        }
+        h.join().unwrap();
+    }
+}

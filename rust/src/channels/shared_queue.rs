@@ -1,0 +1,246 @@
+//! The shared queue: a globally consistent MPMC FIFO (paper §5.4).
+//!
+//! All participants can push and pop; each pop corresponds to exactly
+//! one push. Head and tail indices are [`AtomicVar`]s; the entry array is
+//! **striped across participants** (slot *s* lives on node *s mod N*).
+//! The algorithm adapts the shared-memory cyclic ring queue [43] to
+//! RDMA: a pusher claims a slot with a remote FAA on `tail`, writes the
+//! payload, then publishes a per-slot sequence word — the payload write
+//! and the sequence write share a QP, so same-QP placement ordering
+//! guarantees the payload is visible before the sequence says so.
+//!
+//! Slot lifecycle (bounded queue of `Q` slots, sequence word per slot):
+//! * initially `seq[s] = s`;
+//! * push with ticket `t` waits for `seq == t`, fills, sets `seq = t+1`;
+//! * pop  with ticket `h` waits for `seq == h+1`, drains, sets `seq = h+Q`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::Backoff;
+
+use super::atomic_var::AtomicVar;
+
+pub struct SharedQueue {
+    ep: Arc<Endpoint>,
+    head: AtomicVar,
+    tail: AtomicVar,
+    me: NodeId,
+    num_nodes: usize,
+    /// Total slots (multiple of num_nodes).
+    slots: u64,
+    /// Payload words per entry.
+    entry_words: usize,
+    /// This node's stripe of slots.
+    local: Region,
+}
+
+impl SharedQueue {
+    /// `slots` is rounded up to a multiple of the node count; every node
+    /// must construct the endpoint with identical parameters.
+    pub fn new(mgr: &Arc<Manager>, name: &str, slots: u64, entry_words: usize) -> Self {
+        let n = mgr.num_nodes() as u64;
+        let slots = slots.div_ceil(n) * n;
+        let per_node = slots / n;
+        let slot_words = entry_words as u64 + 1; // [seq][payload]
+        let me = mgr.me();
+
+        let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
+        let local = mgr
+            .pool()
+            .alloc_named(&region_name(name, "slots"), (per_node * slot_words) as usize, false);
+        // Initialize our stripe's sequence words BEFORE announcing the
+        // region (peers can only access after our connect metadata).
+        let arena = mgr.cluster().node(me).arena();
+        for k in 0..per_node {
+            let s = k * n + me as u64; // global slot index of local slot k
+            arena.store(local.at(k * slot_words), s);
+        }
+        ep.add_local_region("slots", local);
+        ep.expect_regions(&["slots"]);
+        mgr.register_channel(ep.clone());
+
+        let head = AtomicVar::with_initial(mgr, &sub_name(name, "head"), 0, false, 0);
+        let tail = AtomicVar::with_initial(mgr, &sub_name(name, "tail"), 0, false, 0);
+        SharedQueue {
+            ep,
+            head,
+            tail,
+            me,
+            num_nodes: mgr.num_nodes(),
+            slots,
+            entry_words,
+            local,
+        }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+        self.head.wait_ready(timeout);
+        self.tail.wait_ready(timeout);
+    }
+
+    fn slot_words(&self) -> u64 {
+        self.entry_words as u64 + 1
+    }
+
+    /// (region, word offset) of global slot `s`.
+    fn slot_region(&self, s: u64) -> (Region, u64) {
+        let node = (s % self.num_nodes as u64) as NodeId;
+        let k = s / self.num_nodes as u64;
+        let region = if node == self.me {
+            self.local
+        } else {
+            self.ep.remote_region(node, "slots")
+        };
+        (region, k * self.slot_words())
+    }
+
+    /// Push an entry (blocking while the queue is full).
+    pub fn push(&self, ctx: &ThreadCtx, payload: &[u64]) {
+        assert_eq!(payload.len(), self.entry_words, "entry width mismatch");
+        let t = self.tail.fetch_add(ctx, 1);
+        let slot = t % self.slots;
+        let (region, off) = self.slot_region(slot);
+        // Wait for the slot to be free for round t.
+        let mut bo = Backoff::new();
+        while ctx.read1(region, off) != t {
+            bo.snooze();
+        }
+        // Payload first, then sequence word: same QP → placed in order.
+        ctx.write_unsignaled(region, off + 1, payload);
+        ctx.write1(region, off, t + 1).wait();
+    }
+
+    /// Pop the next entry (blocking while the queue is empty).
+    pub fn pop(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        let h = self.head.fetch_add(ctx, 1);
+        let slot = h % self.slots;
+        let (region, off) = self.slot_region(slot);
+        let mut bo = Backoff::new();
+        loop {
+            // One read covers [seq][payload]; the payload was placed
+            // before seq became h+1 (same-QP ordering on the pusher).
+            let words = ctx.read(region, off, self.slot_words() as usize);
+            if words[0] == h + 1 {
+                // Free the slot for round h+Q.
+                ctx.write1(region, off, h + self.slots).wait();
+                return words[1..].to_vec();
+            }
+            bo.snooze();
+        }
+    }
+
+    /// Approximate occupancy (racy; for monitoring).
+    pub fn len_approx(&self, ctx: &ThreadCtx) -> u64 {
+        let t = self.tail.load(ctx);
+        let h = self.head.load(ctx);
+        t.saturating_sub(h)
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+    use std::collections::HashSet;
+
+    #[test]
+    fn fifo_single_node() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let qs: Vec<SharedQueue> =
+            mgrs.iter().map(|m| SharedQueue::new(m, "q", 8, 2)).collect();
+        for q in &qs {
+            q.wait_ready(Duration::from_secs(10));
+        }
+        let ctx = mgrs[0].ctx();
+        for i in 0..20u64 {
+            qs[0].push(&ctx, &[i, i * i]);
+            // Wraps the 8-slot ring repeatedly.
+            let v = qs[0].pop(&ctx);
+            assert_eq!(v, vec![i, i * i]);
+        }
+    }
+
+    #[test]
+    fn cross_node_push_pop() {
+        let cluster = Cluster::new(3, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..3).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let qs: Vec<SharedQueue> =
+            mgrs.iter().map(|m| SharedQueue::new(m, "q", 9, 1)).collect();
+        for q in &qs {
+            q.wait_ready(Duration::from_secs(10));
+        }
+        let ctx0 = mgrs[0].ctx();
+        let ctx1 = mgrs[1].ctx();
+        let ctx2 = mgrs[2].ctx();
+        qs[0].push(&ctx0, &[111]);
+        qs[1].push(&ctx1, &[222]);
+        assert_eq!(qs[2].pop(&ctx2), vec![111], "global FIFO order");
+        assert_eq!(qs[2].pop(&ctx2), vec![222]);
+    }
+
+    /// Each pop corresponds to exactly one push (paper's invariant),
+    /// under concurrent producers/consumers on a racy threaded fabric.
+    #[test]
+    fn exactly_once_concurrent() {
+        let nodes = 3;
+        let per_node = 60u64;
+        let cluster =
+            Cluster::new(nodes, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let qs: Vec<Arc<SharedQueue>> = mgrs
+            .iter()
+            .map(|m| Arc::new(SharedQueue::new(m, "q", 12, 1)))
+            .collect();
+        for q in &qs {
+            q.wait_ready(Duration::from_secs(10));
+        }
+        let mut handles = Vec::new();
+        // Producers: node i pushes values i*10_000 + j.
+        for (i, (m, q)) in mgrs.iter().zip(&qs).enumerate() {
+            let m = m.clone();
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let ctx = m.ctx();
+                for j in 0..per_node {
+                    q.push(&ctx, &[i as u64 * 10_000 + j]);
+                }
+                Vec::new()
+            }));
+        }
+        // Consumers: each node pops per_node entries.
+        for (m, q) in mgrs.iter().zip(&qs) {
+            let m = m.clone();
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let ctx = m.ctx();
+                (0..per_node).map(|_| q.pop(&ctx)[0]).collect::<Vec<u64>>()
+            }));
+        }
+        let mut popped = Vec::new();
+        for h in handles {
+            popped.extend(h.join().unwrap());
+        }
+        assert_eq!(popped.len() as u64, nodes as u64 * per_node);
+        let set: HashSet<u64> = popped.iter().copied().collect();
+        assert_eq!(set.len(), popped.len(), "duplicate pop detected");
+        for i in 0..nodes as u64 {
+            for j in 0..per_node {
+                assert!(set.contains(&(i * 10_000 + j)), "lost push {i}:{j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! The SST (Shared State Table), paper §5.1.2, after Derecho [30, 31].
+//!
+//! An array of single-writer multiple-reader registers, one per
+//! participant (Fig. 2): node *i* is the owner of row *i*. Owners write
+//! their row locally and push it to all peers; everyone reads all rows
+//! locally. Composed directly from [`OwnedVar`] sub-channels — the
+//! paper's showcase of channel composability.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::core::ack::AckKey;
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::sub_name;
+use crate::core::manager::Manager;
+use crate::fabric::NodeId;
+
+use super::owned_var::OwnedVar;
+
+pub struct Sst {
+    /// Row i is the owned_var whose owner is node i.
+    rows: Vec<OwnedVar>,
+    me: NodeId,
+    words: usize,
+}
+
+impl Sst {
+    /// Construct the SST endpoint: one owned_var sub-channel per
+    /// participant, namespaced `"<name>/ov<i>"`.
+    pub fn new(mgr: &Arc<Manager>, name: &str, words: usize) -> Self {
+        let n = mgr.num_nodes();
+        let rows = (0..n as NodeId)
+            .map(|owner| OwnedVar::new(mgr, &sub_name(name, &format!("ov{owner}")), owner, words, false))
+            .collect();
+        Sst { rows, me: mgr.me(), words }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        for row in &self.rows {
+            row.wait_ready(timeout);
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Write this node's row (local store; not yet visible to peers).
+    pub fn store_mine(&self, ctx: &ThreadCtx, value: &[u64]) {
+        self.rows[self.me as usize].store_local(ctx, value);
+    }
+
+    /// Push this node's row to all peers; returns the unioned ack_key
+    /// (one remote write per peer — §5.2's composite-operation example).
+    pub fn push_broadcast(&self, ctx: &ThreadCtx) -> AckKey {
+        self.rows[self.me as usize].push_broadcast(ctx)
+    }
+
+    /// Store + broadcast.
+    pub fn publish_mine(&self, ctx: &ThreadCtx, value: &[u64]) -> AckKey {
+        self.store_mine(ctx, value);
+        self.push_broadcast(ctx)
+    }
+
+    /// Read node `i`'s row from the local cache (checksum-retried for
+    /// multi-word rows).
+    pub fn read_row(&self, ctx: &ThreadCtx, i: NodeId) -> Vec<u64> {
+        if i == self.me {
+            let mut v = vec![0u64; self.words];
+            let own = self.rows[i as usize].own_region().unwrap();
+            for (k, o) in v.iter_mut().enumerate() {
+                *o = ctx.local_load(own, k as u64);
+            }
+            v
+        } else {
+            self.rows[i as usize].read_cached(ctx)
+        }
+    }
+
+    /// Single-word row read (the common case, e.g. the barrier).
+    pub fn read_row1(&self, ctx: &ThreadCtx, i: NodeId) -> u64 {
+        self.read_row(ctx, i)[0]
+    }
+
+    /// Iterate all rows (paper Fig. 1a's `for (auto& row : sst)`).
+    pub fn rows1(&self, ctx: &ThreadCtx) -> Vec<u64> {
+        (0..self.rows.len() as NodeId).map(|i| self.read_row1(ctx, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig};
+
+    #[test]
+    fn all_rows_visible_everywhere() {
+        let n = 3;
+        let cluster = Cluster::new(n, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let ssts: Vec<Sst> = mgrs.iter().map(|m| Sst::new(m, "sst", 1)).collect();
+        for s in &ssts {
+            s.wait_ready(Duration::from_secs(10));
+        }
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for i in 0..n {
+            ssts[i].publish_mine(&ctxs[i], &[(i as u64 + 1) * 11]).wait();
+        }
+        for i in 0..n {
+            assert_eq!(ssts[i].rows1(&ctxs[i]), vec![11, 22, 33], "node {i} view");
+        }
+    }
+
+    #[test]
+    fn multiword_rows() {
+        let n = 2;
+        let cluster = Cluster::new(n, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let ssts: Vec<Sst> = mgrs.iter().map(|m| Sst::new(m, "wide", 3)).collect();
+        for s in &ssts {
+            s.wait_ready(Duration::from_secs(10));
+        }
+        let ctx0 = mgrs[0].ctx();
+        let ctx1 = mgrs[1].ctx();
+        ssts[0].publish_mine(&ctx0, &[1, 2, 3]).wait();
+        ssts[1].publish_mine(&ctx1, &[4, 5, 6]).wait();
+        assert_eq!(ssts[1].read_row(&ctx1, 0), vec![1, 2, 3]);
+        assert_eq!(ssts[0].read_row(&ctx0, 1), vec![4, 5, 6]);
+        assert_eq!(ssts[0].read_row(&ctx0, 0), vec![1, 2, 3], "own row readback");
+    }
+}

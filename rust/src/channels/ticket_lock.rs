@@ -1,0 +1,265 @@
+//! Cross-node ticket lock (paper §5.4; algorithm after [41]).
+//!
+//! `next_ticket` and `now_serving` are [`AtomicVar`]s hosted on the
+//! lock's home node (in NIC device memory by default — lock words are
+//! only ever touched through the network, App. A.2). Acquire performs a
+//! remote fetch-and-add on `next_ticket` and spins on `now_serving`;
+//! release runs the caller-specified fence (§5.3), then increments
+//! `now_serving`.
+//!
+//! The lock also provides mutual exclusion between *local* threads with a
+//! fast **local handover** path: when a local thread releases while
+//! another local thread is waiting, ownership passes node-locally without
+//! touching the network, and the node keeps its global ticket. (This
+//! trades global FIFO fairness for latency, as in the paper; the
+//! `micro_channels` bench ablates it.)
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::core::ctx::{FenceScope, ThreadCtx};
+use crate::core::endpoint::sub_name;
+use crate::core::manager::Manager;
+use crate::fabric::NodeId;
+use crate::util::Backoff;
+
+use super::atomic_var::AtomicVar;
+
+struct LocalState {
+    /// This node currently owns the global ticket.
+    node_holds: bool,
+    /// A local thread is inside the critical section.
+    local_active: bool,
+    /// Local threads blocked waiting for handover.
+    waiters: usize,
+}
+
+pub struct TicketLock {
+    mgr: Arc<Manager>,
+    next_ticket: AtomicVar,
+    now_serving: AtomicVar,
+    local: Mutex<LocalState>,
+    cv: Condvar,
+    /// Fence scope run on release, before the lock becomes available.
+    release_fence: FenceScope,
+    /// Local-handover fast path enabled (ablation knob).
+    handover: bool,
+}
+
+impl TicketLock {
+    pub fn new(mgr: &Arc<Manager>, name: &str, host: NodeId) -> Self {
+        Self::with_options(mgr, name, host, FenceScope::Thread, true, true)
+    }
+
+    /// `release_fence`: scope of the fence issued on release (paper:
+    /// "LOCO fences used on release and specified by caller").
+    /// `device`: host the lock words in NIC device memory.
+    /// `handover`: enable the local-handover fast path.
+    pub fn with_options(
+        mgr: &Arc<Manager>,
+        name: &str,
+        host: NodeId,
+        release_fence: FenceScope,
+        device: bool,
+        handover: bool,
+    ) -> Self {
+        let next_ticket =
+            AtomicVar::with_initial(mgr, &sub_name(name, "next"), host, device, 0);
+        let now_serving =
+            AtomicVar::with_initial(mgr, &sub_name(name, "serving"), host, device, 0);
+        TicketLock {
+            mgr: mgr.clone(),
+            next_ticket,
+            now_serving,
+            local: Mutex::new(LocalState { node_holds: false, local_active: false, waiters: 0 }),
+            cv: Condvar::new(),
+            release_fence,
+            handover,
+        }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.next_ticket.wait_ready(timeout);
+        self.now_serving.wait_ready(timeout);
+    }
+
+    /// Acquire the lock (blocking). Returns true if acquisition used the
+    /// local-handover fast path (for tests/metrics).
+    pub fn lock(&self, ctx: &ThreadCtx) -> bool {
+        if self.handover {
+            let mut st = self.local.lock().unwrap();
+            loop {
+                if st.local_active {
+                    st.waiters += 1;
+                    st = self.cv.wait(st).unwrap();
+                    st.waiters -= 1;
+                    continue;
+                }
+                if st.node_holds {
+                    // Handover: the node still owns the global ticket.
+                    st.local_active = true;
+                    return true;
+                }
+                // We are the node's representative: go remote.
+                st.local_active = true;
+                st.node_holds = true;
+                break;
+            }
+        } else {
+            // Without handover, still serialize local threads so each
+            // holds its own global ticket in turn.
+            let mut st = self.local.lock().unwrap();
+            while st.local_active {
+                st.waiters += 1;
+                st = self.cv.wait(st).unwrap();
+                st.waiters -= 1;
+            }
+            st.local_active = true;
+            st.node_holds = true;
+        }
+
+        // Remote acquisition: classic ticket protocol.
+        let my_ticket = self.next_ticket.fetch_add(ctx, 1);
+        let mut bo = Backoff::new();
+        while self.now_serving.load(ctx) != my_ticket {
+            bo.snooze();
+        }
+        false
+    }
+
+    /// Release the lock: run the release fence so protected writes are
+    /// placed, then either hand over locally or advance `now_serving`.
+    pub fn unlock(&self, ctx: &ThreadCtx) {
+        match self.release_fence {
+            FenceScope::Global => self.mgr.global_fence(ctx),
+            scope => ctx.fence(scope),
+        }
+        let mut st = self.local.lock().unwrap();
+        debug_assert!(st.local_active, "unlock without lock");
+        st.local_active = false;
+        if self.handover && st.waiters > 0 {
+            // Local handover: keep the global ticket.
+            self.cv.notify_one();
+            return;
+        }
+        st.node_holds = false;
+        drop(st);
+        self.cv.notify_one();
+        self.now_serving.fetch_add(ctx, 1);
+    }
+
+    /// Run `f` under the lock.
+    pub fn with<R>(&self, ctx: &ThreadCtx, f: impl FnOnce() -> R) -> R {
+        self.lock(ctx);
+        let r = f();
+        self.unlock(ctx);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Mutual exclusion across nodes and threads: a shared (non-atomic
+    /// increment) counter must not lose updates.
+    fn mutex_stress(nodes: usize, threads_per_node: usize, iters: u64, handover: bool) {
+        let cluster = Cluster::new(nodes, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        // The protected "resource": a plain pair of counters that would
+        // race visibly without mutual exclusion.
+        let shared = Arc::new((AtomicU64::new(0), AtomicU64::new(0)));
+        let handles: Vec<_> = mgrs
+            .iter()
+            .map(|m| {
+                let m = m.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    let lock = Arc::new(TicketLock::with_options(
+                        &m,
+                        "L",
+                        0,
+                        FenceScope::Thread,
+                        true,
+                        handover,
+                    ));
+                    lock.wait_ready(Duration::from_secs(10));
+                    let ths: Vec<_> = (0..threads_per_node)
+                        .map(|_| {
+                            let m = m.clone();
+                            let lock = lock.clone();
+                            let shared = shared.clone();
+                            std::thread::spawn(move || {
+                                let ctx = m.ctx();
+                                for _ in 0..iters {
+                                    lock.lock(&ctx);
+                                    // Non-atomic read-modify-write under the lock.
+                                    let a = shared.0.load(Ordering::Relaxed);
+                                    let b = shared.1.load(Ordering::Relaxed);
+                                    assert_eq!(a, b, "lock violated: observed torn invariant");
+                                    shared.0.store(a + 1, Ordering::Relaxed);
+                                    shared.1.store(b + 1, Ordering::Relaxed);
+                                    lock.unlock(&ctx);
+                                }
+                            })
+                        })
+                        .collect();
+                    for t in ths {
+                        t.join().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = (nodes * threads_per_node) as u64 * iters;
+        assert_eq!(shared.0.load(Ordering::SeqCst), total, "lost updates");
+    }
+
+    #[test]
+    fn cross_node_mutual_exclusion() {
+        mutex_stress(3, 1, 60, true);
+    }
+
+    #[test]
+    fn multi_thread_with_handover() {
+        mutex_stress(2, 3, 40, true);
+    }
+
+    #[test]
+    fn multi_thread_without_handover() {
+        mutex_stress(2, 2, 40, false);
+    }
+
+    #[test]
+    fn handover_fast_path_used() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let _m1 = Manager::new(cluster.clone(), 1);
+        let lock = Arc::new(TicketLock::new(&m0, "h", 0));
+        // Need both endpoints for readiness.
+        let lock1 = TicketLock::new(&_m1, "h", 0);
+        lock.wait_ready(Duration::from_secs(5));
+        lock1.wait_ready(Duration::from_secs(5));
+
+        let ctx = m0.ctx();
+        assert!(!lock.lock(&ctx), "first acquire goes remote");
+        // A second local thread queues up, then gets handover.
+        let lock2 = lock.clone();
+        let m0b = m0.clone();
+        let h = std::thread::spawn(move || {
+            let ctx2 = m0b.ctx();
+            let handover = lock2.lock(&ctx2);
+            lock2.unlock(&ctx2);
+            handover
+        });
+        // Give the thread time to block.
+        std::thread::sleep(Duration::from_millis(50));
+        lock.unlock(&ctx);
+        assert!(h.join().unwrap(), "second local acquire should be a handover");
+    }
+}

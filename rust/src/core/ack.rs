@@ -1,0 +1,265 @@
+//! `ack_key`: lock-free bitset completion tracking (paper Appendix A.1).
+//!
+//! Every signaled work request is assigned one bit in a 64-bit word. The
+//! bit is set when the op is issued; the polling thread clears it when the
+//! corresponding CQE arrives. An [`AckKey`] is a set of `(word, mask)`
+//! pairs; the operations it tracks are complete exactly when every masked
+//! bit reads zero — no locks, no condvars, no polling-thread↔app-thread
+//! synchronization beyond the atomic words themselves.
+//!
+//! Keys can be unioned, which is how composite operations (e.g. an SST
+//! broadcast made of one remote write per peer) expose a single handle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::util::Backoff;
+
+/// Routes `wr_id`s back to their tracking words. Shared by all issuing
+/// threads of one manager and by the polling thread.
+pub struct AckRegistry {
+    words: RwLock<Vec<Arc<AtomicU64>>>,
+}
+
+impl AckRegistry {
+    pub fn new() -> Self {
+        AckRegistry { words: RwLock::new(Vec::new()) }
+    }
+
+    /// Register a fresh tracking word; returns its slot index.
+    pub fn add_word(&self) -> (u32, Arc<AtomicU64>) {
+        let word = Arc::new(AtomicU64::new(0));
+        let mut words = self.words.write().unwrap();
+        words.push(word.clone());
+        ((words.len() - 1) as u32, word)
+    }
+
+    /// Pack a (slot, bit) pair into a `wr_id`.
+    #[inline]
+    pub fn wr_id(slot: u32, bit: u8) -> u64 {
+        ((slot as u64) << 6) | bit as u64
+    }
+
+    /// Polling-thread side: clear the bit for a completed `wr_id`.
+    #[inline]
+    pub fn complete(&self, wr_id: u64) {
+        let slot = (wr_id >> 6) as usize;
+        let bit = wr_id & 63;
+        let words = self.words.read().unwrap();
+        words[slot].fetch_and(!(1u64 << bit), Ordering::Release);
+    }
+
+    pub fn word_count(&self) -> usize {
+        self.words.read().unwrap().len()
+    }
+}
+
+impl Default for AckRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-thread bit allocator. Hands out (wr_id, word, mask) triples and
+/// recycles fully-drained words whose keys have all been dropped.
+pub struct AckAllocator {
+    registry: Arc<AckRegistry>,
+    slot: u32,
+    word: Arc<AtomicU64>,
+    next_bit: u8,
+    /// Full words parked for recycling once quiescent.
+    retired: Vec<(u32, Arc<AtomicU64>)>,
+}
+
+impl AckAllocator {
+    pub fn new(registry: Arc<AckRegistry>) -> Self {
+        let (slot, word) = registry.add_word();
+        AckAllocator { registry, slot, word, next_bit: 0, retired: Vec::new() }
+    }
+
+    /// Allocate one tracking bit: sets it, returns the wr_id to post and
+    /// the (word, mask) pair for the key.
+    pub fn alloc(&mut self) -> (u64, Arc<AtomicU64>, u64) {
+        if self.next_bit == 64 {
+            self.refill();
+        }
+        let bit = self.next_bit;
+        self.next_bit += 1;
+        let mask = 1u64 << bit;
+        self.word.fetch_or(mask, Ordering::AcqRel);
+        (AckRegistry::wr_id(self.slot, bit), self.word.clone(), mask)
+    }
+
+    fn refill(&mut self) {
+        let old = (self.slot, self.word.clone());
+        self.retired.push(old);
+        // Recycle a retired word if all its ops completed and no AckKey
+        // still references it (strong count: registry + our retired entry).
+        let mut recycled = None;
+        for (i, (_slot, w)) in self.retired.iter().enumerate() {
+            // Quiescent iff no AckKey still references it: registry +
+            // retired list (+ self.word for the entry just pushed).
+            let quiescent_count = if Arc::ptr_eq(w, &self.word) { 3 } else { 2 };
+            if w.load(Ordering::Acquire) == 0 && Arc::strong_count(w) == quiescent_count {
+                recycled = Some(i);
+                break;
+            }
+        }
+        if let Some(i) = recycled {
+            let (slot, word) = self.retired.swap_remove(i);
+            self.slot = slot;
+            self.word = word;
+        } else {
+            let (slot, word) = self.registry.add_word();
+            self.slot = slot;
+            self.word = word;
+        }
+        self.next_bit = 0;
+    }
+}
+
+/// Completion handle for one or more asynchronous operations.
+#[derive(Clone, Default)]
+pub struct AckKey {
+    parts: Vec<(Arc<AtomicU64>, u64)>,
+}
+
+impl AckKey {
+    /// A key that is already complete (e.g. a local fast-path operation).
+    pub fn ready() -> Self {
+        AckKey { parts: Vec::new() }
+    }
+
+    pub fn single(word: Arc<AtomicU64>, mask: u64) -> Self {
+        AckKey { parts: vec![(word, mask)] }
+    }
+
+    /// Merge another key into this one (paper: ack_keys can be unioned).
+    pub fn union(&mut self, other: AckKey) {
+        for (word, mask) in other.parts {
+            if let Some((_, m)) = self.parts.iter_mut().find(|(w, _)| Arc::ptr_eq(w, &word)) {
+                *m |= mask;
+            } else {
+                self.parts.push((word, mask));
+            }
+        }
+    }
+
+    /// Non-blocking completion query.
+    #[inline]
+    pub fn query(&self) -> bool {
+        self.parts.iter().all(|(w, m)| w.load(Ordering::Acquire) & m == 0)
+    }
+
+    /// Spin (with backoff) until complete.
+    pub fn wait(&self) {
+        let mut bo = Backoff::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !self.query() {
+            bo.snooze();
+            if std::time::Instant::now() > deadline {
+                panic!("ack_key wait timed out (30 s): outstanding ops never completed");
+            }
+        }
+    }
+
+    pub fn tracked_parts(&self) -> usize {
+        self.parts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_set_complete_clear() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let (wr, word, mask) = alloc.alloc();
+        let key = AckKey::single(word, mask);
+        assert!(!key.query(), "bit set at issue");
+        reg.complete(wr);
+        assert!(key.query(), "bit cleared at completion");
+    }
+
+    #[test]
+    fn union_tracks_all() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let (wr1, w1, m1) = alloc.alloc();
+        let (wr2, w2, m2) = alloc.alloc();
+        let mut key = AckKey::single(w1, m1);
+        key.union(AckKey::single(w2, m2));
+        // Same underlying word → parts merged.
+        assert_eq!(key.tracked_parts(), 1);
+        reg.complete(wr1);
+        assert!(!key.query());
+        reg.complete(wr2);
+        assert!(key.query());
+    }
+
+    #[test]
+    fn ready_key_is_done() {
+        assert!(AckKey::ready().query());
+        AckKey::ready().wait();
+    }
+
+    #[test]
+    fn word_rollover_and_recycle() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        // Fill 64 bits and complete them all; keys dropped immediately.
+        for _ in 0..64 {
+            let (wr, _w, _m) = alloc.alloc();
+            reg.complete(wr);
+        }
+        let before = reg.word_count();
+        // Next alloc rolls over; the drained word should be recycled, not
+        // a fresh registry word.
+        let (wr, w, m) = alloc.alloc();
+        assert_eq!(reg.word_count(), before, "recycled drained word");
+        let key = AckKey::single(w, m);
+        reg.complete(wr);
+        assert!(key.query());
+    }
+
+    #[test]
+    fn no_recycle_while_key_held() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let mut keys = Vec::new();
+        for _ in 0..64 {
+            let (wr, w, m) = alloc.alloc();
+            keys.push(AckKey::single(w, m));
+            reg.complete(wr);
+        }
+        let before = reg.word_count();
+        let (_wr, _w, _m) = alloc.alloc();
+        // Keys still alive → word must NOT be recycled.
+        assert_eq!(reg.word_count(), before + 1);
+        drop(keys);
+    }
+
+    #[test]
+    fn concurrent_complete_from_poller() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let mut wrs = Vec::new();
+        let mut key = AckKey::ready();
+        for _ in 0..200 {
+            let (wr, w, m) = alloc.alloc();
+            key.union(AckKey::single(w, m));
+            wrs.push(wr);
+        }
+        let reg2 = reg.clone();
+        let h = std::thread::spawn(move || {
+            for wr in wrs {
+                reg2.complete(wr);
+            }
+        });
+        key.wait();
+        h.join().unwrap();
+        assert!(key.query());
+    }
+}

@@ -1,0 +1,488 @@
+//! Per-thread issuing context and the fence engine (paper §5.3, App. A).
+//!
+//! Each application thread obtains a [`ThreadCtx`] from its node's
+//! manager. The context owns:
+//!
+//! * a **private QP per peer** (created lazily) — no cross-thread
+//!   synchronization on the submission path;
+//! * an **ack-bit allocator** for completion tracking;
+//! * a **`mem_ref` pool**: small registered scratch blocks used as the
+//!   local source/target of verbs, recycled through per-thread free lists;
+//! * **unfenced-write counters** per peer, which the fence engine uses to
+//!   choose the cheapest correct fence implementation.
+//!
+//! Fence semantics (paper §5.3): a fence guarantees that all covered
+//! remote WRITEs are *placed* before any subsequent operation. The
+//! implementation posts a zero-length READ on every QP that has unfenced
+//! writes (the RFC 5040 flushing rule) and waits for the acks; QPs with no
+//! unfenced writes cost nothing. Blocking reads/atomics opportunistically
+//! reset the counter for their peer, since their completion already proves
+//! placement of everything earlier on that QP — this is the paper's
+//! "dynamically chooses the best performing implementation".
+
+use std::cell::RefCell;
+use std::marker::PhantomData;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{Cluster, NodeFabric, Payload, QpId, Region, Verb, Wqe};
+
+use super::ack::{AckAllocator, AckKey, AckRegistry};
+use super::mem_pool::MemPool;
+
+/// Scope of a fence (paper §5.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FenceScope {
+    /// Prior ops from this thread to this peer are placed first.
+    Pair(crate::fabric::NodeId),
+    /// Prior ops from this thread (any peer) are placed first.
+    Thread,
+    /// Prior ops from this *node* (any thread, any peer) are placed first.
+    Global,
+}
+
+/// The Sync part of a context, visible to the manager for global fences.
+pub struct CtxShared {
+    /// Count of writes not yet covered by a flushing op, per peer.
+    pub(crate) unfenced: Box<[AtomicU64]>,
+    /// Lazily created private QPs, per peer.
+    pub(crate) qps: Mutex<Vec<Option<QpId>>>,
+}
+
+impl CtxShared {
+    pub fn new(num_nodes: usize) -> Arc<Self> {
+        Arc::new(CtxShared {
+            unfenced: (0..num_nodes).map(|_| AtomicU64::new(0)).collect(),
+            qps: Mutex::new(vec![None; num_nodes]),
+        })
+    }
+
+    pub(crate) fn qp(&self, cluster: &Cluster, me: crate::fabric::NodeId, peer: crate::fabric::NodeId) -> QpId {
+        let mut qps = self.qps.lock().unwrap();
+        if let Some(qp) = qps[peer as usize] {
+            return qp;
+        }
+        let qp = cluster.create_qp(me, peer);
+        qps[peer as usize] = Some(qp);
+        qp
+    }
+}
+
+/// Size classes for mem_ref scratch blocks (words).
+const MEMREF_SMALL: usize = 64;
+const MEMREF_LARGE: usize = 1024;
+
+#[derive(Default)]
+struct MemRefFree {
+    small: Vec<u64>,
+    large: Vec<u64>,
+}
+
+/// A temporary chunk of registered network memory (paper App. A.2),
+/// used as the local buffer of READ results and atomic return values.
+/// Returned to the owning thread's free list on drop.
+pub struct MemRef {
+    addr: u64,
+    len: usize,
+    class_small: bool,
+    node: Arc<NodeFabric>,
+    free: Rc<RefCell<MemRefFree>>,
+}
+
+impl MemRef {
+    /// Word address of this block in local memory (for verb `local` args).
+    pub fn addr(&self) -> u64 {
+        self.addr
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn load(&self, i: usize) -> u64 {
+        debug_assert!(i < self.len);
+        self.node.arena().load(self.addr + i as u64)
+    }
+
+    #[inline]
+    pub fn store(&self, i: usize, v: u64) {
+        debug_assert!(i < self.len);
+        self.node.arena().store(self.addr + i as u64, v);
+    }
+
+    pub fn to_vec(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.len];
+        self.node.arena().load_words(self.addr, &mut out);
+        out
+    }
+
+    pub fn copy_into(&self, out: &mut [u64]) {
+        debug_assert!(out.len() <= self.len);
+        self.node.arena().load_words(self.addr, out);
+    }
+}
+
+impl Drop for MemRef {
+    fn drop(&mut self) {
+        let mut free = self.free.borrow_mut();
+        if self.class_small {
+            free.small.push(self.addr);
+        } else {
+            free.large.push(self.addr);
+        }
+    }
+}
+
+/// Per-thread issuing context. Deliberately `!Sync`: one per thread, as
+/// in the paper's backend.
+pub struct ThreadCtx {
+    cluster: Arc<Cluster>,
+    node: Arc<NodeFabric>,
+    me: crate::fabric::NodeId,
+    pub(crate) shared: Arc<CtxShared>,
+    alloc: RefCell<AckAllocator>,
+    registry: Arc<AckRegistry>,
+    memref_free: Rc<RefCell<MemRefFree>>,
+    pool: Arc<MemPool>,
+    cqe_buf: RefCell<Vec<crate::fabric::Cqe>>,
+    _not_sync: PhantomData<*const ()>,
+}
+
+impl ThreadCtx {
+    pub(crate) fn new(
+        cluster: Arc<Cluster>,
+        me: crate::fabric::NodeId,
+        registry: Arc<AckRegistry>,
+        shared: Arc<CtxShared>,
+        pool: Arc<MemPool>,
+    ) -> Self {
+        let node = cluster.node(me).clone();
+        ThreadCtx {
+            cluster,
+            node,
+            me,
+            shared,
+            alloc: RefCell::new(AckAllocator::new(registry.clone())),
+            registry,
+            memref_free: Rc::new(RefCell::new(MemRefFree::default())),
+            pool,
+            cqe_buf: RefCell::new(Vec::with_capacity(64)),
+            _not_sync: PhantomData,
+        }
+    }
+
+    /// Drain a batch of completions from the node's shared CQ and clear
+    /// their ack bits. Waiting threads call this cooperatively with the
+    /// polling thread — on real hardware application threads poll the CQ
+    /// the same way; here it also removes one scheduler hop per op
+    /// (EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn drain_cq(&self) -> usize {
+        let mut buf = self.cqe_buf.borrow_mut();
+        buf.clear();
+        let n = self.node.cq().poll(64, &mut buf);
+        for cqe in buf.iter() {
+            self.registry.complete(cqe.wr_id);
+        }
+        n
+    }
+
+    /// Wait for a key, assisting with CQ draining while spinning.
+    pub fn wait(&self, key: &AckKey) {
+        let mut bo = crate::util::Backoff::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !key.query() {
+            if self.drain_cq() == 0 {
+                bo.snooze();
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "ctx wait timed out (30 s): outstanding ops never completed"
+                );
+            } else {
+                bo.reset();
+            }
+        }
+    }
+
+    pub fn me(&self) -> crate::fabric::NodeId {
+        self.me
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.cluster.num_nodes()
+    }
+
+    /// Grab a scratch block of at least `len` words.
+    pub fn mem_ref(&self, len: usize) -> MemRef {
+        assert!(len <= MEMREF_LARGE, "mem_ref request of {len} words exceeds {MEMREF_LARGE}");
+        let small = len <= MEMREF_SMALL;
+        let addr = {
+            let mut free = self.memref_free.borrow_mut();
+            let list = if small { &mut free.small } else { &mut free.large };
+            list.pop()
+        };
+        let addr = addr.unwrap_or_else(|| {
+            let words = if small { MEMREF_SMALL } else { MEMREF_LARGE };
+            self.pool.alloc(words, false).base
+        });
+        MemRef {
+            addr,
+            len,
+            class_small: small,
+            node: self.node.clone(),
+            free: self.memref_free.clone(),
+        }
+    }
+
+    /// Local CPU access is a plain memory access only for *host* memory;
+    /// NIC device memory is not coherent with the CPU (paper App. A.2)
+    /// and must be reached through the NIC even from the owning node.
+    #[inline]
+    fn local_direct(&self, region: &Region) -> bool {
+        region.node == self.me && !region.device
+    }
+
+    #[inline]
+    fn issue(&self, peer: crate::fabric::NodeId, verb: Verb) -> AckKey {
+        let qp = self.shared.qp(&self.cluster, self.me, peer);
+        let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
+        self.cluster.post(qp, Wqe { wr_id, verb, signaled: true });
+        AckKey::single(word, mask)
+    }
+
+    #[inline]
+    fn issue_unsignaled(&self, peer: crate::fabric::NodeId, verb: Verb) {
+        let qp = self.shared.qp(&self.cluster, self.me, peer);
+        self.cluster.post(qp, Wqe { wr_id: 0, verb, signaled: false });
+    }
+
+    // ---- writes ----------------------------------------------------
+
+    /// Asynchronous write of `words` at `off` into `target`. Local targets
+    /// complete immediately (plain stores); remote targets return a key
+    /// tracking the WRITE's completion (which does NOT imply placement —
+    /// fence for that).
+    pub fn write(&self, target: Region, off: u64, words: &[u64]) -> AckKey {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            self.node.arena().store_words(addr, words, false);
+            return AckKey::ready();
+        }
+        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+        self.issue(target.node, Verb::Write { remote: addr, data: Payload::from_words(words) })
+    }
+
+    /// Fire-and-forget write: no completion is generated; a later fence
+    /// (or flushing op) on this peer covers it.
+    pub fn write_unsignaled(&self, target: Region, off: u64, words: &[u64]) {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            self.node.arena().store_words(addr, words, false);
+            return;
+        }
+        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+        self.issue_unsignaled(target.node, Verb::Write { remote: addr, data: Payload::from_words(words) });
+    }
+
+    /// Convenience: single-word write.
+    pub fn write1(&self, target: Region, off: u64, word: u64) -> AckKey {
+        self.write(target, off, std::slice::from_ref(&word))
+    }
+
+    // ---- reads -----------------------------------------------------
+
+    /// Asynchronous read of `len` words at `off` from `src` into a fresh
+    /// mem_ref. Returns `(key, buf)`; `buf` is valid once `key` completes.
+    pub fn read_async(&self, src: Region, off: u64, len: usize) -> (AckKey, MemRef) {
+        let addr = src.at(off);
+        let buf = self.mem_ref(len);
+        if self.local_direct(&src) {
+            for i in 0..len as u64 {
+                let w = self.node.arena().load(addr + i);
+                self.node.arena().store(buf.addr + i, w);
+            }
+            return (AckKey::ready(), buf);
+        }
+        let key = self.issue(
+            src.node,
+            Verb::Read { remote: addr, local: buf.addr, len: len as u32 },
+        );
+        (key, buf)
+    }
+
+    /// Blocking read. On return, everything previously written to
+    /// `src.node` on this thread's QP is also placed (flushing rule), so
+    /// the unfenced counter resets — the fence engine's fast path.
+    pub fn read(&self, src: Region, off: u64, len: usize) -> Vec<u64> {
+        let (key, buf) = self.read_async(src, off, len);
+        self.wait(&key);
+        if src.node != self.me {
+            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+        }
+        buf.to_vec()
+    }
+
+    /// Blocking single-word read.
+    pub fn read1(&self, src: Region, off: u64) -> u64 {
+        let addr = src.at(off);
+        if self.local_direct(&src) {
+            return self.node.arena().load(addr);
+        }
+        self.read(src, off, 1)[0]
+    }
+
+    /// Local-only load (asserts the region is local). The "read
+    /// locally the values of others' registers" path of the SST.
+    #[inline]
+    pub fn local_load(&self, region: Region, off: u64) -> u64 {
+        debug_assert!(region.node == self.me && !region.device, "local_load: host-local only");
+        self.node.arena().load(region.at(off))
+    }
+
+    #[inline]
+    pub fn local_store(&self, region: Region, off: u64, v: u64) {
+        debug_assert!(region.node == self.me && !region.device, "local_store: host-local only");
+        self.node.arena().store(region.at(off), v);
+    }
+
+    // ---- atomics ---------------------------------------------------
+
+    /// Blocking remote (or local) fetch-and-add; returns the old value.
+    pub fn fetch_add(&self, target: Region, off: u64, add: u64) -> u64 {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            return self.node.arena().fetch_add(addr, add);
+        }
+        let buf = self.mem_ref(1);
+        let key = self.issue(target.node, Verb::FetchAdd { remote: addr, add, local: buf.addr });
+        self.wait(&key);
+        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        buf.load(0)
+    }
+
+    /// Blocking remote (or local) compare-and-swap; returns the old value.
+    pub fn compare_swap(&self, target: Region, off: u64, expect: u64, swap: u64) -> u64 {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            return self.node.arena().compare_swap(addr, expect, swap);
+        }
+        let buf = self.mem_ref(1);
+        let key = self.issue(
+            target.node,
+            Verb::CompareSwap { remote: addr, expect, swap, local: buf.addr },
+        );
+        self.wait(&key);
+        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        buf.load(0)
+    }
+
+    // ---- fences ----------------------------------------------------
+
+    /// Issue (but do not wait for) the flushing reads a fence needs for
+    /// this context; returns the combined key and zeroes the counters.
+    pub(crate) fn fence_issue(&self, peer_filter: Option<crate::fabric::NodeId>) -> AckKey {
+        let mut key = AckKey::ready();
+        for peer in 0..self.num_nodes() {
+            if let Some(p) = peer_filter {
+                if p as usize != peer {
+                    continue;
+                }
+            }
+            if self.shared.unfenced[peer].load(Ordering::Relaxed) == 0 {
+                continue;
+            }
+            self.shared.unfenced[peer].store(0, Ordering::Relaxed);
+            key.union(self.issue(peer as crate::fabric::NodeId, Verb::ZeroLenRead));
+        }
+        key
+    }
+
+    /// Pair- or thread-scope fence (see [`FenceScope`]). Global fences go
+    /// through the manager, which covers all threads of this node.
+    pub fn fence(&self, scope: FenceScope) {
+        match scope {
+            FenceScope::Pair(peer) => {
+                let key = self.fence_issue(Some(peer));
+                self.wait(&key);
+            }
+            FenceScope::Thread => {
+                let key = self.fence_issue(None);
+                self.wait(&key);
+            }
+            FenceScope::Global => {
+                panic!("global fences cover other threads: call Manager::global_fence(ctx)")
+            }
+        }
+    }
+
+    // ---- NIC-forced variants (no local fast path) -------------------
+    //
+    // Model RMA stacks that route every operation through the HCA even
+    // when the target is the local rank (e.g. MPI/UCX RC loopback).
+    // Used by the OpenMPI baseline so its lock words behave like real
+    // passive-target RMA rather than free local atomics.
+
+    pub fn read1_nic(&self, src: Region, off: u64) -> u64 {
+        let buf = self.mem_ref(1);
+        let key =
+            self.issue(src.node, Verb::Read { remote: src.at(off), local: buf.addr(), len: 1 });
+        self.wait(&key);
+        if src.node != self.me {
+            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+        }
+        buf.load(0)
+    }
+
+    pub fn write1_nic(&self, target: Region, off: u64, word: u64) -> AckKey {
+        if target.node != self.me {
+            self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        self.issue(target.node, Verb::Write { remote: target.at(off), data: Payload::one(word) })
+    }
+
+    pub fn fetch_add_nic(&self, target: Region, off: u64, add: u64) -> u64 {
+        let buf = self.mem_ref(1);
+        let key = self
+            .issue(target.node, Verb::FetchAdd { remote: target.at(off), add, local: buf.addr() });
+        self.wait(&key);
+        buf.load(0)
+    }
+
+    pub fn compare_swap_nic(&self, target: Region, off: u64, expect: u64, swap: u64) -> u64 {
+        let buf = self.mem_ref(1);
+        let key = self.issue(
+            target.node,
+            Verb::CompareSwap { remote: target.at(off), expect, swap, local: buf.addr() },
+        );
+        self.wait(&key);
+        buf.load(0)
+    }
+
+    /// Count of peers with unfenced writes (for tests / introspection).
+    pub fn unfenced_peers(&self) -> usize {
+        (0..self.num_nodes())
+            .filter(|&p| self.shared.unfenced[p].load(Ordering::Relaxed) > 0)
+            .count()
+    }
+
+    /// Issue a zero-length read on another context's QP (manager-side
+    /// helper for global fences). Uses our ack allocator for tracking.
+    pub(crate) fn flush_other(&self, other: &CtxShared, peer: crate::fabric::NodeId) -> AckKey {
+        let qp = {
+            let qps = other.qps.lock().unwrap();
+            match qps[peer as usize] {
+                Some(qp) => qp,
+                None => return AckKey::ready(), // no QP → no writes to flush
+            }
+        };
+        let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
+        self.cluster.post(qp, Wqe { wr_id, verb: Verb::ZeroLenRead, signaled: true });
+        AckKey::single(word, mask)
+    }
+}

@@ -1,0 +1,306 @@
+//! Channel endpoints: the base object every channel type builds on
+//! (paper §4.1–§4.2).
+//!
+//! A channel is **named**; each participating node constructs a local
+//! endpoint with the same full name (sub-channels are namespaced under
+//! their parent with `/`, component regions with `.`). At construction an
+//! endpoint allocates zero or more named local regions and then sends a
+//! *join* message to every peer carrying its region metadata and the
+//! region names it expects the peer to provide. A peer with a matching
+//! endpoint validates the expectation list and replies *connect* with its
+//! own region metadata. The endpoint is *ready* once enough peers have
+//! connected.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::fabric::{NodeId, Region};
+
+/// How many peers must connect before the endpoint is ready.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Expect {
+    /// All other nodes in the cluster participate.
+    AllPeers,
+    /// Exactly `n` peers (paper: `channel::expect_num(num-1)`).
+    Num(usize),
+}
+
+type ConnectCallback = Box<dyn Fn(NodeId, &[(String, Region)]) + Send + Sync>;
+
+struct EndpointState {
+    /// Peers we have received a join from.
+    joined: HashSet<NodeId>,
+    /// Peers we have received a connect (region metadata) from.
+    connected: HashSet<NodeId>,
+    /// Remote regions: (peer, region name) → region.
+    remote: HashMap<(NodeId, String), Region>,
+    /// Local regions by name.
+    local: HashMap<String, Region>,
+    /// Names this endpoint expects every participating peer to provide.
+    expected_regions: Vec<String>,
+    on_connect: Option<ConnectCallback>,
+}
+
+/// Shared endpoint object. Channel types hold an `Arc<Endpoint>`; the
+/// manager's control thread drives its state from join/connect messages.
+pub struct Endpoint {
+    name: String,
+    me: NodeId,
+    expect: Expect,
+    num_nodes: usize,
+    state: Mutex<EndpointState>,
+    ready_cv: Condvar,
+}
+
+impl Endpoint {
+    pub fn new(name: &str, me: NodeId, num_nodes: usize, expect: Expect) -> Arc<Endpoint> {
+        Arc::new(Endpoint {
+            name: name.to_string(),
+            me,
+            expect,
+            num_nodes,
+            state: Mutex::new(EndpointState {
+                joined: HashSet::new(),
+                connected: HashSet::new(),
+                remote: HashMap::new(),
+                local: HashMap::new(),
+                expected_regions: Vec::new(),
+                on_connect: None,
+            }),
+            ready_cv: Condvar::new(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn me(&self) -> NodeId {
+        self.me
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn required(&self) -> usize {
+        match self.expect {
+            Expect::AllPeers => self.num_nodes - 1,
+            Expect::Num(n) => n,
+        }
+    }
+
+    /// Record a local region under its short (per-channel) name.
+    pub fn add_local_region(&self, short_name: &str, region: Region) {
+        let mut st = self.state.lock().unwrap();
+        let prev = st.local.insert(short_name.to_string(), region);
+        assert!(prev.is_none(), "local region name collision: {}.{short_name}", self.name);
+    }
+
+    /// Declare the region names each participating peer must provide.
+    pub fn expect_regions(&self, names: &[&str]) {
+        let mut st = self.state.lock().unwrap();
+        st.expected_regions = names.iter().map(|s| s.to_string()).collect();
+    }
+
+    /// Register a callback invoked (on the control thread) whenever a
+    /// peer's connect metadata arrives. Used for per-participant
+    /// sub-structures (paper §5.1.2).
+    pub fn on_connect(&self, cb: ConnectCallback) {
+        self.state.lock().unwrap().on_connect = Some(cb);
+    }
+
+    pub fn local_regions(&self) -> Vec<(String, Region)> {
+        let st = self.state.lock().unwrap();
+        let mut v: Vec<_> = st.local.iter().map(|(k, r)| (k.clone(), *r)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn local_region(&self, short_name: &str) -> Region {
+        self.state
+            .lock()
+            .unwrap()
+            .local
+            .get(short_name)
+            .copied()
+            .unwrap_or_else(|| panic!("channel {}: no local region {short_name}", self.name))
+    }
+
+    /// Region `short_name` on `peer` (panics if not yet connected —
+    /// callers go through `wait_ready` first).
+    pub fn remote_region(&self, peer: NodeId, short_name: &str) -> Region {
+        self.state
+            .lock()
+            .unwrap()
+            .remote
+            .get(&(peer, short_name.to_string()))
+            .copied()
+            .unwrap_or_else(|| {
+                panic!("channel {}: no remote region {short_name} on node {peer}", self.name)
+            })
+    }
+
+    pub fn try_remote_region(&self, peer: NodeId, short_name: &str) -> Option<Region> {
+        self.state.lock().unwrap().remote.get(&(peer, short_name.to_string())).copied()
+    }
+
+    /// Peers connected so far (sorted).
+    pub fn connected_peers(&self) -> Vec<NodeId> {
+        let st = self.state.lock().unwrap();
+        let mut v: Vec<_> = st.connected.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Control-thread entry: a peer announced itself with its regions.
+    /// Returns true if this is the first join from the peer (a connect
+    /// reply — and possibly a reciprocal join — should be sent).
+    pub(crate) fn handle_join(&self, peer: NodeId, regions: &[(String, Region)]) -> bool {
+        let mut st = self.state.lock().unwrap();
+        // Validate the peer provides everything we expect of it.
+        for want in &st.expected_regions {
+            assert!(
+                regions.iter().any(|(n, _)| n == want),
+                "channel {}: peer {peer} did not provide expected region {want}",
+                self.name
+            );
+        }
+        let first = st.joined.insert(peer);
+        self.absorb(&mut st, peer, regions);
+        drop(st);
+        self.ready_cv.notify_all();
+        first
+    }
+
+    /// Control-thread entry: a connect reply with the peer's regions.
+    pub(crate) fn handle_connect(&self, peer: NodeId, regions: &[(String, Region)]) {
+        let mut st = self.state.lock().unwrap();
+        self.absorb(&mut st, peer, regions);
+        drop(st);
+        self.ready_cv.notify_all();
+    }
+
+    fn absorb(&self, st: &mut EndpointState, peer: NodeId, regions: &[(String, Region)]) {
+        let newly = st.connected.insert(peer);
+        for (name, r) in regions {
+            st.remote.insert((peer, name.clone()), *r);
+        }
+        if newly {
+            if let Some(cb) = st.on_connect.take() {
+                // Run without holding the lock against reentrancy on this
+                // endpoint? Callbacks only touch *other* objects (create
+                // sub-channels), so holding our lock is safe; but release
+                // it to be kind.
+                cb(peer, regions);
+                // Reinstall (callback may be invoked for several peers).
+                if st.on_connect.is_none() {
+                    st.on_connect = Some(cb);
+                }
+            }
+        }
+    }
+
+    /// Block until `required()` peers have connected.
+    pub fn wait_ready(&self, timeout: Duration) {
+        let need = self.required();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        while st.connected.len() < need {
+            let now = Instant::now();
+            if now >= deadline {
+                panic!(
+                    "channel {}: setup timed out ({}/{} peers connected)",
+                    self.name,
+                    st.connected.len(),
+                    need
+                );
+            }
+            let (guard, _) = self.ready_cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.state.lock().unwrap().connected.len() >= self.required()
+    }
+}
+
+/// Compose a sub-channel name: `parent/child` (paper §4.2's `/` scheme).
+pub fn sub_name(parent: &str, child: &str) -> String {
+    format!("{parent}/{child}")
+}
+
+/// Compose a component region name: `chan.region` (paper's `.` scheme).
+pub fn region_name(chan: &str, region: &str) -> String {
+    format!("{chan}.{region}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(node: NodeId, base: u64) -> Region {
+        Region { node, base, len: 8, mr: 0, device: false }
+    }
+
+    #[test]
+    fn join_connect_ready_flow() {
+        let ep = Endpoint::new("bar", 0, 3, Expect::AllPeers);
+        ep.add_local_region("data", region(0, 0));
+        assert!(!ep.is_ready());
+        assert!(ep.handle_join(1, &[("data".into(), region(1, 100))]));
+        assert!(!ep.handle_join(1, &[("data".into(), region(1, 100))]), "second join not first");
+        ep.handle_connect(2, &[("data".into(), region(2, 200))]);
+        assert!(ep.is_ready());
+        ep.wait_ready(Duration::from_millis(10));
+        assert_eq!(ep.remote_region(1, "data").base, 100);
+        assert_eq!(ep.remote_region(2, "data").base, 200);
+        assert_eq!(ep.connected_peers(), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "did not provide expected region")]
+    fn join_missing_expected_region_panics() {
+        let ep = Endpoint::new("bar", 0, 2, Expect::AllPeers);
+        ep.expect_regions(&["data"]);
+        ep.handle_join(1, &[("other".into(), region(1, 0))]);
+    }
+
+    #[test]
+    #[should_panic(expected = "setup timed out")]
+    fn wait_ready_times_out() {
+        let ep = Endpoint::new("bar", 0, 2, Expect::AllPeers);
+        ep.wait_ready(Duration::from_millis(20));
+    }
+
+    #[test]
+    fn expect_num_partial_participation() {
+        // Paper: peers may not participate in all channels.
+        let ep = Endpoint::new("pair", 0, 4, Expect::Num(1));
+        ep.handle_connect(3, &[]);
+        assert!(ep.is_ready());
+    }
+
+    #[test]
+    fn on_connect_callback_fires_once_per_peer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ep = Endpoint::new("sst", 0, 3, Expect::AllPeers);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        ep.on_connect(Box::new(move |_peer, _regions| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        }));
+        ep.handle_join(1, &[]);
+        ep.handle_connect(1, &[]); // duplicate peer → no second callback
+        ep.handle_join(2, &[]);
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(sub_name("bar", "sst"), "bar/sst");
+        assert_eq!(region_name("bar/sst", "ov0"), "bar/sst.ov0");
+    }
+}

@@ -1,0 +1,478 @@
+//! The per-node manager (paper §4.2, App. A).
+//!
+//! One manager exists per node (per process on real hardware). It owns:
+//!
+//! * the node's **memory pool** (huge-page MR aggregation),
+//! * the **polling thread** that drains the node's single shared CQ and
+//!   clears ack bits (App. A.1),
+//! * the **control thread** that receives join/connect messages and
+//!   drives channel endpoint setup (§4.2),
+//! * the registry of **thread contexts** (for global fences) and
+//!   **channel endpoints** (for message dispatch).
+//!
+//! Control messages travel over the fabric's SEND/RECV path, mirroring
+//! the paper's use of two-sided verbs for setup only.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::fabric::{Cluster, NodeId, QpId, Region, Verb, Wqe};
+
+use super::ack::AckRegistry;
+use super::ctx::{CtxShared, ThreadCtx};
+use super::endpoint::Endpoint;
+use super::mem_pool::{MemPool, HUGE_PAGE_WORDS};
+
+/// State shared with the service threads. Kept in its own `Arc` so the
+/// threads never hold `Arc<Manager>` — a Manager→thread→Manager cycle
+/// would keep `Drop` (and thus shutdown) from ever running.
+struct Shared {
+    cluster: Arc<Cluster>,
+    me: NodeId,
+    ack: Arc<AckRegistry>,
+    channels: Mutex<HashMap<String, Arc<Endpoint>>>,
+    ctrl_qps: Mutex<Vec<Option<QpId>>>,
+    shutdown: AtomicBool,
+}
+
+pub struct Manager {
+    shared: Arc<Shared>,
+    pool: Arc<MemPool>,
+    ctxs: Mutex<Vec<Arc<CtxShared>>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Manager {
+    /// Construct the manager for node `me` and start its service threads.
+    pub fn new(cluster: Arc<Cluster>, me: NodeId) -> Arc<Manager> {
+        let node = cluster.node(me).clone();
+        let pool = Arc::new(MemPool::new(node, HUGE_PAGE_WORDS));
+        let shared = Arc::new(Shared {
+            cluster: cluster.clone(),
+            me,
+            ack: Arc::new(AckRegistry::new()),
+            channels: Mutex::new(HashMap::new()),
+            ctrl_qps: Mutex::new(vec![None; cluster.num_nodes()]),
+            shutdown: AtomicBool::new(false),
+        });
+        let mgr = Arc::new(Manager {
+            shared: shared.clone(),
+            pool,
+            ctxs: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+        });
+
+        // Polling thread: drain the shared CQ, clear ack bits (App. A.1).
+        {
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("loco-poll-{me}"))
+                .spawn(move || sh.polling_loop())
+                .expect("spawn polling thread");
+            mgr.threads.lock().unwrap().push(h);
+        }
+        // Control thread: join/connect protocol (§4.2).
+        {
+            let sh = shared;
+            let h = std::thread::Builder::new()
+                .name(format!("loco-ctrl-{me}"))
+                .spawn(move || sh.ctrl_loop())
+                .expect("spawn ctrl thread");
+            mgr.threads.lock().unwrap().push(h);
+        }
+        mgr
+    }
+
+    pub fn me(&self) -> NodeId {
+        self.shared.me
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.shared.cluster.num_nodes()
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.shared.cluster
+    }
+
+    pub fn pool(&self) -> &Arc<MemPool> {
+        &self.pool
+    }
+
+    /// Create a per-thread issuing context. Each application thread calls
+    /// this once and keeps the context for its lifetime.
+    pub fn ctx(&self) -> ThreadCtx {
+        let shared = CtxShared::new(self.num_nodes());
+        self.ctxs.lock().unwrap().push(shared.clone());
+        ThreadCtx::new(
+            self.shared.cluster.clone(),
+            self.shared.me,
+            self.shared.ack.clone(),
+            shared,
+            self.pool.clone(),
+        )
+    }
+
+    // ---- channel setup (§4.2) ---------------------------------------
+
+    /// Register a freshly constructed endpoint and announce it to peers.
+    pub fn register_channel(&self, ep: Arc<Endpoint>) {
+        let name = ep.name().to_string();
+        let regions = ep.local_regions();
+        {
+            let mut chans = self.shared.channels.lock().unwrap();
+            assert!(
+                chans.insert(name.clone(), ep).is_none(),
+                "channel endpoint {name} already registered on node {}",
+                self.shared.me
+            );
+        }
+        let msg = encode_msg('J', &name, &regions);
+        for peer in 0..self.num_nodes() as NodeId {
+            if peer != self.shared.me {
+                self.shared.ctrl_send(peer, &msg);
+            }
+        }
+    }
+
+    pub fn channel(&self, name: &str) -> Option<Arc<Endpoint>> {
+        self.shared.channels.lock().unwrap().get(name).cloned()
+    }
+
+    /// Block until every registered endpoint is ready (the paper's
+    /// `cm.wait_for_ready()`).
+    pub fn wait_all_ready(&self, timeout: Duration) {
+        let eps: Vec<Arc<Endpoint>> =
+            self.shared.channels.lock().unwrap().values().cloned().collect();
+        for ep in eps {
+            ep.wait_ready(timeout);
+        }
+    }
+
+    // ---- fences (§5.3) ------------------------------------------------
+
+    /// Global fence: all unfenced writes from *any* thread of this node
+    /// are placed before this call returns. Zero-length reads are issued
+    /// on every (thread, peer) QP with outstanding writes, in parallel,
+    /// then awaited together.
+    pub fn global_fence(&self, ctx: &ThreadCtx) {
+        // Own writes first (uses our QPs directly).
+        let mut key = ctx.fence_issue(None);
+        let ctxs = self.ctxs.lock().unwrap().clone();
+        for other in &ctxs {
+            if Arc::ptr_eq(other, &ctx.shared) {
+                continue;
+            }
+            for peer in 0..self.num_nodes() {
+                if other.unfenced[peer].load(Ordering::Relaxed) == 0 {
+                    continue;
+                }
+                other.unfenced[peer].store(0, Ordering::Relaxed);
+                key.union(ctx.flush_other(other, peer as NodeId));
+            }
+        }
+        ctx.wait(&key);
+    }
+
+    /// Stop service threads. Called automatically on drop.
+    pub fn shutdown(&self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for h in self.threads.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Manager {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl Shared {
+    // ---- service threads ---------------------------------------------
+
+    fn polling_loop(&self) {
+        // Application threads drain the CQ cooperatively while they wait
+        // (ThreadCtx::drain_cq); this thread is the backstop for
+        // completions nobody is waiting on. Blocking pop keeps it off
+        // the run queue (EXPERIMENTS.md §Perf).
+        let cq = self.cluster.node(self.me).cq();
+        let mut buf = Vec::with_capacity(256);
+        loop {
+            match cq.poll_timeout(Duration::from_millis(2)) {
+                Some(cqe) => {
+                    self.ack.complete(cqe.wr_id);
+                    buf.clear();
+                    let n = cq.poll(256, &mut buf);
+                    for cqe in buf.iter().take(n) {
+                        self.ack.complete(cqe.wr_id);
+                    }
+                }
+                None => {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn ctrl_loop(&self) {
+        let node = self.cluster.node(self.me).clone();
+        loop {
+            match node.recv_timeout(Duration::from_millis(2)) {
+                Some(msg) => {
+                    let text = String::from_utf8_lossy(&msg.bytes).into_owned();
+                    self.handle_ctrl(msg.from, &text);
+                }
+                None => {
+                    if self.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_ctrl(&self, from: NodeId, text: &str) {
+        let Some((kind, chan, regions)) = decode_msg(text) else {
+            eprintln!("loco[{}]: malformed ctrl message from {from}: {text}", self.me);
+            return;
+        };
+        let ep = self.channels.lock().unwrap().get(&chan).cloned();
+        match kind {
+            'J' => {
+                let Some(ep) = ep else {
+                    // No matching endpoint (yet): the paper drops the
+                    // message; symmetry + reciprocal joins converge.
+                    return;
+                };
+                let first = ep.handle_join(from, &regions);
+                // Reply connect with our region metadata (idempotent).
+                let reply = encode_msg('C', &chan, &ep.local_regions());
+                self.ctrl_send(from, &reply);
+                if first {
+                    // Cover the case where our original join raced ahead
+                    // of the peer's endpoint construction and was dropped.
+                    let rejoin = encode_msg('J', &chan, &ep.local_regions());
+                    self.ctrl_send(from, &rejoin);
+                }
+            }
+            'C' => {
+                if let Some(ep) = ep {
+                    ep.handle_connect(from, &regions);
+                }
+            }
+            _ => eprintln!("loco[{}]: unknown ctrl kind {kind}", self.me),
+        }
+    }
+
+    fn ctrl_send(&self, peer: NodeId, msg: &str) {
+        let qp = {
+            let mut qps = self.ctrl_qps.lock().unwrap();
+            match qps[peer as usize] {
+                Some(qp) => qp,
+                None => {
+                    let qp = self.cluster.create_qp(self.me, peer);
+                    qps[peer as usize] = Some(qp);
+                    qp
+                }
+            }
+        };
+        self.cluster.post(
+            qp,
+            Wqe {
+                wr_id: 0,
+                verb: Verb::Send { bytes: msg.as_bytes().to_vec().into_boxed_slice() },
+                signaled: false,
+            },
+        );
+    }
+
+}
+
+// ---- control message wire format -------------------------------------
+//
+//   <kind>|<channel-name>|<name>,<node>,<base>,<len>,<mr>,<device>;...
+//
+// Hand-rolled (no serde in the offline build); names are restricted to
+// not contain '|', ',' or ';' which the channel naming scheme respects.
+
+fn encode_msg(kind: char, chan: &str, regions: &[(String, Region)]) -> String {
+    let mut s = format!("{kind}|{chan}|");
+    for (i, (name, r)) in regions.iter().enumerate() {
+        if i > 0 {
+            s.push(';');
+        }
+        s.push_str(&format!(
+            "{name},{},{},{},{},{}",
+            r.node,
+            r.base,
+            r.len,
+            r.mr,
+            if r.device { 1 } else { 0 }
+        ));
+    }
+    s
+}
+
+#[allow(clippy::type_complexity)]
+fn decode_msg(text: &str) -> Option<(char, String, Vec<(String, Region)>)> {
+    let mut parts = text.splitn(3, '|');
+    let kind = parts.next()?.chars().next()?;
+    let chan = parts.next()?.to_string();
+    let regions_text = parts.next()?;
+    let mut regions = Vec::new();
+    if !regions_text.is_empty() {
+        for item in regions_text.split(';') {
+            let f: Vec<&str> = item.split(',').collect();
+            if f.len() != 6 {
+                return None;
+            }
+            regions.push((
+                f[0].to_string(),
+                Region {
+                    node: f[1].parse().ok()?,
+                    base: f[2].parse().ok()?,
+                    len: f[3].parse().ok()?,
+                    mr: f[4].parse().ok()?,
+                    device: f[5] == "1",
+                },
+            ));
+        }
+    }
+    Some((kind, chan, regions))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::endpoint::Expect;
+    use crate::fabric::FabricConfig;
+
+    #[test]
+    fn msg_roundtrip() {
+        let regions = vec![
+            ("own".to_string(), Region { node: 2, base: 512, len: 8, mr: 1, device: false }),
+            ("cache".to_string(), Region { node: 2, base: 1024, len: 32, mr: 1, device: true }),
+        ];
+        let msg = encode_msg('J', "bar/sst", &regions);
+        let (kind, chan, parsed) = decode_msg(&msg).unwrap();
+        assert_eq!(kind, 'J');
+        assert_eq!(chan, "bar/sst");
+        assert_eq!(parsed, regions);
+        // Empty region list.
+        let (k2, c2, r2) = decode_msg(&encode_msg('C', "x", &[])).unwrap();
+        assert_eq!((k2, c2.as_str(), r2.len()), ('C', "x", 0));
+    }
+
+    /// Two managers connect a channel endpoint pair end-to-end over the
+    /// inline fabric, including region metadata exchange.
+    #[test]
+    fn join_connect_end_to_end() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let m1 = Manager::new(cluster.clone(), 1);
+
+        let mk = |m: &Arc<Manager>, base_val: u64| {
+            let ep = Endpoint::new("test", m.me(), 2, Expect::AllPeers);
+            let r = m.pool().alloc_named("test.data", 16, false);
+            m.ctx().local_store(r, 0, base_val);
+            ep.add_local_region("data", r);
+            ep.expect_regions(&["data"]);
+            m.register_channel(ep.clone());
+            ep
+        };
+        let e0 = mk(&m0, 100);
+        let e1 = mk(&m1, 200);
+        e0.wait_ready(Duration::from_secs(5));
+        e1.wait_ready(Duration::from_secs(5));
+
+        // Each side can now read the other's region through the metadata.
+        let ctx0 = m0.ctx();
+        let r1 = e0.remote_region(1, "data");
+        assert_eq!(ctx0.read1(r1, 0), 200);
+        let ctx1 = m1.ctx();
+        let r0 = e1.remote_region(0, "data");
+        assert_eq!(ctx1.read1(r0, 0), 100);
+    }
+
+    /// Construction order doesn't matter: a join that arrives before the
+    /// local endpoint exists is dropped, and the reciprocal-join rule
+    /// still converges.
+    #[test]
+    fn late_construction_converges() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let m1 = Manager::new(cluster.clone(), 1);
+
+        let e0 = Endpoint::new("late", 0, 2, Expect::AllPeers);
+        m0.register_channel(e0.clone());
+        // Give the join time to arrive at node 1 and be dropped.
+        std::thread::sleep(Duration::from_millis(50));
+        let e1 = Endpoint::new("late", 1, 2, Expect::AllPeers);
+        m1.register_channel(e1.clone());
+
+        e0.wait_ready(Duration::from_secs(5));
+        e1.wait_ready(Duration::from_secs(5));
+    }
+
+    /// Fences: unfenced counters and the zero-length-read flush.
+    #[test]
+    fn fence_counters_and_flush() {
+        use crate::core::ctx::FenceScope;
+        let cluster = Cluster::new(3, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let _m1 = Manager::new(cluster.clone(), 1);
+        let _m2 = Manager::new(cluster.clone(), 2);
+        let r1 = cluster.node(1).register_mr(16, false);
+        let r2 = cluster.node(2).register_mr(16, false);
+
+        let ctx = m0.ctx();
+        ctx.write1(r1, 0, 5).wait();
+        ctx.write1(r2, 0, 6).wait();
+        assert_eq!(ctx.unfenced_peers(), 2);
+        ctx.fence(FenceScope::Pair(1));
+        assert_eq!(ctx.unfenced_peers(), 1);
+        ctx.fence(FenceScope::Thread);
+        assert_eq!(ctx.unfenced_peers(), 0);
+
+        // Blocking read resets the counter for its peer (fast path).
+        ctx.write1(r1, 0, 7).wait();
+        assert_eq!(ctx.unfenced_peers(), 1);
+        assert_eq!(ctx.read1(r1, 0), 7);
+        assert_eq!(ctx.unfenced_peers(), 0);
+    }
+
+    /// Global fence covers writes issued by *other* threads of the node.
+    #[test]
+    fn global_fence_covers_all_threads() {
+        use crate::fabric::LatencyModel;
+        let mut lat = LatencyModel::ideal();
+        lat.placement_lag_ns = 10_000_000_000; // writes never place alone
+        let cluster = Cluster::new(2, FabricConfig::threaded(lat));
+        let m0 = Manager::new(cluster.clone(), 0);
+        let _m1 = Manager::new(cluster.clone(), 1);
+        let dst = cluster.node(1).register_mr(16, false);
+
+        // Worker thread writes, never fences.
+        let m0b = m0.clone();
+        let h = std::thread::spawn(move || {
+            let ctx = m0b.ctx();
+            ctx.write1(dst, 3, 99).wait();
+        });
+        h.join().unwrap();
+        // Not placed yet (lag is 10 s).
+        assert_eq!(cluster.node(1).arena().load(dst.at(3)), 0);
+
+        let main_ctx = m0.ctx();
+        m0.global_fence(&main_ctx);
+        assert_eq!(cluster.node(1).arena().load(dst.at(3)), 99);
+    }
+}

@@ -1,0 +1,158 @@
+//! Network-memory pooling (paper Appendix A.2).
+//!
+//! Registration of an MR is expensive on real hardware, and many small MRs
+//! thrash the NIC's translation cache. LOCO therefore aggregates all
+//! channel memory into a few huge registered pages and carves named
+//! regions out of them. The MPI baseline deliberately does *not* do this
+//! (one MR per window), which is half of the Fig. 4 story.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::{NodeFabric, Region};
+
+/// Default huge-page size in words (2^20 words = 8 MiB in the simulation;
+/// stands in for the paper's 1 GB pages).
+pub const HUGE_PAGE_WORDS: usize = 1 << 20;
+
+pub struct MemPool {
+    node: Arc<NodeFabric>,
+    page_words: usize,
+    inner: Mutex<PoolInner>,
+}
+
+struct PoolInner {
+    /// Current host huge page and bump cursor.
+    page: Option<Region>,
+    cursor: u64,
+    /// Current device page and cursor.
+    dev_page: Option<Region>,
+    dev_cursor: u64,
+    /// Named regions (channel-owned), e.g. "bar/sst.cache".
+    named: HashMap<String, Region>,
+    pages_registered: usize,
+}
+
+impl MemPool {
+    pub fn new(node: Arc<NodeFabric>, page_words: usize) -> Self {
+        MemPool {
+            node,
+            page_words,
+            inner: Mutex::new(PoolInner {
+                page: None,
+                cursor: 0,
+                dev_page: None,
+                dev_cursor: 0,
+                named: HashMap::new(),
+                pages_registered: 0,
+            }),
+        }
+    }
+
+    /// Carve `words` out of the pool (registering a new huge page only
+    /// when the current one is exhausted).
+    pub fn alloc(&self, words: usize, device: bool) -> Region {
+        assert!(words > 0, "zero-length region");
+        let mut inner = self.inner.lock().unwrap();
+        if device {
+            // Device memory is small; register it in page-sized chunks too.
+            let need_new = match &inner.dev_page {
+                Some(p) => inner.dev_cursor + words as u64 > p.len,
+                None => true,
+            };
+            if need_new {
+                let chunk = words.max(1 << 10);
+                inner.dev_page = Some(self.node.register_mr(chunk, true));
+                inner.dev_cursor = 0;
+                inner.pages_registered += 1;
+            }
+            let page = inner.dev_page.unwrap();
+            let r = page.slice(inner.dev_cursor, words as u64);
+            inner.dev_cursor += words as u64;
+            r
+        } else {
+            let need_new = match &inner.page {
+                Some(p) => inner.cursor + words as u64 > p.len,
+                None => true,
+            };
+            if need_new {
+                let chunk = self.page_words.max(words);
+                inner.page = Some(self.node.register_mr(chunk, false));
+                inner.cursor = 0;
+                inner.pages_registered += 1;
+            }
+            let page = inner.page.unwrap();
+            let r = page.slice(inner.cursor, words as u64);
+            inner.cursor += words as u64;
+            r
+        }
+    }
+
+    /// Allocate and record under `name` (the channel's `"<chan>.<region>"`
+    /// naming scheme). Idempotent lookup via [`MemPool::named`].
+    pub fn alloc_named(&self, name: &str, words: usize, device: bool) -> Region {
+        let r = self.alloc(words, device);
+        let mut inner = self.inner.lock().unwrap();
+        let prev = inner.named.insert(name.to_string(), r);
+        assert!(prev.is_none(), "region name collision: {name}");
+        r
+    }
+
+    pub fn named(&self, name: &str) -> Option<Region> {
+        self.inner.lock().unwrap().named.get(name).copied()
+    }
+
+    /// Number of huge pages (= MRs) registered so far. LOCO's design goal
+    /// is that this stays tiny regardless of channel count.
+    pub fn pages_registered(&self) -> usize {
+        self.inner.lock().unwrap().pages_registered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig};
+
+    #[test]
+    fn many_regions_few_mrs() {
+        let c = Cluster::new(1, FabricConfig::inline_ideal());
+        let pool = MemPool::new(c.node(0).clone(), 1 << 14);
+        for i in 0..100 {
+            pool.alloc_named(&format!("chan{i}.data"), 64, false);
+        }
+        // 100 regions but only ⌈100*64 / 2^14⌉ = 1 huge page registered.
+        assert_eq!(pool.pages_registered(), 1);
+        assert_eq!(c.node(0).mr_count(), 1);
+        assert!(pool.named("chan42.data").is_some());
+        assert!(pool.named("nope").is_none());
+    }
+
+    #[test]
+    fn page_rollover() {
+        let c = Cluster::new(1, FabricConfig::inline_ideal());
+        let pool = MemPool::new(c.node(0).clone(), 128);
+        let a = pool.alloc(100, false);
+        let b = pool.alloc(100, false); // doesn't fit in remaining 28
+        assert_ne!(a.mr, b.mr);
+        assert_eq!(pool.pages_registered(), 2);
+    }
+
+    #[test]
+    fn device_alloc_is_device_space() {
+        let c = Cluster::new(1, FabricConfig::inline_ideal());
+        let pool = MemPool::new(c.node(0).clone(), 1 << 14);
+        let d = pool.alloc(8, true);
+        assert!(d.base >= crate::fabric::DEVICE_BASE);
+        assert!(d.device);
+    }
+
+    #[test]
+    #[should_panic(expected = "collision")]
+    fn name_collision_panics() {
+        let c = Cluster::new(1, FabricConfig::inline_ideal());
+        let pool = MemPool::new(c.node(0).clone(), 1 << 14);
+        pool.alloc_named("x", 8, false);
+        pool.alloc_named("x", 8, false);
+    }
+}

@@ -1,0 +1,25 @@
+//! LOCO core: the manager, channel endpoints, completion tracking,
+//! fences, and network-memory pooling.
+//!
+//! This layer turns the raw fabric into the paper's programming model:
+//!
+//! * [`manager`] — one per node; owns peer connections, the shared
+//!   completion queue + polling thread, the control-message thread that
+//!   runs the join/connect channel handshake, and the network-memory pool.
+//! * [`endpoint`] — the channel base object: hierarchical names,
+//!   local/remote region tables, readiness, connect callbacks.
+//! * [`ack`] — lock-free bitset completion tracking (`ack_key`).
+//! * [`ctx`] — per-thread issuing context: private QPs per peer,
+//!   `mem_ref` scratch blocks, verb issue APIs, and the fence engine.
+//! * [`mem_pool`] — huge-page aggregation of registered memory.
+
+pub mod ack;
+pub mod ctx;
+pub mod endpoint;
+pub mod manager;
+pub mod mem_pool;
+
+pub use ack::AckKey;
+pub use ctx::{FenceScope, MemRef, ThreadCtx};
+pub use endpoint::Endpoint;
+pub use manager::Manager;

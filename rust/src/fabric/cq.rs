@@ -1,0 +1,76 @@
+//! Completion queues.
+//!
+//! As in LOCO's backend (paper Appendix A.1), each node funnels all
+//! completions into a single shared CQ which a dedicated polling thread
+//! drains.
+
+use crate::util::queue::Queue;
+
+use super::qp::QpId;
+
+/// Completion queue entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cqe {
+    pub wr_id: u64,
+    pub qp: QpId,
+}
+
+pub struct CompletionQueue {
+    q: Queue<Cqe>,
+}
+
+impl CompletionQueue {
+    pub fn new() -> Self {
+        CompletionQueue { q: Queue::new() }
+    }
+
+    #[inline]
+    pub fn post(&self, cqe: Cqe) {
+        self.q.push(cqe);
+    }
+
+    /// Drain up to `max` completions into `out`; returns the count.
+    pub fn poll(&self, max: usize, out: &mut Vec<Cqe>) -> usize {
+        self.q.drain_into(max, out)
+    }
+
+    /// Blocking poll of a single completion (test helper).
+    pub fn poll_one_blocking(&self) -> Cqe {
+        self.q.pop_timeout(std::time::Duration::from_secs(30)).expect("cq poll timed out")
+    }
+
+    /// Blocking poll with timeout (the polling thread's backstop path).
+    pub fn poll_timeout(&self, timeout: std::time::Duration) -> Option<Cqe> {
+        self.q.pop_timeout(timeout)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+impl Default for CompletionQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn post_and_poll() {
+        let cq = CompletionQueue::new();
+        assert!(cq.is_empty());
+        for i in 0..5 {
+            cq.post(Cqe { wr_id: i, qp: QpId { node: 0, index: 0 } });
+        }
+        let mut out = Vec::new();
+        assert_eq!(cq.poll(3, &mut out), 3);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].wr_id, 0);
+        assert_eq!(cq.poll(10, &mut out), 2);
+        assert_eq!(cq.poll(10, &mut out), 0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Network memory: per-node word-addressed arenas and the MR table.
+//!
+//! Each node owns two fixed slabs of `AtomicU64` words: host memory and
+//! (much smaller) NIC *device memory* (paper Appendix A.2). Offsets are in
+//! words; device-memory offsets live above [`DEVICE_BASE`] so a single
+//! `u64` address space covers both slabs.
+//!
+//! The paper's backend aggregates all registered memory into a few 1 GB
+//! huge pages, each one libibverbs MR, to avoid NIC MR-cache thrashing.
+//! We model that with an explicit [`MrTable`]: every registered region
+//! maps to an MR id, and the NIC model charges a penalty when a node's
+//! MR count exceeds the simulated NIC cache (see `LatencyModel::mr_miss_ns`).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use std::sync::RwLock;
+
+use super::NodeId;
+
+/// Word offsets at or above this value address NIC device memory.
+pub const DEVICE_BASE: u64 = 1 << 40;
+
+/// A registered region of network memory on some node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub node: NodeId,
+    /// First word of the region (may be in device space).
+    pub base: u64,
+    /// Length in words.
+    pub len: u64,
+    /// MR this region belongs to (index into the owner's `MrTable`).
+    pub mr: u32,
+    pub device: bool,
+}
+
+impl Region {
+    /// Word address of `idx` words into the region, bounds-checked.
+    #[inline]
+    pub fn at(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.len, "region index {idx} out of {}", self.len);
+        self.base + idx
+    }
+
+    /// Sub-region `[off, off+len)`, sharing the parent's MR.
+    pub fn slice(&self, off: u64, len: u64) -> Region {
+        assert!(
+            off + len <= self.len,
+            "slice [{off}, {off}+{len}) out of region of {} words",
+            self.len
+        );
+        Region { base: self.base + off, len, ..*self }
+    }
+}
+
+/// One node's memory: host slab + device slab, bump-allocated.
+pub struct Arena {
+    host: Box<[AtomicU64]>,
+    device: Box<[AtomicU64]>,
+    host_next: AtomicUsize,
+    device_next: AtomicUsize,
+}
+
+impl Arena {
+    pub fn new(host_words: usize, device_words: usize) -> Self {
+        let mk = |n: usize| -> Box<[AtomicU64]> {
+            (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice()
+        };
+        Arena {
+            host: mk(host_words),
+            device: mk(device_words),
+            host_next: AtomicUsize::new(0),
+            device_next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Bump-allocate `words` from the host (or device) slab. Returns the
+    /// base word address. Panics on exhaustion: the simulation sizes slabs
+    /// up front (the "huge page pool"), mirroring the paper's static
+    /// registration strategy.
+    pub fn alloc(&self, words: usize, device: bool) -> u64 {
+        let (slab_len, next, base) = if device {
+            (self.device.len(), &self.device_next, DEVICE_BASE)
+        } else {
+            (self.host.len(), &self.host_next, 0)
+        };
+        let off = next.fetch_add(words, Ordering::Relaxed);
+        assert!(
+            off + words <= slab_len,
+            "network memory exhausted: asked {} words at {} of {} ({})",
+            words,
+            off,
+            slab_len,
+            if device { "device" } else { "host" }
+        );
+        base + off as u64
+    }
+
+    #[inline]
+    fn word(&self, addr: u64) -> &AtomicU64 {
+        if addr >= DEVICE_BASE {
+            &self.device[(addr - DEVICE_BASE) as usize]
+        } else {
+            &self.host[addr as usize]
+        }
+    }
+
+    /// Atomic word load. Relaxed: network memory is data, not
+    /// synchronization; happens-before edges come from completion queues.
+    #[inline]
+    pub fn load(&self, addr: u64) -> u64 {
+        self.word(addr).load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn store(&self, addr: u64, val: u64) {
+        self.word(addr).store(val, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn fetch_add(&self, addr: u64, add: u64) -> u64 {
+        self.word(addr).fetch_add(add, Ordering::AcqRel)
+    }
+
+    #[inline]
+    pub fn compare_swap(&self, addr: u64, expect: u64, swap: u64) -> u64 {
+        match self.word(addr).compare_exchange(expect, swap, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(v) => v,
+            Err(v) => v,
+        }
+    }
+
+    /// Copy `vals` into consecutive words starting at `addr`, one atomic
+    /// store per word. Concurrent readers may observe a torn prefix —
+    /// exactly the RDMA >8 B atomicity hazard.
+    pub fn store_words(&self, addr: u64, vals: &[u64], yield_between: bool) {
+        for (i, v) in vals.iter().enumerate() {
+            self.store(addr + i as u64, *v);
+            if yield_between && i + 1 != vals.len() {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    pub fn load_words(&self, addr: u64, out: &mut [u64]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.load(addr + i as u64);
+        }
+    }
+
+    pub fn host_words_used(&self) -> usize {
+        self.host_next.load(Ordering::Relaxed)
+    }
+}
+
+/// Descriptor of a registered MR ("huge page" in LOCO's backend).
+#[derive(Clone, Copy, Debug)]
+pub struct MrInfo {
+    pub base: u64,
+    pub len: u64,
+    pub device: bool,
+}
+
+/// Per-node table of registered memory regions.
+///
+/// LOCO registers a handful of huge MRs; the MPI baseline registers one MR
+/// per window. The table's size drives the NIC MR-cache penalty.
+pub struct MrTable {
+    mrs: RwLock<Vec<MrInfo>>,
+}
+
+impl MrTable {
+    pub fn new() -> Self {
+        MrTable { mrs: RwLock::new(Vec::new()) }
+    }
+
+    pub fn register(&self, base: u64, len: u64, device: bool) -> u32 {
+        let mut mrs = self.mrs.write().unwrap();
+        mrs.push(MrInfo { base, len, device });
+        (mrs.len() - 1) as u32
+    }
+
+    pub fn count(&self) -> usize {
+        self.mrs.read().unwrap().len()
+    }
+
+    /// Check that `[addr, addr+len)` lies within MR `mr`.
+    pub fn contains(&self, mr: u32, addr: u64, len: u64) -> bool {
+        let mrs = self.mrs.read().unwrap();
+        match mrs.get(mr as usize) {
+            Some(m) => addr >= m.base && addr + len <= m.base + m.len,
+            None => false,
+        }
+    }
+
+    /// Check that `[addr, addr+len)` lies within *some* registered MR
+    /// (used when the issuer did not carry an rkey).
+    pub fn covers(&self, addr: u64, len: u64) -> bool {
+        let mrs = self.mrs.read().unwrap();
+        mrs.iter().any(|m| addr >= m.base && addr + len <= m.base + m.len)
+    }
+}
+
+impl Default for MrTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_alloc_host_and_device() {
+        let a = Arena::new(128, 16);
+        let r0 = a.alloc(10, false);
+        let r1 = a.alloc(10, false);
+        assert_eq!(r0, 0);
+        assert_eq!(r1, 10);
+        let d0 = a.alloc(4, true);
+        assert_eq!(d0, DEVICE_BASE);
+        a.store(d0, 7);
+        assert_eq!(a.load(d0), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn alloc_exhaustion_panics() {
+        let a = Arena::new(8, 0);
+        a.alloc(9, false);
+    }
+
+    #[test]
+    fn word_ops_roundtrip() {
+        let a = Arena::new(64, 0);
+        let base = a.alloc(8, false);
+        a.store_words(base, &[1, 2, 3, 4], false);
+        let mut out = [0u64; 4];
+        a.load_words(base, &mut out);
+        assert_eq!(out, [1, 2, 3, 4]);
+        assert_eq!(a.fetch_add(base, 41), 1);
+        assert_eq!(a.load(base), 42);
+        assert_eq!(a.compare_swap(base, 42, 100), 42);
+        assert_eq!(a.compare_swap(base, 42, 0), 100);
+        assert_eq!(a.load(base), 100);
+    }
+
+    #[test]
+    fn mr_table_containment() {
+        let t = MrTable::new();
+        let mr = t.register(100, 50, false);
+        assert!(t.contains(mr, 100, 50));
+        assert!(t.contains(mr, 120, 10));
+        assert!(!t.contains(mr, 120, 50));
+        assert!(t.covers(149, 1));
+        assert!(!t.covers(150, 1));
+        assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn region_slice() {
+        let r = Region { node: 0, base: 10, len: 20, mr: 0, device: false };
+        let s = r.slice(5, 5);
+        assert_eq!(s.base, 15);
+        assert_eq!(s.at(0), 15);
+    }
+}

@@ -1,0 +1,220 @@
+//! Simulated RDMA fabric — the substrate LOCO runs on.
+//!
+//! The paper evaluates on ConnectX-5 RoCE NICs; this module replaces the
+//! hardware with a faithful software model of the RDMA contract LOCO
+//! depends on (paper §2.2 / RFC 5040):
+//!
+//! * **One-sided verbs**: READ, WRITE, FETCH_ADD, COMPARE_SWAP, plus the
+//!   zero-length READ used as a fence primitive, and two-sided SEND/RECV
+//!   (used only for channel setup, as in the paper).
+//! * **Per-QP ordering**: writes on the same queue pair are placed in
+//!   submission order.
+//! * **Completion ≠ placement**: a WRITE's completion is delivered to the
+//!   issuer when the data has *arrived* at the remote NIC; the *placement*
+//!   of the data into remote memory may lag completion. This is the
+//!   weak-consistency hazard the paper's fences exist to tame.
+//! * **Read/atomic flushes prior writes**: a remote READ or atomic on a QP
+//!   forces full placement of all earlier WRITEs on that QP before it
+//!   completes — the mechanism LOCO's fences are built from.
+//! * **Word atomicity**: aligned accesses of at most 8 bytes are untorn;
+//!   larger payloads are placed word-by-word and may be observed torn
+//!   (hence owned_var's checksum protocol).
+//!
+//! All offsets and lengths are in 8-byte **words**; network memory is an
+//! array of `AtomicU64`. This matches the paper's "CPU-atomic word size"
+//! reasoning exactly and keeps the simulation free of UB.
+
+pub mod cq;
+pub mod memory;
+pub mod network;
+pub mod nic;
+pub mod qp;
+pub mod verbs;
+
+pub use cq::{CompletionQueue, Cqe};
+pub use memory::{Arena, MrTable, Region, DEVICE_BASE};
+pub use network::{Cluster, NodeFabric};
+pub use qp::{Qp, QpId};
+pub use verbs::{Payload, Verb, Wqe};
+
+use std::time::Instant;
+
+/// Node identifier within a cluster (dense, 0-based).
+pub type NodeId = u32;
+
+/// How verbs are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeliveryMode {
+    /// Execute verbs synchronously at post time in the caller thread.
+    /// Placement is immediate (but still ordered). No background threads.
+    /// Deterministic-ish; used by unit tests of channel logic.
+    Inline,
+    /// One NIC-engine thread per node processes that node's outgoing
+    /// verbs: latency-stamped arrival events, decoupled placement events,
+    /// real data races between placement and application reads. Used by
+    /// consistency tests and all benchmarks.
+    Threaded,
+}
+
+/// Latency/bandwidth model. All values in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// Base one-sided READ latency (post → completion), small payload.
+    pub read_ns: u64,
+    /// Base one-sided WRITE latency (post → completion).
+    pub write_ns: u64,
+    /// Base remote-atomic latency (FAA / CAS).
+    pub atomic_ns: u64,
+    /// Two-sided SEND delivery latency.
+    pub send_ns: u64,
+    /// Additional per-word transfer cost (bandwidth term). 25 Gbps is
+    /// ~2.56 ns per 8-byte word on the wire.
+    pub per_word_ns: f64,
+    /// Per-WQE NIC processing overhead; bounds per-QP op rate when the
+    /// application pipelines many outstanding requests (window > 1).
+    pub op_overhead_ns: u64,
+    /// Placement lag after completion, uniform in `[0, placement_lag_ns]`.
+    /// This is the §2.2 "placement may happen during and after completion"
+    /// window.
+    pub placement_lag_ns: u64,
+    /// Per-op penalty applied when the *target* node has more registered
+    /// memory regions than the NIC's MR cache can hold (`mr_cache_entries`).
+    /// Models the NIC caching-structure effect the paper cites ([33]) to
+    /// explain OpenMPI's transactional-locking loss in Fig. 4.
+    pub mr_miss_ns: u64,
+    /// Number of MR translations the simulated NIC caches.
+    pub mr_cache_entries: usize,
+    /// Extra latency for regions allocated in NIC device memory is
+    /// *subtracted* (device memory avoids the PCIe hop): `device_mem_save_ns`.
+    pub device_mem_save_ns: u64,
+}
+
+impl LatencyModel {
+    /// Zero-latency model: completions and placement are immediate.
+    pub fn ideal() -> Self {
+        LatencyModel {
+            read_ns: 0,
+            write_ns: 0,
+            atomic_ns: 0,
+            send_ns: 0,
+            per_word_ns: 0.0,
+            op_overhead_ns: 0,
+            placement_lag_ns: 0,
+            mr_miss_ns: 0,
+            mr_cache_entries: usize::MAX,
+            device_mem_save_ns: 0,
+        }
+    }
+
+    /// Calibrated to published ConnectX-5 RoCE (25 Gbps) microbenchmarks:
+    /// ~2.7–3 µs small READ, ~2.5 µs WRITE completion, ~3.6 µs atomics.
+    pub fn roce25() -> Self {
+        LatencyModel {
+            read_ns: 2900,
+            write_ns: 2500,
+            atomic_ns: 3600,
+            send_ns: 4000,
+            per_word_ns: 2.56,
+            op_overhead_ns: 120,
+            placement_lag_ns: 1200,
+            mr_miss_ns: 900,
+            mr_cache_entries: 64,
+            device_mem_save_ns: 600,
+        }
+    }
+
+    /// `roce25` scaled down 20× so benchmark sweeps finish quickly while
+    /// preserving every latency *ratio* (shapes of all figures hold).
+    pub fn fast_sim() -> Self {
+        let r = Self::roce25();
+        LatencyModel {
+            read_ns: r.read_ns / 20,
+            write_ns: r.write_ns / 20,
+            atomic_ns: r.atomic_ns / 20,
+            send_ns: r.send_ns / 20,
+            per_word_ns: r.per_word_ns / 20.0,
+            op_overhead_ns: r.op_overhead_ns / 20,
+            placement_lag_ns: r.placement_lag_ns / 20,
+            mr_miss_ns: r.mr_miss_ns / 20,
+            mr_cache_entries: r.mr_cache_entries,
+            device_mem_save_ns: r.device_mem_save_ns / 20,
+        }
+    }
+}
+
+/// Fabric configuration.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub delivery: DeliveryMode,
+    pub latency: LatencyModel,
+    /// Words of host network memory per node (8 bytes each).
+    pub node_mem_words: usize,
+    /// Words of NIC device memory per node.
+    pub device_mem_words: usize,
+    /// Validate remote accesses against the target's registered regions.
+    pub validate_access: bool,
+    /// Insert thread yields between word stores during placement, widening
+    /// the torn-write window (chaos testing of checksum/fence machinery).
+    pub chaotic_placement: bool,
+    /// RNG seed for latency jitter / placement lag sampling.
+    pub seed: u64,
+}
+
+impl FabricConfig {
+    pub fn inline_ideal() -> Self {
+        FabricConfig {
+            delivery: DeliveryMode::Inline,
+            latency: LatencyModel::ideal(),
+            node_mem_words: 1 << 22,
+            device_mem_words: 1 << 12,
+            validate_access: true,
+            chaotic_placement: false,
+            seed: 0x10c0,
+        }
+    }
+
+    pub fn threaded(latency: LatencyModel) -> Self {
+        FabricConfig {
+            delivery: DeliveryMode::Threaded,
+            latency,
+            node_mem_words: 1 << 22,
+            device_mem_words: 1 << 12,
+            validate_access: true,
+            chaotic_placement: false,
+            seed: 0x10c0,
+        }
+    }
+
+    pub fn with_mem_words(mut self, words: usize) -> Self {
+        self.node_mem_words = words;
+        self
+    }
+
+    pub fn chaotic(mut self) -> Self {
+        self.chaotic_placement = true;
+        self
+    }
+}
+
+/// Monotonic clock shared by a cluster, in nanoseconds since creation.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    base: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { base: Instant::now() }
+    }
+
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.base.elapsed().as_nanos() as u64
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,318 @@
+//! The NIC engine: executes verbs with the paper's §2.2 semantics.
+//!
+//! In `Threaded` mode each node runs one engine thread that processes the
+//! node's *outgoing* work requests:
+//!
+//! 1. drain each QP's submission queue, stamping an **arrival time**
+//!    (base latency + bandwidth term + MR-cache penalty), kept monotonic
+//!    per QP so same-QP ordering holds;
+//! 2. when an arrival is due, execute the verb's remote effect:
+//!    * WRITE → post the completion *now*, but only enqueue the memory
+//!      stores as a **placement** event with an extra sampled lag
+//!      (completion ≠ placement);
+//!    * READ / atomic / zero-length READ → first force full placement of
+//!      every earlier WRITE on the same QP (the RFC 5040 flushing rule
+//!      LOCO's fences rely on), then execute, then complete;
+//!    * SEND → deliver to the target's receive queue, then complete;
+//! 3. retire placement events whose lag has elapsed.
+//!
+//! Placement writes words one at a time, so application threads racing
+//! with placement observe genuinely torn large values — the hazard
+//! owned_var's checksums and the kvstore's retry protocol must tolerate.
+//!
+//! In `Inline` mode the same effect functions run synchronously at post
+//! time with zero lag (ordering preserved, no races from delay); unit
+//! tests of channel logic use this.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::queue::Queue;
+use crate::util::rng::Rng;
+
+use super::cq::Cqe;
+use super::network::NodeFabric;
+use super::qp::QpId;
+use super::verbs::{RecvMsg, Verb, Wqe};
+use super::{Clock, FabricConfig, NodeId, DEVICE_BASE};
+
+/// A WQE that has been stamped with its network arrival time.
+struct InFlight {
+    due_ns: u64,
+    wqe: Wqe,
+}
+
+/// Stores that have "completed" but not yet been placed in remote memory.
+struct Placement {
+    due_ns: u64,
+    target: NodeId,
+    remote: u64,
+    data: Box<[u64]>,
+}
+
+/// Per-QP engine state (owned exclusively by the engine thread).
+struct QpState {
+    rx: Arc<Queue<Wqe>>,
+    peer: NodeId,
+    inflight: VecDeque<InFlight>,
+    placements: VecDeque<Placement>,
+    last_arrival_ns: u64,
+}
+
+/// Execute the remote effect of a non-WRITE verb (WRITEs go through the
+/// placement queue instead).
+fn execute_effect(nodes: &[Arc<NodeFabric>], from: NodeId, wqe: &Wqe, target: NodeId, validate: bool) {
+    let tgt = &nodes[target as usize];
+    let src = &nodes[from as usize];
+    match &wqe.verb {
+        Verb::Write { remote, data } => {
+            if validate {
+                tgt.check_covered(*remote, data.len() as u64);
+            }
+            tgt.arena().store_words(*remote, data.as_slice(), false);
+        }
+        Verb::Read { remote, local, len } => {
+            if validate {
+                tgt.check_covered(*remote, *len as u64);
+                src.check_covered(*local, *len as u64);
+            }
+            // Word-by-word copy: reads concurrent with remote writers may
+            // observe torn large values, as on hardware.
+            for i in 0..*len as u64 {
+                let w = tgt.arena().load(*remote + i);
+                src.arena().store(*local + i, w);
+            }
+        }
+        Verb::ZeroLenRead => {}
+        Verb::FetchAdd { remote, add, local } => {
+            if validate {
+                tgt.check_covered(*remote, 1);
+            }
+            let old = tgt.arena().fetch_add(*remote, *add);
+            src.arena().store(*local, old);
+        }
+        Verb::CompareSwap { remote, expect, swap, local } => {
+            if validate {
+                tgt.check_covered(*remote, 1);
+            }
+            let old = tgt.arena().compare_swap(*remote, *expect, *swap);
+            src.arena().store(*local, old);
+        }
+        Verb::Send { bytes } => {
+            tgt.deliver(RecvMsg { from, bytes: bytes.clone() });
+        }
+    }
+}
+
+/// Compute the post→completion latency for a verb.
+fn verb_latency(cfg: &FabricConfig, nodes: &[Arc<NodeFabric>], wqe: &Wqe, target: NodeId) -> u64 {
+    let lat = &cfg.latency;
+    let device_adj = |base: u64, remote: u64| {
+        if remote >= DEVICE_BASE {
+            base.saturating_sub(lat.device_mem_save_ns)
+        } else {
+            base
+        }
+    };
+    let base = match &wqe.verb {
+        Verb::Write { remote, .. } => device_adj(lat.write_ns, *remote),
+        Verb::Read { remote, .. } => device_adj(lat.read_ns, *remote),
+        Verb::ZeroLenRead => lat.read_ns,
+        Verb::FetchAdd { remote, .. } | Verb::CompareSwap { remote, .. } => {
+            device_adj(lat.atomic_ns, *remote)
+        }
+        Verb::Send { .. } => lat.send_ns,
+    };
+    let bw = (wqe.verb.wire_words() as f64 * lat.per_word_ns) as u64;
+    // NIC MR-cache penalty: charged when the target node's registered-MR
+    // count exceeds the simulated cache (paper [33]; explains Fig. 4).
+    let mr_penalty = if nodes[target as usize].mr_count() > lat.mr_cache_entries {
+        lat.mr_miss_ns
+    } else {
+        0
+    };
+    base + bw + mr_penalty
+}
+
+/// Flush all pending placements of one QP (in order), regardless of lag.
+fn flush_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, chaotic: bool) {
+    while let Some(p) = q.placements.pop_front() {
+        nodes[p.target as usize].arena().store_words(p.remote, &p.data, chaotic);
+    }
+}
+
+/// Retire placements whose lag has elapsed (in order; stop at the first
+/// not-yet-due entry so same-QP placement order is preserved).
+fn retire_due_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, now: u64, chaotic: bool) {
+    while q.placements.front().map(|p| p.due_ns <= now).unwrap_or(false) {
+        let p = q.placements.pop_front().unwrap();
+        nodes[p.target as usize].arena().store_words(p.remote, &p.data, chaotic);
+    }
+}
+
+/// Execute one arrived WQE against per-QP engine state.
+fn execute_arrival(
+    nodes: &[Arc<NodeFabric>],
+    cfg: &FabricConfig,
+    rng: &mut Rng,
+    from: NodeId,
+    qpid: QpId,
+    q: &mut QpState,
+    fl: InFlight,
+    now: u64,
+) {
+    let target = q.peer;
+    let src = &nodes[from as usize];
+    match &fl.wqe.verb {
+        Verb::Write { remote, data } => {
+            if cfg.validate_access {
+                nodes[target as usize].check_covered(*remote, data.len() as u64);
+            }
+            // Completion is posted now; placement lags behind (§2.2).
+            let lag = if cfg.latency.placement_lag_ns == 0 {
+                0
+            } else {
+                rng.gen_range_incl(0, cfg.latency.placement_lag_ns)
+            };
+            q.placements.push_back(Placement {
+                due_ns: now + lag,
+                target,
+                remote: *remote,
+                data: data.as_slice().to_vec().into_boxed_slice(),
+            });
+            if lag == 0 {
+                retire_due_placements(nodes, q, now, cfg.chaotic_placement);
+            }
+            if fl.wqe.signaled {
+                src.cq().post(Cqe { wr_id: fl.wqe.wr_id, qp: qpid });
+            }
+        }
+        _ => {
+            if fl.wqe.verb.is_flushing() {
+                flush_placements(nodes, q, cfg.chaotic_placement);
+            }
+            execute_effect(nodes, from, &fl.wqe, target, cfg.validate_access);
+            if fl.wqe.signaled {
+                src.cq().post(Cqe { wr_id: fl.wqe.wr_id, qp: qpid });
+            }
+        }
+    }
+}
+
+/// The per-node engine loop (threaded mode).
+pub(super) fn engine_loop(
+    nodes: Vec<Arc<NodeFabric>>,
+    node: NodeId,
+    cfg: FabricConfig,
+    clock: Clock,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17));
+    let mut qps: Vec<QpState> = Vec::new();
+    let me = &nodes[node as usize];
+    let mut idle_iters: u32 = 0;
+    loop {
+        let doorbell = me.doorbell_value();
+        // Pick up newly created QPs.
+        let qp_count = me.qp_count();
+        while qps.len() < qp_count {
+            let (rx, peer) = me.qp_engine_handle(qps.len() as u32);
+            qps.push(QpState {
+                rx,
+                peer,
+                inflight: VecDeque::new(),
+                placements: VecDeque::new(),
+                last_arrival_ns: 0,
+            });
+        }
+
+        let mut did_work = false;
+        for (idx, q) in qps.iter_mut().enumerate() {
+            // 1. stamp new submissions
+            let now = clock.now_ns();
+            while let Some(wqe) = q.rx.try_pop() {
+                let lat = verb_latency(&cfg, &nodes, &wqe, q.peer);
+                // Per-QP serialization: the NIC cannot accept WQEs faster
+                // than op_overhead_ns apart → arrival monotone per QP.
+                let arr = (now + lat).max(q.last_arrival_ns + cfg.latency.op_overhead_ns);
+                q.last_arrival_ns = arr;
+                q.inflight.push_back(InFlight { due_ns: arr, wqe });
+                did_work = true;
+            }
+            // 2. execute due arrivals (FIFO per QP)
+            let now2 = clock.now_ns();
+            while q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
+                let fl = q.inflight.pop_front().unwrap();
+                let qpid = QpId { node, index: idx as u32 };
+                execute_arrival(&nodes, &cfg, &mut rng, node, qpid, q, fl, now2);
+                did_work = true;
+            }
+            // 3. retire due placements
+            retire_due_placements(&nodes, q, clock.now_ns(), cfg.chaotic_placement);
+        }
+
+        if !did_work {
+            idle_iters += 1;
+            if shutdown.load(Ordering::Relaxed) {
+                let fully_idle = qps
+                    .iter()
+                    .all(|q| q.inflight.is_empty() && q.placements.is_empty() && q.rx.is_empty());
+                if fully_idle && me.qp_count() == qps.len() {
+                    break;
+                }
+            }
+            // Nothing ran this pass: sleep until the next deadline (due
+            // arrival or placement) or until the doorbell rings. Burning
+            // a core spinning here starves application threads on small
+            // hosts (EXPERIMENTS.md §Perf).
+            let now = clock.now_ns();
+            let mut next = now + 200_000; // 200 µs cap (shutdown poll)
+            for q in &qps {
+                if let Some(f) = q.inflight.front() {
+                    next = next.min(f.due_ns);
+                }
+                if let Some(p) = q.placements.front() {
+                    next = next.min(p.due_ns);
+                }
+            }
+            let wait = next.saturating_sub(now);
+            if wait > 3_000 && idle_iters > 8 {
+                me.doorbell_wait(doorbell, wait);
+            } else if idle_iters > 16 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        } else {
+            idle_iters = 0;
+        }
+    }
+}
+
+/// Inline-mode execution: run the verb synchronously at post time.
+/// Placement is immediate; ordering trivially preserved.
+pub(super) fn execute_inline(
+    nodes: &[Arc<NodeFabric>],
+    cfg: &FabricConfig,
+    from: NodeId,
+    qpid: QpId,
+    peer: NodeId,
+    wqe: Wqe,
+) {
+    let src = &nodes[from as usize];
+    match &wqe.verb {
+        Verb::Write { remote, data } => {
+            if cfg.validate_access {
+                nodes[peer as usize].check_covered(*remote, data.len() as u64);
+            }
+            nodes[peer as usize]
+                .arena()
+                .store_words(*remote, data.as_slice(), cfg.chaotic_placement);
+        }
+        _ => execute_effect(nodes, from, &wqe, peer, cfg.validate_access),
+    }
+    if wqe.signaled {
+        src.cq().post(Cqe { wr_id: wqe.wr_id, qp: qpid });
+    }
+}

@@ -1,0 +1,75 @@
+//! Queue pairs.
+//!
+//! A QP is a unidirectional submission endpoint from one node toward one
+//! peer. LOCO gives every application thread a private QP per peer
+//! (paper Appendix A.1), so submission is single-producer in practice;
+//! the queue is MPMC-safe regardless.
+//!
+//! Ordering guarantees (paper §2.2) are enforced by the NIC engine, which
+//! consumes each QP's submissions strictly in FIFO order and keeps
+//! per-QP arrival times monotonic.
+
+use std::sync::Arc;
+
+use crate::util::queue::Queue;
+
+use super::verbs::Wqe;
+use super::NodeId;
+
+/// Identifies a QP: owned by `node`, at `index` in that node's QP table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QpId {
+    pub node: NodeId,
+    pub index: u32,
+}
+
+pub struct Qp {
+    pub id: QpId,
+    /// Target node of all verbs posted on this QP.
+    pub peer: NodeId,
+    subq: Arc<Queue<Wqe>>,
+}
+
+impl Qp {
+    pub fn new(id: QpId, peer: NodeId) -> Self {
+        Qp { id, peer, subq: Arc::new(Queue::new()) }
+    }
+
+    /// Enqueue a work request (threaded mode; the NIC engine drains it).
+    #[inline]
+    pub fn submit(&self, wqe: Wqe) {
+        self.subq.push(wqe);
+    }
+
+    /// Engine-side drain handle.
+    pub fn submission_queue(&self) -> Arc<Queue<Wqe>> {
+        self.subq.clone()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.subq.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::verbs::{Payload, Verb};
+
+    #[test]
+    fn fifo_submission() {
+        let qp = Qp::new(QpId { node: 0, index: 0 }, 1);
+        for i in 0..4 {
+            qp.submit(Wqe {
+                wr_id: i,
+                verb: Verb::Write { remote: 0, data: Payload::one(i) },
+                signaled: true,
+            });
+        }
+        assert_eq!(qp.pending(), 4);
+        let q = qp.submission_queue();
+        for i in 0..4 {
+            assert_eq!(q.try_pop().unwrap().wr_id, i);
+        }
+    }
+}

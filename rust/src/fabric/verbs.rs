@@ -1,0 +1,145 @@
+//! Verb and work-request types for the simulated fabric.
+
+use super::NodeId;
+
+/// Payload for WRITE verbs. Small payloads (≤ 4 words, the common case for
+/// LOCO channel metadata) are stored inline to keep the hot path
+/// allocation-free; larger payloads are boxed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Payload {
+    Inline { len: u8, words: [u64; 4] },
+    Heap(Box<[u64]>),
+}
+
+impl Payload {
+    pub fn from_words(words: &[u64]) -> Payload {
+        if words.len() <= 4 {
+            let mut buf = [0u64; 4];
+            buf[..words.len()].copy_from_slice(words);
+            Payload::Inline { len: words.len() as u8, words: buf }
+        } else {
+            Payload::Heap(words.to_vec().into_boxed_slice())
+        }
+    }
+
+    pub fn one(word: u64) -> Payload {
+        Payload::Inline { len: 1, words: [word, 0, 0, 0] }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        match self {
+            Payload::Inline { len, words } => &words[..*len as usize],
+            Payload::Heap(b) => b,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Inline { len, .. } => *len as usize,
+            Payload::Heap(b) => b.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One-sided and two-sided verbs. All addresses are word offsets in the
+/// *target* node's address space; `local` addresses are word offsets in
+/// the *issuing* node's address space (results of READs and atomics are
+/// placed into local registered memory, as on real hardware).
+#[derive(Clone, Debug)]
+pub enum Verb {
+    /// RDMA WRITE: place `data` at `remote` on the target.
+    Write { remote: u64, data: Payload },
+    /// RDMA READ: fetch `len` words from `remote` into `local`.
+    Read { remote: u64, local: u64, len: u32 },
+    /// Zero-length READ: no data transfer, but (like any READ) forces full
+    /// placement of all prior WRITEs on this QP before completing. This is
+    /// the fence primitive of paper §5.3.
+    ZeroLenRead,
+    /// Remote fetch-and-add on one word; original value lands at `local`.
+    FetchAdd { remote: u64, add: u64, local: u64 },
+    /// Remote compare-and-swap on one word; original value lands at `local`.
+    CompareSwap { remote: u64, expect: u64, swap: u64, local: u64 },
+    /// Two-sided SEND; delivered to the target node's receive queue.
+    /// Used only on the setup path (join/connect), as in the paper.
+    Send { bytes: Box<[u8]> },
+}
+
+impl Verb {
+    /// Payload size in words (for the bandwidth term of the latency model).
+    pub fn wire_words(&self) -> usize {
+        match self {
+            Verb::Write { data, .. } => data.len(),
+            Verb::Read { len, .. } => *len as usize,
+            Verb::ZeroLenRead => 0,
+            Verb::FetchAdd { .. } | Verb::CompareSwap { .. } => 1,
+            Verb::Send { bytes } => bytes.len().div_ceil(8),
+        }
+    }
+
+    /// Does this verb flush prior placements on its QP before executing?
+    pub fn is_flushing(&self) -> bool {
+        matches!(
+            self,
+            Verb::Read { .. } | Verb::ZeroLenRead | Verb::FetchAdd { .. } | Verb::CompareSwap { .. }
+        )
+    }
+}
+
+/// A work request as submitted to a QP.
+#[derive(Clone, Debug)]
+pub struct Wqe {
+    /// Caller-chosen id, routed back on the completion. LOCO's ack_key
+    /// machinery packs (slot, bit) into this.
+    pub wr_id: u64,
+    pub verb: Verb,
+    /// If false, no CQE is generated on completion (unsignaled work
+    /// request — used for fire-and-forget writes that a later fence
+    /// covers).
+    pub signaled: bool,
+}
+
+/// A message delivered over SEND/RECV.
+#[derive(Clone, Debug)]
+pub struct RecvMsg {
+    pub from: NodeId,
+    pub bytes: Box<[u8]>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_inline_vs_heap() {
+        let p = Payload::from_words(&[1, 2, 3]);
+        assert!(matches!(p, Payload::Inline { .. }));
+        assert_eq!(p.as_slice(), &[1, 2, 3]);
+        let p = Payload::from_words(&[0; 9]);
+        assert!(matches!(p, Payload::Heap(_)));
+        assert_eq!(p.len(), 9);
+        assert_eq!(Payload::one(7).as_slice(), &[7]);
+    }
+
+    #[test]
+    fn verb_flush_classification() {
+        assert!(Verb::ZeroLenRead.is_flushing());
+        assert!(Verb::Read { remote: 0, local: 0, len: 1 }.is_flushing());
+        assert!(Verb::FetchAdd { remote: 0, add: 1, local: 0 }.is_flushing());
+        assert!(!Verb::Write { remote: 0, data: Payload::one(1) }.is_flushing());
+        assert!(!Verb::Send { bytes: Box::new([]) }.is_flushing());
+    }
+
+    #[test]
+    fn wire_words() {
+        assert_eq!(Verb::Write { remote: 0, data: Payload::from_words(&[1, 2]) }.wire_words(), 2);
+        assert_eq!(Verb::ZeroLenRead.wire_words(), 0);
+        assert_eq!(Verb::Send { bytes: vec![0u8; 17].into_boxed_slice() }.wire_words(), 3);
+    }
+}

@@ -1,0 +1,48 @@
+//! # LOCO: Library of Channel Objects
+//!
+//! A from-scratch reproduction of *"LOCO: Rethinking Objects for Network
+//! Memory"* (Hodgkins, Madler, Izraelevitz; 2025): composable concurrent
+//! **channel objects** whose state is distributed across the nodes of a
+//! weak memory network.
+//!
+//! The stack has three layers:
+//!
+//! * **L3 (this crate)** — the LOCO library: a simulated RDMA fabric
+//!   ([`fabric`]), the channel/manager core ([`core`]), the channel
+//!   catalogue ([`channels`]), applications ([`apps`]: linearizable
+//!   kvstore, DC/DC power controller), comparator baselines
+//!   ([`baselines`]), workload generators ([`workload`]) and the
+//!   benchmark harness ([`bench`]).
+//! * **L2/L1 (build-time Python)** — JAX model + Pallas kernels for the
+//!   power-controller physics and the kvstore bulk-checksum path,
+//!   AOT-lowered to HLO text in `artifacts/` and executed from Rust via
+//!   the PJRT client in [`runtime`]. Python never runs at request time.
+
+pub mod apps;
+pub mod baselines;
+pub mod bench;
+pub mod channels;
+pub mod core;
+pub mod fabric;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::manager::Manager;
+pub use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("channel setup failed: {0}")]
+    Setup(String),
+    #[error("operation timed out: {0}")]
+    Timeout(String),
+    #[error("capacity exhausted: {0}")]
+    Capacity(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,156 @@
+//! `loco` — the launcher CLI.
+//!
+//! Subcommands mirror the paper's evaluation:
+//!
+//! ```text
+//! loco barrier   [--nodes N] [--iters K]          Fig. 1b microbenchmark
+//! loco fig4      [--max-nodes N]                  §7.1 locking figures
+//! loco fig5      [--nodes N] [--threads T]        §7.2 kvstore grid
+//! loco fig7      [--converters N]                 App. B power sweep
+//! loco micro                                      design ablations
+//! ```
+//!
+//! Environment: `LOCO_FULL=1` for paper-calibrated latencies,
+//! `LOCO_BENCH_SECS` / `LOCO_BENCH_RUNS` to override the measurement
+//! window, `LOCO_ARTIFACTS` for the AOT artifact directory.
+
+use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
+use loco::metrics::Table;
+use loco::workload::{KeyDist, OpMix};
+
+fn arg_u64(args: &[String], flag: &str, default: u64) -> u64 {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let scale = Scale::from_env();
+    match cmd {
+        "barrier" => {
+            let nodes = arg_u64(&args, "--nodes", 4) as usize;
+            let iters = arg_u64(&args, "--iters", 200);
+            let us = fig1b::barrier_latency_us(nodes, iters, scale.latency.clone());
+            println!("Avg latency: {us:.2} µs ({nodes} nodes, {iters} iters)");
+        }
+        "fig4" => {
+            let max_nodes = arg_u64(&args, "--max-nodes", 4) as usize;
+            let mut t = Table::new(&["bench", "nodes", "system", "Mops/s"]);
+            for nodes in 2..=max_nodes {
+                for sys in [fig4::LockSystem::OpenMpi, fig4::LockSystem::Loco] {
+                    let mops =
+                        fig4::single_lock_mops(sys, nodes, scale.secs, scale.latency.clone());
+                    t.row(&[
+                        "single-lock".into(),
+                        nodes.to_string(),
+                        sys.label().into(),
+                        format!("{mops:.4}"),
+                    ]);
+                }
+            }
+            for nodes in 2..=max_nodes {
+                for sys in [fig4::LockSystem::OpenMpi, fig4::LockSystem::Loco] {
+                    let mops = fig4::txn_mops(
+                        sys,
+                        nodes,
+                        2,
+                        1_000_000,
+                        scale.secs,
+                        scale.latency.clone(),
+                    );
+                    t.row(&[
+                        "txn".into(),
+                        nodes.to_string(),
+                        sys.label().into(),
+                        format!("{mops:.4}"),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        "fig5" => {
+            let nodes = arg_u64(&args, "--nodes", 3) as usize;
+            let threads = arg_u64(&args, "--threads", 2) as usize;
+            let keys = arg_u64(&args, "--keys", 1 << 15);
+            let mut t = Table::new(&["mix", "dist", "system", "window", "Mops/s"]);
+            for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
+                for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
+                    for sys in fig5::KvSystem::ALL {
+                        let cell = fig5::Fig5Cell {
+                            system: sys,
+                            nodes,
+                            threads,
+                            mix,
+                            dist,
+                            window: 3,
+                            keys,
+                            secs: scale.secs,
+                        };
+                        let mops =
+                            fig5::run_cell(&cell, scale.latency.clone(), scale.redis_latency());
+                        t.row(&[
+                            mix.label(),
+                            dist.label().into(),
+                            sys.label().into(),
+                            "3".into(),
+                            format!("{mops:.4}"),
+                        ]);
+                    }
+                }
+            }
+            t.print();
+        }
+        "fig7" => {
+            let converters = arg_u64(&args, "--converters", 8) as usize;
+            let rows = fig7::sweep(
+                converters,
+                &[20, 40, 60, 80],
+                std::time::Duration::from_millis(120),
+                2,
+                scale.latency.clone(),
+            );
+            let mut t = Table::new(&["period µs", "ripple V", "mean V", "stable", "ref ripple"]);
+            for r in rows {
+                t.row(&[
+                    r.period_us.to_string(),
+                    format!("{:.3}", r.ripple),
+                    format!("{:.2}", r.mean),
+                    r.stable.to_string(),
+                    format!("{:.3}", r.ref_ripple),
+                ]);
+            }
+            t.print();
+        }
+        "micro" => {
+            let lat = scale.latency.clone();
+            let mut t = Table::new(&["ablation", "value"]);
+            for (l, v) in micro::fence_scopes(lat.clone(), 500) {
+                t.row(&[l, format!("{v:.2} µs/op")]);
+            }
+            for (l, v) in micro::kv_update_fence(lat.clone(), 500) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
+            for (l, v) in micro::owned_var_push_vs_pull(lat.clone(), 500) {
+                t.row(&[l, format!("{v:.2} µs/op")]);
+            }
+            for (l, v) in micro::lock_handover(lat.clone(), 300) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
+            for (l, v) in micro::mr_pooling(lat, 1000) {
+                t.row(&[l, format!("{v:.2} µs/op")]);
+            }
+            t.print();
+        }
+        _ => {
+            println!(
+                "loco — Library of Channel Objects (paper reproduction)\n\
+                 usage: loco <barrier|fig4|fig5|fig7|micro> [flags]\n\
+                 see `examples/` for the end-to-end drivers"
+            );
+        }
+    }
+}

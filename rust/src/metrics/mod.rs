@@ -1,0 +1,227 @@
+//! Measurement utilities for the benchmark harness: latency histograms,
+//! throughput accounting, and the table printer used by every `fig*`
+//! bench to emit the paper's rows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-linear latency histogram (HdrHistogram-style): 2^k major buckets,
+/// 16 linear sub-buckets each. Records nanoseconds.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+const SUB: usize = 16;
+const MAJORS: usize = 40;
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..MAJORS * SUB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn index(ns: u64) -> usize {
+        if ns < SUB as u64 {
+            return ns as usize;
+        }
+        let major = 63 - ns.leading_zeros() as usize; // floor(log2)
+        let shift = major.saturating_sub(4);
+        let sub = ((ns >> shift) & (SUB as u64 - 1)) as usize;
+        let idx = (major - 3) * SUB + sub;
+        idx.min(MAJORS * SUB - 1)
+    }
+
+    /// Lower bound of bucket `idx` in ns (inverse of `index`).
+    fn bucket_floor(idx: usize) -> u64 {
+        let major = idx / SUB + 3;
+        let sub = (idx % SUB) as u64;
+        if major == 3 {
+            return sub;
+        }
+        let shift = major - 4;
+        ((SUB as u64) << shift) + (sub << shift)
+    }
+
+    pub fn record(&self, ns: u64) {
+        self.buckets[Self::index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (bucket floor), p in [0, 100].
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_floor(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    pub fn merge_from(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max_ns(), Ordering::Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Geometric mean — the paper reports geomeans of 5 runs.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Throughput helper: ops and wall time → Mops/s.
+pub fn mops(ops: u64, elapsed: Duration) -> f64 {
+    ops as f64 / elapsed.as_secs_f64() / 1e6
+}
+
+/// Fixed-width table printer for bench output (the repo's replacement
+/// for criterion's reports; every fig* bench prints paper-shaped rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("  {}", cols.join("  "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 100);
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 < p99, "p50 {p50} >= p99 {p99}");
+        // p50 of uniform 100..=1_000_000 is ~500_000 (bucket resolution ~6%).
+        assert!((400_000..600_000).contains(&p50), "p50 {p50}");
+        let mean = h.mean_ns();
+        assert!((450_000.0..550_000.0).contains(&mean), "mean {mean}");
+        assert_eq!(h.max_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 15] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!(h.percentile_ns(1.0) <= 1);
+    }
+
+    #[test]
+    fn merge() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(100);
+        b.record(1000);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 1000);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mops_math() {
+        assert!((mops(2_000_000, Duration::from_secs(2)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["nodes", "mops"]);
+        t.row(&["2".into(), "1.5".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,66 @@
+//! Small std-only utilities: queues, RNG, spin helpers.
+//!
+//! The build environment is offline with only the `xla` crate's dependency
+//! tree vendored, so the usual suspects (crossbeam, rand, parking_lot) are
+//! hand-rolled here at the small scale this project needs.
+
+pub mod queue;
+pub mod rng;
+
+/// FNV-1a over 64-bit words: the value checksum used by `owned_var` and
+/// the kvstore for >word-size atomicity (paper §5.1.1). The Pallas kernel
+/// `python/compile/kernels/checksum.py` computes the identical function
+/// for the bulk prefill/verify path; `python/tests` pin both to the same
+/// test vectors.
+#[inline]
+pub fn fnv64(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &w in words {
+        h ^= w;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Spin-then-yield backoff for polling loops.
+#[derive(Default)]
+pub struct Backoff {
+    spins: u32,
+}
+
+impl Backoff {
+    pub fn new() -> Self {
+        Backoff { spins: 0 }
+    }
+
+    #[inline]
+    pub fn snooze(&mut self) {
+        if self.spins < 64 {
+            for _ in 0..(1 << (self.spins / 8).min(5)) {
+                std::hint::spin_loop();
+            }
+            self.spins += 1;
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.spins = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_progresses() {
+        let mut b = Backoff::new();
+        for _ in 0..200 {
+            b.snooze();
+        }
+        b.reset();
+        assert_eq!(b.spins, 0);
+    }
+}

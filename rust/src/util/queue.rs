@@ -1,0 +1,160 @@
+//! MPMC unbounded FIFO queue on std primitives (Mutex<VecDeque> + Condvar).
+//!
+//! Used for QP submission queues, completion queues, and receive queues.
+//! At the fabric's operating point (µs-scale verb latencies) the mutex is
+//! never the bottleneck; see EXPERIMENTS.md §Perf for measurements.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct Queue<T> {
+    inner: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+impl<T> Queue<T> {
+    pub fn new() -> Self {
+        Queue { inner: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    pub fn push(&self, item: T) {
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(item);
+        self.cv.notify_one();
+    }
+
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Pop, blocking up to `timeout`.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        if let Some(v) = q.pop_front() {
+            return Some(v);
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return q.pop_front();
+            }
+            let (guard, res) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if let Some(v) = q.pop_front() {
+                return Some(v);
+            }
+            if res.timed_out() {
+                return None;
+            }
+        }
+    }
+
+    /// Drain up to `max` items into `out`; returns the count.
+    pub fn drain_into(&self, max: usize, out: &mut Vec<T>) -> usize {
+        let mut q = self.inner.lock().unwrap();
+        let n = max.min(q.len());
+        out.extend(q.drain(..n));
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+}
+
+impl<T> Default for Queue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = Queue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn drain() {
+        let q = Queue::new();
+        for i in 0..10 {
+            q.push(i);
+        }
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(4, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push() {
+        let q = Arc::new(Queue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42u32);
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let q: Queue<u32> = Queue::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = Arc::new(Queue::new());
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        q.push(p * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while got.len() < 1000 {
+                        if let Some(v) = q.pop_timeout(Duration::from_secs(5)) {
+                            got.push(v);
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 4000);
+        all.dedup();
+        assert_eq!(all.len(), 4000, "every pushed item popped exactly once");
+    }
+}

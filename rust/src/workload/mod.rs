@@ -1,0 +1,12 @@
+//! Workload generation: key distributions and operation mixes matching
+//! the paper's evaluation setup (§7.2): CityHash64 key hashing [44],
+//! the YCSB-C Zipfian implementation [5] with θ = 0.99, and
+//! read/update operation mixes over a 10 MB keyspace at 80 % fill.
+
+pub mod cityhash;
+pub mod ycsb;
+pub mod zipfian;
+
+pub use cityhash::city_hash64;
+pub use ycsb::{KeyDist, Op, OpMix, WorkloadGen};
+pub use zipfian::Zipfian;

@@ -1,0 +1,152 @@
+//! YCSB-style operation mixes over the paper's keyspace (§7.2):
+//! 10 MB of 64-bit keys (1.25 M + slots) filled to 80 % capacity, with
+//! read-only / mixed / write-only distributions over uniform or Zipfian
+//! key popularity.
+
+use crate::util::rng::Rng;
+
+use super::zipfian::Zipfian;
+
+/// Key popularity distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyDist {
+    Uniform,
+    /// YCSB-C Zipfian with θ = 0.99.
+    Zipfian,
+}
+
+impl KeyDist {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KeyDist::Uniform => "uniform",
+            KeyDist::Zipfian => "zipfian",
+        }
+    }
+}
+
+/// Operation mix (read fraction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpMix {
+    pub read_fraction: f64,
+}
+
+impl OpMix {
+    pub const READ_ONLY: OpMix = OpMix { read_fraction: 1.0 };
+    pub const MIXED_50_50: OpMix = OpMix { read_fraction: 0.5 };
+    pub const WRITE_ONLY: OpMix = OpMix { read_fraction: 0.0 };
+
+    pub fn label(&self) -> String {
+        if self.read_fraction >= 1.0 {
+            "read-only".into()
+        } else if self.read_fraction <= 0.0 {
+            "write-only".into()
+        } else {
+            format!("{:.0}/{:.0} r/w", self.read_fraction * 100.0, (1.0 - self.read_fraction) * 100.0)
+        }
+    }
+}
+
+/// One generated operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Read { key: u64 },
+    Update { key: u64, value: u64 },
+}
+
+/// Per-thread workload stream. Key universe is `[0, keys)`; the prefill
+/// loads `keys * fill` of them.
+pub struct WorkloadGen {
+    keys: u64,
+    dist: KeyDist,
+    mix: OpMix,
+    zipf: Option<Zipfian>,
+    rng: Rng,
+}
+
+/// The paper's keyspace: 10 MB of 64-bit keys.
+pub const PAPER_KEYSPACE: u64 = 10 * 1024 * 1024 / 8;
+/// The paper's fill factor.
+pub const PAPER_FILL: f64 = 0.8;
+
+impl WorkloadGen {
+    pub fn new(keys: u64, dist: KeyDist, mix: OpMix, seed: u64) -> Self {
+        let zipf = match dist {
+            KeyDist::Zipfian => Some(Zipfian::scrambled(keys, 0.99)),
+            KeyDist::Uniform => None,
+        };
+        WorkloadGen { keys, dist, mix, zipf, rng: Rng::seeded(seed) }
+    }
+
+    /// Keys that should be present after prefill (dense prefix keeps the
+    /// load factor exact; placement is hashed anyway).
+    pub fn prefill_keys(keys: u64, fill: f64) -> impl Iterator<Item = u64> {
+        let n = (keys as f64 * fill) as u64;
+        0..n
+    }
+
+    #[inline]
+    pub fn next_key(&mut self) -> u64 {
+        let loaded = (self.keys as f64 * PAPER_FILL) as u64;
+        match self.dist {
+            // Restrict to loaded keys so reads hit (the paper measures
+            // successful-op throughput).
+            KeyDist::Uniform => self.rng.gen_range(loaded),
+            KeyDist::Zipfian => {
+                let z = self.zipf.as_ref().unwrap();
+                z.next(&mut self.rng) % loaded
+            }
+        }
+    }
+
+    #[inline]
+    pub fn next_op(&mut self) -> Op {
+        let key = self.next_key();
+        if self.rng.gen_bool(self.mix.read_fraction) {
+            Op::Read { key }
+        } else {
+            Op::Update { key, value: self.rng.next_u64() }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_fractions_respected() {
+        let mut g = WorkloadGen::new(1000, KeyDist::Uniform, OpMix { read_fraction: 0.7 }, 1);
+        let n = 20_000;
+        let reads = (0..n).filter(|_| matches!(g.next_op(), Op::Read { .. })).count();
+        let frac = reads as f64 / n as f64;
+        assert!((frac - 0.7).abs() < 0.02, "read fraction {frac}");
+    }
+
+    #[test]
+    fn read_only_and_write_only() {
+        let mut r = WorkloadGen::new(100, KeyDist::Uniform, OpMix::READ_ONLY, 2);
+        let mut w = WorkloadGen::new(100, KeyDist::Zipfian, OpMix::WRITE_ONLY, 3);
+        for _ in 0..100 {
+            assert!(matches!(r.next_op(), Op::Read { .. }));
+            assert!(matches!(w.next_op(), Op::Update { .. }));
+        }
+    }
+
+    #[test]
+    fn keys_stay_in_loaded_range() {
+        let keys = 1000;
+        let loaded = (keys as f64 * PAPER_FILL) as u64;
+        for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
+            let mut g = WorkloadGen::new(keys, dist, OpMix::MIXED_50_50, 4);
+            for _ in 0..5000 {
+                assert!(g.next_key() < loaded);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_count() {
+        let n = WorkloadGen::prefill_keys(1000, 0.8).count();
+        assert_eq!(n, 800);
+    }
+}

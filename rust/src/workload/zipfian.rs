@@ -1,0 +1,139 @@
+//! Zipfian key distribution — a port of the YCSB-C generator [5] with
+//! the paper's θ = 0.99 (§7.2).
+//!
+//! The YCSB algorithm (Gray et al.'s "quickly generating billion-record
+//! synthetic databases" rejection-free method): draw u ∈ [0,1) and map
+//! through the zeta-function-based inverse CDF approximation.
+
+use crate::util::rng::Rng;
+
+use super::cityhash::city_hash64_u64;
+
+pub struct Zipfian {
+    items: u64,
+    theta: f64,
+    zeta_n: f64,
+    alpha: f64,
+    eta: f64,
+    /// Scramble outputs with CityHash so hot keys are spread across the
+    /// keyspace (YCSB's "scrambled zipfian"), as benchmark keys.
+    scramble: bool,
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    let mut sum = 0.0;
+    for i in 1..=n {
+        sum += 1.0 / (i as f64).powf(theta);
+    }
+    sum
+}
+
+impl Zipfian {
+    /// `items` ranks, skew `theta` (the paper uses 0.99). O(items) setup.
+    pub fn new(items: u64, theta: f64) -> Self {
+        assert!(items >= 2);
+        let zeta_n = zeta(items, theta);
+        let zeta_2 = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / items as f64).powf(1.0 - theta)) / (1.0 - zeta_2 / zeta_n);
+        Zipfian { items, theta, zeta_n, alpha, eta, scramble: false }
+    }
+
+    pub fn scrambled(items: u64, theta: f64) -> Self {
+        let mut z = Self::new(items, theta);
+        z.scramble = true;
+        z
+    }
+
+    /// Draw the next rank (0 = most popular) or, if scrambled, a key
+    /// in `[0, items)` with zipf-distributed popularity.
+    pub fn next(&self, rng: &mut Rng) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zeta_n;
+        let rank = if uz < 1.0 {
+            0
+        } else if uz < 1.0 + 0.5f64.powf(self.theta) {
+            1
+        } else {
+            ((self.items as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64
+        };
+        let rank = rank.min(self.items - 1);
+        if self.scramble {
+            city_hash64_u64(rank) % self.items
+        } else {
+            rank
+        }
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empirical frequencies must follow the analytic zipf pmf:
+    /// p(rank k) = (1/k^θ) / ζ(n).
+    #[test]
+    fn matches_analytic_pmf() {
+        let n = 1000;
+        let theta = 0.99;
+        let z = Zipfian::new(n, theta);
+        let mut rng = Rng::seeded(42);
+        let draws = 200_000;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..draws {
+            counts[z.next(&mut rng) as usize] += 1;
+        }
+        let zeta_n = zeta(n, theta);
+        for rank in [0u64, 1, 2, 9, 99] {
+            let expect = (1.0 / ((rank + 1) as f64).powf(theta)) / zeta_n;
+            let got = counts[rank as usize] as f64 / draws as f64;
+            assert!(
+                (got - expect).abs() < expect * 0.15 + 0.001,
+                "rank {rank}: got {got:.4}, expect {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn skew_head_dominates() {
+        let z = Zipfian::new(1_000_000, 0.99);
+        let mut rng = Rng::seeded(7);
+        let draws = 100_000;
+        let head = (0..draws)
+            .filter(|_| z.next(&mut rng) < 100)
+            .count();
+        // With θ=0.99 and 1M items, the top-100 ranks get ~30%+ of draws.
+        assert!(
+            head as f64 / draws as f64 > 0.25,
+            "zipf head too light: {head}/{draws}"
+        );
+    }
+
+    #[test]
+    fn scrambled_spreads_hot_keys() {
+        let z = Zipfian::scrambled(1000, 0.99);
+        let mut rng = Rng::seeded(9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let k = z.next(&mut rng);
+            assert!(k < 1000);
+            seen.insert(k);
+        }
+        // Hot ranks map to scattered keys, not a dense prefix.
+        let max = *seen.iter().max().unwrap();
+        assert!(max > 500, "scramble failed to spread keys: max {max}");
+    }
+
+    #[test]
+    fn all_in_range() {
+        let z = Zipfian::new(64, 0.5);
+        let mut rng = Rng::seeded(3);
+        for _ in 0..10_000 {
+            assert!(z.next(&mut rng) < 64);
+        }
+    }
+}

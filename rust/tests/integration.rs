@@ -1,0 +1,219 @@
+//! Cross-module integration tests: channels composed over managers on
+//! racy threaded fabrics, exercising the full setup protocol and the
+//! §5.3 consistency machinery together.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::channels::barrier::Barrier;
+use loco::channels::ringbuffer::{RingReceiver, RingSender};
+use loco::channels::shared_queue::SharedQueue;
+use loco::channels::sst::Sst;
+use loco::channels::ticket_lock::TicketLock;
+use loco::core::ctx::FenceScope;
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+
+fn cluster_with_managers(n: usize, cfg: FabricConfig) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
+    let cluster = Cluster::new(n, cfg);
+    let mgrs = (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    (cluster, mgrs)
+}
+
+/// The paper's flagship composition: a barrier built on an SST built on
+/// owned_vars, running over a fabric with placement lag and chaotic
+/// word-by-word placement — all layers must cooperate.
+#[test]
+fn composed_channels_on_chaotic_fabric() {
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 4000;
+    let (_c, mgrs) = cluster_with_managers(3, FabricConfig::threaded(lat).chaotic());
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .map(|m| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let bar = Barrier::new(&m, "bar", m.num_nodes());
+                let sst = Sst::new(&m, "state", 2);
+                bar.wait_ready(Duration::from_secs(30));
+                sst.wait_ready(Duration::from_secs(30));
+                let ctx = m.ctx();
+                for round in 1..=20u64 {
+                    // Publish our (round, me²) state, then barrier.
+                    sst.publish_mine(&ctx, &[round, (m.me() as u64 + 1) * (m.me() as u64 + 1)]);
+                    bar.wait(&ctx);
+                    // After the barrier, EVERY row must be at this round
+                    // (the barrier's global fence + SST acks guarantee it).
+                    for peer in 0..m.num_nodes() as NodeId {
+                        let row = sst.read_row(&ctx, peer);
+                        assert!(
+                            row[0] >= round,
+                            "node {} saw stale row {row:?} for peer {peer} at round {round}",
+                            m.me()
+                        );
+                        assert_eq!(row[1], (peer as u64 + 1) * (peer as u64 + 1));
+                    }
+                    bar.wait(&ctx);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Lock + shared queue: producers under a ticket lock append sequence
+/// numbers; global FIFO must hold exactly-once across nodes.
+#[test]
+fn lock_protected_queue_pipeline() {
+    let (_c, mgrs) = cluster_with_managers(3, FabricConfig::threaded(LatencyModel::fast_sim()));
+    let per_node = 40u64;
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .map(|m| {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                let lock = TicketLock::new(&m, "ql", 0);
+                let q = SharedQueue::new(&m, "q", 16, 1);
+                lock.wait_ready(Duration::from_secs(30));
+                q.wait_ready(Duration::from_secs(30));
+                let ctx = m.ctx();
+                let mut popped = Vec::new();
+                for i in 0..per_node {
+                    lock.with(&ctx, || ());
+                    q.push(&ctx, &[m.me() as u64 * 1000 + i]);
+                    popped.push(q.pop(&ctx)[0]);
+                }
+                popped
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, 3 * per_node, "queue lost or duplicated entries");
+}
+
+/// Ringbuffer feeding a consumer that applies to local state; the sender
+/// verifies ack-based flow control never deadlocks with tiny rings.
+#[test]
+fn ringbuffer_tiny_capacity_flow_control() {
+    let (_c, mgrs) = cluster_with_managers(2, FabricConfig::threaded(LatencyModel::fast_sim()));
+    let m0 = mgrs[0].clone();
+    let m1 = mgrs[1].clone();
+    let producer = std::thread::spawn(move || {
+        let tx = RingSender::new(&m0, "flow", 8); // tiny: max 1 msg in flight
+        tx.wait_ready(Duration::from_secs(30));
+        let ctx = m0.ctx();
+        for i in 0..300u64 {
+            tx.send(&ctx, &[i, i]);
+        }
+    });
+    let consumer = std::thread::spawn(move || {
+        let rx = RingReceiver::new(&m1, "flow", 8);
+        rx.wait_ready(Duration::from_secs(30));
+        let ctx = m1.ctx();
+        for i in 0..300u64 {
+            assert_eq!(rx.recv(&ctx), vec![i, i]);
+        }
+    });
+    producer.join().unwrap();
+    consumer.join().unwrap();
+}
+
+/// Full kvstore over the chaotic fabric with concurrent churn from every
+/// node, then a global audit of index coherence.
+#[test]
+fn kvstore_churn_and_audit() {
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 2000;
+    let (_c, mgrs) = cluster_with_managers(3, FabricConfig::threaded(lat).chaotic());
+    let cfg = KvConfig { slots_per_node: 128, tracker_words: 1 << 12, ..Default::default() };
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .zip(&kvs)
+        .enumerate()
+        .map(|(i, (m, kv))| {
+            let m = m.clone();
+            let kv = kv.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                // Each node owns keys ≡ i (mod 3): inserts, updates,
+                // deletes half of them.
+                let mine: Vec<u64> = (0..60).map(|k| k * 3 + i as u64).collect();
+                for &k in &mine {
+                    kv.insert(&ctx, k, &[k + 1]).unwrap();
+                }
+                for &k in &mine {
+                    assert!(kv.update(&ctx, k, &[k + 2]));
+                }
+                for &k in mine.iter().filter(|k| *k % 2 == 0) {
+                    assert!(kv.remove(&ctx, k));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Audit: all nodes agree on the surviving keys and values.
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    for k in 0..180u64 {
+        let expect = if k % 2 == 0 { None } else { Some(vec![k + 2]) };
+        for (i, kv) in kvs.iter().enumerate() {
+            assert_eq!(kv.get(&ctxs[i], k), expect, "node {i} key {k}");
+        }
+    }
+    for kv in &kvs {
+        assert_eq!(kv.index_len(), 90);
+    }
+}
+
+/// Fences really order cross-channel effects: a data write followed by a
+/// fenced flag publish must never expose the flag before the data.
+#[test]
+fn release_write_message_passing() {
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 20_000; // aggressive placement lag
+    let (cluster, mgrs) = cluster_with_managers(2, FabricConfig::threaded(lat));
+    let data = cluster.node(1).register_mr(8, false);
+    let flag = cluster.node(1).register_mr(1, false);
+
+    let m0 = mgrs[0].clone();
+    let writer = std::thread::spawn(move || {
+        let ctx = m0.ctx();
+        for round in 1..=200u64 {
+            ctx.write1(data, 0, round);
+            ctx.fence(FenceScope::Pair(1)); // release
+            ctx.write1(flag, 0, round);
+            ctx.fence(FenceScope::Pair(1)); // make flag visible promptly
+        }
+    });
+    let m1 = mgrs[1].clone();
+    let reader = std::thread::spawn(move || {
+        let ctx = m1.ctx();
+        let mut seen = 0u64;
+        while seen < 200 {
+            let f = ctx.local_load(flag, 0); // relaxed local read (§5.3)
+            if f > seen {
+                let d = ctx.local_load(data, 0);
+                assert!(d >= f, "flag {f} visible before data {d}: fence violated");
+                seen = f;
+            }
+            std::hint::spin_loop();
+        }
+    });
+    writer.join().unwrap();
+    reader.join().unwrap();
+}

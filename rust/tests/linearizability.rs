@@ -1,0 +1,235 @@
+//! Linearizability checking for the kvstore (paper Appendix C).
+//!
+//! Strategy: threads on every node run random operations against a small
+//! key set, recording complete histories (invocation/response timestamps
+//! plus results). Values are globally unique per write. The checker
+//! exploits the store's structure the same way the paper's proof does:
+//! all mutations on one key hold that key's lock, so their critical
+//! sections — and hence their linearization points — are totally ordered
+//! and real-time disjoint (Lemma C.1). Each read must then return a
+//! value legal for *some* point within its own [invocation, response]
+//! interval against that mutation order (Lemma C.2):
+//!
+//! * a value v is readable from the invocation of the write that
+//!   produced it (its linearization point is inside the writer's
+//!   interval) until the response of the next mutation of that key;
+//! * EMPTY is readable from the invocation of a delete until the
+//!   response of the next insert (and before the first insert's
+//!   response).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+enum Event {
+    /// Mutation on `key`: Insert/Update write `val`; Delete writes None.
+    Mutate { key: u64, val: Option<u64>, inv: u64, resp: u64 },
+    /// Read of `key` returning `val` (None = EMPTY).
+    Read { key: u64, val: Option<u64>, inv: u64, resp: u64 },
+}
+
+fn now(clock: &std::time::Instant) -> u64 {
+    clock.elapsed().as_nanos() as u64
+}
+
+/// Check one key's history with a sound partial-order argument.
+///
+/// Recorded intervals include lock-wait time, so mutation intervals may
+/// overlap even though their critical sections are serialized. We
+/// therefore use only *definite* precedence (a.resp < b.inv ⇒ a
+/// linearizes before b) and flag reads that are wrong in EVERY
+/// serialization consistent with it:
+///
+/// * a read of value v is wrong if v's write never happened, or the read
+///   completed before the write began, or some other mutation definitely
+///   follows v's write and definitely precedes the read (v was
+///   certainly overwritten);
+/// * an EMPTY read is wrong if some write w definitely precedes it and
+///   no delete could linearize after w (every delete definitely
+///   precedes w), i.e. the key was certainly present.
+fn check_key(key: u64, muts: Vec<(Option<u64>, u64, u64)>, reads: &[(Option<u64>, u64, u64)]) {
+    for &(val, inv, resp) in reads {
+        match val {
+            Some(v) => {
+                let m = muts
+                    .iter()
+                    .find(|(mv, _, _)| *mv == Some(v))
+                    .unwrap_or_else(|| panic!("key {key}: read of value {v} never written"));
+                assert!(
+                    resp >= m.1,
+                    "key {key}: read {v} @[{inv},{resp}] not linearizable: completed before its write began @{}",
+                    m.1
+                );
+                // Certainly overwritten?
+                let overwritten = muts.iter().any(|&(mv2, inv2, resp2)| {
+                    mv2 != Some(v) && inv2 > m.2 && resp2 < inv
+                });
+                assert!(
+                    !overwritten,
+                    "key {key}: read {v} @[{inv},{resp}] not linearizable: value certainly overwritten ({muts:?})"
+                );
+            }
+            None => {
+                // Certainly present?
+                let certainly_present = muts.iter().any(|&(mv, minv, mresp)| {
+                    mv.is_some()
+                        && mresp < inv // write definitely precedes the read
+                        && muts.iter().all(|&(dv, _dinv, dresp)| {
+                            dv.is_some() || dresp < minv // every delete definitely precedes the write
+                        })
+                });
+                assert!(
+                    !certainly_present,
+                    "key {key}: EMPTY read @[{inv},{resp}] not linearizable: key certainly present ({muts:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kvstore_concurrent_history_is_linearizable() {
+    let nodes = 3;
+    let keys = 8u64;
+    let ops_per_thread = 120u64;
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 3000;
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).chaotic());
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let cfg = KvConfig { slots_per_node: 64, tracker_words: 1 << 12, ..Default::default() };
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+
+    let clock = Arc::new(std::time::Instant::now());
+    let uid = Arc::new(AtomicU64::new(1));
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .zip(&kvs)
+        .enumerate()
+        .map(|(i, (m, kv))| {
+            let m = m.clone();
+            let kv = kv.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(0xC0FFEE + i as u64);
+                let mut events = Vec::new();
+                for _ in 0..ops_per_thread {
+                    let key = rng.gen_range(keys);
+                    match rng.gen_range(10) {
+                        0..=2 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let _ = kv.insert(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                        }
+                        3..=4 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let did = kv.update(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            if did {
+                                events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            }
+                        }
+                        5 => {
+                            let inv = now(&clock);
+                            let did = kv.remove(&ctx, key);
+                            let resp = now(&clock);
+                            if did {
+                                events.push(Event::Mutate { key, val: None, inv, resp });
+                            }
+                        }
+                        _ => {
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let resp = now(&clock);
+                            events.push(Event::Read { key, val: got, inv, resp });
+                        }
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    let mut all: Vec<Event> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+
+    // Partition per key and check.
+    for key in 0..keys {
+        let muts: Vec<(Option<u64>, u64, u64)> = all
+            .iter()
+            .filter_map(|e| match e {
+                Event::Mutate { key: k, val, inv, resp } if *k == key => {
+                    Some((*val, *inv, *resp))
+                }
+                _ => None,
+            })
+            .collect();
+        let reads: Vec<(Option<u64>, u64, u64)> = all
+            .iter()
+            .filter_map(|e| match e {
+                Event::Read { key: k, val, inv, resp } if *k == key => Some((*val, *inv, *resp)),
+                _ => None,
+            })
+            .collect();
+        check_key(key, muts, &reads);
+    }
+}
+
+/// The checker itself must reject broken histories (meta-test).
+#[test]
+#[should_panic(expected = "certainly overwritten")]
+fn checker_rejects_stale_read() {
+    // Write v=1 at [0,10], write v=2 at [20,30]; a read of 1 at [40,50]
+    // (after v=2 completed) is stale in every serialization.
+    check_key(
+        0,
+        vec![(Some(1), 0, 10), (Some(2), 20, 30)],
+        &[(Some(1), 40, 50)],
+    );
+}
+
+#[test]
+#[should_panic(expected = "completed before its write began")]
+fn checker_rejects_future_read() {
+    // Read of v=1 completing before the write of v=1 begins.
+    check_key(0, vec![(Some(1), 100, 110)], &[(Some(1), 0, 5)]);
+}
+
+#[test]
+#[should_panic(expected = "certainly present")]
+fn checker_rejects_false_empty() {
+    // Insert completed long before; no delete at all; EMPTY read after.
+    check_key(0, vec![(Some(1), 0, 10)], &[(None, 50, 60)]);
+}
+
+#[test]
+fn checker_accepts_overlapping_read() {
+    // Read overlapping the write may return it (linearizes inside).
+    check_key(0, vec![(Some(1), 10, 30)], &[(Some(1), 15, 20)]);
+    // EMPTY legal before first insert's response.
+    check_key(0, vec![(Some(1), 10, 30)], &[(None, 0, 12)]);
+    // After a delete's invocation, EMPTY is legal.
+    check_key(
+        0,
+        vec![(Some(1), 0, 5), (None, 10, 20)],
+        &[(None, 12, 25), (Some(1), 6, 11)],
+    );
+}

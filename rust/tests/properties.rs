@@ -1,0 +1,230 @@
+//! Property-based tests: seeded random sweeps over schedules, sizes and
+//! fabric configurations (a hand-rolled property harness — the offline
+//! build has no proptest; each property runs many seeded cases and
+//! shrinking is replaced by printing the failing seed).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use loco::channels::owned_var::OwnedVar;
+use loco::channels::shared_queue::SharedQueue;
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::util::fnv64;
+use loco::util::rng::Rng;
+use loco::workload::cityhash::city_hash64;
+use loco::workload::zipfian::Zipfian;
+
+fn managers(n: usize, cfg: FabricConfig) -> Vec<Arc<Manager>> {
+    let cluster = Cluster::new(n, cfg);
+    (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect()
+}
+
+/// Property: fnv64 is sensitive to every word position and word value
+/// (no silent truncation/reordering blindness).
+#[test]
+fn prop_fnv64_position_and_value_sensitivity() {
+    let mut rng = Rng::seeded(11);
+    for case in 0..200 {
+        let len = 1 + rng.gen_range(16) as usize;
+        let mut v: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+        let h0 = fnv64(&v);
+        let idx = rng.gen_range(len as u64) as usize;
+        let old = v[idx];
+        v[idx] = old.wrapping_add(1 + rng.gen_range(1000));
+        assert_ne!(fnv64(&v), h0, "case {case}: value change not detected");
+        v[idx] = old;
+        if len >= 2 {
+            let (a, b) = (rng.gen_range(len as u64) as usize, rng.gen_range(len as u64) as usize);
+            if a != b && v[a] != v[b] {
+                v.swap(a, b);
+                assert_ne!(fnv64(&v), h0, "case {case}: reorder not detected");
+            }
+        }
+    }
+}
+
+/// Property: CityHash64 never collides on small dense u64 key sets (it
+/// is the kvstore's placement function; collisions would skew striping).
+#[test]
+fn prop_cityhash_no_collisions_small_sets() {
+    let mut rng = Rng::seeded(12);
+    for _ in 0..20 {
+        let base = rng.next_u64() >> 1;
+        let mut seen = std::collections::HashSet::new();
+        for k in base..base + 2000 {
+            assert!(seen.insert(city_hash64(&k.to_le_bytes())), "collision at key {k}");
+        }
+    }
+}
+
+/// Property: zipfian draws are always in range and more skewed than
+/// uniform for every θ in (0.4, 0.99].
+#[test]
+fn prop_zipfian_skew_monotone_in_theta() {
+    let mut rng = Rng::seeded(13);
+    let n = 1000u64;
+    let draws = 30_000;
+    let mut prev_head = 0usize;
+    for theta_pct in [40u64, 70, 99] {
+        let z = Zipfian::new(n, theta_pct as f64 / 100.0);
+        let head = (0..draws).filter(|_| z.next(&mut rng) < 10).count();
+        assert!(head > prev_head, "θ={theta_pct}%: head {head} ≤ previous {prev_head}");
+        prev_head = head;
+    }
+}
+
+/// Property: across random producer/consumer cadences, node counts and
+/// seeds, the shared queue delivers every pushed item exactly once.
+/// (Producers and consumers are separate roles: a mixed blocking
+/// push+pop loop can self-deadlock by waiting for its own future push —
+/// that is a client usage error, not a queue property.)
+#[test]
+fn prop_queue_exactly_once_random_schedules() {
+    for seed in 0..4u64 {
+        let n = 2 + (seed as usize % 2);
+        let mgrs = managers(n, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let qs: Vec<Arc<SharedQueue>> = mgrs
+            .iter()
+            .map(|m| Arc::new(SharedQueue::new(m, "q", 8, 2)))
+            .collect();
+        for q in &qs {
+            q.wait_ready(Duration::from_secs(30));
+        }
+        let per_node = 30u64;
+        let mut producers = Vec::new();
+        let mut consumers = Vec::new();
+        for (i, (m, q)) in mgrs.iter().zip(&qs).enumerate() {
+            let (m2, q2) = (m.clone(), q.clone());
+            producers.push(std::thread::spawn(move || {
+                let ctx = m2.ctx();
+                let mut rng = Rng::seeded(seed * 100 + i as u64);
+                for s in 0..per_node {
+                    q2.push(&ctx, &[i as u64, s]);
+                    if rng.gen_bool(0.3) {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+            let (m2, q2) = (m.clone(), q.clone());
+            consumers.push(std::thread::spawn(move || {
+                let ctx = m2.ctx();
+                let mut rng = Rng::seeded(seed * 100 + 50 + i as u64);
+                let mut popped = Vec::new();
+                for _ in 0..per_node {
+                    popped.push(q2.pop(&ctx));
+                    if rng.gen_bool(0.3) {
+                        std::thread::yield_now();
+                    }
+                }
+                popped
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<Vec<u64>> =
+            consumers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        assert_eq!(all.len() as u64, n as u64 * per_node, "seed {seed}: count mismatch");
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len() as u64, n as u64 * per_node, "seed {seed}: duplicate pops");
+        for i in 0..n as u64 {
+            for s in 0..per_node {
+                assert!(all.binary_search(&vec![i, s]).is_ok(), "seed {seed}: lost {i}:{s}");
+            }
+        }
+    }
+}
+
+/// Property: owned_var readers NEVER observe torn multi-word values, for
+/// random widths, chaotic placement, and random writer cadences.
+#[test]
+fn prop_owned_var_atomicity_random_widths() {
+    for seed in 0..3u64 {
+        let mut rng = Rng::seeded(seed + 400);
+        let words = 2 + rng.gen_range(7) as usize;
+        let mut lat = LatencyModel::fast_sim();
+        lat.placement_lag_ns = 1 + rng.gen_range(5000);
+        let mgrs = managers(2, FabricConfig::threaded(lat).chaotic());
+        let vars: Vec<Arc<OwnedVar>> = mgrs
+            .iter()
+            .map(|m| Arc::new(OwnedVar::new(m, "ov", 0, words, false)))
+            .collect();
+        for v in &vars {
+            v.wait_ready(Duration::from_secs(30));
+        }
+        let w_mgr = mgrs[0].clone();
+        let w_var = vars[0].clone();
+        let writer = std::thread::spawn(move || {
+            let ctx = w_mgr.ctx();
+            let mut rng = Rng::seeded(seed);
+            for round in 1..=150u64 {
+                let val = vec![round * 7919; w_var.words()];
+                w_var.publish(&ctx, &val);
+                if rng.gen_bool(0.3) {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        let r_mgr = mgrs[1].clone();
+        let r_var = vars[1].clone();
+        let reader = std::thread::spawn(move || {
+            let ctx = r_mgr.ctx();
+            for _ in 0..600 {
+                let v = r_var.read_cached(&ctx);
+                assert!(
+                    v.iter().all(|&x| x == v[0]) && v[0] % 7919 == 0,
+                    "seed {seed}: torn value {v:?}"
+                );
+            }
+        });
+        writer.join().unwrap();
+        reader.join().unwrap();
+    }
+}
+
+/// Property: the fence engine is idempotent and monotone — after any
+/// random sequence of writes and fences, a final fence leaves zero
+/// unfenced peers, and remote memory matches the last write per address.
+#[test]
+fn prop_fence_engine_random_programs() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::seeded(seed + 900);
+        let n = 3;
+        let cluster = Cluster::new(n, {
+            let mut lat = LatencyModel::fast_sim();
+            lat.placement_lag_ns = 50_000;
+            FabricConfig::threaded(lat)
+        });
+        let mgrs: Vec<Arc<Manager>> =
+            (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let regions: Vec<_> =
+            (1..n as NodeId).map(|p| cluster.node(p).register_mr(16, false)).collect();
+        let ctx = mgrs[0].ctx();
+        let mut last = vec![[0u64; 16]; regions.len()];
+        for _ in 0..100 {
+            let r = rng.gen_range(regions.len() as u64) as usize;
+            let off = rng.gen_range(16);
+            let val = rng.next_u64();
+            ctx.write1(regions[r], off, val);
+            last[r][off as usize] = val;
+            if rng.gen_bool(0.2) {
+                ctx.fence(loco::core::ctx::FenceScope::Pair((r + 1) as NodeId));
+            } else if rng.gen_bool(0.1) {
+                ctx.fence(loco::core::ctx::FenceScope::Thread);
+            }
+        }
+        ctx.fence(loco::core::ctx::FenceScope::Thread);
+        assert_eq!(ctx.unfenced_peers(), 0, "seed {seed}");
+        for (r, region) in regions.iter().enumerate() {
+            for off in 0..16u64 {
+                assert_eq!(
+                    cluster.node(region.node).arena().load(region.at(off)),
+                    last[r][off as usize],
+                    "seed {seed}: region {r} off {off} not placed"
+                );
+            }
+        }
+    }
+}
