@@ -8,7 +8,7 @@
 //! LOCO wins zipfian writes (ticket vs TAS under contention); LOCO with
 //! window 128 gains substantially on reads; Redis trails everything.
 
-use loco::bench::fig5::{run_cell, Fig5Cell, KvSystem};
+use loco::bench::fig5::{loco_batch_ablation, run_cell, Fig5Cell, KvSystem};
 use loco::bench::{geomean_runs, Scale};
 use loco::metrics::Table;
 use loco::workload::{KeyDist, OpMix};
@@ -98,4 +98,32 @@ fn main() {
         }
     }
     t2.print();
+
+    // Doorbell-batched pipeline ablation: multi_get batches vs the
+    // scalar per-op loop on the read-only uniform workload.
+    let mut t3 = Table::new(&["variant", "Mops/s (read-only uniform)"]);
+    for batch in [16usize, 64] {
+        let rows = geomean_rows(scale.runs, || {
+            loco_batch_ablation(nodes, threads, keys, batch, scale.secs, scale.latency.clone())
+        });
+        for (label, mops) in rows {
+            t3.row(&[label, format!("{mops:.4}")]);
+        }
+    }
+    t3.print();
+}
+
+/// Geomean each row of a multi-row measurement across `runs` calls.
+fn geomean_rows(
+    runs: usize,
+    mut f: impl FnMut() -> Vec<(String, f64)>,
+) -> Vec<(String, f64)> {
+    let samples: Vec<Vec<(String, f64)>> = (0..runs).map(|_| f()).collect();
+    (0..samples[0].len())
+        .map(|i| {
+            let label = samples[0][i].0.clone();
+            let vals: Vec<f64> = samples.iter().map(|s| s[i].1).collect();
+            (label, loco::metrics::geomean(&vals))
+        })
+        .collect()
 }

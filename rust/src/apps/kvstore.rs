@@ -340,6 +340,108 @@ impl KvStore {
         true
     }
 
+    // ---- batched operations (doorbell-batched pipeline) ---------------
+
+    /// Batched lock-free lookup: the whole key set is issued through the
+    /// doorbell-batched pipeline — slot reads grouped into **one post
+    /// list per home node** (instead of one doorbell per key), ack
+    /// tracking amortized batch-wide, and a single wait for the batch.
+    /// Each result validates exactly like [`KvStore::get`]
+    /// (checksum/counter/valid, Appendix C); a key whose read raced an
+    /// in-flight update falls back to the scalar retry path.
+    ///
+    /// `out[i]` corresponds to `keys[i]`. Duplicate keys are permitted.
+    pub fn multi_get(&self, ctx: &ThreadCtx, keys: &[u64]) -> Vec<Option<Vec<u64>>> {
+        // Snapshot the index once for the whole batch.
+        let entries: Vec<Option<IndexEntry>> = {
+            let index = self.shared.index.read().unwrap();
+            keys.iter().map(|k| index.get(k).copied()).collect()
+        };
+        let mut reqs = Vec::with_capacity(keys.len());
+        let mut req_of = vec![usize::MAX; keys.len()];
+        for (i, e) in entries.iter().enumerate() {
+            if let Some(e) = e {
+                req_of[i] = reqs.len();
+                reqs.push((self.data_region_of(e.node), self.slot_off(e.slot), self.slot_words()));
+            }
+        }
+        // read_many waits once for the whole batch and resets the
+        // involved peers' unfenced counters (completed READs prove
+        // placement on those QPs), exactly like the scalar get path.
+        let raws = ctx.read_many(&reqs);
+        keys.iter()
+            .enumerate()
+            .map(|(i, &k)| {
+                let e = entries[i]?;
+                let words = &raws[req_of[i]];
+                let (value, rest) = words.split_at(self.cfg.value_words);
+                let (ck, cv) = (rest[0], rest[1]);
+                if fnv64(value) != ck {
+                    return self.get(ctx, k); // torn update in flight: retry
+                }
+                if cv >> 1 != e.counter {
+                    return None; // stale index: linearizes after the delete
+                }
+                if cv & 1 == 0 {
+                    return None; // insert not yet / delete already linearized
+                }
+                Some(value.to_vec())
+            })
+            .collect()
+    }
+
+    /// Batched in-place update of existing keys: acquires the
+    /// (deduplicated) key locks in ascending index order — so concurrent
+    /// `multi_put`s cannot deadlock — issues every value write through
+    /// the batched pipeline (one doorbell per home node), runs **one**
+    /// fence covering the whole batch before the first release (§7.2's
+    /// per-update fence, amortized), then unlocks. Keys not present are
+    /// skipped, exactly like [`KvStore::update`]. Returns how many keys
+    /// were updated.
+    pub fn multi_put(&self, ctx: &ThreadCtx, items: &[(u64, Vec<u64>)]) -> usize {
+        for (_, value) in items {
+            assert_eq!(value.len(), self.cfg.value_words);
+        }
+        let mut lock_ids: Vec<usize> =
+            items.iter().map(|(k, _)| (*k % self.cfg.num_locks as u64) as usize).collect();
+        lock_ids.sort_unstable();
+        lock_ids.dedup();
+        for &l in &lock_ids {
+            self.locks[l].lock(ctx);
+        }
+
+        let entries: Vec<Option<IndexEntry>> = {
+            let index = self.shared.index.read().unwrap();
+            items.iter().map(|(k, _)| index.get(k).copied()).collect()
+        };
+        // Build [value][checksum] frames, then one batched write issue.
+        let mut bufs: Vec<Vec<u64>> = Vec::new();
+        let mut targets: Vec<(Region, u64)> = Vec::new();
+        for (e, (_k, value)) in entries.iter().zip(items) {
+            if let Some(e) = e {
+                let mut buf = Vec::with_capacity(value.len() + 1);
+                buf.extend_from_slice(value);
+                buf.push(fnv64(value));
+                bufs.push(buf);
+                targets.push((self.data_region_of(e.node), self.slot_off(e.slot)));
+            }
+        }
+        let updated = targets.len();
+        let writes: Vec<(Region, u64, &[u64])> = targets
+            .iter()
+            .zip(&bufs)
+            .map(|(&(region, off), buf)| (region, off, buf.as_slice()))
+            .collect();
+        let _key = ctx.write_many(&writes); // completion tracked by the fence
+        if self.cfg.fence_updates && !writes.is_empty() {
+            ctx.fence(FenceScope::Thread); // one fence for the whole batch
+        }
+        for &l in lock_ids.iter().rev() {
+            self.locks[l].unlock(ctx);
+        }
+        updated
+    }
+
     // ---- windowed (asynchronous) reads --------------------------------
 
     /// Issue a lookup without waiting: returns the in-flight read. Used
@@ -617,6 +719,101 @@ mod tests {
         }
         for &k in &all {
             assert_eq!(kvs[(k % 3) as usize].get(&ctxs[(k % 3) as usize], k), Some(vec![k * 10]));
+        }
+    }
+
+    /// multi_get matches scalar gets across hit/miss/deleted keys and
+    /// tolerates duplicates, on both delivery modes.
+    #[test]
+    fn multi_get_matches_scalar() {
+        for cfg in
+            [FabricConfig::inline_ideal(), FabricConfig::threaded(LatencyModel::fast_sim())]
+        {
+            let cluster = Cluster::new(3, cfg);
+            let mgrs: Vec<Arc<Manager>> =
+                (0..3).map(|i| Manager::new(cluster.clone(), i)).collect();
+            let kvs: Vec<Arc<KvStore>> =
+                mgrs.iter().map(|m| KvStore::new(m, "kv", small_cfg())).collect();
+            for kv in &kvs {
+                kv.wait_ready(Duration::from_secs(30));
+            }
+            let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+            // Spread homes across nodes: each node inserts its residue class.
+            for k in 0..30u64 {
+                kvs[(k % 3) as usize].insert(&ctxs[(k % 3) as usize], k, &[k + 500]).unwrap();
+            }
+            kvs[0].remove(&ctxs[0], 9);
+            // Batch with hits on all three homes, a miss, a deleted key,
+            // and a duplicate.
+            let keys = [0u64, 1, 2, 17, 999, 9, 2];
+            let out = kvs[1].multi_get(&ctxs[1], &keys);
+            for (i, &k) in keys.iter().enumerate() {
+                assert_eq!(out[i], kvs[1].get(&ctxs[1], k), "key {k}");
+            }
+            assert_eq!(out[4], None);
+            assert_eq!(out[5], None);
+            assert_eq!(out[6], Some(vec![502]));
+        }
+    }
+
+    /// multi_put updates present keys, skips absent ones, and the batch
+    /// fence makes every write durable before the locks release.
+    #[test]
+    fn multi_put_batched_updates() {
+        let (mgrs, kvs) = setup(3, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for k in 0..24u64 {
+            kvs[(k % 3) as usize].insert(&ctxs[(k % 3) as usize], k, &[0]).unwrap();
+        }
+        // Node 1 batch-updates keys homed on all three nodes (+1 absent).
+        let items: Vec<(u64, Vec<u64>)> =
+            (0..24u64).map(|k| (k, vec![k * 7])).chain([(777u64, vec![1])]).collect();
+        assert_eq!(kvs[1].multi_put(&ctxs[1], &items), 24);
+        for k in 0..24u64 {
+            for (i, kv) in kvs.iter().enumerate() {
+                assert_eq!(kv.get(&ctxs[i], k), Some(vec![k * 7]), "node {i} key {k}");
+            }
+        }
+        assert_eq!(kvs[1].get(&ctxs[1], 777), None, "absent key skipped");
+        // Empty batches are no-ops.
+        assert_eq!(kvs[1].multi_put(&ctxs[1], &[]), 0);
+        assert!(kvs[1].multi_get(&ctxs[1], &[]).is_empty());
+    }
+
+    /// Concurrent multi_puts from every node (overlapping key sets, so
+    /// overlapping lock sets) must not deadlock and must leave each key
+    /// holding one of the contending values.
+    #[test]
+    fn concurrent_multi_put_no_deadlock() {
+        let (mgrs, kvs) = setup(3, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for k in 0..16u64 {
+            kvs[0].insert(&ctxs[0], k, &[0]).unwrap();
+        }
+        let handles: Vec<_> = mgrs
+            .iter()
+            .zip(&kvs)
+            .enumerate()
+            .map(|(i, (m, kv))| {
+                let m = m.clone();
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    for round in 0..20u64 {
+                        let items: Vec<(u64, Vec<u64>)> = (0..16u64)
+                            .map(|k| (k, vec![1 + (i as u64) * 1000 + round]))
+                            .collect();
+                        assert_eq!(kv.multi_put(&ctx, &items), 16);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for k in 0..16u64 {
+            let v = kvs[0].get(&ctxs[0], k).expect("key survived");
+            assert!(v[0] >= 1, "key {k} holds a contending value, got {v:?}");
         }
     }
 

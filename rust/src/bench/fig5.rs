@@ -192,6 +192,104 @@ fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     gate.mops(cell.secs)
 }
 
+/// Batched-vs-scalar ablation on the Fig. 5 read workload: LOCO workers
+/// drive the same keyspace either through the scalar per-op `get` loop
+/// or through `multi_get` batches riding the doorbell-batched pipeline.
+/// Returns rows of (label, aggregate Mops/s); run by `cargo bench
+/// --bench fig5_kvstore` (the `loco micro` CLI prints the single-thread
+/// variant from `bench::micro`).
+pub fn loco_batch_ablation(
+    nodes: usize,
+    threads: usize,
+    keys: u64,
+    batch: usize,
+    secs: f64,
+    lat: LatencyModel,
+) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for batched in [false, true] {
+        let cluster = Cluster::new(nodes, FabricConfig::threaded(lat.clone()).with_mem_words(1 << 23));
+        let mgrs: Vec<Arc<Manager>> =
+            (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let cfg = KvConfig {
+            slots_per_node: (keys as usize).div_ceil(nodes) + 64,
+            ..Default::default()
+        };
+        let kvs: Vec<Arc<KvStore>> =
+            mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+        for kv in &kvs {
+            kv.wait_ready(Duration::from_secs(60));
+        }
+        let loaded = (keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+        let prefill: Vec<_> = mgrs
+            .iter()
+            .zip(&kvs)
+            .enumerate()
+            .map(|(i, (m, kv))| {
+                let m = m.clone();
+                let kv = kv.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    let mine: Vec<u64> =
+                        (0..loaded).filter(|&k| kv.home_of(k) == i as NodeId).collect();
+                    kv.prefill_local(&ctx, &mine, |k| vec![k], None).unwrap();
+                })
+            })
+            .collect();
+        for h in prefill {
+            h.join().unwrap();
+        }
+
+        let gate = Gate::new();
+        let handles: Vec<_> = (0..nodes)
+            .flat_map(|ni| (0..threads).map(move |t| (ni, t)))
+            .map(|(ni, t)| {
+                let m = mgrs[ni].clone();
+                let kv = kvs[ni].clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    let mut gen = WorkloadGen::new(
+                        keys,
+                        KeyDist::Uniform,
+                        OpMix::READ_ONLY,
+                        (ni * 1000 + t) as u64 + 1,
+                    );
+                    gate.worker_ready_and_wait();
+                    let mut ops = 0u64;
+                    let mut batch_keys = Vec::with_capacity(batch);
+                    while !gate.stop.load(Ordering::Relaxed) {
+                        if batched {
+                            batch_keys.clear();
+                            while batch_keys.len() < batch {
+                                if let Op::Read { key } = gen.next_op() {
+                                    batch_keys.push(key);
+                                }
+                            }
+                            ops += kv.multi_get(&ctx, &batch_keys).len() as u64;
+                        } else if let Op::Read { key } = gen.next_op() {
+                            let _ = kv.get(&ctx, key);
+                            ops += 1;
+                        }
+                    }
+                    gate.ops.fetch_add(ops, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        gate.run_window((nodes * threads) as u64, secs);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let label = if batched {
+            format!("LOCO multi_get batch={batch}")
+        } else {
+            "LOCO scalar get loop".to_string()
+        };
+        rows.push((label, gate.mops(secs)));
+    }
+    rows
+}
+
 fn run_sherman(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     let n = cell.nodes;
     let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
@@ -364,6 +462,14 @@ fn run_redis(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The batched runner makes progress and reports both variants.
+    #[test]
+    fn batch_ablation_runs() {
+        let rows = loco_batch_ablation(2, 1, 2048, 16, 0.15, LatencyModel::fast_sim());
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|(_, mops)| *mops > 0.0), "{rows:?}");
+    }
 
     #[test]
     fn every_system_completes_a_cell() {

@@ -19,6 +19,32 @@ use crate::core::endpoint::{region_name, Endpoint, Expect};
 use crate::core::manager::Manager;
 use crate::fabric::{NodeId, Region};
 
+/// Multi-writer word-size register with one "official" copy (paper
+/// §5.1.1).
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::AtomicVar;
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// // Official copy hosted on node 0; all nodes use remote atomics.
+/// let a0 = AtomicVar::with_initial(&m0, "ctr", 0, false, 100);
+/// let a1 = AtomicVar::with_initial(&m1, "ctr", 0, false, 100);
+/// a0.wait_ready(Duration::from_secs(10));
+/// a1.wait_ready(Duration::from_secs(10));
+///
+/// let ctx1 = m1.ctx();
+/// assert_eq!(a1.fetch_add(&ctx1, 5), 100); // remote FAA
+/// assert_eq!(a1.compare_swap(&ctx1, 105, 7), 105); // remote CAS
+/// let ctx0 = m0.ctx();
+/// assert_eq!(a0.load(&ctx0), 7); // host sees the official copy
+/// ```
 pub struct AtomicVar {
     ep: Arc<Endpoint>,
     host: NodeId,

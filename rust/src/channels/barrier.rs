@@ -16,6 +16,35 @@ use crate::util::Backoff;
 
 use super::sst::Sst;
 
+/// SST counting barrier (paper Fig. 1a).
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::Barrier;
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// // Node 1 runs in its own thread, as every node would on hardware.
+/// let m1b = m1.clone();
+/// let peer = std::thread::spawn(move || {
+///     let bar = Barrier::new(&m1b, "bar", 2);
+///     bar.wait_ready(Duration::from_secs(10));
+///     let ctx = m1b.ctx();
+///     bar.wait(&ctx);
+///     bar.episodes()
+/// });
+/// let bar = Barrier::new(&m0, "bar", 2);
+/// bar.wait_ready(Duration::from_secs(10));
+/// let ctx = m0.ctx();
+/// bar.wait(&ctx); // returns once BOTH nodes arrive
+/// assert_eq!(bar.episodes(), 1);
+/// assert_eq!(peer.join().unwrap(), 1);
+/// ```
 pub struct Barrier {
     mgr: Arc<Manager>,
     sst: Sst,

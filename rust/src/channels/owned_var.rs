@@ -22,6 +22,31 @@ use crate::core::manager::Manager;
 use crate::fabric::{NodeId, Region};
 use crate::util::{fnv64, Backoff};
 
+/// Single-writer multi-reader register (paper §5.1.1).
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::OwnedVar;
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// // Same name/owner/width on every participating node.
+/// let v0 = OwnedVar::new(&m0, "ov", 0, 1, false);
+/// let v1 = OwnedVar::new(&m1, "ov", 0, 1, false);
+/// v0.wait_ready(Duration::from_secs(10));
+/// v1.wait_ready(Duration::from_secs(10));
+///
+/// let ctx0 = m0.ctx();
+/// v0.publish(&ctx0, &[42]).wait(); // owner stores + pushes to all caches
+/// let ctx1 = m1.ctx();
+/// assert_eq!(v1.read_cached(&ctx1), vec![42]); // reader hits its cache
+/// assert_eq!(v1.pull(&ctx1), vec![42]); // or pulls the owner's copy
+/// ```
 pub struct OwnedVar {
     ep: Arc<Endpoint>,
     me: NodeId,
@@ -113,14 +138,23 @@ impl OwnedVar {
     }
 
     /// Owner: push to all peers; returns the unioned ack_key (§5.2).
+    /// Rides the batched write pipeline: the authoritative copy is read
+    /// once, ack allocation is amortized across all peers, and each
+    /// peer's write goes out under its own (single) doorbell.
     pub fn push_broadcast(&self, ctx: &ThreadCtx) -> AckKey {
-        let mut key = AckKey::ready();
-        for peer in 0..self.num_nodes as NodeId {
-            if peer != self.me {
-                key.union(self.push_to(ctx, peer));
-            }
+        assert_eq!(self.me, self.owner, "push from non-owner");
+        let own = self.own.unwrap();
+        let mut buf = vec![0u64; self.slot];
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = ctx.local_load(own, i as u64);
         }
-        key
+        let caches: Vec<Region> = (0..self.num_nodes as NodeId)
+            .filter(|&peer| peer != self.me)
+            .map(|peer| self.ep.remote_region(peer, "cache"))
+            .collect();
+        let writes: Vec<(Region, u64, &[u64])> =
+            caches.iter().map(|&cache| (cache, 0, buf.as_slice())).collect();
+        ctx.write_many(&writes)
     }
 
     /// Convenience: store + broadcast in one call.

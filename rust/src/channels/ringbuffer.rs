@@ -46,6 +46,30 @@ fn hdr_len(h: u64) -> u64 {
 }
 
 /// Sender endpoint.
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::{RingReceiver, RingSender};
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// let tx = RingSender::new(&m0, "rb", 64); // node 0 broadcasts
+/// let rx = RingReceiver::new(&m1, "rb", 64); // node 1 receives
+/// tx.wait_ready(Duration::from_secs(10));
+/// rx.wait_ready(Duration::from_secs(10));
+///
+/// let ctx0 = m0.ctx();
+/// tx.send(&ctx0, &[1, 2, 3]); // mixed sizes are fine
+/// tx.send(&ctx0, &[4]);
+/// let ctx1 = m1.ctx();
+/// assert_eq!(rx.recv(&ctx1), vec![1, 2, 3]); // in-order delivery
+/// assert_eq!(rx.recv(&ctx1), vec![4]);
+/// ```
 pub struct RingSender {
     ep: Arc<Endpoint>,
     ack: Sst,

@@ -25,6 +25,30 @@ use crate::util::Backoff;
 
 use super::atomic_var::AtomicVar;
 
+/// Globally consistent MPMC FIFO queue, striped across participants
+/// (paper §5.4).
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::SharedQueue;
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// let q0 = SharedQueue::new(&m0, "q", 8, 2); // 8 slots, 2-word entries
+/// let q1 = SharedQueue::new(&m1, "q", 8, 2);
+/// q0.wait_ready(Duration::from_secs(10));
+/// q1.wait_ready(Duration::from_secs(10));
+///
+/// let ctx0 = m0.ctx();
+/// q0.push(&ctx0, &[7, 8]);
+/// let ctx1 = m1.ctx();
+/// assert_eq!(q1.pop(&ctx1), vec![7, 8]); // global FIFO, exactly-once
+/// ```
 pub struct SharedQueue {
     ep: Arc<Endpoint>,
     head: AtomicVar,

@@ -34,6 +34,31 @@ struct LocalState {
     waiters: usize,
 }
 
+/// Cross-node ticket lock (paper §5.4).
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use loco::channels::TicketLock;
+/// use loco::core::manager::Manager;
+/// use loco::fabric::{Cluster, FabricConfig};
+///
+/// let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+/// let m0 = Manager::new(cluster.clone(), 0);
+/// let m1 = Manager::new(cluster.clone(), 1);
+/// // Lock words hosted on node 0 (NIC device memory by default).
+/// let l0 = TicketLock::new(&m0, "L", 0);
+/// let l1 = TicketLock::new(&m1, "L", 0);
+/// l0.wait_ready(Duration::from_secs(10));
+/// l1.wait_ready(Duration::from_secs(10));
+///
+/// let ctx1 = m1.ctx();
+/// l1.lock(&ctx1); // remote FAA on next_ticket, spin on now_serving
+/// l1.unlock(&ctx1); // release fence, then advance now_serving
+/// let ctx0 = m0.ctx();
+/// assert_eq!(l0.with(&ctx0, || 21 * 2), 42); // closure under the lock
+/// ```
 pub struct TicketLock {
     mgr: Arc<Manager>,
     next_ticket: AtomicVar,

@@ -90,6 +90,33 @@ impl AckAllocator {
         (AckRegistry::wr_id(self.slot, bit), self.word.clone(), mask)
     }
 
+    /// Allocate `n` tracking bits for a batched post: bits packed into as
+    /// few words as possible, **one `fetch_or` per word** instead of one
+    /// per op (ack amortization for the doorbell-batched pipeline). The
+    /// wr_ids are appended to `wr_ids` in allocation order; the returned
+    /// key covers the whole batch.
+    pub fn alloc_batch(&mut self, n: usize, wr_ids: &mut Vec<u64>) -> AckKey {
+        let mut key = AckKey::ready();
+        let mut remaining = n;
+        while remaining > 0 {
+            if self.next_bit == 64 {
+                self.refill();
+            }
+            let take = remaining.min(64 - self.next_bit as usize) as u8;
+            let mut mask = 0u64;
+            for i in 0..take {
+                let bit = self.next_bit + i;
+                mask |= 1u64 << bit;
+                wr_ids.push(AckRegistry::wr_id(self.slot, bit));
+            }
+            self.next_bit += take;
+            self.word.fetch_or(mask, Ordering::AcqRel);
+            key.union(AckKey::single(self.word.clone(), mask));
+            remaining -= take as usize;
+        }
+        key
+    }
+
     fn refill(&mut self) {
         let old = (self.slot, self.word.clone());
         self.retired.push(old);
@@ -196,6 +223,49 @@ mod tests {
         reg.complete(wr1);
         assert!(!key.query());
         reg.complete(wr2);
+        assert!(key.query());
+    }
+
+    #[test]
+    fn alloc_batch_packs_and_completes() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        // Burn 60 bits so a 10-bit batch must straddle a word boundary.
+        for _ in 0..60 {
+            let (wr, _w, _m) = alloc.alloc();
+            reg.complete(wr);
+        }
+        let mut wr_ids = Vec::new();
+        let key = alloc.alloc_batch(10, &mut wr_ids);
+        assert_eq!(wr_ids.len(), 10);
+        assert!(!key.query(), "bits set at issue");
+        assert_eq!(key.tracked_parts(), 2, "batch straddles two words");
+        for (i, wr) in wr_ids.iter().enumerate() {
+            assert!(!key.query(), "incomplete after {i} acks");
+            reg.complete(*wr);
+        }
+        assert!(key.query(), "complete after all acks");
+        // Empty batches are already complete.
+        let mut none = Vec::new();
+        assert!(alloc.alloc_batch(0, &mut none).query());
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn alloc_batch_spans_many_words() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let mut wr_ids = Vec::new();
+        let key = alloc.alloc_batch(200, &mut wr_ids);
+        assert_eq!(wr_ids.len(), 200);
+        // wr_ids must be unique (distinct (slot, bit) pairs).
+        let mut dedup = wr_ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 200);
+        for wr in &wr_ids {
+            reg.complete(*wr);
+        }
         assert!(key.query());
     }
 

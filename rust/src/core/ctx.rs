@@ -26,7 +26,7 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::fabric::{Cluster, NodeFabric, Payload, QpId, Region, Verb, Wqe};
+use crate::fabric::{Cluster, NodeFabric, Payload, PostList, QpId, Region, Verb, Wqe};
 
 use super::ack::{AckAllocator, AckKey, AckRegistry};
 use super::mem_pool::MemPool;
@@ -262,6 +262,122 @@ impl ThreadCtx {
         self.cluster.post(qp, Wqe { wr_id: 0, verb, signaled: false });
     }
 
+    // ---- batched issue (doorbell-batched async pipeline) ------------
+
+    /// Issue an ordered batch of verbs to one peer under a **single
+    /// doorbell** (one `PostList`, one ack-word update for the whole
+    /// batch). Returns the combined completion key. The scalar `issue`
+    /// path is semantically a batch of one.
+    pub fn post_list(&self, peer: crate::fabric::NodeId, verbs: Vec<Verb>) -> AckKey {
+        if verbs.is_empty() {
+            return AckKey::ready();
+        }
+        let qp = self.shared.qp(&self.cluster, self.me, peer);
+        let mut wr_ids = Vec::with_capacity(verbs.len());
+        let key = self.alloc.borrow_mut().alloc_batch(verbs.len(), &mut wr_ids);
+        let mut list = PostList::with_capacity(verbs.len());
+        for (wr_id, verb) in wr_ids.into_iter().zip(verbs) {
+            list.push(Wqe { wr_id, verb, signaled: true });
+        }
+        self.cluster.post_list(qp, list);
+        key
+    }
+
+    /// Batched asynchronous reads: one doorbell per **distinct peer**
+    /// instead of one per op, with ack allocation amortized across the
+    /// whole request set. Requests are `(region, word offset, words)`;
+    /// entries targeting local host memory complete immediately. Returns
+    /// `(key, bufs)` — `bufs[i]` holds request `i`'s words once `key`
+    /// completes.
+    pub fn read_many_async(&self, reqs: &[(Region, u64, usize)]) -> (AckKey, Vec<MemRef>) {
+        let mut bufs = Vec::with_capacity(reqs.len());
+        let mut remote: Vec<(crate::fabric::NodeId, Verb)> = Vec::new();
+        for (region, off, len) in reqs {
+            let addr = region.at(*off);
+            let buf = self.mem_ref(*len);
+            if self.local_direct(region) {
+                for i in 0..*len as u64 {
+                    let w = self.node.arena().load(addr + i);
+                    self.node.arena().store(buf.addr + i, w);
+                }
+            } else {
+                remote.push((
+                    region.node,
+                    Verb::Read { remote: addr, local: buf.addr, len: *len as u32 },
+                ));
+            }
+            bufs.push(buf);
+        }
+        (self.post_grouped(remote), bufs)
+    }
+
+    /// Blocking batched read: issue via [`ThreadCtx::read_many_async`],
+    /// wait once for the whole batch, and copy the results out. Like
+    /// [`ThreadCtx::read`], the completed READs prove placement of every
+    /// earlier write on the involved QPs, so those peers' unfenced
+    /// counters reset (the fence engine's fast path, amortized).
+    pub fn read_many(&self, reqs: &[(Region, u64, usize)]) -> Vec<Vec<u64>> {
+        let (key, bufs) = self.read_many_async(reqs);
+        self.wait(&key);
+        for (region, _, _) in reqs {
+            if region.node != self.me {
+                self.shared.unfenced[region.node as usize].store(0, Ordering::Relaxed);
+            }
+        }
+        bufs.into_iter().map(|b| b.to_vec()).collect()
+    }
+
+    /// Batched asynchronous writes: `(region, word offset, words)`
+    /// entries, grouped into one doorbell per distinct peer, ack
+    /// allocation amortized batch-wide. Local host targets are plain
+    /// stores. Completion (the returned key) does NOT imply placement —
+    /// fence for that, once, for the whole batch.
+    pub fn write_many(&self, writes: &[(Region, u64, &[u64])]) -> AckKey {
+        let mut remote: Vec<(crate::fabric::NodeId, Verb)> = Vec::new();
+        for (region, off, words) in writes {
+            let addr = region.at(*off);
+            if self.local_direct(region) {
+                self.node.arena().store_words(addr, words, false);
+            } else {
+                self.shared.unfenced[region.node as usize].fetch_add(1, Ordering::Relaxed);
+                remote.push((
+                    region.node,
+                    Verb::Write { remote: addr, data: Payload::from_words(words) },
+                ));
+            }
+        }
+        self.post_grouped(remote)
+    }
+
+    /// Shared tail of the `*_many` paths: allocate ack bits **once** for
+    /// the whole mixed-peer batch (one `fetch_or` per ack word), split
+    /// into one [`PostList`] per distinct peer — a doorbell cannot span
+    /// QPs — and post each under its single doorbell, preserving
+    /// per-peer submission order.
+    fn post_grouped(&self, remote: Vec<(crate::fabric::NodeId, Verb)>) -> AckKey {
+        if remote.is_empty() {
+            return AckKey::ready();
+        }
+        let mut wr_ids = Vec::with_capacity(remote.len());
+        let key = self.alloc.borrow_mut().alloc_batch(remote.len(), &mut wr_ids);
+        let mut lists: Vec<(crate::fabric::NodeId, PostList)> = Vec::new();
+        for (wr_id, (peer, verb)) in wr_ids.into_iter().zip(remote) {
+            let i = match lists.iter().position(|(p, _)| *p == peer) {
+                Some(i) => i,
+                None => {
+                    lists.push((peer, PostList::new()));
+                    lists.len() - 1
+                }
+            };
+            lists[i].1.push(Wqe { wr_id, verb, signaled: true });
+        }
+        for (peer, list) in lists {
+            let qp = self.shared.qp(&self.cluster, self.me, peer);
+            self.cluster.post_list(qp, list);
+        }
+        key
+    }
+
     // ---- writes ----------------------------------------------------
 
     /// Asynchronous write of `words` at `off` into `target`. Local targets
@@ -484,5 +600,80 @@ impl ThreadCtx {
         let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
         self.cluster.post(qp, Wqe { wr_id, verb: Verb::ZeroLenRead, signaled: true });
         AckKey::single(word, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::core::manager::Manager;
+    use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+
+    fn setup(n: usize, cfg: FabricConfig) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
+        let cluster = Cluster::new(n, cfg);
+        let mgrs =
+            (0..n as crate::fabric::NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+        (cluster, mgrs)
+    }
+
+    /// write_many + read_many round-trip across two remote peers and the
+    /// local node, on both delivery modes.
+    #[test]
+    fn batched_write_read_roundtrip() {
+        for cfg in [
+            FabricConfig::inline_ideal(),
+            FabricConfig::threaded(LatencyModel::fast_sim()),
+        ] {
+            let (cluster, mgrs) = setup(3, cfg);
+            let r0 = cluster.node(0).register_mr(8, false); // local to ctx
+            let r1 = cluster.node(1).register_mr(8, false);
+            let r2 = cluster.node(2).register_mr(8, false);
+            let ctx = mgrs[0].ctx();
+
+            let v1 = [10u64, 11];
+            let v2 = [20u64, 21, 22];
+            let v0 = [30u64];
+            let key = ctx.write_many(&[(r1, 2, &v1[..]), (r2, 0, &v2[..]), (r0, 0, &v0[..])]);
+            ctx.wait(&key);
+            // Completions don't imply placement — fence, then verify via
+            // batched reads (which also re-validate per-entry routing).
+            ctx.fence(super::FenceScope::Thread);
+            let out = ctx.read_many(&[(r1, 2, 2), (r2, 0, 3), (r0, 0, 1)]);
+            assert_eq!(out, vec![vec![10, 11], vec![20, 21, 22], vec![30]]);
+            assert_eq!(ctx.unfenced_peers(), 0, "read_many resets unfenced peers");
+        }
+    }
+
+    /// A large batch (several ack words) to one peer completes through a
+    /// single post_list call.
+    #[test]
+    fn post_list_large_batch_completes() {
+        let (cluster, mgrs) = setup(2, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let dst = cluster.node(1).register_mr(256, false);
+        let ctx = mgrs[0].ctx();
+        let reqs: Vec<_> = (0..200u64).map(|i| (dst, i, 1usize)).collect();
+        // Prefill via batched writes, then fence, then batched read-back.
+        let vals: Vec<[u64; 1]> = (0..200u64).map(|i| [i * 3]).collect();
+        let writes: Vec<_> =
+            (0..200usize).map(|i| (dst, i as u64, &vals[i][..])).collect();
+        ctx.write_many(&writes).wait();
+        ctx.fence(super::FenceScope::Pair(1));
+        let out = ctx.read_many(&reqs);
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(row, &vec![i as u64 * 3], "word {i}");
+        }
+    }
+
+    /// Empty batches short-circuit without touching the fabric.
+    #[test]
+    fn empty_batches_are_ready() {
+        let (_cluster, mgrs) = setup(2, FabricConfig::inline_ideal());
+        let ctx = mgrs[0].ctx();
+        assert!(ctx.post_list(1, Vec::new()).query());
+        assert!(ctx.write_many(&[]).query());
+        let (key, bufs) = ctx.read_many_async(&[]);
+        assert!(key.query());
+        assert!(bufs.is_empty());
     }
 }

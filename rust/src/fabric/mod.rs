@@ -34,8 +34,8 @@ pub mod verbs;
 pub use cq::{CompletionQueue, Cqe};
 pub use memory::{Arena, MrTable, Region, DEVICE_BASE};
 pub use network::{Cluster, NodeFabric};
-pub use qp::{Qp, QpId};
-pub use verbs::{Payload, Verb, Wqe};
+pub use qp::{Qp, QpId, Submission};
+pub use verbs::{Payload, PostList, Verb, Wqe};
 
 use std::time::Instant;
 
@@ -73,6 +73,12 @@ pub struct LatencyModel {
     /// Per-WQE NIC processing overhead; bounds per-QP op rate when the
     /// application pipelines many outstanding requests (window > 1).
     pub op_overhead_ns: u64,
+    /// Per-**doorbell** cost (the MMIO write that tells the NIC new WQEs
+    /// are ready). Charged once per `post` and once per `post_list`
+    /// regardless of batch size — the reason posting N work requests per
+    /// doorbell beats N scalar posts (paper §2.2's cheap asynchrony;
+    /// cf. Brock et al.'s op-aggregation results).
+    pub doorbell_ns: u64,
     /// Placement lag after completion, uniform in `[0, placement_lag_ns]`.
     /// This is the §2.2 "placement may happen during and after completion"
     /// window.
@@ -99,6 +105,7 @@ impl LatencyModel {
             send_ns: 0,
             per_word_ns: 0.0,
             op_overhead_ns: 0,
+            doorbell_ns: 0,
             placement_lag_ns: 0,
             mr_miss_ns: 0,
             mr_cache_entries: usize::MAX,
@@ -116,6 +123,7 @@ impl LatencyModel {
             send_ns: 4000,
             per_word_ns: 2.56,
             op_overhead_ns: 120,
+            doorbell_ns: 450,
             placement_lag_ns: 1200,
             mr_miss_ns: 900,
             mr_cache_entries: 64,
@@ -134,6 +142,7 @@ impl LatencyModel {
             send_ns: r.send_ns / 20,
             per_word_ns: r.per_word_ns / 20.0,
             op_overhead_ns: r.op_overhead_ns / 20,
+            doorbell_ns: r.doorbell_ns / 20,
             placement_lag_ns: r.placement_lag_ns / 20,
             mr_miss_ns: r.mr_miss_ns / 20,
             mr_cache_entries: r.mr_cache_entries,

@@ -11,8 +11,8 @@ use crate::util::queue::Queue;
 use super::cq::CompletionQueue;
 use super::memory::{Arena, MrTable, Region};
 use super::nic;
-use super::qp::{Qp, QpId};
-use super::verbs::{RecvMsg, Wqe};
+use super::qp::{Qp, QpId, Submission};
+use super::verbs::{PostList, RecvMsg, Wqe};
 use super::{Clock, DeliveryMode, FabricConfig, NodeId};
 
 /// One node's fabric endpoint: its network memory, MR table, shared
@@ -124,7 +124,7 @@ impl NodeFabric {
         self.qps.read().unwrap().len()
     }
 
-    pub(super) fn qp_engine_handle(&self, index: u32) -> (Arc<Queue<Wqe>>, NodeId) {
+    pub(super) fn qp_engine_handle(&self, index: u32) -> (Arc<Queue<Submission>>, NodeId) {
         let qps = self.qps.read().unwrap();
         let qp = &qps[index as usize];
         (qp.submission_queue(), qp.peer)
@@ -223,6 +223,30 @@ impl Cluster {
             }
             DeliveryMode::Inline => {
                 nic::execute_inline(&self.nodes, &self.cfg, qpid.node, qpid, qp.peer, wqe)
+            }
+        }
+    }
+
+    /// Post an ordered batch of work requests on a QP under a **single
+    /// doorbell** (the `ibv_post_send` WR-list analogue). In threaded
+    /// mode the whole list is enqueued with one lock round and one
+    /// engine wakeup, and only the head WQE pays `doorbell_ns`; in
+    /// inline mode the verbs execute synchronously in list order.
+    pub fn post_list(&self, qpid: QpId, list: PostList) {
+        if list.is_empty() {
+            return;
+        }
+        let node = &self.nodes[qpid.node as usize];
+        let qp = node.qp(qpid);
+        match self.cfg.delivery {
+            DeliveryMode::Threaded => {
+                qp.submit_list(list.into_wqes());
+                node.ring();
+            }
+            DeliveryMode::Inline => {
+                for wqe in list.into_wqes() {
+                    nic::execute_inline(&self.nodes, &self.cfg, qpid.node, qpid, qp.peer, wqe);
+                }
             }
         }
     }
@@ -356,6 +380,78 @@ mod tests {
         c.post(qp, Wqe { wr_id: 0, verb: Verb::Write { remote: dst.at(0), data: Payload::one(3) }, signaled: false });
         assert!(c.node(0).cq().is_empty());
         assert_eq!(c.node(1).arena().load(dst.at(0)), 3);
+    }
+
+    /// A post list executes in order on both delivery modes, and a
+    /// flushing verb inside the batch still forces earlier placement.
+    #[test]
+    fn post_list_in_order_inline_and_threaded() {
+        for threaded in [false, true] {
+            let cfg = if threaded {
+                FabricConfig::threaded(LatencyModel::fast_sim())
+            } else {
+                FabricConfig::inline_ideal()
+            };
+            let c = Cluster::new(2, cfg);
+            let dst = c.node(1).register_mr(16, false);
+            let src_buf = c.node(0).register_mr(16, false);
+            let qp = c.create_qp(0, 1);
+
+            let mut list = PostList::with_capacity(4);
+            list.push(wqe(1, Verb::Write { remote: dst.at(0), data: Payload::one(5) }));
+            list.push(wqe(2, Verb::Write { remote: dst.at(0), data: Payload::one(9) }));
+            // The READ flushes both writes, then observes the second.
+            list.push(wqe(3, Verb::Read { remote: dst.at(0), local: src_buf.at(0), len: 1 }));
+            c.post_list(qp, list);
+            for want in 1..=3u64 {
+                assert_eq!(c.node(0).cq().poll_one_blocking().wr_id, want, "per-QP order");
+            }
+            assert_eq!(c.node(0).arena().load(src_buf.at(0)), 9, "read after both writes");
+            // Empty lists are a no-op.
+            c.post_list(qp, PostList::new());
+            assert!(c.node(0).cq().is_empty());
+        }
+    }
+
+    /// Doorbell amortization: N writes in one post list reach their last
+    /// completion sooner than N scalar posts, because only the head pays
+    /// `doorbell_ns` (simulated-arrival argument, not wall clock).
+    #[test]
+    fn post_list_amortizes_doorbell() {
+        let mut lat = LatencyModel::ideal();
+        lat.doorbell_ns = 200_000; // exaggerate so wall-clock noise can't mask it
+        let n = 16u64;
+
+        let elapsed = |batched: bool| {
+            let c = Cluster::new(2, FabricConfig::threaded(lat.clone()));
+            let dst = c.node(1).register_mr(64, false);
+            let qp = c.create_qp(0, 1);
+            let t0 = std::time::Instant::now();
+            if batched {
+                let list: PostList = (0..n)
+                    .map(|i| wqe(i, Verb::Write { remote: dst.at(i), data: Payload::one(i) }))
+                    .collect();
+                c.post_list(qp, list);
+            } else {
+                for i in 0..n {
+                    c.post(qp, wqe(i, Verb::Write { remote: dst.at(i), data: Payload::one(i) }));
+                }
+            }
+            let mut seen = 0;
+            let mut out = Vec::new();
+            while seen < n as usize {
+                seen += c.node(0).cq().poll(64, &mut out);
+            }
+            t0.elapsed()
+        };
+        let scalar = elapsed(false);
+        let batched = elapsed(true);
+        // Scalar pays 16 × 200 µs of doorbells (≥ 3.2 ms); batched pays
+        // one. Require a conservative 2× separation.
+        assert!(
+            batched.as_secs_f64() * 2.0 < scalar.as_secs_f64(),
+            "batched {batched:?} not ≥2× faster than scalar {scalar:?}"
+        );
     }
 
     /// Threaded mode actually delivers pipelined ops and all complete.

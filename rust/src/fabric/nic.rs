@@ -4,8 +4,9 @@
 //! node's *outgoing* work requests:
 //!
 //! 1. drain each QP's submission queue, stamping an **arrival time**
-//!    (base latency + bandwidth term + MR-cache penalty), kept monotonic
-//!    per QP so same-QP ordering holds;
+//!    (base latency + bandwidth term + MR-cache penalty + a per-doorbell
+//!    charge — only the head of a batched post list pays it), kept
+//!    monotonic per QP so same-QP ordering holds;
 //! 2. when an arrival is due, execute the verb's remote effect:
 //!    * WRITE → post the completion *now*, but only enqueue the memory
 //!      stores as a **placement** event with an extra sampled lag
@@ -33,7 +34,7 @@ use crate::util::rng::Rng;
 
 use super::cq::Cqe;
 use super::network::NodeFabric;
-use super::qp::QpId;
+use super::qp::{QpId, Submission};
 use super::verbs::{RecvMsg, Verb, Wqe};
 use super::{Clock, FabricConfig, NodeId, DEVICE_BASE};
 
@@ -53,7 +54,7 @@ struct Placement {
 
 /// Per-QP engine state (owned exclusively by the engine thread).
 struct QpState {
-    rx: Arc<Queue<Wqe>>,
+    rx: Arc<Queue<Submission>>,
     peer: NodeId,
     inflight: VecDeque<InFlight>,
     placements: VecDeque<Placement>,
@@ -231,11 +232,17 @@ pub(super) fn engine_loop(
         for (idx, q) in qps.iter_mut().enumerate() {
             // 1. stamp new submissions
             let now = clock.now_ns();
-            while let Some(wqe) = q.rx.try_pop() {
+            while let Some(sub) = q.rx.try_pop() {
+                let wqe = sub.wqe;
                 let lat = verb_latency(&cfg, &nodes, &wqe, q.peer);
+                // Doorbell charge: only the head of a post list pays the
+                // MMIO cost; batch tails ride the same doorbell. This is
+                // the term that makes PostList batching measurable.
+                let db = if sub.rings_doorbell { cfg.latency.doorbell_ns } else { 0 };
                 // Per-QP serialization: the NIC cannot accept WQEs faster
                 // than op_overhead_ns apart → arrival monotone per QP.
-                let arr = (now + lat).max(q.last_arrival_ns + cfg.latency.op_overhead_ns);
+                let arr =
+                    (now + lat + db).max(q.last_arrival_ns + cfg.latency.op_overhead_ns + db);
                 q.last_arrival_ns = arr;
                 q.inflight.push_back(InFlight { due_ns: arr, wqe });
                 did_work = true;

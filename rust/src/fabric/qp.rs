@@ -8,6 +8,12 @@
 //! Ordering guarantees (paper §2.2) are enforced by the NIC engine, which
 //! consumes each QP's submissions strictly in FIFO order and keeps
 //! per-QP arrival times monotonic.
+//!
+//! Submissions arrive either one WQE per doorbell ([`Qp::submit`]) or as
+//! a **doorbell-batched list** ([`Qp::submit_list`]): only the head of a
+//! list rings the doorbell, the tail rides along for free. The engine
+//! charges `LatencyModel::doorbell_ns` once per doorbell, which is what
+//! makes batching measurable (see `bench::micro`'s ablation).
 
 use std::sync::Arc;
 
@@ -23,11 +29,20 @@ pub struct QpId {
     pub index: u32,
 }
 
+/// A work request as it sits in a submission queue: the WQE plus whether
+/// it paid for a doorbell ring (head of a post) or rode a predecessor's
+/// doorbell (tail of a batched [`PostList`](super::verbs::PostList)).
+#[derive(Clone, Debug)]
+pub struct Submission {
+    pub wqe: Wqe,
+    pub rings_doorbell: bool,
+}
+
 pub struct Qp {
     pub id: QpId,
     /// Target node of all verbs posted on this QP.
     pub peer: NodeId,
-    subq: Arc<Queue<Wqe>>,
+    subq: Arc<Queue<Submission>>,
 }
 
 impl Qp {
@@ -35,14 +50,27 @@ impl Qp {
         Qp { id, peer, subq: Arc::new(Queue::new()) }
     }
 
-    /// Enqueue a work request (threaded mode; the NIC engine drains it).
+    /// Enqueue a single work request (threaded mode; the NIC engine
+    /// drains it). One doorbell per call.
     #[inline]
     pub fn submit(&self, wqe: Wqe) {
-        self.subq.push(wqe);
+        self.subq.push(Submission { wqe, rings_doorbell: true });
+    }
+
+    /// Enqueue an ordered batch of work requests under a single
+    /// doorbell: one lock round, one wakeup, one `doorbell_ns` charge
+    /// for the whole list.
+    pub fn submit_list(&self, wqes: Vec<Wqe>) {
+        let mut first = true;
+        self.subq.push_batch(wqes.into_iter().map(|wqe| {
+            let sub = Submission { wqe, rings_doorbell: first };
+            first = false;
+            sub
+        }));
     }
 
     /// Engine-side drain handle.
-    pub fn submission_queue(&self) -> Arc<Queue<Wqe>> {
+    pub fn submission_queue(&self) -> Arc<Queue<Submission>> {
         self.subq.clone()
     }
 
@@ -69,7 +97,29 @@ mod tests {
         assert_eq!(qp.pending(), 4);
         let q = qp.submission_queue();
         for i in 0..4 {
-            assert_eq!(q.try_pop().unwrap().wr_id, i);
+            let sub = q.try_pop().unwrap();
+            assert_eq!(sub.wqe.wr_id, i);
+            assert!(sub.rings_doorbell, "scalar submits each ring the doorbell");
+        }
+    }
+
+    #[test]
+    fn batched_submission_single_doorbell() {
+        let qp = Qp::new(QpId { node: 0, index: 0 }, 1);
+        let wqes: Vec<Wqe> = (0..5)
+            .map(|i| Wqe {
+                wr_id: i,
+                verb: Verb::Write { remote: 0, data: Payload::one(i) },
+                signaled: true,
+            })
+            .collect();
+        qp.submit_list(wqes);
+        assert_eq!(qp.pending(), 5);
+        let q = qp.submission_queue();
+        for i in 0..5 {
+            let sub = q.try_pop().unwrap();
+            assert_eq!(sub.wqe.wr_id, i, "batch preserves FIFO order");
+            assert_eq!(sub.rings_doorbell, i == 0, "only the batch head rings");
         }
     }
 }

@@ -8,15 +8,27 @@
 //! The stack has three layers:
 //!
 //! * **L3 (this crate)** — the LOCO library: a simulated RDMA fabric
-//!   ([`fabric`]), the channel/manager core ([`core`]), the channel
-//!   catalogue ([`channels`]), applications ([`apps`]: linearizable
-//!   kvstore, DC/DC power controller), comparator baselines
+//!   ([`fabric`]), the channel/manager core ([`core`](crate::core)), the
+//!   channel catalogue ([`channels`]), applications ([`apps`]:
+//!   linearizable kvstore, DC/DC power controller), comparator baselines
 //!   ([`baselines`]), workload generators ([`workload`]) and the
 //!   benchmark harness ([`bench`]).
 //! * **L2/L1 (build-time Python)** — JAX model + Pallas kernels for the
 //!   power-controller physics and the kvstore bulk-checksum path,
 //!   AOT-lowered to HLO text in `artifacts/` and executed from Rust via
-//!   the PJRT client in [`runtime`]. Python never runs at request time.
+//!   the PJRT client in [`runtime`]. Python never runs at request time;
+//!   this offline build stubs the PJRT client and every compute path
+//!   falls back to a bit-identical native mirror.
+//!
+//! Operations issue **asynchronously**: every remote verb (or batch of
+//! verbs — see [`fabric::PostList`] and the `*_many` APIs on
+//! [`core::ctx::ThreadCtx`](crate::core::ctx::ThreadCtx)) returns an
+//! [`core::ack::AckKey`](crate::core::ack::AckKey) that completes when
+//! the NIC delivers the matching completions, so callers overlap many
+//! operations per doorbell exactly as the paper's backend does on real
+//! ConnectX hardware.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod apps;
 pub mod baselines;
@@ -32,17 +44,31 @@ pub mod workload;
 pub use crate::core::manager::Manager;
 pub use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. `Display`/`Error` are hand-implemented (the
+/// offline build carries no proc-macro dependencies such as `thiserror`).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Error {
-    #[error("channel setup failed: {0}")]
+    /// Channel setup failed.
     Setup(String),
-    #[error("operation timed out: {0}")]
+    /// Operation timed out.
     Timeout(String),
-    #[error("capacity exhausted: {0}")]
+    /// Capacity exhausted.
     Capacity(String),
-    #[error("runtime error: {0}")]
+    /// Runtime error.
     Runtime(String),
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Setup(m) => write!(f, "channel setup failed: {m}"),
+            Error::Timeout(m) => write!(f, "operation timed out: {m}"),
+            Error::Capacity(m) => write!(f, "capacity exhausted: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;

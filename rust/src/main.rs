@@ -140,8 +140,11 @@ fn main() {
             for (l, v) in micro::lock_handover(lat.clone(), 300) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
-            for (l, v) in micro::mr_pooling(lat, 1000) {
+            for (l, v) in micro::mr_pooling(lat.clone(), 1000) {
                 t.row(&[l, format!("{v:.2} µs/op")]);
+            }
+            for (l, v) in micro::multi_get_batch_vs_scalar(lat, 16, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
             }
             t.print();
         }

@@ -1,62 +1,74 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! PJRT runtime facade: loads the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and executes them from Rust.
 //!
-//! This is the only place the compute layers (L1 Pallas kernels, L2 JAX
-//! model) touch the serving path — as *compiled XLA executables*, never
-//! as Python. The interchange format is HLO **text** (see
-//! `python/compile/aot.py`): jax ≥ 0.5 emits HloModuleProtos with 64-bit
-//! instruction ids that the crate's xla_extension 0.5.1 rejects, while
-//! the text parser reassigns ids and round-trips cleanly.
+//! In the full three-layer build this is the only place the compute
+//! layers (L1 Pallas kernels, L2 JAX model) touch the serving path — as
+//! *compiled XLA executables* through a PJRT CPU client, never as
+//! Python. The interchange format is HLO **text** (see
+//! `python/compile/aot.py`).
+//!
+//! **This offline build has no PJRT client** (the `xla` bindings cannot
+//! be vendored here), so [`Runtime::cpu`] returns
+//! [`Error::Runtime`](crate::Error::Runtime) and every caller falls back
+//! to its bit-identical native mirror:
+//!
+//! * the power controller uses
+//!   [`converter_step_native`](crate::apps::power::converter_step_native)
+//!   / [`controller_step_native`](crate::apps::power::controller_step_native),
+//!   pinned to the Python model's constants by `python/tests`;
+//! * the kvstore prefill path computes checksums with
+//!   [`fnv64`](crate::util::fnv64), the same function the Pallas
+//!   checksum kernel implements (`python/compile/kernels/checksum.py`).
+//!
+//! The API surface (types and signatures) is kept identical to the real
+//! client so swapping the PJRT implementation back in is a local change.
 
 use std::path::Path;
-use std::sync::Mutex;
 
 use crate::{Error, Result};
 
-/// A PJRT CPU client plus the executables loaded into it.
-pub struct Runtime {
-    client: xla::PjRtClient,
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT runtime unavailable in this offline build; \
+         compute paths use the native mirrors"
+            .to_string(),
+    )
 }
 
-fn xerr(e: xla::Error) -> Error {
-    Error::Runtime(e.to_string())
+/// A PJRT CPU client plus the executables loaded into it. In this build
+/// construction always fails gracefully (see the module docs).
+pub struct Runtime {
+    _private: (),
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU PJRT client. Always returns
+    /// [`Error::Runtime`](crate::Error::Runtime) in the offline build;
+    /// callers are expected to fall back to their native mirrors.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Runtime { client })
+        Err(unavailable())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
     /// Load and compile an HLO-text artifact.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
-            Error::Runtime(format!(
-                "loading {} failed ({e}); run `make artifacts` first",
-                path.display()
-            ))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xerr)?;
-        Ok(Executable { exe: Mutex::new(exe), name: path.display().to_string() })
+        let _ = path;
+        Err(unavailable())
     }
 }
 
-/// One compiled artifact. Executions are serialized by a mutex: the PJRT
-/// CPU client is not re-entrant per-executable, and LOCO's hot paths call
-/// from a single driver thread anyway.
+/// One compiled artifact (never constructible in the offline build; the
+/// type exists so the `Compute::Hlo` path in
+/// [`apps::power`](crate::apps::power) keeps compiling unchanged).
 pub struct Executable {
-    exe: Mutex<xla::PjRtLoadedExecutable>,
+    _private: (),
     name: String,
 }
 
-/// A typed input buffer for [`Executable::run`].
+/// A typed input buffer for [`Executable::run`]: data plus dims.
 pub enum Input<'a> {
     F32(&'a [f32], &'a [i64]),
     F64(&'a [f64], &'a [i64]),
@@ -99,48 +111,11 @@ impl Executable {
         &self.name
     }
 
-    /// Execute with the given inputs. The artifact was lowered with
-    /// `return_tuple=True`, so the result is always a tuple; each element
-    /// is converted per its element type.
+    /// Execute with the given inputs. Unreachable in the offline build
+    /// (no [`Executable`] can be constructed), kept for API parity.
     pub fn run(&self, inputs: &[Input<'_>]) -> Result<Vec<Output>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let lit = match inp {
-                Input::F32(data, dims) => {
-                    xla::Literal::vec1(data).reshape(dims).map_err(xerr)?
-                }
-                Input::F64(data, dims) => {
-                    xla::Literal::vec1(data).reshape(dims).map_err(xerr)?
-                }
-                Input::U64(data, dims) => {
-                    xla::Literal::vec1(data).reshape(dims).map_err(xerr)?
-                }
-            };
-            literals.push(lit);
-        }
-        let exe = self.exe.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        drop(exe);
-        let parts = result.to_tuple().map_err(xerr)?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for p in parts {
-            let ty = p.ty().map_err(xerr)?;
-            let out = match ty {
-                xla::ElementType::F32 => Output::F32(p.to_vec::<f32>().map_err(xerr)?),
-                xla::ElementType::F64 => Output::F64(p.to_vec::<f64>().map_err(xerr)?),
-                xla::ElementType::U64 => Output::U64(p.to_vec::<u64>().map_err(xerr)?),
-                other => {
-                    return Err(Error::Runtime(format!(
-                        "{}: unsupported output element type {other:?}",
-                        self.name
-                    )))
-                }
-            };
-            outs.push(out);
-        }
-        Ok(outs)
+        let _ = inputs;
+        Err(unavailable())
     }
 }
 
@@ -155,68 +130,21 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 mod tests {
     use super::*;
 
-    /// These tests require `make artifacts` to have produced the HLO
-    /// files; they are skipped (not failed) if artifacts are missing so
-    /// `cargo test` works on a fresh checkout.
-    fn artifact(name: &str) -> Option<Executable> {
-        let path = artifacts_dir().join(name);
-        if !path.exists() {
-            eprintln!("skipping: {} missing (run `make artifacts`)", path.display());
-            return None;
-        }
-        let rt = Runtime::cpu().expect("pjrt cpu client");
-        Some(rt.load(path).expect("load artifact"))
+    /// The stub must fail *gracefully*: an Err every caller can route to
+    /// its native mirror, never a panic.
+    #[test]
+    fn stub_errors_cleanly() {
+        let err = Runtime::cpu().err().expect("stub cpu() must fail");
+        assert!(matches!(err, Error::Runtime(_)));
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
     }
 
     #[test]
-    fn checksum_artifact_matches_rust_fnv64() {
-        let Some(exe) = artifact("checksum4.hlo.txt") else { return };
-        // 1024 rows × 4 words; first 8 rows are the shared golden vectors
-        // that python/tests/test_kernels.py pins too.
-        let mut rows: Vec<u64> = (0..4096).map(|i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15)).collect();
-        rows.truncate(4096);
-        let out = exe.run(&[Input::U64(&rows, &[1024, 4])]).unwrap();
-        let got = out[0].as_u64();
-        for r in 0..1024 {
-            let expect = crate::util::fnv64(&rows[r * 4..r * 4 + 4]);
-            assert_eq!(got[r], expect, "row {r}");
-        }
-    }
-
-    #[test]
-    fn converter_artifact_matches_native_mirror() {
-        let Some(exe) = artifact("converter1.hlo.txt") else { return };
-        let (i0, v0, d) = (1.5f64, 10.0f64, 0.7f64);
-        let out = exe
-            .run(&[Input::F64(&[i0, v0], &[2, 1]), Input::F64(&[d], &[1])])
-            .unwrap();
-        let s2 = out[0].as_f64();
-        let v = out[1].as_f64();
-        let (ei, ev) = crate::apps::power::converter_step_native(i0, v0, d);
-        assert!((s2[0] - ei).abs() < 1e-12, "i: {} vs {}", s2[0], ei);
-        assert!((s2[1] - ev).abs() < 1e-12, "v: {} vs {}", s2[1], ev);
-        assert!((v[0] - ev).abs() < 1e-12);
-    }
-
-    #[test]
-    fn controller_artifact_matches_native_mirror() {
-        let Some(exe) = artifact("controller4.hlo.txt") else { return };
-        let v_meas = [20.0f64, 24.0, 30.0, 0.0];
-        let integ = [0.0f64; 4];
-        let dt = [40e-6f64];
-        let out = exe
-            .run(&[
-                Input::F64(&v_meas, &[4]),
-                Input::F64(&integ, &[4]),
-                Input::F64(&dt, &[1]),
-            ])
-            .unwrap();
-        let duty = out[0].as_f64();
-        let integ2 = out[1].as_f64();
-        for i in 0..4 {
-            let (ed, eg) = crate::apps::power::controller_step_native(v_meas[i], integ[i], dt[0]);
-            assert!((duty[i] - ed).abs() < 1e-12, "duty[{i}]: {} vs {}", duty[i], ed);
-            assert!((integ2[i] - eg).abs() < 1e-12);
+    fn artifacts_dir_default() {
+        // Only exercise the default branch when the env var is unset, so
+        // the test is robust to ambient configuration.
+        if std::env::var_os("LOCO_ARTIFACTS").is_none() {
+            assert_eq!(artifacts_dir(), std::path::PathBuf::from("artifacts"));
         }
     }
 }

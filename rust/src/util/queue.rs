@@ -24,6 +24,15 @@ impl<T> Queue<T> {
         self.cv.notify_one();
     }
 
+    /// Push a batch of items under one lock acquisition and one wakeup.
+    /// The fabric's doorbell-batched submission path uses this so an
+    /// N-verb post list costs one mutex round instead of N.
+    pub fn push_batch(&self, items: impl IntoIterator<Item = T>) {
+        let mut q = self.inner.lock().unwrap();
+        q.extend(items);
+        self.cv.notify_all();
+    }
+
     pub fn try_pop(&self) -> Option<T> {
         self.inner.lock().unwrap().pop_front()
     }
@@ -86,6 +95,18 @@ mod tests {
             q.push(i);
         }
         for i in 0..10 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn push_batch_preserves_order() {
+        let q = Queue::new();
+        q.push(0u64);
+        q.push_batch(1..=5u64);
+        q.push_batch(std::iter::empty());
+        for i in 0..=5 {
             assert_eq!(q.try_pop(), Some(i));
         }
         assert_eq!(q.try_pop(), None);
