@@ -1,15 +1,22 @@
 //! Regenerates Fig. 5 (§7.2): kvstore throughput across
 //! {read-only, 50/50, write-only} × {uniform, zipfian} × node/thread
-//! scaling × window size, for LOCO / Sherman / Scythe / Redis.
+//! scaling × window size, for LOCO / Sherman / Scythe / Redis — plus the
+//! doorbell-batching and locality-tier (hot-key cache) ablations.
 //!
 //! Expected shape (paper): LOCO wins read-only everywhere (single
 //! slot-sized read vs Sherman's whole-leaf + validation and Scythe/Redis
 //! RPC); Sherman wins uniform writes at window 3 (lock/data colocation);
 //! LOCO wins zipfian writes (ticket vs TAS under contention); LOCO with
 //! window 128 gains substantially on reads; Redis trails everything.
+//! The cache ablation adds the locality-tier trajectory: Zipfian reads
+//! with the cache on clear the uncached line by a wide margin while
+//! uniform reads stay flat.
+//!
+//! Set `LOCO_BENCH_JSON=BENCH_fig5.json` to export every row for the CI
+//! perf-trajectory artifact.
 
-use loco::bench::fig5::{loco_batch_ablation, run_cell, Fig5Cell, KvSystem};
-use loco::bench::{geomean_runs, Scale};
+use loco::bench::fig5::{loco_batch_ablation, loco_cache_ablation, run_cell, Fig5Cell, KvSystem};
+use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
 use loco::workload::{KeyDist, OpMix};
 
@@ -18,6 +25,7 @@ fn main() {
     let keys: u64 = if scale.full { 1 << 20 } else { 1 << 14 };
     let nodes = 3;
     let threads = 2;
+    let mut json = BenchJson::new();
     println!(
         "Fig. 5 — kvstore throughput ({} latency, geomean of {} runs, {} keys, {} nodes × {} threads)",
         if scale.full { "roce25" } else { "fast_sim (÷20)" },
@@ -44,6 +52,11 @@ fn main() {
                 let mops = geomean_runs(scale.runs, || {
                     run_cell(&cell, scale.latency.clone(), scale.redis_latency())
                 });
+                json.add(
+                    "fig5_grid",
+                    &format!("{} {} {} w3", mix.label(), dist.label(), system.label()),
+                    mops,
+                );
                 t.row(&[
                     mix.label(),
                     dist.label().into(),
@@ -66,6 +79,11 @@ fn main() {
             let mops = geomean_runs(scale.runs, || {
                 run_cell(&cell, scale.latency.clone(), scale.redis_latency())
             });
+            json.add(
+                "fig5_grid",
+                &format!("{} {} LOCO w128", mix.label(), dist.label()),
+                mops,
+            );
             t.row(&[
                 mix.label(),
                 dist.label().into(),
@@ -94,6 +112,7 @@ fn main() {
             let mops = geomean_runs(scale.runs, || {
                 run_cell(&cell, scale.latency.clone(), scale.redis_latency())
             });
+            json.add("fig5_scaling", &format!("{} nodes {}", nodes, system.label()), mops);
             t2.row(&[nodes.to_string(), system.label().into(), format!("{mops:.4}")]);
         }
     }
@@ -107,10 +126,31 @@ fn main() {
             loco_batch_ablation(nodes, threads, keys, batch, scale.secs, scale.latency.clone())
         });
         for (label, mops) in rows {
+            json.add("fig5_batch_ablation", &label, mops);
             t3.row(&[label, format!("{mops:.4}")]);
         }
     }
     t3.print();
+
+    // Locality-tier ablation: hot-key cache off/on × uniform/zipfian
+    // (read-only, scalar gets). The zipfian cache=on row is the
+    // locality-tier win; the uniform rows pin the no-regression bar.
+    let mut t4 = Table::new(&["variant", "Mops/s (read-only)"]);
+    let rows = geomean_rows(scale.runs, || {
+        loco_cache_ablation(nodes, threads, keys, scale.secs, scale.latency.clone())
+    });
+    for (label, mops) in rows {
+        json.add("fig5_cache_ablation", &label, mops);
+        t4.row(&[label, format!("{mops:.4}")]);
+    }
+    t4.print();
+
+    if let Some(path) = BenchJson::path_from_env() {
+        match json.write(&path) {
+            Ok(()) => println!("\nwrote perf trajectory to {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
 }
 
 /// Geomean each row of a multi-row measurement across `runs` calls.

@@ -54,6 +54,13 @@ fn main() {
         }
     }
 
+    // Locality tier: Zipfian-0.99 gets with the hot-key cache off vs on
+    // (the ≥3× acceptance bar lives on this pair).
+    let cache_rows = micro::cached_get_zipfian(lat.clone(), 8192, 20_000);
+    for (l, v) in &cache_rows {
+        t.row(&["locality tier".into(), l.clone(), format!("{v:.1} Kops/s")]);
+    }
+
     let pooling = micro::mr_pooling(lat, 4000);
     for (l, v) in &pooling {
         t.row(&["MR pooling (Fig. 4 mechanism)".into(), l.clone(), format!("{v:.2} µs/op")]);
@@ -81,6 +88,20 @@ fn main() {
     } else {
         eprintln!(
             "WARN: multi_get batch=16 only {batched:.1} vs scalar {scalar:.1} Kops/s (<2×)"
+        );
+    }
+
+    // Isolated-run sanity: the locality-tier acceptance bar (≥3×).
+    let (uncached, cached) = (cache_rows[0].1, cache_rows[1].1);
+    if cached >= uncached * 3.0 {
+        println!(
+            "locality tier bar met: zipfian cached get at {cached:.1} Kops/s \
+             = {:.1}× the uncached path ({uncached:.1} Kops/s)",
+            cached / uncached
+        );
+    } else {
+        eprintln!(
+            "WARN: cached zipfian get only {cached:.1} vs uncached {uncached:.1} Kops/s (<3×)"
         );
     }
 }

@@ -97,21 +97,24 @@ impl Gate {
     }
 }
 
-fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
-    let n = cell.nodes;
-    let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
+/// Build an `nodes`-node LOCO cluster with `cfg` and prefill the
+/// keyspace to the paper's 80 % fill, hash-partitioned with one loader
+/// thread per node (shared by the Fig. 5 cell runner and ablations).
+fn loco_prefilled(
+    nodes: usize,
+    keys: u64,
+    cfg: KvConfig,
+    lat: LatencyModel,
+) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).with_mem_words(1 << 23));
     let mgrs: Vec<Arc<Manager>> =
-        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
-    let cfg = KvConfig {
-        slots_per_node: (cell.keys as usize).div_ceil(n) + 64,
-        ..Default::default()
-    };
-    let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
     for kv in &kvs {
         kv.wait_ready(Duration::from_secs(60));
     }
-    // Prefill 80 %, hash-partitioned.
-    let loaded = (cell.keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
+    let loaded = (keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
     let prefill: Vec<_> = mgrs
         .iter()
         .zip(&kvs)
@@ -130,6 +133,16 @@ fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     for h in prefill {
         h.join().unwrap();
     }
+    (cluster, mgrs, kvs)
+}
+
+fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
+    let n = cell.nodes;
+    let cfg = KvConfig {
+        slots_per_node: (cell.keys as usize).div_ceil(n) + 64,
+        ..Default::default()
+    };
+    let (_cluster, mgrs, kvs) = loco_prefilled(n, cell.keys, cfg, lat);
 
     let gate = Gate::new();
     let handles: Vec<_> = (0..n)
@@ -208,37 +221,11 @@ pub fn loco_batch_ablation(
 ) -> Vec<(String, f64)> {
     let mut rows = Vec::new();
     for batched in [false, true] {
-        let cluster = Cluster::new(nodes, FabricConfig::threaded(lat.clone()).with_mem_words(1 << 23));
-        let mgrs: Vec<Arc<Manager>> =
-            (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
         let cfg = KvConfig {
             slots_per_node: (keys as usize).div_ceil(nodes) + 64,
             ..Default::default()
         };
-        let kvs: Vec<Arc<KvStore>> =
-            mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
-        for kv in &kvs {
-            kv.wait_ready(Duration::from_secs(60));
-        }
-        let loaded = (keys as f64 * crate::workload::ycsb::PAPER_FILL) as u64;
-        let prefill: Vec<_> = mgrs
-            .iter()
-            .zip(&kvs)
-            .enumerate()
-            .map(|(i, (m, kv))| {
-                let m = m.clone();
-                let kv = kv.clone();
-                std::thread::spawn(move || {
-                    let ctx = m.ctx();
-                    let mine: Vec<u64> =
-                        (0..loaded).filter(|&k| kv.home_of(k) == i as NodeId).collect();
-                    kv.prefill_local(&ctx, &mine, |k| vec![k], None).unwrap();
-                })
-            })
-            .collect();
-        for h in prefill {
-            h.join().unwrap();
-        }
+        let (_cluster, mgrs, kvs) = loco_prefilled(nodes, keys, cfg, lat.clone());
 
         let gate = Gate::new();
         let handles: Vec<_> = (0..nodes)
@@ -286,6 +273,78 @@ pub fn loco_batch_ablation(
             "LOCO scalar get loop".to_string()
         };
         rows.push((label, gate.mops(secs)));
+    }
+    rows
+}
+
+/// Locality-tier ablation on the Fig. 5 read workload: scalar `get`
+/// workers over uniform vs Zipfian θ=0.99 keys, hot-key cache off vs on
+/// (Zipfian-aware sizing; cache=on labels carry the aggregate hit
+/// rate). Rows: (label, aggregate Mops/s); run by `cargo bench --bench
+/// fig5_kvstore`, which exports them to `BENCH_fig5.json` when
+/// `LOCO_BENCH_JSON` is set (the CI perf trajectory).
+pub fn loco_cache_ablation(
+    nodes: usize,
+    threads: usize,
+    keys: u64,
+    secs: f64,
+    lat: LatencyModel,
+) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
+        for cached in [false, true] {
+            let mut cfg = KvConfig {
+                slots_per_node: (keys as usize).div_ceil(nodes) + 64,
+                ..Default::default()
+            };
+            if cached {
+                cfg = cfg.with_zipfian_cache(keys);
+            }
+            let (_cluster, mgrs, kvs) = loco_prefilled(nodes, keys, cfg, lat.clone());
+
+            let gate = Gate::new();
+            let handles: Vec<_> = (0..nodes)
+                .flat_map(|ni| (0..threads).map(move |t| (ni, t)))
+                .map(|(ni, t)| {
+                    let m = mgrs[ni].clone();
+                    let kv = kvs[ni].clone();
+                    let gate = gate.clone();
+                    std::thread::spawn(move || {
+                        let ctx = m.ctx();
+                        let mut gen = WorkloadGen::new(
+                            keys,
+                            dist,
+                            OpMix::READ_ONLY,
+                            (ni * 1000 + t) as u64 + 1,
+                        );
+                        gate.worker_ready_and_wait();
+                        let mut ops = 0u64;
+                        while !gate.stop.load(Ordering::Relaxed) {
+                            if let Op::Read { key } = gen.next_op() {
+                                let _ = kv.get(&ctx, key);
+                                ops += 1;
+                            }
+                        }
+                        gate.ops.fetch_add(ops, Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            gate.run_window((nodes * threads) as u64, secs);
+            for h in handles {
+                h.join().unwrap();
+            }
+            let label = if cached {
+                let (hits, total) = kvs.iter().map(|kv| kv.cache_stats()).fold(
+                    (0u64, 0u64),
+                    |(h, t), s| (h + s.hits, t + s.hits + s.misses),
+                );
+                let rate = if total == 0 { 0.0 } else { hits as f64 / total as f64 * 100.0 };
+                format!("LOCO {} cache=on (hit {rate:.0} %)", dist.label())
+            } else {
+                format!("LOCO {} cache=off", dist.label())
+            };
+            rows.push((label, gate.mops(secs)));
+        }
     }
     rows
 }
@@ -469,6 +528,17 @@ mod tests {
         let rows = loco_batch_ablation(2, 1, 2048, 16, 0.15, LatencyModel::fast_sim());
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|(_, mops)| *mops > 0.0), "{rows:?}");
+    }
+
+    /// The cache ablation reports all four (dist × cache) cells and the
+    /// Zipfian cached cell records hits.
+    #[test]
+    fn cache_ablation_runs() {
+        let rows = loco_cache_ablation(2, 1, 2048, 0.15, LatencyModel::fast_sim());
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|(_, mops)| *mops > 0.0), "{rows:?}");
+        assert!(rows[3].0.contains("cache=on"), "{rows:?}");
+        assert!(!rows[3].0.contains("hit 0 %"), "zipfian cache never hit: {rows:?}");
     }
 
     #[test]

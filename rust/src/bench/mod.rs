@@ -62,3 +62,47 @@ pub fn geomean_runs(runs: usize, mut f: impl FnMut() -> f64) -> f64 {
     let samples: Vec<f64> = (0..runs).map(|_| f()).collect();
     crate::metrics::geomean(&samples)
 }
+
+/// Hand-rolled JSON report for CI perf trajectories (no serde in the
+/// offline build). Benches add `(bench, label, value)` rows and write
+/// the file named by `LOCO_BENCH_JSON`; CI uploads it as the
+/// `BENCH_fig5.json` artifact so throughput per config is tracked
+/// PR over PR.
+#[derive(Default)]
+pub struct BenchJson {
+    rows: Vec<(String, String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new() -> BenchJson {
+        BenchJson::default()
+    }
+
+    /// Destination from the `LOCO_BENCH_JSON` environment variable.
+    pub fn path_from_env() -> Option<String> {
+        std::env::var("LOCO_BENCH_JSON").ok().filter(|p| !p.is_empty())
+    }
+
+    pub fn add(&mut self, bench: &str, label: &str, value: f64) {
+        self.rows.push((bench.to_string(), label.to_string(), value));
+    }
+
+    /// Write `{"rows": [{"bench": …, "label": …, "value": …}, …]}`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::from("{\n  \"rows\": [\n");
+        for (i, (bench, label, value)) in self.rows.iter().enumerate() {
+            let sep = if i + 1 == self.rows.len() { "" } else { "," };
+            out.push_str(&format!(
+                "    {{\"bench\": \"{}\", \"label\": \"{}\", \"value\": {:.6}}}{sep}\n",
+                esc(bench),
+                esc(label),
+                value
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)
+    }
+}

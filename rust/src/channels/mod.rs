@@ -16,10 +16,14 @@
 //!   messages and SST-based receiver acknowledgements.
 //! * [`shared_queue`] — globally consistent MPMC FIFO queue, striped
 //!   across participants (cyclic ring queue adapted for RDMA).
+//! * [`read_cache`] — bounded per-node hot-key value cache with
+//!   epoch-validated fills and broadcast invalidation (the kvstore's
+//!   locality tier).
 
 pub mod atomic_var;
 pub mod barrier;
 pub mod owned_var;
+pub mod read_cache;
 pub mod ringbuffer;
 pub mod shared_queue;
 pub mod sst;
@@ -28,6 +32,7 @@ pub mod ticket_lock;
 pub use atomic_var::AtomicVar;
 pub use barrier::Barrier;
 pub use owned_var::OwnedVar;
+pub use read_cache::ReadCache;
 pub use ringbuffer::{RingReceiver, RingSender};
 pub use shared_queue::SharedQueue;
 pub use sst::Sst;

@@ -202,7 +202,7 @@ impl OwnedVar {
             let buf = ctx.read(own, 0, self.slot);
             if self.words == 1 {
                 ctx.local_store(self.cache, 0, buf[0]);
-                return buf;
+                return buf.to_vec();
             }
             let (value, ck) = buf.split_at(self.words);
             if fnv64(value) == ck[0] {

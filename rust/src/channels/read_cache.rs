@@ -1,0 +1,327 @@
+//! `read_cache` — a bounded per-node hot-key value cache, the second leg
+//! of the kvstore's **locality tier** (paper §1/§7: channel objects
+//! should let the programmer *exploit* locality rather than hide it).
+//!
+//! Skewed workloads (Zipfian θ=0.99, the paper's §7.2 distribution) read
+//! the same handful of keys over and over; without a cache every repeat
+//! `get` pays a full remote READ for bytes fetched microseconds ago. The
+//! read cache serves those repeats from local memory while preserving
+//! the kvstore's consistency story:
+//!
+//! * **Hit rule.** An entry is stored as `(key → value, counter)` where
+//!   `counter` is the slot-reuse generation from the location index. A
+//!   hit is served only when the caller's *current* index entry carries
+//!   the same counter — a key that was deleted (index entry gone) or
+//!   re-inserted (new counter) can never be served stale.
+//! * **Invalidation.** In-place updates don't bump the counter, so the
+//!   kvstore broadcasts invalidations on its (already running) tracker
+//!   ring; the tracker applies them here before acknowledging. A
+//!   mutation therefore cannot return until every node's cache has
+//!   dropped the key.
+//! * **Fill/invalidate race.** A reader may fetch an old value remotely,
+//!   get descheduled, and try to insert it *after* the invalidation was
+//!   applied — re-poisoning the cache forever. Each cache shard keeps a
+//!   **fill epoch**: readers snapshot it (via [`ReadCache::begin_fill`])
+//!   before issuing the remote READ, and [`ReadCache::fill`] rejects the
+//!   insert if the shard's epoch moved since. Invalidation bumps the
+//!   epoch under the shard lock, closing the race.
+//!
+//! Capacity is bounded; eviction is CLOCK-style second chance (hits set
+//! a reference bit, the evictor clears bits until it finds a cold
+//! entry), which under Zipfian skew keeps the hot head pinned.
+//!
+//! # Examples
+//!
+//! ```
+//! use loco::channels::read_cache::ReadCache;
+//!
+//! let cache = ReadCache::new(256);
+//! // Miss: nothing cached for (key=7, counter=1).
+//! assert_eq!(cache.lookup(7, 1), None);
+//! // Fill under an epoch token, as the kvstore read path does.
+//! let token = cache.begin_fill(7);
+//! assert!(cache.fill(token, 7, 1, &[42]));
+//! assert_eq!(cache.lookup(7, 1), Some(vec![42]));
+//! // A new slot generation (counter 2) never hits the stale entry.
+//! assert_eq!(cache.lookup(7, 2), None);
+//! // An invalidation between begin_fill and fill rejects the fill.
+//! let token = cache.begin_fill(8);
+//! cache.invalidate(8);
+//! assert!(!cache.fill(token, 8, 1, &[9]));
+//! assert_eq!(cache.lookup(8, 1), None);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Minimum shard count; scales up with capacity to keep the per-shard
+/// mutex uncontended (the cache shards are disjoint from the location
+/// index's shards — a cache lock never delays an index reader).
+const MIN_SHARDS: usize = 8;
+const MAX_SHARDS: usize = 64;
+
+struct CacheEntry {
+    value: Box<[u64]>,
+    counter: u64,
+    /// CLOCK reference bit.
+    hot: bool,
+}
+
+struct CacheShard {
+    /// Fill epoch: bumped by every invalidation of a key in this shard.
+    epoch: AtomicU64,
+    map: Mutex<HashMap<u64, CacheEntry>>,
+}
+
+/// Epoch snapshot taken before a remote READ; consumed by
+/// [`ReadCache::fill`].
+#[derive(Clone, Copy, Debug)]
+pub struct FillToken {
+    shard: usize,
+    epoch: u64,
+}
+
+/// Cumulative counters (monotonic; sampled by benches and tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fills: u64,
+    pub rejected_fills: u64,
+    pub invalidations: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The bounded hot-key value cache. See the module docs for the
+/// validation protocol.
+pub struct ReadCache {
+    shards: Box<[CacheShard]>,
+    shard_mask: u64,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    fills: AtomicU64,
+    rejected_fills: AtomicU64,
+    invalidations: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ReadCache {
+    /// A cache holding at most ~`capacity` entries.
+    pub fn new(capacity: usize) -> ReadCache {
+        let shards = (capacity / 32).next_power_of_two().clamp(MIN_SHARDS, MAX_SHARDS);
+        ReadCache {
+            shards: (0..shards)
+                .map(|_| CacheShard { epoch: AtomicU64::new(0), map: Mutex::new(HashMap::new()) })
+                .collect(),
+            shard_mask: shards as u64 - 1,
+            per_shard_cap: capacity.div_ceil(shards).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            fills: AtomicU64::new(0),
+            rejected_fills: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Zipfian-aware sizing (§7.2's θ=0.99 skew): under YCSB-C Zipfian
+    /// the most popular `c` of `n` keys draw roughly `ln c / ln n` of
+    /// all accesses, so a cache holding a quarter of the keyspace
+    /// already absorbs the large majority of reads; beyond 64 Ki entries
+    /// the marginal hit rate no longer pays for the memory.
+    pub fn zipfian_capacity(keyspace: u64) -> usize {
+        (keyspace as usize / 4).clamp(256, 1 << 16)
+    }
+
+    #[inline]
+    fn shard_index(&self, key: u64) -> usize {
+        (crate::util::mix64(key) & self.shard_mask) as usize
+    }
+
+    /// Serve `key` if the cached generation matches the caller's current
+    /// index `counter`. A stale generation is dropped on sight.
+    pub fn lookup(&self, key: u64, counter: u64) -> Option<Vec<u64>> {
+        let shard = &self.shards[self.shard_index(key)];
+        let mut map = shard.map.lock().unwrap();
+        let stale = match map.get_mut(&key) {
+            Some(e) if e.counter == counter => {
+                e.hot = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(e.value.to_vec());
+            }
+            Some(_) => true, // stale generation: drop it below
+            None => false,
+        };
+        if stale {
+            map.remove(&key);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Snapshot the fill epoch of `key`'s shard. Must be taken **before**
+    /// the remote READ whose result may be filled.
+    pub fn begin_fill(&self, key: u64) -> FillToken {
+        let shard = self.shard_index(key);
+        FillToken { shard, epoch: self.shards[shard].epoch.load(Ordering::Acquire) }
+    }
+
+    /// Insert a validated read result. Rejected (returns `false`) if any
+    /// invalidation touched the shard since `token` was taken — the value
+    /// may predate a concurrent mutation.
+    pub fn fill(&self, token: FillToken, key: u64, counter: u64, value: &[u64]) -> bool {
+        let shard = &self.shards[token.shard];
+        debug_assert_eq!(token.shard, self.shard_index(key), "token/key shard mismatch");
+        let mut map = shard.map.lock().unwrap();
+        // Epoch check under the shard lock: invalidations bump the epoch
+        // under the same lock, so this is race-free.
+        if shard.epoch.load(Ordering::Acquire) != token.epoch {
+            self.rejected_fills.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        if map.len() >= self.per_shard_cap && !map.contains_key(&key) {
+            self.evict_one(&mut map);
+        }
+        map.insert(key, CacheEntry { value: value.into(), counter, hot: false });
+        self.fills.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// CLOCK second chance over the shard's (arbitrary) iteration order:
+    /// clear reference bits until a cold entry turns up, then evict it.
+    fn evict_one(&self, map: &mut HashMap<u64, CacheEntry>) {
+        let mut victim = None;
+        for (k, e) in map.iter_mut() {
+            if e.hot {
+                e.hot = false; // second chance
+            } else {
+                victim = Some(*k);
+                break;
+            }
+        }
+        // Every entry was hot: take the first (now-cold) one.
+        let victim = victim.or_else(|| map.keys().next().copied());
+        if let Some(k) = victim {
+            map.remove(&k);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop `key` and bump its shard's fill epoch (killing in-flight
+    /// fills that may carry the pre-mutation value).
+    pub fn invalidate(&self, key: u64) {
+        let shard = &self.shards[self.shard_index(key)];
+        let mut map = shard.map.lock().unwrap();
+        shard.epoch.fetch_add(1, Ordering::AcqRel);
+        map.remove(&key);
+        self.invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Invalidate a batch of keys (one lock round per distinct shard
+    /// would be nicer; at tracker-application rates per-key is fine).
+    pub fn invalidate_many(&self, keys: impl IntoIterator<Item = u64>) {
+        for k in keys {
+            self.invalidate(k);
+        }
+    }
+
+    /// Total cached entries (racy; for tests and monitoring).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            fills: self.fills.load(Ordering::Relaxed),
+            rejected_fills: self.rejected_fills.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_generation_check() {
+        let c = ReadCache::new(64);
+        assert_eq!(c.lookup(1, 5), None);
+        let t = c.begin_fill(1);
+        assert!(c.fill(t, 1, 5, &[10, 11]));
+        assert_eq!(c.lookup(1, 5), Some(vec![10, 11]));
+        // Different generation: miss, and the stale entry is dropped.
+        assert_eq!(c.lookup(1, 6), None);
+        assert_eq!(c.lookup(1, 5), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.fills), (1, 1));
+        assert!(s.misses >= 3);
+    }
+
+    #[test]
+    fn invalidation_rejects_in_flight_fill() {
+        let c = ReadCache::new(64);
+        let t = c.begin_fill(9);
+        c.invalidate(9);
+        assert!(!c.fill(t, 9, 1, &[7]), "fill must lose the race");
+        assert_eq!(c.lookup(9, 1), None);
+        // A fresh token after the invalidation fills fine.
+        let t = c.begin_fill(9);
+        assert!(c.fill(t, 9, 1, &[7]));
+        assert_eq!(c.lookup(9, 1), Some(vec![7]));
+        assert_eq!(c.stats().rejected_fills, 1);
+    }
+
+    #[test]
+    fn bounded_with_clock_eviction_keeps_hot_keys() {
+        let c = ReadCache::new(32);
+        // Fill beyond capacity; key 0 is kept hot by lookups.
+        for k in 0..256u64 {
+            let t = c.begin_fill(k);
+            c.fill(t, k, 1, &[k]);
+            c.lookup(0, 1);
+        }
+        assert!(c.len() <= 32 + MAX_SHARDS, "cache unbounded: {}", c.len());
+        assert!(c.stats().evictions > 0);
+        assert_eq!(c.lookup(0, 1), Some(vec![0]), "hot key evicted");
+    }
+
+    #[test]
+    fn invalidate_many_clears_keys() {
+        let c = ReadCache::new(64);
+        for k in 0..8u64 {
+            let t = c.begin_fill(k);
+            c.fill(t, k, 1, &[k]);
+        }
+        c.invalidate_many(0..8u64);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().invalidations, 8);
+    }
+
+    #[test]
+    fn zipfian_sizing_clamped() {
+        assert_eq!(ReadCache::zipfian_capacity(100), 256);
+        assert_eq!(ReadCache::zipfian_capacity(1 << 14), 1 << 12);
+        assert_eq!(ReadCache::zipfian_capacity(1 << 30), 1 << 16);
+    }
+}

@@ -139,6 +139,87 @@ impl Drop for MemRef {
     }
 }
 
+/// Read buffers recycled per thread, capped in count AND per-buffer
+/// size so a burst of huge reads doesn't pin memory forever.
+const READ_POOL_CAP: usize = 64;
+/// Largest buffer (in words) worth pooling; bigger ones are freed on
+/// drop. 4096 words = 32 KiB, far above every slot/row read in the
+/// codebase but small enough that a full pool stays under 2 MiB.
+const READ_POOL_MAX_WORDS: usize = 4096;
+
+type ReadPool = Rc<RefCell<Vec<Vec<u64>>>>;
+
+/// A pooled read result (the locality tier's zero-copy read path).
+///
+/// [`ThreadCtx::read`] / [`ThreadCtx::read_many`] used to allocate a
+/// fresh `Vec<u64>` per operation — measurable per-op software overhead
+/// on the hot read path (Brock et al. 2019). A `ReadGuard` instead
+/// borrows a buffer from the owning thread's free list and returns it on
+/// drop; it derefs to `[u64]`, so call sites index, slice and iterate
+/// exactly as before. Call [`ReadGuard::to_vec`] (copy) or
+/// [`ReadGuard::into_vec`] (steal the allocation, bypassing the pool)
+/// when an owned vector must outlive the guard.
+pub struct ReadGuard {
+    vec: Vec<u64>,
+    pool: ReadPool,
+}
+
+impl ReadGuard {
+    pub fn to_vec(&self) -> Vec<u64> {
+        self.vec.clone()
+    }
+
+    /// Take the buffer out of the pool's custody.
+    pub fn into_vec(mut self) -> Vec<u64> {
+        std::mem::take(&mut self.vec)
+    }
+}
+
+impl std::ops::Deref for ReadGuard {
+    type Target = [u64];
+
+    #[inline]
+    fn deref(&self) -> &[u64] {
+        &self.vec
+    }
+}
+
+impl Drop for ReadGuard {
+    fn drop(&mut self) {
+        let mut pool = self.pool.borrow_mut();
+        if !self.vec.is_empty()
+            && self.vec.capacity() <= READ_POOL_MAX_WORDS
+            && pool.len() < READ_POOL_CAP
+        {
+            pool.push(std::mem::take(&mut self.vec));
+        }
+    }
+}
+
+impl std::fmt::Debug for ReadGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.vec.fmt(f)
+    }
+}
+
+impl PartialEq<[u64]> for ReadGuard {
+    fn eq(&self, other: &[u64]) -> bool {
+        self.vec == other
+    }
+}
+
+impl PartialEq<Vec<u64>> for ReadGuard {
+    fn eq(&self, other: &Vec<u64>) -> bool {
+        &self.vec == other
+    }
+}
+
+impl PartialEq for ReadGuard {
+    fn eq(&self, other: &ReadGuard) -> bool {
+        self.vec == other.vec
+    }
+}
+
 /// Per-thread issuing context. Deliberately `!Sync`: one per thread, as
 /// in the paper's backend.
 pub struct ThreadCtx {
@@ -149,6 +230,7 @@ pub struct ThreadCtx {
     alloc: RefCell<AckAllocator>,
     registry: Arc<AckRegistry>,
     memref_free: Rc<RefCell<MemRefFree>>,
+    read_pool: ReadPool,
     pool: Arc<MemPool>,
     cqe_buf: RefCell<Vec<crate::fabric::Cqe>>,
     _not_sync: PhantomData<*const ()>,
@@ -171,6 +253,7 @@ impl ThreadCtx {
             alloc: RefCell::new(AckAllocator::new(registry.clone())),
             registry,
             memref_free: Rc::new(RefCell::new(MemRefFree::default())),
+            read_pool: Rc::new(RefCell::new(Vec::new())),
             pool,
             cqe_buf: RefCell::new(Vec::with_capacity(64)),
             _not_sync: PhantomData,
@@ -311,12 +394,29 @@ impl ThreadCtx {
         (self.post_grouped(remote), bufs)
     }
 
+    /// Grab a pooled read buffer of exactly `len` words (zeroed length,
+    /// recycled allocation).
+    fn pooled_vec(&self, len: usize) -> Vec<u64> {
+        let mut v = self.read_pool.borrow_mut().pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Copy a completed mem_ref into a pooled [`ReadGuard`].
+    fn guard_from(&self, buf: &MemRef) -> ReadGuard {
+        let mut v = self.pooled_vec(buf.len());
+        buf.copy_into(&mut v);
+        ReadGuard { vec: v, pool: self.read_pool.clone() }
+    }
+
     /// Blocking batched read: issue via [`ThreadCtx::read_many_async`],
-    /// wait once for the whole batch, and copy the results out. Like
+    /// wait once for the whole batch, and hand the results out as pooled
+    /// [`ReadGuard`]s (no per-entry allocation on the steady state). Like
     /// [`ThreadCtx::read`], the completed READs prove placement of every
     /// earlier write on the involved QPs, so those peers' unfenced
     /// counters reset (the fence engine's fast path, amortized).
-    pub fn read_many(&self, reqs: &[(Region, u64, usize)]) -> Vec<Vec<u64>> {
+    pub fn read_many(&self, reqs: &[(Region, u64, usize)]) -> Vec<ReadGuard> {
         let (key, bufs) = self.read_many_async(reqs);
         self.wait(&key);
         for (region, _, _) in reqs {
@@ -324,7 +424,7 @@ impl ThreadCtx {
                 self.shared.unfenced[region.node as usize].store(0, Ordering::Relaxed);
             }
         }
-        bufs.into_iter().map(|b| b.to_vec()).collect()
+        bufs.iter().map(|b| self.guard_from(b)).collect()
     }
 
     /// Batched asynchronous writes: `(region, word offset, words)`
@@ -432,16 +532,18 @@ impl ThreadCtx {
         (key, buf)
     }
 
-    /// Blocking read. On return, everything previously written to
-    /// `src.node` on this thread's QP is also placed (flushing rule), so
-    /// the unfenced counter resets — the fence engine's fast path.
-    pub fn read(&self, src: Region, off: u64, len: usize) -> Vec<u64> {
+    /// Blocking read into a pooled [`ReadGuard`] (derefs to `[u64]`; no
+    /// allocation on the steady state). On return, everything previously
+    /// written to `src.node` on this thread's QP is also placed (flushing
+    /// rule), so the unfenced counter resets — the fence engine's fast
+    /// path.
+    pub fn read(&self, src: Region, off: u64, len: usize) -> ReadGuard {
         let (key, buf) = self.read_async(src, off, len);
         self.wait(&key);
         if src.node != self.me {
             self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
         }
-        buf.to_vec()
+        self.guard_from(&buf)
     }
 
     /// Blocking single-word read.

@@ -1,0 +1,431 @@
+//! Sharded, seqlock-validated location index — the first leg of the
+//! kvstore's **locality tier** (paper §7's "strong locality effects").
+//!
+//! The seed implementation kept every node's key → (home, slot, counter)
+//! map under one global `RwLock<HashMap>`: every lock-free `get` still
+//! serialized on the reader count of that lock, and every tracker
+//! broadcast stalled the whole read side. Dewan & Jenkins (PGAS 2020)
+//! identify exactly this contended reader lock as the first scalability
+//! cliff of distributed data structures, so this index removes it:
+//!
+//! * The map is split into `2^k` **shards** (key-hash addressed).
+//! * Each shard is an open-addressing table of *word-atomic* slots
+//!   (`key`, `meta`, `counter` — three `AtomicU64`s), so readers never
+//!   take a lock: they probe with plain atomic loads.
+//! * Consistency of multi-word entries is guaranteed by a per-shard
+//!   **seqlock** version stamp: writers bump it to odd before mutating
+//!   and to even after; a reader retries iff the stamp was odd or moved
+//!   during its probe. Uncontended reads cost two extra loads.
+//! * Writers (tracker thread, mutating ops) serialize on a per-shard
+//!   mutex — a broadcast applying on shard A never delays a writer on
+//!   shard B, and never delays *any* reader.
+//!
+//! Deletions leave tombstones (probe chains must not break); a shard
+//! compacts itself — under its seqlock, invisible to readers beyond a
+//! retry — once tombstones pile up. Capacity is fixed at construction
+//! (the kvstore's slot budget bounds live entries), with headroom so the
+//! load factor stays low.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fabric::NodeId;
+
+/// Where a key lives: home node, slot in that node's data array, and the
+/// slot's reuse counter (Appendix C's generation tag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub node: NodeId,
+    pub slot: u32,
+    pub counter: u64,
+}
+
+/// Slot states, stored in the top bits of the `meta` word.
+const STATE_EMPTY: u64 = 0;
+const STATE_FULL: u64 = 1;
+const STATE_TOMB: u64 = 2;
+const STATE_SHIFT: u32 = 62;
+const NODE_SHIFT: u32 = 32;
+const NODE_MASK: u64 = (1 << 30) - 1;
+const SLOT_MASK: u64 = (1 << 32) - 1;
+
+#[inline]
+fn pack_meta(state: u64, e: &IndexEntry) -> u64 {
+    debug_assert!((e.node as u64) <= NODE_MASK, "node id exceeds 30 bits");
+    (state << STATE_SHIFT) | ((e.node as u64) << NODE_SHIFT) | e.slot as u64
+}
+
+#[inline]
+fn meta_state(meta: u64) -> u64 {
+    meta >> STATE_SHIFT
+}
+
+use crate::util::mix64 as mix;
+
+struct Slot {
+    key: AtomicU64,
+    meta: AtomicU64,
+    counter: AtomicU64,
+}
+
+struct Shard {
+    /// Seqlock stamp: odd while a writer mutates the table.
+    seq: AtomicU64,
+    /// Serializes writers; readers never touch it.
+    writer: Mutex<ShardState>,
+    slots: Box<[Slot]>,
+    mask: u64,
+}
+
+struct ShardState {
+    /// FULL slots.
+    live: usize,
+    /// FULL + TOMB slots (bounds probe-chain length).
+    used: usize,
+}
+
+impl Shard {
+    fn new(capacity: usize) -> Shard {
+        Shard {
+            seq: AtomicU64::new(0),
+            writer: Mutex::new(ShardState { live: 0, used: 0 }),
+            slots: (0..capacity)
+                .map(|_| Slot {
+                    key: AtomicU64::new(0),
+                    meta: AtomicU64::new(0),
+                    counter: AtomicU64::new(0),
+                })
+                .collect(),
+            mask: capacity as u64 - 1,
+        }
+    }
+
+    /// One lock-free probe pass. Returns `Err(())` if the table looked
+    /// inconsistent (only possible while racing a writer — the caller's
+    /// seqlock check rejects the pass anyway).
+    fn probe(&self, key: u64, h: u64) -> Result<Option<IndexEntry>, ()> {
+        let mut i = h & self.mask;
+        for _ in 0..self.slots.len() {
+            let s = &self.slots[i as usize];
+            let meta = s.meta.load(Ordering::Acquire);
+            match meta_state(meta) {
+                STATE_EMPTY => return Ok(None),
+                STATE_FULL if s.key.load(Ordering::Acquire) == key => {
+                    return Ok(Some(IndexEntry {
+                        node: ((meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+                        slot: (meta & SLOT_MASK) as u32,
+                        counter: s.counter.load(Ordering::Acquire),
+                    }));
+                }
+                _ => {}
+            }
+            i = (i + 1) & self.mask;
+        }
+        // Probed the whole table without hitting EMPTY: a concurrent
+        // compaction is rearranging under us.
+        Err(())
+    }
+
+    /// Writer-side probe (shard mutex held): position of `key` if FULL,
+    /// else the first insertable slot (reusing tombstones).
+    fn probe_for_write(&self, key: u64, h: u64) -> (Option<usize>, Option<usize>) {
+        let mut free = None;
+        let mut i = h & self.mask;
+        for _ in 0..self.slots.len() {
+            let s = &self.slots[i as usize];
+            match meta_state(s.meta.load(Ordering::Relaxed)) {
+                STATE_EMPTY => return (None, free.or(Some(i as usize))),
+                STATE_TOMB => free = free.or(Some(i as usize)),
+                _ if s.key.load(Ordering::Relaxed) == key => return (Some(i as usize), free),
+                _ => {}
+            }
+            i = (i + 1) & self.mask;
+        }
+        (None, free)
+    }
+
+    /// Drop all tombstones by rehashing live entries in place. Runs under
+    /// the shard mutex with the seqlock held odd.
+    fn compact(&self, st: &mut ShardState) {
+        let live: Vec<(u64, u64, u64)> = self
+            .slots
+            .iter()
+            .filter(|s| meta_state(s.meta.load(Ordering::Relaxed)) == STATE_FULL)
+            .map(|s| {
+                (
+                    s.key.load(Ordering::Relaxed),
+                    s.meta.load(Ordering::Relaxed),
+                    s.counter.load(Ordering::Relaxed),
+                )
+            })
+            .collect();
+        for s in self.slots.iter() {
+            s.meta.store(0, Ordering::Relaxed);
+        }
+        for (key, meta, counter) in live {
+            let (_, free) = self.probe_for_write(key, mix(key));
+            let s = &self.slots[free.expect("compaction cannot overflow")];
+            s.key.store(key, Ordering::Relaxed);
+            s.counter.store(counter, Ordering::Relaxed);
+            s.meta.store(meta, Ordering::Relaxed);
+        }
+        st.used = st.live;
+    }
+}
+
+/// The sharded index. Readers are lock-free (seqlock-validated probes);
+/// writers take only their key's shard.
+pub struct ShardedIndex {
+    shards: Box<[Shard]>,
+    shard_bits: u32,
+    len: AtomicUsize,
+}
+
+impl ShardedIndex {
+    /// Build an index able to hold `capacity` live entries. Shard count
+    /// scales with capacity (2^3..2^7); per-shard tables carry ≥2×
+    /// headroom (≤50 % load) so probe chains stay short even before
+    /// compaction.
+    pub fn new(capacity: usize) -> ShardedIndex {
+        let shard_bits = (capacity / 512).next_power_of_two().trailing_zeros().clamp(3, 7);
+        let shards = 1usize << shard_bits;
+        let per_shard = (capacity.div_ceil(shards) * 2).next_power_of_two().max(16);
+        ShardedIndex {
+            shards: (0..shards).map(|_| Shard::new(per_shard)).collect(),
+            shard_bits,
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, h: u64) -> &Shard {
+        // High hash bits pick the shard; low bits walk the probe chain —
+        // keeps the two decisions independent.
+        &self.shards[(h >> (64 - self.shard_bits)) as usize]
+    }
+
+    /// Lock-free lookup.
+    pub fn get(&self, key: u64) -> Option<IndexEntry> {
+        let h = mix(key);
+        let shard = self.shard_of(h);
+        let mut bo = crate::util::Backoff::new();
+        loop {
+            let s1 = shard.seq.load(Ordering::Acquire);
+            if s1 & 1 == 0 {
+                if let Ok(res) = shard.probe(key, h) {
+                    // Keep the probe's loads from sinking below the
+                    // validating re-read (the seqlock ordering rule).
+                    std::sync::atomic::fence(Ordering::Acquire);
+                    if shard.seq.load(Ordering::Acquire) == s1 {
+                        return res;
+                    }
+                }
+            }
+            bo.snooze(); // writer in flight on this shard: retry
+        }
+    }
+
+    /// Insert or overwrite. Returns the previous entry, if any.
+    pub fn insert(&self, key: u64, e: IndexEntry) -> Option<IndexEntry> {
+        let h = mix(key);
+        let shard = self.shard_of(h);
+        let mut st = shard.writer.lock().unwrap();
+        let (hit, free) = shard.probe_for_write(key, h);
+        shard.seq.fetch_add(1, Ordering::AcqRel); // -> odd
+        let prev = match hit {
+            Some(i) => {
+                let s = &shard.slots[i];
+                let old_meta = s.meta.load(Ordering::Relaxed);
+                let prev = IndexEntry {
+                    node: ((old_meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+                    slot: (old_meta & SLOT_MASK) as u32,
+                    counter: s.counter.load(Ordering::Relaxed),
+                };
+                s.counter.store(e.counter, Ordering::Release);
+                s.meta.store(pack_meta(STATE_FULL, &e), Ordering::Release);
+                Some(prev)
+            }
+            None => {
+                // Compact first if tombstones crowd the table (re-probe
+                // only then — the first probe's free slot is still valid
+                // otherwise).
+                let mut free = free;
+                if free.is_none() || st.used + 1 > shard.slots.len() * 7 / 8 {
+                    shard.compact(&mut st);
+                    free = shard.probe_for_write(key, h).1;
+                }
+                let i = free.unwrap_or_else(|| {
+                    panic!(
+                        "sharded index shard overflow ({} live in {}-slot shard): \
+                         raise the capacity hint",
+                        st.live,
+                        shard.slots.len()
+                    )
+                });
+                let s = &shard.slots[i];
+                let was_tomb = meta_state(s.meta.load(Ordering::Relaxed)) == STATE_TOMB;
+                s.key.store(key, Ordering::Release);
+                s.counter.store(e.counter, Ordering::Release);
+                s.meta.store(pack_meta(STATE_FULL, &e), Ordering::Release);
+                st.live += 1;
+                if !was_tomb {
+                    st.used += 1;
+                }
+                self.len.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        };
+        shard.seq.fetch_add(1, Ordering::AcqRel); // -> even
+        prev
+    }
+
+    /// Remove `key`. Returns the entry that was present, if any.
+    pub fn remove(&self, key: u64) -> Option<IndexEntry> {
+        let h = mix(key);
+        let shard = self.shard_of(h);
+        let mut st = shard.writer.lock().unwrap();
+        let (hit, _) = shard.probe_for_write(key, h);
+        let i = hit?;
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        let s = &shard.slots[i];
+        let meta = s.meta.load(Ordering::Relaxed);
+        let prev = IndexEntry {
+            node: ((meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+            slot: (meta & SLOT_MASK) as u32,
+            counter: s.counter.load(Ordering::Relaxed),
+        };
+        s.meta.store(STATE_TOMB << STATE_SHIFT, Ordering::Release);
+        st.live -= 1;
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        self.len.fetch_sub(1, Ordering::Relaxed);
+        Some(prev)
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn e(node: NodeId, slot: u32, counter: u64) -> IndexEntry {
+        IndexEntry { node, slot, counter }
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let idx = ShardedIndex::new(1024);
+        assert_eq!(idx.get(7), None);
+        assert_eq!(idx.insert(7, e(1, 42, 3)), None);
+        assert_eq!(idx.get(7), Some(e(1, 42, 3)));
+        assert_eq!(idx.len(), 1);
+        // Overwrite keeps len, returns prev.
+        assert_eq!(idx.insert(7, e(2, 9, 4)), Some(e(1, 42, 3)));
+        assert_eq!(idx.get(7), Some(e(2, 9, 4)));
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.remove(7), Some(e(2, 9, 4)));
+        assert_eq!(idx.get(7), None);
+        assert_eq!(idx.remove(7), None);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn dense_keys_fill_to_capacity() {
+        let idx = ShardedIndex::new(4096);
+        for k in 0..4096u64 {
+            idx.insert(k, e(0, k as u32, k));
+        }
+        assert_eq!(idx.len(), 4096);
+        for k in 0..4096u64 {
+            assert_eq!(idx.get(k), Some(e(0, k as u32, k)), "key {k}");
+        }
+    }
+
+    /// Tombstone churn (insert/remove cycles far beyond the live count)
+    /// must not degrade or overflow: compaction reclaims the chains.
+    #[test]
+    fn tombstone_churn_compacts() {
+        let idx = ShardedIndex::new(512);
+        for round in 0..64u64 {
+            for k in 0..256u64 {
+                idx.insert(round * 1000 + k, e(0, k as u32, round));
+            }
+            for k in 0..256u64 {
+                assert!(idx.remove(round * 1000 + k).is_some());
+            }
+        }
+        assert!(idx.is_empty());
+        idx.insert(1, e(0, 0, 1));
+        assert_eq!(idx.get(1), Some(e(0, 0, 1)));
+    }
+
+    /// Readers never see torn entries while writers churn their keys:
+    /// each key's (slot, counter) pair moves in lockstep, so a read
+    /// observing slot `s` must observe counter `s * 7`.
+    #[test]
+    fn concurrent_readers_see_consistent_entries() {
+        let idx = Arc::new(ShardedIndex::new(512));
+        for k in 0..64u64 {
+            idx.insert(k, e(0, 0, 0));
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..2u64)
+            .map(|w| {
+                let idx = idx.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut v = 1u32;
+                    while !stop.load(Ordering::Relaxed) {
+                        for k in (w..64u64).step_by(2) {
+                            idx.insert(k, e(1, v, v as u64 * 7));
+                            if v % 16 == 0 {
+                                idx.remove(k);
+                                idx.insert(k, e(1, v, v as u64 * 7));
+                            }
+                        }
+                        v = v.wrapping_add(1).max(1);
+                    }
+                })
+            })
+            .collect();
+        let readers: Vec<_> = (0..4u64)
+            .map(|r| {
+                let idx = idx.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::util::rng::Rng::seeded(r);
+                    let mut seen = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let k = rng.gen_range(64);
+                        if let Some(got) = idx.get(k) {
+                            if got.node == 1 {
+                                assert_eq!(
+                                    got.counter,
+                                    got.slot as u64 * 7,
+                                    "torn index entry for key {k}: {got:?}"
+                                );
+                            }
+                            seen += 1;
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        stop.store(true, Ordering::SeqCst);
+        for w in writers {
+            w.join().unwrap();
+        }
+        let total: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        assert!(total > 0, "readers made no progress");
+    }
+}

@@ -10,16 +10,21 @@
 //!   local/remote region tables, readiness, connect callbacks.
 //! * [`ack`] — lock-free bitset completion tracking (`ack_key`).
 //! * [`ctx`] — per-thread issuing context: private QPs per peer,
-//!   `mem_ref` scratch blocks, verb issue APIs, and the fence engine.
+//!   `mem_ref` scratch blocks, pooled read buffers, verb issue APIs, and
+//!   the fence engine.
 //! * [`mem_pool`] — huge-page aggregation of registered memory.
+//! * [`index`] — sharded, seqlock-validated location index (lock-free
+//!   reads; the locality tier's index leg).
 
 pub mod ack;
 pub mod ctx;
 pub mod endpoint;
+pub mod index;
 pub mod manager;
 pub mod mem_pool;
 
 pub use ack::AckKey;
-pub use ctx::{FenceScope, MemRef, ThreadCtx};
+pub use ctx::{FenceScope, MemRef, ReadGuard, ThreadCtx};
 pub use endpoint::Endpoint;
+pub use index::{IndexEntry, ShardedIndex};
 pub use manager::Manager;

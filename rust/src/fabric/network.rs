@@ -1,6 +1,6 @@
 //! Cluster construction and the per-node fabric endpoint.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -28,6 +28,12 @@ pub struct NodeFabric {
     /// creation so the engine can sleep when idle instead of spinning
     /// (important on oversubscribed hosts; see EXPERIMENTS.md §Perf).
     doorbell: (Mutex<u64>, Condvar),
+    /// Work requests posted from this node (one per verb). Kept per node
+    /// so the hot post path never bounces a cluster-global cache line;
+    /// `Cluster::ops_posted` sums on the rare read.
+    ops_posted: AtomicU64,
+    /// Doorbells rung from this node (one per `post` / `post_list`).
+    doorbells_rung: AtomicU64,
 }
 
 impl NodeFabric {
@@ -40,6 +46,8 @@ impl NodeFabric {
             qps: RwLock::new(Vec::new()),
             recvq: Queue::new(),
             doorbell: (Mutex::new(0), Condvar::new()),
+            ops_posted: AtomicU64::new(0),
+            doorbells_rung: AtomicU64::new(0),
         }
     }
 
@@ -215,6 +223,8 @@ impl Cluster {
     /// NIC engine; in inline mode the verb executes synchronously.
     pub fn post(&self, qpid: QpId, wqe: Wqe) {
         let node = &self.nodes[qpid.node as usize];
+        node.ops_posted.fetch_add(1, Ordering::Relaxed);
+        node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         let qp = node.qp(qpid);
         match self.cfg.delivery {
             DeliveryMode::Threaded => {
@@ -237,6 +247,8 @@ impl Cluster {
             return;
         }
         let node = &self.nodes[qpid.node as usize];
+        node.ops_posted.fetch_add(list.len() as u64, Ordering::Relaxed);
+        node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         let qp = node.qp(qpid);
         match self.cfg.delivery {
             DeliveryMode::Threaded => {
@@ -254,6 +266,19 @@ impl Cluster {
     /// Peer a QP targets (for bookkeeping layers above).
     pub fn qp_peer(&self, qpid: QpId) -> NodeId {
         self.nodes[qpid.node as usize].qp(qpid).peer
+    }
+
+    /// Total work requests posted cluster-wide since construction
+    /// (monotonic; summed over per-node counters). The locality tier's
+    /// benches diff this across runs to show remote ops *avoided* by
+    /// cache hits, not just wall-clock gains.
+    pub fn ops_posted(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ops_posted.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total doorbells rung cluster-wide since construction (monotonic).
+    pub fn doorbells_rung(&self) -> u64 {
+        self.nodes.iter().map(|n| n.doorbells_rung.load(Ordering::Relaxed)).sum()
     }
 }
 

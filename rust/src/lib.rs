@@ -27,6 +27,13 @@
 //! the NIC delivers the matching completions, so callers overlap many
 //! operations per doorbell exactly as the paper's backend does on real
 //! ConnectX hardware.
+//!
+//! The kvstore read path additionally carries a **locality tier**
+//! (paper §1/§7's "strong locality effects"): a sharded seqlock
+//! location index ([`core::index`](crate::core::index)), an optional
+//! hot-key value cache with broadcast invalidation
+//! ([`channels::read_cache`]), and pooled zero-copy read buffers
+//! ([`core::ctx::ReadGuard`](crate::core::ctx::ReadGuard)).
 
 #![deny(rustdoc::broken_intra_doc_links)]
 

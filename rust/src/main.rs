@@ -143,7 +143,10 @@ fn main() {
             for (l, v) in micro::mr_pooling(lat.clone(), 1000) {
                 t.row(&[l, format!("{v:.2} µs/op")]);
             }
-            for (l, v) in micro::multi_get_batch_vs_scalar(lat, 16, 60) {
+            for (l, v) in micro::multi_get_batch_vs_scalar(lat.clone(), 16, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
+            for (l, v) in micro::cached_get_zipfian(lat, 4096, 5000) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
             t.print();

@@ -22,6 +22,18 @@ pub fn fnv64(words: &[u64]) -> u64 {
     h
 }
 
+/// SplitMix64 finalizer: a cheap full-avalanche bit mixer. The sharded
+/// index and the read cache both hash keys through it so dense key
+/// ranges (benches prefill `0..n`) spread evenly across shards and
+/// probe chains.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
 /// Spin-then-yield backoff for polling loops.
 #[derive(Default)]
 pub struct Backoff {

@@ -95,6 +95,19 @@ fn check_key(key: u64, muts: Vec<(Option<u64>, u64, u64)>, reads: &[(Option<u64>
 
 #[test]
 fn kvstore_concurrent_history_is_linearizable() {
+    run_history(0);
+}
+
+/// Same history check over the locality tier: sharded seqlock index +
+/// hot-key cache. Cached reads must linearize exactly like remote ones
+/// (with the cache on, updates and deletes return only after every
+/// node's cache dropped the key — see docs/ARCHITECTURE.md).
+#[test]
+fn kvstore_concurrent_history_is_linearizable_with_cache() {
+    run_history(32);
+}
+
+fn run_history(read_cache_entries: usize) {
     let nodes = 3;
     let keys = 8u64;
     let ops_per_thread = 120u64;
@@ -103,7 +116,12 @@ fn kvstore_concurrent_history_is_linearizable() {
     let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).chaotic());
     let mgrs: Vec<Arc<Manager>> =
         (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
-    let cfg = KvConfig { slots_per_node: 64, tracker_words: 1 << 12, ..Default::default() };
+    let cfg = KvConfig {
+        slots_per_node: 64,
+        tracker_words: 1 << 12,
+        read_cache_entries,
+        ..Default::default()
+    };
     let kvs: Vec<Arc<KvStore>> =
         mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
     for kv in &kvs {
@@ -191,6 +209,103 @@ fn kvstore_concurrent_history_is_linearizable() {
             .collect();
         check_key(key, muts, &reads);
     }
+}
+
+/// Satellite stress test for the locality tier's delete guarantee:
+/// with the hot-key cache enabled over the sharded index, a get that
+/// *starts after* a delete's broadcast acks complete (i.e. after
+/// `remove()` returned) must never return the deleted round's value.
+///
+/// Writers own disjoint keys and run insert → update → remove rounds,
+/// publishing a per-key **floor** (the next legal round) right after
+/// each `remove()` returns; readers on every node snapshot the floor
+/// before invoking `get` and assert the returned round is ≥ it. Values
+/// are written twice over (`[tag, tag]`) so torn reads are also caught.
+#[test]
+fn cached_reads_never_stale_after_delete_acks() {
+    let nodes = 3;
+    let keys = 6u64;
+    let rounds = 30u64;
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 3000;
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).chaotic());
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let cfg = KvConfig {
+        slots_per_node: 64,
+        value_words: 2,
+        tracker_words: 1 << 12,
+        read_cache_entries: 32,
+        ..Default::default()
+    };
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+
+    let floors: Arc<Vec<AtomicU64>> = Arc::new((0..keys).map(|_| AtomicU64::new(0)).collect());
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    // One writer per key, spread across nodes; disjoint keys keep each
+    // key's mutation order trivially total (the checker above covers
+    // contended mutation; this test isolates cache staleness).
+    let writers: Vec<_> = (0..keys)
+        .map(|k| {
+            let ni = (k % nodes as u64) as usize;
+            let m = mgrs[ni].clone();
+            let kv = kvs[ni].clone();
+            let floors = floors.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                for r in 1..=rounds {
+                    let tag = r * 10;
+                    kv.insert(&ctx, k, &[tag, tag]).unwrap();
+                    kv.update(&ctx, k, &[tag + 1, tag + 1]);
+                    assert!(kv.remove(&ctx, k));
+                    // remove() returned ⇒ every node applied + acked the
+                    // delete; round r may never be served again.
+                    floors[k as usize].store(r + 1, Ordering::SeqCst);
+                }
+            })
+        })
+        .collect();
+
+    let readers: Vec<_> = (0..nodes)
+        .map(|ni| {
+            let m = mgrs[ni].clone();
+            let kv = kvs[ni].clone();
+            let floors = floors.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(77 + ni as u64);
+                let mut served = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let k = rng.gen_range(keys);
+                    let floor = floors[k as usize].load(Ordering::SeqCst);
+                    if let Some(v) = kv.get(&ctx, k) {
+                        assert_eq!(v[0], v[1], "torn value for key {k}: {v:?}");
+                        let round = v[0] / 10;
+                        assert!(
+                            round >= floor,
+                            "key {k}: round {round} served although its delete \
+                             acked before this get started (floor {floor})"
+                        );
+                        served += 1;
+                    }
+                }
+                served
+            })
+        })
+        .collect();
+
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    let served: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+    assert!(served > 0, "readers never observed a value");
 }
 
 /// The checker itself must reject broken histories (meta-test).
