@@ -54,6 +54,12 @@ fn main() {
         }
     }
 
+    // Fault-hook overhead: the same batched-vs-scalar workload with the
+    // fault layer absent vs installed-but-inert (PR-3's ≤5 % bar).
+    for (l, v) in micro::fault_hook_overhead(lat.clone(), 16, 100) {
+        t.row(&["fault hooks".into(), l, format!("{v:.1} Kops/s")]);
+    }
+
     // Locality tier: Zipfian-0.99 gets with the hot-key cache off vs on
     // (the ≥3× acceptance bar lives on this pair).
     let cache_rows = micro::cached_get_zipfian(lat.clone(), 8192, 20_000);

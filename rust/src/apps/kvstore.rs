@@ -38,9 +38,23 @@
 //! the cache enabled, updates and deletes therefore linearize at
 //! broadcast-ack completion; `fence_updates` is required (an unfenced
 //! update could be cached stale indefinitely).
+//!
+//! # Failure model & recovery
+//!
+//! Under fault injection (`FabricConfig::faults`) the store survives a
+//! **single crash-stop** per cluster (see `docs/ARCHITECTURE.md`,
+//! § Failure model & recovery): with [`KvConfig::replicate`] on, every
+//! slot frame is mirrored to a backup node, and on a detected crash the
+//! backup re-homes the dead node's key range from its replica (fresh
+//! generations, normal `OP_INSERT` broadcasts, an `OP_EPOCH` marker to
+//! purge leftovers). Reads and locked mutations that catch the dead
+//! home park in `wait_entry_change` and resume against the new
+//! location; keys whose *lock* is hosted on the corpse are read-only
+//! (mutations return `Err(Error::PeerFailed)`). Without replication a
+//! crash behaves as a delete of every key the dead node homed.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
 
 use crate::channels::read_cache::{CacheStats, FillToken, ReadCache};
@@ -64,6 +78,13 @@ const OP_DELETE: u64 = 2;
 const OP_BATCH: u64 = 3;
 /// Cache invalidation for in-place updates: `[OP_INVAL, n, key...]`.
 const OP_INVAL: u64 = 4;
+/// End-of-recovery marker from a dead node's backup: `[OP_EPOCH,
+/// dead_node]`. Everything the backup could recover has been
+/// re-broadcast (same ring, so FIFO-before this marker); receivers drop
+/// any index entry still homed on the dead node — those keys' inserts
+/// never completed (or were never known to the backup) and their data
+/// died with the node.
+const OP_EPOCH: u64 = 5;
 
 /// Torn-read retries between index-entry re-fetches: a reader spinning
 /// on a checksum mismatch re-validates its location after this many
@@ -96,6 +117,14 @@ pub struct KvConfig {
     /// don't bump the generation counter). There is no cross-node
     /// config handshake; keep configs identical.
     pub read_cache_entries: usize,
+    /// Replicate every slot frame to a **backup node** (`(home+1) mod
+    /// n`) so a crash-stopped home's key range can be re-homed from the
+    /// surviving replica instead of lost (see `docs/ARCHITECTURE.md`,
+    /// § Failure model & recovery). Roughly doubles mutation write
+    /// cost; requires `fence_updates` (the backup frame must be placed
+    /// before a mutation returns) and at least two nodes. Without it a
+    /// crash drops the dead node's keys from every index. Default off.
+    pub replicate: bool,
 }
 
 impl Default for KvConfig {
@@ -108,6 +137,7 @@ impl Default for KvConfig {
             fence_updates: true,
             lock_handover: true,
             read_cache_entries: 0,
+            replicate: false,
         }
     }
 }
@@ -140,6 +170,20 @@ impl KvShared {
             cache.invalidate(key);
         }
     }
+
+    /// Drop every index entry homed on `dead` (invalidating each key's
+    /// cached value): the shared purge step of crash recovery — used
+    /// without replication (each node independently), by the backup's
+    /// leftover sweep, and by the `OP_EPOCH` tracker handler.
+    fn purge_homed_on(&self, dead: NodeId) {
+        for (key, e) in self.index.entries_homed_on(dead) {
+            self.invalidate(key);
+            // Compare-and-remove: never clobber an entry that was
+            // re-homed (or freshly re-inserted) between snapshot and
+            // drop.
+            self.index.remove_matching(key, &e);
+        }
+    }
 }
 
 pub struct KvStore {
@@ -148,6 +192,9 @@ pub struct KvStore {
     num_nodes: usize,
     ep: Arc<Endpoint>,
     data: Region,
+    /// The backup array this node HOSTS — replica frames for the slots
+    /// of its predecessor `(me + n - 1) mod n` (replicate only).
+    backup_hosted: Option<Region>,
     locks: Vec<TicketLock>,
     tracker_tx: Mutex<RingSender>,
     shared: Arc<KvShared>,
@@ -167,6 +214,13 @@ impl KvStore {
              be cached stale indefinitely"
         );
 
+        assert!(!cfg.replicate || n > 1, "replicate requires at least two nodes");
+        assert!(
+            !cfg.replicate || cfg.fence_updates,
+            "replicate requires fence_updates: backup frames must be placed \
+             before a mutation returns, or recovery could resurrect stale values"
+        );
+
         let ep = Endpoint::new(name, me, n, Expect::AllPeers);
         let data = mgr.pool().alloc_named(
             &region_name(name, "data"),
@@ -174,7 +228,22 @@ impl KvStore {
             false,
         );
         ep.add_local_region("data", data);
-        ep.expect_regions(&["data"]);
+        // With replication on, every node also hosts the backup array
+        // for its predecessor's slots (same geometry as `data`).
+        let backup_hosted = cfg.replicate.then(|| {
+            let r = mgr.pool().alloc_named(
+                &region_name(name, "backup"),
+                cfg.slots_per_node * slot_words,
+                false,
+            );
+            ep.add_local_region("backup", r);
+            r
+        });
+        if cfg.replicate {
+            ep.expect_regions(&["data", "backup"]);
+        } else {
+            ep.expect_regions(&["data"]);
+        }
         mgr.register_channel(ep.clone());
 
         // Lock array, striped across nodes.
@@ -209,6 +278,7 @@ impl KvStore {
             num_nodes: n,
             ep,
             data,
+            backup_hosted,
             locks,
             tracker_tx: Mutex::new(tracker_tx),
             shared: shared.clone(),
@@ -216,15 +286,17 @@ impl KvStore {
         });
 
         // Dedicated tracker thread (§6): receives peers' tracker rings,
-        // applies index updates, then acknowledges. It references only
-        // KvShared (never Arc<KvStore>) so Drop/shutdown can run.
+        // applies index updates, then acknowledges. It holds only
+        // KvShared and a Weak<KvStore> (upgraded transiently for crash
+        // recovery) so Drop/shutdown can run.
         let mgr2 = mgr.clone();
         let name2 = name.to_string();
         let shared2 = shared;
+        let weak = Arc::downgrade(&kv);
         let words = kv.cfg.tracker_words;
         let handle = std::thread::Builder::new()
             .name(format!("kv-tracker-{me}"))
-            .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2))
+            .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2, weak))
             .expect("spawn tracker");
         *kv.tracker_thread.lock().unwrap() = Some(handle);
         kv
@@ -274,6 +346,71 @@ impl KvStore {
         &self.locks[(key % self.cfg.num_locks as u64) as usize]
     }
 
+    /// The node holding the backup replica of `node`'s slot array.
+    fn backup_of(&self, node: NodeId) -> NodeId {
+        ((node as usize + 1) % self.num_nodes) as NodeId
+    }
+
+    /// Backup region for slots homed on `node` (replicate only).
+    fn backup_region_of(&self, node: NodeId) -> Region {
+        let b = self.backup_of(node);
+        if b == self.me {
+            self.backup_hosted.expect("replicate enabled")
+        } else {
+            self.ep.remote_region(b, "backup")
+        }
+    }
+
+    /// Write a full frame `[value][ck][cv]` into the backup replica of
+    /// OUR slot `slot` and fence it placed. A dead backup node is
+    /// tolerated (single-crash model: our backup only matters if *we*
+    /// die next, and two simultaneous crashes are out of scope).
+    fn write_backup_frame(&self, ctx: &ThreadCtx, slot: u32, value: &[u64], ck: u64, cv: u64) {
+        let region = self.backup_region_of(self.me);
+        let off = self.slot_off(slot);
+        let mut frame = Vec::with_capacity(value.len() + 2);
+        frame.extend_from_slice(value);
+        frame.push(ck);
+        frame.push(cv);
+        ctx.write(region, off, &frame);
+        let _ = ctx.try_fence(FenceScope::Pair(self.backup_of(self.me)));
+    }
+
+    /// Block until the index entry for `key` moves away from `old` —
+    /// the signature of a crash re-home (new home node) or a recovery
+    /// drop (`None`). Callers park here when they catch `old.node`
+    /// crash-stopped; the membership machinery guarantees the entry
+    /// changes within the recovery pass. `Err` only if *this* node is
+    /// the corpse (nobody re-homes for the dead).
+    fn wait_entry_change(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        old: &IndexEntry,
+    ) -> crate::Result<Option<IndexEntry>> {
+        let mut bo = Backoff::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let cur = self.shared.index.get(key);
+            if cur != Some(*old) {
+                return Ok(cur);
+            }
+            if ctx.node_down(self.me) {
+                return Err(crate::Error::PeerFailed(
+                    "local node crash-stopped mid-operation".into(),
+                ));
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "key {key}: home node {} crashed and no re-home/purge arrived \
+                 within 30 s (replicate={})",
+                old.node,
+                self.cfg.replicate
+            );
+            bo.snooze();
+        }
+    }
+
     /// The cache serves only *remote-homed* slots: local reads are
     /// already a couple of loads, and skipping them keeps the whole
     /// capacity for keys that actually cost a network round trip.
@@ -285,74 +422,171 @@ impl KvStore {
     // ---- operations -------------------------------------------------
 
     /// Insert (or update-in-place if present). Returns Ok(true) if a new
-    /// key was inserted.
+    /// key was inserted. `Err(Error::PeerFailed)` when the key's lock is
+    /// hosted on a crash-stopped node (the mutation did not happen; see
+    /// the failure model in `docs/ARCHITECTURE.md`).
     pub fn insert(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
         assert_eq!(value.len(), self.cfg.value_words);
         let lock = self.lock_of(key);
-        lock.lock(ctx);
-        let existing = self.shared.index.get(key);
-        if let Some(e) = existing {
-            self.write_value(ctx, &e, value);
-            self.invalidate_updated(ctx, &[key]);
-            lock.unlock(ctx);
-            return Ok(false);
-        }
-
-        let Some(slot) = self.shared.free.lock().unwrap().pop() else {
-            lock.unlock(ctx);
-            return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
-        };
-        let counter = self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
-        // Local write: value, checksum, counter with valid UNSET.
-        let off = self.slot_off(slot);
-        for (i, w) in value.iter().enumerate() {
-            ctx.local_store(self.data, off + i as u64, *w);
-        }
-        ctx.local_store(self.data, off + value.len() as u64, fnv64(value));
-        ctx.local_store(self.data, off + value.len() as u64 + 1, counter << 1);
-
-        // Our own index first, then broadcast to peers and await acks.
-        self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
-        {
-            let tx = self.tracker_tx.lock().unwrap();
-            tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
-        }
-        // All indices now hold the location: set valid (linearization pt).
-        ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+        lock.try_lock(ctx)?;
+        let res = self.insert_locked(ctx, key, value);
         lock.unlock(ctx);
+        res
+    }
+
+    fn insert_locked(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
+        loop {
+            if let Some(e) = self.shared.index.get(key) {
+                if self.locked_update(ctx, key, e, value)? {
+                    return Ok(false);
+                }
+                // The key vanished while its dead home was recovered:
+                // re-resolve — this is now a fresh insert.
+                continue;
+            }
+            let Some(slot) = self.shared.free.lock().unwrap().pop() else {
+                return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
+            };
+            let counter =
+                self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
+            // Local write: value, checksum, counter with valid UNSET.
+            let off = self.slot_off(slot);
+            let ck = fnv64(value);
+            for (i, w) in value.iter().enumerate() {
+                ctx.local_store(self.data, off + i as u64, *w);
+            }
+            ctx.local_store(self.data, off + value.len() as u64, ck);
+            ctx.local_store(self.data, off + value.len() as u64 + 1, counter << 1);
+            // Backup replica before the broadcast, already valid: if we
+            // crash before returning, recovery resurrecting a
+            // never-linearized insert is harmless (no reader could have
+            // relied on EMPTY — the insert never responded), while the
+            // reverse order could lose an insert that *did* respond.
+            if self.cfg.replicate {
+                self.write_backup_frame(ctx, slot, value, ck, (counter << 1) | 1);
+            }
+
+            // Our own index first, then broadcast to peers and await acks.
+            self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
+            {
+                let tx = self.tracker_tx.lock().unwrap();
+                tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
+                let pos = tx.position();
+                tx.wait_all_acked(ctx, pos);
+            }
+            // All indices now hold the location: set valid (linearization pt).
+            ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+            return Ok(true);
+        }
+    }
+
+    /// Update an existing key in place. Returns false if absent. Panics
+    /// on an unrecoverable peer failure — use [`KvStore::try_update`]
+    /// when running with fault injection.
+    pub fn update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
+        self.try_update(ctx, key, value).expect("kv update: unrecoverable peer failure")
+    }
+
+    /// Crash-stop-aware update: `Ok(false)` if the key is absent (or was
+    /// dropped by crash recovery), `Err(Error::PeerFailed)` if the key's
+    /// lock is hosted on a dead node (the mutation did not happen). A
+    /// home node dying *mid-update* is handled internally: the op waits
+    /// for the membership epoch's re-home and retries against the new
+    /// location, so an `Ok(true)` always means the value is durable on
+    /// the current home.
+    pub fn try_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
+        assert_eq!(value.len(), self.cfg.value_words);
+        let lock = self.lock_of(key);
+        lock.try_lock(ctx)?;
+        let res = match self.shared.index.get(key) {
+            None => Ok(false),
+            Some(e) => self.locked_update(ctx, key, e, value),
+        };
+        lock.unlock(ctx);
+        res
+    }
+
+    /// The locked mutate-in-place path shared by update and
+    /// insert-over-existing, with the crash-recovery retry loop: a home
+    /// that crash-stops before the write is placed gets re-resolved via
+    /// [`KvStore::wait_entry_change`] and the write retried against the
+    /// new location. Returns whether the value was applied (false: the
+    /// key vanished — deleted by recovery or a racing delete).
+    fn locked_update(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        mut e: IndexEntry,
+        value: &[u64],
+    ) -> Result<bool> {
+        loop {
+            if ctx.node_down(e.node) {
+                match self.wait_entry_change(ctx, key, &e)? {
+                    Some(ne) => {
+                        e = ne;
+                        continue;
+                    }
+                    None => return Ok(false),
+                }
+            }
+            match self.write_value(ctx, &e, value) {
+                Ok(()) => break,
+                Err(err) => {
+                    if ctx.node_down(self.me) {
+                        // WE died mid-write: nobody re-homes for us, so
+                        // retrying would spin forever. Surface it.
+                        return Err(err);
+                    }
+                    // Home died mid-write: loop re-checks, re-resolves.
+                }
+            }
+        }
+        self.invalidate_updated(ctx, &[key]);
         Ok(true)
     }
 
-    /// Update an existing key in place. Returns false if absent.
-    pub fn update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
-        assert_eq!(value.len(), self.cfg.value_words);
-        let lock = self.lock_of(key);
-        lock.lock(ctx);
-        let Some(e) = self.shared.index.get(key) else {
-            lock.unlock(ctx);
-            return false;
-        };
-        self.write_value(ctx, &e, value);
-        self.invalidate_updated(ctx, &[key]);
-        lock.unlock(ctx);
-        true
-    }
-
     /// The locked write path shared by update and insert-over-existing:
-    /// write `[value][checksum]`, then fence so the write is placed
-    /// before the lock release (§7.2).
-    fn write_value(&self, ctx: &ThreadCtx, e: &IndexEntry, value: &[u64]) {
+    /// write `[value][checksum]` (mirrored to the backup replica when
+    /// replication is on), then fence so the write is placed before the
+    /// lock release (§7.2). `Err` iff the home node crash-stopped before
+    /// placement was proven — the caller re-resolves and retries; a dead
+    /// *backup* is tolerated (single-crash model).
+    fn write_value(&self, ctx: &ThreadCtx, e: &IndexEntry, value: &[u64]) -> Result<()> {
         let region = self.data_region_of(e.node);
         let off = self.slot_off(e.slot);
         let mut buf = Vec::with_capacity(value.len() + 1);
         buf.extend_from_slice(value);
         buf.push(fnv64(value));
         ctx.write(region, off, &buf); // completion tracked by the fence
-        if self.cfg.fence_updates && e.node != self.me {
-            ctx.fence(FenceScope::Pair(e.node));
+        if self.cfg.replicate {
+            // Mirror [value][ck]; the cv word is untouched (in-place
+            // updates do not change the generation).
+            ctx.write(self.backup_region_of(e.node), off, &buf);
         }
+        if self.cfg.fence_updates {
+            let scope = if self.cfg.replicate {
+                FenceScope::Thread // covers home and backup peers alike
+            } else {
+                FenceScope::Pair(e.node)
+            };
+            if ctx.try_fence(scope).is_err() {
+                if ctx.node_down(self.me) {
+                    // WE crash-stopped: the write was never transmitted;
+                    // reporting success would violate the durability
+                    // contract of Ok.
+                    return Err(Error::PeerFailed("local node crashed mid-update".into()));
+                }
+                if ctx.node_down(e.node) {
+                    return Err(Error::PeerFailed(format!(
+                        "home node {} crashed mid-update",
+                        e.node
+                    )));
+                }
+                // Only a dead *backup* remains: tolerated (single-crash
+                // model) — the home's flush still completed.
+            }
+        }
+        Ok(())
     }
 
     /// Post-update cache invalidation (locality tier). In-place updates
@@ -403,11 +637,34 @@ impl KvStore {
         let mut bo = Backoff::new();
         let mut torn_rounds = 0u32;
         loop {
+            if ctx.node_down(e.node) {
+                // Home crash-stopped: park until recovery re-homes the
+                // key (serve the new location) or drops it (EMPTY).
+                match self.wait_entry_change(ctx, key, &e) {
+                    Ok(Some(ne)) => {
+                        e = ne;
+                        continue;
+                    }
+                    Ok(None) => return None,
+                    Err(_) => return None, // we are the corpse ourselves
+                }
+            }
             // Fill-token before the READ: a concurrent invalidation
             // between here and the fill rejects the fill.
             let token = self.cache_for(&e).map(|c| c.begin_fill(key));
             let region = self.data_region_of(e.node);
-            let words = ctx.read(region, self.slot_off(e.slot), self.slot_words());
+            let words = match ctx.try_read(region, self.slot_off(e.slot), self.slot_words()) {
+                Ok(w) => w,
+                Err(_) => {
+                    // A read error with a live home means *we* are the
+                    // crashed node (our posts all fail): bail rather
+                    // than spin — a corpse's results no longer matter.
+                    if ctx.node_down(self.me) {
+                        return None;
+                    }
+                    continue; // home's crash raced the read: handled above
+                }
+            };
             let (value, rest) = words.split_at(self.cfg.value_words);
             let (ck, cv) = (rest[0], rest[1]);
             if fnv64(value) == ck {
@@ -434,20 +691,65 @@ impl KvStore {
         }
     }
 
-    /// Delete. Returns false if absent.
+    /// Delete. Returns false if absent. Panics on an unrecoverable peer
+    /// failure — use [`KvStore::try_remove`] under fault injection.
     pub fn remove(&self, ctx: &ThreadCtx, key: u64) -> bool {
+        self.try_remove(ctx, key).expect("kv remove: unrecoverable peer failure")
+    }
+
+    /// Crash-stop-aware delete: `Err(Error::PeerFailed)` iff the key's
+    /// lock is hosted on a dead node (nothing happened). A home dying
+    /// mid-delete is re-resolved and retried, like
+    /// [`KvStore::try_update`].
+    pub fn try_remove(&self, ctx: &ThreadCtx, key: u64) -> Result<bool> {
         let lock = self.lock_of(key);
-        lock.lock(ctx);
-        let Some(e) = self.shared.index.get(key) else {
-            lock.unlock(ctx);
-            return false;
+        lock.try_lock(ctx)?;
+        let res = self.remove_locked(ctx, key);
+        lock.unlock(ctx);
+        res
+    }
+
+    fn remove_locked(&self, ctx: &ThreadCtx, key: u64) -> Result<bool> {
+        let Some(mut e) = self.shared.index.get(key) else {
+            return Ok(false);
         };
-        // Unset the valid bit (the delete's linearization point).
-        let region = self.data_region_of(e.node);
-        let cv_off = self.slot_off(e.slot) + self.cfg.value_words as u64 + 1;
-        ctx.write1(region, cv_off, e.counter << 1);
-        if e.node != self.me {
-            ctx.fence(FenceScope::Pair(e.node));
+        loop {
+            if ctx.node_down(e.node) {
+                match self.wait_entry_change(ctx, key, &e)? {
+                    Some(ne) => {
+                        e = ne;
+                        continue;
+                    }
+                    // Recovery already dropped it: the crash deleted the
+                    // key before we could.
+                    None => return Ok(false),
+                }
+            }
+            // Unset the valid bit (the delete's linearization point) —
+            // and its backup mirror FIRST, so a crash of the home right
+            // here cannot re-home a key whose delete is about to be
+            // broadcast (recovery validates against the backup frame).
+            let region = self.data_region_of(e.node);
+            let cv_off = self.slot_off(e.slot) + self.cfg.value_words as u64 + 1;
+            if self.cfg.replicate {
+                ctx.write1(self.backup_region_of(e.node), cv_off, e.counter << 1);
+            }
+            ctx.write1(region, cv_off, e.counter << 1);
+            let scope = if self.cfg.replicate {
+                FenceScope::Thread
+            } else {
+                FenceScope::Pair(e.node)
+            };
+            if ctx.try_fence(scope).is_err() {
+                if ctx.node_down(self.me) {
+                    return Err(Error::PeerFailed("local node crashed mid-delete".into()));
+                }
+                if ctx.node_down(e.node) {
+                    continue; // home died mid-delete: re-resolve the location
+                }
+                // Dead backup only: tolerated, the home's unset placed.
+            }
+            break;
         }
         // Broadcast; peers invalidate their cache + drop their index
         // entries (the home peer also frees the slot); then drop ours.
@@ -462,8 +764,7 @@ impl KvStore {
         if e.node == self.me {
             self.shared.free.lock().unwrap().push(e.slot);
         }
-        lock.unlock(ctx);
-        true
+        Ok(true)
     }
 
     // ---- batched operations (doorbell-batched pipeline) ---------------
@@ -563,6 +864,14 @@ impl KvStore {
     /// invalidation for the touched keys and unlocks. Keys not present
     /// are skipped, exactly like [`KvStore::update`]. Returns how many
     /// keys were updated.
+    ///
+    /// **Not crash-hardened**: unlike the scalar mutations, this batch
+    /// path takes the infallible locks and does not re-resolve homes
+    /// that die mid-batch — under fault injection with crash-stop, use
+    /// the scalar [`KvStore::try_update`] per key instead (the chaos
+    /// tier does). Frames are still mirrored to their backups when
+    /// replication is on, so a *later* crash recovers multi_put values
+    /// correctly.
     pub fn multi_put(&self, ctx: &ThreadCtx, items: &[(u64, Vec<u64>)]) -> usize {
         for (_, value) in items {
             assert_eq!(value.len(), self.cfg.value_words);
@@ -577,25 +886,32 @@ impl KvStore {
 
         let entries: Vec<Option<IndexEntry>> =
             items.iter().map(|(k, _)| self.shared.index.get(*k)).collect();
-        // Build [value][checksum] frames, then one batched write issue.
+        // Build [value][checksum] frames, then one batched write issue
+        // (each frame mirrored to its backup replica when replication is
+        // on — same batch, same fence).
         let mut bufs: Vec<Vec<u64>> = Vec::new();
-        let mut targets: Vec<(Region, u64)> = Vec::new();
+        let mut targets: Vec<(Region, u64, usize)> = Vec::new();
         let mut touched: Vec<u64> = Vec::new();
+        let mut updated = 0usize;
         for (e, (k, value)) in entries.iter().zip(items) {
             if let Some(e) = e {
                 let mut buf = Vec::with_capacity(value.len() + 1);
                 buf.extend_from_slice(value);
                 buf.push(fnv64(value));
+                let idx = bufs.len();
                 bufs.push(buf);
-                targets.push((self.data_region_of(e.node), self.slot_off(e.slot)));
+                let off = self.slot_off(e.slot);
+                targets.push((self.data_region_of(e.node), off, idx));
+                if self.cfg.replicate {
+                    targets.push((self.backup_region_of(e.node), off, idx));
+                }
                 touched.push(*k);
+                updated += 1;
             }
         }
-        let updated = targets.len();
         let writes: Vec<(Region, u64, &[u64])> = targets
             .iter()
-            .zip(&bufs)
-            .map(|(&(region, off), buf)| (region, off, buf.as_slice()))
+            .map(|&(region, off, i)| (region, off, bufs[i].as_slice()))
             .collect();
         let _key = ctx.write_many(&writes); // completion tracked by the fence
         if self.cfg.fence_updates && !writes.is_empty() {
@@ -636,6 +952,12 @@ impl KvStore {
             PendingState::InFlight { ack, buf, token } => (ack, buf, token),
         };
         ack.wait();
+        if ack.failed() {
+            // The home crash-stopped under the windowed read: the buffer
+            // was never written. Restart through the blocking path,
+            // which waits out the re-home.
+            return self.get(ctx, pg.key);
+        }
         let words = buf.to_vec();
         let (value, rest) = words.split_at(self.cfg.value_words);
         let (ck, cv) = (rest[0], rest[1]);
@@ -690,6 +1012,9 @@ impl KvStore {
                     }
                     ctx.local_store(self.data, off + value.len() as u64, ck);
                     ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+                    if self.cfg.replicate {
+                        self.write_backup_frame(ctx, slot, &value, ck, (counter << 1) | 1);
+                    }
                     self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
                     msg.extend_from_slice(&[key, slot as u64, counter]);
                 }
@@ -719,8 +1044,160 @@ impl KvStore {
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         if let Some(h) = self.tracker_thread.lock().unwrap().take() {
+            if h.thread().id() == std::thread::current().id() {
+                // We ARE the tracker thread: the last external Arc was
+                // dropped while recovery held a transient Weak-upgrade,
+                // so Drop is running on the tracker itself. Joining
+                // ourselves would deadlock forever — detach instead;
+                // the loop observes the shutdown flag and exits.
+                return;
+            }
             let _ = h.join();
         }
+    }
+
+    // ---- crash recovery (membership epoch) ----------------------------
+
+    /// Crash recovery, called from the tracker thread once per newly
+    /// dead node. Per-node ordering: drop the hot-key cache (entries
+    /// cached under the dead epoch must not serve into the new one),
+    /// then either **re-home** the dead node's key range from our
+    /// backup replica (if we are its backup and replication is on) or —
+    /// without replication — **purge** its entries everywhere (the data
+    /// died with the node). Non-backup nodes with replication on keep
+    /// their stale entries and learn the new homes from the backup's
+    /// re-home broadcasts; reads and locked mutations on those keys
+    /// park in [`KvStore::wait_entry_change`] until exactly that signal.
+    pub(crate) fn on_peer_dead(&self, ctx: &ThreadCtx, dead: NodeId) {
+        if dead == self.me {
+            return; // we are the corpse; our view no longer matters
+        }
+        if let Some(cache) = &self.shared.cache {
+            cache.clear();
+        }
+        if !self.cfg.replicate {
+            self.shared.purge_homed_on(dead);
+            return;
+        }
+        if self.backup_of(dead) == self.me {
+            self.rehome_from_backup(ctx, dead);
+        }
+    }
+
+    /// Re-home the crash-stopped `dead` node's key range: our index (a
+    /// replica of the locations, built from the tracker broadcasts that
+    /// announced them) names every key homed there; our hosted backup
+    /// array holds the surviving replica of the frames. Each key whose
+    /// backup frame validates is re-inserted under a fresh local
+    /// generation and announced with a normal `OP_INSERT`; frames that
+    /// do not validate (the insert never completed, or a delete's
+    /// backup-unset landed first) are dropped with an `OP_DELETE`. One
+    /// ack-wait covers the whole batch — when this returns, every
+    /// surviving index agrees on the new homes.
+    fn rehome_from_backup(&self, ctx: &ThreadCtx, dead: NodeId) {
+        let backup = self.backup_hosted.expect("replicate enabled on the backup node");
+        let entries = self.shared.index.entries_homed_on(dead);
+        let mut rehomed = 0u64;
+        let mut dropped = 0u64;
+        for (key, e) in entries {
+            match self.read_backup_frame(ctx, backup, &e) {
+                Some(value) => {
+                    if self.reinsert_recovered(ctx, key, &value) {
+                        rehomed += 1;
+                    } else {
+                        self.announce_drop(ctx, key, &e);
+                        dropped += 1;
+                    }
+                }
+                None => {
+                    self.announce_drop(ctx, key, &e);
+                    dropped += 1;
+                }
+            }
+        }
+        {
+            // End-of-recovery marker: FIFO-after every re-home broadcast
+            // above, so a receiver that has applied it has the complete
+            // recovered range and may drop any leftover dead-homed
+            // entries. One ack-wait covers the whole batch.
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(ctx, &[OP_EPOCH, dead as u64]);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        // Our own leftover check (peers get it from OP_EPOCH).
+        self.shared.purge_homed_on(dead);
+        if rehomed + dropped > 0 {
+            eprintln!(
+                "loco-kv[{}]: re-homed node {dead}'s range: {rehomed} recovered, {dropped} dropped",
+                self.me
+            );
+        }
+    }
+
+    /// Read and validate our backup replica of `e` (a slot frame homed
+    /// on the dead node). Plain local loads with a bounded
+    /// checksum-retry: an update's mirror write that raced the crash may
+    /// still be mid-placement, but placements are transient — a frame
+    /// that validates with the wrong generation (or the valid bit clear)
+    /// is a *stable* negative, because deletes fence their backup unset
+    /// before broadcasting.
+    fn read_backup_frame(&self, ctx: &ThreadCtx, backup: Region, e: &IndexEntry) -> Option<Vec<u64>> {
+        let off = self.slot_off(e.slot);
+        let words = self.slot_words();
+        let mut bo = Backoff::new();
+        for _ in 0..4096 {
+            let mut frame = vec![0u64; words];
+            for (i, f) in frame.iter_mut().enumerate() {
+                *f = ctx.local_load(backup, off + i as u64);
+            }
+            let (value, rest) = frame.split_at(self.cfg.value_words);
+            let (ck, cv) = (rest[0], rest[1]);
+            if fnv64(value) == ck {
+                if cv >> 1 == e.counter && cv & 1 == 1 {
+                    return Some(value.to_vec());
+                }
+                return None; // consistent frame, wrong generation / invalid
+            }
+            bo.snooze(); // torn mirror placement in flight: retry
+        }
+        None
+    }
+
+    /// Promote a recovered frame into a fresh local slot + generation,
+    /// mirror it to OUR backup, update our index, and broadcast the new
+    /// location. No key lock is taken: mutators of this key are parked
+    /// in `wait_entry_change` (their home is down) and proceed against
+    /// the new location once the broadcast lands. Returns false if this
+    /// node is out of slots (the key is then dropped instead).
+    fn reinsert_recovered(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
+        let Some(slot) = self.shared.free.lock().unwrap().pop() else {
+            return false;
+        };
+        let counter = self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
+        let off = self.slot_off(slot);
+        let ck = fnv64(value);
+        for (i, w) in value.iter().enumerate() {
+            ctx.local_store(self.data, off + i as u64, *w);
+        }
+        ctx.local_store(self.data, off + value.len() as u64, ck);
+        ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+        self.write_backup_frame(ctx, slot, value, ck, (counter << 1) | 1);
+        self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
+        let tx = self.tracker_tx.lock().unwrap();
+        tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
+        true
+    }
+
+    /// Recovery-side drop of a key whose frame did not survive: remove
+    /// it locally (compare-and-remove — a racing fresh re-insert wins)
+    /// and broadcast the delete, which peers likewise apply only against
+    /// the exact dead entry. Nobody frees a slot — the home is dead.
+    fn announce_drop(&self, ctx: &ThreadCtx, key: u64, e: &IndexEntry) {
+        self.shared.invalidate(key);
+        self.shared.index.remove_matching(key, e);
+        let tx = self.tracker_tx.lock().unwrap();
+        tx.send(ctx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
     }
 }
 
@@ -739,6 +1216,7 @@ fn tracker_loop(
     me: NodeId,
     num_nodes: usize,
     shared: Arc<KvShared>,
+    kv: Weak<KvStore>,
 ) {
     let ctx = mgr.ctx();
     // Receive every peer's tracker ring.
@@ -755,15 +1233,35 @@ fn tracker_loop(
     }
     shared.tracker_ready.store(true, Ordering::Release);
 
+    let mut known_dead: u64 = 0;
     let mut bo = Backoff::new();
     loop {
         let mut did = false;
+        // Drain FIRST, then react to deaths: a dead node's final
+        // broadcasts that already reached our ring are applied with the
+        // pre-death mask, so the recovery scan below sees them; anything
+        // arriving later is rejected by apply_tracker's dead-home guard.
         for (from, rx) in &mut rxs {
             while let Some(msg) = rx.try_recv(&ctx) {
-                apply_tracker(&shared, me, *from, &msg);
+                apply_tracker(&shared, me, *from, &msg, known_dead);
                 rx.ack_now(&ctx); // apply THEN acknowledge (§6)
                 did = true;
             }
+        }
+        // Crash recovery: the manager's polling thread mirrors the
+        // fabric's down mask into Membership; we react here, once per
+        // newly dead node, on the thread that owns index application.
+        let dead_mask = mgr.membership().dead_mask();
+        if dead_mask != known_dead {
+            for node in 0..num_nodes as NodeId {
+                if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
+                    if let Some(kv) = kv.upgrade() {
+                        kv.on_peer_dead(&ctx, node);
+                    }
+                }
+            }
+            known_dead = dead_mask;
+            did = true;
         }
         if !did {
             if shared.shutdown.load(Ordering::Relaxed) {
@@ -776,11 +1274,20 @@ fn tracker_loop(
     }
 }
 
-fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64]) {
+fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_mask: u64) {
+    // A location broadcast whose home we already know to be dead must
+    // not land: it would point the index at a corpse *after* recovery
+    // re-homed (or purged) that range, wedging readers forever. It can
+    // only be a crashed node's final broadcast racing its own death —
+    // the insert it announces never completed.
+    let home_is_dead = |node: NodeId| dead_mask >> node & 1 == 1;
     match msg[0] {
         OP_INSERT => {
             let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
             debug_assert_eq!(node, from);
+            if home_is_dead(node) {
+                return;
+            }
             // The new generation can't be served from a stale cached
             // copy (counter mismatch), but purging keeps dead entries
             // from squatting on cache capacity.
@@ -788,10 +1295,14 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64]) {
             shared.index.insert(key, IndexEntry { node, slot, counter });
         }
         OP_DELETE => {
-            let (key, node, slot, _counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
+            let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
             shared.invalidate(key);
-            shared.index.remove(key);
-            if node == me {
+            // Compare-and-remove: a recovery drop racing a fresh
+            // re-insert of the same key (new home, new generation) must
+            // lose — only the exact announced entry is deleted. Normal
+            // deletes always match (the deleter holds the key's lock).
+            let removed = shared.index.remove_matching(key, &IndexEntry { node, slot, counter });
+            if removed && node == me {
                 // We are the slot's home but not the deleter: reclaim.
                 shared.free.lock().unwrap().push(slot);
             }
@@ -799,6 +1310,9 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64]) {
         OP_BATCH => {
             let node = msg[1] as NodeId;
             let count = msg[2] as usize;
+            if home_is_dead(node) {
+                return;
+            }
             for i in 0..count {
                 let base = 3 + i * 3;
                 let key = msg[base];
@@ -817,6 +1331,13 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64]) {
             if let Some(cache) = &shared.cache {
                 cache.invalidate_many(msg[2..2 + count].iter().copied());
             }
+        }
+        OP_EPOCH => {
+            // The dead node's backup finished re-homing (all recovered
+            // locations precede this on the same FIFO ring): any entry
+            // still homed on the corpse belongs to an insert that never
+            // completed — drop it.
+            shared.purge_homed_on(msg[1] as NodeId);
         }
         other => panic!("unknown tracker opcode {other}"),
     }
@@ -1106,6 +1627,100 @@ mod tests {
         assert!(kvs[1].insert(&ctxs[1], 5, &[702]).unwrap());
         for i in 0..3 {
             assert_eq!(kvs[i].get(&ctxs[i], 5), Some(vec![702]), "node {i}");
+        }
+    }
+
+    /// Crash-stop + re-home end to end: keys homed on the dead node come
+    /// back from the backup replica (same values, new home on the backup
+    /// node), deleted keys stay gone, mutations whose lock lives on the
+    /// corpse fail fast, and everything else keeps serving.
+    #[test]
+    fn crash_rehomes_dead_nodes_keys_from_backup() {
+        let cfg = KvConfig {
+            slots_per_node: 64,
+            tracker_words: 1 << 10,
+            read_cache_entries: 16,
+            replicate: true,
+            ..Default::default()
+        };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+        // Node 1 homes keys 100..110; cross-node update + delete + a
+        // cache fill before the crash.
+        for k in 100..110u64 {
+            assert!(kvs[1].insert(&ctxs[1], k, &[k * 3]).unwrap());
+        }
+        assert!(kvs[0].update(&ctxs[0], 105, &[999]));
+        assert!(kvs[2].remove(&ctxs[2], 107));
+        assert_eq!(kvs[2].get(&ctxs[2], 104), Some(vec![312])); // fills node 2's cache
+
+        mgrs[0].cluster().crash(1);
+
+        // Recovery: node 2 == backup_of(1) re-homes the range; wait for
+        // the index to reflect it everywhere.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        loop {
+            let moved = [&kvs[0], &kvs[2]].iter().all(|kv| {
+                (100..110u64)
+                    .filter(|k| *k != 107)
+                    .all(|k| kv.index_entry(k).map(|e| e.node == 2).unwrap_or(false))
+            });
+            if moved {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "re-home never completed");
+            std::thread::yield_now();
+        }
+
+        // Values survived the crash (including the pre-crash update);
+        // the deleted key did not resurrect.
+        for (i, kv) in [(0usize, &kvs[0]), (2usize, &kvs[2])] {
+            for k in 100..110u64 {
+                let expect = match k {
+                    105 => Some(vec![999]),
+                    107 => None,
+                    _ => Some(vec![k * 3]),
+                };
+                assert_eq!(kv.get(&ctxs[i], k), expect, "node {i} key {k}");
+            }
+        }
+
+        // Locks striped on the dead node (key % 256 % 3 == 1) are
+        // unusable: mutations fail fast instead of hanging.
+        assert!(matches!(
+            kvs[0].try_update(&ctxs[0], 100, &[1]),
+            Err(Error::PeerFailed(_))
+        ));
+        assert_eq!(kvs[0].get(&ctxs[0], 100), Some(vec![300]), "failed update left value");
+
+        // Keys whose lock is alive stay fully mutable, and new inserts
+        // (broadcast acks skip the corpse) still complete.
+        assert_eq!(kvs[0].try_update(&ctxs[0], 101, &[777]), Ok(true));
+        assert_eq!(kvs[2].get(&ctxs[2], 101), Some(vec![777]));
+        assert!(kvs[0].insert(&ctxs[0], 200, &[42]).unwrap());
+        assert_eq!(kvs[2].get(&ctxs[2], 200), Some(vec![42]));
+    }
+
+    /// Without replication a crash is a delete of the dead node's range:
+    /// every surviving index purges it and reads return EMPTY.
+    #[test]
+    fn crash_without_replication_purges_dead_range() {
+        let (mgrs, kvs) = setup(3, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for k in 30..36u64 {
+            assert!(kvs[1].insert(&ctxs[1], k, &[k]).unwrap());
+        }
+        assert_eq!(kvs[0].get(&ctxs[0], 30), Some(vec![30]));
+        mgrs[0].cluster().crash(1);
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        while kvs[0].index_entry(30).is_some() || kvs[2].index_entry(35).is_some() {
+            assert!(std::time::Instant::now() < deadline, "purge never happened");
+            std::thread::yield_now();
+        }
+        for k in 30..36u64 {
+            assert_eq!(kvs[0].get(&ctxs[0], k), None, "key {k} not purged");
+            assert_eq!(kvs[2].get(&ctxs[2], k), None, "key {k} not purged");
         }
     }
 

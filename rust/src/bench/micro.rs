@@ -13,7 +13,7 @@ use crate::channels::owned_var::OwnedVar;
 use crate::channels::ticket_lock::TicketLock;
 use crate::core::ctx::FenceScope;
 use crate::core::manager::Manager;
-use crate::fabric::{Cluster, FabricConfig, LatencyModel};
+use crate::fabric::{Cluster, FabricConfig, FaultPlan, LatencyModel};
 use crate::workload::{KeyDist, Op, OpMix, WorkloadGen};
 
 fn two_nodes(lat: LatencyModel) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
@@ -168,7 +168,34 @@ pub fn multi_get_batch_vs_scalar(
     batch: usize,
     reps: u64,
 ) -> Vec<(String, f64)> {
-    let (_cluster, mgrs) = two_nodes(lat);
+    multi_get_rows(FabricConfig::threaded(lat), batch, reps)
+}
+
+/// The fault-hook overhead ablation (PR-3): the fault-injection layer
+/// lives behind `FabricConfig::faults`, and with `faults: None` the hot
+/// paths pay only an `Option` branch. Measured directly: the same
+/// batched-vs-scalar `multi_get` workload with the hooks absent and
+/// with an **inert plan installed** (every hook branch taken, nothing
+/// injected). Rows: (label, Kops/s) — scalar then batched, for each
+/// configuration. The unit test pins the PR-2 ≥2× bar within 5 % on
+/// both.
+pub fn fault_hook_overhead(lat: LatencyModel, batch: usize, reps: u64) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for (label, faults) in
+        [("faults: None", None), ("faults: inert plan", Some(FaultPlan::seeded(7)))]
+    {
+        let mut fabric = FabricConfig::threaded(lat.clone());
+        fabric.faults = faults;
+        for (l, v) in multi_get_rows(fabric, batch, reps) {
+            rows.push((format!("{l}, {label}"), v));
+        }
+    }
+    rows
+}
+
+fn multi_get_rows(fabric: FabricConfig, batch: usize, reps: u64) -> Vec<(String, f64)> {
+    let cluster = Cluster::new(2, fabric);
+    let mgrs: Vec<Arc<Manager>> = (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
     let cfg = KvConfig {
         slots_per_node: (batch + 64).next_power_of_two(),
         tracker_words: 1 << 12,
@@ -339,6 +366,30 @@ mod tests {
         assert!(
             batched >= scalar * 2.0,
             "batched {batched:.1} Kops/s < 2× scalar {scalar:.1} Kops/s"
+        );
+    }
+
+    /// Satellite bar (PR-3): the fault hooks must cost the fault-free
+    /// path at most 5 % of the PR-2 baseline bar — batch-16 `multi_get`
+    /// holds ≥ 1.9× (the 2× bar minus 5 %) over the scalar loop BOTH
+    /// with `faults: None` and with an inert `FaultPlan` installed
+    /// (every hook branch taken, nothing injected).
+    #[test]
+    fn fault_hooks_keep_pr2_multi_get_bar() {
+        let rows = fault_hook_overhead(LatencyModel::fast_sim(), 16, 30);
+        assert_eq!(rows.len(), 4, "{rows:?}");
+        let (scalar_none, batched_none) = (rows[0].1, rows[1].1);
+        let (scalar_inert, batched_inert) = (rows[2].1, rows[3].1);
+        assert!(scalar_none > 0.0 && batched_none > 0.0, "{rows:?}");
+        assert!(
+            batched_none >= scalar_none * 1.9,
+            "faults-off multi_get lost the PR-2 bar: \
+             {batched_none:.1} < 1.9× {scalar_none:.1} Kops/s"
+        );
+        assert!(
+            batched_inert >= scalar_inert * 1.9,
+            "inert fault hooks cost more than 5% of the PR-2 bar: \
+             {batched_inert:.1} < 1.9× {scalar_inert:.1} Kops/s"
         );
     }
 

@@ -117,6 +117,36 @@ impl AtomicVar {
         ctx.compare_swap(self.cell_region(), 0, expect, swap)
     }
 
+    // ---- fallible variants (crash-stop aware) ------------------------
+    //
+    // The official copy lives on one host; if that host crash-stops the
+    // register is gone. The try_ variants surface that as
+    // `Err(Error::PeerFailed)` so spin loops built on this channel (the
+    // ticket lock, the shared queue) can bound their waits instead of
+    // spinning on a corpse.
+
+    /// Like [`AtomicVar::load`], but a crashed host returns
+    /// `Err(Error::PeerFailed)` instead of a meaningless word.
+    pub fn try_load(&self, ctx: &ThreadCtx) -> crate::Result<u64> {
+        if ctx.node_down(self.host) {
+            return Err(crate::Error::PeerFailed(format!(
+                "atomic_var host {} crash-stopped",
+                self.host
+            )));
+        }
+        Ok(ctx.try_read(self.cell_region(), 0, 1)?[0])
+    }
+
+    /// Like [`AtomicVar::fetch_add`], crash-stop aware.
+    pub fn try_fetch_add(&self, ctx: &ThreadCtx, add: u64) -> crate::Result<u64> {
+        ctx.try_fetch_add(self.cell_region(), 0, add)
+    }
+
+    /// Like [`AtomicVar::compare_swap`], crash-stop aware.
+    pub fn try_compare_swap(&self, ctx: &ThreadCtx, expect: u64, swap: u64) -> crate::Result<u64> {
+        ctx.try_compare_swap(self.cell_region(), 0, expect, swap)
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.num_nodes
     }

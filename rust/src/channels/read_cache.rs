@@ -238,6 +238,21 @@ impl ReadCache {
         }
     }
 
+    /// Drop **everything** and bump every shard's fill epoch, so fills
+    /// begun under the old membership epoch can never land. The kvstore
+    /// calls this when a node crash-stops: entries cached from the dead
+    /// epoch — including values homed on the dead node that are about to
+    /// be re-homed under fresh generation counters — must not survive
+    /// into the new one.
+    pub fn clear(&self) {
+        for shard in self.shards.iter() {
+            let mut map = shard.map.lock().unwrap();
+            shard.epoch.fetch_add(1, Ordering::AcqRel);
+            self.invalidations.fetch_add(map.len() as u64, Ordering::Relaxed);
+            map.clear();
+        }
+    }
+
     /// Total cached entries (racy; for tests and monitoring).
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
@@ -316,6 +331,21 @@ mod tests {
         c.invalidate_many(0..8u64);
         assert!(c.is_empty());
         assert_eq!(c.stats().invalidations, 8);
+    }
+
+    #[test]
+    fn clear_drops_all_and_poisons_in_flight_fills() {
+        let c = ReadCache::new(64);
+        let stale_token = c.begin_fill(3);
+        for k in 0..8u64 {
+            let t = c.begin_fill(k);
+            assert!(c.fill(t, k, 1, &[k]));
+        }
+        c.clear();
+        assert!(c.is_empty(), "clear must drop every shard");
+        // A fill begun before the clear (dead membership epoch) loses.
+        assert!(!c.fill(stale_token, 3, 1, &[9]), "pre-clear token must be rejected");
+        assert_eq!(c.lookup(3, 1), None);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::time::Duration;
 use crate::core::ack::AckKey;
 use crate::core::ctx::ThreadCtx;
 use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
-use crate::core::manager::Manager;
+use crate::core::manager::{Manager, Membership};
 use crate::fabric::{NodeId, Region};
 use crate::util::{fnv64, Backoff};
 
@@ -79,6 +79,10 @@ pub struct RingSender {
     head: Cell<u64>,
     seq: Cell<u64>,
     num_nodes: usize,
+    /// Membership view for the skip-dead-peer ack paths: a crashed
+    /// receiver stops publishing consumed-words acks forever, and
+    /// without this the sender would block on it indefinitely.
+    membership: Arc<Membership>,
 }
 
 impl RingSender {
@@ -96,6 +100,7 @@ impl RingSender {
             head: Cell::new(0),
             seq: Cell::new(0),
             num_nodes: mgr.num_nodes(),
+            membership: mgr.membership().clone(),
         }
     }
 
@@ -108,9 +113,15 @@ impl RingSender {
         (0..self.num_nodes as NodeId).filter(move |&p| p != self.me)
     }
 
-    /// Words consumed by the slowest receiver (from the ack SST).
-    fn min_consumed(&self, ctx: &ThreadCtx) -> u64 {
-        self.receivers().map(|r| self.ack.read_row1(ctx, r)).min().unwrap_or(0)
+    /// Words consumed by the slowest **live** receiver (from the ack
+    /// SST). Crash-stopped receivers are skipped — they will never ack
+    /// again, and their rings no longer exist to overflow. `None` when
+    /// no live receiver remains.
+    fn min_consumed(&self, ctx: &ThreadCtx) -> Option<u64> {
+        self.receivers()
+            .filter(|r| !self.membership.is_dead(*r))
+            .map(|r| self.ack.read_row1(ctx, r))
+            .min()
     }
 
     /// Broadcast `payload` to every receiver. Blocks while any ring is
@@ -154,9 +165,16 @@ impl RingSender {
     fn wait_space(&self, ctx: &ThreadCtx, need: u64) {
         let mut bo = Backoff::new();
         loop {
-            let in_flight = self.head.get() - self.min_consumed(ctx);
+            let consumed = match self.min_consumed(ctx) {
+                Some(c) => c,
+                None => return, // no live receivers left to throttle us
+            };
+            let in_flight = self.head.get() - consumed;
             if in_flight + need <= self.capacity {
                 return;
+            }
+            if self.membership.is_dead(self.me) {
+                return; // we crash-stopped: sends are no-ops anyway
             }
             bo.snooze();
         }
@@ -173,13 +191,24 @@ impl RingSender {
         self.head.get()
     }
 
-    /// Block until every receiver has acknowledged consumption up to
-    /// `upto` (a position returned by [`RingSender::position`]). The
-    /// kvstore inserter uses this: all indices hold the new location
-    /// once this returns (§6).
+    /// Block until every **live** receiver has acknowledged consumption
+    /// up to `upto` (a position returned by [`RingSender::position`]).
+    /// The kvstore inserter uses this: all surviving indices hold the
+    /// new location once this returns (§6). Receivers that crash-stop
+    /// mid-wait drop out of the minimum on the next poll — a dead peer
+    /// cannot wedge a broadcast — and a sender that itself crash-stopped
+    /// gives up (its writes were never transmitted).
     pub fn wait_all_acked(&self, ctx: &ThreadCtx, upto: u64) {
         let mut bo = Backoff::new();
-        while self.min_consumed(ctx) < upto {
+        loop {
+            match self.min_consumed(ctx) {
+                None => return,
+                Some(c) if c >= upto => return,
+                _ => {}
+            }
+            if self.membership.is_dead(self.me) {
+                return;
+            }
             bo.snooze();
         }
     }

@@ -126,34 +126,64 @@ impl SharedQueue {
 
     /// Push an entry (blocking while the queue is full).
     pub fn push(&self, ctx: &ThreadCtx, payload: &[u64]) {
+        self.try_push(ctx, payload).expect("shared_queue push failed");
+    }
+
+    /// Crash-stop-aware push with a bounded wait: a crashed index host
+    /// or slot home surfaces as `Err(Error::PeerFailed)` (the queue has
+    /// permanently lost a stripe — FIFO cannot be preserved by skipping
+    /// it), and a slot that never frees within 30 s returns
+    /// `Err(Error::Timeout)` instead of spinning forever.
+    pub fn try_push(&self, ctx: &ThreadCtx, payload: &[u64]) -> crate::Result<()> {
         assert_eq!(payload.len(), self.entry_words, "entry width mismatch");
-        let t = self.tail.fetch_add(ctx, 1);
+        let t = self.tail.try_fetch_add(ctx, 1)?;
         let slot = t % self.slots;
         let (region, off) = self.slot_region(slot);
         // Wait for the slot to be free for round t.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
         let mut bo = Backoff::new();
-        while ctx.read1(region, off) != t {
+        loop {
+            if ctx.try_read(region, off, 1)?[0] == t {
+                break;
+            }
+            if std::time::Instant::now() > deadline {
+                return Err(crate::Error::Timeout(format!(
+                    "shared_queue push: slot {slot} never freed"
+                )));
+            }
             bo.snooze();
         }
         // Payload first, then sequence word: same QP → placed in order.
         ctx.write_unsignaled(region, off + 1, payload);
-        ctx.write1(region, off, t + 1).wait();
+        ctx.write1(region, off, t + 1).wait_result()
     }
 
     /// Pop the next entry (blocking while the queue is empty).
     pub fn pop(&self, ctx: &ThreadCtx) -> Vec<u64> {
-        let h = self.head.fetch_add(ctx, 1);
+        self.try_pop(ctx).expect("shared_queue pop failed")
+    }
+
+    /// Crash-stop-aware pop with a bounded (30 s) wait; see
+    /// [`SharedQueue::try_push`] for the failure contract.
+    pub fn try_pop(&self, ctx: &ThreadCtx) -> crate::Result<Vec<u64>> {
+        let h = self.head.try_fetch_add(ctx, 1)?;
         let slot = h % self.slots;
         let (region, off) = self.slot_region(slot);
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
         let mut bo = Backoff::new();
         loop {
             // One read covers [seq][payload]; the payload was placed
             // before seq became h+1 (same-QP ordering on the pusher).
-            let words = ctx.read(region, off, self.slot_words() as usize);
+            let words = ctx.try_read(region, off, self.slot_words() as usize)?;
             if words[0] == h + 1 {
                 // Free the slot for round h+Q.
-                ctx.write1(region, off, h + self.slots).wait();
-                return words[1..].to_vec();
+                ctx.write1(region, off, h + self.slots).wait_result()?;
+                return Ok(words[1..].to_vec());
+            }
+            if std::time::Instant::now() > deadline {
+                return Err(crate::Error::Timeout(format!(
+                    "shared_queue pop: slot {slot} never published"
+                )));
             }
             bo.snooze();
         }
@@ -213,6 +243,36 @@ mod tests {
         qs[1].push(&ctx1, &[222]);
         assert_eq!(qs[2].pop(&ctx2), vec![111], "global FIFO order");
         assert_eq!(qs[2].pop(&ctx2), vec![222]);
+    }
+
+    /// A crashed stripe host bounds the wait: try_push/try_pop return
+    /// PeerFailed once they touch a slot homed on the dead node, instead
+    /// of spinning forever.
+    #[test]
+    fn crash_bounds_queue_waits() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let mgrs: Vec<Arc<Manager>> =
+            (0..2).map(|i| Manager::new(cluster.clone(), i)).collect();
+        let qs: Vec<SharedQueue> =
+            mgrs.iter().map(|m| SharedQueue::new(m, "q", 8, 1)).collect();
+        for q in &qs {
+            q.wait_ready(Duration::from_secs(10));
+        }
+        let ctx0 = mgrs[0].ctx();
+        qs[0].try_push(&ctx0, &[1]).unwrap();
+        assert_eq!(qs[0].try_pop(&ctx0).unwrap(), vec![1]);
+
+        cluster.crash(1);
+        // Slots are striped (slot s lives on node s mod 2), so within two
+        // pushes one must land on the dead node and fail fast.
+        let mut failed = false;
+        for i in 0..4u64 {
+            if matches!(qs[0].try_push(&ctx0, &[i]), Err(crate::Error::PeerFailed(_))) {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "push never observed the dead stripe");
     }
 
     /// Each pop corresponds to exactly one push (paper's invariant),

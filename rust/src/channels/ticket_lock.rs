@@ -111,6 +111,47 @@ impl TicketLock {
     /// Acquire the lock (blocking). Returns true if acquisition used the
     /// local-handover fast path (for tests/metrics).
     pub fn lock(&self, ctx: &ThreadCtx) -> bool {
+        self.lock_inner(ctx, false).expect("unchecked lock path never errors")
+    }
+
+    /// Crash-stop-aware acquire: if the node hosting the lock words has
+    /// crash-stopped (before or during acquisition), local state is
+    /// unwound and `Err(Error::PeerFailed)` is returned instead of
+    /// spinning on a corpse. A crashed *holder* is also bounded: once
+    /// any node in the cluster is observably dead, the ticket ahead of
+    /// us may belong to the corpse (its `now_serving` advance was never
+    /// transmitted), so the spin gives up after a short grace period —
+    /// a live holder's critical section is orders of magnitude shorter.
+    /// Either way the lock is unrecoverable — callers treat the
+    /// protected resource as read-only until the membership epoch
+    /// re-homes it (see `docs/ARCHITECTURE.md § Failure model`). On
+    /// success, returns whether the local-handover fast path was used,
+    /// like [`TicketLock::lock`].
+    pub fn try_lock(&self, ctx: &ThreadCtx) -> crate::Result<bool> {
+        self.lock_inner(ctx, true)
+    }
+
+    /// Grace the checked spin allows a (possibly dead) ticket holder
+    /// once a crash has been observed anywhere in the cluster.
+    const DEAD_HOLDER_GRACE: Duration = Duration::from_millis(300);
+
+    /// Roll back the local-state claim after a failed remote
+    /// acquisition, waking one waiter so it can observe the failure too.
+    fn unwind_local(&self) {
+        let mut st = self.local.lock().unwrap();
+        st.local_active = false;
+        st.node_holds = false;
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    fn lock_inner(&self, ctx: &ThreadCtx, checked: bool) -> crate::Result<bool> {
+        if checked && ctx.node_down(self.next_ticket.host()) {
+            return Err(crate::Error::PeerFailed(format!(
+                "ticket lock host {} crash-stopped",
+                self.next_ticket.host()
+            )));
+        }
         if self.handover {
             let mut st = self.local.lock().unwrap();
             loop {
@@ -123,7 +164,7 @@ impl TicketLock {
                 if st.node_holds {
                     // Handover: the node still owns the global ticket.
                     st.local_active = true;
-                    return true;
+                    return Ok(true);
                 }
                 // We are the node's representative: go remote.
                 st.local_active = true;
@@ -143,13 +184,54 @@ impl TicketLock {
             st.node_holds = true;
         }
 
-        // Remote acquisition: classic ticket protocol.
-        let my_ticket = self.next_ticket.fetch_add(ctx, 1);
+        // Remote acquisition: classic ticket protocol. The checked path
+        // bounds the wait: a crash of the host surfaces as an error CQE
+        // on the very read we are spinning on.
+        let my_ticket = if checked {
+            match self.next_ticket.try_fetch_add(ctx, 1) {
+                Ok(t) => t,
+                Err(e) => {
+                    self.unwind_local();
+                    return Err(e);
+                }
+            }
+        } else {
+            self.next_ticket.fetch_add(ctx, 1)
+        };
         let mut bo = Backoff::new();
-        while self.now_serving.load(ctx) != my_ticket {
+        let mut death_seen_at: Option<std::time::Instant> = None;
+        loop {
+            let serving = if checked {
+                match self.now_serving.try_load(ctx) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        self.unwind_local();
+                        return Err(e);
+                    }
+                }
+            } else {
+                self.now_serving.load(ctx)
+            };
+            if serving == my_ticket {
+                break;
+            }
+            if checked && ctx.cluster_has_failures() {
+                // The ticket being served may belong to a crash-stopped
+                // holder whose unlock never transmitted; the host being
+                // alive keeps the spin "healthy" forever. Give a live
+                // holder a grace period, then declare the lock wedged.
+                let since = *death_seen_at.get_or_insert_with(std::time::Instant::now);
+                if since.elapsed() > Self::DEAD_HOLDER_GRACE {
+                    self.unwind_local();
+                    return Err(crate::Error::PeerFailed(format!(
+                        "ticket {my_ticket} not served within the post-crash grace \
+                         (holder of ticket {serving} presumed crashed)"
+                    )));
+                }
+            }
             bo.snooze();
         }
-        false
+        Ok(false)
     }
 
     /// Release the lock: run the release fence so protected writes are
@@ -258,6 +340,31 @@ mod tests {
     #[test]
     fn multi_thread_without_handover() {
         mutex_stress(2, 2, 40, false);
+    }
+
+    /// A crashed lock host must bound the wait: try_lock returns
+    /// PeerFailed instead of spinning forever, and repeated attempts
+    /// keep failing fast (local claim state is unwound each time).
+    #[test]
+    fn try_lock_bounded_on_crashed_host() {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let m1 = Manager::new(cluster.clone(), 1);
+        let l0 = TicketLock::new(&m0, "cl", 0);
+        let l1 = TicketLock::new(&m1, "cl", 0);
+        l0.wait_ready(Duration::from_secs(10));
+        l1.wait_ready(Duration::from_secs(10));
+        let ctx1 = m1.ctx();
+        assert!(!l1.try_lock(&ctx1).expect("host alive"), "first acquire goes remote");
+        l1.unlock(&ctx1);
+
+        cluster.crash(0);
+        for _ in 0..3 {
+            assert!(
+                matches!(l1.try_lock(&ctx1), Err(crate::Error::PeerFailed(_))),
+                "try_lock must fail fast on a crashed host"
+            );
+        }
     }
 
     #[test]

@@ -9,16 +9,50 @@
 //!
 //! Keys can be unioned, which is how composite operations (e.g. an SST
 //! broadcast made of one remote write per peer) expose a single handle.
+//!
+//! Each tracking word carries a parallel **error word**: a completion
+//! with [`CqeStatus::PeerFailed`](crate::fabric::CqeStatus::PeerFailed)
+//! sets the op's error bit *before* clearing its pending bit, so a
+//! waiter that observes completion can then ask [`AckKey::failed`]
+//! whether any covered op died instead of succeeding. This is how a
+//! crash-stopped peer propagates up to `Err(Error::PeerFailed)` at the
+//! channel layer rather than hanging a spin loop. Error bits are cleared
+//! when their bit is next allocated, so recycled words never leak stale
+//! failures.
+//!
+//! Duplicate completions (a fault-injection mode) are idempotent:
+//! within one allocation lifetime, clearing a cleared bit and setting a
+//! set error bit are no-ops — and across lifetimes every `wr_id` also
+//! carries its word's **generation** (bumped when a drained word is
+//! recycled), which [`AckRegistry::complete`] checks, so a duplicate
+//! that outlives its bit's recycling is dropped instead of completing
+//! (or failing) an unrelated new op.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::util::Backoff;
 
+/// One tracking word: pending bits (set at issue, cleared at
+/// completion), the parallel error bits, and the recycling generation.
+pub struct AckWord {
+    pending: AtomicU64,
+    err: AtomicU64,
+    /// Bumped by the owning allocator each time the (quiescent) word is
+    /// recycled; stale completions from a previous life are rejected.
+    gen: AtomicU64,
+}
+
+impl AckWord {
+    fn new() -> AckWord {
+        AckWord { pending: AtomicU64::new(0), err: AtomicU64::new(0), gen: AtomicU64::new(0) }
+    }
+}
+
 /// Routes `wr_id`s back to their tracking words. Shared by all issuing
 /// threads of one manager and by the polling thread.
 pub struct AckRegistry {
-    words: RwLock<Vec<Arc<AtomicU64>>>,
+    words: RwLock<Vec<Arc<AckWord>>>,
 }
 
 impl AckRegistry {
@@ -27,30 +61,65 @@ impl AckRegistry {
     }
 
     /// Register a fresh tracking word; returns its slot index.
-    pub fn add_word(&self) -> (u32, Arc<AtomicU64>) {
-        let word = Arc::new(AtomicU64::new(0));
+    pub fn add_word(&self) -> (u32, Arc<AckWord>) {
+        let word = Arc::new(AckWord::new());
         let mut words = self.words.write().unwrap();
         words.push(word.clone());
         ((words.len() - 1) as u32, word)
     }
 
-    /// Pack a (slot, bit) pair into a `wr_id`.
+    /// Pack a (slot, bit, generation) triple into a `wr_id`: bits 0–5
+    /// the bit, 6–31 the word slot, 32–63 the word's recycling
+    /// generation **mod 2³²** (wrapping — a stale duplicate would have
+    /// to survive 2³² recyclings of one word to alias).
     #[inline]
-    pub fn wr_id(slot: u32, bit: u8) -> u64 {
-        ((slot as u64) << 6) | bit as u64
+    pub fn wr_id(slot: u32, bit: u8, gen: u64) -> u64 {
+        debug_assert!(slot < 1 << 26, "ack slot exceeds the wr_id field");
+        ((gen & 0xFFFF_FFFF) << 32) | ((slot as u64) << 6) | bit as u64
     }
 
-    /// Polling-thread side: clear the bit for a completed `wr_id`.
+    /// Polling-thread side: clear the bit for a completed `wr_id`. A
+    /// failed completion (`ok == false`) first sets the error bit, so
+    /// any waiter that sees the pending bit clear also sees the error.
+    /// Completions whose generation does not match the word's current
+    /// life are dropped — a duplicate CQE (fault injection) delivered
+    /// after its bit was recycled must not touch the new occupant.
     #[inline]
-    pub fn complete(&self, wr_id: u64) {
-        let slot = (wr_id >> 6) as usize;
+    pub fn complete(&self, wr_id: u64, ok: bool) {
+        let slot = ((wr_id >> 6) & ((1 << 26) - 1)) as usize;
         let bit = wr_id & 63;
+        let gen = wr_id >> 32;
+        let mask = 1u64 << bit;
         let words = self.words.read().unwrap();
-        words[slot].fetch_and(!(1u64 << bit), Ordering::Release);
+        let w = &words[slot];
+        // Compare modulo 2³² — the wr_id field is truncated, the word's
+        // counter is not.
+        if w.gen.load(Ordering::Acquire) & 0xFFFF_FFFF != gen {
+            return; // stale duplicate from a recycled life
+        }
+        if !ok {
+            w.err.fetch_or(mask, Ordering::Release);
+        }
+        w.pending.fetch_and(!mask, Ordering::Release);
     }
 
     pub fn word_count(&self) -> usize {
         self.words.read().unwrap().len()
+    }
+
+    /// Start a new life for a recycled word: bump its generation under
+    /// the registry's **write** lock, which excludes every in-flight
+    /// [`AckRegistry::complete`] (each holds the read lock across its
+    /// generation check *and* its bit mutation). A stale duplicate CQE
+    /// therefore either lands fully in the old life — clearing
+    /// already-clear bits, harmless — or observes the new generation
+    /// and is dropped; it can never interleave between check and act
+    /// and touch the new life's bits.
+    fn begin_new_life(&self, word: &AckWord) -> u64 {
+        let _guard = self.words.write().unwrap();
+        let gen = word.gen.load(Ordering::Relaxed).wrapping_add(1);
+        word.gen.store(gen, Ordering::Release);
+        gen
     }
 }
 
@@ -65,29 +134,34 @@ impl Default for AckRegistry {
 pub struct AckAllocator {
     registry: Arc<AckRegistry>,
     slot: u32,
-    word: Arc<AtomicU64>,
+    word: Arc<AckWord>,
+    /// The current word's recycling generation (mirrors `word.gen`;
+    /// only this allocator ever bumps it).
+    gen: u64,
     next_bit: u8,
     /// Full words parked for recycling once quiescent.
-    retired: Vec<(u32, Arc<AtomicU64>)>,
+    retired: Vec<(u32, Arc<AckWord>)>,
 }
 
 impl AckAllocator {
     pub fn new(registry: Arc<AckRegistry>) -> Self {
         let (slot, word) = registry.add_word();
-        AckAllocator { registry, slot, word, next_bit: 0, retired: Vec::new() }
+        AckAllocator { registry, slot, word, gen: 0, next_bit: 0, retired: Vec::new() }
     }
 
-    /// Allocate one tracking bit: sets it, returns the wr_id to post and
-    /// the (word, mask) pair for the key.
-    pub fn alloc(&mut self) -> (u64, Arc<AtomicU64>, u64) {
+    /// Allocate one tracking bit: sets it (clearing any stale error bit
+    /// from the word's previous life), returns the wr_id to post and the
+    /// (word, mask) pair for the key.
+    pub fn alloc(&mut self) -> (u64, Arc<AckWord>, u64) {
         if self.next_bit == 64 {
             self.refill();
         }
         let bit = self.next_bit;
         self.next_bit += 1;
         let mask = 1u64 << bit;
-        self.word.fetch_or(mask, Ordering::AcqRel);
-        (AckRegistry::wr_id(self.slot, bit), self.word.clone(), mask)
+        self.word.err.fetch_and(!mask, Ordering::Relaxed);
+        self.word.pending.fetch_or(mask, Ordering::AcqRel);
+        (AckRegistry::wr_id(self.slot, bit, self.gen), self.word.clone(), mask)
     }
 
     /// Allocate `n` tracking bits for a batched post: bits packed into as
@@ -107,10 +181,11 @@ impl AckAllocator {
             for i in 0..take {
                 let bit = self.next_bit + i;
                 mask |= 1u64 << bit;
-                wr_ids.push(AckRegistry::wr_id(self.slot, bit));
+                wr_ids.push(AckRegistry::wr_id(self.slot, bit, self.gen));
             }
             self.next_bit += take;
-            self.word.fetch_or(mask, Ordering::AcqRel);
+            self.word.err.fetch_and(!mask, Ordering::Relaxed);
+            self.word.pending.fetch_or(mask, Ordering::AcqRel);
             key.union(AckKey::single(self.word.clone(), mask));
             remaining -= take as usize;
         }
@@ -127,19 +202,25 @@ impl AckAllocator {
             // Quiescent iff no AckKey still references it: registry +
             // retired list (+ self.word for the entry just pushed).
             let quiescent_count = if Arc::ptr_eq(w, &self.word) { 3 } else { 2 };
-            if w.load(Ordering::Acquire) == 0 && Arc::strong_count(w) == quiescent_count {
+            if w.pending.load(Ordering::Acquire) == 0 && Arc::strong_count(w) == quiescent_count {
                 recycled = Some(i);
                 break;
             }
         }
         if let Some(i) = recycled {
             let (slot, word) = self.retired.swap_remove(i);
+            // New life for the word: stale duplicates carrying the old
+            // generation are rejected by `complete` from here on (the
+            // registry lock makes check+act atomic vs this bump).
+            let gen = self.registry.begin_new_life(&word);
             self.slot = slot;
             self.word = word;
+            self.gen = gen;
         } else {
             let (slot, word) = self.registry.add_word();
             self.slot = slot;
             self.word = word;
+            self.gen = 0;
         }
         self.next_bit = 0;
     }
@@ -148,7 +229,7 @@ impl AckAllocator {
 /// Completion handle for one or more asynchronous operations.
 #[derive(Clone, Default)]
 pub struct AckKey {
-    parts: Vec<(Arc<AtomicU64>, u64)>,
+    parts: Vec<(Arc<AckWord>, u64)>,
 }
 
 impl AckKey {
@@ -157,7 +238,7 @@ impl AckKey {
         AckKey { parts: Vec::new() }
     }
 
-    pub fn single(word: Arc<AtomicU64>, mask: u64) -> Self {
+    pub fn single(word: Arc<AckWord>, mask: u64) -> Self {
         AckKey { parts: vec![(word, mask)] }
     }
 
@@ -175,7 +256,15 @@ impl AckKey {
     /// Non-blocking completion query.
     #[inline]
     pub fn query(&self) -> bool {
-        self.parts.iter().all(|(w, m)| w.load(Ordering::Acquire) & m == 0)
+        self.parts.iter().all(|(w, m)| w.pending.load(Ordering::Acquire) & m == 0)
+    }
+
+    /// Did any covered op complete **in error** (peer crash-stopped)?
+    /// Meaningful once [`AckKey::query`] returns true; error bits are
+    /// set before the matching pending bit clears.
+    #[inline]
+    pub fn failed(&self) -> bool {
+        self.parts.iter().any(|(w, m)| w.err.load(Ordering::Acquire) & m != 0)
     }
 
     /// Spin (with backoff) until complete.
@@ -187,6 +276,18 @@ impl AckKey {
             if std::time::Instant::now() > deadline {
                 panic!("ack_key wait timed out (30 s): outstanding ops never completed");
             }
+        }
+    }
+
+    /// Wait, then surface per-op failure: `Err(Error::PeerFailed)` if
+    /// any covered op completed in error. A key never hangs on a crash —
+    /// the fabric drains dead ops with error completions.
+    pub fn wait_result(&self) -> crate::Result<()> {
+        self.wait();
+        if self.failed() {
+            Err(crate::Error::PeerFailed("op completed in error (peer crashed)".into()))
+        } else {
+            Ok(())
         }
     }
 
@@ -206,8 +307,76 @@ mod tests {
         let (wr, word, mask) = alloc.alloc();
         let key = AckKey::single(word, mask);
         assert!(!key.query(), "bit set at issue");
-        reg.complete(wr);
+        reg.complete(wr, true);
         assert!(key.query(), "bit cleared at completion");
+        assert!(!key.failed());
+        assert!(key.wait_result().is_ok());
+    }
+
+    #[test]
+    fn error_completion_sets_failed() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        let (wr1, w1, m1) = alloc.alloc();
+        let (wr2, w2, m2) = alloc.alloc();
+        let mut key = AckKey::single(w1, m1);
+        key.union(AckKey::single(w2, m2));
+        reg.complete(wr1, true);
+        reg.complete(wr2, false); // peer failed
+        assert!(key.query(), "error completions still complete the key");
+        assert!(key.failed(), "error bit visible after completion");
+        assert!(matches!(key.wait_result(), Err(crate::Error::PeerFailed(_))));
+        // Duplicate delivery of the error CQE is idempotent.
+        reg.complete(wr2, false);
+        assert!(key.query() && key.failed());
+    }
+
+    #[test]
+    fn reallocated_bit_clears_stale_error() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        // Burn a full word with one failure, keys dropped immediately.
+        for i in 0..64 {
+            let (wr, _w, _m) = alloc.alloc();
+            reg.complete(wr, i == 7);
+        }
+        // Rollover recycles the word; the fresh bits must not report the
+        // old failures.
+        let (wr, w, m) = alloc.alloc();
+        let key = AckKey::single(w, m);
+        assert!(!key.failed(), "stale error bit leaked into a recycled bit");
+        reg.complete(wr, true);
+        assert!(key.wait_result().is_ok());
+    }
+
+    /// A duplicate CQE that outlives its bit's recycling must not touch
+    /// the new occupant: the generation check drops it.
+    #[test]
+    fn stale_generation_duplicate_is_dropped() {
+        let reg = Arc::new(AckRegistry::new());
+        let mut alloc = AckAllocator::new(reg.clone());
+        // Life 0: burn the whole word; remember one wr_id as the "late
+        // duplicate" a faulty fabric might redeliver.
+        let mut old_wrs = Vec::new();
+        for _ in 0..64 {
+            let (wr, _w, _m) = alloc.alloc();
+            old_wrs.push(wr);
+            reg.complete(wr, true);
+        }
+        // Rollover recycles the word into generation 1.
+        let (wr_new, w, m) = alloc.alloc();
+        let key = AckKey::single(w, m);
+        assert!(!key.query(), "new op pending");
+        // Redeliver every old completion — bit 0 of the old life aliases
+        // bit 0 of the new life, but the generation mismatch drops them.
+        for wr in &old_wrs {
+            reg.complete(*wr, true);
+            reg.complete(*wr, false); // even as a late *error* duplicate
+        }
+        assert!(!key.query(), "stale duplicate completed the new op");
+        assert!(!key.failed(), "stale duplicate failed the new op");
+        reg.complete(wr_new, true);
+        assert!(key.query() && !key.failed());
     }
 
     #[test]
@@ -220,9 +389,9 @@ mod tests {
         key.union(AckKey::single(w2, m2));
         // Same underlying word → parts merged.
         assert_eq!(key.tracked_parts(), 1);
-        reg.complete(wr1);
+        reg.complete(wr1, true);
         assert!(!key.query());
-        reg.complete(wr2);
+        reg.complete(wr2, true);
         assert!(key.query());
     }
 
@@ -233,7 +402,7 @@ mod tests {
         // Burn 60 bits so a 10-bit batch must straddle a word boundary.
         for _ in 0..60 {
             let (wr, _w, _m) = alloc.alloc();
-            reg.complete(wr);
+            reg.complete(wr, true);
         }
         let mut wr_ids = Vec::new();
         let key = alloc.alloc_batch(10, &mut wr_ids);
@@ -242,7 +411,7 @@ mod tests {
         assert_eq!(key.tracked_parts(), 2, "batch straddles two words");
         for (i, wr) in wr_ids.iter().enumerate() {
             assert!(!key.query(), "incomplete after {i} acks");
-            reg.complete(*wr);
+            reg.complete(*wr, true);
         }
         assert!(key.query(), "complete after all acks");
         // Empty batches are already complete.
@@ -264,7 +433,7 @@ mod tests {
         dedup.dedup();
         assert_eq!(dedup.len(), 200);
         for wr in &wr_ids {
-            reg.complete(*wr);
+            reg.complete(*wr, true);
         }
         assert!(key.query());
     }
@@ -272,7 +441,9 @@ mod tests {
     #[test]
     fn ready_key_is_done() {
         assert!(AckKey::ready().query());
+        assert!(!AckKey::ready().failed());
         AckKey::ready().wait();
+        assert!(AckKey::ready().wait_result().is_ok());
     }
 
     #[test]
@@ -282,7 +453,7 @@ mod tests {
         // Fill 64 bits and complete them all; keys dropped immediately.
         for _ in 0..64 {
             let (wr, _w, _m) = alloc.alloc();
-            reg.complete(wr);
+            reg.complete(wr, true);
         }
         let before = reg.word_count();
         // Next alloc rolls over; the drained word should be recycled, not
@@ -290,7 +461,7 @@ mod tests {
         let (wr, w, m) = alloc.alloc();
         assert_eq!(reg.word_count(), before, "recycled drained word");
         let key = AckKey::single(w, m);
-        reg.complete(wr);
+        reg.complete(wr, true);
         assert!(key.query());
     }
 
@@ -302,7 +473,7 @@ mod tests {
         for _ in 0..64 {
             let (wr, w, m) = alloc.alloc();
             keys.push(AckKey::single(w, m));
-            reg.complete(wr);
+            reg.complete(wr, true);
         }
         let before = reg.word_count();
         let (_wr, _w, _m) = alloc.alloc();
@@ -325,7 +496,7 @@ mod tests {
         let reg2 = reg.clone();
         let h = std::thread::spawn(move || {
             for wr in wrs {
-                reg2.complete(wr);
+                reg2.complete(wr, true);
             }
         });
         key.wait();

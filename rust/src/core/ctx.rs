@@ -271,7 +271,7 @@ impl ThreadCtx {
         buf.clear();
         let n = self.node.cq().poll(64, &mut buf);
         for cqe in buf.iter() {
-            self.registry.complete(cqe.wr_id);
+            self.registry.complete(cqe.wr_id, cqe.is_ok());
         }
         n
     }
@@ -291,6 +291,35 @@ impl ThreadCtx {
                 bo.reset();
             }
         }
+    }
+
+    /// Wait like [`ThreadCtx::wait`], then surface per-op failure:
+    /// `Err(Error::PeerFailed)` if any covered op completed with an
+    /// error CQE (its peer crash-stopped) instead of taking effect. A
+    /// key never hangs on a crash — the fabric drains dead ops with
+    /// error completions.
+    pub fn wait_checked(&self, key: &AckKey) -> crate::Result<()> {
+        self.wait(key);
+        if key.failed() {
+            Err(crate::Error::PeerFailed("remote op completed in error".into()))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Has `node` crash-stopped? (Fault injection; always false on a
+    /// fault-free fabric.)
+    #[inline]
+    pub fn node_down(&self, node: crate::fabric::NodeId) -> bool {
+        self.cluster.is_down(node)
+    }
+
+    /// Has *any* node crash-stopped? Cheap (one summary mask load); the
+    /// channel layer's bounded waits use it to decide whether an
+    /// unusually long spin might be waiting on a corpse.
+    #[inline]
+    pub fn cluster_has_failures(&self) -> bool {
+        self.cluster.down_mask() != 0
     }
 
     pub fn me(&self) -> crate::fabric::NodeId {
@@ -419,7 +448,21 @@ impl ThreadCtx {
     pub fn read_many(&self, reqs: &[(Region, u64, usize)]) -> Vec<ReadGuard> {
         let (key, bufs) = self.read_many_async(reqs);
         self.wait(&key);
-        for (region, _, _) in reqs {
+        let any_failed = key.failed();
+        // If the *issuing* node crash-stopped, every remote read failed
+        // regardless of its target's health.
+        let me_down = any_failed && self.cluster.is_down(self.me);
+        for (i, (region, _, len)) in reqs.iter().enumerate() {
+            if any_failed && (me_down || self.cluster.is_down(region.node)) {
+                // Failed READ: the buffer was never written. Zero it so
+                // stale pool contents can't masquerade as a fresh (even
+                // checksum-valid) frame; callers' validation protocols
+                // then retry and take their dead-peer path.
+                for w in 0..*len {
+                    bufs[i].store(w, 0);
+                }
+                continue;
+            }
             if region.node != self.me {
                 self.shared.unfenced[region.node as usize].store(0, Ordering::Relaxed);
             }
@@ -540,10 +583,35 @@ impl ThreadCtx {
     pub fn read(&self, src: Region, off: u64, len: usize) -> ReadGuard {
         let (key, buf) = self.read_async(src, off, len);
         self.wait(&key);
+        if key.failed() {
+            // Crash-stopped peer: the buffer was never written (see
+            // read_many for why it must be zeroed, not returned as-is).
+            for w in 0..len {
+                buf.store(w, 0);
+            }
+            return self.guard_from(&buf);
+        }
         if src.node != self.me {
             self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
         }
         self.guard_from(&buf)
+    }
+
+    /// Like [`ThreadCtx::read`], but surfaces a crash-stopped source as
+    /// `Err(Error::PeerFailed)` instead of returning a zeroed buffer.
+    pub fn try_read(&self, src: Region, off: u64, len: usize) -> crate::Result<ReadGuard> {
+        let (key, buf) = self.read_async(src, off, len);
+        self.wait(&key);
+        if key.failed() {
+            return Err(crate::Error::PeerFailed(format!(
+                "read from crashed node {}",
+                src.node
+            )));
+        }
+        if src.node != self.me {
+            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+        }
+        Ok(self.guard_from(&buf))
     }
 
     /// Blocking single-word read.
@@ -600,6 +668,57 @@ impl ThreadCtx {
         buf.load(0)
     }
 
+    /// Like [`ThreadCtx::fetch_add`], but a crash-stopped target is
+    /// surfaced as `Err(Error::PeerFailed)` instead of a garbage old
+    /// value. The channel layer's bounded-wait paths (ticket lock,
+    /// shared queue) are built on this.
+    pub fn try_fetch_add(&self, target: Region, off: u64, add: u64) -> crate::Result<u64> {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            return Ok(self.node.arena().fetch_add(addr, add));
+        }
+        let buf = self.mem_ref(1);
+        let key = self.issue(target.node, Verb::FetchAdd { remote: addr, add, local: buf.addr });
+        self.wait(&key);
+        if key.failed() {
+            return Err(crate::Error::PeerFailed(format!(
+                "fetch_add on crashed node {}",
+                target.node
+            )));
+        }
+        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        Ok(buf.load(0))
+    }
+
+    /// Like [`ThreadCtx::compare_swap`], with crash-stop surfaced as
+    /// `Err(Error::PeerFailed)`.
+    pub fn try_compare_swap(
+        &self,
+        target: Region,
+        off: u64,
+        expect: u64,
+        swap: u64,
+    ) -> crate::Result<u64> {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            return Ok(self.node.arena().compare_swap(addr, expect, swap));
+        }
+        let buf = self.mem_ref(1);
+        let key = self.issue(
+            target.node,
+            Verb::CompareSwap { remote: addr, expect, swap, local: buf.addr },
+        );
+        self.wait(&key);
+        if key.failed() {
+            return Err(crate::Error::PeerFailed(format!(
+                "compare_swap on crashed node {}",
+                target.node
+            )));
+        }
+        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        Ok(buf.load(0))
+    }
+
     // ---- fences ----------------------------------------------------
 
     /// Issue (but do not wait for) the flushing reads a fence needs for
@@ -632,6 +751,27 @@ impl ThreadCtx {
             FenceScope::Thread => {
                 let key = self.fence_issue(None);
                 self.wait(&key);
+            }
+            FenceScope::Global => {
+                panic!("global fences cover other threads: call Manager::global_fence(ctx)")
+            }
+        }
+    }
+
+    /// Like [`ThreadCtx::fence`], but surfaces a crash-stopped peer as
+    /// `Err(Error::PeerFailed)`: the flushing read to a dead node
+    /// completes in error, meaning the covered writes were **not**
+    /// placed there and never will be. Writes to surviving peers are
+    /// still flushed by the same call.
+    pub fn try_fence(&self, scope: FenceScope) -> crate::Result<()> {
+        match scope {
+            FenceScope::Pair(peer) => {
+                let key = self.fence_issue(Some(peer));
+                self.wait_checked(&key)
+            }
+            FenceScope::Thread => {
+                let key = self.fence_issue(None);
+                self.wait_checked(&key)
             }
             FenceScope::Global => {
                 panic!("global fences cover other threads: call Manager::global_fence(ctx)")

@@ -279,6 +279,36 @@ impl ShardedIndex {
         prev
     }
 
+    /// Compare-and-remove: drop `key` only if its current entry equals
+    /// `expect`. Crash recovery's broadcast deletes use this so a stale
+    /// drop can never clobber a racing fresh re-insert (which carries a
+    /// new home/generation). Returns whether the entry was removed.
+    pub fn remove_matching(&self, key: u64, expect: &IndexEntry) -> bool {
+        let h = mix(key);
+        let shard = self.shard_of(h);
+        let mut st = shard.writer.lock().unwrap();
+        let (hit, _) = shard.probe_for_write(key, h);
+        let Some(i) = hit else {
+            return false;
+        };
+        let s = &shard.slots[i];
+        let meta = s.meta.load(Ordering::Relaxed);
+        let cur = IndexEntry {
+            node: ((meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+            slot: (meta & SLOT_MASK) as u32,
+            counter: s.counter.load(Ordering::Relaxed),
+        };
+        if cur != *expect {
+            return false;
+        }
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        s.meta.store(STATE_TOMB << STATE_SHIFT, Ordering::Release);
+        st.live -= 1;
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        self.len.fetch_sub(1, Ordering::Relaxed);
+        true
+    }
+
     /// Remove `key`. Returns the entry that was present, if any.
     pub fn remove(&self, key: u64) -> Option<IndexEntry> {
         let h = mix(key);
@@ -299,6 +329,33 @@ impl ShardedIndex {
         shard.seq.fetch_add(1, Ordering::AcqRel);
         self.len.fetch_sub(1, Ordering::Relaxed);
         Some(prev)
+    }
+
+    /// Snapshot every live entry homed on `node` (shard by shard, under
+    /// each shard's writer mutex so entries are internally consistent).
+    /// This is the recovery path's scan — on a crash, the dead node's
+    /// key range is exactly this set, replicated into every index by the
+    /// tracker broadcasts that announced it.
+    pub fn entries_homed_on(&self, node: NodeId) -> Vec<(u64, IndexEntry)> {
+        let mut out = Vec::new();
+        for shard in self.shards.iter() {
+            let _st = shard.writer.lock().unwrap();
+            for s in shard.slots.iter() {
+                let meta = s.meta.load(Ordering::Relaxed);
+                if meta_state(meta) != STATE_FULL {
+                    continue;
+                }
+                let e = IndexEntry {
+                    node: ((meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+                    slot: (meta & SLOT_MASK) as u32,
+                    counter: s.counter.load(Ordering::Relaxed),
+                };
+                if e.node == node {
+                    out.push((s.key.load(Ordering::Relaxed), e));
+                }
+            }
+        }
+        out
     }
 
     /// Live entry count.
@@ -337,6 +394,21 @@ mod tests {
         assert!(idx.is_empty());
     }
 
+    /// Compare-and-remove only drops an exactly matching entry: a stale
+    /// delete must not clobber a fresh re-insert's new generation.
+    #[test]
+    fn remove_matching_guards_generation() {
+        let idx = ShardedIndex::new(64);
+        idx.insert(5, e(1, 10, 3));
+        assert!(!idx.remove_matching(5, &e(1, 10, 2)), "wrong counter must not remove");
+        assert!(!idx.remove_matching(5, &e(2, 10, 3)), "wrong node must not remove");
+        assert_eq!(idx.get(5), Some(e(1, 10, 3)), "entry survived mismatched drops");
+        assert!(idx.remove_matching(5, &e(1, 10, 3)));
+        assert_eq!(idx.get(5), None);
+        assert!(!idx.remove_matching(5, &e(1, 10, 3)), "absent key");
+        assert_eq!(idx.len(), 0);
+    }
+
     #[test]
     fn dense_keys_fill_to_capacity() {
         let idx = ShardedIndex::new(4096);
@@ -347,6 +419,25 @@ mod tests {
         for k in 0..4096u64 {
             assert_eq!(idx.get(k), Some(e(0, k as u32, k)), "key {k}");
         }
+    }
+
+    /// The recovery scan returns exactly the live entries homed on one
+    /// node, with internally consistent fields.
+    #[test]
+    fn entries_homed_on_snapshots_by_node() {
+        let idx = ShardedIndex::new(256);
+        for k in 0..30u64 {
+            idx.insert(k, e((k % 3) as NodeId, k as u32, k * 5));
+        }
+        idx.remove(3);
+        let mut on0 = idx.entries_homed_on(0);
+        on0.sort_by_key(|(k, _)| *k);
+        let keys: Vec<u64> = on0.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![0, 6, 9, 12, 15, 18, 21, 24, 27]);
+        for (k, entry) in &on0 {
+            assert_eq!(*entry, e(0, *k as u32, k * 5), "key {k}");
+        }
+        assert!(idx.entries_homed_on(7).is_empty());
     }
 
     /// Tombstone churn (insert/remove cycles far beyond the live count)

@@ -14,12 +14,63 @@
 //! the paper's use of two-sided verbs for setup only.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::fabric::{Cluster, NodeId, QpId, Region, Verb, Wqe};
+
+/// Cluster membership as observed by this node: a bitmask of
+/// crash-stopped peers plus a monotonically increasing **epoch** that
+/// bumps whenever the mask grows. Layers above key recovery off the
+/// epoch (the kvstore re-homes a dead node's keys once per epoch; the
+/// read cache drops entries filled under a dead epoch).
+///
+/// Detection: the simulated fabric exposes a perfect failure detector
+/// ([`Cluster::down_mask`] — a node is down iff it crash-stopped), which
+/// the manager's polling thread mirrors here every few milliseconds. On
+/// real RDMA a perfect detector does not exist and agreement needs
+/// explicit protocol support ("The Impact of RDMA on Agreement"); the
+/// simulation separates that concern so the *recovery* protocol can be
+/// tested deterministically.
+pub struct Membership {
+    epoch: AtomicU64,
+    dead: AtomicU64,
+}
+
+impl Membership {
+    fn new() -> Membership {
+        Membership { epoch: AtomicU64::new(0), dead: AtomicU64::new(0) }
+    }
+
+    /// Monotonic epoch: bumps once per newly observed dead node.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Bitmask of nodes this node has observed as crash-stopped.
+    pub fn dead_mask(&self) -> u64 {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead_mask() >> node & 1 == 1
+    }
+
+    /// Record `node` as dead; returns true if it is newly dead (and the
+    /// epoch advanced). Idempotent and thread-safe.
+    pub(crate) fn note_dead(&self, node: NodeId) -> bool {
+        let bit = 1u64 << node;
+        let prev = self.dead.fetch_or(bit, Ordering::SeqCst);
+        if prev & bit == 0 {
+            self.epoch.fetch_add(1, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+}
 
 use super::ack::AckRegistry;
 use super::ctx::{CtxShared, ThreadCtx};
@@ -33,6 +84,7 @@ struct Shared {
     cluster: Arc<Cluster>,
     me: NodeId,
     ack: Arc<AckRegistry>,
+    membership: Arc<Membership>,
     channels: Mutex<HashMap<String, Arc<Endpoint>>>,
     ctrl_qps: Mutex<Vec<Option<QpId>>>,
     shutdown: AtomicBool,
@@ -50,10 +102,12 @@ impl Manager {
     pub fn new(cluster: Arc<Cluster>, me: NodeId) -> Arc<Manager> {
         let node = cluster.node(me).clone();
         let pool = Arc::new(MemPool::new(node, HUGE_PAGE_WORDS));
+        debug_assert!(cluster.num_nodes() <= 64, "membership mask holds at most 64 nodes");
         let shared = Arc::new(Shared {
             cluster: cluster.clone(),
             me,
             ack: Arc::new(AckRegistry::new()),
+            membership: Arc::new(Membership::new()),
             channels: Mutex::new(HashMap::new()),
             ctrl_qps: Mutex::new(vec![None; cluster.num_nodes()]),
             shutdown: AtomicBool::new(false),
@@ -100,6 +154,18 @@ impl Manager {
 
     pub fn pool(&self) -> &Arc<MemPool> {
         &self.pool
+    }
+
+    /// This node's membership view (epoch + dead mask), kept current by
+    /// the polling thread. Channels that must skip dead peers (the
+    /// tracker ring's acks, the kvstore's recovery) hold a clone.
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.shared.membership
+    }
+
+    /// Has this node observed `node` as crash-stopped?
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.shared.membership.is_dead(node)
     }
 
     /// Create a per-thread issuing context. Each application thread calls
@@ -201,23 +267,39 @@ impl Shared {
         // Application threads drain the CQ cooperatively while they wait
         // (ThreadCtx::drain_cq); this thread is the backstop for
         // completions nobody is waiting on. Blocking pop keeps it off
-        // the run queue (EXPERIMENTS.md §Perf).
+        // the run queue (EXPERIMENTS.md §Perf). It doubles as the
+        // failure detector: every tick it mirrors the fabric's down mask
+        // into this node's Membership.
         let cq = self.cluster.node(self.me).cq();
         let mut buf = Vec::with_capacity(256);
         loop {
+            self.sync_membership();
             match cq.poll_timeout(Duration::from_millis(2)) {
                 Some(cqe) => {
-                    self.ack.complete(cqe.wr_id);
+                    self.ack.complete(cqe.wr_id, cqe.is_ok());
                     buf.clear();
                     let n = cq.poll(256, &mut buf);
                     for cqe in buf.iter().take(n) {
-                        self.ack.complete(cqe.wr_id);
+                        self.ack.complete(cqe.wr_id, cqe.is_ok());
                     }
                 }
                 None => {
                     if self.shutdown.load(Ordering::Relaxed) {
                         break;
                     }
+                }
+            }
+        }
+    }
+
+    /// Mirror the fabric's crash-stop mask into this node's membership
+    /// (bumping the epoch once per newly dead node).
+    fn sync_membership(&self) {
+        let down = self.cluster.down_mask();
+        if down != self.membership.dead_mask() {
+            for node in 0..self.cluster.num_nodes() as NodeId {
+                if down >> node & 1 == 1 {
+                    self.membership.note_dead(node);
                 }
             }
         }
@@ -448,6 +530,47 @@ mod tests {
         assert_eq!(ctx.unfenced_peers(), 1);
         assert_eq!(ctx.read1(r1, 0), 7);
         assert_eq!(ctx.unfenced_peers(), 0);
+    }
+
+    /// The polling thread mirrors the fabric's crash mask into
+    /// Membership, bumping the epoch exactly once per death; ops against
+    /// the dead peer return PeerFailed instead of hanging.
+    #[test]
+    fn membership_detects_crash_and_ops_fail_fast() {
+        let cluster = Cluster::new(3, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let _m1 = Manager::new(cluster.clone(), 1);
+        let _m2 = Manager::new(cluster.clone(), 2);
+        let r2 = cluster.node(2).register_mr(8, false);
+        let ctx = m0.ctx();
+        assert_eq!(ctx.read1(r2, 0), 0);
+        assert_eq!(m0.membership().epoch(), 0);
+        assert!(!m0.is_dead(2));
+
+        cluster.crash(2);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !m0.is_dead(2) {
+            assert!(std::time::Instant::now() < deadline, "membership never updated");
+            std::thread::yield_now();
+        }
+        assert_eq!(m0.membership().epoch(), 1);
+        assert_eq!(m0.membership().dead_mask(), 0b100);
+        assert!(!m0.is_dead(1));
+
+        // Fallible ops surface the dead peer; nothing hangs.
+        assert!(matches!(
+            ctx.try_read(r2, 0, 1),
+            Err(crate::Error::PeerFailed(_))
+        ));
+        assert!(matches!(
+            ctx.try_fetch_add(r2, 0, 1),
+            Err(crate::Error::PeerFailed(_))
+        ));
+        // A fence covering unfenced writes to the dead peer reports it.
+        ctx.write1(r2, 0, 9);
+        assert!(ctx.try_fence(crate::core::ctx::FenceScope::Pair(2)).is_err());
+        // The zeroed-buffer contract of the infallible read.
+        assert_eq!(ctx.read1(r2, 0), 0);
     }
 
     /// Global fence covers writes issued by *other* threads of the node.

@@ -27,4 +27,4 @@ pub use ack::AckKey;
 pub use ctx::{FenceScope, MemRef, ReadGuard, ThreadCtx};
 pub use endpoint::Endpoint;
 pub use index::{IndexEntry, ShardedIndex};
-pub use manager::Manager;
+pub use manager::{Manager, Membership};

@@ -8,11 +8,45 @@ use crate::util::queue::Queue;
 
 use super::qp::QpId;
 
+/// Completion status. Real verbs carry a rich status enum
+/// (`IBV_WC_SUCCESS`, retry-exceeded, …); the simulation needs only the
+/// distinction LOCO's error propagation acts on: did the op take effect,
+/// or did the peer (or the local port) fail?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CqeStatus {
+    /// The op executed at the target.
+    Ok,
+    /// The target node crash-stopped (or the issuing node is itself
+    /// dead): the op had **no remote effect** and any local result
+    /// buffer is unchanged.
+    PeerFailed,
+}
+
 /// Completion queue entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Cqe {
     pub wr_id: u64,
     pub qp: QpId,
+    pub status: CqeStatus,
+}
+
+impl Cqe {
+    /// A successful completion.
+    #[inline]
+    pub fn ok(wr_id: u64, qp: QpId) -> Cqe {
+        Cqe { wr_id, qp, status: CqeStatus::Ok }
+    }
+
+    /// An error completion (peer crash-stopped).
+    #[inline]
+    pub fn failed(wr_id: u64, qp: QpId) -> Cqe {
+        Cqe { wr_id, qp, status: CqeStatus::PeerFailed }
+    }
+
+    #[inline]
+    pub fn is_ok(&self) -> bool {
+        self.status == CqeStatus::Ok
+    }
 }
 
 pub struct CompletionQueue {
@@ -64,7 +98,7 @@ mod tests {
         let cq = CompletionQueue::new();
         assert!(cq.is_empty());
         for i in 0..5 {
-            cq.post(Cqe { wr_id: i, qp: QpId { node: 0, index: 0 } });
+            cq.post(Cqe::ok(i, QpId { node: 0, index: 0 }));
         }
         let mut out = Vec::new();
         assert_eq!(cq.poll(3, &mut out), 3);

@@ -1,0 +1,159 @@
+//! Deterministic, seeded fault injection for the simulated fabric.
+//!
+//! The fabric is, by default, perfectly reliable and perfectly ordered —
+//! which means every consistency claim the channel layer makes is only
+//! ever exercised on the happy path. A [`FaultPlan`] installs seeded
+//! per-operation hooks in the NIC engine (`fabric::nic`) and the post
+//! path (`fabric::network`) that recreate the failure modes a real RoCE
+//! deployment exhibits, while staying **reproducible**: the same seed
+//! always yields the same schedule, so a failing chaos run can be
+//! replayed from its printed seed.
+//!
+//! Injected faults, and what each is allowed to break:
+//!
+//! * **Delay** — extra per-WQE network latency, sampled per op. Per-QP
+//!   arrival order is still monotonic (RC QPs never reorder), so delays
+//!   reorder operations only *across* QPs — exactly the reordering RDMA
+//!   permits.
+//! * **Completion reorder** — adjacent CQEs from *different* QPs may
+//!   swap in the shared CQ. Same-QP completion order is never violated
+//!   (the RFC 5040 guarantee LOCO's ack batching relies on).
+//! * **Duplicate completions** — a CQE may be delivered twice. The ack
+//!   bitset must be idempotent against this.
+//! * **QP flap** — a QP transiently enters the error state
+//!   ([`Qp::is_error`](super::qp::Qp::is_error)); everything in flight
+//!   is retransmitted after recovery with an extra penalty, preserving
+//!   submission order.
+//! * **Crash-stop** — a node stops serving entirely (see
+//!   [`Cluster::crash`](super::network::Cluster::crash)): verbs
+//!   targeting it complete with
+//!   [`CqeStatus::PeerFailed`](super::cq::CqeStatus::PeerFailed), its
+//!   own posts fail, and it never comes back. Can be scheduled by op
+//!   count here or triggered explicitly by a test.
+//!
+//! All hooks live behind `FabricConfig::faults: Option<FaultPlan>`; the
+//! fault-free path pays only an `Option` branch (see
+//! `bench::micro::fault_hook_overhead`).
+//!
+//! # Examples
+//!
+//! ```
+//! use loco::fabric::FaultPlan;
+//!
+//! // A reproducible chaos schedule: 20 % of ops delayed up to 20 µs,
+//! // 10 % duplicated completions, 10 % reordered, occasional QP flaps.
+//! let plan = FaultPlan::seeded(42)
+//!     .delays(0.2, 20_000)
+//!     .dup_completions(0.1)
+//!     .reorders(0.1)
+//!     .qp_flaps(0.02, 30_000, 5_000);
+//! assert_eq!(plan.seed, 42);
+//! assert!(plan.any_active());
+//! ```
+
+use super::NodeId;
+
+/// A seeded fault-injection schedule (see the module docs). Construct
+/// with [`FaultPlan::seeded`] and chain the builder methods.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// RNG seed for every sampled decision. The engine mixes in the node
+    /// id, so per-node streams are independent but reproducible.
+    pub seed: u64,
+    /// Probability that a WQE is charged extra latency.
+    pub delay_prob: f64,
+    /// Maximum extra latency, ns (sampled uniformly in `[0, max]`).
+    pub delay_max_ns: u64,
+    /// Probability that a CQE is delivered twice.
+    pub dup_prob: f64,
+    /// Probability that a CQE is held back and swapped with the next
+    /// CQE from a different QP.
+    pub reorder_prob: f64,
+    /// Per-submission probability that the QP flaps into the error
+    /// state.
+    pub flap_prob: f64,
+    /// How long a flapped QP stays in the error state, ns.
+    pub flap_ns: u64,
+    /// Retransmission penalty added to everything in flight on a
+    /// flapped QP once it recovers, ns.
+    pub retransmit_ns: u64,
+    /// Crash-stop `node` after its NIC engine has executed `ops` work
+    /// requests: `(node, ops)`. Tests can instead call
+    /// [`Cluster::crash`](super::network::Cluster::crash) directly.
+    pub crash_after: Option<(NodeId, u64)>,
+}
+
+impl FaultPlan {
+    /// An inert plan (all probabilities zero) carrying `seed`. Useful on
+    /// its own to measure the cost of having the hooks installed.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Delay each op with probability `prob` by up to `max_ns`.
+    pub fn delays(mut self, prob: f64, max_ns: u64) -> FaultPlan {
+        self.delay_prob = prob;
+        self.delay_max_ns = max_ns;
+        self
+    }
+
+    /// Duplicate each completion with probability `prob`.
+    pub fn dup_completions(mut self, prob: f64) -> FaultPlan {
+        self.dup_prob = prob;
+        self
+    }
+
+    /// Swap adjacent completions of different QPs with probability
+    /// `prob`.
+    pub fn reorders(mut self, prob: f64) -> FaultPlan {
+        self.reorder_prob = prob;
+        self
+    }
+
+    /// Flap a QP into the error state with per-submission probability
+    /// `prob`; it recovers after `flap_ns` and retransmits everything in
+    /// flight with an extra `retransmit_ns`.
+    pub fn qp_flaps(mut self, prob: f64, flap_ns: u64, retransmit_ns: u64) -> FaultPlan {
+        self.flap_prob = prob;
+        self.flap_ns = flap_ns;
+        self.retransmit_ns = retransmit_ns;
+        self
+    }
+
+    /// Crash-stop `node` after its engine has executed `ops` WQEs.
+    pub fn crash_after(mut self, node: NodeId, ops: u64) -> FaultPlan {
+        self.crash_after = Some((node, ops));
+        self
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn any_active(&self) -> bool {
+        self.delay_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.flap_prob > 0.0
+            || self.crash_after.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_defaults() {
+        let p = FaultPlan::seeded(7);
+        assert_eq!(p.seed, 7);
+        assert!(!p.any_active(), "seeded() alone must be inert");
+
+        let p = p
+            .delays(0.5, 1000)
+            .dup_completions(0.25)
+            .reorders(0.125)
+            .qp_flaps(0.1, 2000, 300)
+            .crash_after(2, 64);
+        assert!(p.any_active());
+        assert_eq!(p.delay_max_ns, 1000);
+        assert_eq!(p.crash_after, Some((2, 64)));
+    }
+}

@@ -25,13 +25,15 @@
 //! reasoning exactly and keeps the simulation free of UB.
 
 pub mod cq;
+pub mod faults;
 pub mod memory;
 pub mod network;
 pub mod nic;
 pub mod qp;
 pub mod verbs;
 
-pub use cq::{CompletionQueue, Cqe};
+pub use cq::{CompletionQueue, Cqe, CqeStatus};
+pub use faults::FaultPlan;
 pub use memory::{Arena, MrTable, Region, DEVICE_BASE};
 pub use network::{Cluster, NodeFabric};
 pub use qp::{Qp, QpId, Submission};
@@ -167,6 +169,10 @@ pub struct FabricConfig {
     pub chaotic_placement: bool,
     /// RNG seed for latency jitter / placement lag sampling.
     pub seed: u64,
+    /// Seeded fault injection (delay / reorder / duplicate / QP flap /
+    /// crash-stop). `None` — the default — costs the hot paths only an
+    /// `Option` branch; see [`faults::FaultPlan`].
+    pub faults: Option<FaultPlan>,
 }
 
 impl FabricConfig {
@@ -179,6 +185,7 @@ impl FabricConfig {
             validate_access: true,
             chaotic_placement: false,
             seed: 0x10c0,
+            faults: None,
         }
     }
 
@@ -191,6 +198,7 @@ impl FabricConfig {
             validate_access: true,
             chaotic_placement: false,
             seed: 0x10c0,
+            faults: None,
         }
     }
 
@@ -201,6 +209,14 @@ impl FabricConfig {
 
     pub fn chaotic(mut self) -> Self {
         self.chaotic_placement = true;
+        self
+    }
+
+    /// Install a seeded [`FaultPlan`] (threaded delivery recommended:
+    /// inline mode honors crash-stop but has no in-flight window for
+    /// delay / reorder / duplication to act on).
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 }

@@ -8,10 +8,10 @@ use std::sync::{Condvar, Mutex, RwLock};
 
 use crate::util::queue::Queue;
 
-use super::cq::CompletionQueue;
+use super::cq::{CompletionQueue, Cqe};
 use super::memory::{Arena, MrTable, Region};
 use super::nic;
-use super::qp::{Qp, QpId, Submission};
+use super::qp::{Qp, QpId};
 use super::verbs::{PostList, RecvMsg, Wqe};
 use super::{Clock, DeliveryMode, FabricConfig, NodeId};
 
@@ -34,6 +34,9 @@ pub struct NodeFabric {
     ops_posted: AtomicU64,
     /// Doorbells rung from this node (one per `post` / `post_list`).
     doorbells_rung: AtomicU64,
+    /// Crash-stop flag (fault injection): once cleared the node never
+    /// serves or transmits again. See [`Cluster::crash`].
+    alive: AtomicBool,
 }
 
 impl NodeFabric {
@@ -48,7 +51,23 @@ impl NodeFabric {
             doorbell: (Mutex::new(0), Condvar::new()),
             ops_posted: AtomicU64::new(0),
             doorbells_rung: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
         }
+    }
+
+    /// Has this node crash-stopped? (Fault injection; always true on a
+    /// fault-free fabric.)
+    #[inline]
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Crash-stop this node: it stops serving remote verbs and stops
+    /// transmitting. Rings the doorbell so the NIC engine notices and
+    /// drains everything in flight with error completions.
+    pub(super) fn crash(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        self.ring();
     }
 
     /// Ring the engine doorbell (submission or new QP).
@@ -132,10 +151,8 @@ impl NodeFabric {
         self.qps.read().unwrap().len()
     }
 
-    pub(super) fn qp_engine_handle(&self, index: u32) -> (Arc<Queue<Submission>>, NodeId) {
-        let qps = self.qps.read().unwrap();
-        let qp = &qps[index as usize];
-        (qp.submission_queue(), qp.peer)
+    pub(super) fn qp_engine_handle(&self, index: u32) -> Arc<Qp> {
+        self.qps.read().unwrap()[index as usize].clone()
     }
 
     fn add_qp(&self, peer: NodeId) -> QpId {
@@ -226,6 +243,15 @@ impl Cluster {
         node.ops_posted.fetch_add(1, Ordering::Relaxed);
         node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         let qp = node.qp(qpid);
+        if !node.is_alive() {
+            // Crash-stop: nothing transmits. Signaled WRs still flush an
+            // error completion so the dead node's own (simulated) threads
+            // waiting on an ack_key unblock instead of hanging.
+            if wqe.signaled {
+                node.cq().post(Cqe::failed(wqe.wr_id, qpid));
+            }
+            return;
+        }
         match self.cfg.delivery {
             DeliveryMode::Threaded => {
                 qp.submit(wqe);
@@ -250,6 +276,14 @@ impl Cluster {
         node.ops_posted.fetch_add(list.len() as u64, Ordering::Relaxed);
         node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         let qp = node.qp(qpid);
+        if !node.is_alive() {
+            for wqe in list.into_wqes() {
+                if wqe.signaled {
+                    node.cq().post(Cqe::failed(wqe.wr_id, qpid));
+                }
+            }
+            return;
+        }
         match self.cfg.delivery {
             DeliveryMode::Threaded => {
                 qp.submit_list(list.into_wqes());
@@ -279,6 +313,43 @@ impl Cluster {
     /// Total doorbells rung cluster-wide since construction (monotonic).
     pub fn doorbells_rung(&self) -> u64 {
         self.nodes.iter().map(|n| n.doorbells_rung.load(Ordering::Relaxed)).sum()
+    }
+
+    // ---- fault injection: crash-stop ---------------------------------
+
+    /// Crash-stop `node`: it stops serving remote verbs, stops
+    /// transmitting, and never recovers. In-flight verbs targeting it
+    /// complete with [`super::CqeStatus::PeerFailed`]; its own in-flight
+    /// verbs are drained with error completions so nothing hangs.
+    /// Idempotent. (Tests drive this directly; a
+    /// [`FaultPlan::crash_after`](super::FaultPlan::crash_after)
+    /// schedule triggers it from the NIC engine.)
+    pub fn crash(&self, node: NodeId) {
+        self.nodes[node as usize].crash();
+        // Wake every engine: peers must fail their in-flight verbs to
+        // the dead node even if their own submission queues are idle.
+        for n in &self.nodes {
+            n.ring();
+        }
+    }
+
+    /// Has `node` crash-stopped?
+    #[inline]
+    pub fn is_down(&self, node: NodeId) -> bool {
+        !self.nodes[node as usize].is_alive()
+    }
+
+    /// Bitmask of crash-stopped nodes (bit *i* set ⇔ node *i* is down).
+    /// Clusters are far smaller than 64 nodes in every configuration
+    /// this repo builds.
+    pub fn down_mask(&self) -> u64 {
+        let mut mask = 0u64;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.is_alive() {
+                mask |= 1u64 << i;
+            }
+        }
+        mask
     }
 }
 
@@ -477,6 +548,71 @@ mod tests {
             batched.as_secs_f64() * 2.0 < scalar.as_secs_f64(),
             "batched {batched:?} not ≥2× faster than scalar {scalar:?}"
         );
+    }
+
+    /// Crash-stop semantics (inline): verbs targeting a dead node
+    /// complete with `PeerFailed` and have no effect; verbs posted *by*
+    /// a dead node fail the same way; nothing hangs.
+    #[test]
+    fn crash_stop_error_completions_inline() {
+        use crate::fabric::cq::CqeStatus;
+        let c = Cluster::new(3, FabricConfig::inline_ideal());
+        let dst = c.node(1).register_mr(8, false);
+        let qp01 = c.create_qp(0, 1);
+        let qp10 = c.create_qp(1, 0);
+
+        c.post(qp01, wqe(1, Verb::Write { remote: dst.at(0), data: Payload::one(5) }));
+        assert!(c.node(0).cq().poll_one_blocking().is_ok());
+        assert!(!c.is_down(1));
+        c.crash(1);
+        assert!(c.is_down(1));
+        assert_eq!(c.down_mask(), 0b010);
+
+        // Write to the dead node: error completion, memory untouched.
+        c.post(qp01, wqe(2, Verb::Write { remote: dst.at(0), data: Payload::one(9) }));
+        let cqe = c.node(0).cq().poll_one_blocking();
+        assert_eq!((cqe.wr_id, cqe.status), (2, CqeStatus::PeerFailed));
+        assert_eq!(c.node(1).arena().load(dst.at(0)), 5, "dead node must not serve");
+
+        // Posts from the dead node fail too (no transmission).
+        let src = c.node(0).register_mr(4, false);
+        c.post(qp10, wqe(3, Verb::Write { remote: src.at(0), data: Payload::one(7) }));
+        let cqe = c.node(1).cq().poll_one_blocking();
+        assert_eq!((cqe.wr_id, cqe.status), (3, CqeStatus::PeerFailed));
+        assert_eq!(c.node(0).arena().load(src.at(0)), 0);
+
+        // crash is idempotent.
+        c.crash(1);
+        assert_eq!(c.down_mask(), 0b010);
+    }
+
+    /// Crash-stop under threaded delivery: in-flight verbs to the dead
+    /// node drain with error completions (no hang), and a batched post
+    /// list sees per-entry errors.
+    #[test]
+    fn crash_stop_drains_in_flight_threaded() {
+        use crate::fabric::cq::CqeStatus;
+        let mut lat = LatencyModel::ideal();
+        lat.write_ns = 300_000; // 300 µs: ops are in flight when we crash
+        let c = Cluster::new(2, FabricConfig::threaded(lat));
+        let dst = c.node(1).register_mr(64, false);
+        let qp = c.create_qp(0, 1);
+        let list: PostList = (0..8u64)
+            .map(|i| wqe(i, Verb::Write { remote: dst.at(i), data: Payload::one(i + 1) }))
+            .collect();
+        c.post_list(qp, list);
+        c.crash(1);
+        let mut got = Vec::new();
+        let mut out = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while got.len() < 8 {
+            c.node(0).cq().poll(64, &mut out);
+            got.append(&mut out);
+            assert!(std::time::Instant::now() < deadline, "completions never drained");
+        }
+        // Every op completed (ok before the crash landed, or failed
+        // after); nothing was placed after the crash either way.
+        assert!(got.iter().any(|e| e.status == CqeStatus::PeerFailed), "crash unseen");
     }
 
     /// Threaded mode actually delivers pipelined ops and all complete.

@@ -21,9 +21,32 @@
 //! with placement observe genuinely torn large values — the hazard
 //! owned_var's checksums and the kvstore's retry protocol must tolerate.
 //!
+//! # Fault injection
+//!
+//! When `FabricConfig::faults` carries a [`FaultPlan`], the engine
+//! additionally (all decisions drawn from a seeded per-node RNG stream,
+//! so schedules replay exactly):
+//!
+//! * charges sampled **extra delay** per WQE (reordering ops *across*
+//!   QPs — per-QP arrival stays monotonic, as RC QPs guarantee);
+//! * **duplicates** and **reorders** completions in the shared CQ
+//!   (never two CQEs of the same QP — that order is contractual);
+//! * **flaps** a QP into the error state: execution pauses, and on
+//!   recovery everything in flight is retransmitted in order with an
+//!   extra penalty (`Qp::is_error` is observable above);
+//! * **crash-stops** a node after a scheduled op count: from then on the
+//!   node serves nothing, transmits nothing, and every verb touching it
+//!   completes with [`CqeStatus::PeerFailed`](super::cq::CqeStatus) —
+//!   including its own queued work, which is drained with error
+//!   completions so no local waiter hangs.
+//!
+//! With `faults: None` every hook is a dead `Option` branch
+//! (`bench::micro::fault_hook_overhead` pins the cost).
+//!
 //! In `Inline` mode the same effect functions run synchronously at post
 //! time with zero lag (ordering preserved, no races from delay); unit
-//! tests of channel logic use this.
+//! tests of channel logic use this. Inline mode honors crash-stop but
+//! has no in-flight window for the other faults to act on.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,8 +56,9 @@ use crate::util::queue::Queue;
 use crate::util::rng::Rng;
 
 use super::cq::Cqe;
+use super::faults::FaultPlan;
 use super::network::NodeFabric;
-use super::qp::{QpId, Submission};
+use super::qp::{Qp, QpId, Submission};
 use super::verbs::{RecvMsg, Verb, Wqe};
 use super::{Clock, FabricConfig, NodeId, DEVICE_BASE};
 
@@ -54,15 +78,60 @@ struct Placement {
 
 /// Per-QP engine state (owned exclusively by the engine thread).
 struct QpState {
+    qp: Arc<Qp>,
     rx: Arc<Queue<Submission>>,
     peer: NodeId,
     inflight: VecDeque<InFlight>,
     placements: VecDeque<Placement>,
     last_arrival_ns: u64,
+    /// Fault injection: while the wall clock is before this, the QP sits
+    /// in the error state and executes nothing.
+    flapped_until_ns: u64,
+}
+
+/// Per-engine completion-delivery state for the duplicate/reorder
+/// faults: at most one CQE is held back, to be swapped with the next
+/// CQE from a *different* QP.
+struct CqeFx {
+    hold: Option<Cqe>,
+}
+
+/// Deliver a CQE to `src`'s shared CQ, applying the duplicate/reorder
+/// faults. Same-QP completion order is never violated: a held CQE only
+/// swaps with a successor from another QP.
+fn deliver_cqe(
+    src: &Arc<NodeFabric>,
+    fx: &mut CqeFx,
+    faults: Option<&FaultPlan>,
+    rng: &mut Rng,
+    cqe: Cqe,
+) {
+    if let Some(f) = faults {
+        if let Some(held) = fx.hold.take() {
+            if held.qp != cqe.qp {
+                // Cross-QP reorder: the newer completion overtakes.
+                src.cq().post(cqe);
+                src.cq().post(held);
+            } else {
+                src.cq().post(held);
+                src.cq().post(cqe);
+            }
+            return;
+        }
+        if f.dup_prob > 0.0 && rng.gen_bool(f.dup_prob) {
+            src.cq().post(cqe);
+        }
+        if f.reorder_prob > 0.0 && rng.gen_bool(f.reorder_prob) {
+            fx.hold = Some(cqe);
+            return;
+        }
+    }
+    src.cq().post(cqe);
 }
 
 /// Execute the remote effect of a non-WRITE verb (WRITEs go through the
-/// placement queue instead).
+/// placement queue instead). Callers have already checked the target is
+/// alive.
 fn execute_effect(nodes: &[Arc<NodeFabric>], from: NodeId, wqe: &Wqe, target: NodeId, validate: bool) {
     let tgt = &nodes[target as usize];
     let src = &nodes[from as usize];
@@ -137,9 +206,14 @@ fn verb_latency(cfg: &FabricConfig, nodes: &[Arc<NodeFabric>], wqe: &Wqe, target
 }
 
 /// Flush all pending placements of one QP (in order), regardless of lag.
+/// Placements whose target crash-stopped are dropped — the data never
+/// reached the remote memory.
 fn flush_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, chaotic: bool) {
     while let Some(p) = q.placements.pop_front() {
-        nodes[p.target as usize].arena().store_words(p.remote, &p.data, chaotic);
+        let tgt = &nodes[p.target as usize];
+        if tgt.is_alive() {
+            tgt.arena().store_words(p.remote, &p.data, chaotic);
+        }
     }
 }
 
@@ -148,15 +222,21 @@ fn flush_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, chaotic: bool) {
 fn retire_due_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, now: u64, chaotic: bool) {
     while q.placements.front().map(|p| p.due_ns <= now).unwrap_or(false) {
         let p = q.placements.pop_front().unwrap();
-        nodes[p.target as usize].arena().store_words(p.remote, &p.data, chaotic);
+        let tgt = &nodes[p.target as usize];
+        if tgt.is_alive() {
+            tgt.arena().store_words(p.remote, &p.data, chaotic);
+        }
     }
 }
 
 /// Execute one arrived WQE against per-QP engine state.
+#[allow(clippy::too_many_arguments)]
 fn execute_arrival(
     nodes: &[Arc<NodeFabric>],
     cfg: &FabricConfig,
+    faults: Option<&FaultPlan>,
     rng: &mut Rng,
+    fx: &mut CqeFx,
     from: NodeId,
     qpid: QpId,
     q: &mut QpState,
@@ -165,6 +245,15 @@ fn execute_arrival(
 ) {
     let target = q.peer;
     let src = &nodes[from as usize];
+    if !nodes[target as usize].is_alive() {
+        // Crash-stopped peer: the verb has no effect; pending placements
+        // on this QP can never land either.
+        q.placements.clear();
+        if fl.wqe.signaled {
+            deliver_cqe(src, fx, faults, rng, Cqe::failed(fl.wqe.wr_id, qpid));
+        }
+        return;
+    }
     match &fl.wqe.verb {
         Verb::Write { remote, data } => {
             if cfg.validate_access {
@@ -186,7 +275,7 @@ fn execute_arrival(
                 retire_due_placements(nodes, q, now, cfg.chaotic_placement);
             }
             if fl.wqe.signaled {
-                src.cq().post(Cqe { wr_id: fl.wqe.wr_id, qp: qpid });
+                deliver_cqe(src, fx, faults, rng, Cqe::ok(fl.wqe.wr_id, qpid));
             }
         }
         _ => {
@@ -195,7 +284,7 @@ fn execute_arrival(
             }
             execute_effect(nodes, from, &fl.wqe, target, cfg.validate_access);
             if fl.wqe.signaled {
-                src.cq().post(Cqe { wr_id: fl.wqe.wr_id, qp: qpid });
+                deliver_cqe(src, fx, faults, rng, Cqe::ok(fl.wqe.wr_id, qpid));
             }
         }
     }
@@ -209,7 +298,11 @@ pub(super) fn engine_loop(
     clock: Clock,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17));
+    let fault_seed = cfg.faults.as_ref().map(|f| f.seed).unwrap_or(0);
+    let mut rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17) ^ fault_seed.rotate_left(31));
+    let faults = cfg.faults.clone();
+    let mut fx = CqeFx { hold: None };
+    let mut executed_ops: u64 = 0;
     let mut qps: Vec<QpState> = Vec::new();
     let me = &nodes[node as usize];
     let mut idle_iters: u32 = 0;
@@ -218,48 +311,137 @@ pub(super) fn engine_loop(
         // Pick up newly created QPs.
         let qp_count = me.qp_count();
         while qps.len() < qp_count {
-            let (rx, peer) = me.qp_engine_handle(qps.len() as u32);
+            let qp = me.qp_engine_handle(qps.len() as u32);
             qps.push(QpState {
-                rx,
-                peer,
+                rx: qp.submission_queue(),
+                peer: qp.peer,
+                qp,
                 inflight: VecDeque::new(),
                 placements: VecDeque::new(),
                 last_arrival_ns: 0,
+                flapped_until_ns: 0,
             });
         }
 
         let mut did_work = false;
-        for (idx, q) in qps.iter_mut().enumerate() {
-            // 1. stamp new submissions
-            let now = clock.now_ns();
-            while let Some(sub) = q.rx.try_pop() {
-                let wqe = sub.wqe;
-                let lat = verb_latency(&cfg, &nodes, &wqe, q.peer);
-                // Doorbell charge: only the head of a post list pays the
-                // MMIO cost; batch tails ride the same doorbell. This is
-                // the term that makes PostList batching measurable.
-                let db = if sub.rings_doorbell { cfg.latency.doorbell_ns } else { 0 };
-                // Per-QP serialization: the NIC cannot accept WQEs faster
-                // than op_overhead_ns apart → arrival monotone per QP.
-                let arr =
-                    (now + lat + db).max(q.last_arrival_ns + cfg.latency.op_overhead_ns + db);
-                q.last_arrival_ns = arr;
-                q.inflight.push_back(InFlight { due_ns: arr, wqe });
-                did_work = true;
-            }
-            // 2. execute due arrivals (FIFO per QP)
-            let now2 = clock.now_ns();
-            while q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
-                let fl = q.inflight.pop_front().unwrap();
+
+        if !me.is_alive() {
+            // Crash-stop: drain everything with error completions so the
+            // dead node's local waiters (its service threads in the
+            // simulation) unblock; execute nothing, transmit nothing.
+            for (idx, q) in qps.iter_mut().enumerate() {
                 let qpid = QpId { node, index: idx as u32 };
-                execute_arrival(&nodes, &cfg, &mut rng, node, qpid, q, fl, now2);
-                did_work = true;
+                while let Some(sub) = q.rx.try_pop() {
+                    if sub.wqe.signaled {
+                        me.cq().post(Cqe::failed(sub.wqe.wr_id, qpid));
+                    }
+                    did_work = true;
+                }
+                while let Some(fl) = q.inflight.pop_front() {
+                    if fl.wqe.signaled {
+                        me.cq().post(Cqe::failed(fl.wqe.wr_id, qpid));
+                    }
+                    did_work = true;
+                }
+                if !q.placements.is_empty() {
+                    q.placements.clear();
+                    did_work = true;
+                }
+                if q.qp.is_error() {
+                    q.qp.set_error(false);
+                }
             }
-            // 3. retire due placements
-            retire_due_placements(&nodes, q, clock.now_ns(), cfg.chaotic_placement);
+        } else {
+            for (idx, q) in qps.iter_mut().enumerate() {
+                // 1. stamp new submissions
+                let now = clock.now_ns();
+                while let Some(sub) = q.rx.try_pop() {
+                    let wqe = sub.wqe;
+                    let mut lat = verb_latency(&cfg, &nodes, &wqe, q.peer);
+                    if let Some(f) = &faults {
+                        // Sampled extra delay: reorders ops across QPs
+                        // while the max() below keeps per-QP order.
+                        if f.delay_prob > 0.0 && rng.gen_bool(f.delay_prob) {
+                            lat += rng.gen_range_incl(0, f.delay_max_ns);
+                        }
+                        // QP flap: transient error state, sampled per
+                        // submission so the rate tracks offered load.
+                        if f.flap_prob > 0.0 && rng.gen_bool(f.flap_prob) {
+                            q.flapped_until_ns = now + f.flap_ns;
+                            q.qp.set_error(true);
+                        }
+                    }
+                    // Doorbell charge: only the head of a post list pays the
+                    // MMIO cost; batch tails ride the same doorbell. This is
+                    // the term that makes PostList batching measurable.
+                    let db = if sub.rings_doorbell { cfg.latency.doorbell_ns } else { 0 };
+                    // Per-QP serialization: the NIC cannot accept WQEs faster
+                    // than op_overhead_ns apart → arrival monotone per QP.
+                    let arr =
+                        (now + lat + db).max(q.last_arrival_ns + cfg.latency.op_overhead_ns + db);
+                    q.last_arrival_ns = arr;
+                    q.inflight.push_back(InFlight { due_ns: arr, wqe });
+                    did_work = true;
+                }
+                let now2 = clock.now_ns();
+                // 1b. flap recovery: leave the error state and retransmit
+                // everything in flight, in order, with the penalty.
+                if q.qp.is_error() && now2 >= q.flapped_until_ns {
+                    let penalty = faults.as_ref().map(|f| f.retransmit_ns).unwrap_or(0);
+                    let resume = q.flapped_until_ns + penalty;
+                    for fl in q.inflight.iter_mut() {
+                        fl.due_ns = fl.due_ns.max(resume);
+                    }
+                    q.last_arrival_ns = q.last_arrival_ns.max(resume);
+                    q.qp.set_error(false);
+                    did_work = true;
+                }
+                // 2. execute due arrivals (FIFO per QP; a flapped QP
+                // executes nothing until it recovers)
+                if !q.qp.is_error() {
+                    while q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
+                        let fl = q.inflight.pop_front().unwrap();
+                        let qpid = QpId { node, index: idx as u32 };
+                        execute_arrival(
+                            &nodes,
+                            &cfg,
+                            faults.as_ref(),
+                            &mut rng,
+                            &mut fx,
+                            node,
+                            qpid,
+                            q,
+                            fl,
+                            now2,
+                        );
+                        executed_ops += 1;
+                        did_work = true;
+                    }
+                }
+                // 3. retire due placements
+                retire_due_placements(&nodes, q, clock.now_ns(), cfg.chaotic_placement);
+            }
+            // Scheduled crash-stop (fault injection): this node dies once
+            // its engine has executed the planned op count.
+            if let Some((victim, after)) = faults.as_ref().and_then(|f| f.crash_after) {
+                if victim == node && executed_ops >= after {
+                    nodes[node as usize].crash();
+                    for n in &nodes {
+                        n.ring();
+                    }
+                    continue;
+                }
+            }
         }
 
         if !did_work {
+            // A held-back completion must not outlive the burst that
+            // produced it: flush before idling or shutting down.
+            if let Some(held) = fx.hold.take() {
+                me.cq().post(held);
+                idle_iters = 0;
+                continue;
+            }
             idle_iters += 1;
             if shutdown.load(Ordering::Relaxed) {
                 let fully_idle = qps
@@ -277,7 +459,7 @@ pub(super) fn engine_loop(
             let mut next = now + 200_000; // 200 µs cap (shutdown poll)
             for q in &qps {
                 if let Some(f) = q.inflight.front() {
-                    next = next.min(f.due_ns);
+                    next = next.min(f.due_ns.max(q.flapped_until_ns));
                 }
                 if let Some(p) = q.placements.front() {
                     next = next.min(p.due_ns);
@@ -298,7 +480,9 @@ pub(super) fn engine_loop(
 }
 
 /// Inline-mode execution: run the verb synchronously at post time.
-/// Placement is immediate; ordering trivially preserved.
+/// Placement is immediate; ordering trivially preserved. Crash-stop is
+/// honored (error completion, no effect); the in-flight faults have no
+/// window to act on.
 pub(super) fn execute_inline(
     nodes: &[Arc<NodeFabric>],
     cfg: &FabricConfig,
@@ -308,6 +492,12 @@ pub(super) fn execute_inline(
     wqe: Wqe,
 ) {
     let src = &nodes[from as usize];
+    if !nodes[peer as usize].is_alive() {
+        if wqe.signaled {
+            src.cq().post(Cqe::failed(wqe.wr_id, qpid));
+        }
+        return;
+    }
     match &wqe.verb {
         Verb::Write { remote, data } => {
             if cfg.validate_access {
@@ -320,6 +510,6 @@ pub(super) fn execute_inline(
         _ => execute_effect(nodes, from, &wqe, peer, cfg.validate_access),
     }
     if wqe.signaled {
-        src.cq().post(Cqe { wr_id: wqe.wr_id, qp: qpid });
+        src.cq().post(Cqe::ok(wqe.wr_id, qpid));
     }
 }

@@ -15,6 +15,7 @@
 //! charges `LatencyModel::doorbell_ns` once per doorbell, which is what
 //! makes batching measurable (see `bench::micro`'s ablation).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::util::queue::Queue;
@@ -43,11 +44,28 @@ pub struct Qp {
     /// Target node of all verbs posted on this QP.
     pub peer: NodeId,
     subq: Arc<Queue<Submission>>,
+    /// Transient error state (fault injection: a "flapped" QP). While
+    /// set, the NIC engine executes nothing on this QP; on recovery it
+    /// retransmits everything in flight, in order, with an extra
+    /// penalty. Mirrors the IBV_QPS_ERR → reset → RTS cycle without the
+    /// state machine.
+    error: AtomicBool,
 }
 
 impl Qp {
     pub fn new(id: QpId, peer: NodeId) -> Self {
-        Qp { id, peer, subq: Arc::new(Queue::new()) }
+        Qp { id, peer, subq: Arc::new(Queue::new()), error: AtomicBool::new(false) }
+    }
+
+    /// Is this QP currently in the (transient) error state?
+    #[inline]
+    pub fn is_error(&self) -> bool {
+        self.error.load(Ordering::Relaxed)
+    }
+
+    /// Engine-side: move the QP into or out of the error state.
+    pub(super) fn set_error(&self, err: bool) {
+        self.error.store(err, Ordering::Relaxed);
     }
 
     /// Enqueue a single work request (threaded mode; the NIC engine

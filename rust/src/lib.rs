@@ -45,6 +45,7 @@ pub mod core;
 pub mod fabric;
 pub mod metrics;
 pub mod runtime;
+pub mod testkit;
 pub mod util;
 pub mod workload;
 
@@ -63,6 +64,11 @@ pub enum Error {
     Capacity(String),
     /// Runtime error.
     Runtime(String),
+    /// A peer node crash-stopped while the operation depended on it: the
+    /// op completed with an error CQE instead of taking effect (see
+    /// [`fabric::CqeStatus`]). Callers can retry after the membership
+    /// epoch advances (re-home) or surface the failure.
+    PeerFailed(String),
 }
 
 impl std::fmt::Display for Error {
@@ -72,6 +78,7 @@ impl std::fmt::Display for Error {
             Error::Timeout(m) => write!(f, "operation timed out: {m}"),
             Error::Capacity(m) => write!(f, "capacity exhausted: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::PeerFailed(m) => write!(f, "peer failed: {m}"),
         }
     }
 }

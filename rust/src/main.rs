@@ -146,6 +146,9 @@ fn main() {
             for (l, v) in micro::multi_get_batch_vs_scalar(lat.clone(), 16, 60) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
+            for (l, v) in micro::fault_hook_overhead(lat.clone(), 16, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
             for (l, v) in micro::cached_get_zipfian(lat, 4096, 5000) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }

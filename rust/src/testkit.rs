@@ -1,0 +1,233 @@
+//! `testkit` — shared scaffolding for the integration / property /
+//! chaos test tiers (and for anyone scripting the simulator).
+//!
+//! Before this module existed, every test file re-implemented the same
+//! three helpers (`managers`, cluster construction, kvstore setup) and
+//! the linearizability checker lived inline in one of them. They are
+//! centralized here, together with the **seeded chaos schedule DSL**:
+//! [`chaos_plan`] derives a complete [`FaultPlan`] (delay / completion
+//! reorder / duplication / QP flap mix) from a single seed, so a chaos
+//! run's entire behavior — fabric jitter, fault schedule, workload — is
+//! reproducible from the one number a failing test prints.
+//!
+//! The linearizability machinery ([`Event`], [`check_key`],
+//! [`check_history`]) implements the paper's Appendix C argument: all
+//! mutations of one key hold that key's lock, so their linearization
+//! points are totally ordered; each read must be legal at *some* point
+//! of its own interval against that order. Only **definite** precedence
+//! (`a.resp < b.inv`) is used, which keeps the checker sound for
+//! mutation intervals that include lock-wait time — and for mutations
+//! cut short by a crash, whose response edge is reported as
+//! [`CRASHED`] so they are never "definitely before" anything.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::kvstore::{KvConfig, KvStore};
+use crate::core::manager::Manager;
+use crate::fabric::{Cluster, FabricConfig, FaultPlan, LatencyModel, NodeId};
+use crate::util::rng::Rng;
+
+/// Response timestamp for an operation that never responded (its issuer
+/// crash-stopped mid-call). An interval ending here is never definitely
+/// before anything, so the checker treats the op as "may or may not
+/// have happened" — exactly the truth after a crash.
+pub const CRASHED: u64 = u64::MAX;
+
+// ---- cluster builders -------------------------------------------------
+
+/// `n` managers over a fresh cluster (the helper formerly copy-pasted
+/// across the test files).
+pub fn managers(n: usize, cfg: FabricConfig) -> Vec<Arc<Manager>> {
+    cluster_with_managers(n, cfg).1
+}
+
+/// A fresh cluster plus one manager per node.
+pub fn cluster_with_managers(n: usize, cfg: FabricConfig) -> (Arc<Cluster>, Vec<Arc<Manager>>) {
+    let cluster = Cluster::new(n, cfg);
+    let mgrs = (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    (cluster, mgrs)
+}
+
+/// A ready kvstore on every node of a fresh cluster: returns the
+/// cluster (for crash injection), the managers, and the stores, all
+/// `wait_ready`.
+pub fn kv_cluster(
+    n: usize,
+    fabric: FabricConfig,
+    cfg: KvConfig,
+) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    let (cluster, mgrs) = cluster_with_managers(n, fabric);
+    let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+    (cluster, mgrs, kvs)
+}
+
+// ---- seeded chaos schedules -------------------------------------------
+
+/// Derive a full fault schedule from one seed: moderate probabilities
+/// whose exact values are themselves seed-sampled, so a sweep over
+/// seeds explores delay-heavy, duplication-heavy, flap-heavy, … mixes.
+/// Delay magnitudes scale with `fast_sim` latencies (µs-scale).
+pub fn chaos_plan(seed: u64) -> FaultPlan {
+    let mut rng = Rng::seeded(seed ^ 0xFA_17);
+    FaultPlan::seeded(seed)
+        .delays(0.05 + rng.gen_f64() * 0.25, 2_000 + rng.gen_range(30_000))
+        .dup_completions(rng.gen_f64() * 0.15)
+        .reorders(rng.gen_f64() * 0.15)
+        .qp_flaps(rng.gen_f64() * 0.02, 5_000 + rng.gen_range(40_000), 1_000)
+}
+
+/// The standard chaos fabric: threaded `fast_sim` with placement lag,
+/// chaotic word-by-word placement, and the [`chaos_plan`] for `seed`.
+pub fn chaos_fabric(seed: u64) -> FabricConfig {
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 3000;
+    let mut cfg = FabricConfig::threaded(lat).chaotic().with_faults(chaos_plan(seed));
+    cfg.seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+    cfg
+}
+
+// ---- linearizability checking (paper Appendix C) ----------------------
+
+/// One recorded operation of a kvstore history.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Mutation on `key`: insert/update write `Some(val)`; delete writes
+    /// `None`. `resp` is [`CRASHED`] for an op cut short by a crash.
+    Mutate { key: u64, val: Option<u64>, inv: u64, resp: u64 },
+    /// Read of `key` returning `val` (`None` = EMPTY).
+    Read { key: u64, val: Option<u64>, inv: u64, resp: u64 },
+}
+
+/// Check one key's history with a sound partial-order argument.
+///
+/// Recorded intervals include lock-wait time, so mutation intervals may
+/// overlap even though their critical sections are serialized. We
+/// therefore use only *definite* precedence (a.resp < b.inv ⇒ a
+/// linearizes before b) and flag reads that are wrong in EVERY
+/// serialization consistent with it:
+///
+/// * a read of value v is wrong if v's write never happened, or the read
+///   completed before the write began, or some other mutation definitely
+///   follows v's write and definitely precedes the read (v was
+///   certainly overwritten);
+/// * an EMPTY read is wrong if some write w definitely precedes it and
+///   no delete could linearize after w (every delete definitely
+///   precedes w), i.e. the key was certainly present.
+///
+/// Mutations with `resp == CRASHED` (issuer died mid-call) may or may
+/// not have taken effect; their interval never "definitely precedes"
+/// anything, which is exactly the required semantics.
+pub fn check_key(key: u64, muts: Vec<(Option<u64>, u64, u64)>, reads: &[(Option<u64>, u64, u64)]) {
+    for &(val, inv, resp) in reads {
+        match val {
+            Some(v) => {
+                let m = muts
+                    .iter()
+                    .find(|(mv, _, _)| *mv == Some(v))
+                    .unwrap_or_else(|| panic!("key {key}: read of value {v} never written"));
+                assert!(
+                    resp >= m.1,
+                    "key {key}: read {v} @[{inv},{resp}] not linearizable: completed before its write began @{}",
+                    m.1
+                );
+                // Certainly overwritten?
+                let overwritten = muts
+                    .iter()
+                    .any(|&(mv2, inv2, resp2)| mv2 != Some(v) && inv2 > m.2 && resp2 < inv);
+                assert!(
+                    !overwritten,
+                    "key {key}: read {v} @[{inv},{resp}] not linearizable: value certainly overwritten ({muts:?})"
+                );
+            }
+            None => {
+                // Certainly present?
+                let certainly_present = muts.iter().any(|&(mv, minv, mresp)| {
+                    mv.is_some()
+                        && mresp < inv // write definitely precedes the read
+                        && muts.iter().all(|&(dv, _dinv, dresp)| {
+                            dv.is_some() || dresp < minv // every delete definitely precedes the write
+                        })
+                });
+                assert!(
+                    !certainly_present,
+                    "key {key}: EMPTY read @[{inv},{resp}] not linearizable: key certainly present ({muts:?})"
+                );
+            }
+        }
+    }
+}
+
+/// Partition a recorded history per key and [`check_key`] each one.
+/// `context` is prepended to any failure (tests pass the failing seed).
+pub fn check_history(keys: u64, all: &[Event], context: &str) {
+    for key in 0..keys {
+        let muts: Vec<(Option<u64>, u64, u64)> = all
+            .iter()
+            .filter_map(|e| match e {
+                Event::Mutate { key: k, val, inv, resp } if *k == key => Some((*val, *inv, *resp)),
+                _ => None,
+            })
+            .collect();
+        let reads: Vec<(Option<u64>, u64, u64)> = all
+            .iter()
+            .filter_map(|e| match e {
+                Event::Read { key: k, val, inv, resp } if *k == key => Some((*val, *inv, *resp)),
+                _ => None,
+            })
+            .collect();
+        let res = std::panic::catch_unwind(|| check_key(key, muts, &reads));
+        if let Err(payload) = res {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic".into());
+            panic!("{context}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plan_is_deterministic_and_active() {
+        let a = chaos_plan(7);
+        let b = chaos_plan(7);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "same seed, same plan");
+        assert!(a.any_active());
+        let c = chaos_plan(8);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "different seeds differ");
+    }
+
+    #[test]
+    fn check_history_prepends_context() {
+        // A broken history (stale read) must fail and carry the context.
+        let events = vec![
+            Event::Mutate { key: 0, val: Some(1), inv: 0, resp: 10 },
+            Event::Mutate { key: 0, val: Some(2), inv: 20, resp: 30 },
+            Event::Read { key: 0, val: Some(1), inv: 40, resp: 50 },
+        ];
+        let res = std::panic::catch_unwind(|| check_history(1, &events, "seed 42"));
+        let msg = match res {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("broken history accepted"),
+        };
+        assert!(msg.contains("seed 42"), "context missing: {msg}");
+        assert!(msg.contains("certainly overwritten"), "wrong failure: {msg}");
+    }
+
+    #[test]
+    fn crashed_mutations_are_never_definite() {
+        // An insert whose issuer crashed (resp = CRASHED) may or may not
+        // have happened: both a later read of its value and a later
+        // EMPTY read must be accepted.
+        check_key(0, vec![(Some(9), 10, CRASHED)], &[(Some(9), 50, 60)]);
+        check_key(0, vec![(Some(9), 10, CRASHED)], &[(None, 50, 60)]);
+    }
+}

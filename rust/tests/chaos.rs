@@ -1,0 +1,418 @@
+//! The chaos tier: kvstore linearizability under seeded fault
+//! schedules (delay / completion reorder / duplication / QP flap), plus
+//! a home-node crash-stop with backup re-home.
+//!
+//! Every case derives its complete behavior — fabric jitter, fault
+//! schedule, workload — from one seed, and every assertion message
+//! carries that seed, so a CI failure replays locally with a one-line
+//! filter. The matrix width defaults to 200 schedules and is overridden
+//! with `LOCO_CHAOS_SEEDS` (CI's `chaos` job pins it explicitly and
+//! uploads the log as an artifact).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::core::manager::Manager;
+use loco::fabric::NodeId;
+use loco::testkit::{chaos_fabric, check_history, kv_cluster, Event};
+use loco::util::rng::Rng;
+
+/// Key-range layout shared by the crash schedules: keys `0..CONTENDED`
+/// are mutated by every node; keys `CONTENDED..KEYS` are "pinned" —
+/// homed on the victim before the crash window opens and read-only
+/// after, so recovery must preserve them byte-identically.
+const CONTENDED: u64 = 6;
+const PINNED: u64 = 6;
+const KEYS: u64 = CONTENDED + PINNED;
+
+fn crash_cfg() -> KvConfig {
+    KvConfig {
+        slots_per_node: 128,
+        num_locks: 12,
+        tracker_words: 1 << 11,
+        read_cache_entries: 32,
+        replicate: true,
+        ..Default::default()
+    }
+}
+
+/// Phase 0 of a crash schedule: the victim homes the pinned keys
+/// (completed inserts — the crash must not lose them). Returns their
+/// Mutate events.
+fn insert_pinned(
+    seed: u64,
+    dead: NodeId,
+    mgrs: &[Arc<Manager>],
+    kvs: &[Arc<KvStore>],
+    clock: &Instant,
+) -> Vec<Event> {
+    let ctx = mgrs[dead as usize].ctx();
+    let mut events = Vec::new();
+    for k in CONTENDED..KEYS {
+        let val = seed * 1000 + k;
+        let inv = now(clock);
+        assert!(kvs[dead as usize].insert(&ctx, k, &[val]).unwrap(), "seed {seed}");
+        let resp = now(clock);
+        events.push(Event::Mutate { key: k, val: Some(val), inv, resp });
+    }
+    events
+}
+
+/// Post-crash verification shared by the crash schedules: wait out the
+/// re-home (it may still be in flight when the last worker returns),
+/// then assert every pinned key survived byte-identically on the backup
+/// node and that the survivors agree on the contended range.
+fn verify_rehome_and_convergence(
+    seed: u64,
+    dead: NodeId,
+    backup: NodeId,
+    mgrs: &[Arc<Manager>],
+    kvs: &[Arc<KvStore>],
+) {
+    let survivors: Vec<usize> = (0..3usize).filter(|&i| i as NodeId != dead).collect();
+    let deadline = Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let done = survivors.iter().all(|&s| {
+            (CONTENDED..KEYS)
+                .all(|k| kvs[s].index_entry(k).map(|e| e.node == backup).unwrap_or(false))
+        });
+        if done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "seed {seed}: re-home never completed");
+        std::thread::yield_now();
+    }
+    for &s in &survivors {
+        let ctx = mgrs[s].ctx();
+        for k in CONTENDED..KEYS {
+            assert_eq!(
+                kvs[s].get(&ctx, k),
+                Some(vec![seed * 1000 + k]),
+                "seed {seed}: pinned key {k} lost/corrupted on node {s}"
+            );
+        }
+        let ctx2 = mgrs[survivors[0]].ctx();
+        for k in 0..CONTENDED {
+            assert_eq!(
+                kvs[s].get(&ctx, k),
+                kvs[survivors[0]].get(&ctx2, k),
+                "seed {seed}: survivors diverge on key {k}"
+            );
+        }
+    }
+}
+
+fn chaos_seeds() -> u64 {
+    std::env::var("LOCO_CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
+}
+
+fn now(clock: &Instant) -> u64 {
+    clock.elapsed().as_nanos() as u64
+}
+
+/// One seeded schedule: two nodes, contended random ops over a small
+/// key set, full history check. Odd seeds run with the hot-key cache on
+/// so the locality tier faces the same faults.
+fn run_seeded_history(seed: u64) {
+    let keys = 4u64;
+    let ops_per_thread = 24u64;
+    let cfg = KvConfig {
+        slots_per_node: 64,
+        num_locks: 8,
+        tracker_words: 1 << 10,
+        read_cache_entries: if seed % 2 == 1 { 16 } else { 0 },
+        ..Default::default()
+    };
+    let (_cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(1));
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .zip(&kvs)
+        .enumerate()
+        .map(|(i, (m, kv))| {
+            let m = m.clone();
+            let kv = kv.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(31) + i as u64);
+                let mut events = Vec::new();
+                for _ in 0..ops_per_thread {
+                    let key = rng.gen_range(keys);
+                    match rng.gen_range(10) {
+                        0..=2 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let _ = kv.insert(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                        }
+                        3..=4 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let did = kv.update(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            if did {
+                                events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            }
+                        }
+                        5 => {
+                            let inv = now(&clock);
+                            let did = kv.remove(&ctx, key);
+                            let resp = now(&clock);
+                            if did {
+                                events.push(Event::Mutate { key, val: None, inv, resp });
+                            }
+                        }
+                        _ => {
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let resp = now(&clock);
+                            events.push(Event::Read { key, val: got, inv, resp });
+                        }
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    let mut all: Vec<Event> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    check_history(keys, &all, &format!("chaos seed {seed}"));
+}
+
+/// The seeded fault matrix: ≥200 schedules of delay/reorder/dup/flap,
+/// every history linearizable. A failure prints the seed to replay.
+#[test]
+fn chaos_linearizability_fault_matrix() {
+    let seeds = chaos_seeds();
+    for seed in 0..seeds {
+        run_seeded_history(seed);
+        if seed % 25 == 24 {
+            println!("chaos matrix: {}/{} schedules green", seed + 1, seeds);
+        }
+    }
+    println!("chaos matrix: all {seeds} fault schedules linearizable");
+}
+
+/// Crash-stop + re-home under an active fault schedule: node D homes a
+/// set of pinned keys, crash-stops while the survivors keep running a
+/// contended workload, and the backup re-homes D's range. The full
+/// history (through the crash) must stay linearizable, the pinned
+/// values must survive byte-identically on the backup node, and
+/// survivors' mutations must either complete or fail fast — never hang.
+#[test]
+fn chaos_crash_stop_rehome_linearizable() {
+    for seed in [1u64, 2, 5, 9] {
+        run_crash_schedule(seed);
+    }
+}
+
+/// The hard variant: the victim crash-stops **mid-operation** (a seeded
+/// delay after the workers start, not after the victim quiesced). Its
+/// interrupted mutations are recorded with the checker's `CRASHED`
+/// response edge — "may or may not have happened" — its post-crash
+/// reads are discarded, and nothing on any node may hang: every spin
+/// the victim's in-flight ops could sit in (lock acquisition, tracker
+/// acks, index re-resolution, the read path) must bail once the node
+/// is observably dead.
+#[test]
+fn chaos_crash_mid_operation_linearizable() {
+    for seed in [4u64, 7] {
+        run_mid_op_crash_schedule(seed);
+    }
+}
+
+fn run_mid_op_crash_schedule(seed: u64) {
+    let dead: NodeId = (seed % 3) as NodeId;
+    let backup: NodeId = (dead + 1) % 3;
+    let (cluster, mgrs, kvs) = kv_cluster(3, chaos_fabric(seed), crash_cfg());
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(2_000_000));
+    // Pinned keys complete BEFORE the crash window opens; everything
+    // else races it.
+    let mut all: Vec<Event> = insert_pinned(seed, dead, &mgrs, &kvs, &clock);
+
+    let handles: Vec<_> = (0..3usize)
+        .map(|i| {
+            let m = mgrs[i].clone();
+            let kv = kvs[i].clone();
+            let cluster = cluster.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            let me: NodeId = i as NodeId;
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(977) + i as u64);
+                let mut events: Vec<Event> = Vec::new();
+                for _ in 0..80u64 {
+                    let key = rng.gen_range(CONTENDED);
+                    // (attempted-value, inv, result) for mutations; None
+                    // for reads, which record themselves.
+                    let attempt: Option<(Option<u64>, u64, bool)> = match rng.gen_range(12) {
+                        0..=2 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.insert(&ctx, key, &[val]).is_ok();
+                            Some((Some(val), inv, ok))
+                        }
+                        3..=5 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.try_update(&ctx, key, &[val]) == Ok(true);
+                            Some((Some(val), inv, ok))
+                        }
+                        6 => {
+                            let inv = now(&clock);
+                            let ok = kv.try_remove(&ctx, key) == Ok(true);
+                            Some((None, inv, ok))
+                        }
+                        _ => {
+                            let read_key = if rng.gen_bool(0.3) {
+                                CONTENDED + rng.gen_range(PINNED)
+                            } else {
+                                key
+                            };
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, read_key).map(|v| v[0]);
+                            let resp = now(&clock);
+                            if !cluster.is_down(me) {
+                                events.push(Event::Read { key: read_key, val: got, inv, resp });
+                            }
+                            None
+                        }
+                    };
+                    let resp = now(&clock);
+                    let died = cluster.is_down(me);
+                    if let Some((val, inv, ok)) = attempt {
+                        if died {
+                            // Cut short (or completed unobservably) by
+                            // our own crash: maximal uncertainty.
+                            events.push(Event::Mutate { key, val, inv, resp: loco::testkit::CRASHED });
+                        } else if ok {
+                            events.push(Event::Mutate { key, val, inv, resp });
+                        }
+                        // else: failed fast against a corpse's lock —
+                        // nothing happened, nothing recorded.
+                    }
+                    if died {
+                        break; // a corpse issues no further ops
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    // Controller: crash the victim a seeded moment into the run —
+    // whatever it is doing right then is cut mid-flight.
+    let mut crng = Rng::seeded(seed ^ 0xDEAD);
+    std::thread::sleep(std::time::Duration::from_millis(5 + crng.gen_range(20)));
+    cluster.crash(dead);
+
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    check_history(KEYS, &all, &format!("mid-op crash seed {seed} (dead node {dead})"));
+    // Pinned keys completed before the crash window ⇒ they must all
+    // survive the re-home byte-identically.
+    verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+}
+
+fn run_crash_schedule(seed: u64) {
+    let dead: NodeId = (seed % 3) as NodeId;
+    let backup: NodeId = (dead + 1) % 3;
+    let (cluster, mgrs, kvs) = kv_cluster(3, chaos_fabric(seed), crash_cfg());
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(1_000_000));
+    let mut all: Vec<Event> = insert_pinned(seed, dead, &mgrs, &kvs, &clock);
+
+    // Workers: D runs a short burst (it must be idle when the crash
+    // lands — the mid-op variant below covers in-flight victims);
+    // survivors run long enough to straddle the crash.
+    let handles: Vec<_> = (0..3usize)
+        .map(|i| {
+            let m = mgrs[i].clone();
+            let kv = kvs[i].clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            let ops = if i as NodeId == dead { 12u64 } else { 70 };
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(131) + i as u64);
+                let mut events = Vec::new();
+                for _ in 0..ops {
+                    match rng.gen_range(12) {
+                        0..=2 => {
+                            let key = rng.gen_range(CONTENDED);
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let res = kv.insert(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            if res.is_ok() {
+                                events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            }
+                            // Err(PeerFailed): the lock acquisition failed
+                            // against the corpse — nothing happened.
+                        }
+                        3..=4 => {
+                            let key = rng.gen_range(CONTENDED);
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let res = kv.try_update(&ctx, key, &[val]);
+                            let resp = now(&clock);
+                            if res == Ok(true) {
+                                events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            }
+                        }
+                        5 => {
+                            let key = rng.gen_range(CONTENDED);
+                            let inv = now(&clock);
+                            let res = kv.try_remove(&ctx, key);
+                            let resp = now(&clock);
+                            if res == Ok(true) {
+                                events.push(Event::Mutate { key, val: None, inv, resp });
+                            }
+                        }
+                        6..=8 => {
+                            let key = CONTENDED + rng.gen_range(PINNED);
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let resp = now(&clock);
+                            events.push(Event::Read { key, val: got, inv, resp });
+                        }
+                        _ => {
+                            let key = rng.gen_range(CONTENDED);
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let resp = now(&clock);
+                            events.push(Event::Read { key, val: got, inv, resp });
+                        }
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    // Controller: wait for D's burst, then crash it mid-survivor-run.
+    let mut handles = handles;
+    let dead_events = handles.remove(dead as usize).join().unwrap();
+    all.extend(dead_events);
+    cluster.crash(dead);
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+
+    // The whole history — through the crash and re-home — linearizes.
+    check_history(KEYS, &all, &format!("crash seed {seed} (dead node {dead})"));
+    verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+}

@@ -3,94 +3,25 @@
 //! Strategy: threads on every node run random operations against a small
 //! key set, recording complete histories (invocation/response timestamps
 //! plus results). Values are globally unique per write. The checker
-//! exploits the store's structure the same way the paper's proof does:
-//! all mutations on one key hold that key's lock, so their critical
-//! sections — and hence their linearization points — are totally ordered
-//! and real-time disjoint (Lemma C.1). Each read must then return a
-//! value legal for *some* point within its own [invocation, response]
-//! interval against that mutation order (Lemma C.2):
-//!
-//! * a value v is readable from the invocation of the write that
-//!   produced it (its linearization point is inside the writer's
-//!   interval) until the response of the next mutation of that key;
-//! * EMPTY is readable from the invocation of a delete until the
-//!   response of the next insert (and before the first insert's
-//!   response).
+//! (shared with the chaos tier — see `loco::testkit`) exploits the
+//! store's structure the same way the paper's proof does: all mutations
+//! on one key hold that key's lock, so their critical sections — and
+//! hence their linearization points — are totally ordered and real-time
+//! disjoint (Lemma C.1). Each read must then return a value legal for
+//! *some* point within its own [invocation, response] interval against
+//! that mutation order (Lemma C.2). The fault-schedule sweep over this
+//! same history lives in `rust/tests/chaos.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
 
-use loco::apps::kvstore::{KvConfig, KvStore};
-use loco::core::manager::Manager;
-use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::apps::kvstore::KvConfig;
+use loco::fabric::{FabricConfig, LatencyModel};
+use loco::testkit::{check_history, check_key, kv_cluster, Event};
 use loco::util::rng::Rng;
-
-#[derive(Clone, Debug)]
-enum Event {
-    /// Mutation on `key`: Insert/Update write `val`; Delete writes None.
-    Mutate { key: u64, val: Option<u64>, inv: u64, resp: u64 },
-    /// Read of `key` returning `val` (None = EMPTY).
-    Read { key: u64, val: Option<u64>, inv: u64, resp: u64 },
-}
 
 fn now(clock: &std::time::Instant) -> u64 {
     clock.elapsed().as_nanos() as u64
-}
-
-/// Check one key's history with a sound partial-order argument.
-///
-/// Recorded intervals include lock-wait time, so mutation intervals may
-/// overlap even though their critical sections are serialized. We
-/// therefore use only *definite* precedence (a.resp < b.inv ⇒ a
-/// linearizes before b) and flag reads that are wrong in EVERY
-/// serialization consistent with it:
-///
-/// * a read of value v is wrong if v's write never happened, or the read
-///   completed before the write began, or some other mutation definitely
-///   follows v's write and definitely precedes the read (v was
-///   certainly overwritten);
-/// * an EMPTY read is wrong if some write w definitely precedes it and
-///   no delete could linearize after w (every delete definitely
-///   precedes w), i.e. the key was certainly present.
-fn check_key(key: u64, muts: Vec<(Option<u64>, u64, u64)>, reads: &[(Option<u64>, u64, u64)]) {
-    for &(val, inv, resp) in reads {
-        match val {
-            Some(v) => {
-                let m = muts
-                    .iter()
-                    .find(|(mv, _, _)| *mv == Some(v))
-                    .unwrap_or_else(|| panic!("key {key}: read of value {v} never written"));
-                assert!(
-                    resp >= m.1,
-                    "key {key}: read {v} @[{inv},{resp}] not linearizable: completed before its write began @{}",
-                    m.1
-                );
-                // Certainly overwritten?
-                let overwritten = muts.iter().any(|&(mv2, inv2, resp2)| {
-                    mv2 != Some(v) && inv2 > m.2 && resp2 < inv
-                });
-                assert!(
-                    !overwritten,
-                    "key {key}: read {v} @[{inv},{resp}] not linearizable: value certainly overwritten ({muts:?})"
-                );
-            }
-            None => {
-                // Certainly present?
-                let certainly_present = muts.iter().any(|&(mv, minv, mresp)| {
-                    mv.is_some()
-                        && mresp < inv // write definitely precedes the read
-                        && muts.iter().all(|&(dv, _dinv, dresp)| {
-                            dv.is_some() || dresp < minv // every delete definitely precedes the write
-                        })
-                });
-                assert!(
-                    !certainly_present,
-                    "key {key}: EMPTY read @[{inv},{resp}] not linearizable: key certainly present ({muts:?})"
-                );
-            }
-        }
-    }
 }
 
 #[test]
@@ -113,20 +44,14 @@ fn run_history(read_cache_entries: usize) {
     let ops_per_thread = 120u64;
     let mut lat = LatencyModel::fast_sim();
     lat.placement_lag_ns = 3000;
-    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).chaotic());
-    let mgrs: Vec<Arc<Manager>> =
-        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
     let cfg = KvConfig {
         slots_per_node: 64,
         tracker_words: 1 << 12,
         read_cache_entries,
         ..Default::default()
     };
-    let kvs: Vec<Arc<KvStore>> =
-        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
-    for kv in &kvs {
-        kv.wait_ready(Duration::from_secs(30));
-    }
+    let (_cluster, mgrs, kvs) =
+        kv_cluster(nodes, FabricConfig::threaded(lat).chaotic(), cfg);
 
     let clock = Arc::new(std::time::Instant::now());
     let uid = Arc::new(AtomicU64::new(1));
@@ -188,27 +113,7 @@ fn run_history(read_cache_entries: usize) {
     for h in handles {
         all.extend(h.join().unwrap());
     }
-
-    // Partition per key and check.
-    for key in 0..keys {
-        let muts: Vec<(Option<u64>, u64, u64)> = all
-            .iter()
-            .filter_map(|e| match e {
-                Event::Mutate { key: k, val, inv, resp } if *k == key => {
-                    Some((*val, *inv, *resp))
-                }
-                _ => None,
-            })
-            .collect();
-        let reads: Vec<(Option<u64>, u64, u64)> = all
-            .iter()
-            .filter_map(|e| match e {
-                Event::Read { key: k, val, inv, resp } if *k == key => Some((*val, *inv, *resp)),
-                _ => None,
-            })
-            .collect();
-        check_key(key, muts, &reads);
-    }
+    check_history(keys, &all, "fault-free history");
 }
 
 /// Satellite stress test for the locality tier's delete guarantee:
@@ -228,9 +133,6 @@ fn cached_reads_never_stale_after_delete_acks() {
     let rounds = 30u64;
     let mut lat = LatencyModel::fast_sim();
     lat.placement_lag_ns = 3000;
-    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).chaotic());
-    let mgrs: Vec<Arc<Manager>> =
-        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
     let cfg = KvConfig {
         slots_per_node: 64,
         value_words: 2,
@@ -238,11 +140,8 @@ fn cached_reads_never_stale_after_delete_acks() {
         read_cache_entries: 32,
         ..Default::default()
     };
-    let kvs: Vec<Arc<KvStore>> =
-        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
-    for kv in &kvs {
-        kv.wait_ready(Duration::from_secs(30));
-    }
+    let (_cluster, mgrs, kvs) =
+        kv_cluster(nodes, FabricConfig::threaded(lat).chaotic(), cfg);
 
     let floors: Arc<Vec<AtomicU64>> = Arc::new((0..keys).map(|_| AtomicU64::new(0)).collect());
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));

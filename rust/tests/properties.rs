@@ -8,17 +8,14 @@ use std::time::Duration;
 
 use loco::channels::owned_var::OwnedVar;
 use loco::channels::shared_queue::SharedQueue;
+use loco::core::index::{IndexEntry, ShardedIndex};
 use loco::core::manager::Manager;
 use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::testkit::managers;
 use loco::util::fnv64;
 use loco::util::rng::Rng;
 use loco::workload::cityhash::city_hash64;
 use loco::workload::zipfian::Zipfian;
-
-fn managers(n: usize, cfg: FabricConfig) -> Vec<Arc<Manager>> {
-    let cluster = Cluster::new(n, cfg);
-    (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect()
-}
 
 /// Property: fnv64 is sensitive to every word position and word value
 /// (no silent truncation/reordering blindness).
@@ -181,6 +178,132 @@ fn prop_owned_var_atomicity_random_widths() {
         });
         writer.join().unwrap();
         reader.join().unwrap();
+    }
+}
+
+/// Property: the sharded seqlock index agrees with a model map over
+/// randomized insert/delete/probe schedules. The key universe is small
+/// relative to the op count, so delete/reinsert churn builds tombstone
+/// chains and forces in-place compaction many times over — the final
+/// audit proves compaction never loses a live entry (and never invents
+/// one).
+#[test]
+fn prop_sharded_index_model_randomized_schedules() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::seeded(seed + 1500);
+        let idx = ShardedIndex::new(512);
+        let mut model: std::collections::HashMap<u64, IndexEntry> =
+            std::collections::HashMap::new();
+        let keyspace = 96u64;
+        for step in 0..6000u64 {
+            let key = rng.gen_range(keyspace);
+            match rng.gen_range(10) {
+                0..=4 => {
+                    let e = IndexEntry {
+                        node: (step % 5) as NodeId,
+                        slot: step as u32,
+                        counter: step,
+                    };
+                    assert_eq!(
+                        idx.insert(key, e),
+                        model.insert(key, e),
+                        "seed {seed} step {step}: insert prev mismatch"
+                    );
+                }
+                5..=7 => {
+                    assert_eq!(
+                        idx.remove(key),
+                        model.remove(&key),
+                        "seed {seed} step {step}: remove mismatch"
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        idx.get(key),
+                        model.get(&key).copied(),
+                        "seed {seed} step {step}: get mismatch"
+                    );
+                }
+            }
+            assert_eq!(idx.len(), model.len(), "seed {seed} step {step}: len mismatch");
+        }
+        for k in 0..keyspace {
+            assert_eq!(
+                idx.get(k),
+                model.get(&k).copied(),
+                "seed {seed}: final audit lost/invented key {k}"
+            );
+        }
+        // The recovery scan partitions the index exactly.
+        let homed: usize = (0..5).map(|n| idx.entries_homed_on(n as NodeId).len()).sum();
+        assert_eq!(homed, model.len(), "seed {seed}: homed-on partition incomplete");
+    }
+}
+
+/// Property: concurrent lock-free readers NEVER observe torn index
+/// slots, across seeded writer cadences with delete/reinsert churn. Each
+/// key's (slot, counter) pair moves in lockstep (`counter = slot * 31`),
+/// so any probe that mixes two generations is caught immediately.
+#[test]
+fn prop_sharded_index_readers_never_observe_torn_slots() {
+    for seed in 0..3u64 {
+        let idx = Arc::new(ShardedIndex::new(256));
+        for k in 0..48u64 {
+            idx.insert(k, IndexEntry { node: 0, slot: 0, counter: 0 });
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..2u64)
+            .map(|w| {
+                let idx = idx.clone();
+                let stop = stop.clone();
+                let mut rng = Rng::seeded(seed * 100 + w);
+                std::thread::spawn(move || {
+                    let mut v = 1u32;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        for k in (w..48).step_by(2) {
+                            let e = IndexEntry { node: 2, slot: v, counter: v as u64 * 31 };
+                            idx.insert(k, e);
+                            if rng.gen_bool(0.1) {
+                                idx.remove(k);
+                                idx.insert(k, e);
+                            }
+                        }
+                        v = v.wrapping_add(1).max(1);
+                    }
+                })
+            })
+            .collect();
+        let readers: Vec<_> = (0..3u64)
+            .map(|r| {
+                let idx = idx.clone();
+                let stop = stop.clone();
+                let mut rng = Rng::seeded(seed * 100 + 50 + r);
+                std::thread::spawn(move || {
+                    let mut seen = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let k = rng.gen_range(48);
+                        if let Some(e) = idx.get(k) {
+                            if e.node == 2 {
+                                assert_eq!(
+                                    e.counter,
+                                    e.slot as u64 * 31,
+                                    "seed {seed}: torn index slot for key {k}: {e:?}"
+                                );
+                            }
+                            seen += 1;
+                        }
+                    }
+                    seen
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(150));
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        for w in writers {
+            w.join().unwrap();
+        }
+        let total: u64 = readers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0, "seed {seed}: readers made no progress");
     }
 }
 
