@@ -93,7 +93,7 @@ fn main() {
                                 Op::Read { key } => {
                                     let _ = kv.get(&ctx, key);
                                 }
-                                Op::Update { key, value } => {
+                                Op::Update { key, value, .. } => {
                                     let _ = kv.update(&ctx, key, &[value]);
                                 }
                             }

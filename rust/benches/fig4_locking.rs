@@ -7,7 +7,7 @@
 //! windows, while LOCO pools regions into huge pages.
 
 use loco::bench::fig4::{single_lock_mops, txn_mops, LockSystem};
-use loco::bench::{geomean_runs, Scale};
+use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
 
 fn main() {
@@ -22,6 +22,7 @@ fn main() {
     );
 
     let mut t = Table::new(&["bench", "nodes", "OpenMPI Mops/s", "LOCO Mops/s", "LOCO/MPI"]);
+    let mut json = BenchJson::new();
     for nodes in [2usize, 3, 4, 6] {
         let mpi = geomean_runs(scale.runs, || {
             single_lock_mops(LockSystem::OpenMpi, nodes, scale.secs, scale.latency.clone())
@@ -29,6 +30,8 @@ fn main() {
         let loco = geomean_runs(scale.runs, || {
             single_lock_mops(LockSystem::Loco, nodes, scale.secs, scale.latency.clone())
         });
+        json.add("fig4_single_lock", &format!("{nodes} nodes OpenMPI"), mpi);
+        json.add("fig4_single_lock", &format!("{nodes} nodes LOCO"), loco);
         t.row(&[
             "single-lock".into(),
             nodes.to_string(),
@@ -45,6 +48,8 @@ fn main() {
         let loco = geomean_runs(scale.runs, || {
             txn_mops(LockSystem::Loco, nodes, threads, accounts, scale.secs, scale.latency.clone())
         });
+        json.add("fig4_txn", &format!("{nodes} nodes OpenMPI"), mpi);
+        json.add("fig4_txn", &format!("{nodes} nodes LOCO"), loco);
         t.row(&[
             format!("txn ×{threads}thr"),
             nodes.to_string(),
@@ -54,4 +59,11 @@ fn main() {
         ]);
     }
     t.print();
+
+    if let Some(path) = BenchJson::path_from_env() {
+        match json.write(&path) {
+            Ok(()) => println!("\nwrote perf trajectory to {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
 }

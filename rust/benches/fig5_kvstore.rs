@@ -18,7 +18,7 @@
 use loco::bench::fig5::{loco_batch_ablation, loco_cache_ablation, run_cell, Fig5Cell, KvSystem};
 use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
-use loco::workload::{KeyDist, OpMix};
+use loco::workload::{KeyDist, OpMix, ValueDist};
 
 fn main() {
     let scale = Scale::from_env();
@@ -39,16 +39,8 @@ fn main() {
     for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
         for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
             for system in KvSystem::ALL {
-                let cell = Fig5Cell {
-                    system,
-                    nodes,
-                    threads,
-                    mix,
-                    dist,
-                    window: 3,
-                    keys,
-                    secs: scale.secs,
-                };
+                let cell =
+                    Fig5Cell::words1(system, nodes, threads, mix, dist, 3, keys, scale.secs);
                 let mops = geomean_runs(scale.runs, || {
                     run_cell(&cell, scale.latency.clone(), scale.redis_latency())
                 });
@@ -66,16 +58,8 @@ fn main() {
                 ]);
             }
             // The "large window" LOCO series (window = 128).
-            let cell = Fig5Cell {
-                system: KvSystem::Loco,
-                nodes,
-                threads,
-                mix,
-                dist,
-                window: 128,
-                keys,
-                secs: scale.secs,
-            };
+            let cell =
+                Fig5Cell::words1(KvSystem::Loco, nodes, threads, mix, dist, 128, keys, scale.secs);
             let mops = geomean_runs(scale.runs, || {
                 run_cell(&cell, scale.latency.clone(), scale.redis_latency())
             });
@@ -99,16 +83,16 @@ fn main() {
     let mut t2 = Table::new(&["nodes", "system", "Mops/s (read-only uniform)"]);
     for nodes in [2usize, 3, 4] {
         for system in KvSystem::ALL {
-            let cell = Fig5Cell {
+            let cell = Fig5Cell::words1(
                 system,
                 nodes,
-                threads: 2,
-                mix: OpMix::READ_ONLY,
-                dist: KeyDist::Uniform,
-                window: 3,
+                2,
+                OpMix::READ_ONLY,
+                KeyDist::Uniform,
+                3,
                 keys,
-                secs: scale.secs,
-            };
+                scale.secs,
+            );
             let mops = geomean_runs(scale.runs, || {
                 run_cell(&cell, scale.latency.clone(), scale.redis_latency())
             });
@@ -144,6 +128,37 @@ fn main() {
         t4.row(&[label, format!("{mops:.4}")]);
     }
     t4.print();
+
+    // Value-size sweep (the slab allocator's regime): LOCO 50/50
+    // zipfian at 8 B, 1 KB, and the mixed 8 B-1 KB stream whose
+    // growing updates relocate mid-bench. Cache + replication on -- the
+    // production-shaped configuration.
+    let mut t5 = Table::new(&["value size", "Mops/s (50/50 zipfian, cache+replicate)"]);
+    for value_dist in
+        [ValueDist::Fixed(1), ValueDist::Fixed(128), ValueDist::MIXED_8B_1KB]
+    {
+        let cell = Fig5Cell {
+            value_dist,
+            cache: true,
+            replicate: true,
+            ..Fig5Cell::words1(
+                KvSystem::Loco,
+                nodes,
+                threads,
+                OpMix::MIXED_50_50,
+                KeyDist::Zipfian,
+                3,
+                keys.min(1 << 12),
+                scale.secs,
+            )
+        };
+        let mops = geomean_runs(scale.runs, || {
+            run_cell(&cell, scale.latency.clone(), scale.redis_latency())
+        });
+        json.add("fig5_value_size", &format!("LOCO {}", value_dist.label()), mops);
+        t5.row(&[value_dist.label(), format!("{mops:.4}")]);
+    }
+    t5.print();
 
     if let Some(path) = BenchJson::path_from_env() {
         match json.write(&path) {

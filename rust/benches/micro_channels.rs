@@ -1,9 +1,14 @@
 //! Design-choice ablations (DESIGN.md §4): fence scopes, the §7.2
 //! update fence (~15 % claim), owned_var propagation strategies, lock
-//! local-handover, and MR pooling (the Fig. 4 mechanism). Run in
-//! isolation so the wall-clock orderings are meaningful.
+//! local-handover, MR pooling (the Fig. 4 mechanism), the
+//! doorbell-batched pipeline, the fault hooks, the locality tier, and
+//! the slab allocator's class-1 fast path. Run in isolation so the
+//! wall-clock orderings are meaningful.
+//!
+//! Set `LOCO_BENCH_JSON=BENCH_micro.json` to export every row for the
+//! CI perf-trajectory artifact (same shape as `BENCH_fig5.json`).
 
-use loco::bench::{micro, Scale};
+use loco::bench::{micro, BenchJson, Scale};
 use loco::metrics::Table;
 
 fn main() {
@@ -15,14 +20,17 @@ fn main() {
     );
 
     let mut t = Table::new(&["group", "variant", "value"]);
+    let mut json = BenchJson::new();
 
     let fences = micro::fence_scopes(lat.clone(), 2000);
     for (l, v) in &fences {
+        json.add("micro_fence_scope", l, *v);
         t.row(&["fence scope".into(), l.clone(), format!("{v:.2} µs/op")]);
     }
 
     let kvf = micro::kv_update_fence(lat.clone(), 2000);
     for (l, v) in &kvf {
+        json.add("micro_kv_update_fence", l, *v);
         t.row(&["kv update fence (§7.2)".into(), l.clone(), format!("{v:.1} Kops/s")]);
     }
     if kvf.len() == 2 && kvf[1].1 > 0.0 {
@@ -35,9 +43,11 @@ fn main() {
     }
 
     for (l, v) in micro::owned_var_push_vs_pull(lat.clone(), 2000) {
+        json.add("micro_owned_var", &l, v);
         t.row(&["owned_var strategy".into(), l, format!("{v:.2} µs/op")]);
     }
     for (l, v) in micro::lock_handover(lat.clone(), 1500) {
+        json.add("micro_lock_handover", &l, v);
         t.row(&["lock handover".into(), l, format!("{v:.1} Kops/s")]);
     }
 
@@ -50,6 +60,7 @@ fn main() {
             batch16 = (rows[0].1, rows[1].1);
         }
         for (l, v) in rows {
+            json.add("micro_batched_pipeline", &l, v);
             t.row(&["batched pipeline".into(), l, format!("{v:.1} Kops/s")]);
         }
     }
@@ -57,18 +68,29 @@ fn main() {
     // Fault-hook overhead: the same batched-vs-scalar workload with the
     // fault layer absent vs installed-but-inert (PR-3's ≤5 % bar).
     for (l, v) in micro::fault_hook_overhead(lat.clone(), 16, 100) {
+        json.add("micro_fault_hooks", &l, v);
         t.row(&["fault hooks".into(), l, format!("{v:.1} Kops/s")]);
+    }
+
+    // Slab allocator: single-word ops through a single-class geometry vs
+    // the full 8-class (1 KB ceiling) geometry — the class-1 fast path
+    // must stay within the PR-3 bar (the unit test pins 1.9×).
+    for (l, v) in micro::slab_class1_overhead(lat.clone(), 16, 100) {
+        json.add("micro_slab_class1", &l, v);
+        t.row(&["slab class-1 fast path".into(), l, format!("{v:.1} Kops/s")]);
     }
 
     // Locality tier: Zipfian-0.99 gets with the hot-key cache off vs on
     // (the ≥3× acceptance bar lives on this pair).
     let cache_rows = micro::cached_get_zipfian(lat.clone(), 8192, 20_000);
     for (l, v) in &cache_rows {
+        json.add("micro_locality_tier", l, *v);
         t.row(&["locality tier".into(), l.clone(), format!("{v:.1} Kops/s")]);
     }
 
     let pooling = micro::mr_pooling(lat, 4000);
     for (l, v) in &pooling {
+        json.add("micro_mr_pooling", l, *v);
         t.row(&["MR pooling (Fig. 4 mechanism)".into(), l.clone(), format!("{v:.2} µs/op")]);
     }
     t.print();
@@ -109,5 +131,12 @@ fn main() {
         eprintln!(
             "WARN: cached zipfian get only {cached:.1} vs uncached {uncached:.1} Kops/s (<3×)"
         );
+    }
+
+    if let Some(path) = BenchJson::path_from_env() {
+        match json.write(&path) {
+            Ok(()) => println!("\nwrote perf trajectory to {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
     }
 }

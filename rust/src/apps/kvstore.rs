@@ -4,8 +4,15 @@
 //!
 //! Design, exactly as in the paper:
 //!
-//! * Every node allocates a remotely-accessible **data region** holding
-//!   value slots `[value …][checksum][counter‖valid]`.
+//! * Every node allocates a remotely-accessible **data region**, carved
+//!   by the size-class **slab allocator**
+//!   ([`crate::core::mem_pool::SlabAllocator`]) into per-class value
+//!   slots framed `[len‖class][value …][checksum]…[counter‖valid]`
+//!   (checksum right after the value, counter word at the fixed frame
+//!   end). Values are variable-size: an insert picks the smallest
+//!   class that fits, an update that outgrows its class **relocates**
+//!   (see below), and readers learn the frame length to READ from the
+//!   class packed into the 32-bit slot id — no handshake needed.
 //! * Every node keeps a **local index** mapping key → (home node, slot,
 //!   counter) — a sharded, seqlock-validated table
 //!   ([`crate::core::index::ShardedIndex`]) whose readers are lock-free,
@@ -18,11 +25,46 @@
 //!   (the insert's linearization point).
 //! * Deletes unset the valid bit (linearization point), broadcast, and
 //!   free the slot once acknowledged.
-//! * Updates write `[value][checksum]` in place under the lock, then
+//! * Updates that still fit their slot's class write
+//!   `[len‖class][value][checksum]` in place under the lock, then
 //!   **fence** before release (the §7.2 "15 % overhead" fence — the
-//!   `fence_updates` knob ablates it).
-//! * Lookups take **no locks**: index lookup, one remote read, then the
-//!   checksum/counter/valid validation protocol of Appendix C.
+//!   `fence_updates` knob ablates it); updates that outgrew the class
+//!   relocate (below).
+//! * Lookups take **no locks**: index lookup, one remote read of the
+//!   slot's class-sized frame, then the checksum/counter/valid
+//!   validation protocol of Appendix C (the checksum covers the value's
+//!   *actual* length and sits right after it — a header torn against
+//!   its value shifts the checksum position, so the mix is rejected).
+//!
+//! # Relocation (updates that outgrow their class)
+//!
+//! An update whose new value exceeds its slot's class capacity cannot
+//! write in place. It instead **relocates** under the key lock: a fresh
+//! local slot (fresh generation) is written with the new value and the
+//! [`crate::core::mem_pool::HDR_RELOC`] marker, valid bit UNSET; the
+//! new location is broadcast (`OP_INSERT`) and acknowledged by every
+//! node; only then is the valid bit set — the update's linearization
+//! point — and the old slot retired (valid bit unset and fenced, then
+//! `OP_FREE`). The old frame keeps serving the pre-update value to
+//! readers whose index snapshot predates the broadcast (their
+//! invocations predate the linearization point, so the old value is
+//! legal) right up to the retire; readers that reach the new frame
+//! before valid-set see the RELOC marker and spin for the valid bit
+//! instead of reporting EMPTY — exactly the "park until the location
+//! settles" behavior of readers racing crash recovery.
+//!
+//! Crash atomicity: the relocation `OP_INSERT` carries the **origin**
+//! entry, which every tracker records until the retire (`OP_FREE`)
+//! proves completion. If the relocator crash-stops in between, each
+//! node converges without coordination — recovery's re-home (which
+//! applies compare-and-swap, `OP_REHOME` /
+//! [`crate::core::index::ShardedIndex::replace_matching`], so a LIVE
+//! relocation always wins the index) resurrects the relocated frame
+//! from the relocator's backup when the broadcast reached the backup,
+//! and otherwise the epoch purge **reverts** the key to its recorded
+//! origin — the pre-relocation frame at its alive old home, which the
+//! protocol deliberately never invalidates — instead of dropping a key
+//! that still exists.
 //!
 //! # The locality tier
 //!
@@ -46,13 +88,14 @@
 //! § Failure model & recovery): with [`KvConfig::replicate`] on, every
 //! slot frame is mirrored to a backup node, and on a detected crash the
 //! backup re-homes the dead node's key range from its replica (fresh
-//! generations, normal `OP_INSERT` broadcasts, an `OP_EPOCH` marker to
-//! purge leftovers). Reads and locked mutations that catch the dead
+//! generations, compare-and-swap `OP_REHOME` broadcasts, an `OP_EPOCH`
+//! marker to purge leftovers). Reads and locked mutations that catch the dead
 //! home park in `wait_entry_change` and resume against the new
 //! location; keys whose *lock* is hosted on the corpse are read-only
 //! (mutations return `Err(Error::PeerFailed)`). Without replication a
 //! crash behaves as a delete of every key the dead node homed.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
@@ -65,6 +108,9 @@ use crate::core::ctx::{FenceScope, MemRef, ThreadCtx};
 use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
 use crate::core::index::ShardedIndex;
 use crate::core::manager::Manager;
+use crate::core::mem_pool::{
+    hdr_class, hdr_len, hdr_reloc, pack_hdr, SlabAllocator, SlabGeometry,
+};
 use crate::fabric::{NodeId, Region};
 use crate::util::{fnv64, Backoff};
 use crate::workload::cityhash::city_hash64_u64;
@@ -85,6 +131,30 @@ const OP_INVAL: u64 = 4;
 /// never completed (or were never known to the backup) and their data
 /// died with the node.
 const OP_EPOCH: u64 = 5;
+/// Retire a relocated-away slot: `[OP_FREE, node, slot, key]`. Only the
+/// slot's home applies the free (returns the slot to its slab free
+/// list); FIFO-after the relocation's `OP_INSERT` on the same ring, so
+/// the home learns the new location before it can reuse the old slot.
+/// Every receiver also prunes `key`'s relocation-origin record — an
+/// OP_FREE proves the relocation completed (it is sent only after the
+/// valid-set), so the origin will never be needed for a crash revert.
+const OP_FREE: u64 = 6;
+/// Recovery re-home: `[OP_REHOME, key, node, slot, counter, old_node,
+/// old_slot, old_counter]`, optionally extended with the dead entry's
+/// relocation **origin** `[…, origin_node, origin_slot,
+/// origin_counter]` (11 words). Applied compare-and-swap — against the
+/// exact dead entry, or the origin (a receiver that never saw the
+/// crashed relocation's broadcast still holds it), or an absent key (a
+/// receiver that never saw the crashed *insert's* broadcast) — so a
+/// LIVE relocation's unconditional `OP_INSERT` wins on every node
+/// whatever the arrival order, while crashed partial broadcasts still
+/// converge everywhere.
+const OP_REHOME: u64 = 7;
+
+/// `OP_INSERT` message lengths: the 5-word plain form, and the 8-word
+/// relocation form carrying the origin entry (`[…, old_node, old_slot,
+/// old_counter]`) that receivers record for crash reverts.
+const OP_INSERT_PLAIN_LEN: usize = 5;
 
 /// Torn-read retries between index-entry re-fetches: a reader spinning
 /// on a checksum mismatch re-validates its location after this many
@@ -94,9 +164,14 @@ const TORN_REFETCH: u32 = 8;
 
 #[derive(Clone, Debug)]
 pub struct KvConfig {
-    /// Value slots per node.
+    /// Value slots per node **per size class** (the slab geometry gives
+    /// every class the same slot count; with `value_words == 1` there is
+    /// exactly one class and this is the node's total slot budget, as
+    /// before).
     pub slots_per_node: usize,
-    /// Value width in words.
+    /// **Maximum** value width in words (rounded up to a power of two).
+    /// Values of any length `1..=value_words` are accepted by every op;
+    /// the slab allocator places each in the smallest class that fits.
     pub value_words: usize,
     /// Ticket locks striped across nodes (`key % num_locks`).
     pub num_locks: usize,
@@ -106,8 +181,11 @@ pub struct KvConfig {
     pub fence_updates: bool,
     /// Use the local-handover lock fast path.
     pub lock_handover: bool,
-    /// Hot-key read-cache capacity in entries; 0 disables the locality
-    /// tier's value cache. Requires `fence_updates`.
+    /// Hot-key read-cache **byte budget**; 0 disables the locality
+    /// tier's value cache. Requires `fence_updates`. A byte budget (not
+    /// an entry count) so large values cannot blow the cache: a cached
+    /// entry costs its value words plus a fixed overhead (see
+    /// [`ReadCache`]), and fills evict until the budget holds.
     ///
     /// Like every other field, this is part of the cluster-wide config
     /// contract ("all nodes must call with identical `cfg`") — and here
@@ -116,7 +194,7 @@ pub struct KvConfig {
     /// would serve the pre-update value indefinitely (in-place updates
     /// don't bump the generation counter). There is no cross-node
     /// config handshake; keep configs identical.
-    pub read_cache_entries: usize,
+    pub read_cache_bytes: usize,
     /// Replicate every slot frame to a **backup node** (`(home+1) mod
     /// n`) so a crash-stopped home's key range can be re-homed from the
     /// surviving replica instead of lost (see `docs/ARCHITECTURE.md`,
@@ -136,7 +214,7 @@ impl Default for KvConfig {
             tracker_words: 1 << 14,
             fence_updates: true,
             lock_handover: true,
-            read_cache_entries: 0,
+            read_cache_bytes: 0,
             replicate: false,
         }
     }
@@ -144,9 +222,11 @@ impl Default for KvConfig {
 
 impl KvConfig {
     /// Enable the read cache sized for a Zipfian θ=0.99 workload over
-    /// `keyspace` keys (see [`ReadCache::zipfian_capacity`]).
+    /// `keyspace` keys (see [`ReadCache::zipfian_capacity`]), budgeted
+    /// in bytes for this config's maximum value width.
     pub fn with_zipfian_cache(mut self, keyspace: u64) -> Self {
-        self.read_cache_entries = ReadCache::zipfian_capacity(keyspace);
+        self.read_cache_bytes =
+            ReadCache::zipfian_capacity(keyspace) * ReadCache::entry_bytes(self.value_words);
         self
     }
 }
@@ -157,9 +237,24 @@ struct KvShared {
     index: ShardedIndex,
     /// The locality tier's hot-key value cache (None = disabled).
     cache: Option<ReadCache>,
-    free: Mutex<Vec<u32>>,
-    /// Authoritative per-slot counters for *local* slots.
+    /// Size-class slab allocator over this node's data region: per-class
+    /// free lists plus leak/double-free accounting (auditable via
+    /// [`KvStore::slab_audit`]).
+    alloc: SlabAllocator,
+    /// Authoritative per-slot generation counters for *local* slots,
+    /// indexed by the slab's dense slot ordinal.
     slot_counter: Vec<AtomicU64>,
+    /// In-flight relocation origins, keyed by key: recorded when a
+    /// relocation's `OP_INSERT` applies, pruned when its `OP_FREE`
+    /// proves completion (or any later op supersedes it). If the
+    /// relocator crash-stops in between, the replicated recovery path
+    /// **reverts** the key to this origin — the pre-relocation frame at
+    /// its (alive) old home still holds the pre-update value, and the
+    /// relocation never linearized — instead of dropping a key that
+    /// exists (see `purge_homed_on` for why the revert is
+    /// replicate-only). Touched only by the tracker thread (apply +
+    /// recovery).
+    reloc_origins: Mutex<HashMap<u64, IndexEntry>>,
     tracker_ready: AtomicBool,
     shutdown: AtomicBool,
 }
@@ -171,17 +266,41 @@ impl KvShared {
         }
     }
 
-    /// Drop every index entry homed on `dead` (invalidating each key's
-    /// cached value): the shared purge step of crash recovery — used
-    /// without replication (each node independently), by the backup's
-    /// leftover sweep, and by the `OP_EPOCH` tracker handler.
-    fn purge_homed_on(&self, dead: NodeId) {
+    /// Resolve every index entry still homed on `dead` (invalidating
+    /// each key's cached value): the shared purge step of crash
+    /// recovery — used without replication (each node independently),
+    /// by the backup's leftover sweep, and by the `OP_EPOCH` tracker
+    /// handler.
+    ///
+    /// With `revert` (the replicated paths), an entry with a recorded
+    /// relocation origin **reverts** to it instead of being dropped:
+    /// the relocation never completed — its `OP_FREE` never arrived —
+    /// so the pre-relocation frame at the alive old home still serves
+    /// the pre-update value. This is safe precisely because, with
+    /// replication, any *linearized* relocation was fully acked and is
+    /// re-homed by the backup's `OP_REHOME` before this purge runs (so
+    /// the revert can only fire for relocations whose old slot was
+    /// never freed). Without replication that guarantee is gone — a
+    /// relocator dying mid-`OP_FREE` could leave the origin slot freed
+    /// and reused, and a reverted entry would point locked writes at
+    /// another key's frame — so the unreplicated purge always drops
+    /// (`revert: false`; crash = loss of the dead node's range, as
+    /// documented).
+    fn purge_homed_on(&self, dead: NodeId, revert: bool) {
+        let mut origins = self.reloc_origins.lock().unwrap();
         for (key, e) in self.index.entries_homed_on(dead) {
             self.invalidate(key);
-            // Compare-and-remove: never clobber an entry that was
-            // re-homed (or freshly re-inserted) between snapshot and
-            // drop.
-            self.index.remove_matching(key, &e);
+            match origins.remove(&key) {
+                Some(origin) if revert && origin.node != dead => {
+                    // Compare-and-swap revert: never clobber an entry
+                    // that was re-homed (or freshly re-inserted)
+                    // between snapshot and revert.
+                    self.index.replace_matching(key, &e, origin);
+                }
+                _ => {
+                    self.index.remove_matching(key, &e);
+                }
+            }
         }
     }
 }
@@ -207,9 +326,9 @@ impl KvStore {
     pub fn new(mgr: &Arc<Manager>, name: &str, cfg: KvConfig) -> Arc<KvStore> {
         let me = mgr.me();
         let n = mgr.num_nodes();
-        let slot_words = cfg.value_words + 2;
+        let geo = SlabGeometry::new(cfg.value_words, cfg.slots_per_node);
         assert!(
-            cfg.read_cache_entries == 0 || cfg.fence_updates,
+            cfg.read_cache_bytes == 0 || cfg.fence_updates,
             "the read cache requires fence_updates: an unfenced update could \
              be cached stale indefinitely"
         );
@@ -222,20 +341,12 @@ impl KvStore {
         );
 
         let ep = Endpoint::new(name, me, n, Expect::AllPeers);
-        let data = mgr.pool().alloc_named(
-            &region_name(name, "data"),
-            cfg.slots_per_node * slot_words,
-            false,
-        );
+        let data = mgr.pool().alloc_named(&region_name(name, "data"), geo.total_words(), false);
         ep.add_local_region("data", data);
         // With replication on, every node also hosts the backup array
-        // for its predecessor's slots (same geometry as `data`).
+        // for its predecessor's slots (same slab geometry as `data`).
         let backup_hosted = cfg.replicate.then(|| {
-            let r = mgr.pool().alloc_named(
-                &region_name(name, "backup"),
-                cfg.slots_per_node * slot_words,
-                false,
-            );
+            let r = mgr.pool().alloc_named(&region_name(name, "backup"), geo.total_words(), false);
             ep.add_local_region("backup", r);
             r
         });
@@ -264,10 +375,11 @@ impl KvStore {
         let tracker_tx = RingSender::new(mgr, &sub_name(name, &format!("trk{me}")), cfg.tracker_words);
 
         let shared = Arc::new(KvShared {
-            index: ShardedIndex::new(cfg.slots_per_node * n),
-            cache: (cfg.read_cache_entries > 0).then(|| ReadCache::new(cfg.read_cache_entries)),
-            free: Mutex::new((0..cfg.slots_per_node as u32).rev().collect()),
-            slot_counter: (0..cfg.slots_per_node).map(|_| AtomicU64::new(0)).collect(),
+            index: ShardedIndex::new(geo.total_slots() * n),
+            cache: (cfg.read_cache_bytes > 0).then(|| ReadCache::new(cfg.read_cache_bytes)),
+            alloc: SlabAllocator::new(geo),
+            slot_counter: (0..geo.total_slots()).map(|_| AtomicU64::new(0)).collect(),
+            reloc_origins: Mutex::new(HashMap::new()),
             tracker_ready: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
@@ -326,12 +438,71 @@ impl KvStore {
         (city_hash64_u64(key) % self.num_nodes as u64) as NodeId
     }
 
-    fn slot_words(&self) -> usize {
-        self.cfg.value_words + 2
+    #[inline]
+    fn geo(&self) -> &SlabGeometry {
+        self.shared.alloc.geometry()
     }
 
+    /// Frame width (words) of `slot`'s class — what a reader READs.
+    #[inline]
+    fn frame_words_of(&self, slot: u32) -> usize {
+        self.geo().frame_words(self.geo().class_of(slot)) as usize
+    }
+
+    #[inline]
     fn slot_off(&self, slot: u32) -> u64 {
-        slot as u64 * self.slot_words() as u64
+        self.geo().slot_off(slot)
+    }
+
+    /// Offset of the `counter‖valid` word (fixed frame end).
+    #[inline]
+    fn cv_off(&self, slot: u32) -> u64 {
+        self.slot_off(slot) + self.frame_words_of(slot) as u64 - 1
+    }
+
+    /// Build the writable frame prefix `[len‖class][value…][checksum]`
+    /// for `slot` (the cv word at the frame end is managed separately).
+    /// The checksum covers the **actual** value length — a header torn
+    /// against its value shifts the checksum position, so the validation
+    /// still rejects the mix.
+    fn build_frame(&self, slot: u32, value: &[u64], reloc: bool) -> Vec<u64> {
+        let class = self.geo().class_of(slot);
+        debug_assert!(value.len() <= self.geo().cap(class));
+        let mut frame = Vec::with_capacity(value.len() + 2);
+        frame.push(pack_hdr(value.len(), class, reloc));
+        frame.extend_from_slice(value);
+        frame.push(fnv64(value));
+        frame
+    }
+
+    /// Validate a read frame against the reader's index entry
+    /// (Appendix C, extended with the variable-size header and the
+    /// relocation marker).
+    fn parse_frame(&self, e: &IndexEntry, words: &[u64]) -> FrameRead {
+        let geo = self.geo();
+        let class = geo.class_of(e.slot);
+        let fw = geo.frame_words(class) as usize;
+        debug_assert_eq!(words.len(), fw);
+        let hdr = words[0];
+        let len = hdr_len(hdr);
+        if hdr_class(hdr) != class || len == 0 || len > geo.cap(class) {
+            return FrameRead::Torn; // header from a write in flight
+        }
+        if fnv64(&words[1..1 + len]) != words[1 + len] {
+            return FrameRead::Torn;
+        }
+        let cv = words[fw - 1];
+        if cv >> 1 != e.counter {
+            return FrameRead::Stale; // slot reused under a newer generation
+        }
+        if cv & 1 == 0 {
+            // A relocation's frame before its valid-set is *about* to
+            // linearize — the key exists throughout, so spin rather than
+            // report EMPTY. Anything else unset means "insert not yet /
+            // delete already linearized".
+            return if hdr_reloc(hdr) { FrameRead::Pending } else { FrameRead::Stale };
+        }
+        FrameRead::Value(words[1..1 + len].to_vec())
     }
 
     fn data_region_of(&self, node: NodeId) -> Region {
@@ -361,18 +532,18 @@ impl KvStore {
         }
     }
 
-    /// Write a full frame `[value][ck][cv]` into the backup replica of
-    /// OUR slot `slot` and fence it placed. A dead backup node is
-    /// tolerated (single-crash model: our backup only matters if *we*
-    /// die next, and two simultaneous crashes are out of scope).
-    fn write_backup_frame(&self, ctx: &ThreadCtx, slot: u32, value: &[u64], ck: u64, cv: u64) {
+    /// Write a full class-sized frame `[hdr][value…][ck]…[cv]` into the
+    /// backup replica of OUR slot `slot` and fence it placed. A dead
+    /// backup node is tolerated (single-crash model: our backup only
+    /// matters if *we* die next, and two simultaneous crashes are out of
+    /// scope).
+    fn write_backup_frame(&self, ctx: &ThreadCtx, slot: u32, frame: &[u64], cv: u64) {
         let region = self.backup_region_of(self.me);
-        let off = self.slot_off(slot);
-        let mut frame = Vec::with_capacity(value.len() + 2);
-        frame.extend_from_slice(value);
-        frame.push(ck);
-        frame.push(cv);
-        ctx.write(region, off, &frame);
+        let fw = self.frame_words_of(slot);
+        let mut full = vec![0u64; fw];
+        full[..frame.len()].copy_from_slice(frame);
+        full[fw - 1] = cv;
+        ctx.write(region, self.slot_off(slot), &full);
         let _ = ctx.try_fence(FenceScope::Pair(self.backup_of(self.me)));
     }
 
@@ -421,12 +592,24 @@ impl KvStore {
 
     // ---- operations -------------------------------------------------
 
+    /// Assert `value` is a legal width for this config (any length up to
+    /// the configured maximum — the slab picks the class).
+    #[inline]
+    fn check_value_len(&self, value: &[u64]) {
+        assert!(
+            !value.is_empty() && value.len() <= self.cfg.value_words,
+            "value length {} outside 1..={} words",
+            value.len(),
+            self.cfg.value_words
+        );
+    }
+
     /// Insert (or update-in-place if present). Returns Ok(true) if a new
     /// key was inserted. `Err(Error::PeerFailed)` when the key's lock is
     /// hosted on a crash-stopped node (the mutation did not happen; see
     /// the failure model in `docs/ARCHITECTURE.md`).
     pub fn insert(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
-        assert_eq!(value.len(), self.cfg.value_words);
+        self.check_value_len(value);
         let lock = self.lock_of(key);
         lock.try_lock(ctx)?;
         let res = self.insert_locked(ctx, key, value);
@@ -444,26 +627,25 @@ impl KvStore {
                 // re-resolve — this is now a fresh insert.
                 continue;
             }
-            let Some(slot) = self.shared.free.lock().unwrap().pop() else {
-                return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
+            let Some(slot) = self.shared.alloc.alloc(value.len()) else {
+                return Err(Error::Capacity(format!(
+                    "node {} out of kv slots for a {}-word value",
+                    self.me,
+                    value.len()
+                )));
             };
-            let counter =
-                self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
-            // Local write: value, checksum, counter with valid UNSET.
-            let off = self.slot_off(slot);
-            let ck = fnv64(value);
-            for (i, w) in value.iter().enumerate() {
-                ctx.local_store(self.data, off + i as u64, *w);
-            }
-            ctx.local_store(self.data, off + value.len() as u64, ck);
-            ctx.local_store(self.data, off + value.len() as u64 + 1, counter << 1);
+            let counter = self.bump_counter(slot);
+            // Local write: header, value, checksum, counter with valid
+            // UNSET.
+            let frame = self.build_frame(slot, value, false);
+            self.store_frame_local(ctx, slot, &frame, counter << 1);
             // Backup replica before the broadcast, already valid: if we
             // crash before returning, recovery resurrecting a
             // never-linearized insert is harmless (no reader could have
             // relied on EMPTY — the insert never responded), while the
             // reverse order could lose an insert that *did* respond.
             if self.cfg.replicate {
-                self.write_backup_frame(ctx, slot, value, ck, (counter << 1) | 1);
+                self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
             }
 
             // Our own index first, then broadcast to peers and await acks.
@@ -475,16 +657,33 @@ impl KvStore {
                 tx.wait_all_acked(ctx, pos);
             }
             // All indices now hold the location: set valid (linearization pt).
-            ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
+            ctx.local_store(self.data, self.cv_off(slot), (counter << 1) | 1);
             return Ok(true);
         }
     }
 
-    /// Update an existing key in place. Returns false if absent. Panics
-    /// on an unrecoverable peer failure — use [`KvStore::try_update`]
-    /// when running with fault injection.
+    /// Bump and return the fresh generation for a local `slot`.
+    #[inline]
+    fn bump_counter(&self, slot: u32) -> u64 {
+        self.shared.slot_counter[self.geo().ordinal(slot)].fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Store a frame prefix plus its cv word into OUR data region with
+    /// plain local stores.
+    fn store_frame_local(&self, ctx: &ThreadCtx, slot: u32, frame: &[u64], cv: u64) {
+        let off = self.slot_off(slot);
+        for (i, w) in frame.iter().enumerate() {
+            ctx.local_store(self.data, off + i as u64, *w);
+        }
+        ctx.local_store(self.data, self.cv_off(slot), cv);
+    }
+
+    /// Update an existing key (in place, or relocating if the value
+    /// outgrew its slot's class). Returns false if absent. Panics on an
+    /// unrecoverable peer failure or relocation capacity exhaustion —
+    /// use [`KvStore::try_update`] when either is expected.
     pub fn update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
-        self.try_update(ctx, key, value).expect("kv update: unrecoverable peer failure")
+        self.try_update(ctx, key, value).expect("kv update: peer failure or slab capacity")
     }
 
     /// Crash-stop-aware update: `Ok(false)` if the key is absent (or was
@@ -495,7 +694,7 @@ impl KvStore {
     /// location, so an `Ok(true)` always means the value is durable on
     /// the current home.
     pub fn try_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
-        assert_eq!(value.len(), self.cfg.value_words);
+        self.check_value_len(value);
         let lock = self.lock_of(key);
         lock.try_lock(ctx)?;
         let res = match self.shared.index.get(key) {
@@ -506,11 +705,13 @@ impl KvStore {
         res
     }
 
-    /// The locked mutate-in-place path shared by update and
-    /// insert-over-existing, with the crash-recovery retry loop: a home
-    /// that crash-stops before the write is placed gets re-resolved via
+    /// The locked mutate path shared by update and insert-over-existing,
+    /// with the crash-recovery retry loop: a home that crash-stops
+    /// before the write is placed gets re-resolved via
     /// [`KvStore::wait_entry_change`] and the write retried against the
-    /// new location. Returns whether the value was applied (false: the
+    /// new location. Values that still fit their slot's class are
+    /// written in place; values that outgrew it **relocate** (see the
+    /// module docs). Returns whether the value was applied (false: the
     /// key vanished — deleted by recovery or a racing delete).
     fn locked_update(
         &self,
@@ -529,6 +730,14 @@ impl KvStore {
                     None => return Ok(false),
                 }
             }
+            if value.len() > self.geo().cap(self.geo().class_of(e.slot)) {
+                // Outgrew the slot's class: fresh slot, fresh
+                // generation, location broadcast. Linearizes at the new
+                // frame's valid-set; no OP_INVAL needed (the OP_INSERT
+                // apply invalidates caches, and the generation moved).
+                self.relocate_locked(ctx, key, e, value)?;
+                return Ok(true);
+            }
             match self.write_value(ctx, &e, value) {
                 Ok(()) => break,
                 Err(err) => {
@@ -545,22 +754,121 @@ impl KvStore {
         Ok(true)
     }
 
-    /// The locked write path shared by update and insert-over-existing:
-    /// write `[value][checksum]` (mirrored to the backup replica when
-    /// replication is on), then fence so the write is placed before the
-    /// lock release (§7.2). `Err` iff the home node crash-stopped before
-    /// placement was proven — the caller re-resolves and retries; a dead
-    /// *backup* is tolerated (single-crash model).
+    /// Relocate `key` from `old` into a fresh **local** slot (the
+    /// relocation analogue of an insert — online placement follows the
+    /// mutating node, as in the paper). Caller holds the key lock.
+    ///
+    /// Ordering (the relocation consistency story, see module docs):
+    /// new frame written valid-UNSET with the `HDR_RELOC` marker →
+    /// backup replica (valid set, like an insert's) → own index +
+    /// `OP_INSERT` broadcast, **all acks** → valid-set (linearization
+    /// point) → old frame's valid bit unset + fenced → old slot retired
+    /// (`OP_FREE`, ack-waited so a quiesced store audits clean). The
+    /// old frame keeps its old value and valid bit until *after* the
+    /// linearization: readers whose snapshot predates the broadcast
+    /// serve it legally (their invocation predates the linearization
+    /// point); readers at the new frame pre-valid-set spin on the RELOC
+    /// marker; readers that catch the old frame retired re-resolve
+    /// through the index, which already names the new location. The
+    /// old home's crash racing this is arbitrated by `OP_REHOME`'s
+    /// compare-and-swap (the relocation wins).
+    fn relocate_locked(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        old: IndexEntry,
+        value: &[u64],
+    ) -> Result<()> {
+        let Some(slot) = self.shared.alloc.alloc(value.len()) else {
+            return Err(Error::Capacity(format!(
+                "node {} out of kv slots relocating a {}-word value",
+                self.me,
+                value.len()
+            )));
+        };
+        let counter = self.bump_counter(slot);
+        let frame = self.build_frame(slot, value, true);
+        self.store_frame_local(ctx, slot, &frame, counter << 1);
+        if self.cfg.replicate {
+            // Valid in the backup: if we crash before setting the live
+            // bit, recovery resurrects the relocated value — the update
+            // never responded, so either outcome is linearizable, and
+            // the old entry no longer names a frame recovery would pick.
+            self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
+        }
+        self.shared.invalidate(key);
+        self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
+        {
+            // The 8-word relocation form: receivers record the origin
+            // so a crash of THIS node mid-protocol reverts the key to
+            // its old location instead of dropping it.
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(
+                ctx,
+                &[
+                    OP_INSERT,
+                    key,
+                    self.me as u64,
+                    slot as u64,
+                    counter,
+                    old.node as u64,
+                    old.slot as u64,
+                    old.counter,
+                ],
+            );
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        // Every index now names the new location: linearize.
+        ctx.local_store(self.data, self.cv_off(slot), (counter << 1) | 1);
+        // Retire the old slot. FIRST unset its valid bit and prove the
+        // unset placed: the old frame deliberately kept serving the
+        // pre-update value until the linearization above, but a
+        // freed-and-reused slot must never be reachable through a stale
+        // entry with a still-valid cv — a reuse's insert writes its
+        // frame bytes before its own cv word, and a reader holding the
+        // pre-relocation entry could otherwise validate the NEW key's
+        // checksummed bytes against the OLD generation. With the unset
+        // placed, stale readers take the Stale/Pending path and
+        // re-resolve to the new location (every index already names
+        // it). Then free (locally, or via OP_FREE — which also prunes
+        // the origin records everywhere, doubling as the "relocation
+        // completed" marker). A dead old home keeps its slots.
+        let old_cv = old.counter << 1;
+        if old.node == self.me {
+            ctx.local_store(self.data, self.cv_off(old.slot), old_cv);
+            self.shared.alloc.free(old.slot);
+        } else if !ctx.node_down(old.node) {
+            ctx.write1(self.data_region_of(old.node), self.cv_off(old.slot), old_cv);
+            // Fence failure means the old home (or we) just died: its
+            // slots die with it either way.
+            let _ = ctx.try_fence(FenceScope::Pair(old.node));
+        }
+        {
+            let tx = self.tracker_tx.lock().unwrap();
+            tx.send(ctx, &[OP_FREE, old.node as u64, old.slot as u64, key]);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+        Ok(())
+    }
+
+    /// The locked in-place write path shared by update and
+    /// insert-over-existing: write `[hdr][value][checksum]` (the header
+    /// carries the new actual length; the class cannot change in place)
+    /// mirrored to the backup replica when replication is on, then fence
+    /// so the write is placed before the lock release (§7.2). `Err` iff
+    /// the home node crash-stopped before placement was proven — the
+    /// caller re-resolves and retries; a dead *backup* is tolerated
+    /// (single-crash model).
     fn write_value(&self, ctx: &ThreadCtx, e: &IndexEntry, value: &[u64]) -> Result<()> {
         let region = self.data_region_of(e.node);
         let off = self.slot_off(e.slot);
-        let mut buf = Vec::with_capacity(value.len() + 1);
-        buf.extend_from_slice(value);
-        buf.push(fnv64(value));
+        let buf = self.build_frame(e.slot, value, false);
         ctx.write(region, off, &buf); // completion tracked by the fence
         if self.cfg.replicate {
-            // Mirror [value][ck]; the cv word is untouched (in-place
-            // updates do not change the generation).
+            // Mirror [hdr][value][ck]; the cv word is untouched
+            // (in-place updates do not change the generation).
             ctx.write(self.backup_region_of(e.node), off, &buf);
         }
         if self.cfg.fence_updates {
@@ -653,7 +961,8 @@ impl KvStore {
             // between here and the fill rejects the fill.
             let token = self.cache_for(&e).map(|c| c.begin_fill(key));
             let region = self.data_region_of(e.node);
-            let words = match ctx.try_read(region, self.slot_off(e.slot), self.slot_words()) {
+            let words = match ctx.try_read(region, self.slot_off(e.slot), self.frame_words_of(e.slot))
+            {
                 Ok(w) => w,
                 Err(_) => {
                     // A read error with a live home means *we* are the
@@ -665,29 +974,41 @@ impl KvStore {
                     continue; // home's crash raced the read: handled above
                 }
             };
-            let (value, rest) = words.split_at(self.cfg.value_words);
-            let (ck, cv) = (rest[0], rest[1]);
-            if fnv64(value) == ck {
-                if cv >> 1 != e.counter {
-                    return None; // stale index: linearizes after the delete
+            match self.parse_frame(&e, &words) {
+                FrameRead::Value(value) => {
+                    if let (Some(cache), Some(token)) = (self.cache_for(&e), token) {
+                        cache.fill(token, key, e.counter, &value);
+                    }
+                    return Some(value);
                 }
-                if cv & 1 == 0 {
-                    return None; // insert not yet / delete already linearized
+                FrameRead::Stale => {
+                    // Wrong generation or valid unset: the slot moved on
+                    // without us. Re-resolve — a relocation or re-insert
+                    // left a *new* location to serve; an unchanged entry
+                    // means the delete (or a pending insert's EMPTY
+                    // window) linearized: EMPTY is correct.
+                    match self.shared.index.get(key) {
+                        Some(ne) if ne != e => {
+                            e = ne;
+                            continue;
+                        }
+                        _ => return None,
+                    }
                 }
-                if let (Some(cache), Some(token)) = (self.cache_for(&e), token) {
-                    cache.fill(token, key, e.counter, value);
+                // Torn write in flight, or a relocation racing toward
+                // its valid-set: retry. Re-fetch the entry periodically
+                // — if our slot was reused for another (update-heavy)
+                // key, spinning on the old location would never
+                // terminate, and a delete landing under a RELOC-marked
+                // frame only resolves through the index.
+                FrameRead::Torn | FrameRead::Pending => {
+                    torn_rounds += 1;
+                    if torn_rounds % TORN_REFETCH == 0 {
+                        e = self.shared.index.get(key)?;
+                    }
+                    bo.snooze();
                 }
-                return Some(value.to_vec());
             }
-            // Torn update in flight: retry in its entirety. Re-fetch the
-            // entry periodically — if our slot was reused for another
-            // (update-heavy) key, spinning on the old location would
-            // never terminate.
-            torn_rounds += 1;
-            if torn_rounds % TORN_REFETCH == 0 {
-                e = self.shared.index.get(key)?;
-            }
-            bo.snooze();
         }
     }
 
@@ -730,7 +1051,7 @@ impl KvStore {
             // here cannot re-home a key whose delete is about to be
             // broadcast (recovery validates against the backup frame).
             let region = self.data_region_of(e.node);
-            let cv_off = self.slot_off(e.slot) + self.cfg.value_words as u64 + 1;
+            let cv_off = self.cv_off(e.slot);
             if self.cfg.replicate {
                 ctx.write1(self.backup_region_of(e.node), cv_off, e.counter << 1);
             }
@@ -762,7 +1083,7 @@ impl KvStore {
         self.shared.invalidate(key);
         self.shared.index.remove(key);
         if e.node == self.me {
-            self.shared.free.lock().unwrap().push(e.slot);
+            self.shared.alloc.free(e.slot);
         }
         Ok(true)
     }
@@ -806,11 +1127,14 @@ impl KvStore {
                     self.cache_for(&e).map(|c| c.begin_fill(keys[i]))
                 })
                 .collect();
+            // Per-class frame lengths, one post list per home node: the
+            // class packed into each slot id tells the reader how many
+            // words to READ without any handshake.
             let reqs: Vec<(Region, u64, usize)> = pending
                 .iter()
                 .map(|&i| {
                     let e = entries[i].unwrap();
-                    (self.data_region_of(e.node), self.slot_off(e.slot), self.slot_words())
+                    (self.data_region_of(e.node), self.slot_off(e.slot), self.frame_words_of(e.slot))
                 })
                 .collect();
             // read_many waits once for the whole batch and resets the
@@ -820,20 +1144,29 @@ impl KvStore {
             let mut torn: Vec<usize> = Vec::new();
             for (j, &i) in pending.iter().enumerate() {
                 let e = entries[i].unwrap();
-                let words = &raws[j];
-                let (value, rest) = words.split_at(self.cfg.value_words);
-                let (ck, cv) = (rest[0], rest[1]);
-                if fnv64(value) != ck {
-                    torn.push(i); // retried as one batch next round
-                    continue;
-                }
-                if cv >> 1 == e.counter && cv & 1 == 1 {
-                    if let (Some(cache), Some(token)) = (self.cache_for(&e), tokens[j]) {
-                        cache.fill(token, keys[i], e.counter, value);
+                match self.parse_frame(&e, &raws[j]) {
+                    FrameRead::Value(value) => {
+                        if let (Some(cache), Some(token)) = (self.cache_for(&e), tokens[j]) {
+                            cache.fill(token, keys[i], e.counter, &value);
+                        }
+                        out[i] = Some(value);
                     }
-                    out[i] = Some(value.to_vec());
+                    // Torn write / relocation racing its valid-set:
+                    // retried as one batch next round.
+                    FrameRead::Torn | FrameRead::Pending => torn.push(i),
+                    FrameRead::Stale => {
+                        // Slot moved on: re-resolve now. A new location
+                        // (relocation / re-insert) rejoins the batch;
+                        // an unchanged or vanished entry is EMPTY.
+                        match self.shared.index.get(keys[i]) {
+                            Some(ne) if ne != e => {
+                                entries[i] = Some(ne);
+                                torn.push(i);
+                            }
+                            _ => {} // stays None
+                        }
+                    }
                 }
-                // else: stale index / not linearized — stays None.
             }
             if torn.is_empty() {
                 break;
@@ -874,7 +1207,7 @@ impl KvStore {
     /// correctly.
     pub fn multi_put(&self, ctx: &ThreadCtx, items: &[(u64, Vec<u64>)]) -> usize {
         for (_, value) in items {
-            assert_eq!(value.len(), self.cfg.value_words);
+            self.check_value_len(value);
         }
         let mut lock_ids: Vec<usize> =
             items.iter().map(|(k, _)| (*k % self.cfg.num_locks as u64) as usize).collect();
@@ -886,18 +1219,25 @@ impl KvStore {
 
         let entries: Vec<Option<IndexEntry>> =
             items.iter().map(|(k, _)| self.shared.index.get(*k)).collect();
-        // Build [value][checksum] frames, then one batched write issue
+        // Build `[hdr][value][checksum]` frames for every value that
+        // still fits its slot's class, then one batched write issue
         // (each frame mirrored to its backup replica when replication is
-        // on — same batch, same fence).
+        // on — same batch, same fence). Values that outgrew their class
+        // take the scalar relocation path below, under the same held
+        // locks.
         let mut bufs: Vec<Vec<u64>> = Vec::new();
         let mut targets: Vec<(Region, u64, usize)> = Vec::new();
+        let mut relocations: Vec<usize> = Vec::new();
         let mut touched: Vec<u64> = Vec::new();
         let mut updated = 0usize;
-        for (e, (k, value)) in entries.iter().zip(items) {
+        for (i, (e, (k, value))) in entries.iter().zip(items).enumerate() {
             if let Some(e) = e {
-                let mut buf = Vec::with_capacity(value.len() + 1);
-                buf.extend_from_slice(value);
-                buf.push(fnv64(value));
+                if value.len() > self.geo().cap(self.geo().class_of(e.slot)) {
+                    relocations.push(i);
+                    updated += 1;
+                    continue;
+                }
+                let buf = self.build_frame(e.slot, value, false);
                 let idx = bufs.len();
                 bufs.push(buf);
                 let off = self.slot_off(e.slot);
@@ -916,6 +1256,30 @@ impl KvStore {
         let _key = ctx.write_many(&writes); // completion tracked by the fence
         if self.cfg.fence_updates && !writes.is_empty() {
             ctx.fence(FenceScope::Thread); // one fence for the whole batch
+        }
+        // Outgrown values relocate one by one (rare path; still under
+        // the batch's locks, so the per-key mutation order holds). Their
+        // OP_INSERT broadcasts invalidate caches — no OP_INVAL needed.
+        // Re-resolve each entry first: an earlier relocation in this
+        // same batch (duplicate key) may have moved it already, in which
+        // case the value may now fit in place.
+        for &i in &relocations {
+            let (k, value) = &items[i];
+            // Last occurrence wins for duplicate keys: a later item in
+            // the batch (already written in place above, or relocating
+            // below) supersedes this one — running it now would clobber
+            // the later value.
+            if items[i + 1..].iter().any(|(k2, _)| k2 == k) {
+                continue;
+            }
+            let Some(e) = self.shared.index.get(*k) else { continue };
+            if value.len() <= self.geo().cap(self.geo().class_of(e.slot)) {
+                self.write_value(ctx, &e, value).expect("multi_put in-place rewrite failed");
+                touched.push(*k);
+            } else {
+                self.relocate_locked(ctx, *k, e, value)
+                    .expect("multi_put relocation failed (capacity/peer)");
+            }
         }
         touched.sort_unstable();
         touched.dedup(); // duplicate keys in one batch need one invalidation
@@ -940,7 +1304,7 @@ impl KvStore {
         }
         let token = self.cache_for(&e).map(|c| c.begin_fill(key));
         let region = self.data_region_of(e.node);
-        let (ack, buf) = ctx.read_async(region, self.slot_off(e.slot), self.slot_words());
+        let (ack, buf) = ctx.read_async(region, self.slot_off(e.slot), self.frame_words_of(e.slot));
         Some(PendingGet { key, entry: e, state: PendingState::InFlight { ack, buf, token } })
     }
 
@@ -959,18 +1323,18 @@ impl KvStore {
             return self.get(ctx, pg.key);
         }
         let words = buf.to_vec();
-        let (value, rest) = words.split_at(self.cfg.value_words);
-        let (ck, cv) = (rest[0], rest[1]);
-        if fnv64(value) != ck {
-            return self.get(ctx, pg.key); // torn: retry in its entirety
+        match self.parse_frame(&pg.entry, &words) {
+            FrameRead::Value(value) => {
+                if let (Some(cache), Some(token)) = (self.cache_for(&pg.entry), token) {
+                    cache.fill(token, pg.key, pg.entry.counter, &value);
+                }
+                Some(value)
+            }
+            // Torn, mid-relocation, or stale: restart through the
+            // blocking path, which re-resolves the location (and returns
+            // EMPTY only once that is the linearizable answer).
+            FrameRead::Torn | FrameRead::Pending | FrameRead::Stale => self.get(ctx, pg.key),
         }
-        if cv >> 1 != pg.entry.counter || cv & 1 == 0 {
-            return None;
-        }
-        if let (Some(cache), Some(token)) = (self.cache_for(&pg.entry), token) {
-            cache.fill(token, pg.key, pg.entry.counter, value);
-        }
-        Some(value.to_vec())
     }
 
     // ---- bulk prefill --------------------------------------------------
@@ -992,32 +1356,30 @@ impl KvStore {
             msg.push(OP_BATCH);
             msg.push(self.me as u64);
             msg.push(chunk.len() as u64);
-            {
-                let mut free = self.shared.free.lock().unwrap();
-                for (i, &key) in chunk.iter().enumerate() {
-                    let Some(slot) = free.pop() else {
-                        return Err(Error::Capacity(format!("node {} out of kv slots", self.me)));
-                    };
-                    let counter =
-                        self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
-                    let value = value_of(key);
-                    assert_eq!(value.len(), self.cfg.value_words);
-                    let ck = match checksums {
-                        Some(cks) => cks[chunk_idx * BATCH + i],
-                        None => fnv64(&value),
-                    };
-                    let off = self.slot_off(slot);
-                    for (j, w) in value.iter().enumerate() {
-                        ctx.local_store(self.data, off + j as u64, *w);
-                    }
-                    ctx.local_store(self.data, off + value.len() as u64, ck);
-                    ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
-                    if self.cfg.replicate {
-                        self.write_backup_frame(ctx, slot, &value, ck, (counter << 1) | 1);
-                    }
-                    self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
-                    msg.extend_from_slice(&[key, slot as u64, counter]);
+            for (i, &key) in chunk.iter().enumerate() {
+                let value = value_of(key);
+                self.check_value_len(&value);
+                let Some(slot) = self.shared.alloc.alloc(value.len()) else {
+                    return Err(Error::Capacity(format!(
+                        "node {} out of kv slots for a {}-word value",
+                        self.me,
+                        value.len()
+                    )));
+                };
+                let counter = self.bump_counter(slot);
+                let mut frame = Vec::with_capacity(value.len() + 2);
+                frame.push(pack_hdr(value.len(), self.geo().class_of(slot), false));
+                frame.extend_from_slice(&value);
+                frame.push(match checksums {
+                    Some(cks) => cks[chunk_idx * BATCH + i],
+                    None => fnv64(&value),
+                });
+                self.store_frame_local(ctx, slot, &frame, (counter << 1) | 1);
+                if self.cfg.replicate {
+                    self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
                 }
+                self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
+                msg.extend_from_slice(&[key, slot as u64, counter]);
             }
             let tx = self.tracker_tx.lock().unwrap();
             tx.send(ctx, &msg);
@@ -1039,6 +1401,24 @@ impl KvStore {
     /// Read-cache counters (all-zero when the cache is disabled).
     pub fn cache_stats(&self) -> CacheStats {
         self.shared.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Slots of this node's slab currently allocated (for tests).
+    pub fn slots_outstanding(&self) -> usize {
+        self.shared.alloc.outstanding()
+    }
+
+    /// Slab accounting audit (satellite of the allocator work): every
+    /// slot of every class must be accounted for exactly once — on its
+    /// class's free list XOR referenced by the location index — with no
+    /// cross-class aliasing. Only meaningful on a **quiesced** store
+    /// (no ops or tracker messages in flight) with no crashed peers
+    /// (a relocation cut short by a crash intentionally leaks its old
+    /// slot rather than risk a double free).
+    pub fn slab_audit(&self) -> std::result::Result<(), String> {
+        self.shared
+            .alloc
+            .audit(self.shared.index.entries_homed_on(self.me).into_iter().map(|(_, e)| e.slot))
     }
 
     pub fn shutdown(&self) {
@@ -1076,7 +1456,7 @@ impl KvStore {
             cache.clear();
         }
         if !self.cfg.replicate {
-            self.shared.purge_homed_on(dead);
+            self.shared.purge_homed_on(dead, false);
             return;
         }
         if self.backup_of(dead) == self.me {
@@ -1102,7 +1482,7 @@ impl KvStore {
         for (key, e) in entries {
             match self.read_backup_frame(ctx, backup, &e) {
                 Some(value) => {
-                    if self.reinsert_recovered(ctx, key, &value) {
+                    if self.reinsert_recovered(ctx, key, &e, &value) {
                         rehomed += 1;
                     } else {
                         self.announce_drop(ctx, key, &e);
@@ -1126,7 +1506,7 @@ impl KvStore {
             tx.wait_all_acked(ctx, pos);
         }
         // Our own leftover check (peers get it from OP_EPOCH).
-        self.shared.purge_homed_on(dead);
+        self.shared.purge_homed_on(dead, true);
         if rehomed + dropped > 0 {
             eprintln!(
                 "loco-kv[{}]: re-homed node {dead}'s range: {rehomed} recovered, {dropped} dropped",
@@ -1144,48 +1524,73 @@ impl KvStore {
     /// before broadcasting.
     fn read_backup_frame(&self, ctx: &ThreadCtx, backup: Region, e: &IndexEntry) -> Option<Vec<u64>> {
         let off = self.slot_off(e.slot);
-        let words = self.slot_words();
+        let words = self.frame_words_of(e.slot);
         let mut bo = Backoff::new();
         for _ in 0..4096 {
             let mut frame = vec![0u64; words];
             for (i, f) in frame.iter_mut().enumerate() {
                 *f = ctx.local_load(backup, off + i as u64);
             }
-            let (value, rest) = frame.split_at(self.cfg.value_words);
-            let (ck, cv) = (rest[0], rest[1]);
-            if fnv64(value) == ck {
-                if cv >> 1 == e.counter && cv & 1 == 1 {
-                    return Some(value.to_vec());
-                }
-                return None; // consistent frame, wrong generation / invalid
+            match self.parse_frame(e, &frame) {
+                FrameRead::Value(v) => return Some(v),
+                // Consistent frame, wrong generation / invalid: stable
+                // negative (deletes fence their backup unset first).
+                FrameRead::Stale | FrameRead::Pending => return None,
+                FrameRead::Torn => bo.snooze(), // mirror placement in flight
             }
-            bo.snooze(); // torn mirror placement in flight: retry
         }
         None
     }
 
-    /// Promote a recovered frame into a fresh local slot + generation,
-    /// mirror it to OUR backup, update our index, and broadcast the new
-    /// location. No key lock is taken: mutators of this key are parked
-    /// in `wait_entry_change` (their home is down) and proceed against
-    /// the new location once the broadcast lands. Returns false if this
-    /// node is out of slots (the key is then dropped instead).
-    fn reinsert_recovered(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> bool {
-        let Some(slot) = self.shared.free.lock().unwrap().pop() else {
+    /// Promote a recovered frame into a fresh local slot + generation
+    /// (smallest class that fits the recovered length), mirror it to OUR
+    /// backup, swap our index entry, and broadcast the new location. No
+    /// key lock is taken: mutators of this key are parked in
+    /// `wait_entry_change` (their home is down) and proceed against the
+    /// new location once the broadcast lands — EXCEPT a concurrent
+    /// **relocation**, which rewrites the index while the old home is
+    /// already dead. Both the local swap and the `OP_REHOME` broadcast
+    /// are therefore compare-and-swap against the exact dead entry, so
+    /// the relocator's unconditional insert wins on every node whatever
+    /// the arrival order. Returns false if this node is out of slots
+    /// (the key is then dropped instead).
+    fn reinsert_recovered(&self, ctx: &ThreadCtx, key: u64, old: &IndexEntry, value: &[u64]) -> bool {
+        let Some(slot) = self.shared.alloc.alloc(value.len()) else {
             return false;
         };
-        let counter = self.shared.slot_counter[slot as usize].fetch_add(1, Ordering::Relaxed) + 1;
-        let off = self.slot_off(slot);
-        let ck = fnv64(value);
-        for (i, w) in value.iter().enumerate() {
-            ctx.local_store(self.data, off + i as u64, *w);
+        let counter = self.bump_counter(slot);
+        let frame = self.build_frame(slot, value, false);
+        self.store_frame_local(ctx, slot, &frame, (counter << 1) | 1);
+        self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
+        let new = IndexEntry { node: self.me, slot, counter };
+        if !self.shared.index.replace_matching(key, old, new) {
+            // A relocation beat us to the key: it owns the new location.
+            // Unset before freeing — no frame ever returns to a free
+            // list with its valid bit up (this generation was never
+            // published, but the invariant is cheap and uniform).
+            ctx.local_store(self.data, self.cv_off(slot), counter << 1);
+            self.shared.alloc.free(slot);
+            return true;
         }
-        ctx.local_store(self.data, off + value.len() as u64, ck);
-        ctx.local_store(self.data, off + value.len() as u64 + 1, (counter << 1) | 1);
-        self.write_backup_frame(ctx, slot, value, ck, (counter << 1) | 1);
-        self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
+        // If the dead entry was itself a half-done relocation, ship its
+        // origin along: receivers that never saw the crashed broadcast
+        // still hold the origin entry and must converge too.
+        let origin = self.shared.reloc_origins.lock().unwrap().remove(&key);
+        let mut msg = vec![
+            OP_REHOME,
+            key,
+            self.me as u64,
+            slot as u64,
+            counter,
+            old.node as u64,
+            old.slot as u64,
+            old.counter,
+        ];
+        if let Some(o) = origin {
+            msg.extend_from_slice(&[o.node as u64, o.slot as u64, o.counter]);
+        }
         let tx = self.tracker_tx.lock().unwrap();
-        tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
+        tx.send(ctx, &msg);
         true
     }
 
@@ -1195,6 +1600,7 @@ impl KvStore {
     /// the exact dead entry. Nobody frees a slot — the home is dead.
     fn announce_drop(&self, ctx: &ThreadCtx, key: u64, e: &IndexEntry) {
         self.shared.invalidate(key);
+        self.shared.reloc_origins.lock().unwrap().remove(&key);
         self.shared.index.remove_matching(key, e);
         let tx = self.tracker_tx.lock().unwrap();
         tx.send(ctx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
@@ -1292,11 +1698,29 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             // copy (counter mismatch), but purging keeps dead entries
             // from squatting on cache capacity.
             shared.invalidate(key);
+            {
+                let mut origins = shared.reloc_origins.lock().unwrap();
+                if msg.len() > OP_INSERT_PLAIN_LEN {
+                    // Relocation form: remember where the key came from
+                    // until the OP_FREE proves the protocol completed.
+                    origins.insert(
+                        key,
+                        IndexEntry {
+                            node: msg[5] as NodeId,
+                            slot: msg[6] as u32,
+                            counter: msg[7],
+                        },
+                    );
+                } else {
+                    origins.remove(&key);
+                }
+            }
             shared.index.insert(key, IndexEntry { node, slot, counter });
         }
         OP_DELETE => {
             let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
             shared.invalidate(key);
+            shared.reloc_origins.lock().unwrap().remove(&key);
             // Compare-and-remove: a recovery drop racing a fresh
             // re-insert of the same key (new home, new generation) must
             // lose — only the exact announced entry is deleted. Normal
@@ -1304,7 +1728,7 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             let removed = shared.index.remove_matching(key, &IndexEntry { node, slot, counter });
             if removed && node == me {
                 // We are the slot's home but not the deleter: reclaim.
-                shared.free.lock().unwrap().push(slot);
+                shared.alloc.free(slot);
             }
         }
         OP_BATCH => {
@@ -1336,11 +1760,80 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             // The dead node's backup finished re-homing (all recovered
             // locations precede this on the same FIFO ring): any entry
             // still homed on the corpse belongs to an insert that never
-            // completed — drop it.
-            shared.purge_homed_on(msg[1] as NodeId);
+            // completed — drop it — or to a relocation whose broadcast
+            // never fully acked — revert it to its recorded origin.
+            // OP_EPOCH is only ever sent by a backup, i.e. with
+            // replication on, where the revert is safe (see
+            // `purge_homed_on`).
+            shared.purge_homed_on(msg[1] as NodeId, true);
+        }
+        OP_FREE => {
+            // A relocation completed (the retire is sent only after the
+            // valid-set): drop the key's origin record everywhere, and
+            // — on the old home only — return the slot to the slab
+            // (FIFO-after the relocation's OP_INSERT on the same ring,
+            // so our index already names the new location and a reuse
+            // can't be mistaken for the old generation).
+            let (node, slot, key) = (msg[1] as NodeId, msg[2] as u32, msg[3]);
+            shared.reloc_origins.lock().unwrap().remove(&key);
+            if node == me {
+                shared.alloc.free(slot);
+            }
+        }
+        OP_REHOME => {
+            // Recovery re-home: adopt the recovered location iff our
+            // current entry is still the exact dead one — so a live
+            // relocation's unconditional OP_INSERT wins on every node
+            // regardless of arrival order — or the dead entry's
+            // relocation ORIGIN (we never applied the crashed
+            // relocation's broadcast and still hold the pre-relocation
+            // entry), or the key is absent here (we never applied the
+            // crashed insert's broadcast; a *completed* delete can't
+            // look like this, because deletes invalidate the backup
+            // frame before broadcasting and an invalid frame is never
+            // re-homed).
+            let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
+            if home_is_dead(node) {
+                return;
+            }
+            let old = IndexEntry {
+                node: msg[5] as NodeId,
+                slot: msg[6] as u32,
+                counter: msg[7],
+            };
+            shared.invalidate(key);
+            shared.reloc_origins.lock().unwrap().remove(&key);
+            let new_e = IndexEntry { node, slot, counter };
+            let mut applied = shared.index.replace_matching(key, &old, new_e);
+            if !applied && msg.len() > 8 {
+                let origin = IndexEntry {
+                    node: msg[8] as NodeId,
+                    slot: msg[9] as u32,
+                    counter: msg[10],
+                };
+                applied = shared.index.replace_matching(key, &origin, new_e);
+            }
+            if !applied && shared.index.get(key).is_none() {
+                shared.index.insert(key, new_e);
+            }
         }
         other => panic!("unknown tracker opcode {other}"),
     }
+}
+
+/// Outcome of validating a read frame against the reader's index entry.
+enum FrameRead {
+    /// Checksum-valid, generation matches, valid bit set: the value.
+    Value(Vec<u64>),
+    /// Internally inconsistent (a write in flight): retry the READ.
+    Torn,
+    /// Consistent frame of a relocation whose valid bit is not yet set:
+    /// the relocator is about to linearize — spin, don't report EMPTY.
+    Pending,
+    /// Consistent frame but wrong generation or valid bit unset: the
+    /// reader's entry is stale (delete / relocation / slot reuse) —
+    /// re-resolve the location before concluding EMPTY.
+    Stale,
 }
 
 /// An in-flight windowed lookup.
@@ -1376,7 +1869,7 @@ mod tests {
     }
 
     fn cached_cfg() -> KvConfig {
-        KvConfig { read_cache_entries: 64, ..small_cfg() }
+        KvConfig { read_cache_bytes: 4096, ..small_cfg() }
     }
 
     fn setup_cfg(
@@ -1420,7 +1913,8 @@ mod tests {
             assert_eq!(kvs[i].get(&ctxs[i], 7), None);
         }
         // Slot reclaimed at home (node 0).
-        assert_eq!(kvs[0].shared.free.lock().unwrap().len(), 64);
+        assert_eq!(kvs[0].slots_outstanding(), 0);
+        kvs[0].slab_audit().unwrap();
     }
 
     #[test]
@@ -1433,6 +1927,134 @@ mod tests {
         assert!(kvs[0].insert(&ctx, 42, &[1]).unwrap());
         assert!(!kvs[0].insert(&ctx, 42, &[2]).unwrap(), "second insert is update");
         assert_eq!(kvs[0].get(&ctx, 42), Some(vec![2]));
+    }
+
+    /// Variable-size values end to end: lengths across every class of
+    /// an 8-word geometry round-trip through insert / scalar get /
+    /// multi_get / windowed get from every node, with the exact length
+    /// preserved (frames are trimmed to the header's `len`).
+    #[test]
+    fn variable_size_values_roundtrip() {
+        let cfg = KvConfig { value_words: 8, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        let value_of = |k: u64| vec![k + 100; 1 + (k % 8) as usize];
+        for k in 0..24u64 {
+            assert!(kvs[(k % 3) as usize].insert(&ctxs[(k % 3) as usize], k, &value_of(k)).unwrap());
+        }
+        for (i, kv) in kvs.iter().enumerate() {
+            for k in 0..24u64 {
+                assert_eq!(kv.get(&ctxs[i], k), Some(value_of(k)), "node {i} key {k}");
+            }
+            let keys: Vec<u64> = (0..24).collect();
+            let out = kv.multi_get(&ctxs[i], &keys);
+            for (j, got) in out.into_iter().enumerate() {
+                assert_eq!(got, Some(value_of(j as u64)), "node {i} multi_get key {j}");
+            }
+            let pgs: Vec<_> = keys.iter().map(|&k| kv.get_issue(&ctxs[i], k).unwrap()).collect();
+            for (k, pg) in keys.iter().zip(pgs) {
+                assert_eq!(kv.get_complete(&ctxs[i], pg), Some(value_of(*k)));
+            }
+        }
+        for kv in &kvs {
+            kv.slab_audit().unwrap();
+        }
+    }
+
+    /// The relocation protocol: an update that outgrows its slot's
+    /// class moves the key to a fresh slot (new home = the updater, new
+    /// generation), every node serves the new value afterwards, and the
+    /// old slot returns to its home's free list (audit-clean on both).
+    #[test]
+    fn update_past_class_boundary_relocates() {
+        let cfg = KvConfig { value_words: 16, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+        assert!(kvs[0].insert(&ctxs[0], 7, &[1, 1]).unwrap()); // class 1 on node 0
+        let before = kvs[0].index_entry(7).unwrap();
+        assert_eq!(before.node, 0);
+
+        // Node 2 grows the value past the 2-word class: relocation.
+        assert!(kvs[2].update(&ctxs[2], 7, &[9; 11]));
+        let after = kvs[2].index_entry(7).unwrap();
+        assert_eq!(after.node, 2, "relocated to the updating node");
+        assert_ne!((after.slot, after.counter), (before.slot, before.counter));
+        for i in 0..3 {
+            assert_eq!(kvs[i].get(&ctxs[i], 7), Some(vec![9; 11]), "node {i}");
+            assert_eq!(kvs[i].index_entry(7), Some(after), "node {i} index diverged");
+        }
+        // Old slot reclaimed at the old home; shrink-update stays put
+        // (a smaller value always fits in place).
+        assert_eq!(kvs[0].slots_outstanding(), 0);
+        assert!(kvs[1].update(&ctxs[1], 7, &[3]));
+        assert_eq!(kvs[2].index_entry(7), Some(after), "shrink must not relocate");
+        for i in 0..3 {
+            assert_eq!(kvs[i].get(&ctxs[i], 7), Some(vec![3]), "node {i}");
+        }
+        // Delete after relocation reclaims the new slot too.
+        assert!(kvs[1].remove(&ctxs[1], 7));
+        for kv in &kvs {
+            assert_eq!(kv.slots_outstanding(), 0);
+            kv.slab_audit().unwrap();
+        }
+    }
+
+    /// Relocation with the locality tier + replication on: cached copies
+    /// of the pre-relocation value die with the generation change, and
+    /// the relocated frame is replicated (survives a crash of the NEW
+    /// home).
+    #[test]
+    fn relocation_invalidates_cache_and_replicates() {
+        let cfg = KvConfig {
+            value_words: 8,
+            read_cache_bytes: 4096,
+            replicate: true,
+            ..small_cfg()
+        };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+        assert!(kvs[1].insert(&ctxs[1], 5, &[70]).unwrap());
+        assert_eq!(kvs[2].get(&ctxs[2], 5), Some(vec![70])); // fills node 2's cache
+        assert_eq!(kvs[2].get(&ctxs[2], 5), Some(vec![70]));
+
+        // Node 0 relocates the key (1 word → 5 words).
+        assert!(kvs[0].update(&ctxs[0], 5, &[71; 5]));
+        assert_eq!(kvs[2].get(&ctxs[2], 5), Some(vec![71; 5]), "stale cached value served");
+        assert_eq!(kvs[2].index_entry(5).unwrap().node, 0);
+
+        // Crash the new home: the backup (node 1) re-homes the
+        // relocated frame — the post-relocation value survives.
+        mgrs[0].cluster().crash(0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        while kvs[2].index_entry(5).map(|e| e.node) != Some(1) {
+            assert!(std::time::Instant::now() < deadline, "re-home never completed");
+            std::thread::yield_now();
+        }
+        assert_eq!(kvs[2].get(&ctxs[2], 5), Some(vec![71; 5]), "relocated value lost in crash");
+    }
+
+    /// Class exhaustion falls up to larger classes before reporting
+    /// Capacity, and frees refill the exact class.
+    #[test]
+    fn class_exhaustion_falls_up_then_errors() {
+        // 4 classes (1,2,4,8) × 4 slots each.
+        let cfg = KvConfig { slots_per_node: 4, value_words: 8, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(2, FabricConfig::inline_ideal(), cfg);
+        let ctx = mgrs[0].ctx();
+        // 16 single-word inserts: 4 land in class 0, the rest fall up.
+        for k in 0..16u64 {
+            kvs[0].insert(&ctx, k, &[k]).unwrap();
+        }
+        assert!(matches!(kvs[0].insert(&ctx, 99, &[0]), Err(Error::Capacity(_))));
+        // Everything still reads back exactly.
+        for k in 0..16u64 {
+            assert_eq!(kvs[0].get(&ctx, k), Some(vec![k]));
+        }
+        kvs[0].slab_audit().unwrap();
+        assert!(kvs[0].remove(&ctx, 3));
+        assert!(kvs[0].insert(&ctx, 99, &[1]).unwrap(), "freed capacity reusable");
     }
 
     #[test]
@@ -1469,11 +2091,11 @@ mod tests {
     /// cache on and off.
     #[test]
     fn multi_get_matches_scalar() {
-        for cache_entries in [0usize, 64] {
+        for cache_bytes in [0usize, 4096] {
             for fabric in
                 [FabricConfig::inline_ideal(), FabricConfig::threaded(LatencyModel::fast_sim())]
             {
-                let cfg = KvConfig { read_cache_entries: cache_entries, ..small_cfg() };
+                let cfg = KvConfig { read_cache_bytes: cache_bytes, ..small_cfg() };
                 let (mgrs, kvs) = setup_cfg(3, fabric, cfg);
                 let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
                 // Spread homes across nodes: each node inserts its residue class.
@@ -1494,7 +2116,7 @@ mod tests {
                 // Second batch: with the cache on, remote-homed keys now hit.
                 let out = kvs[1].multi_get(&ctxs[1], &keys);
                 assert_eq!(out[6], Some(vec![502]));
-                if cache_entries > 0 {
+                if cache_bytes > 0 {
                     assert!(kvs[1].cache_stats().hits > 0, "no cache hits recorded");
                 }
             }
@@ -1639,7 +2261,7 @@ mod tests {
         let cfg = KvConfig {
             slots_per_node: 64,
             tracker_words: 1 << 10,
-            read_cache_entries: 16,
+            read_cache_bytes: 2048,
             replicate: true,
             ..Default::default()
         };
@@ -1735,7 +2357,7 @@ mod tests {
             slots_per_node: 32,
             value_words: 4,
             tracker_words: 1 << 12,
-            read_cache_entries: 16,
+            read_cache_bytes: 2048,
             ..Default::default()
         };
         let (mgrs, kvs) = setup_cfg(2, fabric, cfg);
@@ -1796,7 +2418,7 @@ mod tests {
             slots_per_node: 256,
             value_words: 4,
             tracker_words: 1 << 12,
-            read_cache_entries: 64,
+            read_cache_bytes: 4096,
             ..Default::default()
         };
         let kvs: Vec<Arc<KvStore>> =

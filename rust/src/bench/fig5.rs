@@ -16,7 +16,7 @@ use crate::baselines::scythe::Scythe;
 use crate::baselines::sherman::Sherman;
 use crate::core::manager::Manager;
 use crate::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
-use crate::workload::{KeyDist, Op, OpMix, WorkloadGen};
+use crate::workload::{KeyDist, Op, OpMix, ValueDist, WorkloadGen};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvSystem {
@@ -51,6 +51,44 @@ pub struct Fig5Cell {
     pub window: usize,
     pub keys: u64,
     pub secs: f64,
+    /// Value sizes (LOCO's slab-allocated store honors any length up to
+    /// the distribution's maximum; the single-word baselines carry the
+    /// update's tag word and ignore the length).
+    pub value_dist: ValueDist,
+    /// LOCO hot-key read cache (Zipfian-sized byte budget).
+    pub cache: bool,
+    /// LOCO frame replication to the backup node.
+    pub replicate: bool,
+}
+
+impl Fig5Cell {
+    /// The paper's original cell shape: single-word values, cache and
+    /// replication off.
+    #[allow(clippy::too_many_arguments)]
+    pub fn words1(
+        system: KvSystem,
+        nodes: usize,
+        threads: usize,
+        mix: OpMix,
+        dist: KeyDist,
+        window: usize,
+        keys: u64,
+        secs: f64,
+    ) -> Fig5Cell {
+        Fig5Cell {
+            system,
+            nodes,
+            threads,
+            mix,
+            dist,
+            window,
+            keys,
+            secs,
+            value_dist: ValueDist::Fixed(1),
+            cache: false,
+            replicate: false,
+        }
+    }
 }
 
 /// Run one grid cell; returns aggregate Mops/s.
@@ -106,6 +144,19 @@ fn loco_prefilled(
     cfg: KvConfig,
     lat: LatencyModel,
 ) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    loco_prefilled_sized(nodes, keys, cfg, lat, ValueDist::Fixed(1))
+}
+
+/// Like [`loco_prefilled`], but each key's prefill value is sized by a
+/// per-key deterministic draw from `value_dist` (so every loader thread
+/// and every run agrees on the sizes without coordination).
+fn loco_prefilled_sized(
+    nodes: usize,
+    keys: u64,
+    cfg: KvConfig,
+    lat: LatencyModel,
+    value_dist: ValueDist,
+) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
     let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).with_mem_words(1 << 23));
     let mgrs: Vec<Arc<Manager>> =
         (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
@@ -126,7 +177,8 @@ fn loco_prefilled(
                 let ctx = m.ctx();
                 let mine: Vec<u64> =
                     (0..loaded).filter(|&k| kv.home_of(k) == i as NodeId).collect();
-                kv.prefill_local(&ctx, &mine, |k| vec![k], None).unwrap();
+                kv.prefill_local(&ctx, &mine, |k| vec![k; prefill_len(value_dist, k)], None)
+                    .unwrap();
             })
         })
         .collect();
@@ -136,13 +188,25 @@ fn loco_prefilled(
     (cluster, mgrs, kvs)
 }
 
+/// Deterministic per-key value length for prefill.
+fn prefill_len(dist: ValueDist, key: u64) -> usize {
+    let mut rng = crate::util::rng::Rng::seeded(key ^ 0x51AB);
+    dist.sample(&mut rng)
+}
+
 fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     let n = cell.nodes;
-    let cfg = KvConfig {
+    let mut cfg = KvConfig {
         slots_per_node: (cell.keys as usize).div_ceil(n) + 64,
+        value_words: cell.value_dist.max_words(),
+        replicate: cell.replicate,
         ..Default::default()
     };
-    let (_cluster, mgrs, kvs) = loco_prefilled(n, cell.keys, cfg, lat);
+    if cell.cache {
+        cfg = cfg.with_zipfian_cache(cell.keys);
+    }
+    let value_dist = cell.value_dist;
+    let (_cluster, mgrs, kvs) = loco_prefilled_sized(n, cell.keys, cfg, lat, value_dist);
 
     let gate = Gate::new();
     let handles: Vec<_> = (0..n)
@@ -154,10 +218,11 @@ fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
             let cell = cell.clone();
             std::thread::spawn(move || {
                 let ctx = m.ctx();
-                let mut gen = WorkloadGen::new(
+                let mut gen = WorkloadGen::with_value_dist(
                     cell.keys,
                     cell.dist,
                     cell.mix,
+                    cell.value_dist,
                     (ni * 1000 + t) as u64 + 1,
                 );
                 gate.worker_ready_and_wait();
@@ -179,14 +244,18 @@ fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
                                 }
                             }
                         }
-                        Op::Update { key, value } => {
-                            // Updates serialize under the key lock.
+                        Op::Update { key, value, len } => {
+                            // Updates serialize under the key lock; a
+                            // length past the slot's class relocates.
+                            // Failed updates (slab capacity / peer) are
+                            // not counted as completed ops.
                             for pg in pending.drain(..) {
                                 let _ = kv.get_complete(&ctx, pg);
                                 ops += 1;
                             }
-                            kv.update(&ctx, key, &[value]);
-                            ops += 1;
+                            if kv.try_update(&ctx, key, &vec![value; len]).is_ok() {
+                                ops += 1;
+                            }
                         }
                     }
                 }
@@ -385,7 +454,7 @@ fn run_sherman(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
                         Op::Read { key } => {
                             let _ = tree.get(&ctx, key);
                         }
-                        Op::Update { key, value } => {
+                        Op::Update { key, value, .. } => {
                             tree.put(&ctx, key, value | 1); // nonzero
                         }
                     }
@@ -442,7 +511,7 @@ fn run_scythe(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
                         }
                         // Paper: Scythe writes measured via its insert
                         // path (upper bound; update was unstable).
-                        Op::Update { key, value } => db.put(&ctx, t, seq, key, value),
+                        Op::Update { key, value, .. } => db.put(&ctx, t, seq, key, value),
                     }
                     ops += 1;
                 }
@@ -496,7 +565,7 @@ fn run_redis(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
                 while !gate.stop.load(Ordering::Relaxed) {
                     let (is_get, key, value) = match gen.next_op() {
                         Op::Read { key } => (true, key, 0),
-                        Op::Update { key, value } => (false, key, value),
+                        Op::Update { key, value, .. } => (false, key, value),
                     };
                     ops += client.issue(is_get, key, value) as u64;
                 }
@@ -544,16 +613,16 @@ mod tests {
     #[test]
     fn every_system_completes_a_cell() {
         for system in KvSystem::ALL {
-            let cell = Fig5Cell {
+            let cell = Fig5Cell::words1(
                 system,
-                nodes: 2,
-                threads: 1,
-                mix: OpMix::MIXED_50_50,
-                dist: KeyDist::Uniform,
-                window: 3,
-                keys: 2048,
-                secs: 0.15,
-            };
+                2,
+                1,
+                OpMix::MIXED_50_50,
+                KeyDist::Uniform,
+                3,
+                2048,
+                0.15,
+            );
             let mops = run_cell(
                 &cell,
                 LatencyModel::fast_sim(),
@@ -561,5 +630,62 @@ mod tests {
             );
             assert!(mops > 0.0, "{system:?} made no progress");
         }
+    }
+
+    /// Acceptance bar: a fig5-style LOCO run at 1 KB values (128 words)
+    /// with the hot-key cache AND replication on completes and makes
+    /// progress — the paper's large-value regime the old single-word
+    /// assert could not even start.
+    #[test]
+    fn loco_1kb_values_cache_and_replicate() {
+        let cell = Fig5Cell {
+            value_dist: ValueDist::Fixed(128),
+            cache: true,
+            replicate: true,
+            ..Fig5Cell::words1(
+                KvSystem::Loco,
+                2,
+                1,
+                OpMix::MIXED_50_50,
+                KeyDist::Zipfian,
+                3,
+                512,
+                0.2,
+            )
+        };
+        let mops = run_cell(
+            &cell,
+            LatencyModel::fast_sim(),
+            crate::baselines::rediscluster::redis_latency_fast(),
+        );
+        assert!(mops > 0.0, "1 KB cell made no progress");
+    }
+
+    /// Mixed 8 B–1 KB values drive the whole relocation machinery from
+    /// the fig5 runner (updates that cross class boundaries relocate
+    /// mid-bench) — cache and replication on.
+    #[test]
+    fn loco_mixed_sizes_relocating_cell() {
+        let cell = Fig5Cell {
+            value_dist: ValueDist::MIXED_8B_1KB,
+            cache: true,
+            replicate: true,
+            ..Fig5Cell::words1(
+                KvSystem::Loco,
+                2,
+                1,
+                OpMix::MIXED_50_50,
+                KeyDist::Uniform,
+                3,
+                512,
+                0.2,
+            )
+        };
+        let mops = run_cell(
+            &cell,
+            LatencyModel::fast_sim(),
+            crate::baselines::rediscluster::redis_latency_fast(),
+        );
+        assert!(mops > 0.0, "mixed-size cell made no progress");
     }
 }

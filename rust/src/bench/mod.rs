@@ -65,9 +65,10 @@ pub fn geomean_runs(runs: usize, mut f: impl FnMut() -> f64) -> f64 {
 
 /// Hand-rolled JSON report for CI perf trajectories (no serde in the
 /// offline build). Benches add `(bench, label, value)` rows and write
-/// the file named by `LOCO_BENCH_JSON`; CI uploads it as the
-/// `BENCH_fig5.json` artifact so throughput per config is tracked
-/// PR over PR.
+/// the file named by `LOCO_BENCH_JSON`; CI runs each bench target with
+/// its own destination (`BENCH_micro.json`, `BENCH_fig4.json`,
+/// `BENCH_fig5.json` at the repo root) and uploads them as artifacts so
+/// throughput per config is tracked PR over PR.
 #[derive(Default)]
 pub struct BenchJson {
     rows: Vec<(String, String, f64)>,

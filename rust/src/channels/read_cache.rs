@@ -26,16 +26,22 @@
 //!   insert if the shard's epoch moved since. Invalidation bumps the
 //!   epoch under the shard lock, closing the race.
 //!
-//! Capacity is bounded; eviction is CLOCK-style second chance (hits set
-//! a reference bit, the evictor clears bits until it finds a cold
-//! entry), which under Zipfian skew keeps the hot head pinned.
+//! Capacity is a **byte budget**, not an entry count — values are
+//! variable-size (the kvstore's slab-allocated frames run from one word
+//! to kilobytes), and an entry-count bound would let a handful of 1 KB
+//! values occupy unbounded memory while starving nothing. Each entry is
+//! charged its value bytes plus a fixed overhead
+//! ([`ReadCache::entry_bytes`]); fills evict until the budget holds.
+//! Eviction is CLOCK-style second chance (hits set a reference bit, the
+//! evictor clears bits until it finds a cold entry), which under
+//! Zipfian skew keeps the hot head pinned.
 //!
 //! # Examples
 //!
 //! ```
 //! use loco::channels::read_cache::ReadCache;
 //!
-//! let cache = ReadCache::new(256);
+//! let cache = ReadCache::new(64 * 1024); // 64 KiB budget
 //! // Miss: nothing cached for (key=7, counter=1).
 //! assert_eq!(cache.lookup(7, 1), None);
 //! // Fill under an epoch token, as the kvstore read path does.
@@ -68,10 +74,16 @@ struct CacheEntry {
     hot: bool,
 }
 
+struct ShardMap {
+    map: HashMap<u64, CacheEntry>,
+    /// Bytes charged against this shard's budget (values + overhead).
+    used: usize,
+}
+
 struct CacheShard {
     /// Fill epoch: bumped by every invalidation of a key in this shard.
     epoch: AtomicU64,
-    map: Mutex<HashMap<u64, CacheEntry>>,
+    map: Mutex<ShardMap>,
 }
 
 /// Epoch snapshot taken before a remote READ; consumed by
@@ -109,7 +121,7 @@ impl CacheStats {
 pub struct ReadCache {
     shards: Box<[CacheShard]>,
     shard_mask: u64,
-    per_shard_cap: usize,
+    per_shard_budget: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     fills: AtomicU64,
@@ -119,15 +131,29 @@ pub struct ReadCache {
 }
 
 impl ReadCache {
-    /// A cache holding at most ~`capacity` entries.
-    pub fn new(capacity: usize) -> ReadCache {
-        let shards = (capacity / 32).next_power_of_two().clamp(MIN_SHARDS, MAX_SHARDS);
+    /// Fixed per-entry overhead charged against the byte budget (key,
+    /// generation, flags, map slot — a deliberate round number so
+    /// budgets are easy to reason about).
+    const ENTRY_OVERHEAD_BYTES: usize = 32;
+
+    /// Bytes an entry holding a `value_words`-word value is charged.
+    pub fn entry_bytes(value_words: usize) -> usize {
+        Self::ENTRY_OVERHEAD_BYTES + value_words * 8
+    }
+
+    /// A cache bounded by ~`budget_bytes` of cached state (values plus
+    /// per-entry overhead, split evenly across the shards).
+    pub fn new(budget_bytes: usize) -> ReadCache {
+        let shards = (budget_bytes / 1024).next_power_of_two().clamp(MIN_SHARDS, MAX_SHARDS);
         ReadCache {
             shards: (0..shards)
-                .map(|_| CacheShard { epoch: AtomicU64::new(0), map: Mutex::new(HashMap::new()) })
+                .map(|_| CacheShard {
+                    epoch: AtomicU64::new(0),
+                    map: Mutex::new(ShardMap { map: HashMap::new(), used: 0 }),
+                })
                 .collect(),
             shard_mask: shards as u64 - 1,
-            per_shard_cap: capacity.div_ceil(shards).max(1),
+            per_shard_budget: budget_bytes.div_ceil(shards).max(Self::entry_bytes(1)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             fills: AtomicU64::new(0),
@@ -137,11 +163,14 @@ impl ReadCache {
         }
     }
 
-    /// Zipfian-aware sizing (§7.2's θ=0.99 skew): under YCSB-C Zipfian
-    /// the most popular `c` of `n` keys draw roughly `ln c / ln n` of
-    /// all accesses, so a cache holding a quarter of the keyspace
-    /// already absorbs the large majority of reads; beyond 64 Ki entries
-    /// the marginal hit rate no longer pays for the memory.
+    /// Zipfian-aware sizing (§7.2's θ=0.99 skew), in **entries**: under
+    /// YCSB-C Zipfian the most popular `c` of `n` keys draw roughly
+    /// `ln c / ln n` of all accesses, so a cache holding a quarter of
+    /// the keyspace already absorbs the large majority of reads; beyond
+    /// 64 Ki entries the marginal hit rate no longer pays for the
+    /// memory. Multiply by [`ReadCache::entry_bytes`] for the byte
+    /// budget (as [`crate::apps::kvstore::KvConfig::with_zipfian_cache`]
+    /// does).
     pub fn zipfian_capacity(keyspace: u64) -> usize {
         (keyspace as usize / 4).clamp(256, 1 << 16)
     }
@@ -155,8 +184,8 @@ impl ReadCache {
     /// index `counter`. A stale generation is dropped on sight.
     pub fn lookup(&self, key: u64, counter: u64) -> Option<Vec<u64>> {
         let shard = &self.shards[self.shard_index(key)];
-        let mut map = shard.map.lock().unwrap();
-        let stale = match map.get_mut(&key) {
+        let mut sm = shard.map.lock().unwrap();
+        let stale = match sm.map.get_mut(&key) {
             Some(e) if e.counter == counter => {
                 e.hot = true;
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -166,10 +195,21 @@ impl ReadCache {
             None => false,
         };
         if stale {
-            map.remove(&key);
+            Self::remove_entry(&mut sm, key);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         None
+    }
+
+    /// Remove `key` from a locked shard, refunding its budget charge.
+    fn remove_entry(sm: &mut ShardMap, key: u64) -> bool {
+        match sm.map.remove(&key) {
+            Some(e) => {
+                sm.used -= Self::entry_bytes(e.value.len());
+                true
+            }
+            None => false,
+        }
     }
 
     /// Snapshot the fill epoch of `key`'s shard. Must be taken **before**
@@ -181,30 +221,39 @@ impl ReadCache {
 
     /// Insert a validated read result. Rejected (returns `false`) if any
     /// invalidation touched the shard since `token` was taken — the value
-    /// may predate a concurrent mutation.
+    /// may predate a concurrent mutation — or if the value alone exceeds
+    /// the shard's whole byte budget (caching it would evict everything
+    /// for one key).
     pub fn fill(&self, token: FillToken, key: u64, counter: u64, value: &[u64]) -> bool {
         let shard = &self.shards[token.shard];
         debug_assert_eq!(token.shard, self.shard_index(key), "token/key shard mismatch");
-        let mut map = shard.map.lock().unwrap();
+        let cost = Self::entry_bytes(value.len());
+        if cost > self.per_shard_budget {
+            self.rejected_fills.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut sm = shard.map.lock().unwrap();
         // Epoch check under the shard lock: invalidations bump the epoch
         // under the same lock, so this is race-free.
         if shard.epoch.load(Ordering::Acquire) != token.epoch {
             self.rejected_fills.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        if map.len() >= self.per_shard_cap && !map.contains_key(&key) {
-            self.evict_one(&mut map);
+        Self::remove_entry(&mut sm, key); // replacing refunds the old charge
+        while sm.used + cost > self.per_shard_budget && !sm.map.is_empty() {
+            self.evict_one(&mut sm);
         }
-        map.insert(key, CacheEntry { value: value.into(), counter, hot: false });
+        sm.map.insert(key, CacheEntry { value: value.into(), counter, hot: false });
+        sm.used += cost;
         self.fills.fetch_add(1, Ordering::Relaxed);
         true
     }
 
     /// CLOCK second chance over the shard's (arbitrary) iteration order:
     /// clear reference bits until a cold entry turns up, then evict it.
-    fn evict_one(&self, map: &mut HashMap<u64, CacheEntry>) {
+    fn evict_one(&self, sm: &mut ShardMap) {
         let mut victim = None;
-        for (k, e) in map.iter_mut() {
+        for (k, e) in sm.map.iter_mut() {
             if e.hot {
                 e.hot = false; // second chance
             } else {
@@ -213,9 +262,9 @@ impl ReadCache {
             }
         }
         // Every entry was hot: take the first (now-cold) one.
-        let victim = victim.or_else(|| map.keys().next().copied());
+        let victim = victim.or_else(|| sm.map.keys().next().copied());
         if let Some(k) = victim {
-            map.remove(&k);
+            Self::remove_entry(sm, k);
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -224,9 +273,9 @@ impl ReadCache {
     /// fills that may carry the pre-mutation value).
     pub fn invalidate(&self, key: u64) {
         let shard = &self.shards[self.shard_index(key)];
-        let mut map = shard.map.lock().unwrap();
+        let mut sm = shard.map.lock().unwrap();
         shard.epoch.fetch_add(1, Ordering::AcqRel);
-        map.remove(&key);
+        Self::remove_entry(&mut sm, key);
         self.invalidations.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -246,16 +295,28 @@ impl ReadCache {
     /// into the new one.
     pub fn clear(&self) {
         for shard in self.shards.iter() {
-            let mut map = shard.map.lock().unwrap();
+            let mut sm = shard.map.lock().unwrap();
             shard.epoch.fetch_add(1, Ordering::AcqRel);
-            self.invalidations.fetch_add(map.len() as u64, Ordering::Relaxed);
-            map.clear();
+            self.invalidations.fetch_add(sm.map.len() as u64, Ordering::Relaxed);
+            sm.map.clear();
+            sm.used = 0;
         }
     }
 
     /// Total cached entries (racy; for tests and monitoring).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.map.lock().unwrap().map.len()).sum()
+    }
+
+    /// Total bytes charged against the budget (racy; for tests and
+    /// monitoring).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.map.lock().unwrap().used).sum()
+    }
+
+    /// The configured total byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.per_shard_budget * self.shards.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -280,7 +341,7 @@ mod tests {
 
     #[test]
     fn hit_miss_and_generation_check() {
-        let c = ReadCache::new(64);
+        let c = ReadCache::new(64 * 1024);
         assert_eq!(c.lookup(1, 5), None);
         let t = c.begin_fill(1);
         assert!(c.fill(t, 1, 5, &[10, 11]));
@@ -295,7 +356,7 @@ mod tests {
 
     #[test]
     fn invalidation_rejects_in_flight_fill() {
-        let c = ReadCache::new(64);
+        let c = ReadCache::new(64 * 1024);
         let t = c.begin_fill(9);
         c.invalidate(9);
         assert!(!c.fill(t, 9, 1, &[7]), "fill must lose the race");
@@ -309,21 +370,53 @@ mod tests {
 
     #[test]
     fn bounded_with_clock_eviction_keeps_hot_keys() {
-        let c = ReadCache::new(32);
-        // Fill beyond capacity; key 0 is kept hot by lookups.
+        let budget = 32 * ReadCache::entry_bytes(1);
+        let c = ReadCache::new(budget);
+        // Fill far beyond the budget; key 0 is kept hot by lookups.
         for k in 0..256u64 {
             let t = c.begin_fill(k);
             c.fill(t, k, 1, &[k]);
             c.lookup(0, 1);
         }
-        assert!(c.len() <= 32 + MAX_SHARDS, "cache unbounded: {}", c.len());
+        assert!(c.bytes() <= c.budget_bytes(), "cache over budget: {} B", c.bytes());
         assert!(c.stats().evictions > 0);
         assert_eq!(c.lookup(0, 1), Some(vec![0]), "hot key evicted");
     }
 
+    /// The byte-budget satellite: a stream of 128-word (1 KB) values
+    /// cannot blow the cache — the charged bytes stay under the budget
+    /// and each fill evicts enough cold entries to fit. A value larger
+    /// than a whole shard's budget is refused outright.
+    #[test]
+    fn large_values_respect_byte_budget() {
+        let big = vec![7u64; 128]; // 1 KB + overhead per entry
+        let c = ReadCache::new(16 * 1024);
+        for k in 0..200u64 {
+            let t = c.begin_fill(k);
+            assert!(c.fill(t, k, 1, &big), "fill {k} refused under ample budget");
+        }
+        assert!(c.bytes() <= c.budget_bytes(), "over budget: {} B", c.bytes());
+        assert!(c.len() < 200, "nothing was evicted");
+        assert!(c.stats().evictions > 0);
+        // Mixed sizes: small entries refund their exact charge.
+        for k in 0..50u64 {
+            let t = c.begin_fill(1000 + k);
+            assert!(c.fill(t, 1000 + k, 1, &[k]));
+        }
+        assert!(c.bytes() <= c.budget_bytes());
+        // One value bigger than any shard's slice of the budget: refused,
+        // cache untouched.
+        let before = c.stats().rejected_fills;
+        let huge = vec![1u64; 16 * 1024];
+        let t = c.begin_fill(9999);
+        assert!(!c.fill(t, 9999, 1, &huge));
+        assert_eq!(c.stats().rejected_fills, before + 1);
+        assert_eq!(c.lookup(9999, 1), None);
+    }
+
     #[test]
     fn invalidate_many_clears_keys() {
-        let c = ReadCache::new(64);
+        let c = ReadCache::new(64 * 1024);
         for k in 0..8u64 {
             let t = c.begin_fill(k);
             c.fill(t, k, 1, &[k]);
@@ -335,7 +428,7 @@ mod tests {
 
     #[test]
     fn clear_drops_all_and_poisons_in_flight_fills() {
-        let c = ReadCache::new(64);
+        let c = ReadCache::new(64 * 1024);
         let stale_token = c.begin_fill(3);
         for k in 0..8u64 {
             let t = c.begin_fill(k);

@@ -279,6 +279,39 @@ impl ShardedIndex {
         prev
     }
 
+    /// Compare-and-replace: overwrite `key`'s entry with `new` only if
+    /// the current entry equals `expect`. Crash recovery's re-home uses
+    /// this (locally and via the `OP_REHOME` broadcast) so a recovery
+    /// racing a concurrent **relocation** of the same key — the one
+    /// mutation that rewrites the index without its home being alive to
+    /// serialize against — can never clobber the relocator's fresh
+    /// entry: the relocator's unconditional insert wins on every node
+    /// regardless of arrival order. Returns whether the swap happened.
+    pub fn replace_matching(&self, key: u64, expect: &IndexEntry, new: IndexEntry) -> bool {
+        let h = mix(key);
+        let shard = self.shard_of(h);
+        let _st = shard.writer.lock().unwrap();
+        let (hit, _) = shard.probe_for_write(key, h);
+        let Some(i) = hit else {
+            return false;
+        };
+        let s = &shard.slots[i];
+        let meta = s.meta.load(Ordering::Relaxed);
+        let cur = IndexEntry {
+            node: ((meta >> NODE_SHIFT) & NODE_MASK) as NodeId,
+            slot: (meta & SLOT_MASK) as u32,
+            counter: s.counter.load(Ordering::Relaxed),
+        };
+        if cur != *expect {
+            return false;
+        }
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        s.counter.store(new.counter, Ordering::Release);
+        s.meta.store(pack_meta(STATE_FULL, &new), Ordering::Release);
+        shard.seq.fetch_add(1, Ordering::AcqRel);
+        true
+    }
+
     /// Compare-and-remove: drop `key` only if its current entry equals
     /// `expect`. Crash recovery's broadcast deletes use this so a stale
     /// drop can never clobber a racing fresh re-insert (which carries a
@@ -407,6 +440,21 @@ mod tests {
         assert_eq!(idx.get(5), None);
         assert!(!idx.remove_matching(5, &e(1, 10, 3)), "absent key");
         assert_eq!(idx.len(), 0);
+    }
+
+    /// Compare-and-replace swaps only an exactly matching entry — the
+    /// recovery-vs-relocation arbitration rule.
+    #[test]
+    fn replace_matching_guards_generation() {
+        let idx = ShardedIndex::new(64);
+        idx.insert(5, e(1, 10, 3));
+        assert!(!idx.replace_matching(5, &e(1, 10, 2), e(2, 4, 9)), "wrong counter");
+        assert!(!idx.replace_matching(5, &e(0, 10, 3), e(2, 4, 9)), "wrong node");
+        assert_eq!(idx.get(5), Some(e(1, 10, 3)));
+        assert!(idx.replace_matching(5, &e(1, 10, 3), e(2, 4, 9)));
+        assert_eq!(idx.get(5), Some(e(2, 4, 9)));
+        assert!(!idx.replace_matching(6, &e(1, 10, 3), e(2, 4, 9)), "absent key");
+        assert_eq!(idx.len(), 1, "replace keeps len");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! ```text
 //! loco barrier   [--nodes N] [--iters K]          Fig. 1b microbenchmark
 //! loco fig4      [--max-nodes N]                  §7.1 locking figures
-//! loco fig5      [--nodes N] [--threads T]        §7.2 kvstore grid
+//! loco fig5      [--nodes N] [--threads T] [--keys K]
+//!                [--value-words W | --mixed-values]
+//!                [--cache] [--replicate]          §7.2 kvstore grid
 //! loco fig7      [--converters N]                 App. B power sweep
 //! loco micro                                      design ablations
 //! ```
@@ -16,7 +18,7 @@
 
 use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
 use loco::metrics::Table;
-use loco::workload::{KeyDist, OpMix};
+use loco::workload::{KeyDist, OpMix, ValueDist};
 
 fn arg_u64(args: &[String], flag: &str, default: u64) -> u64 {
     args.iter()
@@ -24,6 +26,10 @@ fn arg_u64(args: &[String], flag: &str, default: u64) -> u64 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn arg_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
 }
 
 fn main() {
@@ -76,19 +82,34 @@ fn main() {
             let nodes = arg_u64(&args, "--nodes", 3) as usize;
             let threads = arg_u64(&args, "--threads", 2) as usize;
             let keys = arg_u64(&args, "--keys", 1 << 15);
+            // Value sizing: --value-words W (fixed, 1 = the paper's
+            // single-word regime, 128 = 1 KB) or --mixed-values for the
+            // uniform 8 B–1 KB stream that exercises relocation.
+            let value_dist = if arg_flag(&args, "--mixed-values") {
+                ValueDist::MIXED_8B_1KB
+            } else {
+                ValueDist::Fixed(arg_u64(&args, "--value-words", 1) as usize)
+            };
+            let cache = arg_flag(&args, "--cache");
+            let replicate = arg_flag(&args, "--replicate");
             let mut t = Table::new(&["mix", "dist", "system", "window", "Mops/s"]);
             for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
                 for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
                     for sys in fig5::KvSystem::ALL {
                         let cell = fig5::Fig5Cell {
-                            system: sys,
-                            nodes,
-                            threads,
-                            mix,
-                            dist,
-                            window: 3,
-                            keys,
-                            secs: scale.secs,
+                            value_dist,
+                            cache,
+                            replicate,
+                            ..fig5::Fig5Cell::words1(
+                                sys,
+                                nodes,
+                                threads,
+                                mix,
+                                dist,
+                                3,
+                                keys,
+                                scale.secs,
+                            )
                         };
                         let mops =
                             fig5::run_cell(&cell, scale.latency.clone(), scale.redis_latency());
@@ -147,6 +168,9 @@ fn main() {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
             for (l, v) in micro::fault_hook_overhead(lat.clone(), 16, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
+            for (l, v) in micro::slab_class1_overhead(lat.clone(), 16, 60) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
             for (l, v) in micro::cached_get_zipfian(lat, 4096, 5000) {

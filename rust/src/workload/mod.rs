@@ -8,5 +8,5 @@ pub mod ycsb;
 pub mod zipfian;
 
 pub use cityhash::city_hash64;
-pub use ycsb::{KeyDist, Op, OpMix, WorkloadGen};
+pub use ycsb::{KeyDist, Op, OpMix, ValueDist, WorkloadGen};
 pub use zipfian::Zipfian;

@@ -46,19 +46,69 @@ impl OpMix {
     }
 }
 
-/// One generated operation.
+/// Value-size distribution, in words (8 B each). The kvstore's slab
+/// allocator serves any length up to the configured class ceiling, so
+/// benches can sweep the paper's value-size regimes: `Fixed(1)` is the
+/// original single-word workload, `Fixed(128)` the 1 KB point, and
+/// `Uniform` the mixed 8 B–1 KB stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueDist {
+    /// Every value exactly `words` long.
+    Fixed(usize),
+    /// Uniform in `[min_words, max_words]` (inclusive).
+    Uniform { min_words: usize, max_words: usize },
+}
+
+impl ValueDist {
+    /// The 8 B–1 KB mixed stream from the evaluation setup.
+    pub const MIXED_8B_1KB: ValueDist = ValueDist::Uniform { min_words: 1, max_words: 128 };
+
+    /// Largest length this distribution can emit (what
+    /// `KvConfig::value_words` must be configured to).
+    pub fn max_words(&self) -> usize {
+        match *self {
+            ValueDist::Fixed(w) => w,
+            ValueDist::Uniform { max_words, .. } => max_words,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            ValueDist::Fixed(w) => w,
+            ValueDist::Uniform { min_words, max_words } => {
+                debug_assert!(min_words >= 1 && min_words <= max_words);
+                rng.gen_range_incl(min_words as u64, max_words as u64) as usize
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ValueDist::Fixed(w) => format!("{}B", w * 8),
+            ValueDist::Uniform { min_words, max_words } => {
+                format!("{}B-{}B", min_words * 8, max_words * 8)
+            }
+        }
+    }
+}
+
+/// One generated operation. `len` is the update's value length in words
+/// (drawn from the generator's [`ValueDist`]); consumers of a
+/// fixed-single-word store may ignore it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Op {
     Read { key: u64 },
-    Update { key: u64, value: u64 },
+    Update { key: u64, value: u64, len: usize },
 }
 
 /// Per-thread workload stream. Key universe is `[0, keys)`; the prefill
-/// loads `keys * fill` of them.
+/// loads `keys * fill` of them, and every generated key stays inside
+/// the loaded prefix (the paper measures successful-op throughput).
 pub struct WorkloadGen {
-    keys: u64,
+    loaded: u64,
     dist: KeyDist,
     mix: OpMix,
+    values: ValueDist,
     zipf: Option<Zipfian>,
     rng: Rng,
 }
@@ -70,11 +120,29 @@ pub const PAPER_FILL: f64 = 0.8;
 
 impl WorkloadGen {
     pub fn new(keys: u64, dist: KeyDist, mix: OpMix, seed: u64) -> Self {
+        Self::with_value_dist(keys, dist, mix, ValueDist::Fixed(1), seed)
+    }
+
+    pub fn with_value_dist(
+        keys: u64,
+        dist: KeyDist,
+        mix: OpMix,
+        values: ValueDist,
+        seed: u64,
+    ) -> Self {
+        // The generator draws over the LOADED prefix directly. The seed
+        // implementation built the Zipfian over the full `keys` space
+        // and folded with `% loaded`: that aliased the unloaded tail's
+        // probability mass onto arbitrary loaded keys — hot ranks gained
+        // phantom weight from tail ranks that happened to collide mod
+        // `loaded` — distorting both the skew and the hit-rate of every
+        // fig5 number.
+        let loaded = (keys as f64 * PAPER_FILL) as u64;
         let zipf = match dist {
-            KeyDist::Zipfian => Some(Zipfian::scrambled(keys, 0.99)),
+            KeyDist::Zipfian => Some(Zipfian::scrambled(loaded, 0.99)),
             KeyDist::Uniform => None,
         };
-        WorkloadGen { keys, dist, mix, zipf, rng: Rng::seeded(seed) }
+        WorkloadGen { loaded, dist, mix, values, zipf, rng: Rng::seeded(seed) }
     }
 
     /// Keys that should be present after prefill (dense prefix keeps the
@@ -86,15 +154,9 @@ impl WorkloadGen {
 
     #[inline]
     pub fn next_key(&mut self) -> u64 {
-        let loaded = (self.keys as f64 * PAPER_FILL) as u64;
         match self.dist {
-            // Restrict to loaded keys so reads hit (the paper measures
-            // successful-op throughput).
-            KeyDist::Uniform => self.rng.gen_range(loaded),
-            KeyDist::Zipfian => {
-                let z = self.zipf.as_ref().unwrap();
-                z.next(&mut self.rng) % loaded
-            }
+            KeyDist::Uniform => self.rng.gen_range(self.loaded),
+            KeyDist::Zipfian => self.zipf.as_ref().unwrap().next(&mut self.rng),
         }
     }
 
@@ -104,7 +166,8 @@ impl WorkloadGen {
         if self.rng.gen_bool(self.mix.read_fraction) {
             Op::Read { key }
         } else {
-            Op::Update { key, value: self.rng.next_u64() }
+            let len = self.values.sample(&mut self.rng);
+            Op::Update { key, value: self.rng.next_u64(), len }
         }
     }
 }
@@ -148,5 +211,84 @@ mod tests {
     fn prefill_count() {
         let n = WorkloadGen::prefill_keys(1000, 0.8).count();
         assert_eq!(n, 800);
+    }
+
+    /// Regression for the fold bug: the Zipfian must be built over the
+    /// loaded prefix directly, not over the full keyspace folded with
+    /// `% loaded`. Same-seed draws must be bit-identical to a reference
+    /// generator over `loaded` ranks.
+    #[test]
+    fn zipfian_built_over_loaded_not_folded() {
+        let keys = 1000u64;
+        let loaded = (keys as f64 * PAPER_FILL) as u64; // 800
+        let mut g = WorkloadGen::new(keys, KeyDist::Zipfian, OpMix::READ_ONLY, 7);
+        let reference = Zipfian::scrambled(loaded, 0.99);
+        let mut rng = Rng::seeded(7);
+        for i in 0..10_000 {
+            assert_eq!(g.next_key(), reference.next(&mut rng), "draw {i} diverged");
+        }
+    }
+
+    /// Seeded frequency-histogram regression (the satellite test): the
+    /// generator's empirical key distribution must match a reference
+    /// scrambled Zipfian over the loaded prefix. The fold bug aliased
+    /// the unloaded tail's probability mass (ranks ≥ loaded of a
+    /// full-keyspace generator) onto arbitrary hot keys — a structural
+    /// transplant that total-variation distance catches immediately,
+    /// while two correct same-size samples differ only by sampling
+    /// noise.
+    #[test]
+    fn zipfian_frequency_histogram_matches_reference() {
+        let keys = 1000u64;
+        let loaded = (keys as f64 * PAPER_FILL) as u64;
+        let draws = 400_000u64;
+        let mut counts = vec![0i64; loaded as usize];
+        let mut g = WorkloadGen::new(keys, KeyDist::Zipfian, OpMix::READ_ONLY, 42);
+        for _ in 0..draws {
+            let k = g.next_key();
+            assert!(k < loaded, "key {k} outside the loaded prefix");
+            counts[k as usize] += 1;
+        }
+        // Reference histogram from an independent seed: identical
+        // distribution, independent noise.
+        let reference = Zipfian::scrambled(loaded, 0.99);
+        let mut rng = Rng::seeded(4242);
+        let mut ref_counts = vec![0i64; loaded as usize];
+        for _ in 0..draws {
+            ref_counts[reference.next(&mut rng) as usize] += 1;
+        }
+        let tv: f64 = counts
+            .iter()
+            .zip(&ref_counts)
+            .map(|(&a, &b)| (a - b).unsigned_abs() as f64)
+            .sum::<f64>()
+            / (2.0 * draws as f64);
+        assert!(tv < 0.08, "key histogram diverged from the zipfian reference: TV {tv:.4}");
+    }
+
+    #[test]
+    fn value_dist_samples_in_bounds() {
+        let mut rng = Rng::seeded(3);
+        let d = ValueDist::MIXED_8B_1KB;
+        assert_eq!(d.max_words(), 128);
+        for _ in 0..10_000 {
+            let len = d.sample(&mut rng);
+            assert!((1..=128).contains(&len));
+        }
+        assert_eq!(ValueDist::Fixed(16).sample(&mut rng), 16);
+        assert_eq!(ValueDist::Fixed(128).label(), "1024B");
+
+        // next_op threads the sampled length through Op::Update.
+        let mut g = WorkloadGen::with_value_dist(
+            1000,
+            KeyDist::Uniform,
+            OpMix::WRITE_ONLY,
+            ValueDist::Uniform { min_words: 2, max_words: 9 },
+            11,
+        );
+        for _ in 0..1000 {
+            let Op::Update { len, .. } = g.next_op() else { panic!("write-only mix") };
+            assert!((2..=9).contains(&len));
+        }
     }
 }

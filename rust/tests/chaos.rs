@@ -27,20 +27,49 @@ const CONTENDED: u64 = 6;
 const PINNED: u64 = 6;
 const KEYS: u64 = CONTENDED + PINNED;
 
+/// Slab class ceiling for the chaos schedules: values run 1..=8 words,
+/// so the same histories exercise four size classes and the
+/// cross-class relocation path.
+const MAX_WORDS: usize = 8;
+
 fn crash_cfg() -> KvConfig {
     KvConfig {
         slots_per_node: 128,
+        value_words: MAX_WORDS,
         num_locks: 12,
         tracker_words: 1 << 11,
-        read_cache_entries: 32,
+        read_cache_bytes: 4096,
         replicate: true,
         ..Default::default()
     }
 }
 
+/// Deterministic mixed value length for a pinned key (spans every
+/// class of the schedule's geometry).
+fn pinned_len(k: u64) -> usize {
+    1 + (k % MAX_WORDS as u64) as usize
+}
+
+/// Sample a value length for a contended mutation: mixed sizes with a
+/// strong pull toward the class ceiling so updates relocate constantly.
+fn chaos_len(rng: &mut Rng) -> usize {
+    if rng.gen_bool(0.4) {
+        MAX_WORDS
+    } else {
+        1 + rng.gen_range(MAX_WORDS as u64) as usize
+    }
+}
+
+/// Read helper for mixed-size histories: the value must be untorn
+/// (all words equal) and collapses to its tag word for the checker.
+fn read_tag(v: Vec<u64>, key: u64) -> u64 {
+    assert!(v.iter().all(|&x| x == v[0]), "torn value for key {key}: {v:?}");
+    v[0]
+}
+
 /// Phase 0 of a crash schedule: the victim homes the pinned keys
-/// (completed inserts — the crash must not lose them). Returns their
-/// Mutate events.
+/// (completed inserts of every size class — the crash must not lose
+/// them). Returns their Mutate events.
 fn insert_pinned(
     seed: u64,
     dead: NodeId,
@@ -53,7 +82,10 @@ fn insert_pinned(
     for k in CONTENDED..KEYS {
         let val = seed * 1000 + k;
         let inv = now(clock);
-        assert!(kvs[dead as usize].insert(&ctx, k, &[val]).unwrap(), "seed {seed}");
+        assert!(
+            kvs[dead as usize].insert(&ctx, k, &vec![val; pinned_len(k)]).unwrap(),
+            "seed {seed}"
+        );
         let resp = now(clock);
         events.push(Event::Mutate { key: k, val: Some(val), inv, resp });
     }
@@ -89,7 +121,7 @@ fn verify_rehome_and_convergence(
         for k in CONTENDED..KEYS {
             assert_eq!(
                 kvs[s].get(&ctx, k),
-                Some(vec![seed * 1000 + k]),
+                Some(vec![seed * 1000 + k; pinned_len(k)]),
                 "seed {seed}: pinned key {k} lost/corrupted on node {s}"
             );
         }
@@ -113,16 +145,20 @@ fn now(clock: &Instant) -> u64 {
 }
 
 /// One seeded schedule: two nodes, contended random ops over a small
-/// key set, full history check. Odd seeds run with the hot-key cache on
-/// so the locality tier faces the same faults.
+/// key set with **mixed value sizes** (1..=8 words — updates cross
+/// class boundaries, so relocations race the fault schedule), full
+/// history check, then a quiesced slab-accounting audit on every node.
+/// Odd seeds run with the hot-key cache on so the locality tier faces
+/// the same faults.
 fn run_seeded_history(seed: u64) {
     let keys = 4u64;
     let ops_per_thread = 24u64;
     let cfg = KvConfig {
         slots_per_node: 64,
+        value_words: MAX_WORDS,
         num_locks: 8,
         tracker_words: 1 << 10,
-        read_cache_entries: if seed % 2 == 1 { 16 } else { 0 },
+        read_cache_bytes: if seed % 2 == 1 { 2048 } else { 0 },
         ..Default::default()
     };
     let (_cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
@@ -147,15 +183,17 @@ fn run_seeded_history(seed: u64) {
                     match rng.gen_range(10) {
                         0..=2 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = chaos_len(&mut rng);
                             let inv = now(&clock);
-                            let _ = kv.insert(&ctx, key, &[val]);
+                            let _ = kv.insert(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             events.push(Event::Mutate { key, val: Some(val), inv, resp });
                         }
                         3..=4 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = chaos_len(&mut rng);
                             let inv = now(&clock);
-                            let did = kv.update(&ctx, key, &[val]);
+                            let did = kv.update(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             if did {
                                 events.push(Event::Mutate { key, val: Some(val), inv, resp });
@@ -171,7 +209,7 @@ fn run_seeded_history(seed: u64) {
                         }
                         _ => {
                             let inv = now(&clock);
-                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let got = kv.get(&ctx, key).map(|v| read_tag(v, key));
                             let resp = now(&clock);
                             events.push(Event::Read { key, val: got, inv, resp });
                         }
@@ -187,6 +225,13 @@ fn run_seeded_history(seed: u64) {
         all.extend(h.join().unwrap());
     }
     check_history(keys, &all, &format!("chaos seed {seed}"));
+    // Quiesced (no crash in the matrix): every slot of every class must
+    // be exactly once on a free list or in the index — relocations and
+    // faults may not leak or double-free.
+    for (i, kv) in kvs.iter().enumerate() {
+        kv.slab_audit()
+            .unwrap_or_else(|e| panic!("chaos seed {seed}: node {i} slab audit: {e}"));
+    }
 }
 
 /// The seeded fault matrix: ≥200 schedules of delay/reorder/dup/flap,
@@ -227,11 +272,28 @@ fn chaos_crash_stop_rehome_linearizable() {
 #[test]
 fn chaos_crash_mid_operation_linearizable() {
     for seed in [4u64, 7] {
-        run_mid_op_crash_schedule(seed);
+        run_mid_op_crash_schedule(seed, false);
     }
 }
 
-fn run_mid_op_crash_schedule(seed: u64) {
+/// Mid-**relocation** crash (the slab satellite's hard case): the
+/// victim alternates every mutation between 1 word and the class
+/// ceiling, so nearly every successful update crosses a class boundary
+/// and runs the relocation protocol — new frame, location broadcast,
+/// valid-set, old-slot retire — and the crash lands somewhere inside
+/// it. Interrupted relocations resolve like interrupted inserts
+/// (`CRASHED` = may or may not have happened; with replication the
+/// backup's re-home decides), readers racing the half-done relocation
+/// must never hang or see a torn frame, and the whole history
+/// linearizes.
+#[test]
+fn chaos_crash_mid_relocation_linearizable() {
+    for seed in [3u64, 8, 11] {
+        run_mid_op_crash_schedule(seed, true);
+    }
+}
+
+fn run_mid_op_crash_schedule(seed: u64, reloc_heavy: bool) {
     let dead: NodeId = (seed % 3) as NodeId;
     let backup: NodeId = (dead + 1) % 3;
     let (cluster, mgrs, kvs) = kv_cluster(3, chaos_fabric(seed), crash_cfg());
@@ -253,21 +315,29 @@ fn run_mid_op_crash_schedule(seed: u64) {
                 let ctx = m.ctx();
                 let mut rng = Rng::seeded(seed.wrapping_mul(977) + i as u64);
                 let mut events: Vec<Event> = Vec::new();
-                for _ in 0..80u64 {
+                for opno in 0..80u64 {
                     let key = rng.gen_range(CONTENDED);
+                    // Relocation-heavy victims flip between the
+                    // smallest and largest class every op, so the crash
+                    // cuts a relocation mid-flight.
+                    let len = if reloc_heavy && me == dead {
+                        if opno % 2 == 0 { 1 } else { MAX_WORDS }
+                    } else {
+                        chaos_len(&mut rng)
+                    };
                     // (attempted-value, inv, result) for mutations; None
                     // for reads, which record themselves.
                     let attempt: Option<(Option<u64>, u64, bool)> = match rng.gen_range(12) {
                         0..=2 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
                             let inv = now(&clock);
-                            let ok = kv.insert(&ctx, key, &[val]).is_ok();
+                            let ok = kv.insert(&ctx, key, &vec![val; len]).is_ok();
                             Some((Some(val), inv, ok))
                         }
                         3..=5 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
                             let inv = now(&clock);
-                            let ok = kv.try_update(&ctx, key, &[val]) == Ok(true);
+                            let ok = kv.try_update(&ctx, key, &vec![val; len]) == Ok(true);
                             Some((Some(val), inv, ok))
                         }
                         6 => {
@@ -282,7 +352,7 @@ fn run_mid_op_crash_schedule(seed: u64) {
                                 key
                             };
                             let inv = now(&clock);
-                            let got = kv.get(&ctx, read_key).map(|v| v[0]);
+                            let got = kv.get(&ctx, read_key).map(|v| read_tag(v, read_key));
                             let resp = now(&clock);
                             if !cluster.is_down(me) {
                                 events.push(Event::Read { key: read_key, val: got, inv, resp });
@@ -354,8 +424,9 @@ fn run_crash_schedule(seed: u64) {
                         0..=2 => {
                             let key = rng.gen_range(CONTENDED);
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = chaos_len(&mut rng);
                             let inv = now(&clock);
-                            let res = kv.insert(&ctx, key, &[val]);
+                            let res = kv.insert(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             if res.is_ok() {
                                 events.push(Event::Mutate { key, val: Some(val), inv, resp });
@@ -366,8 +437,9 @@ fn run_crash_schedule(seed: u64) {
                         3..=4 => {
                             let key = rng.gen_range(CONTENDED);
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = chaos_len(&mut rng);
                             let inv = now(&clock);
-                            let res = kv.try_update(&ctx, key, &[val]);
+                            let res = kv.try_update(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             if res == Ok(true) {
                                 events.push(Event::Mutate { key, val: Some(val), inv, resp });
@@ -385,14 +457,14 @@ fn run_crash_schedule(seed: u64) {
                         6..=8 => {
                             let key = CONTENDED + rng.gen_range(PINNED);
                             let inv = now(&clock);
-                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let got = kv.get(&ctx, key).map(|v| read_tag(v, key));
                             let resp = now(&clock);
                             events.push(Event::Read { key, val: got, inv, resp });
                         }
                         _ => {
                             let key = rng.gen_range(CONTENDED);
                             let inv = now(&clock);
-                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let got = kv.get(&ctx, key).map(|v| read_tag(v, key));
                             let resp = now(&clock);
                             events.push(Event::Read { key, val: got, inv, resp });
                         }

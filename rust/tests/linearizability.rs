@@ -26,7 +26,7 @@ fn now(clock: &std::time::Instant) -> u64 {
 
 #[test]
 fn kvstore_concurrent_history_is_linearizable() {
-    run_history(0);
+    run_history(0, 1);
 }
 
 /// Same history check over the locality tier: sharded seqlock index +
@@ -35,10 +35,21 @@ fn kvstore_concurrent_history_is_linearizable() {
 /// node's cache dropped the key — see docs/ARCHITECTURE.md).
 #[test]
 fn kvstore_concurrent_history_is_linearizable_with_cache() {
-    run_history(32);
+    run_history(4096, 1);
 }
 
-fn run_history(read_cache_entries: usize) {
+/// The relocation satellite: variable-size values over an 8-word slab
+/// geometry, with updates deliberately flipping between 1 word and the
+/// class ceiling so update-past-class-boundary **relocations** run
+/// constantly, concurrently with inserts / deletes / reads on every
+/// node — and the full history must still linearize. Cache on, so
+/// relocated generations also exercise the invalidation story.
+#[test]
+fn kvstore_history_linearizable_across_class_relocations() {
+    run_history(8192, 8);
+}
+
+fn run_history(read_cache_bytes: usize, max_words: usize) {
     let nodes = 3;
     let keys = 8u64;
     let ops_per_thread = 120u64;
@@ -46,8 +57,9 @@ fn run_history(read_cache_entries: usize) {
     lat.placement_lag_ns = 3000;
     let cfg = KvConfig {
         slots_per_node: 64,
+        value_words: max_words,
         tracker_words: 1 << 12,
-        read_cache_entries,
+        read_cache_bytes,
         ..Default::default()
     };
     let (_cluster, mgrs, kvs) =
@@ -69,20 +81,34 @@ fn run_history(read_cache_entries: usize) {
                 let ctx = m.ctx();
                 let mut rng = Rng::seeded(0xC0FFEE + i as u64);
                 let mut events = Vec::new();
+                // Value lengths flip between the smallest and largest
+                // class (plus everything between), so in-place rewrites,
+                // shrinks, and relocations all interleave.
+                let len_of = |rng: &mut Rng| -> usize {
+                    if max_words == 1 {
+                        1
+                    } else if rng.gen_bool(0.4) {
+                        max_words // force the boundary crossing
+                    } else {
+                        1 + rng.gen_range(max_words as u64) as usize
+                    }
+                };
                 for _ in 0..ops_per_thread {
                     let key = rng.gen_range(keys);
                     match rng.gen_range(10) {
                         0..=2 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = len_of(&mut rng);
                             let inv = now(&clock);
-                            let _ = kv.insert(&ctx, key, &[val]);
+                            let _ = kv.insert(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             events.push(Event::Mutate { key, val: Some(val), inv, resp });
                         }
                         3..=4 => {
                             let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let len = len_of(&mut rng);
                             let inv = now(&clock);
-                            let did = kv.update(&ctx, key, &[val]);
+                            let did = kv.update(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             if did {
                                 events.push(Event::Mutate { key, val: Some(val), inv, resp });
@@ -98,7 +124,13 @@ fn run_history(read_cache_entries: usize) {
                         }
                         _ => {
                             let inv = now(&clock);
-                            let got = kv.get(&ctx, key).map(|v| v[0]);
+                            let got = kv.get(&ctx, key).map(|v| {
+                                assert!(
+                                    v.iter().all(|&x| x == v[0]),
+                                    "torn variable-size value for key {key}: {v:?}"
+                                );
+                                v[0]
+                            });
                             let resp = now(&clock);
                             events.push(Event::Read { key, val: got, inv, resp });
                         }
@@ -114,6 +146,11 @@ fn run_history(read_cache_entries: usize) {
         all.extend(h.join().unwrap());
     }
     check_history(keys, &all, "fault-free history");
+    // Quiesced slab accounting: every slot on a free list XOR in the
+    // index, on every node.
+    for (i, kv) in kvs.iter().enumerate() {
+        kv.slab_audit().unwrap_or_else(|e| panic!("node {i} slab audit: {e}"));
+    }
 }
 
 /// Satellite stress test for the locality tier's delete guarantee:
@@ -137,7 +174,7 @@ fn cached_reads_never_stale_after_delete_acks() {
         slots_per_node: 64,
         value_words: 2,
         tracker_words: 1 << 12,
-        read_cache_entries: 32,
+        read_cache_bytes: 4096,
         ..Default::default()
     };
     let (_cluster, mgrs, kvs) =
