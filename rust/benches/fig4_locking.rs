@@ -22,7 +22,7 @@ fn main() {
     );
 
     let mut t = Table::new(&["bench", "nodes", "OpenMPI Mops/s", "LOCO Mops/s", "LOCO/MPI"]);
-    let mut json = BenchJson::new();
+    let mut json = BenchJson::measured(&scale);
     for nodes in [2usize, 3, 4, 6] {
         let mpi = geomean_runs(scale.runs, || {
             single_lock_mops(LockSystem::OpenMpi, nodes, scale.secs, scale.latency.clone())

@@ -15,7 +15,9 @@
 //! Set `LOCO_BENCH_JSON=BENCH_fig5.json` to export every row for the CI
 //! perf-trajectory artifact.
 
-use loco::bench::fig5::{loco_batch_ablation, loco_cache_ablation, run_cell, Fig5Cell, KvSystem};
+use loco::bench::fig5::{
+    loco_batch_ablation, loco_cache_ablation, loco_write_ablation, run_cell, Fig5Cell, KvSystem,
+};
 use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
 use loco::workload::{KeyDist, OpMix, ValueDist};
@@ -25,7 +27,7 @@ fn main() {
     let keys: u64 = if scale.full { 1 << 20 } else { 1 << 14 };
     let nodes = 3;
     let threads = 2;
-    let mut json = BenchJson::new();
+    let mut json = BenchJson::measured(&scale);
     println!(
         "Fig. 5 — kvstore throughput ({} latency, geomean of {} runs, {} keys, {} nodes × {} threads)",
         if scale.full { "roce25" } else { "fast_sim (÷20)" },
@@ -128,6 +130,19 @@ fn main() {
         t4.row(&[label, format!("{mops:.4}")]);
     }
     t4.print();
+
+    // Hot-write-path ablation (PR-5): the YCSB-A (50/50) zipfian
+    // write-heavy mix with the cache on, stepping through selective
+    // signaling -> inline payloads -> coalesced invalidations.
+    let mut t6 = Table::new(&["write path", "Mops/s (ycsb-a zipfian, cache on)"]);
+    let rows = geomean_rows(scale.runs, || {
+        loco_write_ablation(nodes, threads, keys, scale.secs, scale.latency.clone())
+    });
+    for (label, mops) in rows {
+        json.add("fig5_write_ablation", &label, mops);
+        t6.row(&[label, format!("{mops:.4}")]);
+    }
+    t6.print();
 
     // Value-size sweep (the slab allocator's regime): LOCO 50/50
     // zipfian at 8 B, 1 KB, and the mixed 8 B-1 KB stream whose

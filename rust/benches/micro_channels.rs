@@ -20,7 +20,7 @@ fn main() {
     );
 
     let mut t = Table::new(&["group", "variant", "value"]);
-    let mut json = BenchJson::new();
+    let mut json = BenchJson::measured(&scale);
 
     let fences = micro::fence_scopes(lat.clone(), 2000);
     for (l, v) in &fences {
@@ -63,6 +63,15 @@ fn main() {
             json.add("micro_batched_pipeline", &l, v);
             t.row(&["batched pipeline".into(), l, format!("{v:.1} Kops/s")]);
         }
+    }
+
+    // Hot write path: single-word updates through the PR-4 write path
+    // (every WQE signaled, every payload fetched) vs selective
+    // signaling + inline payloads (the PR-5 ≥1.5× bar lives on the
+    // batched pair; labels carry measured CQEs/op and inlined/op).
+    for (l, v) in micro::update_signal_inline(lat.clone(), 32, 100) {
+        json.add("micro_update_write_path", &l, v);
+        t.row(&["update write path".into(), l, format!("{v:.1} Kops/s")]);
     }
 
     // Fault-hook overhead: the same batched-vs-scalar workload with the

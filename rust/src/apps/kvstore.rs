@@ -81,6 +81,18 @@
 //! broadcast-ack completion; `fence_updates` is required (an unfenced
 //! update could be cached stale indefinitely).
 //!
+//! # The hot write path
+//!
+//! Fenced mutations apply the standard-RDMA verb economies (see
+//! `docs/ARCHITECTURE.md § Write path`): frame writes are **covered**
+//! (unsignaled; the §7.2 fence is the chain's one CQE, and a dead
+//! home's failure propagates through it via the QP chain error),
+//! small-class frames go out **inline** (no NIC payload-fetch round),
+//! concurrent updates **coalesce** their `OP_INVAL` broadcasts into one
+//! multicast with a union ack wait ([`KvConfig::coalesce_invals`]), and
+//! duplicate keys inside one `multi_put` collapse to the last value
+//! under the held lock.
+//!
 //! # Failure model & recovery
 //!
 //! Under fault injection (`FabricConfig::faults`) the store survives a
@@ -97,7 +109,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
 
 use crate::channels::read_cache::{CacheStats, FillToken, ReadCache};
@@ -162,6 +174,21 @@ const OP_INSERT_PLAIN_LEN: usize = 5;
 /// backing an update-heavy neighbour) cannot livelock it.
 const TORN_REFETCH: u32 = 8;
 
+/// Keys per `OP_INVAL` tracker message (chunked like prefill's
+/// `OP_BATCH` frames: one huge coalesced snapshot must not overflow the
+/// tracker ring's message capacity).
+const INVAL_CHUNK: usize = 128;
+
+/// Frame one `OP_INVAL` chunk: `[OP_INVAL, n, key…]` — the single
+/// encoding shared by the coalesced and per-update broadcast paths.
+fn encode_inval(chunk: &[u64]) -> Vec<u64> {
+    let mut msg = Vec::with_capacity(2 + chunk.len());
+    msg.push(OP_INVAL);
+    msg.push(chunk.len() as u64);
+    msg.extend_from_slice(chunk);
+    msg
+}
+
 #[derive(Clone, Debug)]
 pub struct KvConfig {
     /// Value slots per node **per size class** (the slab geometry gives
@@ -203,6 +230,17 @@ pub struct KvConfig {
     /// before a mutation returns) and at least two nodes. Without it a
     /// crash drops the dead node's keys from every index. Default off.
     pub replicate: bool,
+    /// Coalesce `OP_INVAL` broadcasts (locality tier): concurrent
+    /// in-place updates on this node merge their invalidation keys into
+    /// one tracker message with a **union ack wait** — one
+    /// doorbell-batched multicast retires every waiter — instead of one
+    /// broadcast round per update. Consistency is unchanged: every
+    /// updater still returns only after all peers applied an
+    /// invalidation that was *sent after its fence*, so mutations keep
+    /// linearizing at ack completion (see ARCHITECTURE § Write path).
+    /// Off = the pre-coalescing one-round-per-update behavior (the
+    /// ablation baseline). No effect with the cache disabled.
+    pub coalesce_invals: bool,
 }
 
 impl Default for KvConfig {
@@ -216,6 +254,7 @@ impl Default for KvConfig {
             lock_handover: true,
             read_cache_bytes: 0,
             replicate: false,
+            coalesce_invals: true,
         }
     }
 }
@@ -305,6 +344,32 @@ impl KvShared {
     }
 }
 
+/// Group-commit state for coalesced `OP_INVAL` broadcasts: concurrent
+/// updaters enqueue their keys; one thread at a time snapshots the whole
+/// pending set and broadcasts it as a single tracker message, and every
+/// thread whose keys rode that snapshot is released by the one union ack
+/// wait. `next_batch` counts snapshots started, `done_batch` snapshots
+/// fully acked; a thread that enqueued while snapshot *k* was in flight
+/// is covered by snapshot *k+1* (its keys were not in *k*'s cut).
+struct InvalCoalescer {
+    st: Mutex<InvalState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct InvalState {
+    pending: Vec<u64>,
+    next_batch: u64,
+    done_batch: u64,
+    in_flight: bool,
+}
+
+impl InvalCoalescer {
+    fn new() -> InvalCoalescer {
+        InvalCoalescer { st: Mutex::new(InvalState::default()), cv: Condvar::new() }
+    }
+}
+
 pub struct KvStore {
     cfg: KvConfig,
     me: NodeId,
@@ -316,6 +381,8 @@ pub struct KvStore {
     backup_hosted: Option<Region>,
     locks: Vec<TicketLock>,
     tracker_tx: Mutex<RingSender>,
+    /// Coalesced-`OP_INVAL` group commit (see [`InvalCoalescer`]).
+    inval: InvalCoalescer,
     shared: Arc<KvShared>,
     tracker_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -393,6 +460,7 @@ impl KvStore {
             backup_hosted,
             locks,
             tracker_tx: Mutex::new(tracker_tx),
+            inval: InvalCoalescer::new(),
             shared: shared.clone(),
             tracker_thread: Mutex::new(None),
         });
@@ -543,7 +611,8 @@ impl KvStore {
         let mut full = vec![0u64; fw];
         full[..frame.len()].copy_from_slice(frame);
         full[fw - 1] = cv;
-        ctx.write(region, self.slot_off(slot), &full);
+        // Covered: the fence right below is the chain's signaled op.
+        ctx.write_covered(region, self.slot_off(slot), &full);
         let _ = ctx.try_fence(FenceScope::Pair(self.backup_of(self.me)));
     }
 
@@ -839,7 +908,8 @@ impl KvStore {
             ctx.local_store(self.data, self.cv_off(old.slot), old_cv);
             self.shared.alloc.free(old.slot);
         } else if !ctx.node_down(old.node) {
-            ctx.write1(self.data_region_of(old.node), self.cv_off(old.slot), old_cv);
+            // Covered unset (the fence is the chain's signaled op).
+            ctx.write_covered(self.data_region_of(old.node), self.cv_off(old.slot), &[old_cv]);
             // Fence failure means the old home (or we) just died: its
             // slots die with it either way.
             let _ = ctx.try_fence(FenceScope::Pair(old.node));
@@ -861,15 +931,30 @@ impl KvStore {
     /// the home node crash-stopped before placement was proven — the
     /// caller re-resolves and retries; a dead *backup* is tolerated
     /// (single-crash model).
+    ///
+    /// With `fence_updates` the frame writes are **covered** (selective
+    /// signaling): no CQE per frame — the fence's flushing read is the
+    /// chain's covering signaled op, and a dead home fails that
+    /// completion via the QP chain error, exactly like the old per-write
+    /// CQE did. Small-class frames also go out **inline** (picked
+    /// automatically by the context), skipping the NIC's payload-fetch
+    /// round.
     fn write_value(&self, ctx: &ThreadCtx, e: &IndexEntry, value: &[u64]) -> Result<()> {
         let region = self.data_region_of(e.node);
         let off = self.slot_off(e.slot);
         let buf = self.build_frame(e.slot, value, false);
-        ctx.write(region, off, &buf); // completion tracked by the fence
-        if self.cfg.replicate {
-            // Mirror [hdr][value][ck]; the cv word is untouched
-            // (in-place updates do not change the generation).
-            ctx.write(self.backup_region_of(e.node), off, &buf);
+        if self.cfg.fence_updates {
+            ctx.write_covered(region, off, &buf); // the fence covers the chain
+            if self.cfg.replicate {
+                // Mirror [hdr][value][ck]; the cv word is untouched
+                // (in-place updates do not change the generation).
+                ctx.write_covered(self.backup_region_of(e.node), off, &buf);
+            }
+        } else {
+            ctx.write(region, off, &buf); // unfenced ablation: completion dropped
+            if self.cfg.replicate {
+                ctx.write(self.backup_region_of(e.node), off, &buf);
+            }
         }
         if self.cfg.fence_updates {
             let scope = if self.cfg.replicate {
@@ -903,25 +988,73 @@ impl KvStore {
     /// directly, peers via an `OP_INVAL` tracker broadcast that is
     /// applied *before* it is acknowledged. Callers hold the key lock(s)
     /// and have already placed (fenced) the value write.
+    ///
+    /// With [`KvConfig::coalesce_invals`] (the default), concurrent
+    /// updates on this node **merge** their broadcasts: each updater
+    /// enqueues its keys and the next snapshot — taken by whichever
+    /// thread gets there first — ships every pending key as one
+    /// doorbell-batched, singly-signaled multicast; the snapshot's one
+    /// union ack wait releases all riders. Safe because a key is only
+    /// enqueued *after* its value write was fenced placed, so every
+    /// broadcast invalidation is applied after the value it covers.
     fn invalidate_updated(&self, ctx: &ThreadCtx, keys: &[u64]) {
         let Some(cache) = &self.shared.cache else { return };
         if keys.is_empty() {
             return;
         }
         cache.invalidate_many(keys.iter().copied());
-        // Chunked like prefill's OP_BATCH frames: one huge multi_put must
-        // not overflow the tracker ring's message capacity.
-        const CHUNK: usize = 128;
-        let tx = self.tracker_tx.lock().unwrap();
-        for chunk in keys.chunks(CHUNK) {
-            let mut msg = Vec::with_capacity(2 + chunk.len());
-            msg.push(OP_INVAL);
-            msg.push(chunk.len() as u64);
-            msg.extend_from_slice(chunk);
-            tx.send(ctx, &msg);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
+        if !self.cfg.coalesce_invals {
+            // Pre-coalescing baseline: one broadcast round (send + full
+            // ack wait) per chunk, per caller.
+            let tx = self.tracker_tx.lock().unwrap();
+            for chunk in keys.chunks(INVAL_CHUNK) {
+                tx.send(ctx, &encode_inval(chunk));
+                let pos = tx.position();
+                tx.wait_all_acked(ctx, pos);
+            }
+            return;
         }
+        let mut st = self.inval.st.lock().unwrap();
+        st.pending.extend_from_slice(keys);
+        // The first snapshot taken after this enqueue carries our keys:
+        // the one about to start (`next_batch`) — possibly by us.
+        let my_batch = st.next_batch;
+        loop {
+            if st.done_batch > my_batch {
+                return; // our snapshot is fully acked on every peer
+            }
+            if !st.in_flight {
+                // Become the broadcaster for snapshot `next_batch`
+                // (which still holds our keys).
+                let mut batch = std::mem::take(&mut st.pending);
+                let id = st.next_batch;
+                st.next_batch += 1;
+                st.in_flight = true;
+                drop(st);
+                batch.sort_unstable();
+                batch.dedup(); // concurrent updates of one key need one entry
+                self.send_inval_snapshot(ctx, &batch);
+                st = self.inval.st.lock().unwrap();
+                st.done_batch = id + 1;
+                st.in_flight = false;
+                self.inval.cv.notify_all();
+            } else {
+                st = self.inval.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Ship one coalesced invalidation snapshot: every chunk is sent
+    /// back to back on the tracker ring (the ring writes ride the
+    /// batched pipeline), then **one** ack wait at the final position
+    /// covers the union — not one round per chunk.
+    fn send_inval_snapshot(&self, ctx: &ThreadCtx, keys: &[u64]) {
+        let tx = self.tracker_tx.lock().unwrap();
+        for chunk in keys.chunks(INVAL_CHUNK) {
+            tx.send(ctx, &encode_inval(chunk));
+        }
+        let pos = tx.position();
+        tx.wait_all_acked(ctx, pos);
     }
 
     /// Lock-free lookup (Appendix C's read protocol), served from the
@@ -1052,10 +1185,12 @@ impl KvStore {
             // broadcast (recovery validates against the backup frame).
             let region = self.data_region_of(e.node);
             let cv_off = self.cv_off(e.slot);
+            // Covered single-word unsets: the fence right below is the
+            // covering signaled op of both chains.
             if self.cfg.replicate {
-                ctx.write1(self.backup_region_of(e.node), cv_off, e.counter << 1);
+                ctx.write_covered(self.backup_region_of(e.node), cv_off, &[e.counter << 1]);
             }
-            ctx.write1(region, cv_off, e.counter << 1);
+            ctx.write_covered(region, cv_off, &[e.counter << 1]);
             let scope = if self.cfg.replicate {
                 FenceScope::Thread
             } else {
@@ -1191,9 +1326,13 @@ impl KvStore {
     /// Batched in-place update of existing keys: acquires the
     /// (deduplicated) key locks in ascending index order — so concurrent
     /// `multi_put`s cannot deadlock — issues every value write through
-    /// the batched pipeline (one doorbell per home node), runs **one**
-    /// fence covering the whole batch before the first release (§7.2's
-    /// per-update fence, amortized), then broadcasts **one** cache
+    /// the batched pipeline (one doorbell per home node, **selective
+    /// signaling**: only the tail of each per-home write chain carries a
+    /// CQE, and small-class frames go out inline), collapses
+    /// back-to-back updates of the same key to the last value (write
+    /// combining under the held locks), runs **one** fence covering the
+    /// whole batch before the first release (§7.2's per-update fence,
+    /// amortized), then broadcasts **one** (coalesced) cache
     /// invalidation for the touched keys and unlocks. Keys not present
     /// are skipped, exactly like [`KvStore::update`]. Returns how many
     /// keys were updated.
@@ -1225,16 +1364,35 @@ impl KvStore {
         // on — same batch, same fence). Values that outgrew their class
         // take the scalar relocation path below, under the same held
         // locks.
+        //
+        // Write combining: back-to-back updates of the SAME key inside
+        // one batch — all under the held key lock — collapse to the last
+        // value; earlier occurrences still count as applied (their
+        // intermediate state was never observable under the lock), but
+        // cost no frame write.
         let mut bufs: Vec<Vec<u64>> = Vec::new();
         let mut targets: Vec<(Region, u64, usize)> = Vec::new();
         let mut relocations: Vec<usize> = Vec::new();
         let mut touched: Vec<u64> = Vec::new();
         let mut updated = 0usize;
+        // One reverse pass marks each key's last occurrence (the first
+        // time it is seen walking backwards) — O(n), not a rescan of
+        // the batch tail per item.
+        let mut is_last = vec![false; items.len()];
+        {
+            let mut seen = std::collections::HashSet::with_capacity(items.len());
+            for (i, (k, _)) in items.iter().enumerate().rev() {
+                is_last[i] = seen.insert(*k);
+            }
+        }
         for (i, (e, (k, value))) in entries.iter().zip(items).enumerate() {
             if let Some(e) = e {
+                updated += 1;
+                if !is_last[i] {
+                    continue; // collapsed: a later item supersedes this one
+                }
                 if value.len() > self.geo().cap(self.geo().class_of(e.slot)) {
                     relocations.push(i);
-                    updated += 1;
                     continue;
                 }
                 let buf = self.build_frame(e.slot, value, false);
@@ -1246,7 +1404,6 @@ impl KvStore {
                     targets.push((self.backup_region_of(e.node), off, idx));
                 }
                 touched.push(*k);
-                updated += 1;
             }
         }
         let writes: Vec<(Region, u64, &[u64])> = targets
@@ -1260,18 +1417,11 @@ impl KvStore {
         // Outgrown values relocate one by one (rare path; still under
         // the batch's locks, so the per-key mutation order holds). Their
         // OP_INSERT broadcasts invalidate caches — no OP_INVAL needed.
-        // Re-resolve each entry first: an earlier relocation in this
-        // same batch (duplicate key) may have moved it already, in which
-        // case the value may now fit in place.
+        // Only last occurrences reach this list (write combining above);
+        // re-resolve each entry first anyway — a concurrent recovery may
+        // have moved it, in which case the value may now fit in place.
         for &i in &relocations {
             let (k, value) = &items[i];
-            // Last occurrence wins for duplicate keys: a later item in
-            // the batch (already written in place above, or relocating
-            // below) supersedes this one — running it now would clobber
-            // the later value.
-            if items[i + 1..].iter().any(|(k2, _)| k2 == k) {
-                continue;
-            }
             let Some(e) = self.shared.index.get(*k) else { continue };
             if value.len() <= self.geo().cap(self.geo().class_of(e.slot)) {
                 self.write_value(ctx, &e, value).expect("multi_put in-place rewrite failed");
@@ -2120,6 +2270,90 @@ mod tests {
                     assert!(kvs[1].cache_stats().hits > 0, "no cache hits recorded");
                 }
             }
+        }
+    }
+
+    /// Write combining (PR-5): back-to-back updates of the same key in
+    /// one `multi_put` collapse to the last value — every present item
+    /// still counts as applied, only one frame is written, and a
+    /// collapsed earlier occurrence can neither clobber a later one nor
+    /// force a dead relocation.
+    #[test]
+    fn multi_put_collapses_duplicate_keys() {
+        let cfg = KvConfig { value_words: 8, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(2, FabricConfig::inline_ideal(), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        kvs[0].insert(&ctxs[0], 7, &[1]).unwrap();
+        kvs[0].insert(&ctxs[0], 8, &[2]).unwrap();
+        // Three updates of key 7 (last wins) interleaved with key 8.
+        let items: Vec<(u64, Vec<u64>)> = vec![
+            (7, vec![10]),
+            (8, vec![20]),
+            (7, vec![11]),
+            (7, vec![12]),
+        ];
+        assert_eq!(kvs[1].multi_put(&ctxs[1], &items), 4, "every present item counts");
+        assert_eq!(kvs[1].get(&ctxs[1], 7), Some(vec![12]), "last value wins");
+        assert_eq!(kvs[1].get(&ctxs[1], 8), Some(vec![20]));
+        // An earlier small update collapses into a later RELOCATING one:
+        // only the 8-word value lands, via the relocation path.
+        let items: Vec<(u64, Vec<u64>)> = vec![(7, vec![30]), (7, vec![31; 8])];
+        assert_eq!(kvs[1].multi_put(&ctxs[1], &items), 2);
+        for (i, kv) in kvs.iter().enumerate() {
+            assert_eq!(kv.get(&ctxs[i], 7), Some(vec![31; 8]), "node {i}");
+        }
+        // And an earlier RELOCATING update collapses into a later
+        // in-place-sized one (the new 8-word slot fits 1 word in place).
+        let items: Vec<(u64, Vec<u64>)> = vec![(7, vec![40; 8]), (7, vec![41])];
+        assert_eq!(kvs[1].multi_put(&ctxs[1], &items), 2);
+        assert_eq!(kvs[1].get(&ctxs[1], 7), Some(vec![41]));
+        kvs[0].slab_audit().unwrap();
+        kvs[1].slab_audit().unwrap();
+    }
+
+    /// Coalesced invalidations (PR-5): with the cache on, an in-place
+    /// update's return still guarantees every peer's cached copy is
+    /// gone — scalar back-to-back (each snapshot carries one key) and
+    /// under same-node concurrency (snapshots merge several updaters;
+    /// the union ack wait releases them all). The reader would serve a
+    /// stale cached value forever if an invalidation were lost.
+    #[test]
+    fn coalesced_invals_keep_peers_fresh() {
+        let (mgrs, kvs) = setup_cfg(2, FabricConfig::inline_ideal(), cached_cfg());
+        let ctx0 = mgrs[0].ctx();
+        let ctx1 = mgrs[1].ctx();
+        assert!(kvs[0].config().coalesce_invals, "coalescing is the default");
+        kvs[0].insert(&ctx0, 1, &[100]).unwrap();
+        // Fill node 1's cache, then update in place repeatedly: every
+        // update's return must already be visible through the cache.
+        for round in 0..20u64 {
+            assert_eq!(kvs[1].get(&ctx1, 1), Some(vec![100 + round]));
+            assert_eq!(kvs[1].get(&ctx1, 1), Some(vec![100 + round])); // cached hit
+            assert!(kvs[0].update(&ctx0, 1, &[100 + round + 1]));
+        }
+        // Concurrent same-node updaters on distinct keys: their OP_INVAL
+        // broadcasts ride shared snapshots.
+        for k in 10..14u64 {
+            kvs[0].insert(&ctx0, k, &[0]).unwrap();
+            let _ = kvs[1].get(&ctx1, k); // warm the peer cache
+        }
+        let updaters: Vec<_> = (10..14u64)
+            .map(|k| {
+                let m = mgrs[0].clone();
+                let kv = kvs[0].clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    for v in 1..=50u64 {
+                        assert!(kv.update(&ctx, k, &[k * 1000 + v]));
+                    }
+                })
+            })
+            .collect();
+        for h in updaters {
+            h.join().unwrap();
+        }
+        for k in 10..14u64 {
+            assert_eq!(kvs[1].get(&ctx1, k), Some(vec![k * 1000 + 50]), "key {k}");
         }
     }
 

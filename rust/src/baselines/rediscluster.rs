@@ -103,11 +103,8 @@ impl RedisServer {
                     });
                     self.cluster.post(
                         qp,
-                        Wqe {
-                            wr_id: 0,
-                            verb: Verb::Send { bytes: encode(&[seq, status, out]) },
-                            signaled: false,
-                        },
+                        Wqe::new(0, Verb::Send { bytes: encode(&[seq, status, out]) })
+                            .unsignaled(),
                     );
                 }
                 None => {
@@ -156,11 +153,7 @@ impl RedisClient {
             .get_or_insert_with(|| self.cluster.create_qp(self.me, server));
         self.cluster.post(
             qp,
-            Wqe {
-                wr_id: 0,
-                verb: Verb::Send { bytes: encode(&[self.seq, op, key, value]) },
-                signaled: false,
-            },
+            Wqe::new(0, Verb::Send { bytes: encode(&[self.seq, op, key, value]) }).unsignaled(),
         );
         self.outstanding.push(self.seq);
     }

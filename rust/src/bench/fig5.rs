@@ -157,7 +157,20 @@ fn loco_prefilled_sized(
     lat: LatencyModel,
     value_dist: ValueDist,
 ) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
-    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat).with_mem_words(1 << 23));
+    let fabric = FabricConfig::threaded(lat).with_mem_words(1 << 23);
+    loco_prefilled_fabric(nodes, keys, cfg, fabric, value_dist)
+}
+
+/// Like [`loco_prefilled_sized`], but over an explicit [`FabricConfig`]
+/// (the write-path ablation varies `signal_every`, which lives there).
+fn loco_prefilled_fabric(
+    nodes: usize,
+    keys: u64,
+    cfg: KvConfig,
+    fabric: FabricConfig,
+    value_dist: ValueDist,
+) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    let cluster = Cluster::new(nodes, fabric);
     let mgrs: Vec<Arc<Manager>> =
         (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
     let kvs: Vec<Arc<KvStore>> =
@@ -418,6 +431,96 @@ pub fn loco_cache_ablation(
     rows
 }
 
+/// The hot-write-path ablation on the Fig. 5 write-heavy workload
+/// (YCSB-A: the 50/50 read/update mix, Zipfian θ=0.99, hot-key cache
+/// on so updates pay the invalidation protocol): LOCO workers drive
+/// scalar `get`/`try_update` streams while the write path steps through
+/// the PR-5 economies —
+///
+/// 1. **baseline** — every WQE signaled, every payload DMA-fetched, one
+///    invalidation broadcast round per update (the PR-4 write path);
+/// 2. **+signaling** — covered write chains: the update's fence is the
+///    chain's only CQE;
+/// 3. **+inline** — small-class frames copied into the WQE at post time;
+/// 4. **+coalescing** — concurrent updates merge their `OP_INVAL`
+///    broadcasts into one multicast with a union ack wait.
+///
+/// Rows: (label, aggregate Mops/s); run by `cargo bench --bench
+/// fig5_kvstore` and exported to `BENCH_fig5.json`.
+pub fn loco_write_ablation(
+    nodes: usize,
+    threads: usize,
+    keys: u64,
+    secs: f64,
+    lat: LatencyModel,
+) -> Vec<(String, f64)> {
+    // Every cell pins its knobs explicitly (the ambient
+    // LOCO_SIGNAL_EVERY must not relabel the ablation).
+    let cells: [(&str, u32, usize, bool); 4] = [
+        ("baseline (signal-all, fetch-all, per-update inval)", 1, 0, false),
+        ("+selective signaling", 16, 0, false),
+        ("+inline payloads", 16, 28, false),
+        ("+coalesced invalidations", 16, 28, true),
+    ];
+    let mut rows = Vec::new();
+    for (label, signal_every, max_inline, coalesce) in cells {
+        let mut lat2 = lat.clone();
+        lat2.max_inline_words = max_inline;
+        let fabric = FabricConfig::threaded(lat2)
+            .with_mem_words(1 << 23)
+            .with_signal_every(signal_every);
+        let cfg = KvConfig {
+            slots_per_node: (keys as usize).div_ceil(nodes) + 64,
+            coalesce_invals: coalesce,
+            ..Default::default()
+        }
+        .with_zipfian_cache(keys);
+        let (_cluster, mgrs, kvs) =
+            loco_prefilled_fabric(nodes, keys, cfg, fabric, ValueDist::Fixed(1));
+
+        let gate = Gate::new();
+        let handles: Vec<_> = (0..nodes)
+            .flat_map(|ni| (0..threads).map(move |t| (ni, t)))
+            .map(|(ni, t)| {
+                let m = mgrs[ni].clone();
+                let kv = kvs[ni].clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    let ctx = m.ctx();
+                    let mut gen = WorkloadGen::new(
+                        keys,
+                        KeyDist::Zipfian,
+                        OpMix::MIXED_50_50,
+                        (ni * 1000 + t) as u64 + 1,
+                    );
+                    gate.worker_ready_and_wait();
+                    let mut ops = 0u64;
+                    while !gate.stop.load(Ordering::Relaxed) {
+                        match gen.next_op() {
+                            Op::Read { key } => {
+                                let _ = kv.get(&ctx, key);
+                                ops += 1;
+                            }
+                            Op::Update { key, value, len } => {
+                                if kv.try_update(&ctx, key, &vec![value; len]).is_ok() {
+                                    ops += 1;
+                                }
+                            }
+                        }
+                    }
+                    gate.ops.fetch_add(ops, Ordering::Relaxed);
+                })
+            })
+            .collect();
+        gate.run_window((nodes * threads) as u64, secs);
+        for h in handles {
+            h.join().unwrap();
+        }
+        rows.push((format!("LOCO ycsb-a {label}"), gate.mops(secs)));
+    }
+    rows
+}
+
 fn run_sherman(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     let n = cell.nodes;
     let cluster = Cluster::new(n, FabricConfig::threaded(lat).with_mem_words(1 << 23));
@@ -597,6 +700,18 @@ mod tests {
         let rows = loco_batch_ablation(2, 1, 2048, 16, 0.15, LatencyModel::fast_sim());
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|(_, mops)| *mops > 0.0), "{rows:?}");
+    }
+
+    /// The write-path ablation reports all four (signaling × inline ×
+    /// coalescing) cells and every cell makes progress — the YCSB-A
+    /// write-heavy regime the PR-5 acceptance pins.
+    #[test]
+    fn write_ablation_runs() {
+        let rows = loco_write_ablation(2, 2, 2048, 0.15, LatencyModel::fast_sim());
+        assert_eq!(rows.len(), 4, "{rows:?}");
+        assert!(rows.iter().all(|(_, mops)| *mops > 0.0), "{rows:?}");
+        assert!(rows[0].0.contains("baseline"), "{rows:?}");
+        assert!(rows[3].0.contains("coalesced"), "{rows:?}");
     }
 
     /// The cache ablation reports all four (dist × cache) cells and the

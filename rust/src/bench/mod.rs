@@ -65,18 +65,43 @@ pub fn geomean_runs(runs: usize, mut f: impl FnMut() -> f64) -> f64 {
 
 /// Hand-rolled JSON report for CI perf trajectories (no serde in the
 /// offline build). Benches add `(bench, label, value)` rows and write
-/// the file named by `LOCO_BENCH_JSON`; CI runs each bench target with
-/// its own destination (`BENCH_micro.json`, `BENCH_fig4.json`,
-/// `BENCH_fig5.json` at the repo root) and uploads them as artifacts so
-/// throughput per config is tracked PR over PR.
+/// the file named by `LOCO_BENCH_JSON`. The canonical baselines are
+/// **committed at the repo root** (`BENCH_micro.json`,
+/// `BENCH_fig4.json`, `BENCH_fig5.json`; regenerate with
+/// `scripts/bench_refresh.sh`); CI rebuilds fresh copies, compares the
+/// pinned bars against the committed baseline
+/// (`scripts/bench_guard.py`, >10 % regression fails), and uploads the
+/// fresh files as artifacts so throughput per config is tracked PR
+/// over PR.
+///
+/// The `meta` map records how the rows were produced — at minimum
+/// `latency` (`fast_sim`/`roce25`) and `provenance` (`measured` by the
+/// bench targets; a hand-seeded baseline says `estimated`, which the
+/// guard treats as compare-nothing until the first refresh replaces
+/// it).
 #[derive(Default)]
 pub struct BenchJson {
     rows: Vec<(String, String, f64)>,
+    meta: Vec<(String, String)>,
 }
 
 impl BenchJson {
     pub fn new() -> BenchJson {
         BenchJson::default()
+    }
+
+    /// Construct with the standard measurement metadata for `scale`.
+    pub fn measured(scale: &Scale) -> BenchJson {
+        let mut j = BenchJson::new();
+        j.set_meta("provenance", "measured");
+        j.set_meta("latency", if scale.full { "roce25" } else { "fast_sim" });
+        j
+    }
+
+    /// Record a metadata key (last write wins).
+    pub fn set_meta(&mut self, key: &str, value: &str) {
+        self.meta.retain(|(k, _)| k.as_str() != key);
+        self.meta.push((key.to_string(), value.to_string()));
     }
 
     /// Destination from the `LOCO_BENCH_JSON` environment variable.
@@ -88,12 +113,18 @@ impl BenchJson {
         self.rows.push((bench.to_string(), label.to_string(), value));
     }
 
-    /// Write `{"rows": [{"bench": …, "label": …, "value": …}, …]}`.
+    /// Write `{"meta": {…}, "rows": [{"bench": …, "label": …,
+    /// "value": …}, …]}`.
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"rows\": [\n");
+        let mut out = String::from("{\n  \"meta\": {");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            let sep = if i + 1 == self.meta.len() { "" } else { ", " };
+            out.push_str(&format!("\"{}\": \"{}\"{sep}", esc(k), esc(v)));
+        }
+        out.push_str("},\n  \"rows\": [\n");
         for (i, (bench, label, value)) in self.rows.iter().enumerate() {
             let sep = if i + 1 == self.rows.len() { "" } else { "," };
             out.push_str(&format!(

@@ -126,6 +126,15 @@ impl RingSender {
 
     /// Broadcast `payload` to every receiver. Blocks while any ring is
     /// full. Returns the unioned completion key of the remote writes.
+    ///
+    /// Rides the batched write pipeline: one `write_many` covers every
+    /// receiver (ack allocation amortized, one doorbell per peer), and
+    /// the frame write is **inline** whenever it fits the device's
+    /// inline cap (tracker-ring broadcasts are a few words — the common
+    /// case skips the NIC's payload-fetch round). A wrap filler is
+    /// still posted immediately (unsignaled): the second space wait may
+    /// depend on receivers consuming it, so it cannot be deferred into
+    /// the frame's batch.
     pub fn send(&self, ctx: &ThreadCtx, payload: &[u64]) -> AckKey {
         let len = payload.len() as u64;
         assert!(len + 2 <= self.capacity, "message of {len} words exceeds ring capacity");
@@ -152,11 +161,11 @@ impl RingSender {
         frame.push(h);
         frame.extend_from_slice(payload);
         frame.push(fnv64(&frame));
-        let mut key = AckKey::ready();
-        for r in self.receivers() {
-            let ring = self.ep.remote_region(r, "ring");
-            key.union(ctx.write(ring, off, &frame));
-        }
+        let rings: Vec<Region> =
+            self.receivers().map(|r| self.ep.remote_region(r, "ring")).collect();
+        let writes: Vec<(Region, u64, &[u64])> =
+            rings.iter().map(|&ring| (ring, off, frame.as_slice())).collect();
+        let key = ctx.write_many(&writes);
         self.head.set(self.head.get() + len + 2);
         self.seq.set(self.seq.get() + 1);
         key
@@ -164,6 +173,7 @@ impl RingSender {
 
     fn wait_space(&self, ctx: &ThreadCtx, need: u64) {
         let mut bo = Backoff::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
         loop {
             let consumed = match self.min_consumed(ctx) {
                 Some(c) => c,
@@ -176,6 +186,10 @@ impl RingSender {
             if self.membership.is_dead(self.me) {
                 return; // we crash-stopped: sends are no-ops anyway
             }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "ring sender wedged (30 s) waiting for {need} words of space"
+            );
             bo.snooze();
         }
     }
@@ -200,6 +214,7 @@ impl RingSender {
     /// gives up (its writes were never transmitted).
     pub fn wait_all_acked(&self, ctx: &ThreadCtx, upto: u64) {
         let mut bo = Backoff::new();
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
         loop {
             match self.min_consumed(ctx) {
                 None => return,
@@ -209,6 +224,10 @@ impl RingSender {
             if self.membership.is_dead(self.me) {
                 return;
             }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "ring broadcast wedged (30 s) waiting for acks up to position {upto}"
+            );
             bo.snooze();
         }
     }

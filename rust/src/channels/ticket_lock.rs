@@ -200,6 +200,10 @@ impl TicketLock {
         };
         let mut bo = Backoff::new();
         let mut death_seen_at: Option<std::time::Instant> = None;
+        // Even the unchecked spin is bounded (spin-loop-hinted backoff
+        // plus a hard deadline): a wedged lock panics with a diagnosis
+        // instead of silently pinning a core forever.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
         loop {
             let serving = if checked {
                 match self.now_serving.try_load(ctx) {
@@ -229,6 +233,10 @@ impl TicketLock {
                     )));
                 }
             }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "ticket lock wait wedged (30 s): ticket {my_ticket}, serving {serving}"
+            );
             bo.snooze();
         }
         Ok(false)

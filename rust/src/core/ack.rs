@@ -27,6 +27,20 @@
 //! recycled), which [`AckRegistry::complete`] checks, so a duplicate
 //! that outlives its bit's recycling is dropped instead of completing
 //! (or failing) an unrelated new op.
+//!
+//! # Covered chains (selective signaling)
+//!
+//! With selective completion signaling (`FabricConfig::signal_every`),
+//! the batched write paths allocate bits **only for the signaled WQEs**
+//! of a chain: the unsignaled predecessors are *covered* by the next
+//! signaled entry — per-QP FIFO completion order means its one CQE
+//! proves the whole prefix executed, so clearing its one bit retires
+//! the chain. Failure keeps the same contract: a failed unsignaled WQE
+//! raises its QP's chain error, the covering CQE is delivered
+//! `PeerFailed`, and the error bit set here surfaces through
+//! [`AckKey::failed`] exactly as a per-op completion would have.
+//! Duplicate or reordered covering CQEs are handled by the same
+//! idempotence + generation rules as any other completion.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};

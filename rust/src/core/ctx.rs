@@ -233,6 +233,16 @@ pub struct ThreadCtx {
     read_pool: ReadPool,
     pool: Arc<MemPool>,
     cqe_buf: RefCell<Vec<crate::fabric::Cqe>>,
+    /// Largest WRITE payload (words) posted inline (0 = never); mirrors
+    /// `LatencyModel::max_inline_words`.
+    max_inline: usize,
+    /// Selective-signaling chain length (`FabricConfig::signal_every`;
+    /// ≤ 1 = every WQE signaled).
+    signal_every: u32,
+    /// Per-peer count of consecutive covered (unsignaled) stream writes
+    /// since the last signaled one — the "every Nth in a stream" cadence
+    /// of [`ThreadCtx::write_covered`].
+    covered_streak: RefCell<Vec<u32>>,
     _not_sync: PhantomData<*const ()>,
 }
 
@@ -245,6 +255,9 @@ impl ThreadCtx {
         pool: Arc<MemPool>,
     ) -> Self {
         let node = cluster.node(me).clone();
+        let max_inline = cluster.config().latency.max_inline_words;
+        let signal_every = cluster.config().signal_every;
+        let num_nodes = cluster.num_nodes();
         ThreadCtx {
             cluster,
             node,
@@ -256,7 +269,28 @@ impl ThreadCtx {
             read_pool: Rc::new(RefCell::new(Vec::new())),
             pool,
             cqe_buf: RefCell::new(Vec::with_capacity(64)),
+            max_inline,
+            signal_every,
+            covered_streak: RefCell::new(vec![0; num_nodes]),
             _not_sync: PhantomData,
+        }
+    }
+
+    /// Build a WQE, picking inline automatically: WRITE payloads of at
+    /// most `LatencyModel::max_inline_words` are copied into the WQE at
+    /// post time, so the NIC skips the scatter-gather payload fetch
+    /// (charged `inline_ns` instead of `wqe_fetch_ns`).
+    #[inline]
+    fn mk_wqe(&self, wr_id: u64, verb: Verb) -> Wqe {
+        let inline = match &verb {
+            Verb::Write { data, .. } => data.len() <= self.max_inline,
+            _ => false,
+        };
+        let wqe = Wqe::new(wr_id, verb);
+        if inline {
+            wqe.inlined()
+        } else {
+            wqe
         }
     }
 
@@ -364,14 +398,14 @@ impl ThreadCtx {
     fn issue(&self, peer: crate::fabric::NodeId, verb: Verb) -> AckKey {
         let qp = self.shared.qp(&self.cluster, self.me, peer);
         let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
-        self.cluster.post(qp, Wqe { wr_id, verb, signaled: true });
+        self.cluster.post(qp, self.mk_wqe(wr_id, verb));
         AckKey::single(word, mask)
     }
 
     #[inline]
     fn issue_unsignaled(&self, peer: crate::fabric::NodeId, verb: Verb) {
         let qp = self.shared.qp(&self.cluster, self.me, peer);
-        self.cluster.post(qp, Wqe { wr_id: 0, verb, signaled: false });
+        self.cluster.post(qp, self.mk_wqe(0, verb).unsignaled());
     }
 
     // ---- batched issue (doorbell-batched async pipeline) ------------
@@ -389,7 +423,7 @@ impl ThreadCtx {
         let key = self.alloc.borrow_mut().alloc_batch(verbs.len(), &mut wr_ids);
         let mut list = PostList::with_capacity(verbs.len());
         for (wr_id, verb) in wr_ids.into_iter().zip(verbs) {
-            list.push(Wqe { wr_id, verb, signaled: true });
+            list.push(self.mk_wqe(wr_id, verb));
         }
         self.cluster.post_list(qp, list);
         key
@@ -492,29 +526,61 @@ impl ThreadCtx {
         self.post_grouped(remote)
     }
 
-    /// Shared tail of the `*_many` paths: allocate ack bits **once** for
-    /// the whole mixed-peer batch (one `fetch_or` per ack word), split
-    /// into one [`PostList`] per distinct peer — a doorbell cannot span
-    /// QPs — and post each under its single doorbell, preserving
-    /// per-peer submission order.
+    /// Shared tail of the `*_many` paths: group into one [`PostList`]
+    /// per distinct peer — a doorbell cannot span QPs — apply
+    /// **selective signaling** to all-WRITE chains, allocate ack bits
+    /// only for the signaled entries (one `fetch_or` per ack word for
+    /// the whole mixed-peer batch), and post each list under its single
+    /// doorbell, preserving per-peer submission order.
+    ///
+    /// Selective signaling (the hot-write-path economy): in a per-peer
+    /// chain consisting solely of WRITEs, only every
+    /// [`FabricConfig::signal_every`](crate::fabric::FabricConfig)-th
+    /// WQE and the chain's last WQE are signaled; per-QP FIFO completion
+    /// order means the covering CQE retires the whole unsignaled prefix,
+    /// and a failed unsignaled WQE propagates through the covering
+    /// completion via the QP's chain error. Chains carrying READs or
+    /// atomics keep per-op signaling (their completions carry results).
     fn post_grouped(&self, remote: Vec<(crate::fabric::NodeId, Verb)>) -> AckKey {
         if remote.is_empty() {
             return AckKey::ready();
         }
-        let mut wr_ids = Vec::with_capacity(remote.len());
-        let key = self.alloc.borrow_mut().alloc_batch(remote.len(), &mut wr_ids);
-        let mut lists: Vec<(crate::fabric::NodeId, PostList)> = Vec::new();
-        for (wr_id, (peer, verb)) in wr_ids.into_iter().zip(remote) {
+        let mut lists: Vec<(crate::fabric::NodeId, Vec<Verb>)> = Vec::new();
+        for (peer, verb) in remote {
             let i = match lists.iter().position(|(p, _)| *p == peer) {
                 Some(i) => i,
                 None => {
-                    lists.push((peer, PostList::new()));
+                    lists.push((peer, Vec::new()));
                     lists.len() - 1
                 }
             };
-            lists[i].1.push(Wqe { wr_id, verb, signaled: true });
+            lists[i].1.push(verb);
         }
-        for (peer, list) in lists {
+        // Which entries of each chain get a CQE (and hence an ack bit)?
+        let n = self.signal_every.max(1) as usize;
+        let mut signaled: Vec<Vec<bool>> = Vec::with_capacity(lists.len());
+        let mut total_signaled = 0usize;
+        for (_, verbs) in &lists {
+            let all_writes = verbs.iter().all(|v| matches!(v, Verb::Write { .. }));
+            let flags: Vec<bool> = (0..verbs.len())
+                .map(|i| !all_writes || n <= 1 || (i + 1) % n == 0 || i + 1 == verbs.len())
+                .collect();
+            total_signaled += flags.iter().filter(|&&s| s).count();
+            signaled.push(flags);
+        }
+        let mut wr_ids = Vec::with_capacity(total_signaled);
+        let key = self.alloc.borrow_mut().alloc_batch(total_signaled, &mut wr_ids);
+        let mut next_wr = wr_ids.into_iter();
+        for ((peer, verbs), flags) in lists.into_iter().zip(signaled) {
+            let mut list = PostList::with_capacity(verbs.len());
+            for (verb, sig) in verbs.into_iter().zip(flags) {
+                let wqe = if sig {
+                    self.mk_wqe(next_wr.next().expect("signaled wr_id budget"), verb)
+                } else {
+                    self.mk_wqe(0, verb).unsignaled()
+                };
+                list.push(wqe);
+            }
             let qp = self.shared.qp(&self.cluster, self.me, peer);
             self.cluster.post_list(qp, list);
         }
@@ -547,6 +613,49 @@ impl ThreadCtx {
         }
         self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
         self.issue_unsignaled(target.node, Verb::Write { remote: addr, data: Payload::from_words(words) });
+    }
+
+    /// Covered stream write — the "every Nth in a stream" form of
+    /// selective signaling. Posts the WRITE unsignaled, except every
+    /// [`FabricConfig::signal_every`](crate::fabric::FabricConfig)-th
+    /// consecutive covered write to the same peer, which is signaled so
+    /// a long stream still generates periodic CQEs (bounding the NIC's
+    /// uncompleted backlog, as real send queues require). The caller
+    /// must already rely on a later flushing op (fence / read) for
+    /// placement — exactly the kvstore's fenced-update contract — and a
+    /// failed covered write propagates through that covering op's
+    /// completion via the QP chain error. With `signal_every <= 1` this
+    /// degrades to a plain signaled [`ThreadCtx::write`] (the ablation
+    /// baseline).
+    pub fn write_covered(&self, target: Region, off: u64, words: &[u64]) {
+        let addr = target.at(off);
+        if self.local_direct(&target) {
+            self.node.arena().store_words(addr, words, false);
+            return;
+        }
+        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+        let peer = target.node;
+        let verb = Verb::Write { remote: addr, data: Payload::from_words(words) };
+        if self.signal_every <= 1 {
+            let _ = self.issue(peer, verb);
+            return;
+        }
+        let signal = {
+            let mut streaks = self.covered_streak.borrow_mut();
+            let streak = &mut streaks[peer as usize];
+            *streak += 1;
+            if *streak >= self.signal_every {
+                *streak = 0;
+                true
+            } else {
+                false
+            }
+        };
+        if signal {
+            let _ = self.issue(peer, verb); // key dropped; pollers drain the CQE
+        } else {
+            self.issue_unsignaled(peer, verb);
+        }
     }
 
     /// Convenience: single-word write.
@@ -840,7 +949,7 @@ impl ThreadCtx {
             }
         };
         let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
-        self.cluster.post(qp, Wqe { wr_id, verb: Verb::ZeroLenRead, signaled: true });
+        self.cluster.post(qp, Wqe::new(wr_id, Verb::ZeroLenRead));
         AckKey::single(word, mask)
     }
 }
@@ -904,6 +1013,100 @@ mod tests {
         let out = ctx.read_many(&reqs);
         for (i, row) in out.iter().enumerate() {
             assert_eq!(row, &vec![i as u64 * 3], "word {i}");
+        }
+    }
+
+    /// Selective signaling on the batched write path: a 32-write chain
+    /// to one peer generates exactly two CQEs (the every-16th cover and
+    /// the tail), every payload ≤ the inline cap goes out inline, and
+    /// the covering completion still retires the whole chain (all data
+    /// placed after a fence).
+    #[test]
+    fn write_many_signals_only_chain_covers() {
+        let fabric = FabricConfig::inline_ideal().with_signal_every(16);
+        let (cluster, mgrs) = setup(2, fabric);
+        let dst = cluster.node(1).register_mr(64, false);
+        let ctx = mgrs[0].ctx();
+        let vals: Vec<[u64; 1]> = (0..32u64).map(|i| [i * 3 + 1]).collect();
+        let writes: Vec<_> = (0..32usize).map(|i| (dst, i as u64, &vals[i][..])).collect();
+        let cqes0 = cluster.cqes_posted();
+        let inl0 = cluster.wqes_inlined();
+        let key = ctx.write_many(&writes);
+        ctx.wait(&key);
+        assert!(!key.failed());
+        assert_eq!(
+            cluster.cqes_posted() - cqes0,
+            2,
+            "32-write chain at signal_every=16 must generate exactly 2 CQEs"
+        );
+        assert_eq!(cluster.wqes_inlined() - inl0, 32, "single-word writes go inline");
+        ctx.fence(super::FenceScope::Pair(1));
+        let out = ctx.read_many(&(0..32u64).map(|i| (dst, i, 1usize)).collect::<Vec<_>>());
+        for (i, row) in out.iter().enumerate() {
+            assert_eq!(row, &vec![i as u64 * 3 + 1], "covered write {i} placed");
+        }
+    }
+
+    /// `signal_every = 1` (the ablation baseline) restores the PR-4
+    /// shape: one CQE per write.
+    #[test]
+    fn signal_every_one_signals_all() {
+        let fabric = FabricConfig::inline_ideal().with_signal_every(1);
+        let (cluster, mgrs) = setup(2, fabric);
+        let dst = cluster.node(1).register_mr(16, false);
+        let ctx = mgrs[0].ctx();
+        let vals: Vec<[u64; 1]> = (0..8u64).map(|i| [i]).collect();
+        let writes: Vec<_> = (0..8usize).map(|i| (dst, i as u64, &vals[i][..])).collect();
+        let cqes0 = cluster.cqes_posted();
+        ctx.write_many(&writes).wait();
+        assert_eq!(cluster.cqes_posted() - cqes0, 8);
+    }
+
+    /// The PR-5 spin-audit regression: a waiter on a **covered** write
+    /// chain to a peer that crash-stops mid-flight unblocks within the
+    /// bound with `PeerFailed` — the chain's covering CQE carries the
+    /// failure (no ack bit is ever orphaned by an unsignaled WQE).
+    #[test]
+    fn crashed_peer_covered_chain_unblocks_within_bound() {
+        let mut lat = crate::fabric::LatencyModel::fast_sim();
+        lat.write_ns = 20_000_000; // 20 ms: the whole chain is in flight
+        let (cluster, mgrs) = setup(2, FabricConfig::threaded(lat));
+        let dst = cluster.node(1).register_mr(64, false);
+        let ctx = mgrs[0].ctx();
+        let vals: Vec<[u64; 1]> = (0..32u64).map(|i| [i]).collect();
+        let writes: Vec<_> = (0..32usize).map(|i| (dst, i as u64, &vals[i][..])).collect();
+        let key = ctx.write_many(&writes);
+        cluster.crash(1);
+        let t0 = std::time::Instant::now();
+        assert!(
+            matches!(ctx.wait_checked(&key), Err(crate::Error::PeerFailed(_))),
+            "covered chain to a corpse must surface PeerFailed"
+        );
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "crashed-peer ack wait exceeded the bound: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// Covered stream writes (`write_covered`) generate no CQEs until
+    /// the periodic cover, and a fence still proves placement.
+    #[test]
+    fn covered_stream_writes_and_fence() {
+        let fabric = FabricConfig::inline_ideal().with_signal_every(16);
+        let (cluster, mgrs) = setup(2, fabric);
+        let dst = cluster.node(1).register_mr(64, false);
+        let ctx = mgrs[0].ctx();
+        let cqes0 = cluster.cqes_posted();
+        for i in 0..15u64 {
+            ctx.write_covered(dst, i, &[i + 100]);
+        }
+        assert_eq!(cluster.cqes_posted() - cqes0, 0, "covered stream under the cadence");
+        ctx.write_covered(dst, 15, &[115]); // 16th: the periodic cover
+        assert_eq!(cluster.cqes_posted() - cqes0, 1);
+        ctx.fence(super::FenceScope::Pair(1));
+        for i in 0..16u64 {
+            assert_eq!(ctx.read1(dst, i), i + 100);
         }
     }
 

@@ -369,11 +369,8 @@ impl Shared {
         };
         self.cluster.post(
             qp,
-            Wqe {
-                wr_id: 0,
-                verb: Verb::Send { bytes: msg.as_bytes().to_vec().into_boxed_slice() },
-                signaled: false,
-            },
+            Wqe::new(0, Verb::Send { bytes: msg.as_bytes().to_vec().into_boxed_slice() })
+                .unsignaled(),
         );
     }
 

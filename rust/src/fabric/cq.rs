@@ -51,16 +51,26 @@ impl Cqe {
 
 pub struct CompletionQueue {
     q: Queue<Cqe>,
+    /// CQEs ever posted (monotonic). The selective-signaling tests and
+    /// benches diff this to show completions *avoided*, the same way
+    /// `Cluster::ops_posted` shows remote ops avoided by the cache.
+    posted: std::sync::atomic::AtomicU64,
 }
 
 impl CompletionQueue {
     pub fn new() -> Self {
-        CompletionQueue { q: Queue::new() }
+        CompletionQueue { q: Queue::new(), posted: std::sync::atomic::AtomicU64::new(0) }
     }
 
     #[inline]
     pub fn post(&self, cqe: Cqe) {
+        self.posted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.q.push(cqe);
+    }
+
+    /// CQEs ever posted to this queue (monotonic).
+    pub fn posted(&self) -> u64 {
+        self.posted.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Drain up to `max` completions into `out`; returns the count.

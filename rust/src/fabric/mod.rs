@@ -81,6 +81,27 @@ pub struct LatencyModel {
     /// doorbell beats N scalar posts (paper §2.2's cheap asynchrony;
     /// cf. Brock et al.'s op-aggregation results).
     pub doorbell_ns: u64,
+    /// Per-**signaled** WQE cost of generating its CQE (the NIC's DMA
+    /// write into the completion queue). Unsignaled WQEs skip it
+    /// entirely — the selective-signaling economy: a chain of N writes
+    /// with only the last signaled pays this once, not N times. Charged
+    /// into both the op's latency and the QP's serialization term (CQE
+    /// generation occupies the NIC per WQE, like `op_overhead_ns`).
+    pub completion_ns: u64,
+    /// Per-WRITE cost of the NIC's DMA read fetching a non-inline
+    /// payload from registered host memory (the PCIe round every
+    /// scatter-gather WRITE pays before its data can hit the wire).
+    /// WRITEs posted **inline** replace this with `inline_ns`.
+    pub wqe_fetch_ns: u64,
+    /// Per-WRITE cost of an inline payload (the CPU copied the data into
+    /// the WQE at post time, so the NIC has it immediately). Replaces
+    /// `wqe_fetch_ns` for writes of ≤ `max_inline_words`.
+    pub inline_ns: u64,
+    /// Largest WRITE payload (words) the device accepts inline
+    /// (ConnectX-class NICs: 220 B ≈ 27 words; we round to 28).
+    /// `ThreadCtx::write`/`write_many` inline automatically at or below
+    /// this; 0 disables inlining (the ablation baseline).
+    pub max_inline_words: usize,
     /// Placement lag after completion, uniform in `[0, placement_lag_ns]`.
     /// This is the §2.2 "placement may happen during and after completion"
     /// window.
@@ -108,6 +129,10 @@ impl LatencyModel {
             per_word_ns: 0.0,
             op_overhead_ns: 0,
             doorbell_ns: 0,
+            completion_ns: 0,
+            wqe_fetch_ns: 0,
+            inline_ns: 0,
+            max_inline_words: 28,
             placement_lag_ns: 0,
             mr_miss_ns: 0,
             mr_cache_entries: usize::MAX,
@@ -126,6 +151,10 @@ impl LatencyModel {
             per_word_ns: 2.56,
             op_overhead_ns: 120,
             doorbell_ns: 450,
+            completion_ns: 300,
+            wqe_fetch_ns: 500,
+            inline_ns: 50,
+            max_inline_words: 28,
             placement_lag_ns: 1200,
             mr_miss_ns: 900,
             mr_cache_entries: 64,
@@ -145,11 +174,21 @@ impl LatencyModel {
             per_word_ns: r.per_word_ns / 20.0,
             op_overhead_ns: r.op_overhead_ns / 20,
             doorbell_ns: r.doorbell_ns / 20,
+            completion_ns: r.completion_ns / 20,
+            wqe_fetch_ns: r.wqe_fetch_ns / 20,
+            inline_ns: r.inline_ns / 20,
+            max_inline_words: r.max_inline_words,
             placement_lag_ns: r.placement_lag_ns / 20,
             mr_miss_ns: r.mr_miss_ns / 20,
             mr_cache_entries: r.mr_cache_entries,
             device_mem_save_ns: r.device_mem_save_ns / 20,
         }
+    }
+
+    /// Override the inline threshold (builder style, for ablations).
+    pub fn with_max_inline_words(mut self, words: usize) -> Self {
+        self.max_inline_words = words;
+        self
     }
 }
 
@@ -173,6 +212,19 @@ pub struct FabricConfig {
     /// crash-stop). `None` — the default — costs the hot paths only an
     /// `Option` branch; see [`faults::FaultPlan`].
     pub faults: Option<FaultPlan>,
+    /// Selective-signaling chain length for the batched write paths:
+    /// `ThreadCtx::write_many`/`write_covered` signal only every Nth
+    /// WQE (and the last of a batch); the one CQE retires the whole
+    /// covered prefix. `0` or `1` signals everything (the pre-PR-5
+    /// behavior; the ablation baseline). Overridable per process via
+    /// `LOCO_SIGNAL_EVERY`.
+    pub signal_every: u32,
+}
+
+/// Default selective-signaling chain length (overridable with
+/// `LOCO_SIGNAL_EVERY`; `1` disables).
+fn default_signal_every() -> u32 {
+    std::env::var("LOCO_SIGNAL_EVERY").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
 }
 
 impl FabricConfig {
@@ -186,6 +238,7 @@ impl FabricConfig {
             chaotic_placement: false,
             seed: 0x10c0,
             faults: None,
+            signal_every: default_signal_every(),
         }
     }
 
@@ -199,11 +252,19 @@ impl FabricConfig {
             chaotic_placement: false,
             seed: 0x10c0,
             faults: None,
+            signal_every: default_signal_every(),
         }
     }
 
     pub fn with_mem_words(mut self, words: usize) -> Self {
         self.node_mem_words = words;
+        self
+    }
+
+    /// Override the selective-signaling chain length (`1` = signal every
+    /// WQE, the pre-selective behavior).
+    pub fn with_signal_every(mut self, n: u32) -> Self {
+        self.signal_every = n;
         self
     }
 

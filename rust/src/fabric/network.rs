@@ -34,6 +34,8 @@ pub struct NodeFabric {
     ops_posted: AtomicU64,
     /// Doorbells rung from this node (one per `post` / `post_list`).
     doorbells_rung: AtomicU64,
+    /// WRITEs posted with an inline payload (one per inline WQE).
+    wqes_inlined: AtomicU64,
     /// Crash-stop flag (fault injection): once cleared the node never
     /// serves or transmits again. See [`Cluster::crash`].
     alive: AtomicBool,
@@ -51,6 +53,7 @@ impl NodeFabric {
             doorbell: (Mutex::new(0), Condvar::new()),
             ops_posted: AtomicU64::new(0),
             doorbells_rung: AtomicU64::new(0),
+            wqes_inlined: AtomicU64::new(0),
             alive: AtomicBool::new(true),
         }
     }
@@ -242,13 +245,21 @@ impl Cluster {
         let node = &self.nodes[qpid.node as usize];
         node.ops_posted.fetch_add(1, Ordering::Relaxed);
         node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
+        if wqe.inline {
+            node.wqes_inlined.fetch_add(1, Ordering::Relaxed);
+        }
         let qp = node.qp(qpid);
         if !node.is_alive() {
             // Crash-stop: nothing transmits. Signaled WRs still flush an
             // error completion so the dead node's own (simulated) threads
-            // waiting on an ack_key unblock instead of hanging.
+            // waiting on an ack_key unblock instead of hanging; failed
+            // unsignaled WRs raise the chain error for their covering
+            // signaled successor.
             if wqe.signaled {
+                qp.take_chain_error();
                 node.cq().post(Cqe::failed(wqe.wr_id, qpid));
+            } else {
+                qp.raise_chain_error();
             }
             return;
         }
@@ -257,9 +268,7 @@ impl Cluster {
                 qp.submit(wqe);
                 node.ring();
             }
-            DeliveryMode::Inline => {
-                nic::execute_inline(&self.nodes, &self.cfg, qpid.node, qpid, qp.peer, wqe)
-            }
+            DeliveryMode::Inline => nic::execute_inline(&self.nodes, &self.cfg, qpid.node, &qp, wqe),
         }
     }
 
@@ -279,10 +288,18 @@ impl Cluster {
         if !node.is_alive() {
             for wqe in list.into_wqes() {
                 if wqe.signaled {
+                    qp.take_chain_error();
                     node.cq().post(Cqe::failed(wqe.wr_id, qpid));
+                } else {
+                    qp.raise_chain_error();
                 }
             }
             return;
+        }
+        for wqe in list.wqes() {
+            if wqe.inline {
+                node.wqes_inlined.fetch_add(1, Ordering::Relaxed);
+            }
         }
         match self.cfg.delivery {
             DeliveryMode::Threaded => {
@@ -291,7 +308,7 @@ impl Cluster {
             }
             DeliveryMode::Inline => {
                 for wqe in list.into_wqes() {
-                    nic::execute_inline(&self.nodes, &self.cfg, qpid.node, qpid, qp.peer, wqe);
+                    nic::execute_inline(&self.nodes, &self.cfg, qpid.node, &qp, wqe);
                 }
             }
         }
@@ -300,6 +317,13 @@ impl Cluster {
     /// Peer a QP targets (for bookkeeping layers above).
     pub fn qp_peer(&self, qpid: QpId) -> NodeId {
         self.nodes[qpid.node as usize].qp(qpid).peer
+    }
+
+    /// Is a failed-unsignaled-WQE chain error pending on `qpid`?
+    /// (Introspection; the flag is consumed by the QP's next signaled
+    /// completion — see [`Qp::chain_error_pending`].)
+    pub fn chain_error_pending(&self, qpid: QpId) -> bool {
+        self.nodes[qpid.node as usize].qp(qpid).chain_error_pending()
     }
 
     /// Total work requests posted cluster-wide since construction
@@ -313,6 +337,19 @@ impl Cluster {
     /// Total doorbells rung cluster-wide since construction (monotonic).
     pub fn doorbells_rung(&self) -> u64 {
         self.nodes.iter().map(|n| n.doorbells_rung.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total WRITEs posted with inline payloads (monotonic). Benches and
+    /// tests diff this to prove the automatic inline pick is firing.
+    pub fn wqes_inlined(&self) -> u64 {
+        self.nodes.iter().map(|n| n.wqes_inlined.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total CQEs generated cluster-wide (monotonic). The selective-
+    /// signaling tests diff this against `ops_posted` to show the
+    /// completions a covered write chain *avoided*.
+    pub fn cqes_posted(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cq().posted()).sum()
     }
 
     // ---- fault injection: crash-stop ---------------------------------
@@ -369,7 +406,7 @@ mod tests {
     use crate::fabric::LatencyModel;
 
     fn wqe(wr_id: u64, verb: Verb) -> Wqe {
-        Wqe { wr_id, verb, signaled: true }
+        Wqe::new(wr_id, verb)
     }
 
     #[test]
@@ -467,13 +504,70 @@ mod tests {
         }
     }
 
+    /// A failed unsignaled WQE raises its QP's chain error, and the
+    /// next signaled completion on that QP is delivered as `PeerFailed`
+    /// (consuming the flag) — the selective-signaling failure contract:
+    /// a covered chain's one CQE reports the whole prefix's fate.
+    #[test]
+    fn unsignaled_failure_fails_covering_completion() {
+        use crate::fabric::cq::CqeStatus;
+        let c = Cluster::new(2, FabricConfig::inline_ideal());
+        let dst = c.node(1).register_mr(8, false);
+        let qp = c.create_qp(0, 1);
+
+        // Healthy chain first: unsignaled + covering signaled → Ok.
+        c.post(qp, wqe(1, Verb::Write { remote: dst.at(0), data: Payload::one(5) }).unsignaled());
+        assert!(!c.chain_error_pending(qp));
+        c.post(qp, wqe(2, Verb::Write { remote: dst.at(1), data: Payload::one(6) }));
+        assert!(c.node(0).cq().poll_one_blocking().is_ok());
+
+        c.crash(1);
+        // Failed unsignaled WQE: no CQE, chain error raised.
+        c.post(qp, wqe(3, Verb::Write { remote: dst.at(0), data: Payload::one(9) }).unsignaled());
+        assert!(c.node(0).cq().is_empty(), "unsignaled WQEs never generate CQEs");
+        assert!(c.chain_error_pending(qp), "failed unsignaled WQE must raise the chain error");
+        // The covering signaled completion reports the chain's failure
+        // and consumes the flag.
+        c.post(qp, wqe(4, Verb::Write { remote: dst.at(1), data: Payload::one(10) }));
+        let cqe = c.node(0).cq().poll_one_blocking();
+        assert_eq!((cqe.wr_id, cqe.status), (4, CqeStatus::PeerFailed));
+        assert!(!c.chain_error_pending(qp), "covering completion consumes the chain error");
+    }
+
+    /// CQE accounting: signaled WQEs are counted, unsignaled are not —
+    /// the counter the selective-signaling benches diff.
+    #[test]
+    fn cqe_counter_tracks_signaled_only() {
+        let c = Cluster::new(2, FabricConfig::inline_ideal());
+        let dst = c.node(1).register_mr(8, false);
+        let qp = c.create_qp(0, 1);
+        assert_eq!(c.cqes_posted(), 0);
+        for i in 0..4u64 {
+            c.post(
+                qp,
+                wqe(i, Verb::Write { remote: dst.at(i), data: Payload::one(i) }).unsignaled(),
+            );
+        }
+        assert_eq!(c.cqes_posted(), 0, "unsignaled writes generate no CQEs");
+        c.post(qp, wqe(9, Verb::ZeroLenRead));
+        c.node(0).cq().poll_one_blocking();
+        assert_eq!(c.cqes_posted(), 1);
+        // Inline accounting: single-word payloads under the default cap.
+        assert_eq!(c.wqes_inlined(), 0, "raw posts don't mark inline");
+        c.post(
+            qp,
+            Wqe::new(10, Verb::Write { remote: dst.at(0), data: Payload::one(3) }).inlined(),
+        );
+        assert_eq!(c.wqes_inlined(), 1);
+    }
+
     /// Unsignaled writes generate no CQE but still execute.
     #[test]
     fn unsignaled_write() {
         let c = Cluster::new(2, FabricConfig::inline_ideal());
         let dst = c.node(1).register_mr(4, false);
         let qp = c.create_qp(0, 1);
-        c.post(qp, Wqe { wr_id: 0, verb: Verb::Write { remote: dst.at(0), data: Payload::one(3) }, signaled: false });
+        c.post(qp, Wqe::new(0, Verb::Write { remote: dst.at(0), data: Payload::one(3) }).unsignaled());
         assert!(c.node(0).cq().is_empty());
         assert_eq!(c.node(1).arena().load(dst.at(0)), 3);
     }

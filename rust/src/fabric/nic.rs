@@ -205,6 +205,28 @@ fn verb_latency(cfg: &FabricConfig, nodes: &[Arc<NodeFabric>], wqe: &Wqe, target
     base + bw + mr_penalty
 }
 
+/// Per-WQE NIC occupancy beyond `op_overhead_ns`: the CQE DMA write
+/// (signaled WQEs only — the selective-signaling economy) plus, for
+/// WRITEs, the payload fetch (the PCIe DMA read for scatter-gather
+/// payloads, or the much cheaper `inline_ns` when the payload was copied
+/// into the WQE at post time). Charged into both the op's latency and
+/// the per-QP serialization term: these steps occupy the NIC for every
+/// WQE, so they bound pipelined throughput exactly like `op_overhead_ns`.
+fn wqe_nic_extra(lat: &super::LatencyModel, wqe: &Wqe) -> u64 {
+    let completion = if wqe.signaled { lat.completion_ns } else { 0 };
+    let fetch = match &wqe.verb {
+        Verb::Write { .. } => {
+            if wqe.inline {
+                lat.inline_ns
+            } else {
+                lat.wqe_fetch_ns
+            }
+        }
+        _ => 0,
+    };
+    completion + fetch
+}
+
 /// Flush all pending placements of one QP (in order), regardless of lag.
 /// Placements whose target crash-stopped are dropped — the data never
 /// reached the remote memory.
@@ -247,13 +269,29 @@ fn execute_arrival(
     let src = &nodes[from as usize];
     if !nodes[target as usize].is_alive() {
         // Crash-stopped peer: the verb has no effect; pending placements
-        // on this QP can never land either.
+        // on this QP can never land either. A failed **unsignaled** WQE
+        // has no CQE of its own — raise the chain error so the covering
+        // signaled completion of its chain reports the failure.
         q.placements.clear();
         if fl.wqe.signaled {
+            q.qp.take_chain_error();
             deliver_cqe(src, fx, faults, rng, Cqe::failed(fl.wqe.wr_id, qpid));
+        } else {
+            q.qp.raise_chain_error();
         }
         return;
     }
+    // A pending chain error (an earlier unsignaled WQE on this QP died)
+    // fails the next signaled completion even though this verb itself
+    // executed — the waiter must learn its covered chain broke.
+    let chain_failed = fl.wqe.signaled && q.qp.take_chain_error();
+    let completion = || {
+        if chain_failed {
+            Cqe::failed(fl.wqe.wr_id, qpid)
+        } else {
+            Cqe::ok(fl.wqe.wr_id, qpid)
+        }
+    };
     match &fl.wqe.verb {
         Verb::Write { remote, data } => {
             if cfg.validate_access {
@@ -275,7 +313,7 @@ fn execute_arrival(
                 retire_due_placements(nodes, q, now, cfg.chaotic_placement);
             }
             if fl.wqe.signaled {
-                deliver_cqe(src, fx, faults, rng, Cqe::ok(fl.wqe.wr_id, qpid));
+                deliver_cqe(src, fx, faults, rng, completion());
             }
         }
         _ => {
@@ -284,7 +322,7 @@ fn execute_arrival(
             }
             execute_effect(nodes, from, &fl.wqe, target, cfg.validate_access);
             if fl.wqe.signaled {
-                deliver_cqe(src, fx, faults, rng, Cqe::ok(fl.wqe.wr_id, qpid));
+                deliver_cqe(src, fx, faults, rng, completion());
             }
         }
     }
@@ -333,13 +371,19 @@ pub(super) fn engine_loop(
                 let qpid = QpId { node, index: idx as u32 };
                 while let Some(sub) = q.rx.try_pop() {
                     if sub.wqe.signaled {
+                        q.qp.take_chain_error();
                         me.cq().post(Cqe::failed(sub.wqe.wr_id, qpid));
+                    } else {
+                        q.qp.raise_chain_error();
                     }
                     did_work = true;
                 }
                 while let Some(fl) = q.inflight.pop_front() {
                     if fl.wqe.signaled {
+                        q.qp.take_chain_error();
                         me.cq().post(Cqe::failed(fl.wqe.wr_id, qpid));
+                    } else {
+                        q.qp.raise_chain_error();
                     }
                     did_work = true;
                 }
@@ -375,10 +419,16 @@ pub(super) fn engine_loop(
                     // MMIO cost; batch tails ride the same doorbell. This is
                     // the term that makes PostList batching measurable.
                     let db = if sub.rings_doorbell { cfg.latency.doorbell_ns } else { 0 };
+                    // Per-WQE occupancy beyond op_overhead: CQE generation
+                    // (signaled only) + payload fetch (non-inline WRITEs).
+                    // These are what selective signaling and inline
+                    // payloads buy back on the write hot path.
+                    let extra = wqe_nic_extra(&cfg.latency, &wqe);
                     // Per-QP serialization: the NIC cannot accept WQEs faster
-                    // than op_overhead_ns apart → arrival monotone per QP.
-                    let arr =
-                        (now + lat + db).max(q.last_arrival_ns + cfg.latency.op_overhead_ns + db);
+                    // than op_overhead_ns (+ per-WQE occupancy) apart →
+                    // arrival monotone per QP.
+                    let arr = (now + lat + db + extra)
+                        .max(q.last_arrival_ns + cfg.latency.op_overhead_ns + extra + db);
                     q.last_arrival_ns = arr;
                     q.inflight.push_back(InFlight { due_ns: arr, wqe });
                     did_work = true;
@@ -487,14 +537,18 @@ pub(super) fn execute_inline(
     nodes: &[Arc<NodeFabric>],
     cfg: &FabricConfig,
     from: NodeId,
-    qpid: QpId,
-    peer: NodeId,
+    qp: &super::qp::Qp,
     wqe: Wqe,
 ) {
+    let qpid = qp.id;
+    let peer = qp.peer;
     let src = &nodes[from as usize];
     if !nodes[peer as usize].is_alive() {
         if wqe.signaled {
+            qp.take_chain_error();
             src.cq().post(Cqe::failed(wqe.wr_id, qpid));
+        } else {
+            qp.raise_chain_error();
         }
         return;
     }
@@ -510,6 +564,12 @@ pub(super) fn execute_inline(
         _ => execute_effect(nodes, from, &wqe, peer, cfg.validate_access),
     }
     if wqe.signaled {
-        src.cq().post(Cqe::ok(wqe.wr_id, qpid));
+        // An earlier unsignaled WQE of this chain failed: the covering
+        // completion carries the failure even though this verb executed.
+        if qp.take_chain_error() {
+            src.cq().post(Cqe::failed(wqe.wr_id, qpid));
+        } else {
+            src.cq().post(Cqe::ok(wqe.wr_id, qpid));
+        }
     }
 }

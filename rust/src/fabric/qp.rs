@@ -50,11 +50,25 @@ pub struct Qp {
     /// penalty. Mirrors the IBV_QPS_ERR → reset → RTS cycle without the
     /// state machine.
     error: AtomicBool,
+    /// Selective-signaling chain error: set when an **unsignaled** WQE
+    /// on this QP fails (its target crash-stopped), consumed by the next
+    /// signaled completion, which is then delivered as `PeerFailed` even
+    /// if its own verb would have succeeded. This is the software
+    /// analogue of a real QP transitioning to the error state: an
+    /// unsignaled WR can never report its own failure, so the covering
+    /// signaled WR of its chain must.
+    chain_error: AtomicBool,
 }
 
 impl Qp {
     pub fn new(id: QpId, peer: NodeId) -> Self {
-        Qp { id, peer, subq: Arc::new(Queue::new()), error: AtomicBool::new(false) }
+        Qp {
+            id,
+            peer,
+            subq: Arc::new(Queue::new()),
+            error: AtomicBool::new(false),
+            chain_error: AtomicBool::new(false),
+        }
     }
 
     /// Is this QP currently in the (transient) error state?
@@ -66,6 +80,24 @@ impl Qp {
     /// Engine-side: move the QP into or out of the error state.
     pub(super) fn set_error(&self, err: bool) {
         self.error.store(err, Ordering::Relaxed);
+    }
+
+    /// An unsignaled WQE on this QP failed: remember it so the next
+    /// signaled completion reports the chain's failure.
+    pub(super) fn raise_chain_error(&self) {
+        self.chain_error.store(true, Ordering::Release);
+    }
+
+    /// Consume the chain-error flag (called when generating a CQE for a
+    /// signaled WQE on this QP).
+    pub(super) fn take_chain_error(&self) -> bool {
+        self.chain_error.swap(false, Ordering::AcqRel)
+    }
+
+    /// Is a failed-unsignaled-WQE chain error pending? (Introspection
+    /// for tests; the flag is consumed by the next signaled CQE.)
+    pub fn chain_error_pending(&self) -> bool {
+        self.chain_error.load(Ordering::Acquire)
     }
 
     /// Enqueue a single work request (threaded mode; the NIC engine
@@ -106,11 +138,7 @@ mod tests {
     fn fifo_submission() {
         let qp = Qp::new(QpId { node: 0, index: 0 }, 1);
         for i in 0..4 {
-            qp.submit(Wqe {
-                wr_id: i,
-                verb: Verb::Write { remote: 0, data: Payload::one(i) },
-                signaled: true,
-            });
+            qp.submit(Wqe::new(i, Verb::Write { remote: 0, data: Payload::one(i) }));
         }
         assert_eq!(qp.pending(), 4);
         let q = qp.submission_queue();
@@ -125,11 +153,7 @@ mod tests {
     fn batched_submission_single_doorbell() {
         let qp = Qp::new(QpId { node: 0, index: 0 }, 1);
         let wqes: Vec<Wqe> = (0..5)
-            .map(|i| Wqe {
-                wr_id: i,
-                verb: Verb::Write { remote: 0, data: Payload::one(i) },
-                signaled: true,
-            })
+            .map(|i| Wqe::new(i, Verb::Write { remote: 0, data: Payload::one(i) }))
             .collect();
         qp.submit_list(wqes);
         assert_eq!(qp.pending(), 5);

@@ -101,8 +101,40 @@ pub struct Wqe {
     pub verb: Verb,
     /// If false, no CQE is generated on completion (unsignaled work
     /// request — used for fire-and-forget writes that a later fence
-    /// covers).
+    /// covers, and by the selective-signaling write chains where the
+    /// chain's last *signaled* WQE's CQE retires the whole prefix; a
+    /// failed unsignaled WQE raises its QP's chain-error so the covering
+    /// completion reports the failure). The NIC engine charges no
+    /// `completion_ns` for unsignaled WQEs.
     pub signaled: bool,
+    /// Inline payload (WRITEs only): the payload was copied into the
+    /// WQE at post time, so the NIC skips the DMA read that fetches a
+    /// scatter-gather payload from registered memory — the engine
+    /// charges `LatencyModel::inline_ns` instead of `wqe_fetch_ns`.
+    /// Only legal for writes of at most `LatencyModel::max_inline_words`
+    /// (callers decide; `ThreadCtx::write`/`write_many` pick it
+    /// automatically).
+    pub inline: bool,
+}
+
+impl Wqe {
+    /// A signaled, non-inline work request (the default shape).
+    pub fn new(wr_id: u64, verb: Verb) -> Wqe {
+        Wqe { wr_id, verb, signaled: true, inline: false }
+    }
+
+    /// Mark unsignaled: no CQE on completion.
+    pub fn unsignaled(mut self) -> Wqe {
+        self.signaled = false;
+        self
+    }
+
+    /// Mark the payload inline (WRITEs of ≤ `max_inline_words` only).
+    pub fn inlined(mut self) -> Wqe {
+        debug_assert!(matches!(self.verb, Verb::Write { .. }), "only WRITEs can be inline");
+        self.inline = true;
+        self
+    }
 }
 
 /// An ordered batch of work requests destined for one QP under a
@@ -145,6 +177,11 @@ impl PostList {
     /// Consume the list in submission order.
     pub fn into_wqes(self) -> Vec<Wqe> {
         self.wqes
+    }
+
+    /// Borrow the entries in submission order.
+    pub fn wqes(&self) -> &[Wqe] {
+        &self.wqes
     }
 }
 
@@ -190,13 +227,13 @@ mod tests {
         let mut list = PostList::with_capacity(3);
         assert!(list.is_empty());
         for i in 0..3 {
-            list.push(Wqe { wr_id: i, verb: Verb::ZeroLenRead, signaled: true });
+            list.push(Wqe::new(i, Verb::ZeroLenRead));
         }
         assert_eq!(list.len(), 3);
         let ids: Vec<u64> = list.into_wqes().into_iter().map(|w| w.wr_id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
         let collected: PostList = (0..4)
-            .map(|i| Wqe { wr_id: i, verb: Verb::ZeroLenRead, signaled: false })
+            .map(|i| Wqe::new(i, Verb::ZeroLenRead).unsignaled())
             .collect();
         assert_eq!(collected.len(), 4);
     }

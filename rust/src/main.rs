@@ -12,9 +12,15 @@
 //! loco micro                                      design ablations
 //! ```
 //!
+//! Every subcommand also honors the write-path knobs
+//! `--signal-every N` (selective-signaling chain length; 1 = every WQE
+//! signaled) and `--max-inline-words W` (inline-payload threshold;
+//! 0 = never inline) — the PR-5 hot-write-path economies.
+//!
 //! Environment: `LOCO_FULL=1` for paper-calibrated latencies,
 //! `LOCO_BENCH_SECS` / `LOCO_BENCH_RUNS` to override the measurement
-//! window, `LOCO_ARTIFACTS` for the AOT artifact directory.
+//! window, `LOCO_SIGNAL_EVERY` for the selective-signaling default,
+//! `LOCO_ARTIFACTS` for the AOT artifact directory.
 
 use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
 use loco::metrics::Table;
@@ -35,7 +41,21 @@ fn arg_flag(args: &[String], flag: &str) -> bool {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let scale = Scale::from_env();
+    let mut scale = Scale::from_env();
+    // Write-path knobs (PR-5): --signal-every flows through the
+    // environment (FabricConfig reads it at construction, wherever the
+    // bench builds its clusters); --max-inline-words edits the latency
+    // model directly.
+    if args.iter().any(|a| a == "--signal-every") {
+        std::env::set_var("LOCO_SIGNAL_EVERY", arg_u64(&args, "--signal-every", 16).to_string());
+    }
+    if args.iter().any(|a| a == "--max-inline-words") {
+        scale.latency.max_inline_words = arg_u64(
+            &args,
+            "--max-inline-words",
+            scale.latency.max_inline_words as u64,
+        ) as usize;
+    }
     match cmd {
         "barrier" => {
             let nodes = arg_u64(&args, "--nodes", 4) as usize;
@@ -167,6 +187,9 @@ fn main() {
             for (l, v) in micro::multi_get_batch_vs_scalar(lat.clone(), 16, 60) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
+            for (l, v) in micro::update_signal_inline(lat.clone(), 32, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
             for (l, v) in micro::fault_hook_overhead(lat.clone(), 16, 60) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
@@ -182,6 +205,7 @@ fn main() {
             println!(
                 "loco — Library of Channel Objects (paper reproduction)\n\
                  usage: loco <barrier|fig4|fig5|fig7|micro> [flags]\n\
+                 write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
                  see `examples/` for the end-to-end drivers"
             );
         }

@@ -82,11 +82,23 @@ pub fn chaos_plan(seed: u64) -> FaultPlan {
 
 /// The standard chaos fabric: threaded `fast_sim` with placement lag,
 /// chaotic word-by-word placement, and the [`chaos_plan`] for `seed`.
+///
+/// The seed also picks the **selective-signaling chain length** (PR-5):
+/// three quarters of the matrix runs with covered write chains on
+/// (lengths 4 / 16 / 64), so duplicated, reordered, and error CQEs are
+/// exercised *as covering completions of unsignaled prefixes* — the
+/// remaining quarter keeps the signal-everything legacy shape.
 pub fn chaos_fabric(seed: u64) -> FabricConfig {
     let mut lat = LatencyModel::fast_sim();
     lat.placement_lag_ns = 3000;
     let mut cfg = FabricConfig::threaded(lat).chaotic().with_faults(chaos_plan(seed));
     cfg.seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+    cfg.signal_every = match seed % 4 {
+        0 => 1, // legacy: every WQE signaled
+        1 => 4,
+        2 => 16,
+        _ => 64,
+    };
     cfg
 }
 

@@ -26,7 +26,7 @@ fn now(clock: &std::time::Instant) -> u64 {
 
 #[test]
 fn kvstore_concurrent_history_is_linearizable() {
-    run_history(0, 1);
+    run_history(0, 1, 1);
 }
 
 /// Same history check over the locality tier: sharded seqlock index +
@@ -35,7 +35,7 @@ fn kvstore_concurrent_history_is_linearizable() {
 /// node's cache dropped the key — see docs/ARCHITECTURE.md).
 #[test]
 fn kvstore_concurrent_history_is_linearizable_with_cache() {
-    run_history(4096, 1);
+    run_history(4096, 1, 1);
 }
 
 /// The relocation satellite: variable-size values over an 8-word slab
@@ -46,10 +46,21 @@ fn kvstore_concurrent_history_is_linearizable_with_cache() {
 /// relocated generations also exercise the invalidation story.
 #[test]
 fn kvstore_history_linearizable_across_class_relocations() {
-    run_history(8192, 8);
+    run_history(8192, 8, 1);
 }
 
-fn run_history(read_cache_bytes: usize, max_words: usize) {
+/// The PR-5 coalescing satellite: **two threads per node** so
+/// same-node concurrent updates constantly merge their `OP_INVAL`
+/// broadcasts through the group-commit coalescer (one snapshot, one
+/// union ack wait, several riders), with the read cache on — and the
+/// full history must still linearize: every update's invalidation is
+/// still applied on all peers before that update returns.
+#[test]
+fn kvstore_history_linearizable_with_coalesced_invals() {
+    run_history(4096, 1, 2);
+}
+
+fn run_history(read_cache_bytes: usize, max_words: usize, threads_per_node: usize) {
     let nodes = 3;
     let keys = 8u64;
     let ops_per_thread = 120u64;
@@ -68,18 +79,16 @@ fn run_history(read_cache_bytes: usize, max_words: usize) {
     let clock = Arc::new(std::time::Instant::now());
     let uid = Arc::new(AtomicU64::new(1));
 
-    let handles: Vec<_> = mgrs
-        .iter()
-        .zip(&kvs)
-        .enumerate()
-        .map(|(i, (m, kv))| {
-            let m = m.clone();
-            let kv = kv.clone();
+    let handles: Vec<_> = (0..nodes)
+        .flat_map(|ni| (0..threads_per_node).map(move |t| (ni, t)))
+        .map(|(ni, t)| {
+            let m = mgrs[ni].clone();
+            let kv = kvs[ni].clone();
             let clock = clock.clone();
             let uid = uid.clone();
             std::thread::spawn(move || {
                 let ctx = m.ctx();
-                let mut rng = Rng::seeded(0xC0FFEE + i as u64);
+                let mut rng = Rng::seeded(0xC0FFEE + (ni * 31 + t) as u64);
                 let mut events = Vec::new();
                 // Value lengths flip between the smallest and largest
                 // class (plus everything between), so in-place rewrites,

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Perf-regression guard over the committed BENCH_*.json baselines.
+
+Compares a freshly built bench export against the committed baseline
+and fails (exit 1) when any **pinned bar** regresses by more than the
+tolerance (default 10 %).
+
+Pinned bars are *ratios between two rows of the same file* — e.g.
+"multi_get batch=16 over the scalar loop" — because ratios are what the
+repo's acceptance tests pin and they transfer across machines, while
+absolute Kops/s on a shared CI runner do not. A pinned bar regresses
+when   fresh_ratio < (1 - tolerance) * baseline_ratio.
+
+Baselines carry provenance metadata (see `BenchJson` in
+rust/src/bench/mod.rs). A baseline whose meta.provenance is not
+"measured" (e.g. the hand-seeded "estimated" baseline committed before
+the first toolchain-equipped refresh) is not comparable: the guard
+prints a notice and exits 0. Run scripts/bench_refresh.sh and commit
+the result to arm the guard.
+
+Usage:
+    bench_guard.py --baseline BENCH_micro.json --fresh fresh/BENCH_micro.json
+                   [--tolerance 0.10]
+"""
+
+import argparse
+import json
+import sys
+
+# (name, bench, numerator-label-prefix, denominator-label-prefix).
+# Labels are matched by prefix because several carry run-dependent
+# suffixes (hit rates, cqe/op counters).
+PINNED_BARS = [
+    (
+        "PR-1: batched multi_get over the scalar loop",
+        "micro_batched_pipeline",
+        "multi_get batch=16",
+        "scalar get loop ×16",
+    ),
+    (
+        "PR-2: zipfian cached get over uncached",
+        "micro_locality_tier",
+        "zipfian get, cache on",
+        "zipfian get, cache off",
+    ),
+    (
+        "PR-3: batched multi_get with inert fault hooks",
+        "micro_fault_hooks",
+        "multi_get batch=16, faults: inert plan",
+        "scalar get loop ×16, faults: inert plan",
+    ),
+    (
+        "PR-4: class-1 fast path through the 8-class slab",
+        "micro_slab_class1",
+        "multi_get batch=16, 128-word classes",
+        "scalar get loop ×16, 128-word classes",
+    ),
+    (
+        "PR-5: selective+inline multi_put over the PR-4 write path",
+        "micro_update_write_path",
+        "multi_put batch=32, selective+inline",
+        "multi_put batch=32, signal-all no-inline (PR-4)",
+    ),
+    # BENCH_fig4.json
+    (
+        "fig4: LOCO over OpenMPI on 4-node transactional locking",
+        "fig4_txn",
+        "4 nodes LOCO",
+        "4 nodes OpenMPI",
+    ),
+    # BENCH_fig5.json
+    (
+        "fig5: fully-economized write path over the PR-4 baseline (YCSB-A)",
+        "fig5_write_ablation",
+        "LOCO ycsb-a +coalesced invalidations",
+        "LOCO ycsb-a baseline",
+    ),
+    (
+        "fig5: zipfian cached reads over uncached",
+        "fig5_cache_ablation",
+        "LOCO zipfian cache=on",
+        "LOCO zipfian cache=off",
+    ),
+]
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def find(doc, bench, label_prefix):
+    for row in doc.get("rows", []):
+        if row.get("bench") == bench and row.get("label", "").startswith(label_prefix):
+            return float(row["value"])
+    return None
+
+
+def ratio(doc, bench, num, den):
+    n, d = find(doc, bench, num), find(doc, bench, den)
+    if n is None or d is None or d <= 0.0:
+        return None
+    return n / d
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True, help="freshly built BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression of a pinned bar (default 0.10)")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+
+    provenance = baseline.get("meta", {}).get("provenance", "unknown")
+    if provenance != "measured":
+        print(f"bench_guard: baseline {args.baseline} has provenance "
+              f"'{provenance}' — not comparable; run scripts/bench_refresh.sh "
+              f"and commit the result to arm the guard. Skipping.")
+        return 0
+
+    failures = []
+    checked = 0
+    for name, bench, num, den in PINNED_BARS:
+        base = ratio(baseline, bench, num, den)
+        cur = ratio(fresh, bench, num, den)
+        if base is None:
+            print(f"bench_guard: [{name}] absent from baseline — skipping")
+            continue
+        if cur is None:
+            failures.append(f"[{name}] present in baseline ({base:.2f}×) but "
+                            f"missing from the fresh export — a pinned bar was dropped")
+            continue
+        checked += 1
+        floor = (1.0 - args.tolerance) * base
+        status = "OK " if cur >= floor else "FAIL"
+        print(f"bench_guard: {status} [{name}] fresh {cur:.2f}× vs baseline "
+              f"{base:.2f}× (floor {floor:.2f}×)")
+        if cur < floor:
+            failures.append(f"[{name}] regressed: {cur:.2f}× < "
+                            f"{args.tolerance:.0%}-floor {floor:.2f}× of baseline {base:.2f}×")
+
+    if failures:
+        print("\nbench_guard: PINNED BAR REGRESSION")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"bench_guard: {checked} pinned bar(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Regenerate the committed perf-trajectory baselines — BENCH_micro.json,
+# BENCH_fig4.json, BENCH_fig5.json at the repo root — deterministically
+# on the fast_sim latency model (LOCO_FULL is ignored on purpose: the
+# baselines track *ratios between configurations*, and fast_sim
+# preserves every ratio while finishing in minutes).
+#
+# Run from anywhere inside the repo; commit the refreshed files. CI's
+# bench job rebuilds fresh copies of the same files and fails when any
+# pinned bar regresses >10 % against this committed baseline
+# (scripts/bench_guard.py).
+#
+# Short measurement windows: the trajectory tracks throughput-per-config
+# PR over PR, not absolute numbers. Override with LOCO_BENCH_SECS /
+# LOCO_BENCH_RUNS for a higher-fidelity refresh.
+set -euo pipefail
+cd "$(git -C "$(dirname "$0")" rev-parse --show-toplevel)"
+
+export LOCO_BENCH_SECS="${LOCO_BENCH_SECS:-0.2}"
+export LOCO_BENCH_RUNS="${LOCO_BENCH_RUNS:-1}"
+unset LOCO_FULL
+
+LOCO_BENCH_JSON=BENCH_fig5.json cargo bench --bench fig5_kvstore
+LOCO_BENCH_JSON=BENCH_micro.json cargo bench --bench micro_channels
+LOCO_BENCH_JSON=BENCH_fig4.json cargo bench --bench fig4_locking
+
+echo "refreshed: BENCH_micro.json BENCH_fig4.json BENCH_fig5.json (provenance: measured)"
