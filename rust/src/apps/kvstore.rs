@@ -465,15 +465,70 @@ impl KvStore {
             tracker_thread: Mutex::new(None),
         });
 
-        // Dedicated tracker thread (§6): receives peers' tracker rings,
-        // applies index updates, then acknowledges. It holds only
-        // KvShared and a Weak<KvStore> (upgraded transiently for crash
-        // recovery) so Drop/shutdown can run.
+        // Dedicated tracker (§6): receives peers' tracker rings, applies
+        // index updates, then acknowledges. It holds only KvShared and a
+        // Weak<KvStore> (upgraded transiently for crash recovery) so
+        // Drop/shutdown can run. Under the deterministic simulator the
+        // tracker is a scheduler *service* (stepped non-blockingly by
+        // the single-threaded executor) instead of a thread.
         let mgr2 = mgr.clone();
-        let name2 = name.to_string();
         let shared2 = shared;
         let weak = Arc::downgrade(&kv);
         let words = kv.cfg.tracker_words;
+        if mgr.cluster().config().delivery == crate::fabric::DeliveryMode::Sim {
+            let ctx = mgr.ctx();
+            let mut rxs: Vec<(NodeId, RingReceiver)> = (0..n as NodeId)
+                .filter(|&p| p != me)
+                .map(|p| {
+                    let mut rx =
+                        RingReceiver::new(mgr, &sub_name(name, &format!("trk{p}")), words);
+                    rx.set_manual_ack();
+                    (p, rx)
+                })
+                .collect();
+            let mut known_dead: u64 = 0;
+            crate::sim::register_service(
+                format!("kv-tracker-{me}"),
+                Box::new(move || {
+                    if shared2.shutdown.load(Ordering::Relaxed) {
+                        return false;
+                    }
+                    if !shared2.tracker_ready.load(Ordering::Acquire) {
+                        // Setup phase: probe readiness without blocking —
+                        // the manager's ctrl service completes the
+                        // join/connect exchange between our steps.
+                        if rxs.iter().all(|(_, rx)| rx.is_ready()) {
+                            shared2.tracker_ready.store(true, Ordering::Release);
+                            return true;
+                        }
+                        return false;
+                    }
+                    let mut did = false;
+                    for (from, rx) in &mut rxs {
+                        while let Some(msg) = rx.try_recv(&ctx) {
+                            apply_tracker(&shared2, me, *from, &msg, known_dead);
+                            rx.ack_now(&ctx); // apply THEN acknowledge (§6)
+                            did = true;
+                        }
+                    }
+                    let dead_mask = mgr2.membership().dead_mask();
+                    if dead_mask != known_dead {
+                        for node in 0..n as NodeId {
+                            if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
+                                if let Some(kv) = weak.upgrade() {
+                                    kv.on_peer_dead(&ctx, node);
+                                }
+                            }
+                        }
+                        known_dead = dead_mask;
+                        did = true;
+                    }
+                    did
+                }),
+            );
+            return kv;
+        }
+        let name2 = name.to_string();
         let handle = std::thread::Builder::new()
             .name(format!("kv-tracker-{me}"))
             .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2, weak))
@@ -488,10 +543,11 @@ impl KvStore {
             l.wait_ready(timeout);
         }
         self.tracker_tx.lock().unwrap().wait_ready(timeout);
-        let deadline = std::time::Instant::now() + timeout;
+        let mut bo = Backoff::new();
+        let mut budget = crate::util::WaitBudget::wedge(timeout);
         while !self.shared.tracker_ready.load(Ordering::Acquire) {
-            assert!(std::time::Instant::now() < deadline, "tracker thread not ready");
-            std::thread::yield_now();
+            assert!(!budget.expired(), "tracker not ready");
+            bo.snooze();
         }
     }
 
@@ -629,7 +685,7 @@ impl KvStore {
         old: &IndexEntry,
     ) -> crate::Result<Option<IndexEntry>> {
         let mut bo = Backoff::new();
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         loop {
             let cur = self.shared.index.get(key);
             if cur != Some(*old) {
@@ -641,7 +697,7 @@ impl KvStore {
                 ));
             }
             assert!(
-                std::time::Instant::now() < deadline,
+                !budget.expired(),
                 "key {key}: home node {} crashed and no re-home/purge arrived \
                  within 30 s (replicate={})",
                 old.node,
@@ -1003,6 +1059,13 @@ impl KvStore {
             return;
         }
         cache.invalidate_many(keys.iter().copied());
+        if cfg!(loco_mutant) {
+            // Intentional bug for mutation-smoke runs (`--cfg
+            // loco_mutant`): skip the peer broadcast, leaving remote
+            // caches serving the stale pre-update value. The model
+            // harness must find and shrink this.
+            return;
+        }
         if !self.cfg.coalesce_invals {
             // Pre-coalescing baseline: one broadcast round (send + full
             // ack wait) per chunk, per caller.
@@ -1038,6 +1101,13 @@ impl KvStore {
                 st.done_batch = id + 1;
                 st.in_flight = false;
                 self.inval.cv.notify_all();
+            } else if crate::sim::active() {
+                // Single-threaded simulation: no other thread will ever
+                // signal the condvar — release the mutex and pump the
+                // scheduler instead.
+                drop(st);
+                Backoff::new().snooze();
+                st = self.inval.st.lock().unwrap();
             } else {
                 st = self.inval.cv.wait(st).unwrap();
             }
@@ -1626,7 +1696,11 @@ impl KvStore {
     /// surviving index agrees on the new homes.
     fn rehome_from_backup(&self, ctx: &ThreadCtx, dead: NodeId) {
         let backup = self.backup_hosted.expect("replicate enabled on the backup node");
-        let entries = self.shared.index.entries_homed_on(dead);
+        let mut entries = self.shared.index.entries_homed_on(dead);
+        // Shard-scan order depends on insertion history; sort so the
+        // re-home broadcast sequence (and thus the sim event trace) is a
+        // pure function of the logical state.
+        entries.sort_unstable_by_key(|(k, _)| *k);
         let mut rehomed = 0u64;
         let mut dropped = 0u64;
         for (key, e) in entries {

@@ -83,6 +83,11 @@ impl AtomicVar {
         self.ep.wait_ready(timeout);
     }
 
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.ep.is_ready()
+    }
+
     pub fn host(&self) -> NodeId {
         self.host
     }

@@ -76,12 +76,22 @@ impl OwnedVar {
         let ep = Endpoint::new(name, me, mgr.num_nodes(), Expect::AllPeers);
         let own = if me == owner {
             let r = mgr.pool().alloc_named(&region_name(name, "own"), slot, device);
+            if words > 1 {
+                // Seed the checksum of the all-zero initial value: a
+                // never-pushed row must still validate (readers
+                // checksum-retry forever on a slot whose stored checksum
+                // can never match its contents).
+                mgr.cluster().node(me).arena().store(r.at(words as u64), fnv64(&vec![0u64; words]));
+            }
             ep.add_local_region("own", r);
             Some(r)
         } else {
             None
         };
         let cache = mgr.pool().alloc_named(&region_name(name, "cache"), slot, false);
+        if words > 1 {
+            mgr.cluster().node(me).arena().store(cache.at(words as u64), fnv64(&vec![0u64; words]));
+        }
         ep.add_local_region("cache", cache);
         mgr.register_channel(ep.clone());
         OwnedVar { ep, me, owner, words, slot, own, cache, num_nodes: mgr.num_nodes() }
@@ -89,6 +99,11 @@ impl OwnedVar {
 
     pub fn wait_ready(&self, timeout: Duration) {
         self.ep.wait_ready(timeout);
+    }
+
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.ep.is_ready()
     }
 
     pub fn owner(&self) -> NodeId {

@@ -109,6 +109,12 @@ impl RingSender {
         self.ack.wait_ready(timeout);
     }
 
+    /// Non-blocking readiness probe (used by simulator services, which
+    /// must never block the single scheduler thread).
+    pub fn is_ready(&self) -> bool {
+        self.ep.is_ready() && self.ack.is_ready()
+    }
+
     fn receivers(&self) -> impl Iterator<Item = NodeId> + '_ {
         (0..self.num_nodes as NodeId).filter(move |&p| p != self.me)
     }
@@ -173,7 +179,7 @@ impl RingSender {
 
     fn wait_space(&self, ctx: &ThreadCtx, need: u64) {
         let mut bo = Backoff::new();
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         loop {
             let consumed = match self.min_consumed(ctx) {
                 Some(c) => c,
@@ -187,7 +193,7 @@ impl RingSender {
                 return; // we crash-stopped: sends are no-ops anyway
             }
             assert!(
-                std::time::Instant::now() < deadline,
+                !budget.expired(),
                 "ring sender wedged (30 s) waiting for {need} words of space"
             );
             bo.snooze();
@@ -214,7 +220,7 @@ impl RingSender {
     /// gives up (its writes were never transmitted).
     pub fn wait_all_acked(&self, ctx: &ThreadCtx, upto: u64) {
         let mut bo = Backoff::new();
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         loop {
             match self.min_consumed(ctx) {
                 None => return,
@@ -225,7 +231,7 @@ impl RingSender {
                 return;
             }
             assert!(
-                std::time::Instant::now() < deadline,
+                !budget.expired(),
                 "ring broadcast wedged (30 s) waiting for acks up to position {upto}"
             );
             bo.snooze();
@@ -292,6 +298,11 @@ impl RingReceiver {
     pub fn wait_ready(&self, timeout: Duration) {
         self.ep.wait_ready(timeout);
         self.ack.wait_ready(timeout);
+    }
+
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.ep.is_ready() && self.ack.is_ready()
     }
 
     /// Non-blocking receive of the next broadcast message.

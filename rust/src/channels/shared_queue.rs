@@ -140,13 +140,13 @@ impl SharedQueue {
         let slot = t % self.slots;
         let (region, off) = self.slot_region(slot);
         // Wait for the slot to be free for round t.
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         let mut bo = Backoff::new();
         loop {
             if ctx.try_read(region, off, 1)?[0] == t {
                 break;
             }
-            if std::time::Instant::now() > deadline {
+            if budget.expired() {
                 return Err(crate::Error::Timeout(format!(
                     "shared_queue push: slot {slot} never freed"
                 )));
@@ -169,7 +169,7 @@ impl SharedQueue {
         let h = self.head.try_fetch_add(ctx, 1)?;
         let slot = h % self.slots;
         let (region, off) = self.slot_region(slot);
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         let mut bo = Backoff::new();
         loop {
             // One read covers [seq][payload]; the payload was placed
@@ -180,7 +180,7 @@ impl SharedQueue {
                 ctx.write1(region, off, h + self.slots).wait_result()?;
                 return Ok(words[1..].to_vec());
             }
-            if std::time::Instant::now() > deadline {
+            if budget.expired() {
                 return Err(crate::Error::Timeout(format!(
                     "shared_queue pop: slot {slot} never published"
                 )));

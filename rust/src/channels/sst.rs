@@ -69,6 +69,11 @@ impl Sst {
         }
     }
 
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.rows.iter().all(|r| r.is_ready())
+    }
+
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }

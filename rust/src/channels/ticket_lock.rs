@@ -108,6 +108,11 @@ impl TicketLock {
         self.now_serving.wait_ready(timeout);
     }
 
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.next_ticket.is_ready() && self.now_serving.is_ready()
+    }
+
     /// Acquire the lock (blocking). Returns true if acquisition used the
     /// local-handover fast path (for tests/metrics).
     pub fn lock(&self, ctx: &ThreadCtx) -> bool {
@@ -199,11 +204,14 @@ impl TicketLock {
             self.next_ticket.fetch_add(ctx, 1)
         };
         let mut bo = Backoff::new();
-        let mut death_seen_at: Option<std::time::Instant> = None;
+        // Grace budget for a presumed-dead ticket holder: wall-clock in
+        // threaded mode, a fixed pump count under the simulator (where
+        // wall time never advances and elapsed() would never expire).
+        let mut death_grace: Option<crate::util::WaitBudget> = None;
         // Even the unchecked spin is bounded (spin-loop-hinted backoff
         // plus a hard deadline): a wedged lock panics with a diagnosis
         // instead of silently pinning a core forever.
-        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let mut deadline = crate::util::WaitBudget::wedge(Duration::from_secs(30));
         loop {
             let serving = if checked {
                 match self.now_serving.try_load(ctx) {
@@ -224,8 +232,10 @@ impl TicketLock {
                 // holder whose unlock never transmitted; the host being
                 // alive keeps the spin "healthy" forever. Give a live
                 // holder a grace period, then declare the lock wedged.
-                let since = *death_seen_at.get_or_insert_with(std::time::Instant::now);
-                if since.elapsed() > Self::DEAD_HOLDER_GRACE {
+                let grace = death_grace.get_or_insert_with(|| {
+                    crate::util::WaitBudget::grace(Self::DEAD_HOLDER_GRACE, 256)
+                });
+                if grace.expired() {
                     self.unwind_local();
                     return Err(crate::Error::PeerFailed(format!(
                         "ticket {my_ticket} not served within the post-crash grace \
@@ -234,7 +244,7 @@ impl TicketLock {
                 }
             }
             assert!(
-                std::time::Instant::now() < deadline,
+                !deadline.expired(),
                 "ticket lock wait wedged (30 s): ticket {my_ticket}, serving {serving}"
             );
             bo.snooze();

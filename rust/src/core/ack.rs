@@ -281,13 +281,16 @@ impl AckKey {
         self.parts.iter().any(|(w, m)| w.err.load(Ordering::Acquire) & m != 0)
     }
 
-    /// Spin (with backoff) until complete.
+    /// Spin (with backoff) until complete. The wedge bailout is
+    /// clock-aware: 30 s of wall time under threads, a zero-progress
+    /// scheduler streak under the deterministic simulator (where
+    /// virtual "minutes" may elapse legitimately).
     pub fn wait(&self) {
         let mut bo = Backoff::new();
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(std::time::Duration::from_secs(30));
         while !self.query() {
             bo.snooze();
-            if std::time::Instant::now() > deadline {
+            if budget.expired() {
                 panic!("ack_key wait timed out (30 s): outstanding ops never completed");
             }
         }

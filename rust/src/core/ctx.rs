@@ -310,15 +310,19 @@ impl ThreadCtx {
         n
     }
 
-    /// Wait for a key, assisting with CQ draining while spinning.
+    /// Wait for a key, assisting with CQ draining while spinning. The
+    /// wedge bailout routes through [`crate::util::WaitBudget`]: 30 s of
+    /// wall clock under threads, a zero-progress scheduler streak under
+    /// the deterministic simulator — virtual time sailing past "30 s"
+    /// must not trip it.
     pub fn wait(&self, key: &AckKey) {
         let mut bo = crate::util::Backoff::new();
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        let mut budget = crate::util::WaitBudget::wedge(std::time::Duration::from_secs(30));
         while !key.query() {
             if self.drain_cq() == 0 {
                 bo.snooze();
                 assert!(
-                    std::time::Instant::now() < deadline,
+                    !budget.expired(),
                     "ctx wait timed out (30 s): outstanding ops never completed"
                 );
             } else {

@@ -202,9 +202,28 @@ impl Endpoint {
         }
     }
 
-    /// Block until `required()` peers have connected.
+    /// Block until `required()` peers have connected. Under the
+    /// deterministic simulator the condvar never fires from another
+    /// thread, so the wait pumps the scheduler (join/connect handling is
+    /// a manager service) and uses a progress-based wedge budget instead
+    /// of the wall deadline.
     pub fn wait_ready(&self, timeout: Duration) {
         let need = self.required();
+        if crate::sim::active() {
+            let mut bo = crate::util::Backoff::new();
+            let mut budget = crate::util::WaitBudget::wedge(timeout);
+            while !self.is_ready() {
+                bo.snooze();
+                if budget.expired() {
+                    let connected = self.state.lock().unwrap().connected.len();
+                    panic!(
+                        "channel {}: setup timed out ({connected}/{need} peers connected)",
+                        self.name
+                    );
+                }
+            }
+            return;
+        }
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         while st.connected.len() < need {

@@ -98,10 +98,17 @@ pub struct Manager {
 }
 
 impl Manager {
-    /// Construct the manager for node `me` and start its service threads.
+    /// Construct the manager for node `me` and start its service threads
+    /// (or, on a [`DeliveryMode::Sim`](crate::fabric::DeliveryMode)
+    /// cluster, register the equivalent cooperative services with the
+    /// installed [`SimExecutor`](crate::sim::SimExecutor)).
     pub fn new(cluster: Arc<Cluster>, me: NodeId) -> Arc<Manager> {
         let node = cluster.node(me).clone();
-        let pool = Arc::new(MemPool::new(node, HUGE_PAGE_WORDS));
+        // Cap the pool's huge page to the node's arena so many-node sim
+        // clusters can shrink per-node memory without the first pool
+        // page alone blowing the arena.
+        let page_words = HUGE_PAGE_WORDS.min((cluster.config().node_mem_words / 2).max(1));
+        let pool = Arc::new(MemPool::new(node, page_words));
         debug_assert!(cluster.num_nodes() <= 64, "membership mask holds at most 64 nodes");
         let shared = Arc::new(Shared {
             cluster: cluster.clone(),
@@ -119,6 +126,42 @@ impl Manager {
             threads: Mutex::new(Vec::new()),
         });
 
+        if cluster.config().delivery == crate::fabric::DeliveryMode::Sim {
+            // One cooperative service per thread the manager would have
+            // spawned: a CQ-poll + membership slice and a ctrl-message
+            // slice. Each does one non-blocking batch per scheduler pump
+            // and reports honestly whether it did anything.
+            let sh = shared.clone();
+            crate::sim::register_service(format!("mgr-poll-{me}"), Box::new(move || {
+                if sh.shutdown.load(Ordering::Relaxed) {
+                    return false;
+                }
+                let mut did = sh.sync_membership();
+                let cq = sh.cluster.node(sh.me).cq();
+                let mut buf = Vec::with_capacity(256);
+                let n = cq.poll(256, &mut buf);
+                for cqe in buf.iter() {
+                    sh.ack.complete(cqe.wr_id, cqe.is_ok());
+                }
+                did |= n > 0;
+                did
+            }));
+            let sh = shared;
+            let my_node = cluster.node(me).clone();
+            crate::sim::register_service(format!("mgr-ctrl-{me}"), Box::new(move || {
+                if sh.shutdown.load(Ordering::Relaxed) {
+                    return false;
+                }
+                let mut did = false;
+                while let Some(msg) = my_node.try_recv() {
+                    let text = String::from_utf8_lossy(&msg.bytes).into_owned();
+                    sh.handle_ctrl(msg.from, &text);
+                    did = true;
+                }
+                did
+            }));
+            return mgr;
+        }
         // Polling thread: drain the shared CQ, clear ack bits (App. A.1).
         {
             let sh = shared.clone();
@@ -293,8 +336,9 @@ impl Shared {
     }
 
     /// Mirror the fabric's crash-stop mask into this node's membership
-    /// (bumping the epoch once per newly dead node).
-    fn sync_membership(&self) {
+    /// (bumping the epoch once per newly dead node). Returns whether the
+    /// local view changed (the sim service's did-work signal).
+    fn sync_membership(&self) -> bool {
         let down = self.cluster.down_mask();
         if down != self.membership.dead_mask() {
             for node in 0..self.cluster.num_nodes() as NodeId {
@@ -302,6 +346,9 @@ impl Shared {
                     self.membership.note_dead(node);
                 }
             }
+            true
+        } else {
+            false
         }
     }
 

@@ -78,9 +78,20 @@ impl CompletionQueue {
         self.q.drain_into(max, out)
     }
 
-    /// Blocking poll of a single completion (test helper).
+    /// Blocking poll of a single completion (test helper). Spins through
+    /// `Backoff::snooze` rather than the condvar so it also works under
+    /// the deterministic simulator (where the snooze pumps the
+    /// scheduler).
     pub fn poll_one_blocking(&self) -> Cqe {
-        self.q.pop_timeout(std::time::Duration::from_secs(30)).expect("cq poll timed out")
+        let mut backoff = crate::util::Backoff::new();
+        let mut budget = crate::util::WaitBudget::wedge(std::time::Duration::from_secs(30));
+        loop {
+            if let Some(cqe) = self.q.try_pop() {
+                return cqe;
+            }
+            backoff.snooze();
+            assert!(!budget.expired(), "cq poll timed out");
+        }
     }
 
     /// Blocking poll with timeout (the polling thread's backstop path).

@@ -56,6 +56,13 @@ pub enum DeliveryMode {
     /// real data races between placement and application reads. Used by
     /// consistency tests and all benchmarks.
     Threaded,
+    /// Single-threaded discrete-event simulation: the same engine cores
+    /// as `Threaded`, but stepped cooperatively by a
+    /// [`SimExecutor`](crate::sim::SimExecutor) over **virtual time**.
+    /// No engine threads are spawned; submissions queue until the sim
+    /// scheduler pumps them. Every nondeterministic choice is drawn from
+    /// one seeded RNG stream, so the same seed replays bit-identically.
+    Sim,
 }
 
 /// Latency/bandwidth model. All values in nanoseconds.
@@ -256,6 +263,17 @@ impl FabricConfig {
         }
     }
 
+    /// Deterministic-simulation config: the `Threaded` semantics (arrival
+    /// stamping, placement lag, faults) stepped over virtual time by a
+    /// [`SimExecutor`](crate::sim::SimExecutor). `seed` drives both the
+    /// fabric jitter and the sim scheduler.
+    pub fn sim(latency: LatencyModel, seed: u64) -> Self {
+        let mut cfg = Self::threaded(latency);
+        cfg.delivery = DeliveryMode::Sim;
+        cfg.seed = seed.max(1);
+        cfg
+    }
+
     pub fn with_mem_words(mut self, words: usize) -> Self {
         self.node_mem_words = words;
         self
@@ -283,19 +301,53 @@ impl FabricConfig {
 }
 
 /// Monotonic clock shared by a cluster, in nanoseconds since creation.
+///
+/// `Wall` (the default) reads the host's monotonic clock. `Virtual` is
+/// a shared counter advanced **only** by the sim scheduler
+/// ([`crate::sim`]): time jumps straight to the next due event, so a
+/// 64-node schedule covering minutes of simulated traffic runs in
+/// wall-clock seconds, and two runs with the same seed read identical
+/// timestamps.
 #[derive(Clone, Debug)]
-pub struct Clock {
-    base: Instant,
+pub enum Clock {
+    Wall { base: Instant },
+    Virtual { now: std::sync::Arc<std::sync::atomic::AtomicU64> },
 }
 
 impl Clock {
     pub fn new() -> Self {
-        Clock { base: Instant::now() }
+        Clock::Wall { base: Instant::now() }
+    }
+
+    /// A virtual clock starting at 0 (advanced via [`Clock::advance_to`]).
+    pub fn new_virtual() -> Self {
+        Clock::Virtual { now: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0)) }
     }
 
     #[inline]
     pub fn now_ns(&self) -> u64 {
-        self.base.elapsed().as_nanos() as u64
+        match self {
+            Clock::Wall { base } => base.elapsed().as_nanos() as u64,
+            Clock::Virtual { now } => now.load(std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+
+    /// Is this a virtual (sim-driven) clock?
+    #[inline]
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+
+    /// Advance a virtual clock to `ns` (monotonic: earlier targets are
+    /// ignored). Panics on a wall clock — only the sim scheduler owns
+    /// time here.
+    pub fn advance_to(&self, ns: u64) {
+        match self {
+            Clock::Virtual { now } => {
+                now.fetch_max(ns, std::sync::atomic::Ordering::Relaxed);
+            }
+            Clock::Wall { .. } => panic!("advance_to on a wall clock"),
+        }
     }
 }
 

@@ -186,7 +186,14 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(n: usize, cfg: FabricConfig) -> Arc<Cluster> {
-        let clock = Clock::new();
+        // Sim mode runs on virtual time: it only moves when the sim
+        // scheduler advances it, so the cluster is frozen until a
+        // `SimExecutor` adopts it.
+        let clock = if cfg.delivery == DeliveryMode::Sim {
+            Clock::new_virtual()
+        } else {
+            Clock::new()
+        };
         let nodes: Vec<Arc<NodeFabric>> =
             (0..n).map(|i| Arc::new(NodeFabric::new(i as NodeId, &cfg))).collect();
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -219,6 +226,20 @@ impl Cluster {
 
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
+    }
+
+    /// Build one steppable engine core per node (sim mode). The
+    /// `SimExecutor` owns and steps these; in `Threaded` mode the same
+    /// cores live inside the per-node engine threads instead.
+    pub(crate) fn engine_cores(&self) -> Vec<nic::EngineCore> {
+        assert_eq!(
+            self.cfg.delivery,
+            DeliveryMode::Sim,
+            "engine_cores is only meaningful for DeliveryMode::Sim"
+        );
+        (0..self.nodes.len())
+            .map(|i| nic::EngineCore::new(self.nodes.clone(), i as NodeId, self.cfg.clone()))
+            .collect()
     }
 
     pub fn clock(&self) -> &Clock {
@@ -264,7 +285,10 @@ impl Cluster {
             return;
         }
         match self.cfg.delivery {
-            DeliveryMode::Threaded => {
+            // Sim mode shares the Threaded submission path: the WQE sits
+            // in the QP's submission queue until a `SimExecutor` steps
+            // this node's engine core.
+            DeliveryMode::Threaded | DeliveryMode::Sim => {
                 qp.submit(wqe);
                 node.ring();
             }
@@ -302,7 +326,7 @@ impl Cluster {
             }
         }
         match self.cfg.delivery {
-            DeliveryMode::Threaded => {
+            DeliveryMode::Threaded | DeliveryMode::Sim => {
                 qp.submit_list(list.into_wqes());
                 node.ring();
             }

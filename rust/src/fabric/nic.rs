@@ -328,29 +328,57 @@ fn execute_arrival(
     }
 }
 
-/// The per-node engine loop (threaded mode).
-pub(super) fn engine_loop(
+/// One node's engine state, factored out of the threaded loop so the
+/// deterministic simulator ([`crate::sim`]) can *step* it over virtual
+/// time. The threaded [`engine_loop`] is a thin driver around
+/// [`EngineCore::step`]; both modes run byte-for-byte the same
+/// stamping / execution / placement code.
+pub(crate) struct EngineCore {
     nodes: Vec<Arc<NodeFabric>>,
     node: NodeId,
     cfg: FabricConfig,
-    clock: Clock,
-    shutdown: Arc<AtomicBool>,
-) {
-    let fault_seed = cfg.faults.as_ref().map(|f| f.seed).unwrap_or(0);
-    let mut rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17) ^ fault_seed.rotate_left(31));
-    let faults = cfg.faults.clone();
-    let mut fx = CqeFx { hold: None };
-    let mut executed_ops: u64 = 0;
-    let mut qps: Vec<QpState> = Vec::new();
-    let me = &nodes[node as usize];
-    let mut idle_iters: u32 = 0;
-    loop {
-        let doorbell = me.doorbell_value();
-        // Pick up newly created QPs.
-        let qp_count = me.qp_count();
-        while qps.len() < qp_count {
-            let qp = me.qp_engine_handle(qps.len() as u32);
-            qps.push(QpState {
+    faults: Option<FaultPlan>,
+    rng: Rng,
+    fx: CqeFx,
+    executed_ops: u64,
+    qps: Vec<QpState>,
+    /// Event-trace hash: folded over every executed arrival
+    /// (node, qp, wr_id, verb tag, virtual timestamp). Two sim runs with
+    /// the same seed must produce identical hashes on every engine — the
+    /// determinism regression tests assert exactly this.
+    trace: u64,
+}
+
+impl EngineCore {
+    pub(crate) fn new(nodes: Vec<Arc<NodeFabric>>, node: NodeId, cfg: FabricConfig) -> Self {
+        let fault_seed = cfg.faults.as_ref().map(|f| f.seed).unwrap_or(0);
+        let rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17) ^ fault_seed.rotate_left(31));
+        let faults = cfg.faults.clone();
+        EngineCore {
+            nodes,
+            node,
+            cfg,
+            faults,
+            rng,
+            fx: CqeFx { hold: None },
+            executed_ops: 0,
+            qps: Vec::new(),
+            trace: 0,
+        }
+    }
+
+    #[inline]
+    fn me(&self) -> &Arc<NodeFabric> {
+        &self.nodes[self.node as usize]
+    }
+
+    /// Pick up newly created QPs (submission queues appear after the
+    /// engine starts).
+    pub(crate) fn pickup_qps(&mut self) {
+        let qp_count = self.me().qp_count();
+        while self.qps.len() < qp_count {
+            let qp = self.me().qp_engine_handle(self.qps.len() as u32);
+            self.qps.push(QpState {
                 rx: qp.submission_queue(),
                 peer: qp.peer,
                 qp,
@@ -360,7 +388,21 @@ pub(super) fn engine_loop(
                 flapped_until_ns: 0,
             });
         }
+    }
 
+    /// The event-trace hash accumulated so far.
+    pub(crate) fn trace(&self) -> u64 {
+        self.trace
+    }
+
+    /// One engine pass at the clock's current time: stamp submissions,
+    /// recover flaps, execute due arrivals, retire due placements, apply
+    /// the scheduled crash-stop. Returns whether anything ran.
+    pub(crate) fn step(&mut self, clock: &Clock) -> bool {
+        self.pickup_qps();
+        let EngineCore { nodes, node, cfg, faults, rng, fx, executed_ops, qps, trace } = self;
+        let node = *node;
+        let me = &nodes[node as usize];
         let mut did_work = false;
 
         if !me.is_alive() {
@@ -401,7 +443,7 @@ pub(super) fn engine_loop(
                 let now = clock.now_ns();
                 while let Some(sub) = q.rx.try_pop() {
                     let wqe = sub.wqe;
-                    let mut lat = verb_latency(&cfg, &nodes, &wqe, q.peer);
+                    let mut lat = verb_latency(cfg, nodes, &wqe, q.peer);
                     if let Some(f) = &faults {
                         // Sampled extra delay: reorders ops across QPs
                         // while the max() below keeps per-QP order.
@@ -452,69 +494,167 @@ pub(super) fn engine_loop(
                     while q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
                         let fl = q.inflight.pop_front().unwrap();
                         let qpid = QpId { node, index: idx as u32 };
+                        let tag = match &fl.wqe.verb {
+                            Verb::Write { .. } => 1u64,
+                            Verb::Read { .. } => 2,
+                            Verb::ZeroLenRead => 3,
+                            Verb::FetchAdd { .. } => 4,
+                            Verb::CompareSwap { .. } => 5,
+                            Verb::Send { .. } => 6,
+                        };
+                        *trace = crate::util::mix64(
+                            *trace
+                                ^ ((node as u64) << 48)
+                                ^ ((idx as u64) << 32)
+                                ^ fl.wqe.wr_id.rotate_left(13)
+                                ^ (tag << 56)
+                                ^ now2,
+                        );
                         execute_arrival(
-                            &nodes,
-                            &cfg,
+                            nodes,
+                            cfg,
                             faults.as_ref(),
-                            &mut rng,
-                            &mut fx,
+                            rng,
+                            fx,
                             node,
                             qpid,
                             q,
                             fl,
                             now2,
                         );
-                        executed_ops += 1;
+                        *executed_ops += 1;
                         did_work = true;
                     }
                 }
                 // 3. retire due placements
-                retire_due_placements(&nodes, q, clock.now_ns(), cfg.chaotic_placement);
+                retire_due_placements(nodes, q, clock.now_ns(), cfg.chaotic_placement);
             }
             // Scheduled crash-stop (fault injection): this node dies once
             // its engine has executed the planned op count.
             if let Some((victim, after)) = faults.as_ref().and_then(|f| f.crash_after) {
-                if victim == node && executed_ops >= after {
+                if victim == node && *executed_ops >= after {
                     nodes[node as usize].crash();
-                    for n in &nodes {
+                    for n in nodes.iter() {
                         n.ring();
                     }
-                    continue;
+                    did_work = true;
                 }
             }
         }
+        did_work
+    }
 
+    /// Flush a held-back (reorder-fault) completion, if any. A held CQE
+    /// must not outlive the burst that produced it — the threaded loop
+    /// flushes before idling, the sim before declaring quiescence.
+    pub(crate) fn flush_hold(&mut self) -> bool {
+        if let Some(held) = self.fx.hold.take() {
+            self.me().cq().post(held);
+            return true;
+        }
+        false
+    }
+
+    /// Nothing queued, in flight, or pending anywhere (shutdown gate).
+    pub(crate) fn fully_idle(&self) -> bool {
+        self.qps
+            .iter()
+            .all(|q| q.inflight.is_empty() && q.placements.is_empty() && q.rx.is_empty())
+            && self.me().qp_count() == self.qps.len()
+            && self.fx.hold.is_none()
+    }
+
+    /// Would a step at time `now` do anything? (The sim scheduler's
+    /// runnability test. `pickup_qps` must run first so fresh
+    /// submission queues are visible.)
+    pub(crate) fn has_immediate_work(&self, now: u64) -> bool {
+        let me = self.me();
+        if !me.is_alive() {
+            return self.qps.iter().any(|q| {
+                !q.rx.is_empty()
+                    || !q.inflight.is_empty()
+                    || !q.placements.is_empty()
+                    || q.qp.is_error()
+            });
+        }
+        if let Some((victim, after)) = self.faults.as_ref().and_then(|f| f.crash_after) {
+            if victim == self.node && self.executed_ops >= after {
+                return true;
+            }
+        }
+        self.qps.iter().any(|q| {
+            if !q.rx.is_empty() {
+                return true;
+            }
+            // Placements retire on the wall even while the QP is flapped
+            // (the threaded loop runs step 3 unconditionally).
+            if q.placements.front().map(|p| p.due_ns <= now).unwrap_or(false) {
+                return true;
+            }
+            if q.qp.is_error() {
+                return now >= q.flapped_until_ns;
+            }
+            q.inflight.front().map(|f| f.due_ns <= now).unwrap_or(false)
+        })
+    }
+
+    /// Earliest future event on this engine (arrival, placement, or flap
+    /// recovery) — the sim scheduler advances the virtual clock to the
+    /// minimum over all engines when nothing is immediately runnable.
+    pub(crate) fn next_due(&self) -> Option<u64> {
+        if !self.me().is_alive() {
+            return None;
+        }
+        let mut next: Option<u64> = None;
+        let mut fold = |t: u64| next = Some(next.map_or(t, |n: u64| n.min(t)));
+        for q in &self.qps {
+            if let Some(p) = q.placements.front() {
+                fold(p.due_ns);
+            }
+            if q.qp.is_error() {
+                fold(q.flapped_until_ns);
+                continue;
+            }
+            if let Some(f) = q.inflight.front() {
+                fold(f.due_ns.max(q.flapped_until_ns));
+            }
+        }
+        next
+    }
+}
+
+/// The per-node engine loop (threaded mode): drive an [`EngineCore`]
+/// against the wall clock, sleeping on the doorbell when idle.
+pub(super) fn engine_loop(
+    nodes: Vec<Arc<NodeFabric>>,
+    node: NodeId,
+    cfg: FabricConfig,
+    clock: Clock,
+    shutdown: Arc<AtomicBool>,
+) {
+    let me = nodes[node as usize].clone();
+    let mut core = EngineCore::new(nodes, node, cfg);
+    let mut idle_iters: u32 = 0;
+    loop {
+        let doorbell = me.doorbell_value();
+        let did_work = core.step(&clock);
         if !did_work {
             // A held-back completion must not outlive the burst that
             // produced it: flush before idling or shutting down.
-            if let Some(held) = fx.hold.take() {
-                me.cq().post(held);
+            if core.flush_hold() {
                 idle_iters = 0;
                 continue;
             }
             idle_iters += 1;
-            if shutdown.load(Ordering::Relaxed) {
-                let fully_idle = qps
-                    .iter()
-                    .all(|q| q.inflight.is_empty() && q.placements.is_empty() && q.rx.is_empty());
-                if fully_idle && me.qp_count() == qps.len() {
-                    break;
-                }
+            if shutdown.load(Ordering::Relaxed) && core.fully_idle() {
+                break;
             }
             // Nothing ran this pass: sleep until the next deadline (due
             // arrival or placement) or until the doorbell rings. Burning
             // a core spinning here starves application threads on small
             // hosts (EXPERIMENTS.md §Perf).
             let now = clock.now_ns();
-            let mut next = now + 200_000; // 200 µs cap (shutdown poll)
-            for q in &qps {
-                if let Some(f) = q.inflight.front() {
-                    next = next.min(f.due_ns.max(q.flapped_until_ns));
-                }
-                if let Some(p) = q.placements.front() {
-                    next = next.min(p.due_ns);
-                }
-            }
+            let next = core.next_due().unwrap_or(u64::MAX).min(now + 200_000); // 200 µs cap (shutdown poll)
             let wait = next.saturating_sub(now);
             if wait > 3_000 && idle_iters > 8 {
                 me.doorbell_wait(doorbell, wait);

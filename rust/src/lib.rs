@@ -45,6 +45,7 @@ pub mod core;
 pub mod fabric;
 pub mod metrics;
 pub mod runtime;
+pub mod sim;
 pub mod testkit;
 pub mod util;
 pub mod workload;

@@ -17,9 +17,16 @@
 //! signaled) and `--max-inline-words W` (inline-payload threshold;
 //! 0 = never inline) — the PR-5 hot-write-path economies.
 //!
+//! `loco sim [--nodes N] [--rounds K] [--seed S]` runs a deterministic
+//! discrete-event schedule (single-threaded, virtual time) and prints
+//! its event-trace hash: the same seed prints the same hash on any
+//! machine. The seed falls back to `LOCO_SIM_SEED` when `--seed` is
+//! absent.
+//!
 //! Environment: `LOCO_FULL=1` for paper-calibrated latencies,
 //! `LOCO_BENCH_SECS` / `LOCO_BENCH_RUNS` to override the measurement
 //! window, `LOCO_SIGNAL_EVERY` for the selective-signaling default,
+//! `LOCO_SIM_SEED` for the simulator seed,
 //! `LOCO_ARTIFACTS` for the AOT artifact directory.
 
 use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
@@ -166,6 +173,51 @@ fn main() {
             }
             t.print();
         }
+        "sim" => {
+            // Deterministic discrete-event mode: one OS thread, virtual
+            // time, every nondeterministic choice drawn from the seed.
+            let nodes = arg_u64(&args, "--nodes", 64) as usize;
+            let rounds = arg_u64(&args, "--rounds", 3);
+            let seed = args
+                .iter()
+                .position(|a| a == "--seed")
+                .and_then(|i| args.get(i + 1))
+                .and_then(|v| v.parse().ok())
+                .or_else(|| {
+                    std::env::var("LOCO_SIM_SEED").ok().and_then(|v| v.parse().ok())
+                })
+                .unwrap_or(1u64);
+            let cluster = loco::fabric::Cluster::new(
+                nodes,
+                loco::testkit::sim_fabric(seed).with_mem_words(1 << 16),
+            );
+            let sim = loco::sim::SimExecutor::install(&cluster);
+            let mgrs: Vec<_> = (0..nodes as loco::fabric::NodeId)
+                .map(|i| loco::core::manager::Manager::new(cluster.clone(), i))
+                .collect();
+            let vars: Vec<loco::channels::AtomicVar> = mgrs
+                .iter()
+                .map(|m| loco::channels::AtomicVar::new(m, "ctr", 0, false))
+                .collect();
+            for v in &vars {
+                v.wait_ready(std::time::Duration::from_secs(30));
+            }
+            let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+            for _ in 0..rounds {
+                for i in 0..nodes {
+                    vars[i].fetch_add(&ctxs[i], 1);
+                }
+            }
+            sim.settle();
+            println!(
+                "sim: {nodes} nodes, seed {seed}, {} ops: trace {:#018x}, {} scheduler steps, \
+                 {:.3} virtual ms",
+                rounds * nodes as u64,
+                sim.trace_hash(),
+                sim.progress(),
+                cluster.clock().now_ns() as f64 / 1e6
+            );
+        }
         "micro" => {
             let lat = scale.latency.clone();
             let mut t = Table::new(&["ablation", "value"]);
@@ -204,8 +256,9 @@ fn main() {
         _ => {
             println!(
                 "loco — Library of Channel Objects (paper reproduction)\n\
-                 usage: loco <barrier|fig4|fig5|fig7|micro> [flags]\n\
+                 usage: loco <barrier|fig4|fig5|fig7|micro|sim> [flags]\n\
                  write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
+                 sim: --nodes N --rounds K --seed S (or LOCO_SIM_SEED)\n\
                  see `examples/` for the end-to-end drivers"
             );
         }

@@ -1,0 +1,390 @@
+//! Deterministic discrete-event simulation of a whole cluster on one
+//! OS thread.
+//!
+//! In `DeliveryMode::Sim` a cluster spawns no NIC-engine threads and its
+//! [`Clock`] is **virtual**: time only moves when the scheduler here
+//! advances it. A [`SimExecutor`] owns one steppable
+//! [`EngineCore`](crate::fabric::nic::EngineCore) per node (the exact
+//! state machine the threaded engine threads run) plus a list of
+//! cooperative **services** — the manager's poll/ctrl work and the
+//! kvstore's tracker loop register themselves here instead of spawning
+//! threads.
+//!
+//! Every nondeterministic decision (which runnable engine steps next,
+//! which service runs, when the clock advances) is drawn from one seeded
+//! RNG stream and recorded, so:
+//!
+//! * **same seed ⇒ bit-identical run** — asserted via the event-trace
+//!   hash ([`SimExecutor::trace_hash`]), which folds every executed verb
+//!   arrival and every scheduler decision;
+//! * **a failing schedule replays exactly** — and can be *shrunk*: the
+//!   recorded choice list ([`SimExecutor::choices`]) can be fed back as
+//!   a forced plan ([`SimExecutor::force_plan`]) with segments
+//!   simplified, which is how the model harness in
+//!   [`testkit`](crate::testkit) minimizes interleavings.
+//!
+//! The blocking waits all over the stack (ack waits, ring-buffer waits,
+//! lock spins) reach the scheduler through one choke point:
+//! [`Backoff::snooze`](crate::util::Backoff::snooze) calls
+//! [`maybe_pump`], which runs one scheduler step when a `SimExecutor`
+//! is installed on the current thread and is a no-op otherwise. So the
+//! same application code runs unmodified under threads or under sim.
+//!
+//! What is preserved vs. the threaded mode: per-QP FIFO execution and
+//! monotone arrival stamping, completion-before-placement lag, flushing
+//! reads, torn placement, QP flaps with retransmit, selective-signaling
+//! chain errors, crash-stop drains — all of it runs through the very
+//! same `EngineCore` code. What changes: application/service code is
+//! interleaved at `snooze` boundaries (cooperative points) instead of
+//! preemptively, and wall-clock grace windows become deterministic
+//! pump-count windows (see [`WaitBudget`](crate::util::WaitBudget)).
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::fabric::nic::EngineCore;
+use crate::fabric::{Clock, Cluster, DeliveryMode};
+use crate::util::mix64;
+use crate::util::rng::Rng;
+
+/// A cooperative service: one non-blocking slice of work per call
+/// (e.g. "poll the manager CQ once", "run one tracker iteration").
+/// Returns whether it did anything — the scheduler uses that to decide
+/// quiescence, so a service must not report idle polls as work.
+#[derive(Clone)]
+struct Service {
+    name: String,
+    /// Re-entrancy guard: a service's slice may block internally (e.g. a
+    /// tracker waiting out an ack) and pump the scheduler from inside;
+    /// the nested pump must not re-enter the same service.
+    active: Rc<Cell<bool>>,
+    f: Rc<RefCell<Box<dyn FnMut() -> bool>>>,
+}
+
+/// The scheduler state, shared between the [`SimExecutor`] handle and
+/// the thread-local slot that [`maybe_pump`] reads.
+struct SimCore {
+    clock: Clock,
+    engines: RefCell<Vec<EngineCore>>,
+    services: RefCell<Vec<Service>>,
+    sched_rng: RefCell<Rng>,
+    /// Every scheduler decision, in order (index into the runnable set).
+    choices: RefCell<Vec<u32>>,
+    /// Forced replay plan: when set, decisions come from here (clamped
+    /// to the runnable count; exhausted → 0) instead of the RNG.
+    plan: RefCell<Option<Vec<u32>>>,
+    plan_cursor: Cell<usize>,
+    /// Monotone count of scheduler steps that did work. `WaitBudget`
+    /// samples this to tell a long virtual wait from a true deadlock.
+    progress: Cell<u64>,
+    /// Event-trace hash over scheduler decisions and clock advances;
+    /// [`SimExecutor::trace_hash`] folds the per-engine arrival traces
+    /// in on top.
+    trace: Cell<u64>,
+}
+
+impl SimCore {
+    /// Draw (and record) one scheduler decision among `n` alternatives.
+    fn choose(&self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let raw = match &*self.plan.borrow() {
+            Some(p) => {
+                let cur = self.plan_cursor.get();
+                self.plan_cursor.set(cur + 1);
+                p.get(cur).copied().unwrap_or(0)
+            }
+            None => self.sched_rng.borrow_mut().gen_range(n as u64) as u32,
+        };
+        let pick = raw.min(n - 1);
+        self.choices.borrow_mut().push(pick);
+        pick
+    }
+
+    fn bump(&self, tag: u64, a: u64, b: u64) {
+        self.progress.set(self.progress.get() + 1);
+        self.trace
+            .set(mix64(self.trace.get() ^ (tag << 60) ^ a.rotate_left(17) ^ b));
+    }
+
+    /// One scheduler step. Returns whether anything in the simulated
+    /// world moved; `false` means the cluster is fully quiescent and
+    /// nothing will ever move again without external input.
+    fn pump_once(&self) -> bool {
+        // Phase 1: engines with work runnable *now* — pick one.
+        let now = self.clock.now_ns();
+        let runnable: Vec<usize> = {
+            let mut engines = self.engines.borrow_mut();
+            for e in engines.iter_mut() {
+                e.pickup_qps();
+            }
+            engines
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.has_immediate_work(now))
+                .map(|(i, _)| i)
+                .collect()
+        };
+        if !runnable.is_empty() {
+            let pick = self.choose(runnable.len() as u32) as usize;
+            let idx = runnable[pick];
+            {
+                let mut engines = self.engines.borrow_mut();
+                engines[idx].step(&self.clock);
+            }
+            self.bump(1, idx as u64, now);
+            return true;
+        }
+
+        // Phase 2: run each idle service one slice, in fixed order,
+        // until one reports work. (Services are cloned out of the vec so
+        // a slice that pumps the scheduler internally — or registers a
+        // new service — never sees an outstanding borrow.)
+        let services: Vec<Service> = self.services.borrow().clone();
+        for (i, s) in services.iter().enumerate() {
+            if s.active.get() {
+                continue;
+            }
+            s.active.set(true);
+            let did = (s.f.borrow_mut())();
+            s.active.set(false);
+            if did {
+                self.bump(2, i as u64, now);
+                return true;
+            }
+        }
+
+        // Phase 3: nothing runnable → flush held-back (reorder-fault)
+        // completions; a held CQE must not outlive its burst.
+        let flushed = {
+            let mut engines = self.engines.borrow_mut();
+            let mut any = false;
+            for e in engines.iter_mut() {
+                any |= e.flush_hold();
+            }
+            any
+        };
+        if flushed {
+            self.bump(3, 0, now);
+            return true;
+        }
+
+        // Phase 4: advance virtual time to the earliest future event.
+        let next = self.engines.borrow().iter().filter_map(|e| e.next_due()).min();
+        if let Some(t) = next {
+            if t > now {
+                self.clock.advance_to(t);
+                self.bump(4, t, now);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Rc<SimCore>>> = const { RefCell::new(None) };
+}
+
+/// If a [`SimExecutor`] is installed on this thread, run one scheduler
+/// step and return `true`; otherwise do nothing and return `false`.
+/// This is the hook [`Backoff::snooze`](crate::util::Backoff::snooze)
+/// calls, making every polling wait in the stack a cooperative yield
+/// point under sim.
+#[inline]
+pub fn maybe_pump() -> bool {
+    let core = CURRENT.with(|c| c.borrow().clone());
+    match core {
+        Some(core) => {
+            core.pump_once();
+            true
+        }
+        None => false,
+    }
+}
+
+/// The installed scheduler's progress counter, or `None` when this
+/// thread is not running under a [`SimExecutor`].
+/// [`WaitBudget`](crate::util::WaitBudget) uses this to make wedge
+/// deadlines deterministic: the counter stalling across many pumps means
+/// a true deadlock, not a long virtual wait.
+pub fn progress() -> Option<u64> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|core| core.progress.get()))
+}
+
+/// Is a [`SimExecutor`] installed on this thread?
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// Register a cooperative service with the installed scheduler. Called
+/// by components that would spawn a thread in threaded mode (manager
+/// poll/ctrl loops, kvstore tracker). Panics if no [`SimExecutor`] is
+/// installed — construct one before building managers or stores on a
+/// sim cluster.
+pub(crate) fn register_service(name: impl Into<String>, f: Box<dyn FnMut() -> bool>) {
+    let core = CURRENT.with(|c| c.borrow().clone());
+    let core = core.expect(
+        "DeliveryMode::Sim requires a SimExecutor on this thread before \
+         building managers/stores (services have nowhere to run)",
+    );
+    core.services.borrow_mut().push(Service {
+        name: name.into(),
+        active: Rc::new(Cell::new(false)),
+        f: Rc::new(RefCell::new(f)),
+    });
+}
+
+/// Names of the registered services (diagnostics/tests).
+pub fn service_names() -> Vec<String> {
+    CURRENT.with(|c| {
+        c.borrow()
+            .as_ref()
+            .map(|core| core.services.borrow().iter().map(|s| s.name.clone()).collect())
+            .unwrap_or_default()
+    })
+}
+
+/// The single-threaded deterministic scheduler for a
+/// [`DeliveryMode::Sim`] cluster. Owns the per-node engine cores and
+/// installs itself in thread-local storage so the whole stack's waits
+/// pump it; dropped, it uninstalls.
+pub struct SimExecutor {
+    core: Rc<SimCore>,
+}
+
+impl SimExecutor {
+    /// Adopt `cluster` (which must be `DeliveryMode::Sim`) and install
+    /// the scheduler on the current thread. Panics if another
+    /// `SimExecutor` is already installed here.
+    pub fn install(cluster: &Arc<Cluster>) -> SimExecutor {
+        assert_eq!(
+            cluster.config().delivery,
+            DeliveryMode::Sim,
+            "SimExecutor requires a cluster built with FabricConfig::sim"
+        );
+        let seed = cluster.config().seed;
+        let core = Rc::new(SimCore {
+            clock: cluster.clock().clone(),
+            engines: RefCell::new(cluster.engine_cores()),
+            services: RefCell::new(Vec::new()),
+            sched_rng: RefCell::new(Rng::seeded(seed ^ 0x51D0_C0DE_0515_C0DE)),
+            choices: RefCell::new(Vec::new()),
+            plan: RefCell::new(None),
+            plan_cursor: Cell::new(0),
+            progress: Cell::new(0),
+            trace: Cell::new(mix64(seed)),
+        });
+        CURRENT.with(|c| {
+            let mut slot = c.borrow_mut();
+            assert!(slot.is_none(), "a SimExecutor is already installed on this thread");
+            *slot = Some(core.clone());
+        });
+        SimExecutor { core }
+    }
+
+    /// One scheduler step; returns whether anything moved.
+    pub fn pump(&self) -> bool {
+        self.core.pump_once()
+    }
+
+    /// Pump until the simulated world is fully quiescent: no engine has
+    /// work now or in the future, no service has anything to do, no
+    /// held completions. Panics (rather than hanging the test) if the
+    /// world fails to settle within a generous step bound.
+    pub fn settle(&self) {
+        let mut steps: u64 = 0;
+        while self.core.pump_once() {
+            steps += 1;
+            assert!(steps < 50_000_000, "sim failed to settle (livelocked service?)");
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now_ns(&self) -> u64 {
+        self.core.clock.now_ns()
+    }
+
+    /// Scheduler progress counter (monotone count of steps that did
+    /// work).
+    pub fn progress(&self) -> u64 {
+        self.core.progress.get()
+    }
+
+    /// The event-trace hash: scheduler decisions + clock advances +
+    /// every engine's executed-arrival trace. Two runs of the same
+    /// seeded schedule must agree on this bit-for-bit.
+    pub fn trace_hash(&self) -> u64 {
+        let mut h = self.core.trace.get();
+        for e in self.core.engines.borrow().iter() {
+            h = mix64(h ^ e.trace());
+        }
+        h
+    }
+
+    /// The recorded scheduler decisions so far (one entry per choice
+    /// point, each an index into that point's runnable set).
+    pub fn choices(&self) -> Vec<u32> {
+        self.core.choices.borrow().clone()
+    }
+
+    /// Force future decisions to follow `plan` (each entry clamped to
+    /// the runnable count at its choice point; entries past the end of
+    /// the plan fall back to 0). Used by the shrinker to replay and
+    /// simplify interleavings.
+    pub fn force_plan(&self, plan: Vec<u32>) {
+        *self.core.plan.borrow_mut() = Some(plan);
+        self.core.plan_cursor.set(0);
+    }
+}
+
+impl Drop for SimExecutor {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            c.borrow_mut().take();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::verbs::{Payload, Verb, Wqe};
+    use crate::fabric::{FabricConfig, LatencyModel};
+
+    #[test]
+    fn sim_cluster_roundtrip_over_virtual_time() {
+        let c = Cluster::new(2, FabricConfig::sim(LatencyModel::fast_sim(), 7));
+        let sim = SimExecutor::install(&c);
+        let dst = c.node(1).register_mr(16, false);
+        let qp = c.create_qp(0, 1);
+        let wr = Wqe::new(1, Verb::Write { remote: dst.at(0), data: Payload::from_words(&[4, 5]) });
+        c.post(qp, wr);
+        assert!(c.node(0).cq().is_empty(), "nothing moves until the sim is pumped");
+        sim.settle();
+        assert!(sim.now_ns() > 0, "virtual time advanced");
+        let mut out = Vec::new();
+        assert_eq!(c.node(0).cq().poll(8, &mut out), 1);
+        assert_eq!(out[0].wr_id, 1);
+        assert_eq!(c.node(1).arena().load(dst.at(1)), 5);
+    }
+
+    #[test]
+    fn snooze_pumps_installed_sim() {
+        let c = Cluster::new(2, FabricConfig::sim(LatencyModel::fast_sim(), 9));
+        let _sim = SimExecutor::install(&c);
+        let dst = c.node(1).register_mr(4, false);
+        let qp = c.create_qp(0, 1);
+        c.post(qp, Wqe::new(3, Verb::Write { remote: dst.at(0), data: Payload::one(9) }));
+        // poll_one_blocking spins via Backoff::snooze → maybe_pump.
+        assert_eq!(c.node(0).cq().poll_one_blocking().wr_id, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "already installed")]
+    fn double_install_panics() {
+        let c = Cluster::new(1, FabricConfig::sim(LatencyModel::fast_sim(), 1));
+        let _a = SimExecutor::install(&c);
+        let _b = SimExecutor::install(&c);
+    }
+}

@@ -102,6 +102,377 @@ pub fn chaos_fabric(seed: u64) -> FabricConfig {
     cfg
 }
 
+// ---- deterministic simulation builders --------------------------------
+
+/// The standard **simulated** chaos fabric: same latency model, chaotic
+/// placement, fault plan, and signal-chain sweep as [`chaos_fabric`],
+/// but stepped over virtual time by a
+/// [`SimExecutor`](crate::sim::SimExecutor). Everything nondeterministic
+/// derives from `seed`: same seed ⇒ bit-identical event trace.
+pub fn sim_fabric(seed: u64) -> FabricConfig {
+    let mut lat = LatencyModel::fast_sim();
+    lat.placement_lag_ns = 3000;
+    let mut cfg = FabricConfig::sim(lat, seed).chaotic().with_faults(chaos_plan(seed));
+    cfg.signal_every = match seed % 4 {
+        0 => 1,
+        1 => 4,
+        2 => 16,
+        _ => 64,
+    };
+    cfg
+}
+
+/// A ready kvstore on every node of a fresh **simulated** cluster. The
+/// executor must be installed before any manager or store is built (they
+/// register their polling loops as scheduler services), so this builder
+/// owns the whole sequence. Keep the returned executor alive for the
+/// duration of the test — dropping it uninstalls the scheduler.
+pub fn sim_kv_cluster(
+    n: usize,
+    seed: u64,
+    cfg: KvConfig,
+) -> (crate::sim::SimExecutor, Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    let cluster = Cluster::new(n, sim_fabric(seed));
+    let sim = crate::sim::SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+    (sim, cluster, mgrs, kvs)
+}
+
+// ---- model-based testing (reference model + shrinking) ----------------
+
+/// One step of a model-based schedule. All randomness is pre-drawn into
+/// this plain data — a schedule is a value, which is what makes delta
+/// debugging sound (removing an op cannot shift any other op's
+/// randomness).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelOp {
+    Insert { node: NodeId, key: u64, val: u64 },
+    Update { node: NodeId, key: u64, val: u64 },
+    Remove { node: NodeId, key: u64 },
+    Get { node: NodeId, key: u64 },
+    /// Crash-stop `node` and run the cluster to quiescence (the re-home
+    /// pass completes before the next op issues).
+    Crash { node: NodeId },
+}
+
+/// Encode a model value as a kv value (2 words, so the checksummed
+/// multi-word frame path is exercised). Injective: every stale read is
+/// distinguishable.
+fn enc(val: u64) -> Vec<u64> {
+    vec![val, val.wrapping_mul(0x9E37_79B9_7F4A_7C15)]
+}
+
+/// The kvstore configuration the model tier runs: replication + fenced
+/// updates + the hot-key cache + coalesced invalidations — every
+/// consistency mechanism on at once, sized small so schedules run in
+/// milliseconds of virtual time.
+pub fn model_kv_config() -> KvConfig {
+    KvConfig {
+        slots_per_node: 64,
+        value_words: 2,
+        num_locks: 12,
+        tracker_words: 1 << 12,
+        fence_updates: true,
+        lock_handover: true,
+        read_cache_bytes: 16 * 1024,
+        replicate: true,
+        coalesce_invals: true,
+    }
+}
+
+/// Result of replaying one schedule.
+pub struct ModelRun {
+    /// First divergence between the store and the reference model
+    /// (`None`: the schedule passed).
+    pub failure: Option<String>,
+    /// Deterministic event-trace hash of the whole run.
+    pub trace: u64,
+    /// Every scheduler choice drawn during the run (replayable via the
+    /// `plan` argument of [`run_model_schedule`]).
+    pub choices: Vec<u32>,
+}
+
+/// Replay `ops` on a fresh 3-node simulated cluster against a
+/// `BTreeMap` reference model. Ops are sequential and fully acked, so
+/// under ≤ 1 crash-stop (injected *between* ops, recovery run to
+/// quiescence) the store must agree with the model exactly:
+///
+/// * a mutation that returns `Ok` is applied to the model; an `Err`
+///   (dead lock host / crashed issuer) means the mutation did not
+///   happen — the model is left unchanged;
+/// * ops issued from a crashed node are skipped (a corpse issues
+///   nothing);
+/// * every `Get` must return exactly the model's value.
+///
+/// `plan` forces the scheduler's choice stream (shrinking/replay);
+/// `None` draws from the seeded RNG. The failure outcome is a pure
+/// function of `(ops, seed, plan)`.
+pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) -> ModelRun {
+    let n = 3usize;
+    let cluster = Cluster::new(n, sim_fabric(seed));
+    let sim = crate::sim::SimExecutor::install(&cluster);
+    if let Some(p) = plan {
+        sim.force_plan(p);
+    }
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", model_kv_config())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+    let mut model: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    let mut failure = None;
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            ModelOp::Crash { node } => {
+                if !cluster.is_down(node) {
+                    cluster.crash(node);
+                    sim.settle(); // drain + membership + re-home, to quiescence
+                }
+            }
+            ModelOp::Insert { node, key, val } => {
+                if cluster.is_down(node) {
+                    continue;
+                }
+                if let Ok(fresh) = kvs[node as usize].insert(&ctxs[node as usize], key, &enc(val))
+                {
+                    let had = model.insert(key, val).is_some();
+                    if fresh == had {
+                        failure = Some(format!(
+                            "op {i} {op:?}: insert reported fresh={fresh} but the model {}",
+                            if had { "already had the key" } else { "did not have the key" }
+                        ));
+                    }
+                }
+            }
+            ModelOp::Update { node, key, val } => {
+                if cluster.is_down(node) {
+                    continue;
+                }
+                if let Ok(applied) =
+                    kvs[node as usize].try_update(&ctxs[node as usize], key, &enc(val))
+                {
+                    let present = model.contains_key(&key);
+                    if applied != present {
+                        failure = Some(format!(
+                            "op {i} {op:?}: update applied={applied}, model present={present}"
+                        ));
+                    } else if applied {
+                        model.insert(key, val);
+                    }
+                }
+            }
+            ModelOp::Remove { node, key } => {
+                if cluster.is_down(node) {
+                    continue;
+                }
+                if let Ok(removed) = kvs[node as usize].try_remove(&ctxs[node as usize], key) {
+                    let present = model.remove(&key).is_some();
+                    if removed != present {
+                        failure = Some(format!(
+                            "op {i} {op:?}: remove returned {removed}, model present={present}"
+                        ));
+                    }
+                }
+            }
+            ModelOp::Get { node, key } => {
+                if cluster.is_down(node) {
+                    continue;
+                }
+                let got = kvs[node as usize].get(&ctxs[node as usize], key);
+                let want = model.get(&key).map(|&v| enc(v));
+                if got != want {
+                    failure =
+                        Some(format!("op {i} {op:?}: store returned {got:?}, model has {want:?}"));
+                }
+            }
+        }
+        if failure.is_some() {
+            break;
+        }
+    }
+    sim.settle();
+    ModelRun { failure, trace: sim.trace_hash(), choices: sim.choices() }
+}
+
+/// Generate a random schedule: seed half the keyspace, then `rounds`
+/// mixed ops over 8 keys from random **alive** nodes, with at most one
+/// crash (the single-crash failure model) at a random position. Every
+/// written value is unique, so any stale read is attributable.
+pub fn gen_model_ops(seed: u64, n: usize, rounds: usize) -> Vec<ModelOp> {
+    let mut rng = Rng::seeded(seed ^ 0x0DE1_0DE1);
+    const KEYS: u64 = 8;
+    let mut ops = Vec::new();
+    let mut next_val = 1u64;
+    for key in 0..KEYS / 2 {
+        let node = rng.gen_range(n as u64) as NodeId;
+        ops.push(ModelOp::Insert { node, key, val: next_val });
+        next_val += 1;
+    }
+    let crash_at = rng.gen_bool(0.5).then(|| rng.gen_range(rounds as u64) as usize);
+    let crash_node = rng.gen_range(n as u64) as NodeId;
+    let mut alive: Vec<NodeId> = (0..n as NodeId).collect();
+    for i in 0..rounds {
+        if crash_at == Some(i) {
+            ops.push(ModelOp::Crash { node: crash_node });
+            alive.retain(|&x| x != crash_node);
+        }
+        let node = alive[rng.gen_range(alive.len() as u64) as usize];
+        let key = rng.gen_range(KEYS);
+        ops.push(match rng.gen_range(10) {
+            0..=1 => {
+                next_val += 1;
+                ModelOp::Insert { node, key, val: next_val - 1 }
+            }
+            2..=4 => {
+                next_val += 1;
+                ModelOp::Update { node, key, val: next_val - 1 }
+            }
+            5 => ModelOp::Remove { node, key },
+            _ => ModelOp::Get { node, key },
+        });
+    }
+    ops
+}
+
+/// Delta-debug (ddmin) the op stream: repeatedly drop chunks while the
+/// schedule still fails (any divergence counts — the scheduler seed is
+/// held fixed, so failing is a deterministic property of the op list),
+/// halving the chunk size until single-op removal reaches a fixpoint.
+/// Returns the 1-minimal op list and its failure.
+pub fn shrink_model_ops(ops: &[ModelOp], seed: u64) -> (Vec<ModelOp>, String) {
+    let mut cur: Vec<ModelOp> = ops.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut reduced = false;
+        let mut start = 0;
+        while start < cur.len() {
+            let end = (start + chunk).min(cur.len());
+            let cand: Vec<ModelOp> =
+                cur[..start].iter().chain(cur[end..].iter()).cloned().collect();
+            if !cand.is_empty() && run_model_schedule(&cand, seed, None).failure.is_some() {
+                cur = cand; // same start now holds new content; retry it
+                reduced = true;
+            } else {
+                start += chunk;
+            }
+        }
+        if chunk == 1 && !reduced {
+            break;
+        }
+        if !reduced {
+            chunk = (chunk / 2).max(1);
+        }
+    }
+    let failure =
+        run_model_schedule(&cur, seed, None).failure.expect("shrunk schedule must still fail");
+    (cur, failure)
+}
+
+/// Canonicalize the scheduler interleaving of a failing schedule:
+/// choice 0 (always-first) is the canonical decision, so zero out
+/// recorded choice segments while the failure persists. An all-zero
+/// outcome means the bug does not depend on the interleaving at all —
+/// reported as the empty plan.
+pub fn shrink_model_choices(ops: &[ModelOp], seed: u64, recorded: &[u32]) -> Vec<u32> {
+    if run_model_schedule(ops, seed, Some(Vec::new())).failure.is_some() {
+        return Vec::new(); // plan exhausted ⇒ every choice forced to 0
+    }
+    let mut cur = recorded.to_vec();
+    let mut chunk = (cur.len() / 2).max(1);
+    loop {
+        let mut reduced = false;
+        let mut start = 0;
+        while start < cur.len() {
+            let end = (start + chunk).min(cur.len());
+            if cur[start..end].iter().any(|&c| c != 0) {
+                let mut cand = cur.clone();
+                cand[start..end].fill(0);
+                if run_model_schedule(ops, seed, Some(cand.clone())).failure.is_some() {
+                    cur = cand;
+                    reduced = true;
+                }
+            }
+            start += chunk;
+        }
+        if chunk == 1 {
+            if !reduced {
+                break;
+            }
+        } else if !reduced {
+            chunk = (chunk / 2).max(1);
+        }
+    }
+    while cur.last() == Some(&0) {
+        cur.pop(); // trailing zeros ≡ plan exhaustion
+    }
+    cur
+}
+
+/// A fully shrunk failing schedule: replaying
+/// `run_model_schedule(&ops, seed, Some(plan))` reproduces `failure`.
+pub struct CounterExample {
+    pub seed: u64,
+    pub ops: Vec<ModelOp>,
+    pub failure: String,
+    pub plan: Vec<u32>,
+}
+
+/// Search up to `schedules` random schedules of `rounds` ops; on the
+/// first divergence, shrink the op stream (ddmin) and then the
+/// interleaving choices, and return the minimal reproducer.
+pub fn model_search(base_seed: u64, schedules: usize, rounds: usize) -> Option<CounterExample> {
+    for i in 0..schedules {
+        let seed = crate::util::mix64(base_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .max(1);
+        let ops = gen_model_ops(seed, 3, rounds);
+        if run_model_schedule(&ops, seed, None).failure.is_some() {
+            let (ops, _) = shrink_model_ops(&ops, seed);
+            let rec = run_model_schedule(&ops, seed, None);
+            let plan = shrink_model_choices(&ops, seed, &rec.choices);
+            let failure = run_model_schedule(&ops, seed, Some(plan.clone()))
+                .failure
+                .expect("shrunk reproducer no longer fails");
+            return Some(CounterExample { seed, ops, failure, plan });
+        }
+    }
+    None
+}
+
+/// Schedule budget for the model tier: `LOCO_MODEL_BUDGET` overrides
+/// the caller's default (CI pins it; local runs can crank it up).
+pub fn model_budget(default: usize) -> usize {
+    std::env::var("LOCO_MODEL_BUDGET").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Persist a counterexample under `target/model/` (CI archives the
+/// directory as an artifact) and return the path.
+pub fn save_counterexample(ce: &CounterExample) -> std::path::PathBuf {
+    let dir = std::path::Path::new("target").join("model");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("counterexample-{:016x}.txt", ce.seed));
+    let mut text = format!(
+        "seed: {:#x}\nfailure: {}\nops ({}):\n",
+        ce.seed,
+        ce.failure,
+        ce.ops.len()
+    );
+    for op in &ce.ops {
+        text.push_str(&format!("  {op:?}\n"));
+    }
+    text.push_str(&format!("plan ({} choices): {:?}\n", ce.plan.len(), ce.plan));
+    let _ = std::fs::write(&path, text);
+    path
+}
+
 // ---- linearizability checking (paper Appendix C) ----------------------
 
 /// One recorded operation of a kvstore history.

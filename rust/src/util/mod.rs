@@ -45,8 +45,16 @@ impl Backoff {
         Backoff { spins: 0 }
     }
 
+    /// Wait a beat. Under the deterministic simulator this is the
+    /// universal choke point: instead of burning cycles it pumps the sim
+    /// scheduler one step (delivering completions, running services,
+    /// advancing virtual time), which is what makes every blocking wait
+    /// in the stack sim-compatible without per-call-site surgery.
     #[inline]
     pub fn snooze(&mut self) {
+        if crate::sim::maybe_pump() {
+            return;
+        }
         if self.spins < 64 {
             for _ in 0..(1 << (self.spins / 8).min(5)) {
                 std::hint::spin_loop();
@@ -59,6 +67,79 @@ impl Backoff {
 
     pub fn reset(&mut self) {
         self.spins = 0;
+    }
+}
+
+/// A wait deadline that works under both wall-clock and virtual time.
+///
+/// The stack's blocking waits carry "this can only mean a wedge" bailouts
+/// (30 s of wall clock). Under the simulator those deadlines are
+/// meaningless — virtual time can blow through "30 s" in microseconds of
+/// host time, and a wall-clock read is nondeterministic. `WaitBudget`
+/// keeps the wall-clock behavior byte-identical in threaded/inline modes
+/// and swaps in deterministic equivalents under sim:
+///
+/// * [`WaitBudget::wedge`]: trips only after many consecutive checks with
+///   **zero scheduler progress** (nothing ran, no clock advance) — i.e. a
+///   genuine deadlock, never a long-but-live virtual wait.
+/// * [`WaitBudget::grace`]: a fixed number of scheduler pumps — a
+///   deterministic stand-in for short wall grace windows (e.g. the
+///   ticket lock's dead-holder grace).
+pub enum WaitBudget {
+    Wall { deadline: std::time::Instant },
+    SimProgress { last: u64, stale: u32, limit: u32 },
+    SimIters { left: u32 },
+}
+
+impl WaitBudget {
+    /// How many consecutive zero-progress pumps count as a wedge under
+    /// sim. Each check follows a full scheduler pump, so any live run
+    /// resets the streak long before this.
+    const WEDGE_STALE_LIMIT: u32 = 64;
+
+    /// A wedge-detection budget: `wall` of real time in threaded mode, a
+    /// zero-progress streak under sim.
+    pub fn wedge(wall: std::time::Duration) -> Self {
+        match crate::sim::progress() {
+            Some(p) => WaitBudget::SimProgress { last: p, stale: 0, limit: Self::WEDGE_STALE_LIMIT },
+            None => WaitBudget::Wall { deadline: std::time::Instant::now() + wall },
+        }
+    }
+
+    /// A bounded grace window: `wall` of real time in threaded mode,
+    /// `sim_iters` scheduler pumps under sim.
+    pub fn grace(wall: std::time::Duration, sim_iters: u32) -> Self {
+        match crate::sim::progress() {
+            Some(_) => WaitBudget::SimIters { left: sim_iters },
+            None => WaitBudget::Wall { deadline: std::time::Instant::now() + wall },
+        }
+    }
+
+    /// Check (and consume) the budget. Call once per wait-loop iteration,
+    /// after the iteration's `Backoff::snooze`.
+    pub fn expired(&mut self) -> bool {
+        match self {
+            WaitBudget::Wall { deadline } => std::time::Instant::now() >= *deadline,
+            WaitBudget::SimProgress { last, stale, limit } => {
+                let p = crate::sim::progress().unwrap_or(0);
+                if p != *last {
+                    *last = p;
+                    *stale = 0;
+                    false
+                } else {
+                    *stale += 1;
+                    *stale >= *limit
+                }
+            }
+            WaitBudget::SimIters { left } => {
+                if *left == 0 {
+                    true
+                } else {
+                    *left -= 1;
+                    false
+                }
+            }
+        }
     }
 }
 

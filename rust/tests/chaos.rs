@@ -140,6 +140,14 @@ fn chaos_seeds() -> u64 {
     std::env::var("LOCO_CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(200)
 }
 
+/// `LOCO_CHAOS_REPLAY=<seed>` narrows every chaos test to that one
+/// seed: the exact schedule a CI failure printed reruns alone (with
+/// `--nocapture` and a debugger's worth of iteration speed) instead of
+/// the whole matrix.
+fn replay_seed() -> Option<u64> {
+    std::env::var("LOCO_CHAOS_REPLAY").ok().and_then(|v| v.parse().ok())
+}
+
 fn now(clock: &Instant) -> u64 {
     clock.elapsed().as_nanos() as u64
 }
@@ -238,6 +246,11 @@ fn run_seeded_history(seed: u64) {
 /// every history linearizable. A failure prints the seed to replay.
 #[test]
 fn chaos_linearizability_fault_matrix() {
+    if let Some(seed) = replay_seed() {
+        println!("LOCO_CHAOS_REPLAY: rerunning matrix schedule {seed} alone");
+        run_seeded_history(seed);
+        return;
+    }
     let seeds = chaos_seeds();
     for seed in 0..seeds {
         run_seeded_history(seed);
@@ -256,6 +269,10 @@ fn chaos_linearizability_fault_matrix() {
 /// survivors' mutations must either complete or fail fast — never hang.
 #[test]
 fn chaos_crash_stop_rehome_linearizable() {
+    if let Some(seed) = replay_seed() {
+        run_crash_schedule(seed);
+        return;
+    }
     for seed in [1u64, 2, 5, 9] {
         run_crash_schedule(seed);
     }
@@ -271,6 +288,10 @@ fn chaos_crash_stop_rehome_linearizable() {
 /// is observably dead.
 #[test]
 fn chaos_crash_mid_operation_linearizable() {
+    if let Some(seed) = replay_seed() {
+        run_mid_op_crash_schedule(seed, false);
+        return;
+    }
     for seed in [4u64, 7] {
         run_mid_op_crash_schedule(seed, false);
     }
@@ -288,6 +309,10 @@ fn chaos_crash_mid_operation_linearizable() {
 /// linearizes.
 #[test]
 fn chaos_crash_mid_relocation_linearizable() {
+    if let Some(seed) = replay_seed() {
+        run_mid_op_crash_schedule(seed, true);
+        return;
+    }
     for seed in [3u64, 8, 11] {
         run_mid_op_crash_schedule(seed, true);
     }
@@ -487,4 +512,83 @@ fn run_crash_schedule(seed: u64) {
     // The whole history — through the crash and re-home — linearizes.
     check_history(KEYS, &all, &format!("crash seed {seed} (dead node {dead})"));
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+}
+
+// ---- simulated replay -------------------------------------------------
+
+/// One seeded chaos-shaped schedule under the **simulator** (same
+/// kvstore geometry as the crash schedules, mixed value sizes, a
+/// mid-run crash-stop of node 2): every op result and read value folds
+/// into a history hash, XORed with the fabric's event-trace hash.
+fn sim_history_hash(seed: u64) -> u64 {
+    let (sim, cluster, mgrs, kvs) = loco::testkit::sim_kv_cluster(3, seed, crash_cfg());
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    let mut rng = Rng::seeded(seed ^ 0xC1A0);
+    let mut hist: Vec<u64> = Vec::new();
+    for opno in 0..40u64 {
+        if opno == 20 {
+            cluster.crash(2);
+            sim.settle(); // recovery runs to quiescence under virtual time
+        }
+        // Nodes 0 and 1 issue (both stay alive); node 2's keys re-home.
+        let node = rng.gen_range(2) as usize;
+        let key = rng.gen_range(CONTENDED);
+        match rng.gen_range(4) {
+            0 => {
+                let len = 1 + (opno % MAX_WORDS as u64) as usize;
+                let r = kvs[node].insert(&ctxs[node], key, &vec![1000 + opno; len]);
+                hist.push(match r {
+                    Ok(true) => 1,
+                    Ok(false) => 2,
+                    Err(_) => 3,
+                });
+            }
+            1 => {
+                let r = kvs[node].try_update(&ctxs[node], key, &[2000 + opno; 2]);
+                hist.push(match r {
+                    Ok(true) => 4,
+                    Ok(false) => 5,
+                    Err(_) => 6,
+                });
+            }
+            2 => {
+                let r = kvs[node].try_remove(&ctxs[node], key);
+                hist.push(match r {
+                    Ok(true) => 7,
+                    Ok(false) => 8,
+                    Err(_) => 9,
+                });
+            }
+            _ => match kvs[node].get(&ctxs[node], key) {
+                Some(v) => {
+                    hist.push(10 + v.len() as u64);
+                    hist.extend(v);
+                }
+                None => hist.push(10),
+            },
+        }
+    }
+    sim.settle();
+    loco::util::fnv64(&hist) ^ sim.trace_hash()
+}
+
+/// The replay guarantee behind `LOCO_CHAOS_REPLAY`: under the
+/// simulator, rerunning a seed reproduces the **identical history** —
+/// every op result, every read value, and the full fabric event trace —
+/// not merely the same fault schedule (which is all the threaded matrix
+/// can pin down).
+#[test]
+fn chaos_replay_reproduces_identical_history_hash() {
+    let seed = replay_seed().unwrap_or(21);
+    let first = sim_history_hash(seed);
+    let second = sim_history_hash(seed);
+    assert_eq!(
+        first, second,
+        "seed {seed}: simulated chaos schedule must replay bit-identically"
+    );
+    assert_ne!(
+        first,
+        sim_history_hash(seed + 1),
+        "adjacent seeds must explore different histories"
+    );
 }

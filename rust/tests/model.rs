@@ -1,0 +1,259 @@
+//! The model tier: deterministic-simulation determinism checks plus the
+//! model-based harness (BTreeMap reference model, randomized op/fault
+//! schedules, ddmin shrinking of both the op stream and the scheduler's
+//! interleaving choices).
+//!
+//! The schedule width defaults small for local runs; CI's `model` job
+//! pins it with `LOCO_MODEL_BUDGET` and archives `target/model/` (the
+//! shrunk-counterexample artifacts) on failure. The same test binary
+//! doubles as the mutation smoke-check: built with
+//! `RUSTFLAGS='--cfg loco_mutant'` the kvstore skips cache-invalidation
+//! broadcasts, and [`model_reference_check`] flips from "must find
+//! nothing" to "must find the bug and shrink it to ≤ 20 ops".
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use loco::channels::{AtomicVar, Sst, TicketLock};
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
+use loco::sim::SimExecutor;
+use loco::testkit::{
+    gen_model_ops, model_budget, model_kv_config, model_search, run_model_schedule,
+    save_counterexample, sim_fabric, sim_kv_cluster,
+};
+
+// ---- the model harness ------------------------------------------------
+
+/// The tier's main property: `LOCO_MODEL_BUDGET` (default 60) random
+/// schedules checked against the reference model. A healthy build must
+/// find nothing; the `loco_mutant` build (broken invalidation path)
+/// must find the stale-read bug within the budget and shrink the
+/// reproducer to at most 20 ops.
+#[test]
+fn model_reference_check() {
+    let budget = model_budget(60);
+    let found = model_search(0xB0DE1, budget, 40);
+    if cfg!(loco_mutant) {
+        let ce = found.unwrap_or_else(|| {
+            panic!("mutation smoke-check: {budget} schedules missed the broken invalidation path")
+        });
+        let path = save_counterexample(&ce);
+        assert!(
+            ce.ops.len() <= 20,
+            "shrinker left {} ops (≤ 20 required): {:?}",
+            ce.ops.len(),
+            ce.ops
+        );
+        // The shrunk schedule must replay to the identical failure.
+        let rerun = run_model_schedule(&ce.ops, ce.seed, Some(ce.plan.clone()));
+        assert_eq!(
+            rerun.failure.as_deref(),
+            Some(ce.failure.as_str()),
+            "replayed counterexample diverged from the recorded failure"
+        );
+        println!(
+            "mutant caught: seed {:#x}, shrunk to {} ops / {} forced choices ({}): {}",
+            ce.seed,
+            ce.ops.len(),
+            ce.plan.len(),
+            path.display(),
+            ce.failure
+        );
+    } else if let Some(ce) = found {
+        let path = save_counterexample(&ce);
+        panic!(
+            "model divergence (seed {:#x}, shrunk to {} ops, artifact {}): {}",
+            ce.seed,
+            ce.ops.len(),
+            path.display(),
+            ce.failure
+        );
+    } else {
+        println!("model tier: {budget} schedules agree with the reference model");
+    }
+}
+
+/// Replaying a schedule is bit-exact: the same (ops, seed) runs to the
+/// identical event-trace hash, and forcing the recorded choice stream
+/// reproduces it again. A different seed explores a different trace.
+#[test]
+fn model_schedule_replay_is_bit_identical() {
+    let ops = gen_model_ops(11, 3, 25);
+    let a = run_model_schedule(&ops, 11, None);
+    let b = run_model_schedule(&ops, 11, None);
+    assert_eq!(a.trace, b.trace, "same schedule, same seed: traces must be identical");
+    assert_eq!(a.failure, b.failure);
+    assert_eq!(a.choices, b.choices, "the drawn choice stream must replay identically");
+    let forced = run_model_schedule(&ops, 11, Some(a.choices.clone()));
+    assert_eq!(forced.trace, a.trace, "forcing the recorded choices must reproduce the trace");
+    let other = run_model_schedule(&ops, 12, None);
+    assert_ne!(a.trace, other.trace, "a different seed must explore a different trace");
+}
+
+// ---- raw-fabric determinism (the tentpole's acceptance test) ----------
+
+/// One seeded run: a 64-node simulated cluster under the chaos fault
+/// plan, every node hammering one shared remote counter. Returns the
+/// event-trace hash.
+fn run_counter_trace(seed: u64, n: usize, rounds: u64) -> u64 {
+    let cluster = Cluster::new(n, sim_fabric(seed).with_mem_words(1 << 16));
+    let sim = SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let vars: Vec<AtomicVar> = mgrs.iter().map(|m| AtomicVar::new(m, "ctr", 0, false)).collect();
+    for v in &vars {
+        v.wait_ready(Duration::from_secs(30));
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    for _ in 0..rounds {
+        for i in 0..n {
+            vars[i].fetch_add(&ctxs[i], 1);
+        }
+    }
+    // Completions may be duplicated/reordered by the fault plan, but
+    // every atomic executes exactly once.
+    assert_eq!(vars[0].load(&ctxs[0]), rounds * n as u64, "seed {seed}: lost updates");
+    sim.settle();
+    sim.trace_hash()
+}
+
+/// Same seed ⇒ bit-identical event trace, at cluster scale (64 nodes —
+/// far past what the threaded fabric can interleave in reasonable wall
+/// time), faults and all. Different seed ⇒ different trace.
+#[test]
+fn sim_64_nodes_same_seed_bit_identical() {
+    let a = run_counter_trace(42, 64, 3);
+    let b = run_counter_trace(42, 64, 3);
+    assert_eq!(a, b, "same seed must replay a bit-identical event trace");
+    let c = run_counter_trace(43, 64, 3);
+    assert_ne!(a, c, "different seeds must explore different traces");
+}
+
+// ---- virtual-time deadline regression ---------------------------------
+
+/// The wedge deadlines ("30 s and no progress ⇒ panic") are wall-time
+/// bounds. Under the simulator virtual time races ahead of wall time by
+/// orders of magnitude — a single blocking op here takes 35 *virtual*
+/// seconds — and must never trip them: progress, not elapsed virtual
+/// time, is what the sim-mode budgets count.
+#[test]
+fn virtual_time_past_30s_does_not_trip_wedge_deadlines() {
+    let mut lat = LatencyModel::fast_sim();
+    lat.atomic_ns = 35_000_000_000; // one remote atomic = 35 virtual seconds
+    let cluster = Cluster::new(2, FabricConfig::sim(lat, 9).with_mem_words(1 << 16));
+    let _sim = SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..2 as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let vars: Vec<AtomicVar> =
+        mgrs.iter().map(|m| AtomicVar::with_initial(m, "slow", 0, false, 0)).collect();
+    for v in &vars {
+        v.wait_ready(Duration::from_secs(30));
+    }
+    let ctx1 = mgrs[1].ctx();
+    for k in 0..3 {
+        // Each of these waits spans 35 virtual seconds inside the ack
+        // spin — past every "30 s" wedge bound in the wait paths.
+        assert_eq!(vars[1].fetch_add(&ctx1, 1), k);
+    }
+    assert!(
+        cluster.clock().now_ns() > 100_000_000_000,
+        "expected > 100 virtual seconds to have elapsed, got {} ns",
+        cluster.clock().now_ns()
+    );
+}
+
+// ---- channel behaviors under the simulator ----------------------------
+
+/// `Sst::pull_all` on a never-written (empty) table: every row must
+/// validate as its all-zero initial value — including the multi-word
+/// checksummed layout — rather than checksum-retrying forever.
+#[test]
+fn sst_pull_all_empty_table_under_sim() {
+    let n = 3;
+    let cluster = Cluster::new(n, sim_fabric(5));
+    let _sim = SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let ssts: Vec<Sst> = mgrs.iter().map(|m| Sst::new(m, "empty", 3)).collect();
+    for s in &ssts {
+        s.wait_ready(Duration::from_secs(30));
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    for i in 0..n {
+        assert_eq!(
+            ssts[i].pull_all(&ctxs[i]),
+            vec![vec![0, 0, 0]; n],
+            "node {i}: empty table must scan as all zeros"
+        );
+    }
+    // And a partial publish leaves the untouched rows readable.
+    ssts[1].publish_mine(&ctxs[1], &[7, 8, 9]).wait();
+    assert_eq!(ssts[0].pull_all(&ctxs[0]), vec![vec![0, 0, 0], vec![7, 8, 9], vec![0, 0, 0]]);
+}
+
+/// `try_lock` against a crash-stopped *holder* (live host): the waiter
+/// must consume its post-crash grace and fail fast with `PeerFailed` —
+/// bounded by pump count under the simulator, where the wall-clock
+/// grace window would never expire.
+#[test]
+fn ticket_lock_try_lock_crashed_holder_under_sim() {
+    let n = 3;
+    let cluster = Cluster::new(n, sim_fabric(6));
+    let sim = SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let locks: Vec<TicketLock> = mgrs.iter().map(|m| TicketLock::new(m, "lk", 0)).collect();
+    for l in &locks {
+        l.wait_ready(Duration::from_secs(30));
+    }
+    let ctx1 = mgrs[1].ctx();
+    let ctx2 = mgrs[2].ctx();
+    // Node 1 takes the lock, then crash-stops without releasing. The
+    // host (node 0) stays alive, so the ticket words remain readable —
+    // the waiter's spin is "healthy" forever unless the grace bounds it.
+    locks[1].lock(&ctx1);
+    cluster.crash(1);
+    sim.settle();
+    match locks[2].try_lock(&ctx2) {
+        Err(loco::Error::PeerFailed(msg)) => {
+            assert!(
+                msg.contains("grace"),
+                "expected the post-crash grace to bound the wait, got: {msg}"
+            );
+        }
+        other => panic!("try_lock against a crashed holder returned {other:?}"),
+    }
+}
+
+// ---- model config sanity ----------------------------------------------
+
+/// The full kvstore stack comes up and serves cross-node traffic inside
+/// the single-threaded simulator (managers, tracker services, locks,
+/// replication — all as scheduler services, no OS threads).
+#[test]
+fn sim_kv_cluster_smoke() {
+    let (sim, _cluster, mgrs, kvs) = sim_kv_cluster(2, 3, model_kv_config());
+    let ctx0 = mgrs[0].ctx();
+    let ctx1 = mgrs[1].ctx();
+    assert!(kvs[0].insert(&ctx0, 1, &[10, 20]).unwrap());
+    assert_eq!(kvs[1].get(&ctx1, 1), Some(vec![10, 20]));
+    assert_eq!(kvs[1].try_update(&ctx1, 1, &[11, 21]), Ok(true));
+    // (Read from the key's home node — immune to the `loco_mutant`
+    // stale-cache build, which this binary is also compiled under.)
+    assert_eq!(kvs[0].get(&ctx0, 1), Some(vec![11, 21]));
+    sim.settle();
+}
+
+/// The model tier runs every consistency mechanism at once; if someone
+/// trims the config (e.g. disables replication) the crash schedules
+/// silently stop testing recovery. Pin the load-bearing fields.
+#[test]
+fn model_config_exercises_all_mechanisms() {
+    let cfg = model_kv_config();
+    assert!(cfg.replicate, "model tier must test crash recovery");
+    assert!(cfg.fence_updates);
+    assert!(cfg.read_cache_bytes > 0, "model tier must test the invalidation protocol");
+    assert!(cfg.coalesce_invals);
+    assert!(cfg.value_words >= 2, "model values must take the checksummed multi-word path");
+}
