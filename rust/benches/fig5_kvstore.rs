@@ -148,14 +148,14 @@ fn main() {
     // zipfian at 8 B, 1 KB, and the mixed 8 B-1 KB stream whose
     // growing updates relocate mid-bench. Cache + replication on -- the
     // production-shaped configuration.
-    let mut t5 = Table::new(&["value size", "Mops/s (50/50 zipfian, cache+replicate)"]);
+    let mut t5 = Table::new(&["value size", "Mops/s (50/50 zipfian, cache+2 replicas)"]);
     for value_dist in
         [ValueDist::Fixed(1), ValueDist::Fixed(128), ValueDist::MIXED_8B_1KB]
     {
         let cell = Fig5Cell {
             value_dist,
             cache: true,
-            replicate: true,
+            replicas: 2,
             ..Fig5Cell::words1(
                 KvSystem::Loco,
                 nodes,

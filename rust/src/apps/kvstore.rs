@@ -95,37 +95,58 @@
 //!
 //! # Failure model & recovery
 //!
-//! Under fault injection (`FabricConfig::faults`) the store survives a
-//! **single crash-stop** per cluster (see `docs/ARCHITECTURE.md`,
-//! § Failure model & recovery): with [`KvConfig::replicate`] on, every
-//! slot frame is mirrored to a backup node, and on a detected crash the
-//! backup re-homes the dead node's key range from its replica (fresh
-//! generations, compare-and-swap `OP_REHOME` broadcasts, an `OP_EPOCH`
-//! marker to purge leftovers). Reads and locked mutations that catch the dead
-//! home park in `wait_entry_change` and resume against the new
-//! location; keys whose *lock* is hosted on the corpse are read-only
-//! (mutations return `Err(Error::PeerFailed)`). Without replication a
-//! crash behaves as a delete of every key the dead node homed.
+//! Under fault injection (`FabricConfig::faults`) the store survives up
+//! to `replicas − 1` crash-stops per key range (see
+//! `docs/ARCHITECTURE.md`, § Elastic membership & replication): with
+//! [`KvConfig::replicas`] ≥ 2, every slot frame is mirrored to the
+//! `replicas − 1` **static successor** nodes of its home in one covered
+//! write chain, and on a detected crash the *first live* backup in the
+//! dead node's chain re-homes its key range from the hosted replica
+//! (fresh generations, compare-and-swap `OP_REHOME` broadcasts, an
+//! `OP_EPOCH` marker to purge leftovers) — re-replicating each
+//! recovered frame to its own successors, which restores the
+//! replication factor (anti-entropy repair). Reads whose home is dead
+//! **fail over** to the first live replica's backup frame instead of
+//! parking (graceful degradation; see `failover_read` for the
+//! linearizability argument); locked mutations that catch the dead home
+//! park in `wait_entry_change` and resume against the new location;
+//! keys whose *lock* is hosted on the corpse are read-only (mutations
+//! return `Err(Error::PeerFailed)`). Without replication a crash
+//! behaves as a delete of every key the dead node homed.
+//!
+//! # Elastic membership
+//!
+//! Membership is **bidirectional** (see
+//! [`Membership`](crate::core::manager::Membership)): every tracker
+//! broadcast carries the sender's membership **epoch** (appended as the
+//! message's last word) so stale-owner broadcasts — e.g. a pre-crash
+//! message delivered after its slot re-joined — are rejected, not just
+//! ones from currently dead homes. A spare (or revived) node enters
+//! with [`KvStore::join`], pulls the key ranges the epoch-versioned
+//! ownership table now assigns it with [`KvStore::rebalance`] — the
+//! relocation primitive lifted into a range-migration driver, so reads
+//! and writes keep landing mid-reshard and a joiner crash reverts via
+//! the origin-tracking story — and completes with
+//! [`KvStore::activate`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
 
-use crate::channels::read_cache::{CacheStats, FillToken, ReadCache};
+use crate::channels::read_cache::{CacheStats, EpochGate, FillToken, ReadCache};
 use crate::channels::ringbuffer::{RingReceiver, RingSender};
 use crate::channels::ticket_lock::TicketLock;
 use crate::core::ack::AckKey;
 use crate::core::ctx::{FenceScope, MemRef, ThreadCtx};
 use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
 use crate::core::index::ShardedIndex;
-use crate::core::manager::Manager;
+use crate::core::manager::{Manager, Membership};
 use crate::core::mem_pool::{
     hdr_class, hdr_len, hdr_reloc, pack_hdr, SlabAllocator, SlabGeometry,
 };
 use crate::fabric::{NodeId, Region};
 use crate::util::{fnv64, Backoff};
-use crate::workload::cityhash::city_hash64_u64;
 use crate::{Error, Result};
 
 pub use crate::core::index::IndexEntry;
@@ -162,6 +183,18 @@ const OP_FREE: u64 = 6;
 /// whatever the arrival order, while crashed partial broadcasts still
 /// converge everywhere.
 const OP_REHOME: u64 = 7;
+
+/// Membership: the sender begins **joining** — a designated spare
+/// activating, or a previously crashed slot being reused after
+/// [`crate::fabric::Cluster::revive`]: `[OP_JOIN, node]`. Receivers
+/// move the slot to the Joining state (clearing its dead/spare bits)
+/// and bump their membership epoch; the ownership table recomputes on
+/// next use and [`KvStore::rebalance`] migrates the ranges.
+const OP_JOIN: u64 = 8;
+
+/// Membership: the sender finished joining (its migration converged):
+/// `[OP_ALIVE, node]`.
+const OP_ALIVE: u64 = 9;
 
 /// `OP_INSERT` message lengths: the 5-word plain form, and the 8-word
 /// relocation form carrying the origin entry (`[…, old_node, old_slot,
@@ -222,14 +255,17 @@ pub struct KvConfig {
     /// don't bump the generation counter). There is no cross-node
     /// config handshake; keep configs identical.
     pub read_cache_bytes: usize,
-    /// Replicate every slot frame to a **backup node** (`(home+1) mod
-    /// n`) so a crash-stopped home's key range can be re-homed from the
-    /// surviving replica instead of lost (see `docs/ARCHITECTURE.md`,
-    /// § Failure model & recovery). Roughly doubles mutation write
-    /// cost; requires `fence_updates` (the backup frame must be placed
-    /// before a mutation returns) and at least two nodes. Without it a
-    /// crash drops the dead node's keys from every index. Default off.
-    pub replicate: bool,
+    /// **Total** copies of every slot frame, the authoritative one
+    /// included: `1` = no replication (a crash drops the dead node's
+    /// keys from every index), `k ≥ 2` mirrors each frame to the home's
+    /// `k − 1` **static successors** (`(home+1+r) mod n`) so a key
+    /// range survives the loss of any `k − 1` of its replicas — reads
+    /// fail over to the first live replica while recovery re-homes and
+    /// re-replicates (see `docs/ARCHITECTURE.md`, § Elastic membership
+    /// & replication). Multiplies mutation write cost by ~`k`; `k ≥ 2`
+    /// requires `fence_updates` (backup frames must be placed before a
+    /// mutation returns) and `k ≤ n`. Default 1.
+    pub replicas: usize,
     /// Coalesce `OP_INVAL` broadcasts (locality tier): concurrent
     /// in-place updates on this node merge their invalidation keys into
     /// one tracker message with a **union ack wait** — one
@@ -253,13 +289,18 @@ impl Default for KvConfig {
             fence_updates: true,
             lock_handover: true,
             read_cache_bytes: 0,
-            replicate: false,
+            replicas: 1,
             coalesce_invals: true,
         }
     }
 }
 
 impl KvConfig {
+    /// Whether slot frames carry at least one backup copy.
+    pub fn replicated(&self) -> bool {
+        self.replicas > 1
+    }
+
     /// Enable the read cache sized for a Zipfian θ=0.99 workload over
     /// `keyspace` keys (see [`ReadCache::zipfian_capacity`]), budgeted
     /// in bytes for this config's maximum value width.
@@ -294,6 +335,11 @@ struct KvShared {
     /// replicate-only). Touched only by the tracker thread (apply +
     /// recovery).
     reloc_origins: Mutex<HashMap<u64, IndexEntry>>,
+    /// The manager's membership view: epoch source for tracker-message
+    /// stamping, staleness guard for location broadcasts, and the
+    /// epoch-versioned ownership table behind [`KvStore::home_of`] and
+    /// [`KvStore::rebalance`].
+    membership: Arc<Membership>,
     tracker_ready: AtomicBool,
     shutdown: AtomicBool,
 }
@@ -376,9 +422,16 @@ pub struct KvStore {
     num_nodes: usize,
     ep: Arc<Endpoint>,
     data: Region,
-    /// The backup array this node HOSTS — replica frames for the slots
-    /// of its predecessor `(me + n - 1) mod n` (replicate only).
-    backup_hosted: Option<Region>,
+    /// The backup arrays this node HOSTS, indexed by **rank**: region
+    /// `backup{r}` holds replica frames for the slots of the node that
+    /// has us as its rank-`r` successor, i.e. home `(me − 1 − r) mod n`
+    /// (empty when `replicas == 1`).
+    backup_hosted: Vec<Region>,
+    /// Membership epoch the read cache was last filled under: on any
+    /// transition the whole locality tier drops, so entries filled
+    /// under a superseded ownership table cannot serve into the new one
+    /// (see [`EpochGate`]).
+    cache_gate: EpochGate,
     locks: Vec<TicketLock>,
     tracker_tx: Mutex<RingSender>,
     /// Coalesced-`OP_INVAL` group commit (see [`InvalCoalescer`]).
@@ -400,28 +453,41 @@ impl KvStore {
              be cached stale indefinitely"
         );
 
-        assert!(!cfg.replicate || n > 1, "replicate requires at least two nodes");
+        assert!(cfg.replicas >= 1, "replicas counts the authoritative copy; 0 stores nothing");
         assert!(
-            !cfg.replicate || cfg.fence_updates,
-            "replicate requires fence_updates: backup frames must be placed \
+            cfg.replicas <= n,
+            "replicas ({}) cannot exceed the cluster size ({n})",
+            cfg.replicas
+        );
+        assert!(
+            !cfg.replicated() || cfg.fence_updates,
+            "replicas >= 2 requires fence_updates: backup frames must be placed \
              before a mutation returns, or recovery could resurrect stale values"
         );
 
         let ep = Endpoint::new(name, me, n, Expect::AllPeers);
         let data = mgr.pool().alloc_named(&region_name(name, "data"), geo.total_words(), false);
         ep.add_local_region("data", data);
-        // With replication on, every node also hosts the backup array
-        // for its predecessor's slots (same slab geometry as `data`).
-        let backup_hosted = cfg.replicate.then(|| {
-            let r = mgr.pool().alloc_named(&region_name(name, "backup"), geo.total_words(), false);
-            ep.add_local_region("backup", r);
-            r
-        });
-        if cfg.replicate {
-            ep.expect_regions(&["data", "backup"]);
-        } else {
-            ep.expect_regions(&["data"]);
-        }
+        // With replication on, every node also hosts one backup array
+        // per rank (same slab geometry as `data`): `backup{r}` mirrors
+        // the slots of the home that has us as rank-`r` successor,
+        // `(me − 1 − r) mod n`.
+        let backup_hosted: Vec<Region> = (0..cfg.replicas - 1)
+            .map(|r| {
+                let reg_name = format!("backup{r}");
+                let reg = mgr.pool().alloc_named(
+                    &region_name(name, &reg_name),
+                    geo.total_words(),
+                    false,
+                );
+                ep.add_local_region(&reg_name, reg);
+                reg
+            })
+            .collect();
+        let mut expect: Vec<String> = vec!["data".to_string()];
+        expect.extend((0..cfg.replicas - 1).map(|r| format!("backup{r}")));
+        let expect_refs: Vec<&str> = expect.iter().map(|s| s.as_str()).collect();
+        ep.expect_regions(&expect_refs);
         mgr.register_channel(ep.clone());
 
         // Lock array, striped across nodes.
@@ -447,6 +513,7 @@ impl KvStore {
             alloc: SlabAllocator::new(geo),
             slot_counter: (0..geo.total_slots()).map(|_| AtomicU64::new(0)).collect(),
             reloc_origins: Mutex::new(HashMap::new()),
+            membership: mgr.membership().clone(),
             tracker_ready: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
@@ -458,6 +525,7 @@ impl KvStore {
             ep,
             data,
             backup_hosted,
+            cache_gate: EpochGate::new(),
             locks,
             tracker_tx: Mutex::new(tracker_tx),
             inval: InvalCoalescer::new(),
@@ -555,11 +623,16 @@ impl KvStore {
         &self.cfg
     }
 
-    /// Home node a prefill partitioner should use for `key` (CityHash64
-    /// placement, §7.2). Online inserts always go to the *inserting*
-    /// node's data array, as in the paper.
+    /// Home node a prefill partitioner (and the rebalance driver)
+    /// should use for `key`: the current owner of the key's range in
+    /// the epoch-versioned ownership table — under a healthy full
+    /// membership this degenerates to round-robin over nodes, but it
+    /// tracks deaths, spares, and joins (see [`Membership::owners`]).
+    /// Online inserts still go to the *inserting* node's data array, as
+    /// in the paper; [`KvStore::rebalance`] is what pulls keys toward
+    /// their owners.
     pub fn home_of(&self, key: u64) -> NodeId {
-        (city_hash64_u64(key) % self.num_nodes as u64) as NodeId
+        self.shared.membership.owner(Membership::range_of(key), self.cfg.replicas)
     }
 
     #[inline]
@@ -641,35 +714,56 @@ impl KvStore {
         &self.locks[(key % self.cfg.num_locks as u64) as usize]
     }
 
-    /// The node holding the backup replica of `node`'s slot array.
-    fn backup_of(&self, node: NodeId) -> NodeId {
-        ((node as usize + 1) % self.num_nodes) as NodeId
+    /// Host node of the ticket-lock stripe guarding `key`. Stripes are
+    /// placed at construction and do **not** fail over: while the host
+    /// is down, mutations of `key` fail fast and [`KvStore::rebalance`]
+    /// skips it. The key stays readable and crash re-homes still cover
+    /// it (recovery takes no key locks), but it cannot migrate — so
+    /// convergence checkers exempt corpse-locked keys from placement
+    /// invariants ([`crate::testkit::check_convergence`]).
+    pub fn lock_host(&self, key: u64) -> NodeId {
+        ((key % self.cfg.num_locks as u64) as usize % self.num_nodes) as NodeId
     }
 
-    /// Backup region for slots homed on `node` (replicate only).
-    fn backup_region_of(&self, node: NodeId) -> Region {
-        let b = self.backup_of(node);
+    /// Backup replica count (`replicas − 1`).
+    #[inline]
+    fn backup_count(&self) -> usize {
+        self.cfg.replicas - 1
+    }
+
+    /// The node holding the rank-`rank` backup replica of `node`'s slot
+    /// array: its `rank+1`-th static successor.
+    fn backup_of(&self, node: NodeId, rank: usize) -> NodeId {
+        ((node as usize + 1 + rank) % self.num_nodes) as NodeId
+    }
+
+    /// Rank-`rank` backup region for slots homed on `node` (replicated
+    /// only).
+    fn backup_region_of(&self, node: NodeId, rank: usize) -> Region {
+        let b = self.backup_of(node, rank);
         if b == self.me {
-            self.backup_hosted.expect("replicate enabled")
+            self.backup_hosted[rank]
         } else {
-            self.ep.remote_region(b, "backup")
+            self.ep.remote_region(b, &format!("backup{rank}"))
         }
     }
 
-    /// Write a full class-sized frame `[hdr][value…][ck]…[cv]` into the
-    /// backup replica of OUR slot `slot` and fence it placed. A dead
-    /// backup node is tolerated (single-crash model: our backup only
-    /// matters if *we* die next, and two simultaneous crashes are out of
-    /// scope).
+    /// Write a full class-sized frame `[hdr][value…][ck]…[cv]` into
+    /// EVERY backup replica of OUR slot `slot` and fence the chain
+    /// placed — one covered write per rank, one signaled fence for all
+    /// of them (§7.2 selective signaling). Dead backup nodes are
+    /// tolerated: the surviving copies are what the fault model needs
+    /// (`replicas` copies survive any `replicas − 1` crash-stops).
     fn write_backup_frame(&self, ctx: &ThreadCtx, slot: u32, frame: &[u64], cv: u64) {
-        let region = self.backup_region_of(self.me);
         let fw = self.frame_words_of(slot);
         let mut full = vec![0u64; fw];
         full[..frame.len()].copy_from_slice(frame);
         full[fw - 1] = cv;
-        // Covered: the fence right below is the chain's signaled op.
-        ctx.write_covered(region, self.slot_off(slot), &full);
-        let _ = ctx.try_fence(FenceScope::Pair(self.backup_of(self.me)));
+        for rank in 0..self.backup_count() {
+            // Covered: the fence right below is the chain's one CQE.
+            ctx.write_covered(self.backup_region_of(self.me, rank), self.slot_off(slot), &full);
+        }
+        let _ = ctx.try_fence(FenceScope::Thread);
     }
 
     /// Block until the index entry for `key` moves away from `old` —
@@ -699,12 +793,25 @@ impl KvStore {
             assert!(
                 !budget.expired(),
                 "key {key}: home node {} crashed and no re-home/purge arrived \
-                 within 30 s (replicate={})",
+                 within 30 s (replicas={})",
                 old.node,
-                self.cfg.replicate
+                self.cfg.replicas
             );
             bo.snooze();
         }
+    }
+
+    /// Send a tracker message stamped with this node's membership epoch
+    /// — appended as the **last** word, so receivers strip it before
+    /// parsing and every per-opcode layout stays unchanged. The stamp is
+    /// what lets receivers reject stale-owner broadcasts (a pre-crash
+    /// message delivered after its sender's slot re-joined), not just
+    /// ones from currently dead homes; see `apply_tracker`.
+    fn send_tracker(&self, ctx: &ThreadCtx, tx: &RingSender, msg: &[u64]) {
+        let mut stamped = Vec::with_capacity(msg.len() + 1);
+        stamped.extend_from_slice(msg);
+        stamped.push(self.shared.membership.epoch());
+        tx.send(ctx, &stamped);
     }
 
     /// The cache serves only *remote-homed* slots: local reads are
@@ -713,6 +820,21 @@ impl KvStore {
     #[inline]
     fn cache_for(&self, e: &IndexEntry) -> Option<&ReadCache> {
         self.shared.cache.as_ref().filter(|_| e.node != self.me)
+    }
+
+    /// Epoch-key the locality tier against elastic membership: on any
+    /// membership transition (death, join, join-complete) the whole
+    /// cache drops, so entries filled under a superseded ownership
+    /// table cannot serve into the new one. Exactly one thread performs
+    /// the clear per transition (see [`EpochGate`]); read paths call
+    /// this before consulting the cache.
+    #[inline]
+    fn check_cache_epoch(&self) {
+        if let Some(cache) = &self.shared.cache {
+            if self.cache_gate.advance(self.shared.membership.epoch()) {
+                cache.clear();
+            }
+        }
     }
 
     // ---- operations -------------------------------------------------
@@ -769,7 +891,7 @@ impl KvStore {
             // never-linearized insert is harmless (no reader could have
             // relied on EMPTY — the insert never responded), while the
             // reverse order could lose an insert that *did* respond.
-            if self.cfg.replicate {
+            if self.cfg.replicated() {
                 self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
             }
 
@@ -777,7 +899,7 @@ impl KvStore {
             self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
             {
                 let tx = self.tracker_tx.lock().unwrap();
-                tx.send(ctx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
+                self.send_tracker(ctx, &tx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
                 let pos = tx.position();
                 tx.wait_all_acked(ctx, pos);
             }
@@ -914,7 +1036,7 @@ impl KvStore {
         let counter = self.bump_counter(slot);
         let frame = self.build_frame(slot, value, true);
         self.store_frame_local(ctx, slot, &frame, counter << 1);
-        if self.cfg.replicate {
+        if self.cfg.replicated() {
             // Valid in the backup: if we crash before setting the live
             // bit, recovery resurrects the relocated value — the update
             // never responded, so either outcome is linearizable, and
@@ -928,8 +1050,9 @@ impl KvStore {
             // so a crash of THIS node mid-protocol reverts the key to
             // its old location instead of dropping it.
             let tx = self.tracker_tx.lock().unwrap();
-            tx.send(
+            self.send_tracker(
                 ctx,
+                &tx,
                 &[
                     OP_INSERT,
                     key,
@@ -972,7 +1095,7 @@ impl KvStore {
         }
         {
             let tx = self.tracker_tx.lock().unwrap();
-            tx.send(ctx, &[OP_FREE, old.node as u64, old.slot as u64, key]);
+            self.send_tracker(ctx, &tx, &[OP_FREE, old.node as u64, old.slot as u64, key]);
             let pos = tx.position();
             tx.wait_all_acked(ctx, pos);
         }
@@ -985,8 +1108,8 @@ impl KvStore {
     /// mirrored to the backup replica when replication is on, then fence
     /// so the write is placed before the lock release (§7.2). `Err` iff
     /// the home node crash-stopped before placement was proven — the
-    /// caller re-resolves and retries; a dead *backup* is tolerated
-    /// (single-crash model).
+    /// caller re-resolves and retries; dead *backups* are tolerated
+    /// (the surviving copies satisfy the `replicas − 1` fault budget).
     ///
     /// With `fence_updates` the frame writes are **covered** (selective
     /// signaling): no CQE per frame — the fence's flushing read is the
@@ -1001,19 +1124,20 @@ impl KvStore {
         let buf = self.build_frame(e.slot, value, false);
         if self.cfg.fence_updates {
             ctx.write_covered(region, off, &buf); // the fence covers the chain
-            if self.cfg.replicate {
-                // Mirror [hdr][value][ck]; the cv word is untouched
-                // (in-place updates do not change the generation).
-                ctx.write_covered(self.backup_region_of(e.node), off, &buf);
+            for rank in 0..self.backup_count() {
+                // Mirror [hdr][value][ck] to every rank; the cv word is
+                // untouched (in-place updates do not change the
+                // generation).
+                ctx.write_covered(self.backup_region_of(e.node, rank), off, &buf);
             }
         } else {
             ctx.write(region, off, &buf); // unfenced ablation: completion dropped
-            if self.cfg.replicate {
-                ctx.write(self.backup_region_of(e.node), off, &buf);
+            for rank in 0..self.backup_count() {
+                ctx.write(self.backup_region_of(e.node, rank), off, &buf);
             }
         }
         if self.cfg.fence_updates {
-            let scope = if self.cfg.replicate {
+            let scope = if self.cfg.replicated() {
                 FenceScope::Thread // covers home and backup peers alike
             } else {
                 FenceScope::Pair(e.node)
@@ -1031,8 +1155,9 @@ impl KvStore {
                         e.node
                     )));
                 }
-                // Only a dead *backup* remains: tolerated (single-crash
-                // model) — the home's flush still completed.
+                // Only dead *backups* remain: tolerated — the home's
+                // flush still completed and the surviving copies cover
+                // the fault budget.
             }
         }
         Ok(())
@@ -1071,7 +1196,7 @@ impl KvStore {
             // ack wait) per chunk, per caller.
             let tx = self.tracker_tx.lock().unwrap();
             for chunk in keys.chunks(INVAL_CHUNK) {
-                tx.send(ctx, &encode_inval(chunk));
+                self.send_tracker(ctx, &tx, &encode_inval(chunk));
                 let pos = tx.position();
                 tx.wait_all_acked(ctx, pos);
             }
@@ -1121,7 +1246,7 @@ impl KvStore {
     fn send_inval_snapshot(&self, ctx: &ThreadCtx, keys: &[u64]) {
         let tx = self.tracker_tx.lock().unwrap();
         for chunk in keys.chunks(INVAL_CHUNK) {
-            tx.send(ctx, &encode_inval(chunk));
+            self.send_tracker(ctx, &tx, &encode_inval(chunk));
         }
         let pos = tx.position();
         tx.wait_all_acked(ctx, pos);
@@ -1131,6 +1256,7 @@ impl KvStore {
     /// hot-key cache when the locality tier holds a current-generation
     /// copy.
     pub fn get(&self, ctx: &ThreadCtx, key: u64) -> Option<Vec<u64>> {
+        self.check_cache_epoch();
         let e = self.shared.index.get(key)?;
         if let Some(cache) = self.cache_for(&e) {
             if let Some(v) = cache.lookup(key, e.counter) {
@@ -1149,8 +1275,15 @@ impl KvStore {
         let mut torn_rounds = 0u32;
         loop {
             if ctx.node_down(e.node) {
-                // Home crash-stopped: park until recovery re-homes the
-                // key (serve the new location) or drops it (EMPTY).
+                // Home crash-stopped. With replication, fail over to the
+                // first live replica's backup frame (graceful
+                // degradation — no parking while recovery runs); when no
+                // replica can answer safely, park until recovery
+                // re-homes the key (serve the new location) or drops it
+                // (EMPTY).
+                if let Some(value) = self.failover_read(ctx, &e) {
+                    return Some(value);
+                }
                 match self.wait_entry_change(ctx, key, &e) {
                     Ok(Some(ne)) => {
                         e = ne;
@@ -1215,6 +1348,66 @@ impl KvStore {
         }
     }
 
+    /// Failover read (replicas ≥ 2): the key's home is dead, so serve
+    /// the first live replica's hosted backup frame instead of parking
+    /// until re-home completes.
+    ///
+    /// Linearizability argument. Backup frames are fence-placed before
+    /// any mutation acknowledges, so a frame that **validates**
+    /// (checksum + generation + valid bit) holds the latest
+    /// acknowledged value — *provided no re-home has superseded it*.
+    /// That proviso is made checkable by recovery itself: the promoted
+    /// backup retires its hosted frame (unsets its cv word, a local
+    /// store) **before** broadcasting the key's new location, so a
+    /// frame that still validates was read strictly before the re-home
+    /// published — before any writer could have reached the new
+    /// location — and its value is still the freshest acknowledged one.
+    /// Conversely a frame that does NOT validate is ambiguous (retired
+    /// by recovery? unset by an in-flight delete? never written by a
+    /// never-acked insert?), so we return `None` and the caller parks
+    /// on the index change, which resolves every one of those cases.
+    /// Replicas are probed in rank order and the probe STOPS at the
+    /// first live rank whatever it finds — skipping past a retired
+    /// rank-0 frame to a deeper replica could resurrect a value the
+    /// re-home already superseded. No cache fill: the entry's
+    /// generation names the dead home, and recovery is about to move
+    /// it.
+    fn failover_read(&self, ctx: &ThreadCtx, e: &IndexEntry) -> Option<Vec<u64>> {
+        if !self.cfg.replicated() {
+            return None;
+        }
+        for rank in 0..self.backup_count() {
+            let b = self.backup_of(e.node, rank);
+            if ctx.node_down(b) {
+                continue; // dead replica: the next rank holds a copy too
+            }
+            let region = self.backup_region_of(e.node, rank);
+            let mut bo = Backoff::new();
+            let mut read_failed = false;
+            for _ in 0..4096 {
+                match ctx.try_read(region, self.slot_off(e.slot), self.frame_words_of(e.slot)) {
+                    Err(_) => {
+                        read_failed = true; // replica died under us
+                        break;
+                    }
+                    Ok(words) => match self.parse_frame(e, &words) {
+                        FrameRead::Value(value) => return Some(value),
+                        // Retired/unset/pending: ambiguous — park (doc).
+                        FrameRead::Stale | FrameRead::Pending => return None,
+                        // Mirror placement in flight: bounded spin, then
+                        // give up to the parking path.
+                        FrameRead::Torn => bo.snooze(),
+                    },
+                }
+            }
+            if read_failed {
+                continue; // the next rank holds a copy too
+            }
+            return None; // persistent torn: let the parking path decide
+        }
+        None
+    }
+
     /// Delete. Returns false if absent. Panics on an unrecoverable peer
     /// failure — use [`KvStore::try_remove`] under fault injection.
     pub fn remove(&self, ctx: &ThreadCtx, key: u64) -> bool {
@@ -1250,18 +1443,20 @@ impl KvStore {
                 }
             }
             // Unset the valid bit (the delete's linearization point) —
-            // and its backup mirror FIRST, so a crash of the home right
+            // and its backup mirrors FIRST, so a crash of the home right
             // here cannot re-home a key whose delete is about to be
-            // broadcast (recovery validates against the backup frame).
+            // broadcast (recovery validates against the backup frame),
+            // and a failover reader cannot validate a copy of a key
+            // whose delete already acknowledged.
             let region = self.data_region_of(e.node);
             let cv_off = self.cv_off(e.slot);
             // Covered single-word unsets: the fence right below is the
-            // covering signaled op of both chains.
-            if self.cfg.replicate {
-                ctx.write_covered(self.backup_region_of(e.node), cv_off, &[e.counter << 1]);
+            // covering signaled op of every chain.
+            for rank in 0..self.backup_count() {
+                ctx.write_covered(self.backup_region_of(e.node, rank), cv_off, &[e.counter << 1]);
             }
             ctx.write_covered(region, cv_off, &[e.counter << 1]);
-            let scope = if self.cfg.replicate {
+            let scope = if self.cfg.replicated() {
                 FenceScope::Thread
             } else {
                 FenceScope::Pair(e.node)
@@ -1281,7 +1476,7 @@ impl KvStore {
         // entries (the home peer also frees the slot); then drop ours.
         {
             let tx = self.tracker_tx.lock().unwrap();
-            tx.send(ctx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
+            self.send_tracker(ctx, &tx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
             let pos = tx.position();
             tx.wait_all_acked(ctx, pos);
         }
@@ -1306,6 +1501,7 @@ impl KvStore {
     ///
     /// `out[i]` corresponds to `keys[i]`. Duplicate keys are permitted.
     pub fn multi_get(&self, ctx: &ThreadCtx, keys: &[u64]) -> Vec<Option<Vec<u64>>> {
+        self.check_cache_epoch();
         let mut out: Vec<Option<Vec<u64>>> = Vec::with_capacity(keys.len());
         let mut entries: Vec<Option<IndexEntry>> = Vec::with_capacity(keys.len());
         // Indices still needing a remote read.
@@ -1470,8 +1666,8 @@ impl KvStore {
                 bufs.push(buf);
                 let off = self.slot_off(e.slot);
                 targets.push((self.data_region_of(e.node), off, idx));
-                if self.cfg.replicate {
-                    targets.push((self.backup_region_of(e.node), off, idx));
+                for rank in 0..self.backup_count() {
+                    targets.push((self.backup_region_of(e.node, rank), off, idx));
                 }
                 touched.push(*k);
             }
@@ -1516,6 +1712,7 @@ impl KvStore {
     /// already-resolved cache hit). Used by the window-size experiments
     /// (§7.2): up to `window` of these may be outstanding per thread.
     pub fn get_issue(&self, ctx: &ThreadCtx, key: u64) -> Option<PendingGet> {
+        self.check_cache_epoch();
         let e = self.shared.index.get(key)?;
         if let Some(cache) = self.cache_for(&e) {
             if let Some(v) = cache.lookup(key, e.counter) {
@@ -1595,14 +1792,14 @@ impl KvStore {
                     None => fnv64(&value),
                 });
                 self.store_frame_local(ctx, slot, &frame, (counter << 1) | 1);
-                if self.cfg.replicate {
+                if self.cfg.replicated() {
                     self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
                 }
                 self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
                 msg.extend_from_slice(&[key, slot as u64, counter]);
             }
             let tx = self.tracker_tx.lock().unwrap();
-            tx.send(ctx, &msg);
+            self.send_tracker(ctx, &tx, &msg);
             let pos = tx.position();
             tx.wait_all_acked(ctx, pos);
         }
@@ -1656,18 +1853,113 @@ impl KvStore {
         }
     }
 
+    // ---- elastic membership: join + live resharding --------------------
+
+    /// Enter the cluster as a **joining** member: broadcast `OP_JOIN`
+    /// so every view moves this node's slot to the Joining state
+    /// (clearing a spare or stale dead bit) and bumps its membership
+    /// epoch. From here the epoch-versioned ownership table assigns
+    /// this node target ranges; call [`KvStore::rebalance`] to pull the
+    /// keys in and [`KvStore::activate`] once converged. If this slot
+    /// was previously crash-stopped, [`Cluster::revive`] must run
+    /// first (on every node's view, it is global) so the fabric down
+    /// bit cannot re-latch the dead state.
+    ///
+    /// [`Cluster::revive`]: crate::fabric::Cluster::revive
+    pub fn join(&self, ctx: &ThreadCtx) {
+        self.shared.membership.note_joining(self.me);
+        let tx = self.tracker_tx.lock().unwrap();
+        self.send_tracker(ctx, &tx, &[OP_JOIN, self.me as u64]);
+        let pos = tx.position();
+        tx.wait_all_acked(ctx, pos);
+    }
+
+    /// Complete this node's join (migration converged): broadcast
+    /// `OP_ALIVE`, moving the slot from Joining to full membership.
+    pub fn activate(&self, ctx: &ThreadCtx) {
+        self.shared.membership.note_alive(self.me);
+        let tx = self.tracker_tx.lock().unwrap();
+        self.send_tracker(ctx, &tx, &[OP_ALIVE, self.me as u64]);
+        let pos = tx.position();
+        tx.wait_all_acked(ctx, pos);
+    }
+
+    /// Live resharding driver: pull every key whose range the current
+    /// ownership table assigns to this node but whose frame lives on
+    /// another (live) node, using the per-key relocation primitive —
+    /// valid-unset staging, origin tracking, CAS re-home — so reads and
+    /// writes keep landing throughout (readers of a mid-flight key spin
+    /// on the RELOC marker or chase the index exactly as for crash
+    /// re-homes), and a crash of this node mid-migration reverts each
+    /// in-flight key to its recorded origin. Call repeatedly until it
+    /// returns 0 (a concurrent mutation can momentarily hold a key's
+    /// lock); each call is one full pass. Returns the number of keys
+    /// migrated.
+    pub fn rebalance(&self, ctx: &ThreadCtx) -> usize {
+        let owners = self.shared.membership.owners(self.cfg.replicas);
+        let mut moved = 0usize;
+        for p in 0..self.num_nodes as NodeId {
+            if p == self.me || self.shared.membership.is_dead(p) {
+                continue;
+            }
+            let mut entries = self.shared.index.entries_homed_on(p);
+            // Deterministic migration order (sim trace = f(state)).
+            entries.sort_unstable_by_key(|(k, _)| *k);
+            for (key, _) in entries {
+                if owners[Membership::range_of(key)] != self.me {
+                    continue;
+                }
+                let lock = self.lock_of(key);
+                if lock.try_lock(ctx).is_err() {
+                    continue; // lock host died: skip, recovery handles it
+                }
+                // Re-resolve under the lock; the entry may have moved.
+                if let Some(e) = self.shared.index.get(key) {
+                    if e.node != self.me && !self.shared.membership.is_dead(e.node) {
+                        let fw = self.frame_words_of(e.slot);
+                        let read =
+                            ctx.try_read(self.data_region_of(e.node), self.slot_off(e.slot), fw);
+                        if let Ok(words) = read {
+                            // Under the key lock the frame is stable;
+                            // anything but a clean value (a crash race)
+                            // is skipped — recovery owns those keys.
+                            if let FrameRead::Value(value) = self.parse_frame(&e, &words) {
+                                if self.relocate_locked(ctx, key, e, &value).is_ok() {
+                                    moved += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                lock.unlock(ctx);
+            }
+        }
+        moved
+    }
+
     // ---- crash recovery (membership epoch) ----------------------------
 
     /// Crash recovery, called from the tracker thread once per newly
     /// dead node. Per-node ordering: drop the hot-key cache (entries
     /// cached under the dead epoch must not serve into the new one),
-    /// then either **re-home** the dead node's key range from our
-    /// backup replica (if we are its backup and replication is on) or —
-    /// without replication — **purge** its entries everywhere (the data
-    /// died with the node). Non-backup nodes with replication on keep
-    /// their stale entries and learn the new homes from the backup's
-    /// re-home broadcasts; reads and locked mutations on those keys
-    /// park in [`KvStore::wait_entry_change`] until exactly that signal.
+    /// then either **re-home** key ranges from our hosted backup arrays
+    /// (if we are the promoted replica and replication is on) or —
+    /// without replication — **purge** the dead node's entries
+    /// everywhere (the data died with the node). Non-promoted nodes
+    /// with replication on keep their stale entries and learn the new
+    /// homes from the promoted replica's re-home broadcasts; reads fail
+    /// over to a live replica meanwhile ([`KvStore::failover_read`]),
+    /// and locked mutations park in [`KvStore::wait_entry_change`]
+    /// until exactly that signal.
+    ///
+    /// Promotion rule: the **first live** backup in a dead node's
+    /// static successor chain re-homes; deeper replicas stand by.
+    /// Double faults make promotion fall through the chain, so the scan
+    /// below covers *every* dead node that still has homed entries, not
+    /// only the newly dead one — a home whose promoted backup died
+    /// mid-re-home falls to us on the backup's death, with the
+    /// remaining (not yet re-homed) entries recovered from our
+    /// deeper-rank array.
     pub(crate) fn on_peer_dead(&self, ctx: &ThreadCtx, dead: NodeId) {
         if dead == self.me {
             return; // we are the corpse; our view no longer matters
@@ -1675,27 +1967,56 @@ impl KvStore {
         if let Some(cache) = &self.shared.cache {
             cache.clear();
         }
-        if !self.cfg.replicate {
+        if !self.cfg.replicated() {
             self.shared.purge_homed_on(dead, false);
             return;
         }
-        if self.backup_of(dead) == self.me {
-            self.rehome_from_backup(ctx, dead);
+        for d in 0..self.num_nodes as NodeId {
+            if d == self.me || !self.shared.membership.is_dead(d) {
+                continue;
+            }
+            if let Some(rank) = self.promotion_rank(d) {
+                if !self.shared.index.entries_homed_on(d).is_empty() {
+                    self.rehome_from_backup(ctx, d, rank);
+                }
+            }
         }
+    }
+
+    /// If this node is the first **live** replica in `dead`'s static
+    /// successor chain, its rank (which hosted backup array holds the
+    /// surviving copies); `None` when an earlier replica is alive (it
+    /// re-homes, we stand by) or we are not in the chain at all.
+    fn promotion_rank(&self, dead: NodeId) -> Option<usize> {
+        for rank in 0..self.backup_count() {
+            let b = self.backup_of(dead, rank);
+            if b == self.me {
+                return Some(rank);
+            }
+            if !self.shared.membership.is_dead(b) {
+                return None;
+            }
+        }
+        None
     }
 
     /// Re-home the crash-stopped `dead` node's key range: our index (a
     /// replica of the locations, built from the tracker broadcasts that
-    /// announced them) names every key homed there; our hosted backup
-    /// array holds the surviving replica of the frames. Each key whose
-    /// backup frame validates is re-inserted under a fresh local
-    /// generation and announced with a normal `OP_INSERT`; frames that
-    /// do not validate (the insert never completed, or a delete's
-    /// backup-unset landed first) are dropped with an `OP_DELETE`. One
-    /// ack-wait covers the whole batch — when this returns, every
-    /// surviving index agrees on the new homes.
-    fn rehome_from_backup(&self, ctx: &ThreadCtx, dead: NodeId) {
-        let backup = self.backup_hosted.expect("replicate enabled on the backup node");
+    /// announced them) names every key homed there; our rank-`rank`
+    /// hosted backup array holds a surviving replica of the frames.
+    /// Each key whose backup frame validates is re-inserted under a
+    /// fresh local generation — re-replicated to OUR successors, which
+    /// restores the replication factor (anti-entropy repair) — and
+    /// announced with an `OP_REHOME`; frames that do not validate (the
+    /// insert never completed, or a delete's backup-unset landed first)
+    /// are dropped with an `OP_DELETE`. Each validated hosted frame is
+    /// **retired** (cv unset) before its new location is broadcast —
+    /// the handshake failover readers rely on (see
+    /// [`KvStore::failover_read`]). One ack-wait covers the whole batch
+    /// — when this returns, every surviving index agrees on the new
+    /// homes.
+    fn rehome_from_backup(&self, ctx: &ThreadCtx, dead: NodeId, rank: usize) {
+        let backup = self.backup_hosted[rank];
         let mut entries = self.shared.index.entries_homed_on(dead);
         // Shard-scan order depends on insertion history; sort so the
         // re-home broadcast sequence (and thus the sim event trace) is a
@@ -1706,6 +2027,11 @@ impl KvStore {
         for (key, e) in entries {
             match self.read_backup_frame(ctx, backup, &e) {
                 Some(value) => {
+                    // Retire our hosted frame FIRST: a failover reader
+                    // that still validates it must be reading strictly
+                    // before the re-home (or drop) publishes a path to
+                    // newer writes.
+                    ctx.local_store(backup, self.cv_off(e.slot), e.counter << 1);
                     if self.reinsert_recovered(ctx, key, &e, &value) {
                         rehomed += 1;
                     } else {
@@ -1725,7 +2051,7 @@ impl KvStore {
             // recovered range and may drop any leftover dead-homed
             // entries. One ack-wait covers the whole batch.
             let tx = self.tracker_tx.lock().unwrap();
-            tx.send(ctx, &[OP_EPOCH, dead as u64]);
+            self.send_tracker(ctx, &tx, &[OP_EPOCH, dead as u64]);
             let pos = tx.position();
             tx.wait_all_acked(ctx, pos);
         }
@@ -1767,8 +2093,9 @@ impl KvStore {
     }
 
     /// Promote a recovered frame into a fresh local slot + generation
-    /// (smallest class that fits the recovered length), mirror it to OUR
-    /// backup, swap our index entry, and broadcast the new location. No
+    /// (smallest class that fits the recovered length), mirror it to
+    /// OUR successor replicas (restoring the replication factor), swap
+    /// our index entry, and broadcast the new location. No
     /// key lock is taken: mutators of this key are parked in
     /// `wait_entry_change` (their home is down) and proceed against the
     /// new location once the broadcast lands — EXCEPT a concurrent
@@ -1814,7 +2141,7 @@ impl KvStore {
             msg.extend_from_slice(&[o.node as u64, o.slot as u64, o.counter]);
         }
         let tx = self.tracker_tx.lock().unwrap();
-        tx.send(ctx, &msg);
+        self.send_tracker(ctx, &tx, &msg);
         true
     }
 
@@ -1827,7 +2154,7 @@ impl KvStore {
         self.shared.reloc_origins.lock().unwrap().remove(&key);
         self.shared.index.remove_matching(key, e);
         let tx = self.tracker_tx.lock().unwrap();
-        tx.send(ctx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
+        self.send_tracker(ctx, &tx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
     }
 }
 
@@ -1905,17 +2232,29 @@ fn tracker_loop(
 }
 
 fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_mask: u64) {
-    // A location broadcast whose home we already know to be dead must
-    // not land: it would point the index at a corpse *after* recovery
-    // re-homed (or purged) that range, wedging readers forever. It can
-    // only be a crashed node's final broadcast racing its own death —
-    // the insert it announces never completed.
-    let home_is_dead = |node: NodeId| dead_mask >> node & 1 == 1;
+    // Every tracker message's LAST word is the sender's membership epoch
+    // at send time (appended by `send_tracker`, so the per-opcode
+    // layouts below are unchanged). Strip it before parsing.
+    let Some((&msg_epoch, msg)) = msg.split_last() else { return };
+    // A location broadcast must not land when its sender is stale:
+    // (a) the home we already know to be dead — it would point the
+    // index at a corpse *after* recovery re-homed (or purged) that
+    // range, wedging readers forever; it can only be a crashed node's
+    // final broadcast racing its own death, and the insert it announces
+    // never completed. (b) a message stamped before the sender's last
+    // membership transition we observed — a pre-crash broadcast
+    // delivered after the sender's slot re-joined must not clobber the
+    // rejoined node's fresh locations (every location op's home IS its
+    // sender, so one sender-staleness check covers them all).
+    // `--cfg loco_mutant_epoch` (mutation smoke-check) drops the guard
+    // entirely; the model/chaos tiers must catch the divergence.
+    let stale = !cfg!(loco_mutant_epoch)
+        && (dead_mask >> from & 1 == 1 || msg_epoch < shared.membership.state_epoch(from));
     match msg[0] {
         OP_INSERT => {
             let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
             debug_assert_eq!(node, from);
-            if home_is_dead(node) {
+            if stale {
                 return;
             }
             // The new generation can't be served from a stale cached
@@ -1958,7 +2297,8 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
         OP_BATCH => {
             let node = msg[1] as NodeId;
             let count = msg[2] as usize;
-            if home_is_dead(node) {
+            debug_assert_eq!(node, from);
+            if stale {
                 return;
             }
             for i in 0..count {
@@ -2017,7 +2357,8 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             // frame before broadcasting and an invalid frame is never
             // re-homed).
             let (key, node, slot, counter) = (msg[1], msg[2] as NodeId, msg[3] as u32, msg[4]);
-            if home_is_dead(node) {
+            debug_assert_eq!(node, from);
+            if stale {
                 return;
             }
             let old = IndexEntry {
@@ -2040,6 +2381,17 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             if !applied && shared.index.get(key).is_none() {
                 shared.index.insert(key, new_e);
             }
+        }
+        OP_JOIN => {
+            // Membership transitions are their own epoch source: never
+            // guarded by `stale` (the joiner's stamp predates the epoch
+            // its own join bumps).
+            debug_assert_eq!(msg[1] as NodeId, from);
+            shared.membership.note_joining(msg[1] as NodeId);
+        }
+        OP_ALIVE => {
+            debug_assert_eq!(msg[1] as NodeId, from);
+            shared.membership.note_alive(msg[1] as NodeId);
         }
         other => panic!("unknown tracker opcode {other}"),
     }
@@ -2233,7 +2585,7 @@ mod tests {
         let cfg = KvConfig {
             value_words: 8,
             read_cache_bytes: 4096,
-            replicate: true,
+            replicas: 2,
             ..small_cfg()
         };
         let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
@@ -2570,7 +2922,7 @@ mod tests {
             slots_per_node: 64,
             tracker_words: 1 << 10,
             read_cache_bytes: 2048,
-            replicate: true,
+            replicas: 2,
             ..Default::default()
         };
         let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
@@ -2652,6 +3004,41 @@ mod tests {
             assert_eq!(kvs[0].get(&ctxs[0], k), None, "key {k} not purged");
             assert_eq!(kvs[2].get(&ctxs[2], k), None, "key {k} not purged");
         }
+    }
+
+    /// The epoch half of the staleness guard, deterministically: a
+    /// location broadcast stamped before the sender's last observed
+    /// membership transition (a pre-crash duplicate delivered after the
+    /// sender's slot re-joined) must not clobber the index. This is also
+    /// the tripwire for the `--cfg loco_mutant_epoch` mutation
+    /// smoke-check: that build deletes the guard, this test fails, and
+    /// CI asserts that it does.
+    #[test]
+    fn stale_epoch_broadcast_is_rejected() {
+        let (mgrs, kvs) = setup(2, FabricConfig::inline_ideal());
+        let ctx0 = mgrs[0].ctx();
+        assert!(kvs[0].insert(&ctx0, 9, &[55]).unwrap());
+        let before = kvs[1].index_entry(9).unwrap();
+        assert_eq!(before.node, 0);
+
+        // Node 1 observes node 0 crash-stop and its slot begin a
+        // re-join: state_epoch(0) moves past every stamp the old
+        // incarnation could have produced.
+        let m1 = &kvs[1].shared.membership;
+        m1.note_dead(0);
+        m1.note_joining(0);
+
+        // The old incarnation's delayed OP_INSERT (stamp 1 < state_epoch
+        // 2) re-announcing key 9 under a new generation. `send_tracker`
+        // appends the stamp as the last word; the zero dead-mask
+        // isolates the epoch half of the guard.
+        let msg = [OP_INSERT, 9, 0, before.slot as u64, before.counter + 9, 1];
+        apply_tracker(&kvs[1].shared, 1, 0, &msg, 0);
+        assert_eq!(
+            kvs[1].index_entry(9),
+            Some(before),
+            "stale-epoch broadcast clobbered the index"
+        );
     }
 
     /// Satellite regression: an adversarial writer hammering updates and

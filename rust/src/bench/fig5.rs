@@ -57,8 +57,9 @@ pub struct Fig5Cell {
     pub value_dist: ValueDist,
     /// LOCO hot-key read cache (Zipfian-sized byte budget).
     pub cache: bool,
-    /// LOCO frame replication to the backup node.
-    pub replicate: bool,
+    /// LOCO replication factor: **total** copies of every slot frame
+    /// (1 = no replication, `k ≥ 2` mirrors to `k − 1` backups).
+    pub replicas: usize,
 }
 
 impl Fig5Cell {
@@ -86,7 +87,7 @@ impl Fig5Cell {
             secs,
             value_dist: ValueDist::Fixed(1),
             cache: false,
-            replicate: false,
+            replicas: 1,
         }
     }
 }
@@ -212,7 +213,7 @@ fn run_loco(cell: &Fig5Cell, lat: LatencyModel) -> f64 {
     let mut cfg = KvConfig {
         slots_per_node: (cell.keys as usize).div_ceil(n) + 64,
         value_words: cell.value_dist.max_words(),
-        replicate: cell.replicate,
+        replicas: cell.replicas,
         ..Default::default()
     };
     if cell.cache {
@@ -756,7 +757,7 @@ mod tests {
         let cell = Fig5Cell {
             value_dist: ValueDist::Fixed(128),
             cache: true,
-            replicate: true,
+            replicas: 2,
             ..Fig5Cell::words1(
                 KvSystem::Loco,
                 2,
@@ -784,7 +785,7 @@ mod tests {
         let cell = Fig5Cell {
             value_dist: ValueDist::MIXED_8B_1KB,
             cache: true,
-            replicate: true,
+            replicas: 2,
             ..Fig5Cell::words1(
                 KvSystem::Loco,
                 2,

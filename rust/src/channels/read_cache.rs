@@ -335,6 +335,36 @@ impl ReadCache {
     }
 }
 
+/// Membership-epoch gate for caches that must drop wholesale on a
+/// reshard: the kvstore records the membership epoch its cache was last
+/// valid under and, on every read, [`EpochGate::advance`] reports —
+/// exactly once per transition, even with concurrent readers — whether
+/// the epoch moved past the recorded one (death, join, join-complete),
+/// in which case the caller clears the cache before serving. This keys
+/// the locality tier's *fills* to membership epochs: an entry cached
+/// under a superseded ownership table can never serve into the new one,
+/// even when the per-key invalidation traffic for a migrated range has
+/// not reached this node yet.
+pub struct EpochGate(AtomicU64);
+
+impl EpochGate {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> EpochGate {
+        EpochGate(AtomicU64::new(0))
+    }
+
+    /// True exactly once per epoch change: the caller that wins the CAS
+    /// performs the (idempotent) clear, racers serve under the already
+    /// recorded new epoch.
+    pub fn advance(&self, epoch: u64) -> bool {
+        let seen = self.0.load(Ordering::Acquire);
+        if seen == epoch {
+            return false;
+        }
+        self.0.compare_exchange(seen, epoch, Ordering::AcqRel, Ordering::Acquire).is_ok()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,5 +476,17 @@ mod tests {
         assert_eq!(ReadCache::zipfian_capacity(100), 256);
         assert_eq!(ReadCache::zipfian_capacity(1 << 14), 1 << 12);
         assert_eq!(ReadCache::zipfian_capacity(1 << 30), 1 << 16);
+    }
+
+    /// The gate fires exactly once per membership-epoch change, however
+    /// many readers observe it.
+    #[test]
+    fn epoch_gate_fires_once_per_transition() {
+        let g = EpochGate::new();
+        assert!(!g.advance(0), "no transition yet");
+        assert!(g.advance(1), "first observer clears");
+        assert!(!g.advance(1), "second observer must not re-clear");
+        assert!(g.advance(3), "epochs may skip (batched transitions)");
+        assert!(!g.advance(3));
     }
 }

@@ -21,30 +21,86 @@ use std::time::Duration;
 
 use crate::fabric::{Cluster, NodeId, QpId, Region, Verb, Wqe};
 
-/// Cluster membership as observed by this node: a bitmask of
-/// crash-stopped peers plus a monotonically increasing **epoch** that
-/// bumps whenever the mask grows. Layers above key recovery off the
-/// epoch (the kvstore re-homes a dead node's keys once per epoch; the
-/// read cache drops entries filled under a dead epoch).
+/// Lifecycle state of a node slot as observed by one node's
+/// [`Membership`] view.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NodeState {
+    /// Full member: owns key ranges and serves its replication chain.
+    Alive,
+    /// Mid-join: already counted as an owner (so range migration targets
+    /// it and readers chase the new epoch) but its join is not yet
+    /// announced complete.
+    Joining,
+    /// Crash-stopped. Leaving is modeled as a crash.
+    Dead,
+}
+
+/// Number of key ranges in the ownership table: a power of two larger
+/// than any supported cluster (≤ 64 nodes) so ranges spread evenly, yet
+/// small enough that the table recomputes in microseconds.
+pub const RANGES: usize = 64;
+
+/// Cluster membership as observed by this node: per-node lifecycle
+/// states ([`NodeState`], plus a designated-spare mask) and a
+/// monotonically increasing **epoch** that bumps on every transition.
+/// Layers above key recovery and routing off the epoch: the kvstore
+/// derives key homes from the epoch-versioned ownership table
+/// ([`Membership::owner`]), stamps every tracker broadcast with the
+/// sender's epoch so stale-owner messages are rejected
+/// ([`Membership::op_is_stale`]), re-homes a dead node's keys once per
+/// epoch, and drops read-cache fills from superseded epochs.
+///
+/// Unlike the crash-only mask it replaces, membership is
+/// **bidirectional**: [`Membership::note_joining`] clears a previously
+/// dead slot (slot reuse), so the cluster can grow back after failures.
+/// Every transition records the epoch at which the node last changed
+/// state ([`Membership::state_epoch`]); an op stamped with a sender
+/// epoch older than that is stale (e.g. a pre-crash broadcast delivered
+/// after the slot re-joined). Epochs on different nodes count the same
+/// transition events and so agree up to in-flight skew; the guard is a
+/// fast-path filter, not the safety argument — the recovery path's
+/// compare-and-swap re-homing tolerates transient cross-view
+/// disagreement.
 ///
 /// Detection: the simulated fabric exposes a perfect failure detector
 /// ([`Cluster::down_mask`] — a node is down iff it crash-stopped), which
-/// the manager's polling thread mirrors here every few milliseconds. On
+/// the manager's polling thread mirrors here every few milliseconds —
+/// latching only *newly* down bits, so a slot whose dead bit a re-join
+/// cleared is not wedged dead again by the fabric's stale history. On
 /// real RDMA a perfect detector does not exist and agreement needs
 /// explicit protocol support ("The Impact of RDMA on Agreement"); the
 /// simulation separates that concern so the *recovery* protocol can be
 /// tested deterministically.
 pub struct Membership {
+    n: usize,
     epoch: AtomicU64,
     dead: AtomicU64,
+    joining: AtomicU64,
+    spares: AtomicU64,
+    /// Epoch at which each node last changed state (0 = never has).
+    state_epochs: Vec<AtomicU64>,
+    /// Serializes transitions so (masks, epoch, state_epochs) move
+    /// together. Reads stay lock-free.
+    transition: Mutex<()>,
+    /// Ownership-table cache: (epoch, replicas, table).
+    owners: Mutex<(u64, usize, Arc<Vec<NodeId>>)>,
 }
 
 impl Membership {
-    fn new() -> Membership {
-        Membership { epoch: AtomicU64::new(0), dead: AtomicU64::new(0) }
+    fn new(n: usize) -> Membership {
+        Membership {
+            n,
+            epoch: AtomicU64::new(0),
+            dead: AtomicU64::new(0),
+            joining: AtomicU64::new(0),
+            spares: AtomicU64::new(0),
+            state_epochs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            transition: Mutex::new(()),
+            owners: Mutex::new((0, 0, Arc::new(Vec::new()))),
+        }
     }
 
-    /// Monotonic epoch: bumps once per newly observed dead node.
+    /// Monotonic epoch: bumps once per observed membership transition.
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::SeqCst)
     }
@@ -54,21 +110,164 @@ impl Membership {
         self.dead.load(Ordering::SeqCst)
     }
 
+    /// Bitmask of nodes currently mid-join.
+    pub fn joining_mask(&self) -> u64 {
+        self.joining.load(Ordering::SeqCst)
+    }
+
+    /// Bitmask of designated spares: fabric-live nodes that own no
+    /// ranges until they join.
+    pub fn spare_mask(&self) -> u64 {
+        self.spares.load(Ordering::SeqCst)
+    }
+
     pub fn is_dead(&self, node: NodeId) -> bool {
         self.dead_mask() >> node & 1 == 1
+    }
+
+    pub fn is_spare(&self, node: NodeId) -> bool {
+        self.spare_mask() >> node & 1 == 1
+    }
+
+    /// Lifecycle state of `node` as observed by this node.
+    pub fn state(&self, node: NodeId) -> NodeState {
+        if self.is_dead(node) {
+            NodeState::Dead
+        } else if self.joining_mask() >> node & 1 == 1 {
+            NodeState::Joining
+        } else {
+            NodeState::Alive
+        }
+    }
+
+    /// The epoch at which `node` last changed state (0 = it never has).
+    pub fn state_epoch(&self, node: NodeId) -> u64 {
+        self.state_epochs[node as usize].load(Ordering::SeqCst)
+    }
+
+    /// Is a tracker op stamped `msg_epoch` by `from` stale? True when
+    /// the sender is dead, or when the stamp predates the sender's last
+    /// observed state transition — a pre-crash broadcast delivered after
+    /// the slot re-joined must not resurrect purged locations.
+    pub fn op_is_stale(&self, msg_epoch: u64, from: NodeId) -> bool {
+        self.is_dead(from) || msg_epoch < self.state_epoch(from)
+    }
+
+    fn bump_state(&self, node: NodeId) {
+        let e = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        self.state_epochs[node as usize].store(e, Ordering::SeqCst);
     }
 
     /// Record `node` as dead; returns true if it is newly dead (and the
     /// epoch advanced). Idempotent and thread-safe.
     pub(crate) fn note_dead(&self, node: NodeId) -> bool {
+        let _g = self.transition.lock().unwrap();
         let bit = 1u64 << node;
-        let prev = self.dead.fetch_or(bit, Ordering::SeqCst);
-        if prev & bit == 0 {
-            self.epoch.fetch_add(1, Ordering::SeqCst);
-            true
-        } else {
-            false
+        if self.dead.load(Ordering::SeqCst) & bit != 0 {
+            return false;
         }
+        self.dead.fetch_or(bit, Ordering::SeqCst);
+        self.joining.fetch_and(!bit, Ordering::SeqCst);
+        self.bump_state(node);
+        true
+    }
+
+    /// Begin a join of `node`: clears a previously dead (slot reuse) or
+    /// spare slot and marks it mid-join. Returns true on a real
+    /// transition; a node that is already a full member is left alone.
+    pub(crate) fn note_joining(&self, node: NodeId) -> bool {
+        let _g = self.transition.lock().unwrap();
+        let bit = 1u64 << node;
+        if self.joining.load(Ordering::SeqCst) & bit != 0 {
+            return false;
+        }
+        let parked =
+            (self.dead.load(Ordering::SeqCst) | self.spares.load(Ordering::SeqCst)) & bit != 0;
+        if !parked {
+            return false;
+        }
+        self.dead.fetch_and(!bit, Ordering::SeqCst);
+        self.spares.fetch_and(!bit, Ordering::SeqCst);
+        self.joining.fetch_or(bit, Ordering::SeqCst);
+        self.bump_state(node);
+        true
+    }
+
+    /// Complete a join: the mid-join node becomes a full member.
+    pub(crate) fn note_alive(&self, node: NodeId) -> bool {
+        let _g = self.transition.lock().unwrap();
+        let bit = 1u64 << node;
+        if self.joining.load(Ordering::SeqCst) & bit == 0 {
+            return false;
+        }
+        self.joining.fetch_and(!bit, Ordering::SeqCst);
+        self.bump_state(node);
+        true
+    }
+
+    /// Designate `mask` as spares. Builders call this identically on
+    /// every node before any traffic; it is bring-up configuration, not
+    /// part of the runtime protocol.
+    pub fn set_spares(&self, mask: u64) {
+        let _g = self.transition.lock().unwrap();
+        let prev = self.spares.swap(mask, Ordering::SeqCst);
+        if prev != mask {
+            let e = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+            let mut changed = prev ^ mask;
+            while changed != 0 {
+                let node = changed.trailing_zeros() as usize;
+                self.state_epochs[node].store(e, Ordering::SeqCst);
+                changed &= changed - 1;
+            }
+        }
+    }
+
+    /// Current members: not dead and not spare. Mid-join nodes count —
+    /// they are valid owners and migration targets.
+    pub fn members(&self) -> Vec<NodeId> {
+        let parked = self.dead_mask() | self.spare_mask();
+        (0..self.n as NodeId).filter(|&i| parked >> i & 1 == 0).collect()
+    }
+
+    /// Key-range of `key`: the unit of ownership. A pure hash, so every
+    /// node maps a key to the same range forever.
+    pub fn range_of(key: u64) -> usize {
+        (crate::util::mix64(key) % RANGES as u64) as usize
+    }
+
+    /// The epoch-versioned ownership table: the home node of each of the
+    /// [`RANGES`] key ranges, recomputed whenever the epoch moves and
+    /// cached. Pure in (masks, replicas), so converged views agree on
+    /// every owner.
+    pub fn owners(&self, replicas: usize) -> Arc<Vec<NodeId>> {
+        let epoch = self.epoch();
+        let mut cache = self.owners.lock().unwrap();
+        if cache.0 != epoch || cache.1 != replicas || cache.2.is_empty() {
+            *cache = (epoch, replicas, Arc::new(self.compute_owners(replicas)));
+        }
+        cache.2.clone()
+    }
+
+    /// Home node of `range` under the current epoch.
+    pub fn owner(&self, range: usize, replicas: usize) -> NodeId {
+        self.owners(replicas)[range]
+    }
+
+    /// Recompute the table: spread ranges round-robin over the members,
+    /// preferring homes whose whole static backup chain
+    /// (`home+1 .. home+replicas-1`, mod n) is live, so new keys keep
+    /// all `replicas` copies reachable. Falls back to all members when
+    /// no chain is fully live (degraded but still serving).
+    fn compute_owners(&self, replicas: usize) -> Vec<NodeId> {
+        let n = self.n;
+        let dead = self.dead_mask();
+        let members = self.members();
+        assert!(!members.is_empty(), "ownership table needs at least one live member");
+        let chain_live =
+            |h: NodeId| (1..replicas).all(|j| dead >> ((h as usize + j) % n) & 1 == 0);
+        let pool: Vec<NodeId> = members.iter().copied().filter(|&h| chain_live(h)).collect();
+        let pool = if pool.is_empty() { members } else { pool };
+        (0..RANGES).map(|r| pool[r % pool.len()]).collect()
     }
 }
 
@@ -114,7 +313,7 @@ impl Manager {
             cluster: cluster.clone(),
             me,
             ack: Arc::new(AckRegistry::new()),
-            membership: Arc::new(Membership::new()),
+            membership: Arc::new(Membership::new(cluster.num_nodes())),
             channels: Mutex::new(HashMap::new()),
             ctrl_qps: Mutex::new(vec![None; cluster.num_nodes()]),
             shutdown: AtomicBool::new(false),
@@ -335,21 +534,22 @@ impl Shared {
         }
     }
 
-    /// Mirror the fabric's crash-stop mask into this node's membership
-    /// (bumping the epoch once per newly dead node). Returns whether the
-    /// local view changed (the sim service's did-work signal).
+    /// Mirror *newly* down fabric nodes into this node's membership
+    /// (bumping the epoch once per new death). Only the freshly-down
+    /// delta is latched: a slot whose dead bit a re-join cleared (after
+    /// [`Cluster::revive`]) must not be re-marked dead from the fabric's
+    /// stale history, and a revived-but-not-yet-joined node stays dead
+    /// until its join is broadcast. Returns whether the view changed
+    /// (the sim service's did-work signal).
     fn sync_membership(&self) -> bool {
-        let down = self.cluster.down_mask();
-        if down != self.membership.dead_mask() {
-            for node in 0..self.cluster.num_nodes() as NodeId {
-                if down >> node & 1 == 1 {
-                    self.membership.note_dead(node);
-                }
-            }
-            true
-        } else {
-            false
+        let mut fresh = self.cluster.down_mask() & !self.membership.dead_mask();
+        let mut did = false;
+        while fresh != 0 {
+            let node = fresh.trailing_zeros() as NodeId;
+            did |= self.membership.note_dead(node);
+            fresh &= fresh - 1;
         }
+        did
     }
 
     fn ctrl_loop(&self) {
@@ -641,5 +841,79 @@ mod tests {
         let main_ctx = m0.ctx();
         m0.global_fence(&main_ctx);
         assert_eq!(cluster.node(1).arena().load(dst.at(3)), 99);
+    }
+
+    /// Regression: the old dead-mask mirror could only grow, so reusing
+    /// a slot that previously crashed wedged it dead forever. With
+    /// epoch-carried states, a crash → revive → join sequence clears
+    /// the dead bit, the polling sync (newly-down-only) does not
+    /// re-latch it, and ops stamped before the transition are stale.
+    #[test]
+    fn membership_transitions_are_epoch_carried() {
+        let cluster = Cluster::new(3, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let _m1 = Manager::new(cluster.clone(), 1);
+        let _m2 = Manager::new(cluster.clone(), 2);
+        let ms = m0.membership();
+
+        cluster.crash(2);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !m0.is_dead(2) {
+            assert!(std::time::Instant::now() < deadline, "membership never updated");
+            std::thread::yield_now();
+        }
+        assert_eq!(ms.state(2), NodeState::Dead);
+        let death_epoch = ms.state_epoch(2);
+        assert!(death_epoch >= 1);
+        // A broadcast the corpse stamped before dying is stale now.
+        assert!(ms.op_is_stale(death_epoch - 1, 2));
+
+        // Slot reuse: revive the fabric slot, then begin the join.
+        cluster.revive(2);
+        assert!(ms.note_joining(2));
+        assert_eq!(ms.state(2), NodeState::Joining);
+        assert!(!ms.is_dead(2));
+        assert!(ms.state_epoch(2) > death_epoch);
+        // The newly-down-only sync must not re-latch the cleared bit
+        // from the fabric's (now clean) history.
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!ms.is_dead(2), "stale fabric history re-latched a rejoined slot");
+
+        // Pre-crash stamps stay stale; post-join stamps are fresh.
+        assert!(ms.op_is_stale(death_epoch - 1, 2));
+        assert!(!ms.op_is_stale(ms.state_epoch(2), 2));
+        assert!(ms.note_alive(2));
+        assert_eq!(ms.state(2), NodeState::Alive);
+        assert!(!ms.note_alive(2), "note_alive must be a joining->alive edge");
+    }
+
+    /// The ownership table spreads ranges over members, skips spares
+    /// until they join, and prefers homes whose whole static backup
+    /// chain is live.
+    #[test]
+    fn ownership_table_spreads_and_prefers_live_chains() {
+        let ms = Membership::new(4);
+        // Healthy: round-robin over all four nodes.
+        let owners = ms.owners(2);
+        for r in 0..RANGES {
+            assert_eq!(owners[r], (r % 4) as NodeId);
+        }
+        // Node 3 is a designated spare: it owns nothing yet.
+        ms.set_spares(0b1000);
+        let owners = ms.owners(2);
+        assert!(owners.iter().all(|&o| o < 3));
+        // Node 1 dies. Members are {0, 2}; with replicas = 2 only node
+        // 2's chain (successor 3, a live spare hosting backups) is
+        // fully live — node 0's successor is the corpse — so every
+        // range prefers node 2.
+        assert!(ms.note_dead(1));
+        let owners = ms.owners(2);
+        assert!(owners.iter().all(|&o| o == 2));
+        // The spare joins: it immediately counts as an owner (migration
+        // targets it), and its chain (node 0) is live too.
+        assert!(ms.note_joining(3));
+        let owners = ms.owners(2);
+        assert!(owners.iter().all(|&o| o == 2 || o == 3));
+        assert!(owners.iter().any(|&o| o == 3));
     }
 }

@@ -73,6 +73,15 @@ impl NodeFabric {
         self.ring();
     }
 
+    /// Undo a crash-stop: the node serves and transmits again. Chain
+    /// errors raised on a QP during the outage still surface on its
+    /// next signaled completion (the selective-signaling contract);
+    /// after that the QP is usable again.
+    pub(super) fn revive(&self) {
+        self.alive.store(true, Ordering::SeqCst);
+        self.ring();
+    }
+
     /// Ring the engine doorbell (submission or new QP).
     pub(super) fn ring(&self) {
         let (lock, cv) = &self.doorbell;
@@ -394,6 +403,20 @@ impl Cluster {
         }
     }
 
+    /// Revive a crash-stopped `node` (elastic membership: the physical
+    /// slot is being reused by a joiner). The fabric serves its memory
+    /// again and its engines resume; chain errors raised during the
+    /// outage still surface on the owning QP's next signaled CQE, and
+    /// [`Cluster::down_mask`] drops the bit — managers latch only
+    /// *newly* down nodes, so the revived slot stays dead in every
+    /// membership view until its join is broadcast. Idempotent.
+    pub fn revive(&self, node: NodeId) {
+        self.nodes[node as usize].revive();
+        for n in &self.nodes {
+            n.ring();
+        }
+    }
+
     /// Has `node` crash-stopped?
     #[inline]
     pub fn is_down(&self, node: NodeId) -> bool {
@@ -702,6 +725,37 @@ mod tests {
         // crash is idempotent.
         c.crash(1);
         assert_eq!(c.down_mask(), 0b010);
+    }
+
+    /// Revive undoes a crash-stop at the fabric layer: the node serves
+    /// remote verbs again, the down mask drops the bit, and a chain
+    /// error raised during the outage still surfaces once on the QP's
+    /// next signaled completion before service resumes.
+    #[test]
+    fn revive_restores_service_and_surfaces_outage_chain_errors() {
+        use crate::fabric::cq::CqeStatus;
+        let c = Cluster::new(2, FabricConfig::inline_ideal());
+        let dst = c.node(1).register_mr(8, false);
+        let qp = c.create_qp(0, 1);
+
+        c.crash(1);
+        // An unsignaled write lost to the outage raises the chain error.
+        c.post(qp, wqe(0, Verb::Write { remote: dst.at(0), data: Payload::one(9) }).unsignaled());
+
+        c.revive(1);
+        assert!(!c.is_down(1));
+        assert_eq!(c.down_mask(), 0);
+        // The first signaled completion after revive reports the outage…
+        c.post(qp, wqe(1, Verb::Write { remote: dst.at(1), data: Payload::one(5) }));
+        assert_eq!(c.node(0).cq().poll_one_blocking().status, CqeStatus::PeerFailed);
+        // …and after that the QP serves normally again.
+        c.post(qp, wqe(2, Verb::Write { remote: dst.at(0), data: Payload::one(7) }));
+        let cqe = c.node(0).cq().poll_one_blocking();
+        assert_eq!((cqe.wr_id, cqe.status), (2, CqeStatus::Ok));
+        assert_eq!(c.node(1).arena().load(dst.at(0)), 7, "revived node must serve");
+        // revive is idempotent.
+        c.revive(1);
+        assert!(!c.is_down(1));
     }
 
     /// Crash-stop under threaded delivery: in-flight verbs to the dead

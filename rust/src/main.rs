@@ -7,7 +7,7 @@
 //! loco fig4      [--max-nodes N]                  §7.1 locking figures
 //! loco fig5      [--nodes N] [--threads T] [--keys K]
 //!                [--value-words W | --mixed-values]
-//!                [--cache] [--replicate]          §7.2 kvstore grid
+//!                [--cache] [--replicas R]         §7.2 kvstore grid
 //! loco fig7      [--converters N]                 App. B power sweep
 //! loco micro                                      design ablations
 //! ```
@@ -23,11 +23,22 @@
 //! machine. The seed falls back to `LOCO_SIM_SEED` when `--seed` is
 //! absent.
 //!
+//! `loco join [--nodes N] [--keys K] [--replicas R] [--seed S]` demos
+//! elastic membership under the simulator: a designated spare joins a
+//! live cluster, the epoch-versioned ownership table assigns it key
+//! ranges, and live resharding (`KvStore::rebalance`) pulls them over
+//! before the join completes.
+//!
+//! Replication: `--replicas R` sets the **total** number of copies of
+//! every key (1 = none); `--replicate` survives as a deprecated alias
+//! for `--replicas 2`, and `LOCO_REPLICAS` supplies the default when
+//! neither flag is given.
+//!
 //! Environment: `LOCO_FULL=1` for paper-calibrated latencies,
 //! `LOCO_BENCH_SECS` / `LOCO_BENCH_RUNS` to override the measurement
 //! window, `LOCO_SIGNAL_EVERY` for the selective-signaling default,
-//! `LOCO_SIM_SEED` for the simulator seed,
-//! `LOCO_ARTIFACTS` for the AOT artifact directory.
+//! `LOCO_SIM_SEED` for the simulator seed, `LOCO_REPLICAS` for the
+//! replication factor, `LOCO_ARTIFACTS` for the AOT artifact directory.
 
 use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
 use loco::metrics::Table;
@@ -43,6 +54,16 @@ fn arg_u64(args: &[String], flag: &str, default: u64) -> u64 {
 
 fn arg_flag(args: &[String], flag: &str) -> bool {
     args.iter().any(|a| a == flag)
+}
+
+/// `--replicas R`, falling back to `LOCO_REPLICAS`; `None` when neither
+/// is given (callers then apply the `--replicate` alias or a default).
+fn arg_replicas(args: &[String]) -> Option<usize> {
+    args.iter()
+        .position(|a| a == "--replicas")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .or_else(|| std::env::var("LOCO_REPLICAS").ok().and_then(|v| v.parse().ok()))
 }
 
 fn main() {
@@ -118,7 +139,8 @@ fn main() {
                 ValueDist::Fixed(arg_u64(&args, "--value-words", 1) as usize)
             };
             let cache = arg_flag(&args, "--cache");
-            let replicate = arg_flag(&args, "--replicate");
+            let replicas =
+                arg_replicas(&args).unwrap_or(if arg_flag(&args, "--replicate") { 2 } else { 1 });
             let mut t = Table::new(&["mix", "dist", "system", "window", "Mops/s"]);
             for mix in [OpMix::READ_ONLY, OpMix::MIXED_50_50, OpMix::WRITE_ONLY] {
                 for dist in [KeyDist::Uniform, KeyDist::Zipfian] {
@@ -126,7 +148,7 @@ fn main() {
                         let cell = fig5::Fig5Cell {
                             value_dist,
                             cache,
-                            replicate,
+                            replicas,
                             ..fig5::Fig5Cell::words1(
                                 sys,
                                 nodes,
@@ -218,6 +240,70 @@ fn main() {
                 cluster.clock().now_ns() as f64 / 1e6
             );
         }
+        "join" => {
+            // Elastic-membership demo: a designated spare joins a live
+            // simulated cluster, the epoch-versioned ownership table
+            // assigns it key ranges, and live resharding pulls the keys
+            // over before `activate` completes the join.
+            let nodes = (arg_u64(&args, "--nodes", 8) as usize).max(3);
+            let keys = arg_u64(&args, "--keys", 256);
+            let replicas = arg_replicas(&args).unwrap_or(2).clamp(1, nodes - 1);
+            let seed = arg_u64(&args, "--seed", 1);
+            let spare = (nodes - 1) as loco::fabric::NodeId;
+            let cluster = loco::fabric::Cluster::new(nodes, loco::testkit::sim_fabric(seed));
+            let sim = loco::sim::SimExecutor::install(&cluster);
+            let mgrs: Vec<_> = (0..nodes as loco::fabric::NodeId)
+                .map(|i| loco::core::manager::Manager::new(cluster.clone(), i))
+                .collect();
+            for m in &mgrs {
+                m.membership().set_spares(1 << spare);
+            }
+            let cfg = loco::apps::kvstore::KvConfig {
+                slots_per_node: keys as usize + 64,
+                value_words: 2,
+                num_locks: 64,
+                tracker_words: 1 << 12,
+                replicas,
+                ..Default::default()
+            };
+            let kvs: Vec<_> = mgrs
+                .iter()
+                .map(|m| loco::apps::kvstore::KvStore::new(m, "kv", cfg.clone()))
+                .collect();
+            for kv in &kvs {
+                kv.wait_ready(std::time::Duration::from_secs(30));
+            }
+            let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+            for k in 0..keys {
+                let node = (k % (nodes as u64 - 1)) as usize;
+                kvs[node].insert(&ctxs[node], k, &[k, k]).expect("insert");
+            }
+            sim.settle();
+            let before = mgrs[0].membership().epoch();
+            let sp = spare as usize;
+            kvs[sp].join(&ctxs[sp]);
+            let mut passes = 0usize;
+            let mut moved = 0usize;
+            loop {
+                let m = kvs[sp].rebalance(&ctxs[sp]);
+                passes += 1;
+                moved += m;
+                if m == 0 {
+                    break;
+                }
+            }
+            kvs[sp].activate(&ctxs[sp]);
+            sim.settle();
+            let owned = (0..keys)
+                .filter(|&k| kvs[0].index_entry(k).is_some_and(|e| e.node == spare))
+                .count();
+            println!(
+                "join: node {spare} joined a {nodes}-node cluster (replicas {replicas}): \
+                 epoch {before} -> {}, {moved} of {keys} keys migrated in {passes} passes, \
+                 {owned} now homed on the joiner",
+                mgrs[0].membership().epoch()
+            );
+        }
         "micro" => {
             let lat = scale.latency.clone();
             let mut t = Table::new(&["ablation", "value"]);
@@ -256,9 +342,11 @@ fn main() {
         _ => {
             println!(
                 "loco — Library of Channel Objects (paper reproduction)\n\
-                 usage: loco <barrier|fig4|fig5|fig7|micro|sim> [flags]\n\
+                 usage: loco <barrier|fig4|fig5|fig7|micro|sim|join> [flags]\n\
                  write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
+                 replication (fig5/join): --replicas R (or LOCO_REPLICAS; --replicate = 2)\n\
                  sim: --nodes N --rounds K --seed S (or LOCO_SIM_SEED)\n\
+                 join: --nodes N --keys K --replicas R --seed S (elastic membership demo)\n\
                  see `examples/` for the end-to-end drivers"
             );
         }

@@ -8,7 +8,11 @@
 //! [`chaos_plan`] derives a complete [`FaultPlan`] (delay / completion
 //! reorder / duplication / QP flap mix) from a single seed, so a chaos
 //! run's entire behavior — fabric jitter, fault schedule, workload — is
-//! reproducible from the one number a failing test prints.
+//! reproducible from the one number a failing test prints. The scripted
+//! membership scenarios ([`join_leave_rebalance`], [`MembershipStep`])
+//! and their [`check_convergence`] invariant checker live here too, so
+//! the model, chaos, and membership tiers drive elasticity through one
+//! vocabulary.
 //!
 //! The linearizability machinery ([`Event`], [`check_key`],
 //! [`check_history`]) implements the paper's Appendix C argument: all
@@ -158,6 +162,13 @@ pub enum ModelOp {
     /// Crash-stop `node` and run the cluster to quiescence (the re-home
     /// pass completes before the next op issues).
     Crash { node: NodeId },
+    /// The designated spare `node` joins: broadcast the membership
+    /// transition, pull every range the new ownership table assigns it
+    /// ([`KvStore::rebalance`] until a sweep moves nothing), announce
+    /// itself alive, and run to quiescence. A no-op for a node that is
+    /// already a full member or crash-stopped (a shrunk schedule may
+    /// have dropped the context that made it a spare).
+    Join { node: NodeId },
 }
 
 /// Encode a model value as a kv value (2 words, so the checksummed
@@ -180,7 +191,7 @@ pub fn model_kv_config() -> KvConfig {
         fence_updates: true,
         lock_handover: true,
         read_cache_bytes: 16 * 1024,
-        replicate: true,
+        replicas: 2,
         coalesce_invals: true,
     }
 }
@@ -197,9 +208,17 @@ pub struct ModelRun {
     pub choices: Vec<u32>,
 }
 
-/// Replay `ops` on a fresh 3-node simulated cluster against a
-/// `BTreeMap` reference model. Ops are sequential and fully acked, so
-/// under ≤ 1 crash-stop (injected *between* ops, recovery run to
+/// Cluster shape of the model tier: [`MODEL_NODES`] nodes total, of
+/// which the last ([`MODEL_SPARE`]) starts as a designated spare that a
+/// [`ModelOp::Join`] can bring into the ownership table mid-schedule.
+pub const MODEL_NODES: usize = 4;
+/// The model tier's designated spare node.
+pub const MODEL_SPARE: NodeId = (MODEL_NODES - 1) as NodeId;
+
+/// Replay `ops` on a fresh simulated cluster of [`MODEL_NODES`] nodes
+/// (three active plus the designated spare) against a `BTreeMap`
+/// reference model. Ops are sequential and fully acked, so under ≤ 1
+/// crash-stop and ≤ 1 join (both injected *between* ops and run to
 /// quiescence) the store must agree with the model exactly:
 ///
 /// * a mutation that returns `Ok` is applied to the model; an `Err`
@@ -213,7 +232,7 @@ pub struct ModelRun {
 /// `None` draws from the seeded RNG. The failure outcome is a pure
 /// function of `(ops, seed, plan)`.
 pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) -> ModelRun {
-    let n = 3usize;
+    let n = MODEL_NODES;
     let cluster = Cluster::new(n, sim_fabric(seed));
     let sim = crate::sim::SimExecutor::install(&cluster);
     if let Some(p) = plan {
@@ -221,6 +240,9 @@ pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) ->
     }
     let mgrs: Vec<Arc<Manager>> =
         (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    for m in &mgrs {
+        m.membership().set_spares(1 << MODEL_SPARE);
+    }
     let kvs: Vec<Arc<KvStore>> =
         mgrs.iter().map(|m| KvStore::new(m, "kv", model_kv_config())).collect();
     for kv in &kvs {
@@ -237,6 +259,16 @@ pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) ->
                     cluster.crash(node);
                     sim.settle(); // drain + membership + re-home, to quiescence
                 }
+            }
+            ModelOp::Join { node } => {
+                let nu = node as usize;
+                if cluster.is_down(node) || !mgrs[nu].membership().is_spare(node) {
+                    continue; // corpses don't join; full members need no join
+                }
+                kvs[nu].join(&ctxs[nu]);
+                while kvs[nu].rebalance(&ctxs[nu]) > 0 {}
+                kvs[nu].activate(&ctxs[nu]);
+                sim.settle();
             }
             ModelOp::Insert { node, key, val } => {
                 if cluster.is_down(node) {
@@ -305,8 +337,12 @@ pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) ->
 
 /// Generate a random schedule: seed half the keyspace, then `rounds`
 /// mixed ops over 8 keys from random **alive** nodes, with at most one
-/// crash (the single-crash failure model) at a random position. Every
-/// written value is unique, so any stale read is attributable.
+/// crash (the single-crash failure model) and at most one join of the
+/// designated spare, each at a random position — so the search space
+/// covers shrink-only, grow-only, and churn (grow + shrink)
+/// interleavings. Every written value is unique, so any stale read is
+/// attributable. `n` is the *active* node count (the spare is extra and
+/// only issues ops once joined).
 pub fn gen_model_ops(seed: u64, n: usize, rounds: usize) -> Vec<ModelOp> {
     let mut rng = Rng::seeded(seed ^ 0x0DE1_0DE1);
     const KEYS: u64 = 8;
@@ -319,11 +355,16 @@ pub fn gen_model_ops(seed: u64, n: usize, rounds: usize) -> Vec<ModelOp> {
     }
     let crash_at = rng.gen_bool(0.5).then(|| rng.gen_range(rounds as u64) as usize);
     let crash_node = rng.gen_range(n as u64) as NodeId;
+    let join_at = rng.gen_bool(0.5).then(|| rng.gen_range(rounds as u64) as usize);
     let mut alive: Vec<NodeId> = (0..n as NodeId).collect();
     for i in 0..rounds {
         if crash_at == Some(i) {
             ops.push(ModelOp::Crash { node: crash_node });
             alive.retain(|&x| x != crash_node);
+        }
+        if join_at == Some(i) {
+            ops.push(ModelOp::Join { node: MODEL_SPARE });
+            alive.push(MODEL_SPARE);
         }
         let node = alive[rng.gen_range(alive.len() as u64) as usize];
         let key = rng.gen_range(KEYS);
@@ -433,7 +474,7 @@ pub fn model_search(base_seed: u64, schedules: usize, rounds: usize) -> Option<C
     for i in 0..schedules {
         let seed = crate::util::mix64(base_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
             .max(1);
-        let ops = gen_model_ops(seed, 3, rounds);
+        let ops = gen_model_ops(seed, MODEL_NODES - 1, rounds);
         if run_model_schedule(&ops, seed, None).failure.is_some() {
             let (ops, _) = shrink_model_ops(&ops, seed);
             let rec = run_model_schedule(&ops, seed, None);
@@ -471,6 +512,135 @@ pub fn save_counterexample(ce: &CounterExample) -> std::path::PathBuf {
     text.push_str(&format!("plan ({} choices): {:?}\n", ce.plan.len(), ce.plan));
     let _ = std::fs::write(&path, text);
     path
+}
+
+// ---- scripted membership scenarios ------------------------------------
+
+/// One step of a scripted membership scenario (the e2e membership tier
+/// replays these; loads come from seed-picked live nodes and every
+/// membership change is followed by a full rebalance sweep before the
+/// next step issues).
+#[derive(Clone, Debug)]
+pub enum MembershipStep {
+    /// Insert `count` fresh uniquely-valued keys from live nodes.
+    Load { count: usize },
+    /// The designated spare joins and pulls its ranges.
+    Join { node: NodeId },
+    /// `node` leaves the cluster. Leaving is modeled as a crash-stop —
+    /// the paper's fault model has no graceful handoff; recovery
+    /// promotes the backups either way.
+    Leave { node: NodeId },
+}
+
+/// Seeded join → rebalance → leave script over an `n`-node cluster
+/// whose last node starts as the designated spare: load a base
+/// population, bring the spare in, load through the grown table, crash
+/// a seed-picked original member, load again through the shrunk table.
+/// Convergence after each phase is what [`check_convergence`] asserts.
+pub fn join_leave_rebalance(seed: u64, n: usize) -> Vec<MembershipStep> {
+    let mut rng = Rng::seeded(seed ^ 0x10CA_1);
+    let spare = (n - 1) as NodeId;
+    let victim = rng.gen_range(n as u64 - 1) as NodeId; // any original member
+    vec![
+        MembershipStep::Load { count: 24 + rng.gen_range(16) as usize },
+        MembershipStep::Join { node: spare },
+        MembershipStep::Load { count: 8 + rng.gen_range(8) as usize },
+        MembershipStep::Leave { node: victim },
+        MembershipStep::Load { count: 8 + rng.gen_range(8) as usize },
+    ]
+}
+
+/// Assert the cluster has **converged** after a membership scenario:
+/// call at quiescence, after a full [`KvStore::rebalance`] sweep (every
+/// live node swept until a sweep moves nothing), with at least
+/// `replicas` live nodes. Checks, for every expected key:
+///
+/// * every live node's index carries the identical entry, and a read
+///   from every live node returns the expected value;
+/// * the key's home is live and is the ownership-table owner of the
+///   key's range — i.e. migration actually converged on the table;
+/// * the home's whole static replica chain is live, so the key is held
+///   by exactly `replicas` live nodes (the degraded copies a crash
+///   leaves behind must have been re-replicated away by the sweep);
+///
+/// plus, per live node: the index size matches the model exactly (no
+/// resurrections, no losses) and [`KvStore::slab_audit`] finds no
+/// leaked or double-owned slots (no orphans left by migration).
+///
+/// Keys whose ticket-lock stripe ([`KvStore::lock_host`]) is hosted on
+/// a dead node are exempt from the placement and full-chain checks:
+/// lock stripes do not fail over, so such keys are readable but
+/// unmovable (`rebalance` skips what it cannot lock). They must still
+/// be indexed identically everywhere, read back correctly, and sit on
+/// a live home.
+pub fn check_convergence(
+    cluster: &Cluster,
+    mgrs: &[Arc<Manager>],
+    kvs: &[Arc<KvStore>],
+    expect: &std::collections::BTreeMap<u64, Vec<u64>>,
+    context: &str,
+) {
+    let n = kvs.len();
+    let live: Vec<usize> = (0..n).filter(|&i| !cluster.is_down(i as NodeId)).collect();
+    let replicas = kvs[0].config().replicas;
+    assert!(
+        live.len() >= replicas,
+        "{context}: convergence needs ≥ replicas ({replicas}) live nodes, have {}",
+        live.len()
+    );
+    for &i in &live {
+        assert_eq!(
+            kvs[i].index_len(),
+            expect.len(),
+            "{context}: node {i} index size diverged from the model"
+        );
+        if let Err(e) = kvs[i].slab_audit() {
+            panic!("{context}: node {i} slab audit: {e}");
+        }
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    for (&key, val) in expect {
+        let e0 = kvs[live[0]]
+            .index_entry(key)
+            .unwrap_or_else(|| panic!("{context}: key {key} missing from node {}", live[0]));
+        for &i in &live {
+            assert_eq!(
+                kvs[i].index_entry(key),
+                Some(e0),
+                "{context}: key {key}: node {i} index disagrees"
+            );
+            assert_eq!(
+                kvs[i].get(&ctxs[i], key).as_ref(),
+                Some(val),
+                "{context}: key {key} read wrong on node {i}"
+            );
+        }
+        let home = e0.node;
+        if cluster.is_down(kvs[live[0]].lock_host(key)) {
+            // Corpse-locked: rebalance cannot take the key lock, so the
+            // key legitimately parks wherever recovery left it — on a
+            // live home, but possibly off-table with a degraded chain.
+            assert!(
+                !cluster.is_down(home),
+                "{context}: corpse-locked key {key} homed on dead node {home}"
+            );
+            continue;
+        }
+        assert_eq!(
+            home,
+            kvs[live[0]].home_of(key),
+            "{context}: key {key} homed off the ownership table"
+        );
+        let dead_in_chain: Vec<NodeId> = (0..replicas)
+            .map(|r| ((home as usize + r) % n) as NodeId)
+            .filter(|&b| cluster.is_down(b))
+            .collect();
+        assert!(
+            dead_in_chain.is_empty(),
+            "{context}: key {key} (home {home}): replica chain members {dead_in_chain:?} \
+             are dead — fewer than {replicas} live copies"
+        );
+    }
 }
 
 // ---- linearizability checking (paper Appendix C) ----------------------

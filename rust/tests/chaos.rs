@@ -1,6 +1,9 @@
 //! The chaos tier: kvstore linearizability under seeded fault
 //! schedules (delay / completion reorder / duplication / QP flap), plus
-//! a home-node crash-stop with backup re-home.
+//! a home-node crash-stop with backup re-home and, at `replicas = 3`,
+//! double-fault schedules (the backup dies mid-re-home; the origin home
+//! dies mid-migration) asserting graceful degradation — zero lost
+//! acknowledged writes while ≤ replicas − 1 nodes of a range are down.
 //!
 //! Every case derives its complete behavior — fabric jitter, fault
 //! schedule, workload — from one seed, and every assertion message
@@ -15,7 +18,7 @@ use std::time::Instant;
 
 use loco::apps::kvstore::{KvConfig, KvStore};
 use loco::core::manager::Manager;
-use loco::fabric::NodeId;
+use loco::fabric::{Cluster, NodeId};
 use loco::testkit::{chaos_fabric, check_history, kv_cluster, Event};
 use loco::util::rng::Rng;
 
@@ -39,9 +42,17 @@ fn crash_cfg() -> KvConfig {
         num_locks: 12,
         tracker_words: 1 << 11,
         read_cache_bytes: 4096,
-        replicate: true,
+        replicas: 2,
         ..Default::default()
     }
+}
+
+/// Triple-replica geometry for the double-fault schedules: every key
+/// homed on `h` also has frames on `h+1` and `h+2`, so losing any two
+/// nodes of a range (the full `replicas − 1` fault budget) must still
+/// lose nothing.
+fn triple_cfg() -> KvConfig {
+    KvConfig { replicas: 3, ..crash_cfg() }
 }
 
 /// Deterministic mixed value length for a pinned key (spans every
@@ -103,7 +114,7 @@ fn verify_rehome_and_convergence(
     mgrs: &[Arc<Manager>],
     kvs: &[Arc<KvStore>],
 ) {
-    let survivors: Vec<usize> = (0..3usize).filter(|&i| i as NodeId != dead).collect();
+    let survivors: Vec<usize> = (0..kvs.len()).filter(|&i| i as NodeId != dead).collect();
     let deadline = Instant::now() + std::time::Duration::from_secs(20);
     loop {
         let done = survivors.iter().all(|&s| {
@@ -131,6 +142,44 @@ fn verify_rehome_and_convergence(
                 kvs[s].get(&ctx, k),
                 kvs[survivors[0]].get(&ctx2, k),
                 "seed {seed}: survivors diverge on key {k}"
+            );
+        }
+    }
+}
+
+/// Degraded-mode verification for the double-fault schedules: wait
+/// until every pinned key is homed on a **live** node in every
+/// survivor's index (the exact promotee depends on which rank the
+/// recovery scan fell through to), then assert every acked pre-crash
+/// insert reads back byte-identically from every survivor — zero lost
+/// acknowledged writes with `replicas − 1` nodes of the range down.
+fn verify_no_acked_loss(
+    seed: u64,
+    cluster: &Arc<Cluster>,
+    mgrs: &[Arc<Manager>],
+    kvs: &[Arc<KvStore>],
+) {
+    let survivors: Vec<usize> =
+        (0..kvs.len()).filter(|&i| !cluster.is_down(i as NodeId)).collect();
+    let deadline = Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let done = survivors.iter().all(|&s| {
+            (CONTENDED..KEYS)
+                .all(|k| kvs[s].index_entry(k).map(|e| !cluster.is_down(e.node)).unwrap_or(false))
+        });
+        if done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "seed {seed}: double-fault recovery never converged");
+        std::thread::yield_now();
+    }
+    for &s in &survivors {
+        let ctx = mgrs[s].ctx();
+        for k in CONTENDED..KEYS {
+            assert_eq!(
+                kvs[s].get(&ctx, k),
+                Some(vec![seed * 1000 + k; pinned_len(k)]),
+                "seed {seed}: acknowledged write to key {k} lost on node {s}"
             );
         }
     }
@@ -420,6 +469,291 @@ fn run_mid_op_crash_schedule(seed: u64, reloc_heavy: bool) {
     // Pinned keys completed before the crash window ⇒ they must all
     // survive the re-home byte-identically.
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+}
+
+/// Double fault, variant 1 (`replicas = 3`): the home crash-stops, and
+/// a seeded moment later — typically while its rank-0 backup is mid
+/// re-home — that backup crash-stops too. The rank-1 backup must finish
+/// the job from its own replica array (the recovery scan falls through
+/// dead earlier ranks), reads must fail over past the dead ranks
+/// instead of parking forever, and the full history must linearize with
+/// zero lost acknowledged writes: two faults on one range is exactly
+/// the `replicas − 1` budget.
+#[test]
+fn chaos_double_fault_backup_dies_during_rehome() {
+    if let Some(seed) = replay_seed() {
+        run_double_fault_schedule(seed);
+        return;
+    }
+    for seed in [1u64, 6, 13] {
+        run_double_fault_schedule(seed);
+    }
+}
+
+fn run_double_fault_schedule(seed: u64) {
+    let n = 4usize;
+    let dead: NodeId = (seed % n as u64) as NodeId;
+    let backup: NodeId = (dead + 1) % n as NodeId;
+    let (cluster, mgrs, kvs) = kv_cluster(n, chaos_fabric(seed), triple_cfg());
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(3_000_000));
+    let mut all: Vec<Event> = insert_pinned(seed, dead, &mgrs, &kvs, &clock);
+
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let m = mgrs[i].clone();
+            let kv = kvs[i].clone();
+            let cluster = cluster.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            let me: NodeId = i as NodeId;
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(733) + i as u64);
+                let mut events: Vec<Event> = Vec::new();
+                for _ in 0..60u64 {
+                    let key = rng.gen_range(CONTENDED);
+                    let len = chaos_len(&mut rng);
+                    let attempt: Option<(Option<u64>, u64, bool)> = match rng.gen_range(12) {
+                        0..=2 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.insert(&ctx, key, &vec![val; len]).is_ok();
+                            Some((Some(val), inv, ok))
+                        }
+                        3..=5 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.try_update(&ctx, key, &vec![val; len]) == Ok(true);
+                            Some((Some(val), inv, ok))
+                        }
+                        6 => {
+                            let inv = now(&clock);
+                            let ok = kv.try_remove(&ctx, key) == Ok(true);
+                            Some((None, inv, ok))
+                        }
+                        _ => {
+                            // Half the reads target the pinned range, so
+                            // failover reads run against 0, 1, and 2 dead
+                            // chain ranks as the crashes land.
+                            let read_key = if rng.gen_bool(0.5) {
+                                CONTENDED + rng.gen_range(PINNED)
+                            } else {
+                                key
+                            };
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, read_key).map(|v| read_tag(v, read_key));
+                            let resp = now(&clock);
+                            if !cluster.is_down(me) {
+                                events.push(Event::Read { key: read_key, val: got, inv, resp });
+                            }
+                            None
+                        }
+                    };
+                    let resp = now(&clock);
+                    let died = cluster.is_down(me);
+                    if let Some((val, inv, ok)) = attempt {
+                        if died {
+                            events.push(Event::Mutate {
+                                key,
+                                val,
+                                inv,
+                                resp: loco::testkit::CRASHED,
+                            });
+                        } else if ok {
+                            events.push(Event::Mutate { key, val, inv, resp });
+                        }
+                    }
+                    if died {
+                        break;
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    let mut crng = Rng::seeded(seed ^ 0x2DEAD);
+    std::thread::sleep(std::time::Duration::from_millis(5 + crng.gen_range(15)));
+    cluster.crash(dead);
+    std::thread::sleep(std::time::Duration::from_millis(1 + crng.gen_range(8)));
+    cluster.crash(backup);
+
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    check_history(
+        KEYS,
+        &all,
+        &format!("double-fault seed {seed} (home {dead}, then backup {backup})"),
+    );
+    verify_no_acked_loss(seed, &cluster, &mgrs, &kvs);
+}
+
+/// Double fault, variant 2 (`replicas = 3`): the origin home
+/// crash-stops while a joiner is mid-migration pulling ranges off it.
+/// Keys the joiner already moved live on (and are re-replicated to) the
+/// joiner's chain; keys it had not reached yet re-home from the dead
+/// origin's backups — either way nothing acked is lost, nothing hangs,
+/// and a post-recovery rebalance sweep converges the index back onto
+/// the ownership table.
+#[test]
+fn chaos_double_fault_home_dies_during_migration() {
+    if let Some(seed) = replay_seed() {
+        run_migration_crash_schedule(seed);
+        return;
+    }
+    for seed in [2u64, 9] {
+        run_migration_crash_schedule(seed);
+    }
+}
+
+fn run_migration_crash_schedule(seed: u64) {
+    let n = 5usize;
+    let spare: NodeId = (n - 1) as NodeId;
+    let dead: NodeId = (seed % (n as u64 - 1)) as NodeId;
+    let (cluster, mgrs, kvs) = kv_cluster(n, chaos_fabric(seed), triple_cfg());
+    for m in &mgrs {
+        m.membership().set_spares(1 << spare);
+    }
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(4_000_000));
+    let mut all: Vec<Event> = insert_pinned(seed, dead, &mgrs, &kvs, &clock);
+
+    // The joiner: broadcast the join, pull every range the grown table
+    // assigns it, announce alive. Sweeps skip keys homed on the corpse
+    // (recovery owns those), so the loop terminates through the crash.
+    let joiner = {
+        let m = mgrs[spare as usize].clone();
+        let kv = kvs[spare as usize].clone();
+        std::thread::spawn(move || {
+            let ctx = m.ctx();
+            kv.join(&ctx);
+            while kv.rebalance(&ctx) > 0 {}
+            kv.activate(&ctx);
+        })
+    };
+
+    // Original members run the contended workload straddling the crash;
+    // the victim's in-flight ops resolve as CRASHED.
+    let handles: Vec<_> = (0..n - 1)
+        .map(|i| {
+            let m = mgrs[i].clone();
+            let kv = kvs[i].clone();
+            let cluster = cluster.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            let me: NodeId = i as NodeId;
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(389) + i as u64);
+                let mut events: Vec<Event> = Vec::new();
+                for _ in 0..60u64 {
+                    let key = rng.gen_range(CONTENDED);
+                    let len = chaos_len(&mut rng);
+                    let attempt: Option<(Option<u64>, u64, bool)> = match rng.gen_range(12) {
+                        0..=2 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.insert(&ctx, key, &vec![val; len]).is_ok();
+                            Some((Some(val), inv, ok))
+                        }
+                        3..=5 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.try_update(&ctx, key, &vec![val; len]) == Ok(true);
+                            Some((Some(val), inv, ok))
+                        }
+                        6 => {
+                            let inv = now(&clock);
+                            let ok = kv.try_remove(&ctx, key) == Ok(true);
+                            Some((None, inv, ok))
+                        }
+                        _ => {
+                            let read_key = if rng.gen_bool(0.5) {
+                                CONTENDED + rng.gen_range(PINNED)
+                            } else {
+                                key
+                            };
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, read_key).map(|v| read_tag(v, read_key));
+                            let resp = now(&clock);
+                            if !cluster.is_down(me) {
+                                events.push(Event::Read { key: read_key, val: got, inv, resp });
+                            }
+                            None
+                        }
+                    };
+                    let resp = now(&clock);
+                    let died = cluster.is_down(me);
+                    if let Some((val, inv, ok)) = attempt {
+                        if died {
+                            events.push(Event::Mutate {
+                                key,
+                                val,
+                                inv,
+                                resp: loco::testkit::CRASHED,
+                            });
+                        } else if ok {
+                            events.push(Event::Mutate { key, val, inv, resp });
+                        }
+                    }
+                    if died {
+                        break;
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    // Crash the origin a seeded moment in — with the join racing, the
+    // cut lands before, inside, or after the migration of any one key.
+    let mut crng = Rng::seeded(seed ^ 0x316);
+    std::thread::sleep(std::time::Duration::from_millis(2 + crng.gen_range(12)));
+    cluster.crash(dead);
+
+    joiner.join().unwrap();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    check_history(
+        KEYS,
+        &all,
+        &format!("migration-crash seed {seed} (origin {dead}, joiner {spare})"),
+    );
+    verify_no_acked_loss(seed, &cluster, &mgrs, &kvs);
+
+    // Anti-entropy sweep to full convergence: every live node pulls
+    // until nothing moves, after which index and ownership table must
+    // agree on every pinned key everywhere.
+    let live: Vec<usize> = (0..n).filter(|&i| !cluster.is_down(i as NodeId)).collect();
+    loop {
+        let moved: usize = live.iter().map(|&i| kvs[i].rebalance(&mgrs[i].ctx())).sum();
+        if moved == 0 {
+            break;
+        }
+    }
+    for &s in &live {
+        for k in CONTENDED..KEYS {
+            let e = kvs[s].index_entry(k).unwrap();
+            if kvs[s].lock_host(k) == dead {
+                // Lock stripes do not fail over: a corpse-locked key
+                // cannot be migrated, so it legitimately parks at its
+                // promoted (live) home instead of the table owner.
+                assert!(
+                    !cluster.is_down(e.node),
+                    "seed {seed}: corpse-locked pinned key {k} homed on a dead node"
+                );
+                continue;
+            }
+            assert_eq!(
+                e.node,
+                kvs[s].home_of(k),
+                "seed {seed}: pinned key {k} off the ownership table on node {s}"
+            );
+        }
+    }
 }
 
 fn run_crash_schedule(seed: u64) {

@@ -1,0 +1,263 @@
+//! The membership tier: scripted join / leave / rebalance scenarios
+//! under the deterministic simulator (`DeliveryMode::Sim`) at cluster
+//! scale — 16 nodes, `replicas = 3`.
+//!
+//! Each seeded scenario replays a [`join_leave_rebalance`] script: load
+//! a population from random live nodes (online inserts land on the
+//! inserting node, as in the paper), bring the designated spare into
+//! the ownership table, crash-stop a victim (leave == crash), and after
+//! **every** step run an anti-entropy rebalance sweep to quiescence and
+//! assert full convergence ([`check_convergence`]: index agreement,
+//! ownership-table placement, exactly-`replicas` live copies, slab
+//! audits — keys whose lock stripe died are exempt from placement,
+//! they park read-only at a live home) plus a whole-model read audit
+//! folded into one history that the linearizability checker validates
+//! across all the epoch changes.
+//!
+//! The matrix width defaults small for local runs and is pinned in CI
+//! with `LOCO_MEMBERSHIP_SEEDS`; a failure archives the seed and a
+//! replay command under `target/membership/` (uploaded as a CI
+//! artifact) and `LOCO_MEMBERSHIP_REPLAY=<seed>` reruns that one
+//! scenario alone.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::core::manager::Manager;
+use loco::fabric::{Cluster, NodeId};
+use loco::testkit::{
+    check_convergence, check_history, join_leave_rebalance, sim_fabric, Event, MembershipStep,
+};
+use loco::util::rng::Rng;
+
+/// Cluster scale of the tier: 15 active nodes + 1 designated spare.
+const N: usize = 16;
+
+fn membership_cfg() -> KvConfig {
+    KvConfig {
+        slots_per_node: 64,
+        value_words: 2,
+        num_locks: 24,
+        tracker_words: 1 << 12,
+        fence_updates: true,
+        read_cache_bytes: 8 * 1024,
+        replicas: 3,
+        coalesce_invals: true,
+        ..Default::default()
+    }
+}
+
+fn seeds() -> u64 {
+    std::env::var("LOCO_MEMBERSHIP_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+fn replay_seed() -> Option<u64> {
+    std::env::var("LOCO_MEMBERSHIP_REPLAY").ok().and_then(|v| v.parse().ok())
+}
+
+/// Persist a failing seed (plus its replay command) where CI archives
+/// artifacts from.
+fn archive_failure(seed: u64, msg: &str) -> std::path::PathBuf {
+    let dir = std::path::Path::new("target").join("membership");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("failed-seed-{seed:016x}.txt"));
+    let _ = std::fs::write(
+        &path,
+        format!(
+            "seed: {seed}\nreplay: LOCO_MEMBERSHIP_REPLAY={seed} \
+             cargo test --release --test membership -- --nocapture\n\n{msg}\n"
+        ),
+    );
+    path
+}
+
+/// Run every live node's [`KvStore::rebalance`] until a full sweep
+/// moves nothing: each key moves at most once (range owners are unique
+/// per epoch), so this terminates, leaving index and ownership table in
+/// agreement.
+fn sweep_rebalance(cluster: &Cluster, mgrs: &[Arc<Manager>], kvs: &[Arc<KvStore>]) {
+    let live: Vec<usize> = (0..kvs.len()).filter(|&i| !cluster.is_down(i as NodeId)).collect();
+    loop {
+        let moved: usize = live.iter().map(|&i| kvs[i].rebalance(&mgrs[i].ctx())).sum();
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+fn run_scenario(seed: u64) {
+    let spare = (N - 1) as NodeId;
+    let steps = join_leave_rebalance(seed, N);
+
+    let cluster = Cluster::new(N, sim_fabric(seed));
+    let sim = loco::sim::SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..N as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    for m in &mgrs {
+        m.membership().set_spares(1 << spare);
+    }
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", membership_cfg())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+
+    let mut rng = Rng::seeded(seed ^ 0xE2E);
+    let mut model: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut history: Vec<Event> = Vec::new();
+    let mut next_key = 0u64;
+    let mut next_val = 1u64;
+    // The driver is sequential, so a logical clock totally orders the
+    // history — any read the checker flags is a real violation.
+    let mut vclock = 0u64;
+    let mut joined = false;
+
+    for (si, step) in steps.iter().enumerate() {
+        match *step {
+            MembershipStep::Load { count } => {
+                let pool: Vec<usize> = (0..N)
+                    .filter(|&i| !cluster.is_down(i as NodeId) && (joined || i != spare as usize))
+                    .collect();
+                for _ in 0..count {
+                    let node = pool[rng.gen_range(pool.len() as u64) as usize];
+                    let key = next_key;
+                    next_key += 1;
+                    let val = next_val;
+                    next_val += 1;
+                    let inv = vclock;
+                    vclock += 1;
+                    match kvs[node].insert(&ctxs[node], key, &[val, val]) {
+                        Ok(fresh) => {
+                            assert!(fresh, "seed {seed} step {si}: key {key} not fresh");
+                            let resp = vclock;
+                            vclock += 1;
+                            history.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            model.insert(key, vec![val, val]);
+                        }
+                        // The key's lock stripe lives on the corpse:
+                        // the mutation failed fast, nothing happened.
+                        Err(_) => {}
+                    }
+                }
+            }
+            MembershipStep::Join { node } => {
+                let nu = node as usize;
+                kvs[nu].join(&ctxs[nu]);
+                while kvs[nu].rebalance(&ctxs[nu]) > 0 {}
+                kvs[nu].activate(&ctxs[nu]);
+                joined = true;
+            }
+            MembershipStep::Leave { node } => {
+                cluster.crash(node);
+            }
+        }
+        // Quiesce, converge, audit: recovery and in-flight broadcasts
+        // drain, then every live node pulls until the ownership table
+        // and the index agree, then every invariant must hold.
+        sim.settle();
+        sweep_rebalance(&cluster, &mgrs, &kvs);
+        sim.settle();
+        check_convergence(
+            &cluster,
+            &mgrs,
+            &kvs,
+            &model,
+            &format!("membership seed {seed} step {si} ({step:?})"),
+        );
+        // Whole-model read audit from seed-picked live nodes, recorded
+        // into the cross-epoch history.
+        let live: Vec<usize> = (0..N).filter(|&i| !cluster.is_down(i as NodeId)).collect();
+        for &key in model.keys() {
+            let node = live[rng.gen_range(live.len() as u64) as usize];
+            let inv = vclock;
+            vclock += 1;
+            let got = kvs[node].get(&ctxs[node], key).map(|v| {
+                assert!(v.iter().all(|&x| x == v[0]), "seed {seed}: torn value {v:?}");
+                v[0]
+            });
+            let resp = vclock;
+            vclock += 1;
+            history.push(Event::Read { key, val: got, inv, resp });
+        }
+    }
+    sim.settle();
+    check_history(next_key, &history, &format!("membership seed {seed}"));
+}
+
+/// The scripted join → rebalance → leave matrix: every seed's scenario
+/// must converge after each phase and keep one linearizable history
+/// across all epoch changes. A failure archives the seed under
+/// `target/membership/` with a one-line replay command.
+#[test]
+fn membership_join_leave_rebalance_converges() {
+    if let Some(seed) = replay_seed() {
+        println!("LOCO_MEMBERSHIP_REPLAY: rerunning scenario {seed} alone");
+        run_scenario(seed);
+        return;
+    }
+    for seed in 1..=seeds() {
+        if let Err(payload) = std::panic::catch_unwind(|| run_scenario(seed)) {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "non-string panic".into());
+            let path = archive_failure(seed, &msg);
+            panic!("membership seed {seed} failed (archived {}): {msg}", path.display());
+        }
+        println!("membership scenario seed {seed}: converged");
+    }
+}
+
+/// Slot reuse end to end at the membership layer: a crashed node's
+/// fabric slot is revived and re-enters as a *joining* member on every
+/// surviving view without wedging the dead mask (the epoch-carried
+/// state machine), while the survivors keep serving. Data-plane resync
+/// of the rejoined store is out of scope (ISSUE 7 scopes re-growth to
+/// spares); the invariant here is that membership itself is
+/// bidirectional at cluster scale.
+#[test]
+fn crashed_slot_revives_without_wedging_membership() {
+    let seed = 77u64;
+    let cluster = Cluster::new(N, sim_fabric(seed));
+    let sim = loco::sim::SimExecutor::install(&cluster);
+    let mgrs: Vec<Arc<Manager>> =
+        (0..N as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let kvs: Vec<Arc<KvStore>> =
+        mgrs.iter().map(|m| KvStore::new(m, "kv", membership_cfg())).collect();
+    for kv in &kvs {
+        kv.wait_ready(Duration::from_secs(30));
+    }
+    let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+    assert!(kvs[0].insert(&ctxs[0], 1, &[5, 5]).unwrap());
+
+    cluster.crash(9);
+    sim.settle();
+    for (i, m) in mgrs.iter().enumerate() {
+        if i != 9 {
+            assert!(m.membership().is_dead(9), "node {i} missed the death");
+        }
+    }
+    let epoch_after_death = mgrs[0].membership().epoch();
+
+    // Revive the fabric slot and re-enter through the join protocol.
+    // The survivors' failure detectors must NOT re-latch the dead bit
+    // from the fabric's stale down history.
+    cluster.revive(9);
+    kvs[9].join(&ctxs[9]);
+    sim.settle();
+    for (i, m) in mgrs.iter().enumerate() {
+        assert!(!m.membership().is_dead(9), "node {i}: dead mask wedged after slot reuse");
+        if i != 9 {
+            assert!(
+                m.membership().epoch() > epoch_after_death,
+                "node {i}: re-join transition not epoch-carried"
+            );
+        }
+    }
+    // Survivors keep serving through the whole cycle.
+    assert_eq!(kvs[3].get(&ctxs[3], 1), Some(vec![5, 5]));
+}

@@ -251,7 +251,7 @@ fn sim_kv_cluster_smoke() {
 #[test]
 fn model_config_exercises_all_mechanisms() {
     let cfg = model_kv_config();
-    assert!(cfg.replicate, "model tier must test crash recovery");
+    assert!(cfg.replicas >= 2, "model tier must test crash recovery and failover");
     assert!(cfg.fence_updates);
     assert!(cfg.read_cache_bytes > 0, "model tier must test the invalidation protocol");
     assert!(cfg.coalesce_invals);
