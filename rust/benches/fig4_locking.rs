@@ -6,7 +6,7 @@
 //! locks to windows and pays the NIC MR-cache penalty on its 341
 //! windows, while LOCO pools regions into huge pages.
 
-use loco::bench::fig4::{single_lock_mops, txn_mops, LockSystem};
+use loco::bench::fig4::{delegated_lock_mops, single_lock_mops, txn_mops, LockSystem};
 use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
 
@@ -38,6 +38,21 @@ fn main() {
             format!("{mpi:.4}"),
             format!("{loco:.4}"),
             format!("{:.2}", loco / mpi),
+        ]);
+    }
+    // Locking ablation: the same contended counter served over the
+    // request ring (op-shipping) instead of lock + one-sided RMW.
+    for nodes in [2usize, 3, 4, 6] {
+        let del = geomean_runs(scale.runs, || {
+            delegated_lock_mops(nodes, scale.secs, scale.latency.clone())
+        });
+        json.add("fig4_delegated", &format!("{nodes} nodes delegated"), del);
+        t.row(&[
+            "delegated".into(),
+            nodes.to_string(),
+            "-".into(),
+            format!("{del:.4}"),
+            "-".into(),
         ]);
     }
     for nodes in [2usize, 3, 4, 6] {

@@ -16,7 +16,8 @@
 //! perf-trajectory artifact.
 
 use loco::bench::fig5::{
-    loco_batch_ablation, loco_cache_ablation, loco_write_ablation, run_cell, Fig5Cell, KvSystem,
+    loco_batch_ablation, loco_cache_ablation, loco_routing_ablation, loco_write_ablation,
+    run_cell, Fig5Cell, KvSystem,
 };
 use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
@@ -143,6 +144,19 @@ fn main() {
         t6.row(&[label, format!("{mops:.4}")]);
     }
     t6.print();
+
+    // Op-routing ablation (PR-8): one-sided vs shipped vs adaptive
+    // mutation routing on YCSB-A uniform/zipfian and YCSB-B zipfian —
+    // the Brock-et-al. crossover the per-key router rides.
+    let mut t7 = Table::new(&["routing cell", "Mops/s"]);
+    let rows = geomean_rows(scale.runs, || {
+        loco_routing_ablation(nodes, threads, keys, scale.secs, scale.latency.clone())
+    });
+    for (label, mops) in rows {
+        json.add("fig5_routing_ablation", &label, mops);
+        t7.row(&[label, format!("{mops:.4}")]);
+    }
+    t7.print();
 
     // Value-size sweep (the slab allocator's regime): LOCO 50/50
     // zipfian at 8 B, 1 KB, and the mixed 8 B-1 KB stream whose

@@ -135,17 +135,19 @@ use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
 
 use crate::channels::read_cache::{CacheStats, EpochGate, FillToken, ReadCache};
+use crate::channels::request_ring::RequestRing;
 use crate::channels::ringbuffer::{RingReceiver, RingSender};
 use crate::channels::ticket_lock::TicketLock;
 use crate::core::ack::AckKey;
 use crate::core::ctx::{FenceScope, MemRef, ThreadCtx};
 use crate::core::endpoint::{region_name, sub_name, Endpoint, Expect};
+use crate::core::heat::{HeatTracker, RouteDecision, RouteMode};
 use crate::core::index::ShardedIndex;
 use crate::core::manager::{Manager, Membership};
 use crate::core::mem_pool::{
     hdr_class, hdr_len, hdr_reloc, pack_hdr, SlabAllocator, SlabGeometry,
 };
-use crate::fabric::{NodeId, Region};
+use crate::fabric::{Cluster, NodeId, Region};
 use crate::util::{fnv64, Backoff};
 use crate::{Error, Result};
 
@@ -195,6 +197,27 @@ const OP_JOIN: u64 = 8;
 /// Membership: the sender finished joining (its migration converged):
 /// `[OP_ALIVE, node]`.
 const OP_ALIVE: u64 = 9;
+
+/// Request-ring op code: shipped in-place update, `(key, epoch, value)`
+/// (see § Op routing in `docs/ARCHITECTURE.md`).
+const SHIP_UPDATE: u8 = 1;
+/// Shipped-op reply statuses: the server applied the update under the
+/// key lock (replication + invalidation broadcast included, so the
+/// reply is the client's linearization witness)…
+const SHIP_APPLIED: u8 = 1;
+/// …the key is absent in the server's index (a legal "absent" answer —
+/// the index read is the serialization point, exactly like `get`'s)…
+const SHIP_MISSING: u8 = 2;
+/// …the server is not (or no longer) the key's home — the client
+/// re-resolves its index and retries or falls back one-sided…
+const SHIP_WRONG_HOME: u8 = 3;
+/// …or a transient server-side failure (lock host dead, home
+/// mid-recovery): the client falls back to the one-sided path, which
+/// owns the re-home dance.
+const SHIP_RETRY: u8 = 4;
+/// WRONG_HOME/RETRY attempts before a shipped update falls back to the
+/// one-sided path (which is always correct, just slower when hot).
+const SHIP_ATTEMPTS: usize = 3;
 
 /// `OP_INSERT` message lengths: the 5-word plain form, and the 8-word
 /// relocation form carrying the origin entry (`[…, old_node, old_slot,
@@ -277,6 +300,18 @@ pub struct KvConfig {
     /// Off = the pre-coalescing one-round-per-update behavior (the
     /// ablation baseline). No effect with the cache disabled.
     pub coalesce_invals: bool,
+    /// Mutation routing policy (see `docs/ARCHITECTURE.md § Op
+    /// routing`): [`RouteMode::OneSided`] always takes the lock-and-
+    /// write path, [`RouteMode::Ship`] sends every remote-homed update
+    /// to its home's request ring, [`RouteMode::Adaptive`] picks per
+    /// key from the [`HeatTracker`] (hot/contended keys ship, the rest
+    /// stay one-sided). Default from `LOCO_ROUTING` (unset =
+    /// `OneSided`). Part of the cluster-wide config contract: with
+    /// `OneSided` no ring endpoint is created at all, so nodes must
+    /// agree on *whether* routing is on (the ring's join handshake
+    /// would otherwise wedge `wait_ready`); the Ship/Adaptive choice
+    /// itself may differ per node.
+    pub routing: RouteMode,
 }
 
 impl Default for KvConfig {
@@ -291,6 +326,7 @@ impl Default for KvConfig {
             read_cache_bytes: 0,
             replicas: 1,
             coalesce_invals: true,
+            routing: RouteMode::from_env(),
         }
     }
 }
@@ -436,8 +472,17 @@ pub struct KvStore {
     tracker_tx: Mutex<RingSender>,
     /// Coalesced-`OP_INVAL` group commit (see [`InvalCoalescer`]).
     inval: InvalCoalescer,
+    /// Fabric handle for the routing observability counters
+    /// (`Cluster::ops_shipped` / `Cluster::route_flips`).
+    cluster: Arc<Cluster>,
+    /// Op-shipping request ring (`None` iff `routing == OneSided`:
+    /// nothing ships and no serve loop runs — the pre-routing store).
+    ship: Option<Arc<RequestRing>>,
+    /// Per-key heat/contention tracker driving Adaptive decisions.
+    heat: HeatTracker,
     shared: Arc<KvShared>,
     tracker_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    ship_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl KvStore {
@@ -507,6 +552,20 @@ impl KvStore {
         // Our tracker (we broadcast; peers receive).
         let tracker_tx = RingSender::new(mgr, &sub_name(name, &format!("trk{me}")), cfg.tracker_words);
 
+        // Op-shipping ring (§ Op routing): one served request ring per
+        // node, created only when routing is on — with `OneSided` the
+        // store is byte-for-byte the pre-routing one. The inline value
+        // budget is capped at the fabric's inline-WRITE budget so a
+        // shipped frame stays one inline WRITE; wider values simply
+        // take the one-sided path.
+        let ship = (cfg.routing != RouteMode::OneSided).then(|| {
+            let inline = mgr.cluster().config().latency.max_inline_words;
+            // 4 frame meta words (header, key, epoch, checksum) ride
+            // along with the value in the one WRITE.
+            let max_val = cfg.value_words.min(inline.saturating_sub(4)).max(1);
+            Arc::new(RequestRing::new(mgr, &sub_name(name, "ship"), max_val))
+        });
+
         let shared = Arc::new(KvShared {
             index: ShardedIndex::new(geo.total_slots() * n),
             cache: (cfg.read_cache_bytes > 0).then(|| ReadCache::new(cfg.read_cache_bytes)),
@@ -529,8 +588,12 @@ impl KvStore {
             locks,
             tracker_tx: Mutex::new(tracker_tx),
             inval: InvalCoalescer::new(),
+            cluster: mgr.cluster().clone(),
+            ship,
+            heat: HeatTracker::new(),
             shared: shared.clone(),
             tracker_thread: Mutex::new(None),
+            ship_thread: Mutex::new(None),
         });
 
         // Dedicated tracker (§6): receives peers' tracker rings, applies
@@ -594,6 +657,22 @@ impl KvStore {
                     did
                 }),
             );
+            // The ship server is its own service: drains our request
+            // ring and applies shipped updates under the key locks.
+            if kv.ship.is_some() {
+                let ctx = mgr.ctx();
+                let weak = Arc::downgrade(&kv);
+                crate::sim::register_service(
+                    format!("kv-ship-{me}"),
+                    Box::new(move || {
+                        let Some(kv) = weak.upgrade() else { return false };
+                        if kv.shared.shutdown.load(Ordering::Relaxed) {
+                            return false;
+                        }
+                        kv.serve_shipped(&ctx)
+                    }),
+                );
+            }
             return kv;
         }
         let name2 = name.to_string();
@@ -602,6 +681,32 @@ impl KvStore {
             .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2, weak))
             .expect("spawn tracker");
         *kv.tracker_thread.lock().unwrap() = Some(handle);
+        if kv.ship.is_some() {
+            let weak = Arc::downgrade(&kv);
+            let mgr3 = mgr.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("kv-ship-{me}"))
+                .spawn(move || {
+                    let ctx = mgr3.ctx();
+                    let mut bo = Backoff::new();
+                    loop {
+                        // Transient upgrade only: holding the Arc across
+                        // the snooze would keep Drop from ever running.
+                        let Some(kv) = weak.upgrade() else { break };
+                        if kv.shared.shutdown.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        if kv.serve_shipped(&ctx) {
+                            bo.reset();
+                        } else {
+                            drop(kv);
+                            bo.snooze();
+                        }
+                    }
+                })
+                .expect("spawn ship server");
+            *kv.ship_thread.lock().unwrap() = Some(handle);
+        }
         kv
     }
 
@@ -609,6 +714,9 @@ impl KvStore {
         self.ep.wait_ready(timeout);
         for l in &self.locks {
             l.wait_ready(timeout);
+        }
+        if let Some(ring) = &self.ship {
+            ring.wait_ready(timeout);
         }
         self.tracker_tx.lock().unwrap().wait_ready(timeout);
         let mut bo = Backoff::new();
@@ -942,6 +1050,15 @@ impl KvStore {
     /// the current home.
     pub fn try_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
         self.check_value_len(value);
+        // Route BEFORE taking the lock: the shipping client never holds
+        // a ticket lock (the server takes it), so ship-vs-one-sided can
+        // never deadlock against the lock order.
+        if self.route_mutation(key) == RouteDecision::Ship {
+            if let Some(done) = self.ship_update(ctx, key, value) {
+                return Ok(done);
+            }
+            // No definite shipped outcome: fall through one-sided.
+        }
         let lock = self.lock_of(key);
         lock.try_lock(ctx)?;
         let res = match self.shared.index.get(key) {
@@ -950,6 +1067,147 @@ impl KvStore {
         };
         lock.unlock(ctx);
         res
+    }
+
+    // ---- op routing (one-sided vs op-shipping) ------------------------
+
+    /// Pick the path for one mutation of `key` (see
+    /// `docs/ARCHITECTURE.md § Op routing`). `Adaptive` samples the
+    /// per-key heat tracker, folding in whether the key's ticket lock
+    /// saw contention since its last sample.
+    fn route_mutation(&self, key: u64) -> RouteDecision {
+        if self.ship.is_none() {
+            return RouteDecision::OneSided;
+        }
+        match self.cfg.routing {
+            RouteMode::OneSided => RouteDecision::OneSided,
+            RouteMode::Ship => RouteDecision::Ship,
+            RouteMode::Adaptive => {
+                let contended = self.lock_of(key).take_contended();
+                let (d, flipped) = self.heat.sample(key, contended);
+                if flipped {
+                    self.cluster.note_route_flip(self.me);
+                }
+                d
+            }
+        }
+    }
+
+    /// Ship an in-place update to the key's home node. Returns a
+    /// definite outcome (`Some(applied)`) or `None` when the op should
+    /// take the one-sided path instead: local home, oversized value,
+    /// dead/mid-move home, or a server that could not apply. A `None`
+    /// after the server may have applied is still linearizable — the
+    /// one-sided retry re-applies the *same* value under the key lock,
+    /// and double-applying idempotent state is invisible to readers.
+    fn ship_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Option<bool> {
+        let ring = self.ship.as_ref()?;
+        if value.len() > ring.max_value_words() {
+            return None; // outgrew the inline budget (or must relocate)
+        }
+        for _ in 0..SHIP_ATTEMPTS {
+            let Some(e) = self.shared.index.get(key) else {
+                // Absent at the index-read instant: the same legal
+                // "absent" linearization `get` uses — and unlike the
+                // one-sided path, no lock host needs to be alive.
+                return Some(false);
+            };
+            if e.node == self.me || ctx.node_down(e.node) {
+                // Local apply is strictly cheaper one-sided; a dead
+                // home needs the one-sided path's re-home parking.
+                return None;
+            }
+            self.cluster.note_op_shipped(self.me);
+            let epoch = self.shared.membership.epoch();
+            match ring.call(ctx, e.node, SHIP_UPDATE, key, epoch, value) {
+                Ok(rep) if rep.status == SHIP_APPLIED => return Some(true),
+                Ok(rep) if rep.status == SHIP_MISSING => return Some(false),
+                Ok(_) => continue, // WRONG_HOME / RETRY: re-resolve
+                Err(_) => return None, // server died: fall back
+            }
+        }
+        None
+    }
+
+    /// Serve one sweep of our request ring (the ship server's loop
+    /// body; a simulator service in sim mode, a thread otherwise).
+    /// Returns whether any work was done.
+    ///
+    /// Same-key requests in one sweep are **write-combined**: all of
+    /// them are pending concurrently, so applying only the last value
+    /// and acking every rider linearizes them back-to-back at that one
+    /// apply — the batch analogue of `multi_put`'s collapse, minus the
+    /// frame writes the riders no longer cost.
+    fn serve_shipped(&self, ctx: &ThreadCtx) -> bool {
+        let Some(ring) = &self.ship else { return false };
+        if !ring.is_ready() || !self.shared.tracker_ready.load(Ordering::Acquire) {
+            return false;
+        }
+        if ctx.node_down(self.me) {
+            return false; // a corpse serves nothing (crash-stop)
+        }
+        let reqs = ring.drain(ctx);
+        if reqs.is_empty() {
+            return false;
+        }
+        // Last occurrence per key wins; earlier riders share its fate.
+        let mut last_of: HashMap<u64, usize> = HashMap::with_capacity(reqs.len());
+        for (i, req) in reqs.iter().enumerate() {
+            last_of.insert(req.key, i);
+        }
+        // Apply in drain order (not map order): the sweep must be a
+        // deterministic function of ring state under the simulator.
+        let mut outcome: HashMap<u64, (u8, u64)> = HashMap::with_capacity(last_of.len());
+        for (i, req) in reqs.iter().enumerate() {
+            if last_of[&req.key] == i {
+                outcome.insert(req.key, self.apply_shipped(ctx, req));
+            }
+        }
+        for req in &reqs {
+            let (status, retval) = outcome[&req.key];
+            ring.reply(ctx, req, status, retval);
+        }
+        true
+    }
+
+    /// Apply one shipped update under the key lock. The index is
+    /// re-resolved **under the lock** — a key mid-migration (rebalance,
+    /// relocation, crash re-home) moves only under this same lock, so
+    /// `e.node == me` checked here is authoritative; the client's
+    /// shipped epoch is an additional staleness screen.
+    fn apply_shipped(&self, ctx: &ThreadCtx, req: &crate::channels::OpReq) -> (u8, u64) {
+        if req.op != SHIP_UPDATE {
+            return (SHIP_RETRY, 0);
+        }
+        if req.aux != self.shared.membership.epoch() {
+            // The client routed under another membership epoch; make it
+            // re-resolve rather than guess whose view is ahead.
+            return (SHIP_WRONG_HOME, 0);
+        }
+        match self.shared.index.get(req.key) {
+            None => return (SHIP_MISSING, 0),
+            Some(e) if e.node != self.me => return (SHIP_WRONG_HOME, 0),
+            Some(_) => {}
+        }
+        let lock = self.lock_of(req.key);
+        if lock.try_lock(ctx).is_err() {
+            return (SHIP_RETRY, 0); // lock host dead: client falls back
+        }
+        let res = match self.shared.index.get(req.key) {
+            None => Ok((SHIP_MISSING, 0)),
+            Some(e) if e.node != self.me => Ok((SHIP_WRONG_HOME, 0)),
+            Some(e) => {
+                self.locked_update(ctx, req.key, e, &req.val).map(|applied| {
+                    if applied {
+                        (SHIP_APPLIED, 0)
+                    } else {
+                        (SHIP_MISSING, 0)
+                    }
+                })
+            }
+        };
+        lock.unlock(ctx);
+        res.unwrap_or((SHIP_RETRY, 0))
     }
 
     /// The locked mutate path shared by update and insert-over-existing,
@@ -1614,6 +1872,19 @@ impl KvStore {
         for (_, value) in items {
             self.check_value_len(value);
         }
+        // Routing: batches always take the one-sided batched pipeline
+        // (amortized doorbells/fences ARE their advantage), but their
+        // touches still heat the keys so the scalar path's adaptive
+        // decisions account for batch traffic too.
+        if self.cfg.routing == RouteMode::Adaptive && self.ship.is_some() {
+            for (k, _) in items {
+                let contended = self.lock_of(*k).take_contended();
+                let (_, flipped) = self.heat.sample(*k, contended);
+                if flipped {
+                    self.cluster.note_route_flip(self.me);
+                }
+            }
+        }
         let mut lock_ids: Vec<usize> =
             items.iter().map(|(k, _)| (*k % self.cfg.num_locks as u64) as usize).collect();
         lock_ids.sort_unstable();
@@ -1840,6 +2111,11 @@ impl KvStore {
 
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.ship_thread.lock().unwrap().take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
         if let Some(h) = self.tracker_thread.lock().unwrap().take() {
             if h.thread().id() == std::thread::current().id() {
                 // We ARE the tracker thread: the last external Arc was
@@ -1867,6 +2143,13 @@ impl KvStore {
     ///
     /// [`Cluster::revive`]: crate::fabric::Cluster::revive
     pub fn join(&self, ctx: &ThreadCtx) {
+        if let Some(ring) = &self.ship {
+            // Drop anything shipped to us before this (re)join: those
+            // clients have long since erred out on our death/absence,
+            // and a late apply of their frames would un-linearize the
+            // fallback path they already completed down.
+            ring.quiesce(ctx);
+        }
         self.shared.membership.note_joining(self.me);
         let tx = self.tracker_tx.lock().unwrap();
         self.send_tracker(ctx, &tx, &[OP_JOIN, self.me as u64]);

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::baselines::mpi_rma::{MpiWindows, MAX_WINDOWS};
+use crate::channels::request_ring::RequestRing;
 use crate::channels::ticket_lock::TicketLock;
 use crate::core::ctx::{FenceScope, ThreadCtx};
 use crate::core::endpoint::{region_name, Endpoint, Expect};
@@ -146,6 +147,97 @@ pub fn single_lock_mops(system: LockSystem, nodes: usize, secs: f64, lat: Latenc
         })
         .collect();
     // Start the clock only after every node is set up.
+    while ready.load(Ordering::SeqCst) < nodes as u64 {
+        std::thread::yield_now();
+    }
+    ready.store(0, Ordering::SeqCst); // release the workers
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::SeqCst);
+    for h in handles {
+        h.join().unwrap();
+    }
+    total.load(Ordering::SeqCst) as f64 / secs / 1e6
+}
+
+/// Fig. 4 (left, ablation): the same contended counter, *delegated*.
+///
+/// Instead of every node acquiring the ticket lock and running the
+/// read-modify-write one-sided (a FAA + spin + read + write + fenced
+/// unlock conversation against the home node), the counter's home node
+/// serves a [`RequestRing`]: each client ships the increment with one
+/// WRITE and waits for the one-WRITE reply, and the home applies
+/// shipped increments locally — no lock at all, because the serving
+/// sweep is the serialization point. This is the op-shipping side of
+/// the Brock-et-al. crossover that the kvstore's adaptive router picks
+/// per key; here it is isolated as a fig4 locking-ablation cell.
+///
+/// The home node only serves (`nodes - 1` clients generate ops), so
+/// the aggregate measures the shipped path itself. Returns Mops/s.
+pub fn delegated_lock_mops(nodes: usize, secs: f64, lat: LatencyModel) -> f64 {
+    assert!(nodes >= 2, "delegation needs a home and at least one client");
+    const OP_INC: u8 = 1;
+    let cluster = Cluster::new(nodes, FabricConfig::threaded(lat));
+    let mgrs: Vec<Arc<Manager>> =
+        (0..nodes as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+    let ready = Arc::new(AtomicU64::new(0));
+    // Clients that have retired their last in-flight call; the home
+    // keeps sweeping until every one has, so no final call wedges.
+    let done = Arc::new(AtomicU64::new(0));
+
+    let handles: Vec<_> = mgrs
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let m = m.clone();
+            let stop = stop.clone();
+            let total = total.clone();
+            let ready = ready.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let ring = RequestRing::new(&m, "dl", 1);
+                ring.wait_ready(Duration::from_secs(30));
+                ready.fetch_add(1, Ordering::SeqCst);
+                while ready.load(Ordering::SeqCst) != 0 && !stop.load(Ordering::Relaxed) {
+                    std::hint::spin_loop();
+                }
+                let ctx = m.ctx();
+                if i == 0 {
+                    // Home: the serving sweep IS the critical section.
+                    let clients = (m.num_nodes() - 1) as u64;
+                    let mut counter = 0u64;
+                    let mut bo = crate::util::Backoff::new();
+                    loop {
+                        let reqs = ring.drain(&ctx);
+                        if reqs.is_empty() {
+                            if stop.load(Ordering::Relaxed)
+                                && done.load(Ordering::SeqCst) == clients
+                            {
+                                break;
+                            }
+                            bo.snooze();
+                            continue;
+                        }
+                        bo.reset();
+                        for req in reqs {
+                            counter += req.val[0];
+                            ring.reply(&ctx, &req, 0, counter);
+                        }
+                    }
+                } else {
+                    let mut ops = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        if ring.call(&ctx, 0, OP_INC, 0, 0, &[1]).is_ok() {
+                            ops += 1;
+                        }
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                    total.fetch_add(ops, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
     while ready.load(Ordering::SeqCst) < nodes as u64 {
         std::thread::yield_now();
     }
@@ -328,6 +420,12 @@ mod tests {
             let mops = single_lock_mops(sys, 2, 0.2, LatencyModel::fast_sim());
             assert!(mops > 0.0, "{sys:?} made no progress");
         }
+    }
+
+    #[test]
+    fn delegated_lock_makes_progress() {
+        let mops = delegated_lock_mops(3, 0.2, LatencyModel::fast_sim());
+        assert!(mops > 0.0, "delegated cell made no progress");
     }
 
     #[test]

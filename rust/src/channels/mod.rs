@@ -14,6 +14,9 @@
 //! * [`barrier`] — SST counting barrier (Fig. 1a).
 //! * [`ringbuffer`] — one-to-many broadcast ring with mixed-size
 //!   messages and SST-based receiver acknowledgements.
+//! * [`request_ring`] — served op-shipping (RPC) ring: one WRITE ships
+//!   a whole operation to its home node, one WRITE carries the reply
+//!   (the kvstore's hot-key routing target).
 //! * [`shared_queue`] — globally consistent MPMC FIFO queue, striped
 //!   across participants (cyclic ring queue adapted for RDMA).
 //! * [`read_cache`] — bounded per-node hot-key value cache with
@@ -24,6 +27,7 @@ pub mod atomic_var;
 pub mod barrier;
 pub mod owned_var;
 pub mod read_cache;
+pub mod request_ring;
 pub mod ringbuffer;
 pub mod shared_queue;
 pub mod sst;
@@ -33,6 +37,7 @@ pub use atomic_var::AtomicVar;
 pub use barrier::Barrier;
 pub use owned_var::OwnedVar;
 pub use read_cache::ReadCache;
+pub use request_ring::{OpReq, Reply, RequestRing};
 pub use ringbuffer::{RingReceiver, RingSender};
 pub use shared_queue::SharedQueue;
 pub use sst::Sst;

@@ -1,0 +1,498 @@
+//! `request_ring`: a served op-shipping (RPC) channel.
+//!
+//! Where every other channel moves *memory*, this one moves
+//! *operations*: a client writes a checksummed `OpReq` frame (op code,
+//! key, epoch, inline value) into a slot of the server's request
+//! region with **one** RDMA WRITE, then spins on a completion word in
+//! its own local reply region. The server's service loop sweeps its
+//! request slots, validates checksums (a frame still being placed
+//! word-by-word simply fails validation and is retried next sweep —
+//! the §2.2 torn-write hazard needs no fence here), hands complete
+//! requests to the application, and answers with a one-sided WRITE of
+//! a 3-word checksummed reply. Total cost per shipped op: one WRITE
+//! each way — the Brock-et-al. crossover regime where this beats a
+//! one-sided lock/write/fence/unlock conversation on hot keys.
+//!
+//! The ring is application-agnostic: [`RequestRing::call`] ships, and
+//! the owner of the serving loop pairs [`RequestRing::drain`] /
+//! [`RequestRing::reply`] with its own apply logic (the kvstore's
+//! shipped-update handler, fig4's delegated lock server). Op and
+//! status codes are caller-defined bytes.
+//!
+//! ## Frame layout
+//!
+//! Request slot (`4 + max_value_words` words, per client × slot):
+//!
+//! ```text
+//! [ seq(32) | op(8) | pad(8) | len(16) ][ key ][ epoch ][ value… ][ fnv64 ]
+//! ```
+//!
+//! Reply slot (3 words, per server × slot, in the *client's* memory):
+//!
+//! ```text
+//! [ seq(32) | status(8) ][ retval ][ fnv64 ]
+//! ```
+//!
+//! `seq` is per (client, server, slot), starts at 1, and makes slot
+//! reuse unambiguous: a reply is only accepted when its `seq` matches
+//! the outstanding request, and the server only accepts a slot whose
+//! `seq` moved past the last one it served.
+//!
+//! ## Failure contract
+//!
+//! Crash-stop of the server surfaces as `Err(Error::PeerFailed)` from
+//! `call` in bounded time (the reply spin watches the cluster's down
+//! mask; it never wedges on a corpse). The op may or may not have been
+//! applied before the crash — callers that need exactly-once must make
+//! re-execution down another path safe (the kvstore's fallback
+//! re-applies the same value under the key lock, which linearizes).
+//! Transient completion errors (QP flaps) are retried on the same
+//! slot/`seq` while the peer is alive, so a frame is never abandoned
+//! where a live server could still apply it late.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::core::ctx::ThreadCtx;
+use crate::core::endpoint::{region_name, Endpoint, Expect};
+use crate::core::manager::Manager;
+use crate::fabric::{NodeId, Region};
+use crate::util::{fnv64, Backoff, WaitBudget};
+
+/// Concurrent shipped ops per (client, server) pair; calls beyond this
+/// briefly wait for a slot.
+pub const SLOTS_PER_CLIENT: usize = 4;
+/// Reply frame words: header, retval, checksum.
+const REP_WORDS: u64 = 3;
+/// Request frame overhead words: header, key, epoch, checksum.
+const REQ_META_WORDS: u64 = 4;
+
+/// One complete request drained by the server.
+#[derive(Clone, Debug)]
+pub struct OpReq {
+    /// Requesting node.
+    pub from: NodeId,
+    /// Caller-defined op code.
+    pub op: u8,
+    /// Key operand.
+    pub key: u64,
+    /// Caller-defined auxiliary word (the kvstore ships its membership
+    /// epoch here).
+    pub aux: u64,
+    /// Inline value payload.
+    pub val: Vec<u64>,
+    slot: usize,
+    seq: u32,
+}
+
+/// A served reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Reply {
+    /// Caller-defined status byte.
+    pub status: u8,
+    /// Caller-defined return word.
+    pub retval: u64,
+}
+
+struct ClientSlots {
+    /// Last sequence number used per slot (next call uses `+1`).
+    seq: [u32; SLOTS_PER_CLIENT],
+    busy: [bool; SLOTS_PER_CLIENT],
+}
+
+/// Per-node served request ring (see module docs).
+pub struct RequestRing {
+    ep: Arc<Endpoint>,
+    me: NodeId,
+    num_nodes: usize,
+    /// Requests addressed to me: `num_nodes × SLOTS × slot_words`.
+    req: Region,
+    /// Replies addressed to me: `num_nodes × SLOTS × REP_WORDS`.
+    rep: Region,
+    slot_words: u64,
+    max_value: usize,
+    /// Client side: slot allocation per server node.
+    clients: Vec<Mutex<ClientSlots>>,
+    /// Server side: highest request `seq` served per (client, slot).
+    served: Mutex<Vec<[u32; SLOTS_PER_CLIENT]>>,
+}
+
+impl RequestRing {
+    /// Build this node's ring under `name`. `max_value_words` bounds the
+    /// inline payload (callers cap it at the fabric's inline budget so a
+    /// shipped frame stays a single inline WRITE).
+    pub fn new(mgr: &Arc<Manager>, name: &str, max_value_words: usize) -> Self {
+        assert!(max_value_words >= 1, "request ring needs at least one value word");
+        let me = mgr.me();
+        let n = mgr.num_nodes();
+        let slot_words = REQ_META_WORDS + max_value_words as u64;
+        let ep = Endpoint::new(name, me, n, Expect::AllPeers);
+        let req_len = n as u64 * SLOTS_PER_CLIENT as u64 * slot_words;
+        let rep_len = n as u64 * SLOTS_PER_CLIENT as u64 * REP_WORDS;
+        let req = mgr.pool().alloc_named(&region_name(name, "req"), req_len, false);
+        let rep = mgr.pool().alloc_named(&region_name(name, "rep"), rep_len, false);
+        ep.add_local_region("req", req);
+        ep.add_local_region("rep", rep);
+        ep.expect_regions(&["req", "rep"]);
+        mgr.register_channel(ep.clone());
+        RequestRing {
+            ep,
+            me,
+            num_nodes: n,
+            req,
+            rep,
+            slot_words,
+            max_value: max_value_words,
+            clients: (0..n)
+                .map(|_| {
+                    Mutex::new(ClientSlots {
+                        seq: [0; SLOTS_PER_CLIENT],
+                        busy: [false; SLOTS_PER_CLIENT],
+                    })
+                })
+                .collect(),
+            served: Mutex::new(vec![[0; SLOTS_PER_CLIENT]; n]),
+        }
+    }
+
+    pub fn wait_ready(&self, timeout: Duration) {
+        self.ep.wait_ready(timeout);
+    }
+
+    /// Non-blocking readiness probe (simulator services).
+    pub fn is_ready(&self) -> bool {
+        self.ep.is_ready()
+    }
+
+    /// Largest inline value `call` accepts.
+    pub fn max_value_words(&self) -> usize {
+        self.max_value
+    }
+
+    /// Offset of (client, slot) in a request region.
+    fn req_off(&self, client: NodeId, slot: usize) -> u64 {
+        (client as u64 * SLOTS_PER_CLIENT as u64 + slot as u64) * self.slot_words
+    }
+
+    /// Offset of (server, slot) in a reply region.
+    fn rep_off(server: NodeId, slot: usize) -> u64 {
+        (server as u64 * SLOTS_PER_CLIENT as u64 + slot as u64) * REP_WORDS
+    }
+
+    fn pack_req_hdr(seq: u32, op: u8, len: usize) -> u64 {
+        ((seq as u64) << 32) | ((op as u64) << 24) | (len as u64 & 0xFFFF)
+    }
+
+    fn pack_rep_hdr(seq: u32, status: u8) -> u64 {
+        ((seq as u64) << 32) | status as u64
+    }
+
+    /// Ship `(op, key, aux, val)` to `server` and wait for its reply.
+    ///
+    /// `Err(Error::PeerFailed)` if the server (or this node) crash-stops
+    /// before the reply lands; whether the op was applied is then
+    /// unknown (see module docs). Never called with `server == me` —
+    /// local ops have no reason to ship.
+    pub fn call(
+        &self,
+        ctx: &ThreadCtx,
+        server: NodeId,
+        op: u8,
+        key: u64,
+        aux: u64,
+        val: &[u64],
+    ) -> crate::Result<Reply> {
+        assert_ne!(server, self.me, "shipping to self");
+        assert!(val.len() <= self.max_value, "shipped value exceeds the ring's inline budget");
+        if ctx.node_down(server) {
+            return Err(crate::Error::PeerFailed(format!("ship target {server} crash-stopped")));
+        }
+
+        // Claim a slot (briefly wait if all are in flight).
+        let (slot, seq) = {
+            let mut bo = Backoff::new();
+            let mut budget = WaitBudget::wedge(Duration::from_secs(30));
+            loop {
+                {
+                    let mut st = self.clients[server as usize].lock().unwrap();
+                    if let Some(s) = st.busy.iter().position(|b| !b) {
+                        st.busy[s] = true;
+                        st.seq[s] = st.seq[s].wrapping_add(1).max(1);
+                        break (s, st.seq[s]);
+                    }
+                }
+                if ctx.node_down(server) {
+                    return Err(crate::Error::PeerFailed(format!(
+                        "ship target {server} crash-stopped"
+                    )));
+                }
+                bo.snooze();
+                assert!(!budget.expired(), "request ring slot wait wedged (30 s)");
+            }
+        };
+        let free_slot = || self.clients[server as usize].lock().unwrap().busy[slot] = false;
+
+        // Build and post the request frame: one WRITE, checksummed so a
+        // mid-placement sweep on the server just skips it.
+        let mut frame = Vec::with_capacity(self.slot_words as usize);
+        frame.push(Self::pack_req_hdr(seq, op, val.len()));
+        frame.push(key);
+        frame.push(aux);
+        frame.extend_from_slice(val);
+        frame.push(fnv64(&frame));
+        let target = self.ep.remote_region(server, "req");
+        let off = self.req_off(self.me, slot);
+        let mut bo = Backoff::new();
+        let mut budget = WaitBudget::wedge(Duration::from_secs(30));
+        loop {
+            let k = ctx.write(target, off, &frame);
+            match ctx.wait_checked(&k) {
+                Ok(()) => break,
+                // Transient (flap) errors retry the same slot/seq: a
+                // live server must never be left holding a frame we
+                // abandoned (it could apply it arbitrarily late).
+                Err(_) if !ctx.node_down(server) && !ctx.node_down(self.me) => {
+                    bo.snooze();
+                    assert!(!budget.expired(), "request ring post wedged (30 s)");
+                }
+                Err(e) => {
+                    free_slot();
+                    return Err(e);
+                }
+            }
+        }
+
+        // Spin on the local reply word. Bounded: a crash of either end
+        // surfaces via the down mask, anything else is a wedge.
+        let mut bo = Backoff::new();
+        let mut budget = WaitBudget::wedge(Duration::from_secs(30));
+        let roff = Self::rep_off(server, slot);
+        loop {
+            let hdr = ctx.local_load(self.rep, roff);
+            if (hdr >> 32) as u32 == seq {
+                let retval = ctx.local_load(self.rep, roff + 1);
+                let ck = ctx.local_load(self.rep, roff + 2);
+                if ck == fnv64(&[hdr, retval]) {
+                    free_slot();
+                    return Ok(Reply { status: (hdr & 0xFF) as u8, retval });
+                }
+            }
+            if ctx.node_down(server) {
+                free_slot();
+                return Err(crate::Error::PeerFailed(format!(
+                    "ship target {server} crash-stopped before replying"
+                )));
+            }
+            if ctx.node_down(self.me) {
+                free_slot();
+                return Err(crate::Error::PeerFailed("local node crash-stopped".into()));
+            }
+            bo.snooze();
+            assert!(!budget.expired(), "request ring reply wait wedged (30 s): seq {seq}");
+        }
+    }
+
+    /// Server side: sweep my request slots and return every complete,
+    /// not-yet-served request (placement-torn frames are skipped and
+    /// picked up by a later sweep). Non-blocking; safe to call from a
+    /// simulator service.
+    pub fn drain(&self, ctx: &ThreadCtx) -> Vec<OpReq> {
+        let mut served = self.served.lock().unwrap();
+        let mut out = Vec::new();
+        for client in 0..self.num_nodes as NodeId {
+            if client == self.me {
+                continue;
+            }
+            for slot in 0..SLOTS_PER_CLIENT {
+                let off = self.req_off(client, slot);
+                let hdr = ctx.local_load(self.req, off);
+                let seq = (hdr >> 32) as u32;
+                if seq == 0 || seq == served[client as usize][slot] {
+                    continue;
+                }
+                let len = (hdr & 0xFFFF) as usize;
+                if len > self.max_value {
+                    continue; // torn header half; retry next sweep
+                }
+                let mut words = Vec::with_capacity(3 + len);
+                words.push(hdr);
+                for i in 1..(3 + len) as u64 {
+                    words.push(ctx.local_load(self.req, off + i));
+                }
+                let ck = ctx.local_load(self.req, off + 3 + len as u64);
+                if ck != fnv64(&words) {
+                    continue; // placement in flight; retry next sweep
+                }
+                served[client as usize][slot] = seq;
+                out.push(OpReq {
+                    from: client,
+                    op: (hdr >> 24) as u8,
+                    key: words[1],
+                    aux: words[2],
+                    val: words[3..].to_vec(),
+                    slot,
+                    seq,
+                });
+            }
+        }
+        out
+    }
+
+    /// Server side: answer a drained request. Retries transient
+    /// completion errors while the client is alive (a lost reply would
+    /// wedge the client's spin); a dead client's reply is dropped.
+    pub fn reply(&self, ctx: &ThreadCtx, req: &OpReq, status: u8, retval: u64) {
+        let hdr = Self::pack_rep_hdr(req.seq, status);
+        let frame = [hdr, retval, fnv64(&[hdr, retval])];
+        let target = self.ep.remote_region(req.from, "rep");
+        let off = Self::rep_off(self.me, req.slot);
+        let mut bo = Backoff::new();
+        let mut budget = WaitBudget::wedge(Duration::from_secs(30));
+        loop {
+            let k = ctx.write(target, off, &frame);
+            match ctx.wait_checked(&k) {
+                Ok(()) => return,
+                Err(_) if ctx.node_down(req.from) || ctx.node_down(self.me) => return,
+                Err(_) => {
+                    bo.snooze();
+                    assert!(!budget.expired(), "request ring reply post wedged (30 s)");
+                }
+            }
+        }
+    }
+
+    /// Fast-forward the server cursor past everything currently in the
+    /// ring without serving it. Called when this node (re)joins the
+    /// serving role: frames shipped before the membership change belong
+    /// to clients that have already timed out on our death and must not
+    /// be applied late.
+    pub fn quiesce(&self, ctx: &ThreadCtx) {
+        let mut served = self.served.lock().unwrap();
+        for client in 0..self.num_nodes as NodeId {
+            for slot in 0..SLOTS_PER_CLIENT {
+                let hdr = ctx.local_load(self.req, self.req_off(client, slot));
+                served[client as usize][slot] = (hdr >> 32) as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{Cluster, FabricConfig};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn pair() -> (Arc<Cluster>, Arc<Manager>, Arc<Manager>) {
+        let cluster = Cluster::new(2, FabricConfig::inline_ideal());
+        let m0 = Manager::new(cluster.clone(), 0);
+        let m1 = Manager::new(cluster.clone(), 1);
+        (cluster, m0, m1)
+    }
+
+    #[test]
+    fn call_roundtrips_through_a_serving_peer() {
+        let (_cluster, m0, m1) = pair();
+        let r0 = Arc::new(RequestRing::new(&m0, "rr", 8));
+        let r1 = Arc::new(RequestRing::new(&m1, "rr", 8));
+        r0.wait_ready(Duration::from_secs(10));
+        r1.wait_ready(Duration::from_secs(10));
+
+        // Node 0 serves: echo the op, sum the value words.
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = {
+            let (r0, m0, stop) = (r0.clone(), m0.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let ctx = m0.ctx();
+                let mut bo = Backoff::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let reqs = r0.drain(&ctx);
+                    if reqs.is_empty() {
+                        bo.snooze();
+                        continue;
+                    }
+                    bo.reset();
+                    for req in reqs {
+                        let sum: u64 = req.val.iter().sum();
+                        r0.reply(&ctx, &req, req.op, sum.wrapping_add(req.key + req.aux));
+                    }
+                }
+            })
+        };
+
+        let ctx1 = m1.ctx();
+        for i in 0..64u64 {
+            let val = vec![i, i + 1, i + 2];
+            let rep = r1.call(&ctx1, 0, 7, 100 + i, i, &val).unwrap();
+            assert_eq!(rep.status, 7);
+            assert_eq!(rep.retval, (3 * i + 3) + (100 + i) + i);
+        }
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn call_to_a_corpse_fails_bounded() {
+        let (cluster, m0, m1) = pair();
+        let r0 = RequestRing::new(&m0, "rr2", 4);
+        let r1 = RequestRing::new(&m1, "rr2", 4);
+        r0.wait_ready(Duration::from_secs(10));
+        r1.wait_ready(Duration::from_secs(10));
+        cluster.crash(0);
+        let ctx1 = m1.ctx();
+        let err = r1.call(&ctx1, 0, 1, 42, 0, &[1]).unwrap_err();
+        assert!(matches!(err, crate::Error::PeerFailed(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn quiesce_skips_preexisting_frames() {
+        let (_cluster, m0, m1) = pair();
+        let r0 = Arc::new(RequestRing::new(&m0, "rr3", 4));
+        let r1 = Arc::new(RequestRing::new(&m1, "rr3", 4));
+        r0.wait_ready(Duration::from_secs(10));
+        r1.wait_ready(Duration::from_secs(10));
+
+        // Ship one op with nobody serving, then quiesce the server: the
+        // frame must be skipped, and a fresh call must still serve.
+        let r1c = r1.clone();
+        let m1c = m1.clone();
+        let orphan = std::thread::spawn(move || {
+            // The reply never comes; the call errors out when the server
+            // "dies" below.
+            let _ = r1c.call(&m1c.ctx(), 0, 9, 1, 0, &[5]);
+        });
+        let ctx0 = m0.ctx();
+        // Wait until the orphan frame is visible, then quiesce.
+        let mut bo = Backoff::new();
+        while ctx0.local_load(r0.req, r0.req_off(1, 0)) == 0 {
+            bo.snooze();
+        }
+        r0.quiesce(&ctx0);
+        assert!(r0.drain(&ctx0).is_empty(), "quiesced frame must not be served");
+
+        // Un-wedge the orphan caller by serving its slot manually after
+        // a fresh request shows up on another slot.
+        let t = std::thread::spawn(move || {
+            let ctx = m1.ctx();
+            r1.call(&ctx, 0, 2, 3, 0, &[4]).unwrap()
+        });
+        let mut bo = Backoff::new();
+        loop {
+            let reqs = r0.drain(&ctx0);
+            if !reqs.is_empty() {
+                for req in &reqs {
+                    assert_eq!(req.op, 2, "only the post-quiesce frame is served");
+                    r0.reply(&ctx0, req, 0, req.val[0]);
+                }
+                break;
+            }
+            bo.snooze();
+        }
+        assert_eq!(t.join().unwrap(), Reply { status: 0, retval: 4 });
+        // Release the orphan: serve whatever is still pending (its slot
+        // got a *new* seq only if retried; otherwise it stays quiesced —
+        // emulate server death so the call returns).
+        _cluster.crash(0);
+        orphan.join().unwrap();
+    }
+}

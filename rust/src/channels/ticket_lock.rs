@@ -14,6 +14,7 @@
 //! trades global FIFO fairness for latency, as in the paper; the
 //! `micro_channels` bench ablates it.)
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -69,6 +70,11 @@ pub struct TicketLock {
     release_fence: FenceScope,
     /// Local-handover fast path enabled (ablation knob).
     handover: bool,
+    /// Sticky "an acquire found this lock busy" flag, consumed by the
+    /// kvstore's heat tracker ([`TicketLock::take_contended`]): a
+    /// contended lock is the signal that its keys should cross to the
+    /// op-shipping path sooner than their raw touch rate implies.
+    contended: AtomicBool,
 }
 
 impl TicketLock {
@@ -100,7 +106,16 @@ impl TicketLock {
             cv: Condvar::new(),
             release_fence,
             handover,
+            contended: AtomicBool::new(false),
         }
+    }
+
+    /// Consume the contention flag: true iff some acquire since the
+    /// last call found the lock held (a local thread inside, or a
+    /// remote ticket ahead of ours). Relaxed — a lost race under-counts
+    /// one observation, which the heat EWMA absorbs.
+    pub fn take_contended(&self) -> bool {
+        self.contended.swap(false, Ordering::Relaxed)
     }
 
     pub fn wait_ready(&self, timeout: Duration) {
@@ -161,6 +176,7 @@ impl TicketLock {
             let mut st = self.local.lock().unwrap();
             loop {
                 if st.local_active {
+                    self.contended.store(true, Ordering::Relaxed);
                     st.waiters += 1;
                     st = self.cv.wait(st).unwrap();
                     st.waiters -= 1;
@@ -181,6 +197,7 @@ impl TicketLock {
             // holds its own global ticket in turn.
             let mut st = self.local.lock().unwrap();
             while st.local_active {
+                self.contended.store(true, Ordering::Relaxed);
                 st.waiters += 1;
                 st = self.cv.wait(st).unwrap();
                 st.waiters -= 1;
@@ -227,6 +244,7 @@ impl TicketLock {
             if serving == my_ticket {
                 break;
             }
+            self.contended.store(true, Ordering::Relaxed);
             if checked && ctx.cluster_has_failures() {
                 // The ticket being served may belong to a crash-stopped
                 // holder whose unlock never transmitted; the host being

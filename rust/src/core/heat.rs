@@ -1,0 +1,278 @@
+//! Per-key heat / contention tracking and the op-routing decision.
+//!
+//! LOCO's kvstore has two ways to run a mutation (cf. Brock et al.,
+//! "RDMA vs. RPC for Implementing Distributed Data Structures"):
+//!
+//! * **one-sided** — the client acquires the key's ticket lock and
+//!   writes the frame (plus replicas) itself. Optimal when the key is
+//!   uncontended: every client makes progress in parallel and no
+//!   server CPU is involved.
+//! * **op-shipping** — the client sends the whole op to the key's home
+//!   node in one WRITE and waits for a reply word
+//!   ([`crate::channels::request_ring`]). One round trip, server-side
+//!   apply, and natural write combining — the winning regime once a
+//!   key is hot enough that one-sided clients would convoy on its lock.
+//!
+//! [`HeatTracker`] picks the path per key. It keeps a fixed table of
+//! per-bucket EWMA "heat" values decayed in **operation count** (not
+//! wall time, so the decision sequence is identical under the
+//! deterministic simulator): each touch first halves the bucket's heat
+//! once per [`HALF_LIFE_OPS`] elapsed local ops, then adds one unit
+//! (more when the touch observed lock contention). A key touched every
+//! Δ ops settles at `1 / (1 - 2^(-Δ/HALF_LIFE_OPS))` units — ~10 for a
+//! Zipfian-hot key touched every 10 ops, ~1 for a uniform key touched
+//! every few hundred — and a hysteresis band ([`HI`]/[`LO`]) turns that
+//! into a sticky per-bucket route bit so borderline keys don't flap.
+//!
+//! Updates are load/compute/store without CAS loops: a lost race
+//! merely under-counts one touch, which the EWMA absorbs. The table is
+//! per node and never crosses the network.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Routing policy for kvstore mutations (`KvConfig::routing`,
+/// CLI `--routing`, env `LOCO_ROUTING`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteMode {
+    /// Every mutation takes the one-sided lock-and-write path (the
+    /// pre-routing behavior; the default).
+    OneSided,
+    /// Every remote-homed mutation is shipped to its home node.
+    Ship,
+    /// Per-key decision from the [`HeatTracker`].
+    Adaptive,
+}
+
+impl RouteMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RouteMode::OneSided => "onesided",
+            RouteMode::Ship => "ship",
+            RouteMode::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a policy name (the `LOCO_ROUTING` / `--routing` values).
+    pub fn parse(s: &str) -> Result<RouteMode, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "onesided" | "one-sided" => Ok(RouteMode::OneSided),
+            "ship" => Ok(RouteMode::Ship),
+            "adaptive" => Ok(RouteMode::Adaptive),
+            other => Err(format!(
+                "{other:?} is not a routing policy (expected onesided | ship | adaptive)"
+            )),
+        }
+    }
+
+    /// Policy from `LOCO_ROUTING`, defaulting to `OneSided` when unset.
+    /// Invalid values abort with a diagnosis at config construction —
+    /// same contract as the `LOCO_SIGNAL_EVERY` validation.
+    pub fn from_env() -> RouteMode {
+        match std::env::var("LOCO_ROUTING") {
+            Err(_) => RouteMode::OneSided,
+            Ok(v) => match RouteMode::parse(&v) {
+                Ok(m) => m,
+                Err(e) => panic!("invalid LOCO_ROUTING: {e}"),
+            },
+        }
+    }
+}
+
+/// Which path one mutation should take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteDecision {
+    OneSided,
+    Ship,
+}
+
+/// Heat decays by half every this many local ops.
+const HALF_LIFE_OPS: u64 = 64;
+/// Heat unit added per touch, in 8-bit fixed point (1.0).
+const INC: u64 = 1 << FP_BITS;
+/// Extra heat for a touch that observed lock contention: contended
+/// keys should cross to shipping sooner than their raw rate implies.
+const CONTENDED_BONUS: u64 = INC;
+/// Flip a bucket to `Ship` above this heat (≈ touched every ≤ 40 ops).
+const HI: u64 = 3 * INC;
+/// Flip back to one-sided below this heat (≈ touched every ≥ 180 ops).
+const LO: u64 = (5 * INC) / 4;
+/// Fixed-point fraction bits for heat values.
+const FP_BITS: u32 = 8;
+/// Cap so heat (30 bits) never bleeds into the op-stamp field.
+const HEAT_MAX: u64 = (1 << 30) - 1;
+
+/// Bucket word layout: `route(1) | heat(31) | last_touch_op(32)`.
+const ROUTE_BIT: u64 = 1 << 63;
+
+#[inline]
+fn pack(route_ship: bool, heat: u64, op: u64) -> u64 {
+    (if route_ship { ROUTE_BIT } else { 0 }) | (heat.min(HEAT_MAX) << 32) | (op & 0xFFFF_FFFF)
+}
+
+/// Per-node key-heat table. Sized at construction (power of two);
+/// distinct keys may share a bucket, which only makes a shared bucket
+/// a little hotter — acceptable for a routing hint.
+pub struct HeatTracker {
+    buckets: Box<[AtomicU64]>,
+    mask: u64,
+    /// Local op clock: one tick per sampled mutation.
+    ops: AtomicU64,
+    /// Hysteresis crossings (either direction), for `Cluster::route_flips`.
+    flips: AtomicU64,
+}
+
+impl HeatTracker {
+    /// Default table size: 1024 buckets (8 KB per node).
+    pub fn new() -> Self {
+        Self::with_buckets(1024)
+    }
+
+    pub fn with_buckets(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "heat table size must be a power of two");
+        let buckets = (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>().into_boxed_slice();
+        HeatTracker { buckets, mask: (n - 1) as u64, ops: AtomicU64::new(0), flips: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    fn bucket(&self, key: u64) -> &AtomicU64 {
+        // splitmix64-style finalizer: adjacent keys land in unrelated
+        // buckets (dense prefill keys would otherwise stripe).
+        let mut h = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        &self.buckets[((h ^ (h >> 31)) & self.mask) as usize]
+    }
+
+    /// Record one touch of `key` and return the route it should take,
+    /// plus whether this touch crossed the hysteresis band (a "flip").
+    pub fn sample(&self, key: u64, contended: bool) -> (RouteDecision, bool) {
+        let now = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        let b = self.bucket(key);
+        let cur = b.load(Ordering::Relaxed);
+        let was_ship = cur & ROUTE_BIT != 0;
+        let last = cur & 0xFFFF_FFFF;
+        let mut heat = (cur >> 32) & HEAT_MAX;
+
+        // Decay by elapsed local ops (32-bit op stamps wrap ~never
+        // within a bucket's half-life horizon; a wrap just over-decays
+        // one sample).
+        let elapsed = (now & 0xFFFF_FFFF).wrapping_sub(last) & 0xFFFF_FFFF;
+        let halves = (elapsed / HALF_LIFE_OPS).min(63);
+        heat >>= halves;
+        // Fractional residue: linear interpolation of the partial
+        // half-life keeps slow-touched buckets from never decaying.
+        let residue = elapsed % HALF_LIFE_OPS;
+        heat -= (heat / 2) * residue / HALF_LIFE_OPS;
+        heat += if contended { INC + CONTENDED_BONUS } else { INC };
+
+        let ship = if was_ship { heat > LO } else { heat >= HI };
+        b.store(pack(ship, heat, now), Ordering::Relaxed);
+        if ship != was_ship {
+            self.flips.fetch_add(1, Ordering::Relaxed);
+        }
+        (if ship { RouteDecision::Ship } else { RouteDecision::OneSided }, ship != was_ship)
+    }
+
+    /// Current route for `key` without recording a touch.
+    pub fn decide(&self, key: u64) -> RouteDecision {
+        if self.bucket(key).load(Ordering::Relaxed) & ROUTE_BIT != 0 {
+            RouteDecision::Ship
+        } else {
+            RouteDecision::OneSided
+        }
+    }
+
+    /// Current heat of `key`'s bucket in whole units (tests/debugging).
+    pub fn heat(&self, key: u64) -> u64 {
+        ((self.bucket(key).load(Ordering::Relaxed) >> 32) & HEAT_MAX) >> FP_BITS
+    }
+
+    /// Hysteresis crossings since construction.
+    pub fn flips(&self) -> u64 {
+        self.flips.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for HeatTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_mode_parses_and_rejects() {
+        assert_eq!(RouteMode::parse("onesided"), Ok(RouteMode::OneSided));
+        assert_eq!(RouteMode::parse("one-sided"), Ok(RouteMode::OneSided));
+        assert_eq!(RouteMode::parse(" SHIP "), Ok(RouteMode::Ship));
+        assert_eq!(RouteMode::parse("adaptive"), Ok(RouteMode::Adaptive));
+        assert!(RouteMode::parse("rpc").is_err());
+        assert!(RouteMode::parse("").is_err());
+    }
+
+    #[test]
+    fn hot_key_flips_to_ship_and_cools_back() {
+        let t = HeatTracker::new();
+        // A key touched every op crosses HI quickly...
+        let mut flipped_at = None;
+        for i in 0..16 {
+            let (d, flip) = t.sample(42, false);
+            if flip {
+                assert_eq!(d, RouteDecision::Ship);
+                flipped_at = Some(i);
+                break;
+            }
+        }
+        let at = flipped_at.expect("back-to-back touches must flip to ship");
+        assert!(at <= 4, "flip should happen within a few touches, took {at}");
+        assert_eq!(t.decide(42), RouteDecision::Ship);
+
+        // ...and decays back below LO after a long idle stretch.
+        for _ in 0..(HALF_LIFE_OPS * 16) {
+            t.sample(7, false); // unrelated traffic advances the op clock
+        }
+        let (d, flip) = t.sample(42, false);
+        assert_eq!(d, RouteDecision::OneSided, "cold key must fall back to one-sided");
+        assert!(flip);
+        assert!(t.flips() >= 2);
+    }
+
+    #[test]
+    fn uniform_traffic_stays_one_sided() {
+        let t = HeatTracker::new();
+        // Round-robin over many keys: per-bucket inter-touch gaps are
+        // hundreds of ops, so heat settles near 1 unit — far below HI.
+        for round in 0..64u64 {
+            for k in 0..512u64 {
+                let (d, _) = t.sample(k * 1000 + 3, false);
+                if round > 0 {
+                    assert_eq!(d, RouteDecision::OneSided, "uniform key {k} must not ship");
+                }
+            }
+        }
+        assert_eq!(t.flips(), 0);
+    }
+
+    #[test]
+    fn contention_accelerates_the_flip() {
+        let quiet = HeatTracker::new();
+        let noisy = HeatTracker::new();
+        // Same touch pattern (one key every HALF_LIFE_OPS, filler in
+        // between): uncontended heat settles at 2 units — below HI —
+        // while contended touches cross within a couple of samples.
+        let mut noisy_shipped = false;
+        for i in 0..4096u64 {
+            let key = if i % HALF_LIFE_OPS == 0 { 99 } else { 7 };
+            let (dq, _) = quiet.sample(key, false);
+            let (dn, _) = noisy.sample(key, key == 99);
+            if key == 99 {
+                assert_eq!(dq, RouteDecision::OneSided, "uncontended rate must not ship");
+                noisy_shipped |= dn == RouteDecision::Ship;
+            }
+        }
+        assert!(noisy_shipped, "contended touches must push the key over HI");
+    }
+}

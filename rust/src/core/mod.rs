@@ -12,6 +12,8 @@
 //! * [`ctx`] — per-thread issuing context: private QPs per peer,
 //!   `mem_ref` scratch blocks, pooled read buffers, verb issue APIs, and
 //!   the fence engine.
+//! * [`heat`] — per-key EWMA heat / lock-contention tracker feeding the
+//!   kvstore's one-sided-vs-op-shipping route decision.
 //! * [`mem_pool`] — huge-page aggregation of registered memory.
 //! * [`index`] — sharded, seqlock-validated location index (lock-free
 //!   reads; the locality tier's index leg).
@@ -19,6 +21,7 @@
 pub mod ack;
 pub mod ctx;
 pub mod endpoint;
+pub mod heat;
 pub mod index;
 pub mod manager;
 pub mod mem_pool;
@@ -26,5 +29,6 @@ pub mod mem_pool;
 pub use ack::AckKey;
 pub use ctx::{FenceScope, MemRef, ReadGuard, ThreadCtx};
 pub use endpoint::Endpoint;
+pub use heat::{HeatTracker, RouteDecision, RouteMode};
 pub use index::{IndexEntry, ShardedIndex};
 pub use manager::{Manager, Membership};

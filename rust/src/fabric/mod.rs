@@ -230,8 +230,32 @@ pub struct FabricConfig {
 
 /// Default selective-signaling chain length (overridable with
 /// `LOCO_SIGNAL_EVERY`; `1` disables).
+///
+/// The override is validated at config construction: an unparseable
+/// value or `0` aborts with a diagnosis instead of being silently
+/// swallowed (the seed behavior fell back to 16 on typos, and `0`
+/// would wedge the covered-chain retire cadence).
 fn default_signal_every() -> u32 {
-    std::env::var("LOCO_SIGNAL_EVERY").ok().and_then(|v| v.parse().ok()).unwrap_or(16)
+    match parse_signal_every(std::env::var("LOCO_SIGNAL_EVERY").ok().as_deref()) {
+        Ok(n) => n,
+        Err(e) => panic!("invalid LOCO_SIGNAL_EVERY: {e}"),
+    }
+}
+
+/// Parse an optional `LOCO_SIGNAL_EVERY` override. `None` (unset) means
+/// the default of 16; anything set must parse to an integer ≥ 1.
+fn parse_signal_every(raw: Option<&str>) -> Result<u32, String> {
+    match raw {
+        None => Ok(16),
+        Some(v) => match v.trim().parse::<u32>() {
+            Ok(0) => Err(format!(
+                "{v:?} — a chain length of 0 has no signaled WQE to retire the covered \
+                 prefix; use 1 to signal every WQE"
+            )),
+            Ok(n) => Ok(n),
+            Err(_) => Err(format!("{v:?} is not a positive integer (expected 1, 4, 16, ...)")),
+        },
+    }
 }
 
 impl FabricConfig {
@@ -354,5 +378,27 @@ impl Clock {
 impl Default for Clock {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_signal_every;
+
+    #[test]
+    fn signal_every_override_is_validated() {
+        // Unset: the default chain length.
+        assert_eq!(parse_signal_every(None), Ok(16));
+        // Any integer ≥ 1 is accepted (whitespace tolerated).
+        assert_eq!(parse_signal_every(Some("1")), Ok(1));
+        assert_eq!(parse_signal_every(Some(" 64 ")), Ok(64));
+        // 0 would leave covered chains with no signaled WQE to retire
+        // them — rejected with a diagnosis, not silently defaulted.
+        let err = parse_signal_every(Some("0")).unwrap_err();
+        assert!(err.contains("covered"), "diagnosis should explain the 0 hazard: {err}");
+        // Typos must not silently fall back to 16 (the seed bug).
+        assert!(parse_signal_every(Some("sixteen")).is_err());
+        assert!(parse_signal_every(Some("-4")).is_err());
+        assert!(parse_signal_every(Some("")).is_err());
     }
 }

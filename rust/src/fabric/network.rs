@@ -36,6 +36,13 @@ pub struct NodeFabric {
     doorbells_rung: AtomicU64,
     /// WRITEs posted with an inline payload (one per inline WQE).
     wqes_inlined: AtomicU64,
+    /// Kvstore mutations this node routed down the op-shipping channel
+    /// (bumped by the router, not the fabric — lives here so the hot
+    /// path touches the same per-node line as the verb counters).
+    ops_shipped: AtomicU64,
+    /// Route decisions that flipped a key between one-sided and shipped
+    /// (adaptive-routing hysteresis crossings).
+    route_flips: AtomicU64,
     /// Crash-stop flag (fault injection): once cleared the node never
     /// serves or transmits again. See [`Cluster::crash`].
     alive: AtomicBool,
@@ -54,6 +61,8 @@ impl NodeFabric {
             ops_posted: AtomicU64::new(0),
             doorbells_rung: AtomicU64::new(0),
             wqes_inlined: AtomicU64::new(0),
+            ops_shipped: AtomicU64::new(0),
+            route_flips: AtomicU64::new(0),
             alive: AtomicBool::new(true),
         }
     }
@@ -383,6 +392,28 @@ impl Cluster {
     /// completions a covered write chain *avoided*.
     pub fn cqes_posted(&self) -> u64 {
         self.nodes.iter().map(|n| n.cq().posted()).sum()
+    }
+
+    /// Total kvstore mutations routed down the op-shipping channel
+    /// (monotonic; see `apps::kvstore` routing). Routing tests pin that
+    /// adaptive mode actually ships hot keys / leaves uniform ones alone.
+    pub fn ops_shipped(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ops_shipped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total adaptive-routing hysteresis crossings (monotonic).
+    pub fn route_flips(&self) -> u64 {
+        self.nodes.iter().map(|n| n.route_flips.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Router-side accounting: `node` shipped one mutation.
+    pub fn note_op_shipped(&self, node: NodeId) {
+        self.nodes[node as usize].ops_shipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Router-side accounting: `node` flipped a key's route.
+    pub fn note_route_flip(&self, node: NodeId) {
+        self.nodes[node as usize].route_flips.fetch_add(1, Ordering::Relaxed);
     }
 
     // ---- fault injection: crash-stop ---------------------------------

@@ -15,7 +15,11 @@
 //! Every subcommand also honors the write-path knobs
 //! `--signal-every N` (selective-signaling chain length; 1 = every WQE
 //! signaled) and `--max-inline-words W` (inline-payload threshold;
-//! 0 = never inline) — the PR-5 hot-write-path economies.
+//! 0 = never inline) — the PR-5 hot-write-path economies — plus the
+//! op-routing knob `--routing onesided|ship|adaptive` (how kvstore
+//! mutations reach a remote home: one-sided lock-and-write, shipped
+//! over the served request ring, or chosen per key by the heat
+//! tracker; see `docs/ARCHITECTURE.md § Op routing`).
 //!
 //! `loco sim [--nodes N] [--rounds K] [--seed S]` runs a deterministic
 //! discrete-event schedule (single-threaded, virtual time) and prints
@@ -37,8 +41,9 @@
 //! Environment: `LOCO_FULL=1` for paper-calibrated latencies,
 //! `LOCO_BENCH_SECS` / `LOCO_BENCH_RUNS` to override the measurement
 //! window, `LOCO_SIGNAL_EVERY` for the selective-signaling default,
-//! `LOCO_SIM_SEED` for the simulator seed, `LOCO_REPLICAS` for the
-//! replication factor, `LOCO_ARTIFACTS` for the AOT artifact directory.
+//! `LOCO_ROUTING` for the mutation-routing default, `LOCO_SIM_SEED`
+//! for the simulator seed, `LOCO_REPLICAS` for the replication factor,
+//! `LOCO_ARTIFACTS` for the AOT artifact directory.
 
 use loco::bench::{fig1b, fig4, fig5, fig7, micro, Scale};
 use loco::metrics::Table;
@@ -76,6 +81,17 @@ fn main() {
     // model directly.
     if args.iter().any(|a| a == "--signal-every") {
         std::env::set_var("LOCO_SIGNAL_EVERY", arg_u64(&args, "--signal-every", 16).to_string());
+    }
+    // Op-routing knob (PR-8): --routing onesided|ship|adaptive flows
+    // through LOCO_ROUTING the same way (KvConfig::default() reads it).
+    // Validated eagerly so a typo dies here, not mid-bench.
+    if let Some(i) = args.iter().position(|a| a == "--routing") {
+        let v = args.get(i + 1).cloned().unwrap_or_default();
+        if let Err(e) = loco::core::heat::RouteMode::parse(&v) {
+            eprintln!("invalid --routing: {e}");
+            std::process::exit(2);
+        }
+        std::env::set_var("LOCO_ROUTING", v);
     }
     if args.iter().any(|a| a == "--max-inline-words") {
         scale.latency.max_inline_words = arg_u64(
@@ -344,6 +360,7 @@ fn main() {
                 "loco — Library of Channel Objects (paper reproduction)\n\
                  usage: loco <barrier|fig4|fig5|fig7|micro|sim|join> [flags]\n\
                  write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
+                 op routing (fig5/chaos workloads): --routing onesided|ship|adaptive (or LOCO_ROUTING)\n\
                  replication (fig5/join): --replicas R (or LOCO_REPLICAS; --replicate = 2)\n\
                  sim: --nodes N --rounds K --seed S (or LOCO_SIM_SEED)\n\
                  join: --nodes N --keys K --replicas R --seed S (elastic membership demo)\n\

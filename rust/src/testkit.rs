@@ -28,6 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::apps::kvstore::{KvConfig, KvStore};
+use crate::core::heat::RouteMode;
 use crate::core::manager::Manager;
 use crate::fabric::{Cluster, FabricConfig, FaultPlan, LatencyModel, NodeId};
 use crate::util::rng::Rng;
@@ -193,6 +194,10 @@ pub fn model_kv_config() -> KvConfig {
         read_cache_bytes: 16 * 1024,
         replicas: 2,
         coalesce_invals: true,
+        // Pinned (not from env): the model tier's must-find guarantees
+        // for the mutation cfgs are calibrated on the one-sided path;
+        // the routing tier exercises Ship/Adaptive explicitly.
+        routing: RouteMode::OneSided,
     }
 }
 

@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use loco::apps::kvstore::{KvConfig, KvStore};
+use loco::core::heat::RouteMode;
 use loco::core::manager::Manager;
 use loco::fabric::{Cluster, NodeId};
 use loco::testkit::{chaos_fabric, check_history, kv_cluster, Event};
@@ -206,7 +207,11 @@ fn now(clock: &Instant) -> u64 {
 /// class boundaries, so relocations race the fault schedule), full
 /// history check, then a quiesced slab-accounting audit on every node.
 /// Odd seeds run with the hot-key cache on so the locality tier faces
-/// the same faults.
+/// the same faults, and the op router sweeps the matrix too: a quarter
+/// of the seeds pin every remote mutation to the shipped path
+/// (`routing: Ship`), another quarter run the adaptive router, so
+/// request-ring frames ride the same delay/reorder/dup/flap schedules
+/// as the one-sided path.
 fn run_seeded_history(seed: u64) {
     let keys = 4u64;
     let ops_per_thread = 24u64;
@@ -216,6 +221,11 @@ fn run_seeded_history(seed: u64) {
         num_locks: 8,
         tracker_words: 1 << 10,
         read_cache_bytes: if seed % 2 == 1 { 2048 } else { 0 },
+        routing: match seed % 4 {
+            3 => RouteMode::Ship,
+            1 => RouteMode::Adaptive,
+            _ => RouteMode::OneSided,
+        },
         ..Default::default()
     };
     let (_cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
@@ -365,6 +375,140 @@ fn chaos_crash_mid_relocation_linearizable() {
     for seed in [3u64, 8, 11] {
         run_mid_op_crash_schedule(seed, true);
     }
+}
+
+/// The op-shipping crash schedule (PR-8): every remote mutation is
+/// pinned to the request ring (`routing: Ship`) and the victim
+/// crash-stops a seeded moment into the run — so for some in-flight
+/// updates the crash lands BETWEEN the client's enqueue (request frame
+/// already placed in the victim's ring) and the victim's apply sweep.
+/// Those calls must fail in bounded time (the reply spin watches the
+/// down mask; nothing may wedge on the corpse), and because a shipped
+/// op may have been applied before the crash, an erroring update is
+/// recorded with the checker's maximal `CRASHED` uncertainty — unlike
+/// a one-sided lock failure, which is a definite no-op. Post-crash
+/// mutations must re-resolve to the promoted backup (re-route after
+/// re-home), the whole history must linearize, and zero acknowledged
+/// writes may be lost.
+#[test]
+fn chaos_crash_ship_target_mid_flight() {
+    if let Some(seed) = replay_seed() {
+        run_ship_crash_schedule(seed);
+        return;
+    }
+    for seed in [5u64, 10, 12] {
+        run_ship_crash_schedule(seed);
+    }
+}
+
+fn run_ship_crash_schedule(seed: u64) {
+    let dead: NodeId = (seed % 3) as NodeId;
+    let backup: NodeId = (dead + 1) % 3;
+    let cfg = KvConfig { routing: RouteMode::Ship, ..crash_cfg() };
+    let (cluster, mgrs, kvs) = kv_cluster(3, chaos_fabric(seed), cfg);
+    let clock = Arc::new(Instant::now());
+    let uid = Arc::new(AtomicU64::new(5_000_000));
+    let mut all: Vec<Event> = insert_pinned(seed, dead, &mgrs, &kvs, &clock);
+
+    // No removes in this schedule: an absent-key answer then stays a
+    // definite no-op on both the shipped and the fallback path, so the
+    // only uncertain outcome is the erroring update recorded CRASHED.
+    let handles: Vec<_> = (0..3usize)
+        .map(|i| {
+            let m = mgrs[i].clone();
+            let kv = kvs[i].clone();
+            let cluster = cluster.clone();
+            let clock = clock.clone();
+            let uid = uid.clone();
+            let me: NodeId = i as NodeId;
+            std::thread::spawn(move || {
+                let ctx = m.ctx();
+                let mut rng = Rng::seeded(seed.wrapping_mul(547) + i as u64);
+                let mut events: Vec<Event> = Vec::new();
+                for _ in 0..80u64 {
+                    let key = rng.gen_range(CONTENDED);
+                    let len = chaos_len(&mut rng);
+                    match rng.gen_range(12) {
+                        0..=1 => {
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let ok = kv.insert(&ctx, key, &vec![val; len]).is_ok();
+                            let resp = now(&clock);
+                            if cluster.is_down(me) {
+                                events.push(Event::Mutate {
+                                    key,
+                                    val: Some(val),
+                                    inv,
+                                    resp: loco::testkit::CRASHED,
+                                });
+                            } else if ok {
+                                events.push(Event::Mutate { key, val: Some(val), inv, resp });
+                            }
+                        }
+                        2..=6 => {
+                            // Update-heavy: the shipped op under test.
+                            let val = uid.fetch_add(1, Ordering::Relaxed);
+                            let inv = now(&clock);
+                            let res = kv.try_update(&ctx, key, &vec![val; len]);
+                            let resp = now(&clock);
+                            match res {
+                                _ if cluster.is_down(me) => events.push(Event::Mutate {
+                                    key,
+                                    val: Some(val),
+                                    inv,
+                                    resp: loco::testkit::CRASHED,
+                                }),
+                                Ok(true) => {
+                                    events.push(Event::Mutate { key, val: Some(val), inv, resp })
+                                }
+                                Ok(false) => {} // definitely absent: no-op
+                                // The enqueue may have been applied before
+                                // the victim died: maximal uncertainty.
+                                Err(_) => events.push(Event::Mutate {
+                                    key,
+                                    val: Some(val),
+                                    inv,
+                                    resp: loco::testkit::CRASHED,
+                                }),
+                            }
+                        }
+                        _ => {
+                            let read_key = if rng.gen_bool(0.3) {
+                                CONTENDED + rng.gen_range(PINNED)
+                            } else {
+                                key
+                            };
+                            let inv = now(&clock);
+                            let got = kv.get(&ctx, read_key).map(|v| read_tag(v, read_key));
+                            let resp = now(&clock);
+                            if !cluster.is_down(me) {
+                                events.push(Event::Read { key: read_key, val: got, inv, resp });
+                            }
+                        }
+                    }
+                    if cluster.is_down(me) {
+                        break; // a corpse issues no further ops
+                    }
+                }
+                events
+            })
+        })
+        .collect();
+
+    // Controller: crash the victim while shipped updates are in flight.
+    let mut crng = Rng::seeded(seed ^ 0x5417);
+    std::thread::sleep(std::time::Duration::from_millis(5 + crng.gen_range(20)));
+    cluster.crash(dead);
+
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    assert!(
+        cluster.ops_shipped() > 0,
+        "seed {seed}: the ship-pinned schedule never shipped an op"
+    );
+    check_history(KEYS, &all, &format!("ship crash seed {seed} (dead node {dead})"));
+    verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
 }
 
 fn run_mid_op_crash_schedule(seed: u64, reloc_heavy: bool) {

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use loco::apps::kvstore::KvConfig;
+use loco::core::heat::RouteMode;
 use loco::fabric::{FabricConfig, LatencyModel};
 use loco::testkit::{check_history, check_key, kv_cluster, Event};
 use loco::util::rng::Rng;
@@ -26,7 +27,7 @@ fn now(clock: &std::time::Instant) -> u64 {
 
 #[test]
 fn kvstore_concurrent_history_is_linearizable() {
-    run_history(0, 1, 1);
+    run_history(0, 1, 1, RouteMode::OneSided);
 }
 
 /// Same history check over the locality tier: sharded seqlock index +
@@ -35,7 +36,7 @@ fn kvstore_concurrent_history_is_linearizable() {
 /// node's cache dropped the key — see docs/ARCHITECTURE.md).
 #[test]
 fn kvstore_concurrent_history_is_linearizable_with_cache() {
-    run_history(4096, 1, 1);
+    run_history(4096, 1, 1, RouteMode::OneSided);
 }
 
 /// The relocation satellite: variable-size values over an 8-word slab
@@ -46,7 +47,7 @@ fn kvstore_concurrent_history_is_linearizable_with_cache() {
 /// relocated generations also exercise the invalidation story.
 #[test]
 fn kvstore_history_linearizable_across_class_relocations() {
-    run_history(8192, 8, 1);
+    run_history(8192, 8, 1, RouteMode::OneSided);
 }
 
 /// The PR-5 coalescing satellite: **two threads per node** so
@@ -57,10 +58,27 @@ fn kvstore_history_linearizable_across_class_relocations() {
 /// still applied on all peers before that update returns.
 #[test]
 fn kvstore_history_linearizable_with_coalesced_invals() {
-    run_history(4096, 1, 2);
+    run_history(4096, 1, 2, RouteMode::OneSided);
 }
 
-fn run_history(read_cache_bytes: usize, max_words: usize, threads_per_node: usize) {
+/// The PR-8 routing satellite: the adaptive router live, two threads
+/// per node hammering 8 keys, cache on — so hot keys cross to the
+/// op-shipping path mid-history (and cool back), updates arrive at the
+/// home node through BOTH the one-sided lock path and the served
+/// request ring concurrently, and the full history must still
+/// linearize: a shipped update holds the same key lock on the server
+/// side that a one-sided updater holds on the client side.
+#[test]
+fn kvstore_history_linearizable_with_adaptive_routing() {
+    run_history(4096, 2, 2, RouteMode::Adaptive);
+}
+
+fn run_history(
+    read_cache_bytes: usize,
+    max_words: usize,
+    threads_per_node: usize,
+    routing: RouteMode,
+) {
     let nodes = 3;
     let keys = 8u64;
     let ops_per_thread = 120u64;
@@ -71,6 +89,7 @@ fn run_history(read_cache_bytes: usize, max_words: usize, threads_per_node: usiz
         value_words: max_words,
         tracker_words: 1 << 12,
         read_cache_bytes,
+        routing,
         ..Default::default()
     };
     let (_cluster, mgrs, kvs) =

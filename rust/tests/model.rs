@@ -14,7 +14,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use loco::apps::kvstore::KvConfig;
 use loco::channels::{AtomicVar, Sst, TicketLock};
+use loco::core::heat::RouteMode;
 use loco::core::manager::Manager;
 use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
 use loco::sim::SimExecutor;
@@ -224,6 +226,89 @@ fn ticket_lock_try_lock_crashed_holder_under_sim() {
         }
         other => panic!("try_lock against a crashed holder returned {other:?}"),
     }
+}
+
+// ---- op routing under the simulator (PR-8) ----------------------------
+
+/// A Zipfian-hot key hammered from a remote node must cross to the
+/// op-shipping route within a bounded number of ops: the heat EWMA
+/// (increment 256, flip threshold 768) crosses on the fourth
+/// back-to-back touch, so 64 writes leave the key shipped for the
+/// vast majority of them — observable in the cluster's `ops_shipped`
+/// and `route_flips` counters. Deterministic: one seeded sim run.
+#[test]
+fn adaptive_routing_flips_hot_key_to_ship_under_sim() {
+    let cfg = KvConfig { routing: RouteMode::Adaptive, ..model_kv_config() };
+    let (sim, cluster, mgrs, kvs) = sim_kv_cluster(2, 17, cfg);
+    let ctx1 = mgrs[1].ctx();
+    let hot =
+        (0..64).find(|&k| kvs[1].home_of(k) == 0).expect("some key must home on node 0");
+    assert!(kvs[1].insert(&ctx1, hot, &[1, 2]).unwrap());
+    for i in 0..64u64 {
+        assert_eq!(kvs[1].try_update(&ctx1, hot, &[i, i + 1]), Ok(true));
+    }
+    assert!(cluster.route_flips() >= 1, "hot key never crossed to the ship route");
+    assert!(
+        cluster.ops_shipped() >= 32,
+        "hot-key writes were not shipped (got {})",
+        cluster.ops_shipped()
+    );
+    // Shipped updates are real updates: the home observes the last value.
+    let ctx0 = mgrs[0].ctx();
+    assert_eq!(kvs[0].get(&ctx0, hot), Some(vec![63, 64]));
+    sim.settle();
+}
+
+/// Uniform single-touch traffic must stay entirely one-sided under the
+/// adaptive router: one touch deposits 256 heat against a flip
+/// threshold of 768, so no bucket can cross without ≥ 4 near-adjacent
+/// hash collisions. `ops_shipped` staying at zero is the pinned
+/// observable. Deterministic: one seeded sim run.
+#[test]
+fn adaptive_routing_keeps_uniform_traffic_one_sided_under_sim() {
+    let cfg = KvConfig { routing: RouteMode::Adaptive, ..model_kv_config() };
+    let (sim, cluster, mgrs, kvs) = sim_kv_cluster(2, 18, cfg);
+    let ctx1 = mgrs[1].ctx();
+    for k in 0..96u64 {
+        assert!(kvs[1].insert(&ctx1, k, &[k, k]).unwrap());
+    }
+    for k in 0..96u64 {
+        assert_eq!(kvs[1].try_update(&ctx1, k, &[k + 1, k]), Ok(true));
+    }
+    assert_eq!(
+        cluster.ops_shipped(),
+        0,
+        "uniform single-touch traffic must stay one-sided"
+    );
+    sim.settle();
+}
+
+/// Pinning the router to `ship` forces every remote mutation down the
+/// request ring — the fixed-policy end of the fig5 routing ablation —
+/// and reads still observe every shipped write.
+#[test]
+fn forced_ship_routing_serves_remote_mutations_under_sim() {
+    let cfg = KvConfig { routing: RouteMode::Ship, ..model_kv_config() };
+    let (sim, cluster, mgrs, kvs) = sim_kv_cluster(2, 19, cfg);
+    let ctx1 = mgrs[1].ctx();
+    let mut remote = 0u64;
+    for k in 0..24u64 {
+        assert!(kvs[1].insert(&ctx1, k, &[k, k]).unwrap());
+        assert_eq!(kvs[1].try_update(&ctx1, k, &[k + 7, k]), Ok(true));
+        if kvs[1].home_of(k) == 0 {
+            remote += 1;
+        }
+    }
+    assert!(remote > 0, "hash partitioning left no remote keys");
+    assert_eq!(
+        cluster.ops_shipped(),
+        remote,
+        "every remote mutation must ship under the fixed ship policy"
+    );
+    for k in 0..24u64 {
+        assert_eq!(kvs[1].get(&ctx1, k), Some(vec![k + 7, k]), "key {k}");
+    }
+    sim.settle();
 }
 
 // ---- model config sanity ----------------------------------------------

@@ -12,11 +12,11 @@ absolute Kops/s on a shared CI runner do not. A pinned bar regresses
 when   fresh_ratio < (1 - tolerance) * baseline_ratio.
 
 Baselines carry provenance metadata (see `BenchJson` in
-rust/src/bench/mod.rs). A baseline whose meta.provenance is not
-"measured" (e.g. the hand-seeded "estimated" baseline committed before
-the first toolchain-equipped refresh) is not comparable: the guard
-prints a notice and exits 0. Run scripts/bench_refresh.sh and commit
-the result to arm the guard.
+rust/src/bench/mod.rs). The guard is ARMED: a baseline whose
+meta.provenance is not "measured" fails loudly (exit 1) — the
+silent-green skip that let an unarmed baseline ride for five PRs is
+gone. Run scripts/bench_refresh.sh and commit the result to fix a
+provenance failure.
 
 Usage:
     bench_guard.py --baseline BENCH_micro.json --fresh fresh/BENCH_micro.json
@@ -81,6 +81,12 @@ PINNED_BARS = [
         "LOCO zipfian cache=on",
         "LOCO zipfian cache=off",
     ),
+    (
+        "PR-8: adaptive routing tracks one-sided on YCSB-A zipfian",
+        "fig5_routing_ablation",
+        "LOCO ycsb-a zipfian adaptive",
+        "LOCO ycsb-a zipfian onesided",
+    ),
 ]
 
 
@@ -116,10 +122,10 @@ def main():
 
     provenance = baseline.get("meta", {}).get("provenance", "unknown")
     if provenance != "measured":
-        print(f"bench_guard: baseline {args.baseline} has provenance "
-              f"'{provenance}' — not comparable; run scripts/bench_refresh.sh "
-              f"and commit the result to arm the guard. Skipping.")
-        return 0
+        print(f"bench_guard: FAIL baseline {args.baseline} has provenance "
+              f"'{provenance}' — the guard requires a measured baseline; run "
+              f"scripts/bench_refresh.sh and commit the result.")
+        return 1
 
     failures = []
     checked = 0
