@@ -219,6 +219,38 @@ const SHIP_RETRY: u8 = 4;
 /// one-sided path (which is always correct, just slower when hot).
 const SHIP_ATTEMPTS: usize = 3;
 
+/// What a ship attempt established (see [`KvStore::ship_update`]).
+enum ShipOutcome {
+    /// Definite server answer: applied (`true`) or key absent (`false`).
+    Done(bool),
+    /// The op never reached a server that could apply it (local home,
+    /// oversized value, home already marked down, WRONG_HOME/RETRY
+    /// budget exhausted): take the one-sided path — nothing happened.
+    NotShipped,
+    /// The server crash-stopped between the request enqueue and its
+    /// reply: the update may or may not have been applied (and
+    /// replicated) before the crash.
+    Ambiguous,
+}
+
+/// Outcome of [`KvStore::try_update_outcome`]: `applied` is what
+/// [`KvStore::try_update`] returns; `ambiguous` is set when the op
+/// completed through the post-crash fallback after a shipped attempt
+/// whose fate is unknown — the value is durably in place on return,
+/// but the op may have had TWO application points (the dead server's
+/// pre-crash apply and the fallback's re-apply), possibly with other
+/// writes between them. History recorders must give such an op
+/// CRASHED-style uncertainty instead of a definite interval (see
+/// `testkit::CRASHED`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UpdateOutcome {
+    /// The value is in place (`false`: the key was absent).
+    pub applied: bool,
+    /// Completed via the ambiguous-ship fallback; the linearization
+    /// point cannot be pinned to one instant.
+    pub ambiguous: bool,
+}
+
 /// `OP_INSERT` message lengths: the 5-word plain form, and the 8-word
 /// relocation form carrying the origin entry (`[…, old_node, old_slot,
 /// old_counter]`) that receivers record for crash reverts.
@@ -1049,15 +1081,31 @@ impl KvStore {
     /// location, so an `Ok(true)` always means the value is durable on
     /// the current home.
     pub fn try_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Result<bool> {
+        self.try_update_outcome(ctx, key, value).map(|o| o.applied)
+    }
+
+    /// [`KvStore::try_update`] with the full [`UpdateOutcome`]: history
+    /// recorders need the `ambiguous` flag (an op completed through the
+    /// post-crash ship fallback has no single provable linearization
+    /// point and must be recorded with CRASHED-style uncertainty).
+    pub fn try_update_outcome(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        value: &[u64],
+    ) -> Result<UpdateOutcome> {
         self.check_value_len(value);
         // Route BEFORE taking the lock: the shipping client never holds
         // a ticket lock (the server takes it), so ship-vs-one-sided can
         // never deadlock against the lock order.
         if self.route_mutation(key) == RouteDecision::Ship {
-            if let Some(done) = self.ship_update(ctx, key, value) {
-                return Ok(done);
+            match self.ship_update(ctx, key, value) {
+                ShipOutcome::Done(applied) => {
+                    return Ok(UpdateOutcome { applied, ambiguous: false })
+                }
+                ShipOutcome::Ambiguous => return self.ambiguous_ship_fallback(ctx, key, value),
+                ShipOutcome::NotShipped => {} // fall through one-sided
             }
-            // No definite shipped outcome: fall through one-sided.
         }
         let lock = self.lock_of(key);
         lock.try_lock(ctx)?;
@@ -1066,7 +1114,7 @@ impl KvStore {
             Some(e) => self.locked_update(ctx, key, e, value),
         };
         lock.unlock(ctx);
-        res
+        res.map(|applied| UpdateOutcome { applied, ambiguous: false })
     }
 
     // ---- op routing (one-sided vs op-shipping) ------------------------
@@ -1093,40 +1141,118 @@ impl KvStore {
         }
     }
 
-    /// Ship an in-place update to the key's home node. Returns a
-    /// definite outcome (`Some(applied)`) or `None` when the op should
-    /// take the one-sided path instead: local home, oversized value,
-    /// dead/mid-move home, or a server that could not apply. A `None`
-    /// after the server may have applied is still linearizable — the
-    /// one-sided retry re-applies the *same* value under the key lock,
-    /// and double-applying idempotent state is invisible to readers.
-    fn ship_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> Option<bool> {
-        let ring = self.ship.as_ref()?;
+    /// Ship an in-place update to the key's home node. `Done` is a
+    /// definite server answer; `NotShipped` means nothing was applied
+    /// and the caller should take the one-sided path (local home,
+    /// oversized value, dead/mid-move home, or a server that answered
+    /// WRONG_HOME/RETRY every attempt). `Ambiguous` means the server
+    /// died between our enqueue and its reply — it may have applied
+    /// (and replicated) the value first, so a blind one-sided re-apply
+    /// is NOT invisible to readers: another write can land at the
+    /// promoted re-home in between, and re-applying would resurrect
+    /// our value over it. [`KvStore::ambiguous_ship_fallback`] owns
+    /// that case.
+    fn ship_update(&self, ctx: &ThreadCtx, key: u64, value: &[u64]) -> ShipOutcome {
+        let Some(ring) = self.ship.as_ref() else {
+            return ShipOutcome::NotShipped;
+        };
         if value.len() > ring.max_value_words() {
-            return None; // outgrew the inline budget (or must relocate)
+            return ShipOutcome::NotShipped; // outgrew the inline budget
         }
         for _ in 0..SHIP_ATTEMPTS {
             let Some(e) = self.shared.index.get(key) else {
                 // Absent at the index-read instant: the same legal
                 // "absent" linearization `get` uses — and unlike the
                 // one-sided path, no lock host needs to be alive.
-                return Some(false);
+                return ShipOutcome::Done(false);
             };
             if e.node == self.me || ctx.node_down(e.node) {
                 // Local apply is strictly cheaper one-sided; a dead
                 // home needs the one-sided path's re-home parking.
-                return None;
+                return ShipOutcome::NotShipped;
             }
             self.cluster.note_op_shipped(self.me);
             let epoch = self.shared.membership.epoch();
             match ring.call(ctx, e.node, SHIP_UPDATE, key, epoch, value) {
-                Ok(rep) if rep.status == SHIP_APPLIED => return Some(true),
-                Ok(rep) if rep.status == SHIP_MISSING => return Some(false),
+                Ok(rep) if rep.status == SHIP_APPLIED => return ShipOutcome::Done(true),
+                Ok(rep) if rep.status == SHIP_MISSING => return ShipOutcome::Done(false),
                 Ok(_) => continue, // WRONG_HOME / RETRY: re-resolve
-                Err(_) => return None, // server died: fall back
+                // The server died mid-call: the request may already
+                // have been drained and applied before the crash.
+                Err(_) => return ShipOutcome::Ambiguous,
             }
         }
-        None
+        ShipOutcome::NotShipped
+    }
+
+    /// Complete an update whose shipped attempt ended ambiguously (the
+    /// server crash-stopped between enqueue and reply). Under the key
+    /// lock, first probe the current frame: if the shipped value is
+    /// already in place, the server's apply (or an identical write)
+    /// landed and survived recovery — re-writing it would only create a
+    /// second application point, so skip the write and report a
+    /// definite success (the probe instant, inside our interval, is a
+    /// valid linearization point). Otherwise re-apply one-sided; the
+    /// value is then durably in place, but if the server HAD applied
+    /// pre-crash and another write slipped in at the promoted re-home,
+    /// this op has two application points with a foreign write between
+    /// them — report `ambiguous` so history recorders give the op
+    /// CRASHED-style uncertainty rather than a definite interval.
+    fn ambiguous_ship_fallback(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        value: &[u64],
+    ) -> Result<UpdateOutcome> {
+        self.cluster.note_ship_fallback(self.me);
+        let lock = self.lock_of(key);
+        lock.try_lock(ctx)?;
+        let res = self.ambiguous_ship_fallback_locked(ctx, key, value);
+        lock.unlock(ctx);
+        res
+    }
+
+    fn ambiguous_ship_fallback_locked(
+        &self,
+        ctx: &ThreadCtx,
+        key: u64,
+        value: &[u64],
+    ) -> Result<UpdateOutcome> {
+        let Some(mut e) = self.shared.index.get(key) else {
+            // Dropped by crash recovery (or a racing delete): the same
+            // definite "absent" answer the one-sided path gives.
+            return Ok(UpdateOutcome { applied: false, ambiguous: false });
+        };
+        // The shipped target just died, so the entry usually still
+        // names the corpse: park for the re-home exactly like the
+        // one-sided path before trusting any frame.
+        while ctx.node_down(e.node) {
+            match self.wait_entry_change(ctx, key, &e)? {
+                Some(ne) => e = ne,
+                None => return Ok(UpdateOutcome { applied: false, ambiguous: false }),
+            }
+        }
+        if self.probe_value_locked(ctx, &e).as_deref() == Some(value) {
+            self.cluster.note_ship_fallback_confirmed(self.me);
+            return Ok(UpdateOutcome { applied: true, ambiguous: false });
+        }
+        let applied = self.locked_update(ctx, key, e, value)?;
+        // Only a performed re-apply is uncertain; "key vanished" stays
+        // a definite answer.
+        Ok(UpdateOutcome { applied, ambiguous: applied })
+    }
+
+    /// One best-effort validated read of `e`'s frame (no cache fill, no
+    /// retry loop) — the ambiguous-fallback probe. Any unreadable or
+    /// non-validating frame is `None` ("could not confirm"), which the
+    /// caller treats conservatively.
+    fn probe_value_locked(&self, ctx: &ThreadCtx, e: &IndexEntry) -> Option<Vec<u64>> {
+        let region = self.data_region_of(e.node);
+        let words = ctx.try_read(region, self.slot_off(e.slot), self.frame_words_of(e.slot)).ok()?;
+        match self.parse_frame(e, &words) {
+            FrameRead::Value(v) => Some(v),
+            _ => None,
+        }
     }
 
     /// Serve one sweep of our request ring (the ship server's loop
@@ -1150,21 +1276,43 @@ impl KvStore {
         if reqs.is_empty() {
             return false;
         }
-        // Last occurrence per key wins; earlier riders share its fate.
+        // Per-request screen BEFORE write-combining: only requests that
+        // would individually pass `apply_shipped`'s op-code and
+        // membership-epoch checks may ride a same-key neighbour's apply
+        // — a rider shipped under a stale epoch (or, if an op code is
+        // ever added, a different op) must get its own
+        // WRONG_HOME/RETRY, not be acked with the last request's
+        // outcome. (The epoch can still advance between this screen and
+        // the apply; `apply_shipped` re-checks and the combined answer
+        // only gets more conservative.)
+        let epoch = self.shared.membership.epoch();
+        let screened = |req: &crate::channels::OpReq| req.op == SHIP_UPDATE && req.aux == epoch;
+        // Last screened occurrence per key wins; earlier screened
+        // riders share its fate.
         let mut last_of: HashMap<u64, usize> = HashMap::with_capacity(reqs.len());
         for (i, req) in reqs.iter().enumerate() {
-            last_of.insert(req.key, i);
+            if screened(req) {
+                last_of.insert(req.key, i);
+            }
         }
         // Apply in drain order (not map order): the sweep must be a
         // deterministic function of ring state under the simulator.
         let mut outcome: HashMap<u64, (u8, u64)> = HashMap::with_capacity(last_of.len());
         for (i, req) in reqs.iter().enumerate() {
-            if last_of[&req.key] == i {
+            if last_of.get(&req.key) == Some(&i) {
                 outcome.insert(req.key, self.apply_shipped(ctx, req));
             }
         }
         for req in &reqs {
-            let (status, retval) = outcome[&req.key];
+            let (status, retval) = if req.op != SHIP_UPDATE {
+                (SHIP_RETRY, 0)
+            } else if req.aux != epoch {
+                // Routed under another membership epoch: re-resolve
+                // rather than guess whose view is ahead.
+                (SHIP_WRONG_HOME, 0)
+            } else {
+                outcome[&req.key]
+            };
             ring.reply(ctx, req, status, retval);
         }
         true

@@ -43,9 +43,14 @@
 //! Crash-stop of the server surfaces as `Err(Error::PeerFailed)` from
 //! `call` in bounded time (the reply spin watches the cluster's down
 //! mask; it never wedges on a corpse). The op may or may not have been
-//! applied before the crash — callers that need exactly-once must make
-//! re-execution down another path safe (the kvstore's fallback
-//! re-applies the same value under the key lock, which linearizes).
+//! applied before the crash — a blind re-execution down another path
+//! is NOT transparent (the apply may have replicated and another
+//! writer may land at the re-home first, so re-applying can resurrect
+//! a superseded value). Callers must resolve the ambiguity themselves:
+//! the kvstore probes the current frame under the key lock, skips the
+//! re-apply when its value already landed, and reports any performed
+//! re-apply as ambiguous so history recorders don't treat the op's
+//! interval as definite (see `apps::kvstore::UpdateOutcome`).
 //! Transient completion errors (QP flaps) are retried on the same
 //! slot/`seq` while the peer is alive, so a frame is never abandoned
 //! where a live server could still apply it late.

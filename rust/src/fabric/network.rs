@@ -43,9 +43,25 @@ pub struct NodeFabric {
     /// Route decisions that flipped a key between one-sided and shipped
     /// (adaptive-routing hysteresis crossings).
     route_flips: AtomicU64,
+    /// Shipped updates whose server died between enqueue and reply,
+    /// completed through the one-sided ambiguous fallback.
+    ship_fallbacks: AtomicU64,
+    /// Ambiguous fallbacks whose probe found the shipped value already
+    /// in place — the server applied (and replicated) before crashing,
+    /// so the fallback skipped the re-apply. Chaos schedules pin this
+    /// to prove the applied-then-crashed window is exercised.
+    ship_fallbacks_confirmed: AtomicU64,
     /// Crash-stop flag (fault injection): once cleared the node never
     /// serves or transmits again. See [`Cluster::crash`].
     alive: AtomicBool,
+    /// Engine-executed op count, published by the NIC engine each step
+    /// so [`Cluster::crash_after_ops`] can arm a crash relative to
+    /// "now" (calibrated past bring-up, unlike the construction-time
+    /// [`FaultPlan::crash_after`](super::FaultPlan::crash_after)).
+    engine_ops: AtomicU64,
+    /// Engine-op count at which this node crash-stops (runtime-armed
+    /// fault injection; `u64::MAX` = disarmed).
+    crash_at_ops: AtomicU64,
 }
 
 impl NodeFabric {
@@ -63,7 +79,11 @@ impl NodeFabric {
             wqes_inlined: AtomicU64::new(0),
             ops_shipped: AtomicU64::new(0),
             route_flips: AtomicU64::new(0),
+            ship_fallbacks: AtomicU64::new(0),
+            ship_fallbacks_confirmed: AtomicU64::new(0),
             alive: AtomicBool::new(true),
+            engine_ops: AtomicU64::new(0),
+            crash_at_ops: AtomicU64::new(u64::MAX),
         }
     }
 
@@ -89,6 +109,17 @@ impl NodeFabric {
     pub(super) fn revive(&self) {
         self.alive.store(true, Ordering::SeqCst);
         self.ring();
+    }
+
+    /// Engine-side: publish the executed-op count so
+    /// [`Cluster::crash_after_ops`] can arm thresholds relative to it.
+    pub(super) fn publish_engine_ops(&self, ops: u64) {
+        self.engine_ops.store(ops, Ordering::Relaxed);
+    }
+
+    /// Engine-side: is a runtime-armed crash due at `ops` executed ops?
+    pub(super) fn crash_due(&self, ops: u64) -> bool {
+        ops >= self.crash_at_ops.load(Ordering::Relaxed)
     }
 
     /// Ring the engine doorbell (submission or new QP).
@@ -416,6 +447,30 @@ impl Cluster {
         self.nodes[node as usize].route_flips.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Total shipped updates completed through the ambiguous one-sided
+    /// fallback (server died between enqueue and reply; monotonic).
+    pub fn ship_fallbacks(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ship_fallbacks.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Of [`Cluster::ship_fallbacks`], those whose under-lock probe
+    /// found the shipped value already applied — the server crashed
+    /// AFTER its apply replicated but before replying (monotonic).
+    pub fn ship_fallbacks_confirmed(&self) -> u64 {
+        self.nodes.iter().map(|n| n.ship_fallbacks_confirmed.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Router-side accounting: `node` entered the ambiguous fallback.
+    pub fn note_ship_fallback(&self, node: NodeId) {
+        self.nodes[node as usize].ship_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Router-side accounting: `node`'s fallback probe confirmed the
+    /// dead server's apply.
+    pub fn note_ship_fallback_confirmed(&self, node: NodeId) {
+        self.nodes[node as usize].ship_fallbacks_confirmed.fetch_add(1, Ordering::Relaxed);
+    }
+
     // ---- fault injection: crash-stop ---------------------------------
 
     /// Crash-stop `node`: it stops serving remote verbs, stops
@@ -431,6 +486,31 @@ impl Cluster {
         // the dead node even if their own submission queues are idle.
         for n in &self.nodes {
             n.ring();
+        }
+    }
+
+    /// Engine-executed op count of `node` so far (monotonic). Pair with
+    /// [`Cluster::crash_after_ops`] to calibrate a crash cut relative
+    /// to a known point of the run rather than time zero.
+    pub fn engine_ops(&self, node: NodeId) -> u64 {
+        self.nodes[node as usize].engine_ops.load(Ordering::Relaxed)
+    }
+
+    /// Arm a crash-stop of `node` after it executes `delta` MORE engine
+    /// ops (relative to now). Unlike
+    /// [`FaultPlan::crash_after`](super::FaultPlan::crash_after), which
+    /// counts from time zero and must be fixed before the cluster is
+    /// built, this can be armed mid-run — chaos schedules let bring-up
+    /// finish, then sweep `delta` to land the crash at a precise point
+    /// of a serve window (e.g. between a shipped op's replicated apply
+    /// and its reply). Re-arming overwrites any earlier threshold.
+    pub fn crash_after_ops(&self, node: NodeId, delta: u64) {
+        let n = &self.nodes[node as usize];
+        let due = n.engine_ops.load(Ordering::Relaxed).saturating_add(delta);
+        n.crash_at_ops.store(due, Ordering::Relaxed);
+        // Wake the engines so an idle victim still observes the arm.
+        for nf in &self.nodes {
+            nf.ring();
         }
     }
 

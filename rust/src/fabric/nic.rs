@@ -530,15 +530,20 @@ impl EngineCore {
                 retire_due_placements(nodes, q, clock.now_ns(), cfg.chaotic_placement);
             }
             // Scheduled crash-stop (fault injection): this node dies once
-            // its engine has executed the planned op count.
-            if let Some((victim, after)) = faults.as_ref().and_then(|f| f.crash_after) {
-                if victim == node && *executed_ops >= after {
-                    nodes[node as usize].crash();
-                    for n in nodes.iter() {
-                        n.ring();
-                    }
-                    did_work = true;
+            // its engine has executed the planned op count — either from
+            // the construction-time plan or a runtime-armed threshold
+            // (`Cluster::crash_after_ops`).
+            nodes[node as usize].publish_engine_ops(*executed_ops);
+            let planned = faults
+                .as_ref()
+                .and_then(|f| f.crash_after)
+                .is_some_and(|(victim, after)| victim == node && *executed_ops >= after);
+            if planned || nodes[node as usize].crash_due(*executed_ops) {
+                nodes[node as usize].crash();
+                for n in nodes.iter() {
+                    n.ring();
                 }
+                did_work = true;
             }
         }
         did_work
@@ -581,6 +586,9 @@ impl EngineCore {
             if victim == self.node && self.executed_ops >= after {
                 return true;
             }
+        }
+        if me.crash_due(self.executed_ops) {
+            return true;
         }
         self.qps.iter().any(|q| {
             if !q.rx.is_empty() {

@@ -449,7 +449,7 @@ fn run_ship_crash_schedule(seed: u64) {
                             // Update-heavy: the shipped op under test.
                             let val = uid.fetch_add(1, Ordering::Relaxed);
                             let inv = now(&clock);
-                            let res = kv.try_update(&ctx, key, &vec![val; len]);
+                            let res = kv.try_update_outcome(&ctx, key, &vec![val; len]);
                             let resp = now(&clock);
                             match res {
                                 _ if cluster.is_down(me) => events.push(Event::Mutate {
@@ -458,12 +458,24 @@ fn run_ship_crash_schedule(seed: u64) {
                                     inv,
                                     resp: loco::testkit::CRASHED,
                                 }),
-                                Ok(true) => {
+                                // A re-applied ambiguous fallback may have
+                                // had two application points (the dead
+                                // server's and its own): maximal
+                                // uncertainty, like an erroring call.
+                                Ok(o) if o.ambiguous => events.push(Event::Mutate {
+                                    key,
+                                    val: Some(val),
+                                    inv,
+                                    resp: loco::testkit::CRASHED,
+                                }),
+                                Ok(o) if o.applied => {
                                     events.push(Event::Mutate { key, val: Some(val), inv, resp })
                                 }
-                                Ok(false) => {} // definitely absent: no-op
-                                // The enqueue may have been applied before
-                                // the victim died: maximal uncertainty.
+                                Ok(_) => {} // definitely absent: no-op
+                                // The lock host died: the mutation did
+                                // not happen — but a preceding shipped
+                                // enqueue may have been applied before
+                                // the victim died, so stay maximal.
                                 Err(_) => events.push(Event::Mutate {
                                     key,
                                     val: Some(val),
@@ -509,6 +521,146 @@ fn run_ship_crash_schedule(seed: u64) {
     );
     check_history(KEYS, &all, &format!("ship crash seed {seed} (dead node {dead})"));
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+}
+
+/// The applied-then-crashed schedule: the victim dies on an
+/// engine-op-count trigger ([`Cluster::crash_after_ops`]) swept across
+/// its serve window, so for some cuts the crash lands AFTER a shipped
+/// update's apply has replicated (the fence read executed) but BEFORE
+/// the reply — the one interleaving the wall-clock kill of
+/// `chaos_crash_ship_target_mid_flight` almost never pins. The erroring
+/// client call takes the ambiguous fallback; its under-lock probe must
+/// find the dead server's value already in place for at least one cut
+/// (observed via [`Cluster::ship_fallbacks_confirmed`]) and report the
+/// op `applied` WITHOUT re-applying — a blind re-apply here is the
+/// v1,v2,v1 non-linearizable history the fallback exists to prevent.
+/// Every swept history must still linearize and converge on the
+/// promoted backup.
+#[test]
+fn chaos_crash_ship_target_after_apply() {
+    let deltas: Vec<u64> = match replay_seed() {
+        Some(d) => vec![d],
+        None => (1..=16).collect(),
+    };
+    let mut fallbacks = 0u64;
+    let mut confirmed = 0u64;
+    for delta in deltas {
+        let (f, c) = run_armed_ship_crash(delta);
+        fallbacks += f;
+        confirmed += c;
+    }
+    assert!(fallbacks > 0, "armed sweep never entered the ambiguous ship fallback");
+    assert!(
+        confirmed > 0,
+        "armed sweep never cut between a shipped op's replicated apply and its \
+         reply (the applied-then-crashed window went unexercised)"
+    );
+}
+
+/// One armed cut: ship-pinned updates from node 0 to a key homed on
+/// node 1, with node 1 armed to crash-stop `delta` engine ops into its
+/// next serves. Fault-free fabric (no flaps) so every ambiguous
+/// fallback the run counts is caused by the armed crash, not a
+/// transient. Returns this run's (fallback, fallback-confirmed) counts.
+fn run_armed_ship_crash(delta: u64) -> (u64, u64) {
+    // Lock stripe `0 % 12 % 3` is hosted on node 0, which survives —
+    // the fallback's under-lock probe must not fail on a dead lock host.
+    const KEY: u64 = 0;
+    let victim: NodeId = 1;
+    let backup: NodeId = 2; // victim's rank-0 static successor
+    let cfg = KvConfig { routing: RouteMode::Ship, ..crash_cfg() };
+    let mut fab = loco::fabric::FabricConfig::threaded(loco::fabric::LatencyModel::fast_sim());
+    fab.seed = (0x9a7 ^ delta).wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+    let (cluster, mgrs, kvs) = kv_cluster(3, fab, cfg);
+    assert_eq!(kvs[0].lock_host(KEY), 0, "schedule needs a surviving lock host");
+    let clock = Instant::now();
+    let mut events: Vec<Event> = Vec::new();
+
+    // The victim homes the key (inserts home on the inserting node).
+    {
+        let vctx = mgrs[victim as usize].ctx();
+        let inv = now(&clock);
+        assert!(
+            kvs[victim as usize].insert(&vctx, KEY, &[9_000_000]).unwrap(),
+            "delta {delta}: seed insert failed"
+        );
+        let resp = now(&clock);
+        events.push(Event::Mutate { key: KEY, val: Some(9_000_000), inv, resp });
+    }
+
+    // Warm-up: settled shipped updates, so the armed cut lands inside a
+    // steady-state serve window rather than bring-up traffic.
+    let ctx = mgrs[0].ctx();
+    for i in 0..8u64 {
+        let val = 9_000_100 + i;
+        let inv = now(&clock);
+        let o = kvs[0].try_update_outcome(&ctx, KEY, &[val]).unwrap();
+        let resp = now(&clock);
+        assert!(o.applied && !o.ambiguous, "delta {delta}: warm-up update not applied");
+        events.push(Event::Mutate { key: KEY, val: Some(val), inv, resp });
+    }
+    assert!(cluster.ops_shipped() > 0, "delta {delta}: warm-up never shipped an op");
+
+    // Arm the cut, then keep updating through it. The update in flight
+    // when the victim dies errors and takes the ambiguous fallback;
+    // later ones re-resolve to the promoted backup.
+    cluster.crash_after_ops(victim, delta);
+    for i in 0..40u64 {
+        let val = 9_000_200 + i;
+        let inv = now(&clock);
+        let res = kvs[0].try_update_outcome(&ctx, KEY, &[val]);
+        let resp = now(&clock);
+        match res {
+            // Ambiguous fallback re-applied: possibly two application
+            // points, so record maximal uncertainty (like an error).
+            Ok(o) if o.ambiguous => events.push(Event::Mutate {
+                key: KEY,
+                val: Some(val),
+                inv,
+                resp: loco::testkit::CRASHED,
+            }),
+            Ok(o) if o.applied => {
+                events.push(Event::Mutate { key: KEY, val: Some(val), inv, resp })
+            }
+            Ok(_) => {} // definitely absent: no-op (cannot happen; no removes)
+            Err(_) => events.push(Event::Mutate {
+                key: KEY,
+                val: Some(val),
+                inv,
+                resp: loco::testkit::CRASHED,
+            }),
+        }
+        if cluster.is_down(victim) && i >= 24 {
+            break; // enough post-crash traffic against the promotee
+        }
+    }
+    assert!(cluster.is_down(victim), "delta {delta}: the armed crash never fired");
+
+    // Convergence: the key re-homes to the promoted backup and both
+    // survivors read the same value; a final read anchors the checker
+    // on the post-crash state.
+    let deadline = Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let done = [0usize, backup as usize]
+            .iter()
+            .all(|&s| kvs[s].index_entry(KEY).map(|e| e.node == backup).unwrap_or(false));
+        if done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "delta {delta}: re-home never completed");
+        std::thread::yield_now();
+    }
+    let ctx2 = mgrs[backup as usize].ctx();
+    let inv = now(&clock);
+    let a = kvs[0].get(&ctx, KEY);
+    let b = kvs[backup as usize].get(&ctx2, KEY);
+    let resp = now(&clock);
+    assert_eq!(a, b, "delta {delta}: survivors diverge after the armed crash");
+    let fin = a.unwrap_or_else(|| panic!("delta {delta}: key lost after the armed crash"));
+    events.push(Event::Read { key: KEY, val: Some(read_tag(fin, KEY)), inv, resp });
+    check_history(1, &events, &format!("armed ship crash delta {delta}"));
+
+    (cluster.ship_fallbacks(), cluster.ship_fallbacks_confirmed())
 }
 
 fn run_mid_op_crash_schedule(seed: u64, reloc_heavy: bool) {
