@@ -81,6 +81,14 @@ fn main() {
         t.row(&["fault hooks".into(), l, format!("{v:.1} Kops/s")]);
     }
 
+    // Race-checker hook overhead: the same workload with the checker
+    // disabled vs at structural level (PR-9's zero-cost-hook bar lives
+    // on the disabled pair).
+    for (l, v) in micro::check_hook_overhead(lat.clone(), 16, 100) {
+        json.add("micro_check_hooks", &l, v);
+        t.row(&["checker hooks".into(), l, format!("{v:.1} Kops/s")]);
+    }
+
     // Slab allocator: single-word ops through a single-class geometry vs
     // the full 8-class (1 KB ceiling) geometry — the class-1 fast path
     // must stay within the PR-3 bar (the unit test pins 1.9×).

@@ -1,0 +1,1134 @@
+//! Happens-before race and consistency checking of simulated network
+//! memory (see `docs/ARCHITECTURE.md § Race & consistency checking`).
+//!
+//! LOCO's channels stay correct on an incoherent memory network only
+//! because every publication is threaded through counters, checksums,
+//! valid bits, and §5.3/§7.2 fences. Nothing in the stack *checks* that
+//! discipline except end-to-end history checking — which reports a wrong
+//! value long after the unfenced WRITE that caused it. This module is
+//! the missing root-cause analysis: a [`Checker`] hangs off the fabric's
+//! two access choke points (every [`Arena`](crate::fabric::Arena) word
+//! access, and the NIC engine's DMA execution of WQEs) and maintains
+//! per-actor **vector clocks** advanced by the events that really order
+//! accesses in this stack:
+//!
+//! | edge | from → to |
+//! |------|-----------|
+//! | WQE post → NIC execution | `on_post` snapshot joined at `on_execute` |
+//! | CQE delivery → poller | `on_execute` (signaled) → `on_cq_drain` |
+//! | ack-word observation | writer's clock stored per [`RegionKind::AckCell`] word, joined by the reader |
+//! | fence / flushing-read completion | `on_flush` (also clears rule-(c) pending) |
+//! | tracker apply-then-ack | the ack write/observation edges above, composed |
+//! | lock acquire/release | `lock_release` publishes, `lock_acquire` joins |
+//!
+//! Three diagnostic rules:
+//!
+//! * **(a) unprotected races** — conflicting accesses to a word of a
+//!   [`RegionKind::Checked`] region with no happens-before edge. The
+//!   per-address **protocol register** ([`Checker::declare_region`])
+//!   lets channels declare torn-tolerant frame layouts
+//!   (`counter‖valid` + checksum validation) as [`RegionKind::Frames`]
+//!   or [`RegionKind::ValidatedMailbox`], which rule (a) deliberately
+//!   skips — the reader-validation idiom is the whole point of LOCO,
+//!   and flagging it would drown the signal. Undeclared memory is
+//!   likewise skipped (under-approximation: never a false positive).
+//! * **(b) use-after-free** — any write (local store or lagged DMA
+//!   placement) landing in a slab slot after its free retired it
+//!   ([`Checker::on_slab_free`] / [`Checker::on_slab_alloc`] wire the
+//!   [`SlabAllocator`](crate::core::mem_pool::SlabAllocator) free-list
+//!   transitions in as death/birth events), plus the structural form:
+//!   a slot freed while its `counter‖valid` word still has the valid
+//!   bit set.
+//! * **(c) publication-before-fence** — a publication (tracker
+//!   broadcast, coalesced-invalidation enqueue) issued while a fenced
+//!   frame write is still unflushed on some peer ([`Checker::on_unfenced_write`]
+//!   pending set, cleared by [`Checker::on_flush`]).
+//!
+//! Two CI mutants prove the teeth: `--cfg loco_mutant_fence` drops the
+//! fence on the kvstore's in-place update chain (caught by rule (c));
+//! `--cfg loco_mutant_uaf` frees a relocated-away slot before its valid
+//! bit is cleared (caught by rule (b), both forms). Green runs of the
+//! model and chaos tiers assert **zero** diagnostics.
+//!
+//! Cost when disabled: every hook is gated on a `OnceLock` handle that
+//! was never set — one atomic load and a dead branch, pinned by
+//! `bench::micro::check_hook_overhead` exactly like the PR-3 fault
+//! hooks.
+
+pub mod vclock;
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fabric::NodeId;
+pub use vclock::VClock;
+
+/// Hard cap on retained diagnostics: a badly broken run must not OOM
+/// the checker. `Checker::dropped_diagnostics` counts the overflow.
+const MAX_DIAGS: usize = 1024;
+
+/// Checker activation, resolved per delivery mode (`Auto`) or forced.
+/// Configured via `FabricConfig::check_races` / env `LOCO_CHECK`
+/// (unset → `Auto`, `0`/`off` → `Off`, `structural` → `Structural`,
+/// `1`/`full` → `Full`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckMode {
+    /// Default: `Full` under `DeliveryMode::Sim`, `Off` otherwise.
+    Auto,
+    Off,
+    /// Structural rules only — (b) use-after-free and (c)
+    /// publication-before-fence, plus stale-MR execution checks. No
+    /// vector clocks, so it is cheap enough for the threaded chaos tier.
+    Structural,
+    /// Everything: structural rules + happens-before rule (a) on
+    /// declared `Checked` regions. Meant for the single-threaded sim.
+    Full,
+}
+
+/// What a resolved, non-`Off` mode runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckLevel {
+    Structural,
+    Full,
+}
+
+impl CheckMode {
+    /// Resolve against the delivery mode (`sim` = `DeliveryMode::Sim`).
+    pub fn resolve(self, sim: bool) -> Option<CheckLevel> {
+        match self {
+            CheckMode::Off => None,
+            CheckMode::Structural => Some(CheckLevel::Structural),
+            CheckMode::Full => Some(CheckLevel::Full),
+            CheckMode::Auto => sim.then_some(CheckLevel::Full),
+        }
+    }
+}
+
+/// Parse a `LOCO_CHECK` override. Mirrors `parse_signal_every`: an
+/// explicit garbage value is an error (surfaced as a panic at config
+/// construction), never silently ignored.
+pub fn parse_check_mode(raw: Option<&str>) -> Result<CheckMode, String> {
+    match raw.map(str::trim) {
+        None | Some("") => Ok(CheckMode::Auto),
+        Some("auto") => Ok(CheckMode::Auto),
+        Some("0") | Some("off") => Ok(CheckMode::Off),
+        Some("structural") => Ok(CheckMode::Structural),
+        Some("1") | Some("full") => Ok(CheckMode::Full),
+        Some(other) => Err(format!(
+            "LOCO_CHECK must be auto|0|off|structural|1|full, got {other:?}"
+        )),
+    }
+}
+
+/// The protocol register: what discipline protects a declared region,
+/// i.e. which rules apply to accesses landing in it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionKind {
+    /// Plain shared words with no validation protocol: rule (a) applies
+    /// in full. Only tests declare these today — every production
+    /// channel region is validated by construction.
+    Checked,
+    /// Torn-tolerant value frames (`[hdr][value…][checksum]…[counter‖valid]`):
+    /// readers validate, so rule (a) is exempt; rules (b) and — when the
+    /// region's writers fence before publishing — (c) apply.
+    Frames {
+        /// Writers fence frame writes before publication
+        /// (`KvConfig::fence_updates`); off disables rules (b)/(c) for
+        /// this region so the unfenced ablation doesn't false-positive.
+        fenced_publication: bool,
+    },
+    /// Single-word ack/cursor cells: observing the value carries the
+    /// writer's history (the ack-word happens-before edge). Exempt from
+    /// rule (a).
+    AckCell,
+    /// Seq-validated mailbox rows (owned_var rows, request-ring slots):
+    /// reads validate via sequence/checksum and joining the writer's
+    /// clock models the validated-handoff edge. Exempt from rule (a).
+    ValidatedMailbox,
+}
+
+/// How an arena access touches memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+    /// Atomic RMW: conflicts with plain accesses, never with other
+    /// atomics (word atomics are race-free against each other).
+    Atomic,
+}
+
+/// Which logical actor is touching memory right now. Engine attribution
+/// is thread-local (the NIC engine sets a guard around `step`); an
+/// unguarded access is the arena owner's application actor.
+#[derive(Clone, Copy, Debug)]
+enum Who {
+    App(NodeId),
+    Engine(NodeId),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ActorCtx {
+    who: Who,
+    /// DMA provenance: (posting node, wr_id) of the WQE being executed.
+    wqe: Option<(NodeId, u64)>,
+}
+
+thread_local! {
+    static ACTOR: Cell<Option<ActorCtx>> = const { Cell::new(None) };
+}
+
+/// RAII scope marking the current thread as a specific actor for the
+/// duration (restores the previous attribution on drop, so nested
+/// guards — engine step → per-WQE DMA — compose).
+pub struct ActorGuard {
+    prev: Option<ActorCtx>,
+}
+
+impl ActorGuard {
+    fn install(ctx: ActorCtx) -> ActorGuard {
+        let prev = ACTOR.with(|a| a.replace(Some(ctx)));
+        ActorGuard { prev }
+    }
+
+    /// The NIC engine of `node` is running (threaded engine loop or a
+    /// sim `EngineCore::step`).
+    pub fn engine(node: NodeId) -> ActorGuard {
+        Self::install(ActorCtx { who: Who::Engine(node), wqe: None })
+    }
+
+    /// The NIC engine of `engine` is executing (or placing) the WQE
+    /// `wr_id` posted by `src` — arena accesses in scope carry that
+    /// provenance into diagnostics.
+    pub fn dma(engine: NodeId, src: NodeId, wr_id: u64) -> ActorGuard {
+        Self::install(ActorCtx { who: Who::Engine(engine), wqe: Some((src, wr_id)) })
+    }
+
+    /// Inline-mode execution: the posting application thread itself is
+    /// performing the remote effect (synchronous, program-ordered).
+    pub fn app(node: NodeId, wr_id: u64) -> ActorGuard {
+        Self::install(ActorCtx { who: Who::App(node), wqe: Some((node, wr_id)) })
+    }
+}
+
+impl Drop for ActorGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ACTOR.with(|a| a.set(prev));
+    }
+}
+
+/// The handle an [`Arena`](crate::fabric::Arena) stores: the checker
+/// plus the arena's owning node (the default attribution for unguarded
+/// accesses).
+#[derive(Clone)]
+pub struct CheckerHandle {
+    pub node: NodeId,
+    pub checker: Arc<Checker>,
+}
+
+/// Diagnostic taxonomy. `RaceOnCheckedWord` is rule (a); `UseAfterFree`
+/// and `FreeWhileValid` are rule (b)'s dynamic and structural forms;
+/// `PublicationBeforeFence` is rule (c); `StaleMr` is the
+/// DMA-execution-time MR bounds check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagKind {
+    RaceOnCheckedWord,
+    UseAfterFree,
+    FreeWhileValid,
+    PublicationBeforeFence,
+    StaleMr,
+}
+
+/// One side of a diagnosed access pair.
+#[derive(Clone, Debug)]
+pub struct AccessSite {
+    /// `app(n)` / `engine(n)` actor label.
+    pub actor: String,
+    /// Static code-site label (`"kvstore::write_value"` …).
+    pub site: &'static str,
+    /// WQE provenance, when the access was a DMA: (posting node, wr_id).
+    pub wqe: Option<(NodeId, u64)>,
+}
+
+/// A structured checker finding: both access sites (where known), WQE
+/// provenance, and the sim trace hash + seed for deterministic replay.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    /// Node whose memory the address belongs to.
+    pub node: NodeId,
+    pub addr: u64,
+    pub len: u64,
+    /// The access that triggered the report.
+    pub a: AccessSite,
+    /// The conflicting prior event (racing access, the free, the
+    /// unfenced write), when the rule has one.
+    pub b: Option<AccessSite>,
+    pub detail: String,
+    /// Monotone per-checker report number.
+    pub seq: u64,
+    /// Sim event-trace hash at report time (None outside sim) — replay
+    /// the same seed and break at this hash.
+    pub trace_hash: Option<u64>,
+    pub seed: u64,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{:?} #{}] node {} words [{}, +{}): {} at {}",
+            self.kind, self.seq, self.node, self.addr, self.len, self.a.actor, self.a.site
+        )?;
+        if let Some((n, wr)) = self.a.wqe {
+            write!(f, " (wqe {wr:#x} from node {n})")?;
+        }
+        if let Some(b) = &self.b {
+            write!(f, " vs {} at {}", b.actor, b.site)?;
+            if let Some((n, wr)) = b.wqe {
+                write!(f, " (wqe {wr:#x} from node {n})")?;
+            }
+        }
+        write!(f, " — {}", self.detail)?;
+        if let Some(h) = self.trace_hash {
+            write!(f, " [seed {} trace {h:#x}]", self.seed)?;
+        } else {
+            write!(f, " [seed {}]", self.seed)?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct DeclaredRegion {
+    node: NodeId,
+    base: u64,
+    len: u64,
+    kind: RegionKind,
+}
+
+/// A prior access to a `Checked` word.
+#[derive(Clone, Debug)]
+struct Access {
+    actor: u32,
+    epoch: u64,
+    kind: AccessKind,
+    site: &'static str,
+    wqe: Option<(NodeId, u64)>,
+}
+
+#[derive(Default)]
+struct WordState {
+    last_write: Option<Access>,
+    reads: Vec<Access>,
+}
+
+/// A freed slab range awaiting re-allocation: writes landing here are
+/// use-after-free.
+#[derive(Clone, Debug)]
+struct DeadRange {
+    len: u64,
+    slot: u32,
+    site: &'static str,
+}
+
+#[derive(Clone, Debug)]
+struct PendingWrite {
+    peer: NodeId,
+    addr: u64,
+    len: u64,
+    site: &'static str,
+}
+
+struct State {
+    /// Per-actor clocks (`Full` only; empty under `Structural`).
+    clocks: Vec<VClock>,
+    /// Per-node CQ clock: joined from every signaled execution, drained
+    /// into the poller at `on_cq_drain`.
+    cq_clocks: Vec<VClock>,
+    /// Post-time snapshots, indexed by `Wqe::hb - 1`.
+    wqe_tokens: Vec<VClock>,
+    /// Per-lock release clocks, keyed by (lock node, lock base addr).
+    lock_clocks: HashMap<(NodeId, u64), VClock>,
+    /// Last-writer clocks for AckCell / ValidatedMailbox words.
+    ack_clocks: HashMap<(NodeId, u64), VClock>,
+    regions: Vec<DeclaredRegion>,
+    /// Rule-(a) per-word state, `Checked` regions only.
+    words: HashMap<(NodeId, u64), WordState>,
+    /// Rule-(b) dead ranges, per node, keyed by range base.
+    dead: Vec<BTreeMap<u64, DeadRange>>,
+    /// Rule-(c) pending unfenced frame writes, per issuing ThreadCtx.
+    pending: HashMap<u32, Vec<PendingWrite>>,
+    diags: Vec<Diagnostic>,
+    dropped: u64,
+    seq: u64,
+}
+
+/// The checker proper. One per [`Cluster`](crate::fabric::Cluster),
+/// shared by every node's arena; all state sits behind one mutex
+/// (uncontended in sim; the threaded chaos tier runs `Structural`,
+/// whose arena-access fast path never takes it — see `on_access`).
+pub struct Checker {
+    n: usize,
+    level: CheckLevel,
+    seed: u64,
+    /// Lock-free count of live dead-ranges: the `Structural` write fast
+    /// path skips the mutex entirely while this is zero.
+    dead_count: AtomicU64,
+    state: Mutex<State>,
+}
+
+impl Checker {
+    pub fn new(n: usize, level: CheckLevel, seed: u64) -> Checker {
+        let actors = 2 * n;
+        let full = level == CheckLevel::Full;
+        Checker {
+            n,
+            level,
+            seed,
+            dead_count: AtomicU64::new(0),
+            state: Mutex::new(State {
+                clocks: if full { vec![VClock::new(actors); actors] } else { Vec::new() },
+                cq_clocks: if full { vec![VClock::new(actors); n] } else { Vec::new() },
+                wqe_tokens: Vec::new(),
+                lock_clocks: HashMap::new(),
+                ack_clocks: HashMap::new(),
+                regions: Vec::new(),
+                words: HashMap::new(),
+                dead: (0..n).map(|_| BTreeMap::new()).collect(),
+                pending: HashMap::new(),
+                diags: Vec::new(),
+                dropped: 0,
+                seq: 0,
+            }),
+        }
+    }
+
+    pub fn level(&self) -> CheckLevel {
+        self.level
+    }
+
+    fn app(&self, node: NodeId) -> u32 {
+        debug_assert!((node as usize) < self.n);
+        node
+    }
+
+    fn engine(&self, node: NodeId) -> u32 {
+        debug_assert!((node as usize) < self.n);
+        self.n as u32 + node
+    }
+
+    fn actor_name(&self, actor: u32) -> String {
+        if (actor as usize) < self.n {
+            format!("app({actor})")
+        } else {
+            format!("engine({})", actor as usize - self.n)
+        }
+    }
+
+    /// Resolve the current thread's attribution, defaulting to the
+    /// accessed arena's owning application actor.
+    fn current_actor(&self, owner: NodeId) -> (u32, Option<(NodeId, u64)>) {
+        match ACTOR.with(|a| a.get()) {
+            Some(ActorCtx { who: Who::Engine(e), wqe }) => (self.engine(e), wqe),
+            Some(ActorCtx { who: Who::App(a), wqe }) => (self.app(a), wqe),
+            None => (self.app(owner), None),
+        }
+    }
+
+    /// Declare `[base, base+len)` on `node` as protocol-registered
+    /// memory of the given kind. First matching declaration wins on
+    /// lookup; channels declare at region-allocation time.
+    pub fn declare_region(&self, node: NodeId, base: u64, len: u64, kind: RegionKind) {
+        let mut st = self.state.lock().unwrap();
+        st.regions.push(DeclaredRegion { node, base, len, kind });
+    }
+
+    // ----- diagnostics plumbing ------------------------------------
+
+    fn push_diag(
+        &self,
+        st: &mut State,
+        kind: DiagKind,
+        node: NodeId,
+        addr: u64,
+        len: u64,
+        a: AccessSite,
+        b: Option<AccessSite>,
+        detail: String,
+    ) {
+        st.seq += 1;
+        if st.diags.len() >= MAX_DIAGS {
+            st.dropped += 1;
+            return;
+        }
+        let seq = st.seq;
+        st.diags.push(Diagnostic {
+            kind,
+            node,
+            addr,
+            len,
+            a,
+            b,
+            detail,
+            seq,
+            trace_hash: crate::sim::current_trace_hash(),
+            seed: self.seed,
+        });
+    }
+
+    /// All diagnostics reported so far.
+    pub fn diagnostics(&self) -> Vec<Diagnostic> {
+        self.state.lock().unwrap().diags.clone()
+    }
+
+    /// Drain diagnostics (tests assert on — and thereby acknowledge —
+    /// what they took).
+    pub fn take_diagnostics(&self) -> Vec<Diagnostic> {
+        std::mem::take(&mut self.state.lock().unwrap().diags)
+    }
+
+    /// Diagnostics discarded past the [`MAX_DIAGS`] cap.
+    pub fn dropped_diagnostics(&self) -> u64 {
+        self.state.lock().unwrap().dropped
+    }
+
+    // ----- the arena access hook -----------------------------------
+
+    /// Every `Arena::{load,store,fetch_add,compare_swap,*_words}` call
+    /// lands here (when a checker is installed). `owner` is the arena's
+    /// node; the acting actor comes from the thread-local guard.
+    pub fn on_access(&self, owner: NodeId, addr: u64, len: u64, kind: AccessKind, site: &'static str) {
+        if len == 0 {
+            return;
+        }
+        if self.level == CheckLevel::Structural {
+            // Fast path for the threaded chaos tier: reads are never
+            // flagged structurally, and writes only matter while a
+            // freed-but-unreused range exists somewhere.
+            if kind == AccessKind::Read || self.dead_count.load(Ordering::Acquire) == 0 {
+                return;
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        let (actor, wqe) = self.current_actor(owner);
+
+        // Rule (b), dynamic form: writes into a dead slab range.
+        if kind != AccessKind::Read && !st.dead[owner as usize].is_empty() {
+            let hit = st.dead[owner as usize]
+                .range(..=addr + len.saturating_sub(1))
+                .next_back()
+                .filter(|(base, dr)| addr < *base + dr.len)
+                .map(|(base, dr)| (*base, dr.clone()));
+            if let Some((base, dr)) = hit {
+                let a = AccessSite { actor: self.actor_name(actor), site, wqe };
+                let b = AccessSite { actor: String::from("slab"), site: dr.site, wqe: None };
+                self.push_diag(
+                    &mut st,
+                    DiagKind::UseAfterFree,
+                    owner,
+                    addr,
+                    len,
+                    a,
+                    Some(b),
+                    format!(
+                        "write into freed slab slot {} (dead range [{base}, +{}))",
+                        dr.slot, dr.len
+                    ),
+                );
+            }
+        }
+
+        if self.level != CheckLevel::Full {
+            return;
+        }
+
+        // Program-order tick for this event.
+        st.clocks[actor as usize].tick(actor);
+
+        // Protocol register: what discipline covers this address?
+        let rk = st
+            .regions
+            .iter()
+            .find(|r| r.node == owner && addr >= r.base && addr + len <= r.base + r.len)
+            .map(|r| r.kind);
+        match rk {
+            Some(RegionKind::AckCell) | Some(RegionKind::ValidatedMailbox) => {
+                // Validated handoff: observing the word carries the
+                // writer's history into the reader.
+                match kind {
+                    AccessKind::Read => {
+                        if let Some(wc) = st.ack_clocks.get(&(owner, addr)) {
+                            let wc = wc.clone();
+                            st.clocks[actor as usize].join(&wc);
+                        }
+                    }
+                    _ => {
+                        let snap = st.clocks[actor as usize].clone();
+                        st.ack_clocks.insert((owner, addr), snap);
+                    }
+                }
+            }
+            Some(RegionKind::Checked) => {
+                self.check_words(&mut st, owner, addr, len, kind, actor, site, wqe);
+            }
+            // Frames regions are validated by readers; undeclared
+            // memory is conservatively exempt from rule (a).
+            Some(RegionKind::Frames { .. }) | None => {}
+        }
+    }
+
+    /// FastTrack-style per-word race check over a `Checked` range.
+    #[allow(clippy::too_many_arguments)]
+    fn check_words(
+        &self,
+        st: &mut State,
+        owner: NodeId,
+        addr: u64,
+        len: u64,
+        kind: AccessKind,
+        actor: u32,
+        site: &'static str,
+        wqe: Option<(NodeId, u64)>,
+    ) {
+        let epoch = st.clocks[actor as usize].get(actor);
+        let my = st.clocks[actor as usize].clone();
+        for w in addr..addr + len {
+            // Collect the racing prior access first (borrow split).
+            let racy: Option<Access> = {
+                let ws = st.words.entry((owner, w)).or_default();
+                let conflicts = |p: &Access| {
+                    p.actor != actor
+                        && !(p.kind == AccessKind::Atomic && kind == AccessKind::Atomic)
+                        && my.get(p.actor) < p.epoch
+                };
+                let found = match kind {
+                    AccessKind::Read => ws.last_write.as_ref().filter(|p| conflicts(p)).cloned(),
+                    _ => ws
+                        .last_write
+                        .as_ref()
+                        .filter(|p| conflicts(p))
+                        .cloned()
+                        .or_else(|| ws.reads.iter().find(|p| conflicts(p)).cloned()),
+                };
+                // Update word state.
+                let me = Access { actor, epoch, kind, site, wqe };
+                match kind {
+                    AccessKind::Read => {
+                        ws.reads.retain(|r| r.actor != actor);
+                        ws.reads.push(me);
+                    }
+                    _ => {
+                        ws.last_write = Some(me);
+                        ws.reads.clear();
+                    }
+                }
+                found
+            };
+            if let Some(p) = racy {
+                let a = AccessSite { actor: self.actor_name(actor), site, wqe };
+                let b = AccessSite { actor: self.actor_name(p.actor), site: p.site, wqe: p.wqe };
+                self.push_diag(
+                    st,
+                    DiagKind::RaceOnCheckedWord,
+                    owner,
+                    w,
+                    1,
+                    a,
+                    Some(b),
+                    format!("{kind:?} races prior {:?} with no happens-before edge", p.kind),
+                );
+            }
+        }
+    }
+
+    // ----- WQE lifecycle edges -------------------------------------
+
+    /// Post-time snapshot of the poster's clock; the returned token is
+    /// stamped into `Wqe::hb` and joined at execution. 0 = no token.
+    pub fn on_post(&self, from: NodeId) -> u32 {
+        if self.level != CheckLevel::Full {
+            return 0;
+        }
+        let mut st = self.state.lock().unwrap();
+        let a = self.app(from) as usize;
+        st.clocks[a].tick(from);
+        let snap = st.clocks[a].clone();
+        st.wqe_tokens.push(snap);
+        st.wqe_tokens.len() as u32
+    }
+
+    /// The NIC engine of `node` executes a WQE: join the post-time
+    /// snapshot into the engine's clock and, for signaled WQEs, merge
+    /// the engine's clock into the poster's CQ clock (the CQE-delivery
+    /// edge, completed by [`Checker::on_cq_drain`]).
+    pub fn on_execute(&self, node: NodeId, hb: u32, signaled: bool) {
+        if self.level != CheckLevel::Full {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let e = self.engine(node) as usize;
+        let ea = self.engine(node);
+        st.clocks[e].tick(ea);
+        if hb != 0 {
+            let tok = st.wqe_tokens[hb as usize - 1].clone();
+            st.clocks[e].join(&tok);
+        }
+        if signaled {
+            let snap = st.clocks[e].clone();
+            st.cq_clocks[node as usize].join(&snap);
+        }
+    }
+
+    /// The application poller on `node` drained ≥1 CQE: everything the
+    /// engine did before posting those completions is now ordered
+    /// before the poller's future events. (Joins the whole CQ clock —
+    /// an over-approximation that only *adds* edges, so it can hide
+    /// races but never invent one.)
+    pub fn on_cq_drain(&self, node: NodeId) {
+        if self.level != CheckLevel::Full {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let a = self.app(node) as usize;
+        st.clocks[a].tick(node);
+        let cqc = st.cq_clocks[node as usize].clone();
+        st.clocks[a].join(&cqc);
+    }
+
+    // ----- rule (c): publication-before-fence ----------------------
+
+    /// An unfenced remote frame write was issued by ThreadCtx `ctx_id`
+    /// on `from` toward `peer`. Recorded only when it lands in a
+    /// declared `Frames { fenced_publication: true }` region.
+    pub fn on_unfenced_write(
+        &self,
+        ctx_id: u32,
+        _from: NodeId,
+        peer: NodeId,
+        addr: u64,
+        len: u64,
+        site: &'static str,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        let covered = st.regions.iter().any(|r| {
+            r.node == peer
+                && matches!(r.kind, RegionKind::Frames { fenced_publication: true })
+                && addr < r.base + r.len
+                && addr + len > r.base
+        });
+        if covered {
+            st.pending.entry(ctx_id).or_default().push(PendingWrite { peer, addr, len, site });
+        }
+    }
+
+    /// ThreadCtx `ctx_id` completed a fence (or any flushing read)
+    /// toward `peer`: its frame writes there are placed. Called on both
+    /// Ok and Err fence outcomes — a failed fence still retires the
+    /// writes (error CQE) and the mutation path surfaces the failure.
+    pub fn on_flush(&self, ctx_id: u32, peer: NodeId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(v) = st.pending.get_mut(&ctx_id) {
+            v.retain(|p| p.peer != peer);
+            if v.is_empty() {
+                st.pending.remove(&ctx_id);
+            }
+        }
+    }
+
+    /// ThreadCtx `ctx_id` on `node` is publishing (tracker broadcast,
+    /// coalesced-invalidation enqueue): any still-unfenced frame write
+    /// is a publication-before-fence. Reports once and clears, so one
+    /// broken mutation yields one localized diagnostic.
+    pub fn on_publication(&self, ctx_id: u32, node: NodeId, site: &'static str) {
+        let mut st = self.state.lock().unwrap();
+        let Some(pend) = st.pending.remove(&ctx_id) else { return };
+        if pend.is_empty() {
+            return;
+        }
+        let first = pend[0].clone();
+        let a = AccessSite { actor: self.actor_name(self.app(node)), site, wqe: None };
+        let b = AccessSite {
+            actor: self.actor_name(self.app(node)),
+            site: first.site,
+            wqe: None,
+        };
+        self.push_diag(
+            &mut st,
+            DiagKind::PublicationBeforeFence,
+            first.peer,
+            first.addr,
+            first.len,
+            a,
+            Some(b),
+            format!(
+                "publication with {} unfenced frame write(s) outstanding (first: node {} [{}, +{}))",
+                pend.len(),
+                first.peer,
+                first.addr,
+                first.len
+            ),
+        );
+    }
+
+    // ----- lock edges ----------------------------------------------
+
+    /// `node`'s app actor acquired the lock whose word lives at
+    /// (`lock_node`, `lock_addr`): join the last releaser's clock.
+    pub fn lock_acquire(&self, node: NodeId, lock_node: NodeId, lock_addr: u64) {
+        if self.level != CheckLevel::Full {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let a = self.app(node) as usize;
+        st.clocks[a].tick(node);
+        if let Some(lc) = st.lock_clocks.get(&(lock_node, lock_addr)) {
+            let lc = lc.clone();
+            st.clocks[a].join(&lc);
+        }
+    }
+
+    /// `node`'s app actor released the lock: publish its clock for the
+    /// next acquirer.
+    pub fn lock_release(&self, node: NodeId, lock_node: NodeId, lock_addr: u64) {
+        if self.level != CheckLevel::Full {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let a = self.app(node) as usize;
+        st.clocks[a].tick(node);
+        let snap = st.clocks[a].clone();
+        st.lock_clocks.insert((lock_node, lock_addr), snap);
+    }
+
+    // ----- rule (b): slab birth/death events -----------------------
+
+    /// A slab slot was freed: `[base, base+len)` on `node` is dead until
+    /// re-allocated. `cv` is the slot's `counter‖valid` word read at
+    /// free time (None when the caller can't read it): the valid bit
+    /// still set at free time is the structural use-after-free — a
+    /// reader holding the old location would still validate.
+    pub fn on_slab_free(
+        &self,
+        node: NodeId,
+        slot: u32,
+        base: u64,
+        len: u64,
+        cv: Option<u64>,
+        site: &'static str,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(cv) = cv {
+            if cv & 1 == 1 {
+                let a = AccessSite {
+                    actor: self.actor_name(self.app(node)),
+                    site,
+                    wqe: None,
+                };
+                self.push_diag(
+                    &mut st,
+                    DiagKind::FreeWhileValid,
+                    node,
+                    base,
+                    len,
+                    a,
+                    None,
+                    format!("slab slot {slot} freed with valid bit still set (cv={cv:#x})"),
+                );
+            }
+        }
+        st.dead[node as usize].insert(base, DeadRange { len, slot, site });
+        self.dead_count.fetch_add(1, Ordering::Release);
+    }
+
+    /// A slab slot was (re-)allocated: its range is live again.
+    pub fn on_slab_alloc(&self, node: NodeId, base: u64, len: u64) {
+        if self.dead_count.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let keys: Vec<u64> = st.dead[node as usize]
+            .range(..base + len)
+            .filter(|(b, dr)| *b + dr.len > base)
+            .map(|(b, _)| *b)
+            .collect();
+        for k in keys {
+            st.dead[node as usize].remove(&k);
+            self.dead_count.fetch_sub(1, Ordering::Release);
+        }
+    }
+
+    // ----- stale-MR execution check --------------------------------
+
+    /// DMA execution found the WQE's rkey no longer covering its target
+    /// (the MR was invalidated/re-registered mid-flight). The engine
+    /// skips the effect and delivers the completion; this records why.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_stale_mr(
+        &self,
+        node: NodeId,
+        addr: u64,
+        len: u64,
+        src: NodeId,
+        wr_id: u64,
+        mr: u32,
+        site: &'static str,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        let a = AccessSite {
+            actor: self.actor_name(self.engine(src)),
+            site,
+            wqe: Some((src, wr_id)),
+        };
+        self.push_diag(
+            &mut st,
+            DiagKind::StaleMr,
+            node,
+            addr,
+            len,
+            a,
+            None,
+            format!("WQE executed against invalidated/re-registered MR {mr}; effect skipped"),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full(n: usize) -> Checker {
+        Checker::new(n, CheckLevel::Full, 7)
+    }
+
+    #[test]
+    fn parse_check_mode_accepts_the_documented_values() {
+        assert_eq!(parse_check_mode(None), Ok(CheckMode::Auto));
+        assert_eq!(parse_check_mode(Some("")), Ok(CheckMode::Auto));
+        assert_eq!(parse_check_mode(Some("auto")), Ok(CheckMode::Auto));
+        assert_eq!(parse_check_mode(Some("0")), Ok(CheckMode::Off));
+        assert_eq!(parse_check_mode(Some("off")), Ok(CheckMode::Off));
+        assert_eq!(parse_check_mode(Some("structural")), Ok(CheckMode::Structural));
+        assert_eq!(parse_check_mode(Some("1")), Ok(CheckMode::Full));
+        assert_eq!(parse_check_mode(Some("full")), Ok(CheckMode::Full));
+        assert!(parse_check_mode(Some("yes")).is_err());
+    }
+
+    #[test]
+    fn auto_resolves_full_only_under_sim() {
+        assert_eq!(CheckMode::Auto.resolve(true), Some(CheckLevel::Full));
+        assert_eq!(CheckMode::Auto.resolve(false), None);
+        assert_eq!(CheckMode::Off.resolve(true), None);
+        assert_eq!(CheckMode::Structural.resolve(false), Some(CheckLevel::Structural));
+        assert_eq!(CheckMode::Full.resolve(false), Some(CheckLevel::Full));
+    }
+
+    #[test]
+    fn unordered_writes_to_checked_region_race() {
+        let c = full(2);
+        c.declare_region(1, 100, 8, RegionKind::Checked);
+        // app(0) and app(1) write the same word with no edge between.
+        {
+            let _g = ActorGuard::app(0, 1);
+            c.on_access(1, 100, 1, AccessKind::Write, "a");
+        }
+        {
+            let _g = ActorGuard::app(1, 2);
+            c.on_access(1, 100, 1, AccessKind::Write, "b");
+        }
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1, "exactly one race: {d:?}");
+        assert_eq!(d[0].kind, DiagKind::RaceOnCheckedWord);
+        assert_eq!((d[0].node, d[0].addr), (1, 100));
+        assert_eq!(d[0].seed, 7);
+    }
+
+    #[test]
+    fn torn_frame_regions_are_exempt_from_rule_a() {
+        // The protocol-register idiom: the identical access pattern that
+        // races on a Checked region is silent on a Frames region —
+        // readers there validate via counter/checksum by construction.
+        let c = full(2);
+        c.declare_region(1, 100, 8, RegionKind::Frames { fenced_publication: true });
+        {
+            let _g = ActorGuard::app(0, 1);
+            c.on_access(1, 100, 4, AccessKind::Write, "writer");
+        }
+        {
+            let _g = ActorGuard::app(1, 2);
+            c.on_access(1, 100, 4, AccessKind::Read, "torn reader");
+            c.on_access(1, 102, 2, AccessKind::Write, "second writer");
+        }
+        assert!(c.take_diagnostics().is_empty(), "validated frames must not be flagged");
+        // Undeclared memory is exempt too (under-approximation).
+        {
+            let _g = ActorGuard::app(0, 3);
+            c.on_access(0, 500, 1, AccessKind::Write, "x");
+        }
+        {
+            let _g = ActorGuard::app(1, 4);
+            c.on_access(0, 500, 1, AccessKind::Write, "y");
+        }
+        assert!(c.take_diagnostics().is_empty());
+    }
+
+    #[test]
+    fn ack_word_observation_creates_the_edge() {
+        let c = full(2);
+        c.declare_region(0, 10, 1, RegionKind::AckCell);
+        c.declare_region(1, 100, 1, RegionKind::Checked);
+        // app(1) writes the checked word, then writes the ack cell.
+        {
+            let _g = ActorGuard::app(1, 1);
+            c.on_access(1, 100, 1, AccessKind::Write, "payload");
+            c.on_access(0, 10, 1, AccessKind::Write, "ack set");
+        }
+        // app(0) observes the ack cell, then reads the checked word:
+        // ordered through the ack-word edge, no race.
+        {
+            let _g = ActorGuard::app(0, 2);
+            c.on_access(0, 10, 1, AccessKind::Read, "ack poll");
+            c.on_access(1, 100, 1, AccessKind::Read, "payload read");
+        }
+        assert!(c.take_diagnostics().is_empty(), "ack observation orders the read");
+    }
+
+    #[test]
+    fn lock_edges_order_critical_sections() {
+        let c = full(2);
+        c.declare_region(0, 50, 1, RegionKind::Checked);
+        c.lock_acquire(0, 0, 900);
+        {
+            let _g = ActorGuard::app(0, 1);
+            c.on_access(0, 50, 1, AccessKind::Write, "cs write");
+        }
+        c.lock_release(0, 0, 900);
+        c.lock_acquire(1, 0, 900);
+        {
+            let _g = ActorGuard::app(1, 2);
+            c.on_access(0, 50, 1, AccessKind::Write, "cs write 2");
+        }
+        c.lock_release(1, 0, 900);
+        assert!(c.take_diagnostics().is_empty(), "lock hand-off orders the writes");
+    }
+
+    #[test]
+    fn post_execute_drain_orders_dma_against_poller() {
+        let c = full(2);
+        c.declare_region(1, 100, 1, RegionKind::Checked);
+        // app(0) posts; engine(0) executes the DMA write; app(0) drains
+        // the CQE and then reads the word back: all ordered.
+        let hb = c.on_post(0);
+        assert!(hb != 0);
+        {
+            let _g = ActorGuard::dma(0, 0, 42);
+            c.on_execute(0, hb, true);
+            c.on_access(1, 100, 1, AccessKind::Write, "dma write");
+        }
+        c.on_cq_drain(0);
+        {
+            let _g = ActorGuard::app(0, 2);
+            c.on_access(1, 100, 1, AccessKind::Read, "post-cqe read");
+        }
+        assert!(c.take_diagnostics().is_empty(), "post→execute→cqe→drain is one chain");
+        // Without the drain, a second actor's read would race.
+        {
+            let _g = ActorGuard::dma(1, 1, 43);
+            c.on_execute(1, 0, false);
+            c.on_access(1, 100, 1, AccessKind::Write, "unordered dma");
+        }
+        {
+            let _g = ActorGuard::app(0, 3);
+            c.on_access(1, 100, 1, AccessKind::Read, "racy read");
+        }
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind, DiagKind::RaceOnCheckedWord);
+        assert_eq!(d[0].b.as_ref().unwrap().wqe, Some((1, 43)), "provenance carried");
+    }
+
+    #[test]
+    fn dead_range_write_is_use_after_free() {
+        let c = Checker::new(2, CheckLevel::Structural, 3);
+        c.on_slab_free(1, 5, 200, 10, Some(2), "retire");
+        {
+            let _g = ActorGuard::dma(0, 0, 9);
+            c.on_access(1, 204, 2, AccessKind::Write, "late placement");
+        }
+        // Reads of dead ranges are legal (stale readers re-validate).
+        c.on_access(1, 204, 2, AccessKind::Read, "stale read");
+        // After re-allocation the range is live again.
+        c.on_slab_alloc(1, 200, 10);
+        c.on_access(1, 204, 2, AccessKind::Write, "fresh write");
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].kind, DiagKind::UseAfterFree);
+        assert_eq!(d[0].a.wqe, Some((0, 9)));
+    }
+
+    #[test]
+    fn free_with_valid_bit_set_is_structural_uaf() {
+        let c = Checker::new(1, CheckLevel::Structural, 3);
+        c.on_slab_free(0, 7, 300, 8, Some(0b101), "bad retire");
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].kind, DiagKind::FreeWhileValid);
+    }
+
+    #[test]
+    fn publication_before_fence_fires_only_on_unfenced_pending() {
+        let c = Checker::new(2, CheckLevel::Structural, 3);
+        c.declare_region(1, 100, 64, RegionKind::Frames { fenced_publication: true });
+        // Fenced flow: write → flush → publish. Clean.
+        c.on_unfenced_write(11, 0, 1, 100, 4, "frame write");
+        c.on_flush(11, 1);
+        c.on_publication(11, 0, "broadcast");
+        assert!(c.take_diagnostics().is_empty());
+        // Unfenced flow: write → publish. Diagnostic, reported once.
+        c.on_unfenced_write(11, 0, 1, 108, 4, "frame write");
+        c.on_publication(11, 0, "broadcast");
+        c.on_publication(11, 0, "broadcast again");
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].kind, DiagKind::PublicationBeforeFence);
+        assert_eq!((d[0].node, d[0].addr), (1, 108));
+        // Writes outside fenced-publication frames never arm the rule.
+        c.on_unfenced_write(12, 0, 1, 9000, 4, "scratch write");
+        c.on_publication(12, 0, "broadcast");
+        assert!(c.take_diagnostics().is_empty());
+    }
+
+    #[test]
+    fn atomics_do_not_race_each_other() {
+        let c = full(2);
+        c.declare_region(0, 20, 1, RegionKind::Checked);
+        {
+            let _g = ActorGuard::app(0, 1);
+            c.on_access(0, 20, 1, AccessKind::Atomic, "faa");
+        }
+        {
+            let _g = ActorGuard::app(1, 2);
+            c.on_access(0, 20, 1, AccessKind::Atomic, "cas");
+        }
+        assert!(c.take_diagnostics().is_empty(), "word atomics are race-free");
+        {
+            let _g = ActorGuard::app(0, 3);
+            c.on_access(0, 20, 1, AccessKind::Write, "plain store");
+        }
+        assert_eq!(c.take_diagnostics().len(), 1, "plain vs atomic still conflicts");
+    }
+
+    #[test]
+    fn diagnostics_render_and_cap() {
+        let c = Checker::new(1, CheckLevel::Structural, 5);
+        c.on_slab_free(0, 1, 10, 4, Some(3), "r");
+        let d = c.diagnostics();
+        let s = d[0].to_string();
+        assert!(s.contains("FreeWhileValid"), "{s}");
+        assert!(s.contains("seed 5"), "{s}");
+        assert_eq!(c.dropped_diagnostics(), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Vector clocks over the checker's dense actor space.
+//!
+//! Actors are dense indices assigned by the [`Checker`](super::Checker):
+//! `app(node) = node` and `engine(node) = n + node` for an `n`-node
+//! cluster, so a clock is a flat `Vec<u64>` of length `2n` — cheap to
+//! snapshot per posted WQE and to join at every happens-before edge.
+
+/// A fixed-width vector clock: one monotone counter per actor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VClock {
+    c: Vec<u64>,
+}
+
+impl VClock {
+    /// The zero clock over `actors` components.
+    pub fn new(actors: usize) -> VClock {
+        VClock { c: vec![0; actors] }
+    }
+
+    /// This clock's entry for `actor`.
+    #[inline]
+    pub fn get(&self, actor: u32) -> u64 {
+        self.c[actor as usize]
+    }
+
+    /// Advance `actor`'s own component (a new event in its program
+    /// order) and return the new epoch.
+    #[inline]
+    pub fn tick(&mut self, actor: u32) -> u64 {
+        let e = &mut self.c[actor as usize];
+        *e += 1;
+        *e
+    }
+
+    /// Pointwise maximum: after `a.join(&b)`, everything ordered before
+    /// `b`'s snapshot is also ordered before `a`'s future events.
+    pub fn join(&mut self, other: &VClock) {
+        debug_assert_eq!(self.c.len(), other.c.len());
+        for (s, o) in self.c.iter_mut().zip(other.c.iter()) {
+            if *o > *s {
+                *s = *o;
+            }
+        }
+    }
+
+    /// `self ≥ other` pointwise: every event in `other`'s past is in
+    /// `self`'s past (i.e. `other` happens-before-or-equals `self`).
+    pub fn dominates(&self, other: &VClock) -> bool {
+        debug_assert_eq!(self.c.len(), other.c.len());
+        self.c.iter().zip(other.c.iter()).all(|(s, o)| s >= o)
+    }
+
+    /// Number of actor components.
+    pub fn len(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.c.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_advances_own_component_only() {
+        let mut v = VClock::new(4);
+        assert_eq!(v.tick(2), 1);
+        assert_eq!(v.tick(2), 2);
+        assert_eq!(v.get(2), 2);
+        assert_eq!(v.get(0), 0);
+    }
+
+    #[test]
+    fn join_is_pointwise_max() {
+        let mut a = VClock::new(3);
+        let mut b = VClock::new(3);
+        a.tick(0);
+        a.tick(0);
+        b.tick(1);
+        b.tick(2);
+        a.join(&b);
+        assert_eq!((a.get(0), a.get(1), a.get(2)), (2, 1, 1));
+        // Joining is idempotent and never decreases components.
+        let snap = a.clone();
+        a.join(&b);
+        assert_eq!(a, snap);
+    }
+
+    #[test]
+    fn dominates_orders_snapshots() {
+        let mut a = VClock::new(2);
+        let b = VClock::new(2);
+        assert!(a.dominates(&b), "zero clock dominates zero clock");
+        a.tick(0);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        // Concurrent clocks: neither dominates.
+        let mut c = VClock::new(2);
+        c.tick(1);
+        assert!(!a.dominates(&c));
+        assert!(!c.dominates(&a));
+        // After a join, the union dominates both inputs.
+        let mut u = a.clone();
+        u.join(&c);
+        assert!(u.dominates(&a) && u.dominates(&c));
+    }
+}

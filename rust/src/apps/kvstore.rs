@@ -145,7 +145,7 @@ use crate::core::heat::{HeatTracker, RouteDecision, RouteMode};
 use crate::core::index::ShardedIndex;
 use crate::core::manager::{Manager, Membership};
 use crate::core::mem_pool::{
-    hdr_class, hdr_len, hdr_reloc, pack_hdr, SlabAllocator, SlabGeometry,
+    hdr_class, hdr_len, hdr_reloc, pack_hdr, SlabAllocator, SlabEvent, SlabGeometry,
 };
 use crate::fabric::{Cluster, NodeId, Region};
 use crate::util::{fnv64, Backoff};
@@ -344,6 +344,15 @@ pub struct KvConfig {
     /// would otherwise wedge `wait_ready`); the Ship/Adaptive choice
     /// itself may differ per node.
     pub routing: RouteMode,
+    /// Override for the fabric's race-checking mode when the test
+    /// harness builds the cluster from this config (see
+    /// [`crate::analysis::CheckMode`] and
+    /// [`crate::fabric::FabricConfig::check_races`]). `None` (the
+    /// default) keeps the fabric's own setting — full checking under
+    /// `Sim`, off otherwise. Purely a construction-time knob: a
+    /// `KvStore` attached to an existing cluster uses whatever checker
+    /// that cluster was built with.
+    pub check_races: Option<crate::analysis::CheckMode>,
 }
 
 impl Default for KvConfig {
@@ -359,6 +368,7 @@ impl Default for KvConfig {
             replicas: 1,
             coalesce_invals: true,
             routing: RouteMode::from_env(),
+            check_races: None,
         }
     }
 }
@@ -608,6 +618,40 @@ impl KvStore {
             tracker_ready: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
+
+        // Race checker wiring (see `crate::analysis`): declare this
+        // node's frame arrays as generation/checksum-validated regions
+        // — torn or stale reads there are protocol-legal, so rule (a)
+        // stays quiet — and feed the slab's birth/death transitions in
+        // as the use-after-free ground truth (rule (b)). The free-side
+        // event also reads the frame's `counter‖valid` word (still
+        // under the allocator lock, so no re-allocation can interleave)
+        // to catch slots retired with the valid bit up: every retire
+        // protocol in this module unsets-and-fences cv *before* the
+        // free, so a set bit at free time is a protocol violation.
+        if let Some(chk) = mgr.cluster().checker() {
+            let kind =
+                crate::analysis::RegionKind::Frames { fenced_publication: cfg.fence_updates };
+            chk.declare_region(me, data.base, data.len, kind);
+            for reg in &backup_hosted {
+                chk.declare_region(me, reg.base, reg.len, kind);
+            }
+            let chk = chk.clone();
+            let node = mgr.cluster().node(me).clone();
+            let base = data.base;
+            shared.alloc.set_observer(Box::new(move |ev| match ev {
+                SlabEvent::Alloc { slot } => {
+                    let fw = geo.frame_words(geo.class_of(slot));
+                    chk.on_slab_alloc(me, base + geo.slot_off(slot), fw);
+                }
+                SlabEvent::Free { slot } => {
+                    let fw = geo.frame_words(geo.class_of(slot));
+                    let fb = base + geo.slot_off(slot);
+                    let cv = node.arena().load(fb + fw - 1);
+                    chk.on_slab_free(me, slot, fb, fw, Some(cv), "kvstore::slab_free");
+                }
+            }));
+        }
 
         let kv = Arc::new(KvStore {
             cfg,
@@ -948,6 +992,12 @@ impl KvStore {
     /// message delivered after its sender's slot re-joined), not just
     /// ones from currently dead homes; see `apply_tracker`.
     fn send_tracker(&self, ctx: &ThreadCtx, tx: &RingSender, msg: &[u64]) {
+        // Publication point for the race checker's rule (c): a tracker
+        // broadcast announces state other nodes will act on, so every
+        // covered frame write this thread issued must be fenced by now.
+        // (Must run before the ring write below: the ring's own
+        // flushing ops would clear the pending set and mask the bug.)
+        ctx.note_publication("kvstore::send_tracker");
         let mut stamped = Vec::with_capacity(msg.len() + 1);
         stamped.extend_from_slice(msg);
         stamped.push(self.shared.membership.epoch());
@@ -1490,8 +1540,19 @@ impl KvStore {
         // completed" marker). A dead old home keeps its slots.
         let old_cv = old.counter << 1;
         if old.node == self.me {
-            ctx.local_store(self.data, self.cv_off(old.slot), old_cv);
-            self.shared.alloc.free(old.slot);
+            if cfg!(loco_mutant_uaf) {
+                // `--cfg loco_mutant_uaf` (mutation smoke-check):
+                // retire the slot while its cv still carries the valid
+                // bit, then unset it on a range the free list already
+                // owns. The checker must catch both halves — the
+                // valid-at-free structural violation and the dynamic
+                // write into the dead range.
+                self.shared.alloc.free(old.slot);
+                ctx.local_store(self.data, self.cv_off(old.slot), old_cv);
+            } else {
+                ctx.local_store(self.data, self.cv_off(old.slot), old_cv);
+                self.shared.alloc.free(old.slot);
+            }
         } else if !ctx.node_down(old.node) {
             // Covered unset (the fence is the chain's signaled op).
             ctx.write_covered(self.data_region_of(old.node), self.cv_off(old.slot), &[old_cv]);
@@ -1542,7 +1603,14 @@ impl KvStore {
                 ctx.write(self.backup_region_of(e.node, rank), off, &buf);
             }
         }
-        if self.cfg.fence_updates {
+        // `--cfg loco_mutant_fence` (mutation smoke-check): drop the
+        // covering fence, leaving the frame writes above unplaced when
+        // the caller publishes the update (cache invalidation / lock
+        // release). The checker must catch this as
+        // publication-before-fence, localized to THIS chain — the
+        // backup writes of inserts/relocations are fenced inside
+        // `write_backup_frame` and must stay quiet.
+        if self.cfg.fence_updates && !cfg!(loco_mutant_fence) {
             let scope = if self.cfg.replicated() {
                 FenceScope::Thread // covers home and backup peers alike
             } else {
@@ -1608,6 +1676,11 @@ impl KvStore {
             }
             return;
         }
+        // Publication point (rule (c)): enqueueing keys into the
+        // coalescer is this updater's announcement — the broadcast
+        // itself may be shipped by a *different* thread, so the check
+        // must anchor here, on the updater's own pending-fence state.
+        ctx.note_publication("kvstore::invalidate_updated");
         let mut st = self.inval.st.lock().unwrap();
         st.pending.extend_from_slice(keys);
         // The first snapshot taken after this enqueue carries our keys:

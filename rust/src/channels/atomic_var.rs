@@ -99,6 +99,13 @@ impl AtomicVar {
         }
     }
 
+    /// Global word address of the official copy, in the host's address
+    /// space — the race checker keys lock-HB edges by `(host, addr)`.
+    /// Requires the endpoint to be ready on non-host nodes.
+    pub(crate) fn cell_addr(&self) -> u64 {
+        self.cell_region().at(0)
+    }
+
     /// Word-atomic load of the official copy.
     pub fn load(&self, ctx: &ThreadCtx) -> u64 {
         ctx.read1(self.cell_region(), 0)

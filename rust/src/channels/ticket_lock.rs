@@ -185,6 +185,11 @@ impl TicketLock {
                 if st.node_holds {
                     // Handover: the node still owns the global ticket.
                     st.local_active = true;
+                    drop(st);
+                    // Same HB edge as a remote acquire — the previous
+                    // holder's release hook ran before the condvar wake
+                    // that let us in.
+                    ctx.note_lock_acquire(self.now_serving.host(), self.now_serving.cell_addr());
                     return Ok(true);
                 }
                 // We are the node's representative: go remote.
@@ -267,6 +272,10 @@ impl TicketLock {
             );
             bo.snooze();
         }
+        // Acquire edge for the race checker: join the last releaser's
+        // history (the `now_serving` observation above is the physical
+        // carrier of this edge).
+        ctx.note_lock_acquire(self.now_serving.host(), self.now_serving.cell_addr());
         Ok(false)
     }
 
@@ -277,6 +286,11 @@ impl TicketLock {
             FenceScope::Global => self.mgr.global_fence(ctx),
             scope => ctx.fence(scope),
         }
+        // Release edge for the race checker: snapshot this critical
+        // section's history under the lock key BEFORE the next holder
+        // can possibly acquire (handover wake or `now_serving` advance,
+        // both below).
+        ctx.note_lock_release(self.now_serving.host(), self.now_serving.cell_addr());
         let mut st = self.local.lock().unwrap();
         debug_assert!(st.local_active, "unlock without lock");
         st.local_active = false;

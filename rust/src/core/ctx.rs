@@ -23,7 +23,7 @@
 use std::cell::RefCell;
 use std::marker::PhantomData;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::fabric::{Cluster, NodeFabric, Payload, PostList, QpId, Region, Verb, Wqe};
@@ -68,6 +68,11 @@ impl CtxShared {
         qp
     }
 }
+
+/// Process-unique [`ThreadCtx`] ids: the race checker keys its rule-(c)
+/// pending-unfenced-write tracking per issuing context (fences are a
+/// per-thread-per-peer contract, so the tracking must be too).
+static NEXT_CTX_ID: AtomicU32 = AtomicU32::new(1);
 
 /// Size classes for mem_ref scratch blocks (words).
 const MEMREF_SMALL: usize = 64;
@@ -243,6 +248,11 @@ pub struct ThreadCtx {
     /// since the last signaled one — the "every Nth in a stream" cadence
     /// of [`ThreadCtx::write_covered`].
     covered_streak: RefCell<Vec<u32>>,
+    /// Process-unique id (race-checker rule (c) tracking key).
+    ctx_id: u32,
+    /// Cached race-checker handle; `None` (the default outside sim)
+    /// makes every checker hook below a dead `Option` branch.
+    checker: Option<Arc<crate::analysis::Checker>>,
     _not_sync: PhantomData<*const ()>,
 }
 
@@ -258,6 +268,7 @@ impl ThreadCtx {
         let max_inline = cluster.config().latency.max_inline_words;
         let signal_every = cluster.config().signal_every;
         let num_nodes = cluster.num_nodes();
+        let checker = cluster.checker().cloned();
         ThreadCtx {
             cluster,
             node,
@@ -272,7 +283,67 @@ impl ThreadCtx {
             max_inline,
             signal_every,
             covered_streak: RefCell::new(vec![0; num_nodes]),
+            ctx_id: NEXT_CTX_ID.fetch_add(1, Ordering::Relaxed),
+            checker,
             _not_sync: PhantomData,
+        }
+    }
+
+    /// Record a remote WRITE not yet covered by a flushing op: bump the
+    /// fence engine's per-peer counter and tell the race checker (rule
+    /// (c)) which words are pending publication-unsafe.
+    #[inline]
+    fn note_unfenced_write(
+        &self,
+        peer: crate::fabric::NodeId,
+        addr: u64,
+        len: u64,
+        site: &'static str,
+    ) {
+        self.shared.unfenced[peer as usize].fetch_add(1, Ordering::Relaxed);
+        if let Some(chk) = &self.checker {
+            chk.on_unfenced_write(self.ctx_id, self.me, peer, addr, len, site);
+        }
+    }
+
+    /// A flushing op (fence read, READ, atomic) to `peer` completed (or
+    /// was issued-and-awaited): everything earlier on this thread's QP
+    /// is placed, so the counter and the checker's pending set reset.
+    #[inline]
+    fn clear_unfenced(&self, peer: crate::fabric::NodeId) {
+        self.shared.unfenced[peer as usize].store(0, Ordering::Relaxed);
+        if let Some(chk) = &self.checker {
+            chk.on_flush(self.ctx_id, peer);
+        }
+    }
+
+    /// Tell the race checker this thread is about to **publish** — make
+    /// a location or data announcement other nodes may act on (kvstore
+    /// tracker broadcasts, coalesced-invalidation enqueues). If any
+    /// covered write into a fence-published frame region is still
+    /// unfenced on this context, the checker reports
+    /// publication-before-fence (rule (c)). No-op without a checker.
+    pub fn note_publication(&self, site: &'static str) {
+        if let Some(chk) = &self.checker {
+            chk.on_publication(self.ctx_id, self.me, site);
+        }
+    }
+
+    /// Record a lock-acquire happens-before edge for the race checker:
+    /// this node's history joins everything the previous holder did
+    /// before its matching release. Keyed by the lock word's
+    /// `(host, addr)`. No-op without a checker.
+    pub fn note_lock_acquire(&self, lock_node: crate::fabric::NodeId, lock_addr: u64) {
+        if let Some(chk) = &self.checker {
+            chk.lock_acquire(self.me, lock_node, lock_addr);
+        }
+    }
+
+    /// Record the matching lock-release edge (see
+    /// [`ThreadCtx::note_lock_acquire`]).
+    pub fn note_lock_release(&self, lock_node: crate::fabric::NodeId, lock_addr: u64) {
+        if let Some(chk) = &self.checker {
+            chk.lock_release(self.me, lock_node, lock_addr);
         }
     }
 
@@ -306,6 +377,13 @@ impl ThreadCtx {
         let n = self.node.cq().poll(64, &mut buf);
         for cqe in buf.iter() {
             self.registry.complete(cqe.wr_id, cqe.is_ok());
+        }
+        if n > 0 {
+            // HB edge: the engine's effects before these completions are
+            // now ordered before this poller's future accesses.
+            if let Some(chk) = &self.checker {
+                chk.on_cq_drain(self.me);
+            }
         }
         n
     }
@@ -412,6 +490,25 @@ impl ThreadCtx {
         self.cluster.post(qp, self.mk_wqe(0, verb).unsignaled());
     }
 
+    /// [`ThreadCtx::issue`] with the target region's MR stamped into the
+    /// WQE, moving MR validation from post time to DMA-execution time
+    /// (stale-MR detection for in-flight WQEs; see [`crate::analysis`]).
+    /// Scalar region verbs use this; grouped posts keep `rkey = None`
+    /// and fall back to the target's whole-table `covers` check.
+    #[inline]
+    fn issue_mr(&self, peer: crate::fabric::NodeId, verb: Verb, mr: u32) -> AckKey {
+        let qp = self.shared.qp(&self.cluster, self.me, peer);
+        let (wr_id, word, mask) = self.alloc.borrow_mut().alloc();
+        self.cluster.post(qp, self.mk_wqe(wr_id, verb).with_rkey(mr));
+        AckKey::single(word, mask)
+    }
+
+    #[inline]
+    fn issue_unsignaled_mr(&self, peer: crate::fabric::NodeId, verb: Verb, mr: u32) {
+        let qp = self.shared.qp(&self.cluster, self.me, peer);
+        self.cluster.post(qp, self.mk_wqe(0, verb).unsignaled().with_rkey(mr));
+    }
+
     // ---- batched issue (doorbell-batched async pipeline) ------------
 
     /// Issue an ordered batch of verbs to one peer under a **single
@@ -502,7 +599,7 @@ impl ThreadCtx {
                 continue;
             }
             if region.node != self.me {
-                self.shared.unfenced[region.node as usize].store(0, Ordering::Relaxed);
+                self.clear_unfenced(region.node);
             }
         }
         bufs.iter().map(|b| self.guard_from(b)).collect()
@@ -520,7 +617,7 @@ impl ThreadCtx {
             if self.local_direct(region) {
                 self.node.arena().store_words(addr, words, false);
             } else {
-                self.shared.unfenced[region.node as usize].fetch_add(1, Ordering::Relaxed);
+                self.note_unfenced_write(region.node, addr, words.len() as u64, "ctx::write_many");
                 remote.push((
                     region.node,
                     Verb::Write { remote: addr, data: Payload::from_words(words) },
@@ -603,8 +700,12 @@ impl ThreadCtx {
             self.node.arena().store_words(addr, words, false);
             return AckKey::ready();
         }
-        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
-        self.issue(target.node, Verb::Write { remote: addr, data: Payload::from_words(words) })
+        self.note_unfenced_write(target.node, addr, words.len() as u64, "ctx::write");
+        self.issue_mr(
+            target.node,
+            Verb::Write { remote: addr, data: Payload::from_words(words) },
+            target.mr,
+        )
     }
 
     /// Fire-and-forget write: no completion is generated; a later fence
@@ -615,8 +716,12 @@ impl ThreadCtx {
             self.node.arena().store_words(addr, words, false);
             return;
         }
-        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
-        self.issue_unsignaled(target.node, Verb::Write { remote: addr, data: Payload::from_words(words) });
+        self.note_unfenced_write(target.node, addr, words.len() as u64, "ctx::write_unsignaled");
+        self.issue_unsignaled_mr(
+            target.node,
+            Verb::Write { remote: addr, data: Payload::from_words(words) },
+            target.mr,
+        );
     }
 
     /// Covered stream write — the "every Nth in a stream" form of
@@ -637,11 +742,11 @@ impl ThreadCtx {
             self.node.arena().store_words(addr, words, false);
             return;
         }
-        self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+        self.note_unfenced_write(target.node, addr, words.len() as u64, "ctx::write_covered");
         let peer = target.node;
         let verb = Verb::Write { remote: addr, data: Payload::from_words(words) };
         if self.signal_every <= 1 {
-            let _ = self.issue(peer, verb);
+            let _ = self.issue_mr(peer, verb, target.mr);
             return;
         }
         let signal = {
@@ -656,9 +761,9 @@ impl ThreadCtx {
             }
         };
         if signal {
-            let _ = self.issue(peer, verb); // key dropped; pollers drain the CQE
+            let _ = self.issue_mr(peer, verb, target.mr); // key dropped; pollers drain the CQE
         } else {
-            self.issue_unsignaled(peer, verb);
+            self.issue_unsignaled_mr(peer, verb, target.mr);
         }
     }
 
@@ -681,9 +786,10 @@ impl ThreadCtx {
             }
             return (AckKey::ready(), buf);
         }
-        let key = self.issue(
+        let key = self.issue_mr(
             src.node,
             Verb::Read { remote: addr, local: buf.addr, len: len as u32 },
+            src.mr,
         );
         (key, buf)
     }
@@ -705,7 +811,7 @@ impl ThreadCtx {
             return self.guard_from(&buf);
         }
         if src.node != self.me {
-            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+            self.clear_unfenced(src.node);
         }
         self.guard_from(&buf)
     }
@@ -722,7 +828,7 @@ impl ThreadCtx {
             )));
         }
         if src.node != self.me {
-            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+            self.clear_unfenced(src.node);
         }
         Ok(self.guard_from(&buf))
     }
@@ -759,9 +865,13 @@ impl ThreadCtx {
             return self.node.arena().fetch_add(addr, add);
         }
         let buf = self.mem_ref(1);
-        let key = self.issue(target.node, Verb::FetchAdd { remote: addr, add, local: buf.addr });
+        let key = self.issue_mr(
+            target.node,
+            Verb::FetchAdd { remote: addr, add, local: buf.addr },
+            target.mr,
+        );
         self.wait(&key);
-        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        self.clear_unfenced(target.node);
         buf.load(0)
     }
 
@@ -772,12 +882,13 @@ impl ThreadCtx {
             return self.node.arena().compare_swap(addr, expect, swap);
         }
         let buf = self.mem_ref(1);
-        let key = self.issue(
+        let key = self.issue_mr(
             target.node,
             Verb::CompareSwap { remote: addr, expect, swap, local: buf.addr },
+            target.mr,
         );
         self.wait(&key);
-        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        self.clear_unfenced(target.node);
         buf.load(0)
     }
 
@@ -791,7 +902,11 @@ impl ThreadCtx {
             return Ok(self.node.arena().fetch_add(addr, add));
         }
         let buf = self.mem_ref(1);
-        let key = self.issue(target.node, Verb::FetchAdd { remote: addr, add, local: buf.addr });
+        let key = self.issue_mr(
+            target.node,
+            Verb::FetchAdd { remote: addr, add, local: buf.addr },
+            target.mr,
+        );
         self.wait(&key);
         if key.failed() {
             return Err(crate::Error::PeerFailed(format!(
@@ -799,7 +914,7 @@ impl ThreadCtx {
                 target.node
             )));
         }
-        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        self.clear_unfenced(target.node);
         Ok(buf.load(0))
     }
 
@@ -817,9 +932,10 @@ impl ThreadCtx {
             return Ok(self.node.arena().compare_swap(addr, expect, swap));
         }
         let buf = self.mem_ref(1);
-        let key = self.issue(
+        let key = self.issue_mr(
             target.node,
             Verb::CompareSwap { remote: addr, expect, swap, local: buf.addr },
+            target.mr,
         );
         self.wait(&key);
         if key.failed() {
@@ -828,7 +944,7 @@ impl ThreadCtx {
                 target.node
             )));
         }
-        self.shared.unfenced[target.node as usize].store(0, Ordering::Relaxed);
+        self.clear_unfenced(target.node);
         Ok(buf.load(0))
     }
 
@@ -847,7 +963,7 @@ impl ThreadCtx {
             if self.shared.unfenced[peer].load(Ordering::Relaxed) == 0 {
                 continue;
             }
-            self.shared.unfenced[peer].store(0, Ordering::Relaxed);
+            self.clear_unfenced(peer as crate::fabric::NodeId);
             key.union(self.issue(peer as crate::fabric::NodeId, Verb::ZeroLenRead));
         }
         key
@@ -901,35 +1017,46 @@ impl ThreadCtx {
 
     pub fn read1_nic(&self, src: Region, off: u64) -> u64 {
         let buf = self.mem_ref(1);
-        let key =
-            self.issue(src.node, Verb::Read { remote: src.at(off), local: buf.addr(), len: 1 });
+        let key = self.issue_mr(
+            src.node,
+            Verb::Read { remote: src.at(off), local: buf.addr(), len: 1 },
+            src.mr,
+        );
         self.wait(&key);
         if src.node != self.me {
-            self.shared.unfenced[src.node as usize].store(0, Ordering::Relaxed);
+            self.clear_unfenced(src.node);
         }
         buf.load(0)
     }
 
     pub fn write1_nic(&self, target: Region, off: u64, word: u64) -> AckKey {
         if target.node != self.me {
-            self.shared.unfenced[target.node as usize].fetch_add(1, Ordering::Relaxed);
+            self.note_unfenced_write(target.node, target.at(off), 1, "ctx::write1_nic");
         }
-        self.issue(target.node, Verb::Write { remote: target.at(off), data: Payload::one(word) })
+        self.issue_mr(
+            target.node,
+            Verb::Write { remote: target.at(off), data: Payload::one(word) },
+            target.mr,
+        )
     }
 
     pub fn fetch_add_nic(&self, target: Region, off: u64, add: u64) -> u64 {
         let buf = self.mem_ref(1);
-        let key = self
-            .issue(target.node, Verb::FetchAdd { remote: target.at(off), add, local: buf.addr() });
+        let key = self.issue_mr(
+            target.node,
+            Verb::FetchAdd { remote: target.at(off), add, local: buf.addr() },
+            target.mr,
+        );
         self.wait(&key);
         buf.load(0)
     }
 
     pub fn compare_swap_nic(&self, target: Region, off: u64, expect: u64, swap: u64) -> u64 {
         let buf = self.mem_ref(1);
-        let key = self.issue(
+        let key = self.issue_mr(
             target.node,
             Verb::CompareSwap { remote: target.at(off), expect, swap, local: buf.addr() },
+            target.mr,
         );
         self.wait(&key);
         buf.load(0)

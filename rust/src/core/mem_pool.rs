@@ -18,7 +18,7 @@
 //! like the kvstore's old single-class free list.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::fabric::{NodeFabric, Region};
 
@@ -192,6 +192,15 @@ impl SlabGeometry {
     }
 }
 
+/// A slot lifecycle transition, published to the observer installed via
+/// [`SlabAllocator::set_observer`]. The race checker treats these as the
+/// birth/death events of rule (b)'s use-after-free tracking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlabEvent {
+    Alloc { slot: u32 },
+    Free { slot: u32 },
+}
+
 /// Node-local allocation state over a [`SlabGeometry`]: one free list
 /// per class plus in-use accounting, so leaks and double frees are
 /// detectable (and a post-run audit can prove every slot is accounted
@@ -199,6 +208,11 @@ impl SlabGeometry {
 pub struct SlabAllocator {
     geo: SlabGeometry,
     inner: Mutex<SlabInner>,
+    /// Lifecycle observer (the race checker's slot birth/death feed).
+    /// Fired **while holding `inner`**, so a concurrent re-alloc of the
+    /// slot cannot be observed before the free that released it — the
+    /// checker never calls back into the allocator, so no deadlock.
+    observer: OnceLock<Box<dyn Fn(SlabEvent) + Send + Sync>>,
 }
 
 struct SlabInner {
@@ -220,11 +234,17 @@ impl SlabAllocator {
                 in_use: vec![false; geo.total_slots()],
                 outstanding: 0,
             }),
+            observer: OnceLock::new(),
         }
     }
 
     pub fn geometry(&self) -> &SlabGeometry {
         &self.geo
+    }
+
+    /// Install the lifecycle observer (once; later calls are ignored).
+    pub fn set_observer(&self, obs: Box<dyn Fn(SlabEvent) + Send + Sync>) {
+        let _ = self.observer.set(obs);
     }
 
     /// Allocate a slot for a `len`-word value: the smallest fitting
@@ -241,6 +261,9 @@ impl SlabAllocator {
                 debug_assert!(!inner.in_use[ord], "allocated slot was marked in use");
                 inner.in_use[ord] = true;
                 inner.outstanding += 1;
+                if let Some(obs) = self.observer.get() {
+                    obs(SlabEvent::Alloc { slot });
+                }
                 return Some(slot);
             }
         }
@@ -262,6 +285,9 @@ impl SlabAllocator {
         inner.in_use[ord] = false;
         inner.outstanding -= 1;
         inner.free[class].push(index);
+        if let Some(obs) = self.observer.get() {
+            obs(SlabEvent::Free { slot });
+        }
     }
 
     /// Slots currently allocated.

@@ -13,7 +13,9 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use std::sync::RwLock;
+use std::sync::{OnceLock, RwLock};
+
+use crate::analysis::{AccessKind, CheckerHandle};
 
 use super::NodeId;
 
@@ -58,6 +60,11 @@ pub struct Arena {
     device: Box<[AtomicU64]>,
     host_next: AtomicUsize,
     device_next: AtomicUsize,
+    /// Race-checker hook ([`crate::analysis`]), installed once by
+    /// `Cluster::new` when checking is enabled. Never set — the default
+    /// — every access pays exactly one `OnceLock` load and a dead
+    /// branch (pinned by `bench::micro::check_hook_overhead`).
+    check: OnceLock<CheckerHandle>,
 }
 
 impl Arena {
@@ -70,6 +77,26 @@ impl Arena {
             device: mk(device_words),
             host_next: AtomicUsize::new(0),
             device_next: AtomicUsize::new(0),
+            check: OnceLock::new(),
+        }
+    }
+
+    /// Install the race checker (at cluster construction; `node` is the
+    /// arena's owner, the default attribution for unguarded accesses).
+    pub fn set_checker(&self, node: NodeId, checker: std::sync::Arc<crate::analysis::Checker>) {
+        let _ = self.check.set(CheckerHandle { node, checker });
+    }
+
+    /// The installed checker handle, if any.
+    #[inline]
+    pub fn checker(&self) -> Option<&CheckerHandle> {
+        self.check.get()
+    }
+
+    #[inline]
+    fn hook(&self, addr: u64, len: u64, kind: AccessKind, site: &'static str) {
+        if let Some(h) = self.check.get() {
+            h.checker.on_access(h.node, addr, len, kind, site);
         }
     }
 
@@ -108,21 +135,25 @@ impl Arena {
     /// synchronization; happens-before edges come from completion queues.
     #[inline]
     pub fn load(&self, addr: u64) -> u64 {
+        self.hook(addr, 1, AccessKind::Read, "arena::load");
         self.word(addr).load(Ordering::Relaxed)
     }
 
     #[inline]
     pub fn store(&self, addr: u64, val: u64) {
+        self.hook(addr, 1, AccessKind::Write, "arena::store");
         self.word(addr).store(val, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn fetch_add(&self, addr: u64, add: u64) -> u64 {
+        self.hook(addr, 1, AccessKind::Atomic, "arena::fetch_add");
         self.word(addr).fetch_add(add, Ordering::AcqRel)
     }
 
     #[inline]
     pub fn compare_swap(&self, addr: u64, expect: u64, swap: u64) -> u64 {
+        self.hook(addr, 1, AccessKind::Atomic, "arena::compare_swap");
         match self.word(addr).compare_exchange(expect, swap, Ordering::AcqRel, Ordering::Acquire) {
             Ok(v) => v,
             Err(v) => v,
@@ -158,6 +189,10 @@ pub struct MrInfo {
     pub base: u64,
     pub len: u64,
     pub device: bool,
+    /// Cleared by [`MrTable::invalidate`]: a deregistered MR's id stays
+    /// allocated (so in-flight WQEs carrying it are detectably stale —
+    /// see the NIC engine's execution-time check) but covers nothing.
+    pub valid: bool,
 }
 
 /// Per-node table of registered memory regions.
@@ -175,19 +210,30 @@ impl MrTable {
 
     pub fn register(&self, base: u64, len: u64, device: bool) -> u32 {
         let mut mrs = self.mrs.write().unwrap();
-        mrs.push(MrInfo { base, len, device });
+        mrs.push(MrInfo { base, len, device, valid: true });
         (mrs.len() - 1) as u32
+    }
+
+    /// Invalidate (deregister) MR `mr`: its id stays allocated but no
+    /// longer covers anything, so a stale in-flight WQE stamped with it
+    /// is caught at DMA-execution time even if the same words were
+    /// since re-registered under a fresh id.
+    pub fn invalidate(&self, mr: u32) {
+        if let Some(m) = self.mrs.write().unwrap().get_mut(mr as usize) {
+            m.valid = false;
+        }
     }
 
     pub fn count(&self) -> usize {
         self.mrs.read().unwrap().len()
     }
 
-    /// Check that `[addr, addr+len)` lies within MR `mr`.
+    /// Check that `[addr, addr+len)` lies within MR `mr` (and `mr` is
+    /// still valid).
     pub fn contains(&self, mr: u32, addr: u64, len: u64) -> bool {
         let mrs = self.mrs.read().unwrap();
         match mrs.get(mr as usize) {
-            Some(m) => addr >= m.base && addr + len <= m.base + m.len,
+            Some(m) => m.valid && addr >= m.base && addr + len <= m.base + m.len,
             None => false,
         }
     }
@@ -196,7 +242,7 @@ impl MrTable {
     /// (used when the issuer did not carry an rkey).
     pub fn covers(&self, addr: u64, len: u64) -> bool {
         let mrs = self.mrs.read().unwrap();
-        mrs.iter().any(|m| addr >= m.base && addr + len <= m.base + m.len)
+        mrs.iter().any(|m| m.valid && addr >= m.base && addr + len <= m.base + m.len)
     }
 }
 
@@ -255,6 +301,37 @@ mod tests {
         assert!(t.covers(149, 1));
         assert!(!t.covers(150, 1));
         assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn invalidated_mr_covers_nothing() {
+        let t = MrTable::new();
+        let a = t.register(100, 50, false);
+        let b = t.register(200, 10, false);
+        t.invalidate(a);
+        assert!(!t.contains(a, 100, 50));
+        assert!(!t.covers(120, 1), "no fallback coverage through a dead MR");
+        assert!(t.contains(b, 200, 10));
+        assert_eq!(t.count(), 2, "the id stays allocated");
+    }
+
+    /// The re-register window (PR-9 satellite): invalidating an MR and
+    /// registering the same range again must NOT revive the stale rkey
+    /// — a WQE still carrying the old id stays dead even though the
+    /// range itself is covered again (the StaleMr diagnostic's exact
+    /// precondition). Only the fresh id reaches the range.
+    #[test]
+    fn reregistered_range_does_not_revive_the_stale_rkey() {
+        let t = MrTable::new();
+        let old = t.register(100, 50, false);
+        t.invalidate(old);
+        let fresh = t.register(100, 50, false);
+        assert_ne!(old, fresh, "re-registration must mint a new id");
+        assert!(!t.contains(old, 100, 50), "the stale rkey stays dead");
+        assert!(!t.contains(old, 120, 1), "even for sub-ranges of the reborn range");
+        assert!(t.contains(fresh, 100, 50));
+        assert!(t.covers(120, 1), "keyless coverage returns with the fresh MR");
+        assert_eq!(t.count(), 2, "the dead id stays allocated; no id reuse");
     }
 
     #[test]

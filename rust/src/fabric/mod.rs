@@ -226,6 +226,13 @@ pub struct FabricConfig {
     /// behavior; the ablation baseline). Overridable per process via
     /// `LOCO_SIGNAL_EVERY`.
     pub signal_every: u32,
+    /// Happens-before race/consistency checking ([`crate::analysis`]):
+    /// `Auto` — the default — runs the full checker under
+    /// `DeliveryMode::Sim` and nothing elsewhere, so threaded
+    /// benchmarks pay only a dead `OnceLock` branch per arena access
+    /// (`bench::micro::check_hook_overhead` pins it). Overridable per
+    /// process via `LOCO_CHECK` (`off`, `structural`, `full`).
+    pub check_races: crate::analysis::CheckMode,
 }
 
 /// Default selective-signaling chain length (overridable with
@@ -239,6 +246,16 @@ fn default_signal_every() -> u32 {
     match parse_signal_every(std::env::var("LOCO_SIGNAL_EVERY").ok().as_deref()) {
         Ok(n) => n,
         Err(e) => panic!("invalid LOCO_SIGNAL_EVERY: {e}"),
+    }
+}
+
+/// Default checker mode (overridable with `LOCO_CHECK`). Validated the
+/// same way as `LOCO_SIGNAL_EVERY`: garbage aborts with a diagnosis
+/// instead of silently running unchecked.
+fn default_check_mode() -> crate::analysis::CheckMode {
+    match crate::analysis::parse_check_mode(std::env::var("LOCO_CHECK").ok().as_deref()) {
+        Ok(m) => m,
+        Err(e) => panic!("invalid LOCO_CHECK: {e}"),
     }
 }
 
@@ -270,6 +287,7 @@ impl FabricConfig {
             seed: 0x10c0,
             faults: None,
             signal_every: default_signal_every(),
+            check_races: default_check_mode(),
         }
     }
 
@@ -284,6 +302,7 @@ impl FabricConfig {
             seed: 0x10c0,
             faults: None,
             signal_every: default_signal_every(),
+            check_races: default_check_mode(),
         }
     }
 
@@ -320,6 +339,13 @@ impl FabricConfig {
     /// delay / reorder / duplication to act on).
     pub fn with_faults(mut self, plan: FaultPlan) -> Self {
         self.faults = Some(plan);
+        self
+    }
+
+    /// Override the race-checker mode (see [`crate::analysis`]); wins
+    /// over the `LOCO_CHECK` default.
+    pub fn with_check(mut self, mode: crate::analysis::CheckMode) -> Self {
+        self.check_races = mode;
         self
     }
 }

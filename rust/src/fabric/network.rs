@@ -173,6 +173,18 @@ impl NodeFabric {
         self.mrs.count()
     }
 
+    /// Deregister MR `mr`: its id stays allocated but covers nothing, so
+    /// an in-flight WQE stamped with it is caught at DMA-execution time
+    /// as a `StaleMr` checker diagnostic (see [`crate::analysis`]).
+    pub fn invalidate_mr(&self, mr: u32) {
+        self.mrs.invalidate(mr);
+    }
+
+    /// Engine-side: does MR `mr` still cover `[addr, addr+len)`?
+    pub(super) fn mr_contains(&self, mr: u32, addr: u64, len: u64) -> bool {
+        self.mrs.contains(mr, addr, len)
+    }
+
     /// Protection check (simulated NIC fault on violation).
     pub fn check_covered(&self, addr: u64, len: u64) {
         if len == 0 {
@@ -231,6 +243,11 @@ pub struct Cluster {
     nodes: Vec<Arc<NodeFabric>>,
     shutdown: Arc<AtomicBool>,
     engines: Mutex<Vec<JoinHandle<()>>>,
+    /// Happens-before race checker ([`crate::analysis`]); `Some` when
+    /// `cfg.check_races` resolves to a level for this delivery mode
+    /// (default: full checking under `Sim`, off otherwise). The same
+    /// instance is installed into every node's arena.
+    checker: Option<Arc<crate::analysis::Checker>>,
 }
 
 impl Cluster {
@@ -245,6 +262,15 @@ impl Cluster {
         };
         let nodes: Vec<Arc<NodeFabric>> =
             (0..n).map(|i| Arc::new(NodeFabric::new(i as NodeId, &cfg))).collect();
+        let checker = cfg
+            .check_races
+            .resolve(cfg.delivery == DeliveryMode::Sim)
+            .map(|level| Arc::new(crate::analysis::Checker::new(n, level, cfg.seed)));
+        if let Some(chk) = &checker {
+            for node in &nodes {
+                node.arena.set_checker(node.id, chk.clone());
+            }
+        }
         let shutdown = Arc::new(AtomicBool::new(false));
         let cluster = Arc::new(Cluster {
             cfg: cfg.clone(),
@@ -252,6 +278,7 @@ impl Cluster {
             nodes: nodes.clone(),
             shutdown: shutdown.clone(),
             engines: Mutex::new(Vec::new()),
+            checker,
         });
         if cfg.delivery == DeliveryMode::Threaded {
             let mut engines = cluster.engines.lock().unwrap();
@@ -275,6 +302,24 @@ impl Cluster {
 
     pub fn config(&self) -> &FabricConfig {
         &self.cfg
+    }
+
+    /// The installed race checker, if checking resolved on for this
+    /// cluster (see [`FabricConfig::check_races`]).
+    pub fn checker(&self) -> Option<&Arc<crate::analysis::Checker>> {
+        self.checker.as_ref()
+    }
+
+    /// Diagnostics the race checker has accumulated (empty when checking
+    /// is off). Green runs assert this is empty at teardown.
+    pub fn diagnostics(&self) -> Vec<crate::analysis::Diagnostic> {
+        self.checker.as_ref().map(|c| c.diagnostics()).unwrap_or_default()
+    }
+
+    /// Drain accumulated checker diagnostics (for tests that expect a
+    /// specific diagnostic and then want a clean slate).
+    pub fn take_diagnostics(&self) -> Vec<crate::analysis::Diagnostic> {
+        self.checker.as_ref().map(|c| c.take_diagnostics()).unwrap_or_default()
     }
 
     /// Build one steppable engine core per node (sim mode). The
@@ -311,8 +356,11 @@ impl Cluster {
 
     /// Post a work request on a QP. In threaded mode this enqueues for the
     /// NIC engine; in inline mode the verb executes synchronously.
-    pub fn post(&self, qpid: QpId, wqe: Wqe) {
+    pub fn post(&self, qpid: QpId, mut wqe: Wqe) {
         let node = &self.nodes[qpid.node as usize];
+        if let Some(chk) = &self.checker {
+            wqe.hb = chk.on_post(qpid.node);
+        }
         node.ops_posted.fetch_add(1, Ordering::Relaxed);
         node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         if wqe.inline {
@@ -358,8 +406,9 @@ impl Cluster {
         node.ops_posted.fetch_add(list.len() as u64, Ordering::Relaxed);
         node.doorbells_rung.fetch_add(1, Ordering::Relaxed);
         let qp = node.qp(qpid);
+        let mut wqes = list.into_wqes();
         if !node.is_alive() {
-            for wqe in list.into_wqes() {
+            for wqe in wqes {
                 if wqe.signaled {
                     qp.take_chain_error();
                     node.cq().post(Cqe::failed(wqe.wr_id, qpid));
@@ -369,18 +418,26 @@ impl Cluster {
             }
             return;
         }
-        for wqe in list.wqes() {
+        for wqe in &wqes {
             if wqe.inline {
                 node.wqes_inlined.fetch_add(1, Ordering::Relaxed);
             }
         }
+        if let Some(chk) = &self.checker {
+            // One clock snapshot covers the whole batch: list entries
+            // share the doorbell and the poster's program order.
+            let hb = chk.on_post(qpid.node);
+            for wqe in &mut wqes {
+                wqe.hb = hb;
+            }
+        }
         match self.cfg.delivery {
             DeliveryMode::Threaded | DeliveryMode::Sim => {
-                qp.submit_list(list.into_wqes());
+                qp.submit_list(wqes);
                 node.ring();
             }
             DeliveryMode::Inline => {
-                for wqe in list.into_wqes() {
+                for wqe in wqes {
                     nic::execute_inline(&self.nodes, &self.cfg, qpid.node, &qp, wqe);
                 }
             }
@@ -550,7 +607,11 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        // Release pairs with the engine loop's Acquire load: the engine
+        // must observe every pre-shutdown submission before it exits
+        // (the Relaxed/Relaxed pair here was a genuine lint finding —
+        // see scripts/loco_lint.py, rule `relaxed-publish`).
+        self.shutdown.store(true, Ordering::Release);
         for h in self.engines.lock().unwrap().drain(..) {
             let _ = h.join();
         }

@@ -52,6 +52,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::analysis::ActorGuard;
 use crate::util::queue::Queue;
 use crate::util::rng::Rng;
 
@@ -74,6 +75,9 @@ struct Placement {
     target: NodeId,
     remote: u64,
     data: Box<[u64]>,
+    /// Race-checker provenance: wr_id of the WRITE this placement
+    /// belongs to (the posting node is the owning QP's node).
+    wr_id: u64,
 }
 
 /// Per-QP engine state (owned exclusively by the engine thread).
@@ -230,10 +234,11 @@ fn wqe_nic_extra(lat: &super::LatencyModel, wqe: &Wqe) -> u64 {
 /// Flush all pending placements of one QP (in order), regardless of lag.
 /// Placements whose target crash-stopped are dropped — the data never
 /// reached the remote memory.
-fn flush_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, chaotic: bool) {
+fn flush_placements(nodes: &[Arc<NodeFabric>], from: NodeId, q: &mut QpState, chaotic: bool) {
     while let Some(p) = q.placements.pop_front() {
         let tgt = &nodes[p.target as usize];
         if tgt.is_alive() {
+            let _dma = tgt.arena().checker().map(|_| ActorGuard::dma(from, from, p.wr_id));
             tgt.arena().store_words(p.remote, &p.data, chaotic);
         }
     }
@@ -241,11 +246,18 @@ fn flush_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, chaotic: bool) {
 
 /// Retire placements whose lag has elapsed (in order; stop at the first
 /// not-yet-due entry so same-QP placement order is preserved).
-fn retire_due_placements(nodes: &[Arc<NodeFabric>], q: &mut QpState, now: u64, chaotic: bool) {
+fn retire_due_placements(
+    nodes: &[Arc<NodeFabric>],
+    from: NodeId,
+    q: &mut QpState,
+    now: u64,
+    chaotic: bool,
+) {
     while q.placements.front().map(|p| p.due_ns <= now).unwrap_or(false) {
         let p = q.placements.pop_front().unwrap();
         let tgt = &nodes[p.target as usize];
         if tgt.is_alive() {
+            let _dma = tgt.arena().checker().map(|_| ActorGuard::dma(from, from, p.wr_id));
             tgt.arena().store_words(p.remote, &p.data, chaotic);
         }
     }
@@ -292,6 +304,43 @@ fn execute_arrival(
             Cqe::ok(fl.wqe.wr_id, qpid)
         }
     };
+    let chk = src.arena().checker();
+    if let Some(h) = chk {
+        h.checker.on_execute(from, fl.wqe.hb, fl.wqe.signaled);
+        // DMA-execution-time MR check: a WQE stamped with an rkey whose
+        // MR was invalidated while it sat in flight must not write
+        // through whatever registration now covers those words. The
+        // effect is skipped and the completion still delivered — the
+        // diagnostic is the observable outcome. (Raw posts carry no
+        // rkey and keep the legacy whole-table `check_covered` panic.)
+        if let Some(mr) = fl.wqe.rkey {
+            let span = match &fl.wqe.verb {
+                Verb::Write { remote, data } => Some((*remote, data.len() as u64)),
+                Verb::Read { remote, len, .. } => Some((*remote, *len as u64)),
+                Verb::FetchAdd { remote, .. } | Verb::CompareSwap { remote, .. } => {
+                    Some((*remote, 1))
+                }
+                Verb::ZeroLenRead | Verb::Send { .. } => None,
+            };
+            if let Some((addr, len)) = span {
+                if !nodes[target as usize].mr_contains(mr, addr, len) {
+                    h.checker.on_stale_mr(
+                        target,
+                        addr,
+                        len,
+                        from,
+                        fl.wqe.wr_id,
+                        mr,
+                        "nic::execute_arrival",
+                    );
+                    if fl.wqe.signaled {
+                        deliver_cqe(src, fx, faults, rng, completion());
+                    }
+                    return;
+                }
+            }
+        }
+    }
     match &fl.wqe.verb {
         Verb::Write { remote, data } => {
             if cfg.validate_access {
@@ -308,9 +357,10 @@ fn execute_arrival(
                 target,
                 remote: *remote,
                 data: data.as_slice().to_vec().into_boxed_slice(),
+                wr_id: fl.wqe.wr_id,
             });
             if lag == 0 {
-                retire_due_placements(nodes, q, now, cfg.chaotic_placement);
+                retire_due_placements(nodes, from, q, now, cfg.chaotic_placement);
             }
             if fl.wqe.signaled {
                 deliver_cqe(src, fx, faults, rng, completion());
@@ -318,9 +368,12 @@ fn execute_arrival(
         }
         _ => {
             if fl.wqe.verb.is_flushing() {
-                flush_placements(nodes, q, cfg.chaotic_placement);
+                flush_placements(nodes, from, q, cfg.chaotic_placement);
             }
-            execute_effect(nodes, from, &fl.wqe, target, cfg.validate_access);
+            {
+                let _dma = chk.map(|_| ActorGuard::dma(from, from, fl.wqe.wr_id));
+                execute_effect(nodes, from, &fl.wqe, target, cfg.validate_access);
+            }
             if fl.wqe.signaled {
                 deliver_cqe(src, fx, faults, rng, completion());
             }
@@ -438,6 +491,9 @@ impl EngineCore {
                 }
             }
         } else {
+            // Mark this thread as the node's NIC engine for the checker
+            // (per-WQE DMA guards nest inside and restore this on drop).
+            let _engine = me.arena().checker().map(|_| ActorGuard::engine(node));
             for (idx, q) in qps.iter_mut().enumerate() {
                 // 1. stamp new submissions
                 let now = clock.now_ns();
@@ -527,7 +583,7 @@ impl EngineCore {
                     }
                 }
                 // 3. retire due placements
-                retire_due_placements(nodes, q, clock.now_ns(), cfg.chaotic_placement);
+                retire_due_placements(nodes, node, q, clock.now_ns(), cfg.chaotic_placement);
             }
             // Scheduled crash-stop (fault injection): this node dies once
             // its engine has executed the planned op count — either from
@@ -654,7 +710,7 @@ pub(super) fn engine_loop(
                 continue;
             }
             idle_iters += 1;
-            if shutdown.load(Ordering::Relaxed) && core.fully_idle() {
+            if shutdown.load(Ordering::Acquire) && core.fully_idle() {
                 break;
             }
             // Nothing ran this pass: sleep until the next deadline (due
@@ -700,16 +756,48 @@ pub(super) fn execute_inline(
         }
         return;
     }
-    match &wqe.verb {
-        Verb::Write { remote, data } => {
-            if cfg.validate_access {
-                nodes[peer as usize].check_covered(*remote, data.len() as u64);
+    let chk = src.arena().checker();
+    if let Some(h) = chk {
+        h.checker.on_execute(from, wqe.hb, wqe.signaled);
+        if let Some(mr) = wqe.rkey {
+            let span = match &wqe.verb {
+                Verb::Write { remote, data } => Some((*remote, data.len() as u64)),
+                Verb::Read { remote, len, .. } => Some((*remote, *len as u64)),
+                Verb::FetchAdd { remote, .. } | Verb::CompareSwap { remote, .. } => {
+                    Some((*remote, 1))
+                }
+                Verb::ZeroLenRead | Verb::Send { .. } => None,
+            };
+            if let Some((addr, len)) = span {
+                if !nodes[peer as usize].mr_contains(mr, addr, len) {
+                    h.checker.on_stale_mr(peer, addr, len, from, wqe.wr_id, mr, "nic::execute_inline");
+                    if wqe.signaled {
+                        if qp.take_chain_error() {
+                            src.cq().post(Cqe::failed(wqe.wr_id, qpid));
+                        } else {
+                            src.cq().post(Cqe::ok(wqe.wr_id, qpid));
+                        }
+                    }
+                    return;
+                }
             }
-            nodes[peer as usize]
-                .arena()
-                .store_words(*remote, data.as_slice(), cfg.chaotic_placement);
         }
-        _ => execute_effect(nodes, from, &wqe, peer, cfg.validate_access),
+    }
+    {
+        // Inline mode: the posting application thread performs the
+        // remote effect itself (synchronous, program-ordered).
+        let _g = chk.map(|_| ActorGuard::app(from, wqe.wr_id));
+        match &wqe.verb {
+            Verb::Write { remote, data } => {
+                if cfg.validate_access {
+                    nodes[peer as usize].check_covered(*remote, data.len() as u64);
+                }
+                nodes[peer as usize]
+                    .arena()
+                    .store_words(*remote, data.as_slice(), cfg.chaotic_placement);
+            }
+            _ => execute_effect(nodes, from, &wqe, peer, cfg.validate_access),
+        }
     }
     if wqe.signaled {
         // An earlier unsignaled WQE of this chain failed: the covering

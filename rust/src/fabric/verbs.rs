@@ -115,12 +115,30 @@ pub struct Wqe {
     /// (callers decide; `ThreadCtx::write`/`write_many` pick it
     /// automatically).
     pub inline: bool,
+    /// The target MR this request was issued against (`None` for raw
+    /// posts, which fall back to the target's whole-table `covers`
+    /// check). Carrying the rkey moves MR validation to DMA-execution
+    /// time: a WQE whose region was invalidated/re-registered while in
+    /// flight is caught as a `StaleMr` checker diagnostic instead of
+    /// silently writing through the new registration.
+    pub rkey: Option<u32>,
+    /// Happens-before token stamped at post time by the race checker
+    /// (`0` = none): index+1 of the poster's clock snapshot, joined
+    /// into the engine clock at execution. See [`crate::analysis`].
+    pub hb: u32,
 }
 
 impl Wqe {
     /// A signaled, non-inline work request (the default shape).
     pub fn new(wr_id: u64, verb: Verb) -> Wqe {
-        Wqe { wr_id, verb, signaled: true, inline: false }
+        Wqe { wr_id, verb, signaled: true, inline: false, rkey: None, hb: 0 }
+    }
+
+    /// Stamp the target MR the request was issued against (enables the
+    /// DMA-execution-time stale-MR check).
+    pub fn with_rkey(mut self, mr: u32) -> Wqe {
+        self.rkey = Some(mr);
+        self
     }
 
     /// Mark unsignaled: no CQE on completion.

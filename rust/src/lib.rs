@@ -37,6 +37,7 @@
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
+pub mod analysis;
 pub mod apps;
 pub mod baselines;
 pub mod bench;

@@ -27,6 +27,11 @@
 //! machine. The seed falls back to `LOCO_SIM_SEED` when `--seed` is
 //! absent.
 //!
+//! `loco check [--schedules N] [--rounds K] [--seed S]` runs seeded
+//! simulated kvstore schedules with the happens-before race checker
+//! live (see `loco::analysis`) and exits nonzero on any diagnostic —
+//! the CLI face of the `LOCO_CHECK` knob.
+//!
 //! `loco join [--nodes N] [--keys K] [--replicas R] [--seed S]` demos
 //! elastic membership under the simulator: a designated spare joins a
 //! live cluster, the epoch-versioned ownership table assigns it key
@@ -320,6 +325,47 @@ fn main() {
                 mgrs[0].membership().epoch()
             );
         }
+        "check" => {
+            // Race & consistency checking (see `loco::analysis`): run
+            // seeded randomized kvstore schedules under the
+            // deterministic simulator with the happens-before checker
+            // live, print every diagnostic, and exit nonzero if any
+            // schedule reports one. The trace hash printed per schedule
+            // is the replay anchor — rerun with the same seed to
+            // reproduce a finding bit-identically.
+            let rounds = arg_u64(&args, "--rounds", 40) as usize;
+            let schedules = arg_u64(&args, "--schedules", 8);
+            let base_seed = arg_u64(&args, "--seed", 0x10C0);
+            let mut findings = 0usize;
+            for s in 0..schedules {
+                let seed = base_seed.wrapping_add(s);
+                let ops = loco::testkit::gen_model_ops(seed, 4, rounds);
+                let run = loco::testkit::run_model_schedule(&ops, seed, None);
+                for d in &run.diagnostics {
+                    println!("{d}");
+                }
+                findings += run.diagnostics.len();
+                if run.diagnostics.is_empty() {
+                    if let Some(f) = &run.failure {
+                        // A reference-model divergence with no checker
+                        // diagnostic is still a finding.
+                        println!("[ModelDivergence] seed {seed}: {f}");
+                        findings += 1;
+                    }
+                }
+                println!(
+                    "check: seed {seed}: {} ops, trace {:#018x}, {} diagnostic(s)",
+                    ops.len(),
+                    run.trace,
+                    run.diagnostics.len()
+                );
+            }
+            if findings > 0 {
+                eprintln!("check: {findings} finding(s) across {schedules} schedules");
+                std::process::exit(1);
+            }
+            println!("check: {schedules} schedules clean (checker live, zero diagnostics)");
+        }
         "micro" => {
             let lat = scale.latency.clone();
             let mut t = Table::new(&["ablation", "value"]);
@@ -350,6 +396,9 @@ fn main() {
             for (l, v) in micro::slab_class1_overhead(lat.clone(), 16, 60) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
+            for (l, v) in micro::check_hook_overhead(lat.clone(), 16, 60) {
+                t.row(&[l, format!("{v:.1} Kops/s")]);
+            }
             for (l, v) in micro::cached_get_zipfian(lat, 4096, 5000) {
                 t.row(&[l, format!("{v:.1} Kops/s")]);
             }
@@ -358,12 +407,13 @@ fn main() {
         _ => {
             println!(
                 "loco — Library of Channel Objects (paper reproduction)\n\
-                 usage: loco <barrier|fig4|fig5|fig7|micro|sim|join> [flags]\n\
+                 usage: loco <barrier|fig4|fig5|fig7|micro|sim|join|check> [flags]\n\
                  write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
                  op routing (fig5/chaos workloads): --routing onesided|ship|adaptive (or LOCO_ROUTING)\n\
                  replication (fig5/join): --replicas R (or LOCO_REPLICAS; --replicate = 2)\n\
                  sim: --nodes N --rounds K --seed S (or LOCO_SIM_SEED)\n\
                  join: --nodes N --keys K --replicas R --seed S (elastic membership demo)\n\
+                 check: --schedules N --rounds K --seed S (race checker over seeded sim schedules)\n\
                  see `examples/` for the end-to-end drivers"
             );
         }

@@ -217,6 +217,15 @@ pub fn active() -> bool {
     CURRENT.with(|c| c.borrow().is_some())
 }
 
+/// The installed scheduler's *core* trace hash (decisions + clock
+/// advances only), or `None` outside sim. Checker diagnostics stamp
+/// this for replay. Unlike [`SimExecutor::trace_hash`] it does NOT fold
+/// the per-engine traces in: diagnostics often fire from inside
+/// `EngineCore::step`, while the engines `RefCell` is mutably borrowed.
+pub fn current_trace_hash() -> Option<u64> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|core| core.trace.get()))
+}
+
 /// Register a cooperative service with the installed scheduler. Called
 /// by components that would spawn a thread in threaded mode (manager
 /// poll/ctrl loops, kvstore tracker). Panics if no [`SimExecutor`] is

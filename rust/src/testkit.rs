@@ -59,9 +59,12 @@ pub fn cluster_with_managers(n: usize, cfg: FabricConfig) -> (Arc<Cluster>, Vec<
 /// `wait_ready`.
 pub fn kv_cluster(
     n: usize,
-    fabric: FabricConfig,
+    mut fabric: FabricConfig,
     cfg: KvConfig,
 ) -> (Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
+    if let Some(mode) = cfg.check_races {
+        fabric = fabric.with_check(mode);
+    }
     let (cluster, mgrs) = cluster_with_managers(n, fabric);
     let kvs: Vec<Arc<KvStore>> = mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
     for kv in &kvs {
@@ -96,7 +99,16 @@ pub fn chaos_plan(seed: u64) -> FaultPlan {
 pub fn chaos_fabric(seed: u64) -> FabricConfig {
     let mut lat = LatencyModel::fast_sim();
     lat.placement_lag_ns = 3000;
-    let mut cfg = FabricConfig::threaded(lat).chaotic().with_faults(chaos_plan(seed));
+    let mut cfg = FabricConfig::threaded(lat)
+        .chaotic()
+        .with_faults(chaos_plan(seed))
+        // The chaos tier runs the checker's structural level: the
+        // free/alloc and publication rules stay armed (they are cheap
+        // and phase-accurate under real threads) while the vector-clock
+        // machinery — meaningless without deterministic delivery — is
+        // off. `LOCO_CHECK` still wins for one-off investigations via
+        // KvConfig::check_races = None paths.
+        .with_check(crate::analysis::CheckMode::Structural);
     cfg.seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
     cfg.signal_every = match seed % 4 {
         0 => 1, // legacy: every WQE signaled
@@ -137,7 +149,11 @@ pub fn sim_kv_cluster(
     seed: u64,
     cfg: KvConfig,
 ) -> (crate::sim::SimExecutor, Arc<Cluster>, Vec<Arc<Manager>>, Vec<Arc<KvStore>>) {
-    let cluster = Cluster::new(n, sim_fabric(seed));
+    let mut fabric = sim_fabric(seed);
+    if let Some(mode) = cfg.check_races {
+        fabric = fabric.with_check(mode);
+    }
+    let cluster = Cluster::new(n, fabric);
     let sim = crate::sim::SimExecutor::install(&cluster);
     let mgrs: Vec<Arc<Manager>> =
         (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
@@ -198,6 +214,9 @@ pub fn model_kv_config() -> KvConfig {
         // for the mutation cfgs are calibrated on the one-sided path;
         // the routing tier exercises Ship/Adaptive explicitly.
         routing: RouteMode::OneSided,
+        // Sim delivery resolves `Auto` to full happens-before checking:
+        // every model schedule runs under the race checker.
+        check_races: None,
     }
 }
 
@@ -211,6 +230,11 @@ pub struct ModelRun {
     /// Every scheduler choice drawn during the run (replayable via the
     /// `plan` argument of [`run_model_schedule`]).
     pub choices: Vec<u32>,
+    /// Everything the race checker reported during the run. On a
+    /// non-mutant build a non-empty list is itself folded into
+    /// `failure`; the mutation smoke-checks instead assert the expected
+    /// diagnostics are HERE (detected and localized).
+    pub diagnostics: Vec<crate::analysis::Diagnostic>,
 }
 
 /// Cluster shape of the model tier: [`MODEL_NODES`] nodes total, of
@@ -337,7 +361,23 @@ pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) ->
         }
     }
     sim.settle();
-    ModelRun { failure, trace: sim.trace_hash(), choices: sim.choices() }
+    let diagnostics = cluster.take_diagnostics();
+    // The checker is live on every model schedule: a green run (no
+    // model divergence) with diagnostics is a failure in its own right
+    // — EXCEPT under the mutation smoke-check cfgs, whose entire point
+    // is that the planted bug surfaces here for the tests to assert on.
+    let mutant_build = cfg!(loco_mutant)
+        || cfg!(loco_mutant_epoch)
+        || cfg!(loco_mutant_fence)
+        || cfg!(loco_mutant_uaf);
+    if failure.is_none() && !mutant_build && !diagnostics.is_empty() {
+        failure = Some(format!(
+            "race checker: {} diagnostic(s) on a green run; first: {}",
+            diagnostics.len(),
+            diagnostics[0]
+        ));
+    }
+    ModelRun { failure, trace: sim.trace_hash(), choices: sim.choices(), diagnostics }
 }
 
 /// Generate a random schedule: seed half the keyspace, then `rounds`
@@ -517,6 +557,20 @@ pub fn save_counterexample(ce: &CounterExample) -> std::path::PathBuf {
     text.push_str(&format!("plan ({} choices): {:?}\n", ce.plan.len(), ce.plan));
     let _ = std::fs::write(&path, text);
     path
+}
+
+/// Assert the cluster's race checker saw nothing. The chaos and
+/// integration tiers call this at quiescence — a no-op for clusters
+/// built without checking. Consumes the diagnostics, so repeated phase
+/// checks attribute reports to the phase that produced them.
+pub fn assert_checker_clean(cluster: &Cluster, context: &str) {
+    let diags = cluster.take_diagnostics();
+    assert!(
+        diags.is_empty(),
+        "{context}: race checker reported {} diagnostic(s); first: {}",
+        diags.len(),
+        diags[0]
+    );
 }
 
 // ---- scripted membership scenarios ------------------------------------

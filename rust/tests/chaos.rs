@@ -202,6 +202,21 @@ fn now(clock: &Instant) -> u64 {
     clock.elapsed().as_nanos() as u64
 }
 
+/// Every chaos schedule runs with the race checker live (structural
+/// level — use-after-free, free-while-valid, publication-before-fence,
+/// stale MRs — wired by `chaos_fabric`) and must end clean. Skipped on
+/// mutation-smoke builds, where diagnostics are the expected outcome
+/// and the model tier owns the assertions.
+fn checker_clean(cluster: &Cluster, context: &str) {
+    let mutant = cfg!(loco_mutant)
+        || cfg!(loco_mutant_epoch)
+        || cfg!(loco_mutant_fence)
+        || cfg!(loco_mutant_uaf);
+    if !mutant {
+        loco::testkit::assert_checker_clean(cluster, context);
+    }
+}
+
 /// One seeded schedule: two nodes, contended random ops over a small
 /// key set with **mixed value sizes** (1..=8 words — updates cross
 /// class boundaries, so relocations race the fault schedule), full
@@ -228,7 +243,7 @@ fn run_seeded_history(seed: u64) {
         },
         ..Default::default()
     };
-    let (_cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
+    let (cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
     let clock = Arc::new(Instant::now());
     let uid = Arc::new(AtomicU64::new(1));
 
@@ -299,6 +314,7 @@ fn run_seeded_history(seed: u64) {
         kv.slab_audit()
             .unwrap_or_else(|e| panic!("chaos seed {seed}: node {i} slab audit: {e}"));
     }
+    checker_clean(&cluster, &format!("chaos seed {seed}"));
 }
 
 /// The seeded fault matrix: ≥200 schedules of delay/reorder/dup/flap,
@@ -521,6 +537,7 @@ fn run_ship_crash_schedule(seed: u64) {
     );
     check_history(KEYS, &all, &format!("ship crash seed {seed} (dead node {dead})"));
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+    checker_clean(&cluster, &format!("ship crash seed {seed}"));
 }
 
 /// The applied-then-crashed schedule: the victim dies on an
@@ -659,6 +676,7 @@ fn run_armed_ship_crash(delta: u64) -> (u64, u64) {
     let fin = a.unwrap_or_else(|| panic!("delta {delta}: key lost after the armed crash"));
     events.push(Event::Read { key: KEY, val: Some(read_tag(fin, KEY)), inv, resp });
     check_history(1, &events, &format!("armed ship crash delta {delta}"));
+    checker_clean(&cluster, &format!("armed ship crash delta {delta}"));
 
     (cluster.ship_fallbacks(), cluster.ship_fallbacks_confirmed())
 }
@@ -765,6 +783,7 @@ fn run_mid_op_crash_schedule(seed: u64, reloc_heavy: bool) {
     // Pinned keys completed before the crash window ⇒ they must all
     // survive the re-home byte-identically.
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+    checker_clean(&cluster, &format!("mid-op crash seed {seed}"));
 }
 
 /// Double fault, variant 1 (`replicas = 3`): the home crash-stops, and
@@ -884,6 +903,7 @@ fn run_double_fault_schedule(seed: u64) {
         &format!("double-fault seed {seed} (home {dead}, then backup {backup})"),
     );
     verify_no_acked_loss(seed, &cluster, &mgrs, &kvs);
+    checker_clean(&cluster, &format!("double-fault seed {seed}"));
 }
 
 /// Double fault, variant 2 (`replicas = 3`): the origin home
@@ -1050,6 +1070,7 @@ fn run_migration_crash_schedule(seed: u64) {
             );
         }
     }
+    checker_clean(&cluster, &format!("migration-crash seed {seed}"));
 }
 
 fn run_crash_schedule(seed: u64) {
@@ -1142,6 +1163,7 @@ fn run_crash_schedule(seed: u64) {
     // The whole history — through the crash and re-home — linearizes.
     check_history(KEYS, &all, &format!("crash seed {seed} (dead node {dead})"));
     verify_rehome_and_convergence(seed, dead, backup, &mgrs, &kvs);
+    checker_clean(&cluster, &format!("crash seed {seed}"));
 }
 
 // ---- simulated replay -------------------------------------------------
@@ -1199,6 +1221,9 @@ fn sim_history_hash(seed: u64) -> u64 {
         }
     }
     sim.settle();
+    // The sim replay runs the checker at Full level; a replayed crash
+    // schedule must stay diagnostic-free.
+    checker_clean(&cluster, &format!("sim replay seed {seed}"));
     loco::util::fnv64(&hist) ^ sim.trace_hash()
 }
 

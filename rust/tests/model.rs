@@ -14,8 +14,10 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use loco::analysis::{DiagKind, RegionKind};
 use loco::apps::kvstore::KvConfig;
 use loco::channels::{AtomicVar, Sst, TicketLock};
+use loco::core::ctx::FenceScope;
 use loco::core::heat::RouteMode;
 use loco::core::manager::Manager;
 use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
@@ -341,4 +343,189 @@ fn model_config_exercises_all_mechanisms() {
     assert!(cfg.read_cache_bytes > 0, "model tier must test the invalidation protocol");
     assert!(cfg.coalesce_invals);
     assert!(cfg.value_words >= 2, "model values must take the checksummed multi-word path");
+}
+
+// ---- race & consistency checking --------------------------------------
+
+fn any_mutant() -> bool {
+    cfg!(loco_mutant)
+        || cfg!(loco_mutant_epoch)
+        || cfg!(loco_mutant_fence)
+        || cfg!(loco_mutant_uaf)
+}
+
+/// The checker is on by default in sim mode (`CheckMode::Auto` resolves
+/// to `Full`) and a healthy random schedule — inserts, updates, crashes,
+/// joins, recovery — produces zero diagnostics. `run_model_schedule`
+/// additionally folds any diagnostic into `failure`, so the whole model
+/// tier is checker-live, not just this test.
+#[test]
+fn checker_live_and_silent_on_green_schedules() {
+    let ops = gen_model_ops(0xC1EA, 4, 40);
+    let run = run_model_schedule(&ops, 0xC1EA, None);
+    if !any_mutant() {
+        assert_eq!(run.failure, None, "green schedule must pass the reference model");
+        assert!(
+            run.diagnostics.is_empty(),
+            "green schedule must produce zero checker diagnostics; first: {}",
+            run.diagnostics[0]
+        );
+    }
+}
+
+/// Mutation smoke-check for rule (c): `--cfg loco_mutant_fence` drops
+/// `write_value`'s covering fence, so the in-place update publishes
+/// (cache-invalidation broadcast) while its frame writes are still
+/// unplaced. The checker must detect it AND localize it: publication
+/// site in the kvstore broadcast path, outstanding write at
+/// `ctx::write_covered`. On a healthy build the identical workload must
+/// stay silent.
+#[test]
+fn fence_mutant_is_caught_and_localized() {
+    let (sim, cluster, mgrs, kvs) = sim_kv_cluster(2, 0xFE2CE, model_kv_config());
+    let ctx1 = mgrs[1].ctx();
+    // A key homed on the mutating node: the whole update is local (no
+    // adaptive op-shipping), which isolates the diagnostic to
+    // write_value's own fence chain.
+    let k = (0..64u64).find(|k| kvs[1].home_of(*k) == 1).expect("hash leaves some local key");
+    assert!(kvs[1].insert(&ctx1, k, &[1, 2]).unwrap());
+    assert_eq!(kvs[1].try_update(&ctx1, k, &[3, 4]), Ok(true));
+    sim.settle();
+    let diags = cluster.take_diagnostics();
+    if cfg!(loco_mutant_fence) {
+        let d = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::PublicationBeforeFence)
+            .unwrap_or_else(|| panic!("fence mutant must be caught; got {diags:?}"));
+        assert!(
+            d.a.site == "kvstore::invalidate_updated" || d.a.site == "kvstore::send_tracker",
+            "diagnostic must localize the publication to the kvstore broadcast, got {}",
+            d.a.site
+        );
+        let b = d.b.as_ref().expect("diagnostic must carry the unfenced write site");
+        assert_eq!(
+            b.site, "ctx::write_covered",
+            "diagnostic must name the outstanding covered frame write"
+        );
+        assert_eq!(d.node, 1, "the unplaced write targets the updater's own frame region");
+    } else {
+        assert!(diags.is_empty(), "green build must stay silent; first: {}", diags[0]);
+    }
+}
+
+/// Mutation smoke-check for rule (b): `--cfg loco_mutant_uaf` retires a
+/// relocated key's old slot before unsetting its valid bit, then writes
+/// the unset into the already-freed range. The checker must catch both
+/// halves — `FreeWhileValid` (structural: a stale reader would still
+/// validate) and `UseAfterFree` (dynamic: a write landed in a dead
+/// range) — localized to the slab free site. A healthy build running
+/// the identical cross-class relocation must stay silent.
+#[test]
+fn uaf_mutant_is_caught_and_localized() {
+    let (sim, cluster, mgrs, kvs) = sim_kv_cluster(2, 0x0AF, model_kv_config());
+    let ctx0 = mgrs[0].ctx();
+    // Local-homed key, inserted small (class 0, cap 1 word) then grown
+    // past the class cap: `locked_update` must relocate, and the old
+    // slot is on the mutating node — the exact path the mutant breaks.
+    let k = (0..64u64).find(|k| kvs[0].home_of(*k) == 0).expect("hash leaves some local key");
+    assert!(kvs[0].insert(&ctx0, k, &[5]).unwrap());
+    assert_eq!(kvs[0].try_update(&ctx0, k, &[6, 7]), Ok(true));
+    assert_eq!(kvs[0].get(&ctx0, k), Some(vec![6, 7]));
+    sim.settle();
+    let diags = cluster.take_diagnostics();
+    if cfg!(loco_mutant_uaf) {
+        let fwv = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::FreeWhileValid)
+            .unwrap_or_else(|| panic!("uaf mutant: free-while-valid must be caught; got {diags:?}"));
+        assert_eq!(fwv.a.site, "kvstore::slab_free", "must localize to the slab retire");
+        assert_eq!(fwv.node, 0, "the old frame lives on the mutating node");
+        let uaf = diags
+            .iter()
+            .find(|d| d.kind == DiagKind::UseAfterFree)
+            .unwrap_or_else(|| panic!("uaf mutant: dead-range write must be caught; got {diags:?}"));
+        let b = uaf.b.as_ref().expect("use-after-free must name the free site");
+        assert_eq!(b.site, "kvstore::slab_free");
+    } else {
+        assert!(diags.is_empty(), "green relocation must stay silent; first: {}", diags[0]);
+    }
+}
+
+/// Deterministic minimal two-node race: node 1 writes a declared
+/// `Checked` word through the NIC, node 0 then writes it directly with
+/// no happens-before edge to that DMA. Exactly that word must be
+/// reported, with the DMA side carrying WQE provenance. The adjacent
+/// word, declared as a torn-tolerant `Frames` region, takes the same
+/// unordered writes without a diagnostic (rule (a)'s protocol-register
+/// exemption).
+#[test]
+fn two_node_race_reproducer_reports_the_exact_word() {
+    let (sim, cluster, mgrs, _kvs) = sim_kv_cluster(2, 0xACE, model_kv_config());
+    let chk = cluster.checker().expect("sim clusters check by default").clone();
+    let region = cluster.node(0).register_mr(2, false);
+    chk.declare_region(0, region.base, 1, RegionKind::Checked);
+    chk.declare_region(0, region.base + 1, 1, RegionKind::Frames { fenced_publication: false });
+
+    let ctx1 = mgrs[1].ctx();
+    let ctx0 = mgrs[0].ctx();
+    // The CQE orders the DMA against node 1's app actor only: node 0
+    // never observes an ack covering it, so its store races.
+    ctx1.write(region, 0, &[7]).wait();
+    ctx0.local_store(region, 0, 9);
+    // Same shape on the torn-tolerant word: exempt by declaration.
+    ctx1.write(region, 1, &[7]).wait();
+    ctx0.local_store(region, 1, 9);
+    sim.settle();
+
+    let diags = cluster.take_diagnostics();
+    let races: Vec<_> = diags.iter().filter(|d| d.kind == DiagKind::RaceOnCheckedWord).collect();
+    assert_eq!(races.len(), 1, "exactly one racy word; got {diags:?}");
+    let d = races[0];
+    assert_eq!(d.node, 0);
+    assert_eq!(d.addr, region.base, "the torn-frame word must not be reported");
+    assert_eq!(d.len, 1);
+    let b = d.b.as_ref().expect("the prior racing access must be reported");
+    assert_eq!(
+        b.wqe.map(|(n, _)| n),
+        Some(1),
+        "the DMA side must carry WQE provenance from node 1"
+    );
+    assert!(d.trace_hash.is_some(), "sim diagnostics must carry the replay trace hash");
+}
+
+/// The MR-bounds check happens at DMA-execution time, not post time: a
+/// WQE posted against a live MR that is deregistered (and its words
+/// re-registered under a fresh id) before the NIC executes it must be
+/// reported as `StaleMr`, its effect skipped, and the QP chain must
+/// keep completing (the completion is delivered, not wedged).
+#[test]
+fn stale_mr_window_is_caught_at_dma_execution_time() {
+    let (sim, cluster, mgrs, _kvs) = sim_kv_cluster(2, 0x51A1E, model_kv_config());
+    let target = cluster.node(0).register_mr(4, false);
+    let ctx1 = mgrs[1].ctx();
+    // Post without pumping: in sim mode nothing executes until the
+    // scheduler steps, so the deregistration below lands mid-flight.
+    ctx1.write_unsignaled(target, 0, &[0xAB]);
+    cluster.node(0).invalidate_mr(target.mr);
+    // Re-register fresh words (the classic re-register window): the new
+    // id must not resurrect the in-flight WQE's stale rkey.
+    let _fresh = cluster.node(0).register_mr(4, false);
+    // The fence's flushing read drains the chain: it must complete even
+    // though the stale write's effect was dropped.
+    ctx1.try_fence(FenceScope::Pair(0)).expect("completion must still be delivered");
+    sim.settle();
+
+    let diags = cluster.take_diagnostics();
+    let d = diags
+        .iter()
+        .find(|d| d.kind == DiagKind::StaleMr)
+        .unwrap_or_else(|| panic!("stale-MR window must be diagnosed; got {diags:?}"));
+    assert_eq!(d.node, 0);
+    assert_eq!(d.addr, target.base);
+    assert_eq!(d.a.wqe.map(|(n, _)| n), Some(1), "provenance: posted by node 1");
+    assert_eq!(
+        cluster.node(0).arena().load(target.base),
+        0,
+        "the stale WQE's effect must be skipped, not applied"
+    );
 }

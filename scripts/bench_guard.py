@@ -60,6 +60,12 @@ PINNED_BARS = [
         "scalar get loop ×16, faults: inert plan",
     ),
     (
+        "PR-9: batched multi_get with race-checker hooks disabled",
+        "micro_check_hooks",
+        "multi_get batch=16, check: off",
+        "scalar get loop ×16, check: off",
+    ),
+    (
         "PR-4: class-1 fast path through the 8-class slab",
         "micro_slab_class1",
         "multi_get batch=16, 128-word classes",

@@ -1,0 +1,214 @@
+#!/usr/bin/env python3
+"""LOCO's custom lint pass (PR-9 satellite).
+
+Fast, dependency-free source checks for the concurrency idioms the
+happens-before checker (rust/src/analysis/) cannot see statically —
+the ones that have bitten this codebase or its upstream inspirations:
+
+  raw-sleep          `std::thread::sleep(..)` in library code. Sleeping
+                     is never a synchronization primitive: it hides
+                     lost-wakeup bugs behind timing and wrecks the
+                     simulated clock. Poll through `util::Backoff`
+                     (which escalates spin -> yield -> park and stays
+                     visible to the checker's progress accounting).
+
+  bare-spin          `std::hint::spin_loop()` outside `util::Backoff`.
+                     Unbounded spinning starves the single-threaded sim
+                     scheduler and burns CI cores; `Backoff` bounds it.
+
+  relaxed-publish    `.store(.., Ordering::Relaxed)` — a Relaxed store
+                     is invisible to every other thread's acquire loads,
+                     so using one to *publish* cross-thread data is a
+                     data race in disguise. Counters, hint flags and
+                     sim-arena words are legitimate; each such file is
+                     allowlisted WITH ITS REASON in
+                     scripts/lint_allowlist.txt, so a new Relaxed store
+                     forces a written justification.
+
+  completion-unwrap  `.unwrap()` on a fabric completion path (a line
+                     that polls/receives CQEs or completion messages).
+                     Completions carry fault-injected errors by design
+                     (FaultPlan flushes QPs with errors); unwrap turns a
+                     modeled fault into a test-harness panic. Match the
+                     error instead.
+
+Scope: `rust/src/**/*.rs` and `rust/benches/**/*.rs`. Trailing
+`#[cfg(test)] mod tests` regions are exempt (tests may sleep to
+provoke schedules), as are `//` comments. Violations that are sound
+engineering carry an entry in scripts/lint_allowlist.txt:
+
+    <rule> <path> -- <reason>
+
+Usage:
+    loco_lint.py [--root REPO_ROOT]     # lint the tree; exit 1 on findings
+    loco_lint.py --self-test            # seed one violation per rule in a
+                                        # temp tree and require the lint
+                                        # to catch all of them
+"""
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+
+RULES = [
+    (
+        "raw-sleep",
+        re.compile(r"\bthread::sleep\s*\("),
+        "raw thread::sleep in library code — poll via util::Backoff",
+    ),
+    (
+        "bare-spin",
+        re.compile(r"\bspin_loop\s*\(\s*\)"),
+        "bare spin_loop outside util::Backoff — bound the spin",
+    ),
+    (
+        "relaxed-publish",
+        re.compile(r"\.store\s*\([^;]*Ordering::Relaxed"),
+        "Relaxed store publishing cross-thread state — use Release or "
+        "allowlist the file with a reason",
+    ),
+    (
+        "completion-unwrap",
+        re.compile(
+            r"(poll_cq|completion|\bcqe\b|recv_timeout|try_recv|\brecv\s*\()"
+            r"[^;]*\.unwrap\s*\(\)"
+        ),
+        "unwrap() on a fabric completion path — completions carry "
+        "fault-injected errors; match them",
+    ),
+]
+
+CFG_TEST = re.compile(r"^\s*#\[cfg\(test\)\]\s*$")
+MOD_DECL = re.compile(r"^\s*(pub\s+)?mod\s+\w+")
+COMMENT = re.compile(r"//.*$")
+
+
+def load_allowlist(path):
+    allow = set()
+    if not os.path.exists(path):
+        return allow
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            fields = line.split("--", 1)[0].split()
+            if len(fields) >= 2:
+                allow.add((fields[0], fields[1].replace("\\", "/")))
+    return allow
+
+
+def lint_file(relpath, lines, allow):
+    findings = []
+    in_tests = False
+    for i, raw in enumerate(lines):
+        if not in_tests and CFG_TEST.match(raw):
+            # The repo convention puts `#[cfg(test)] mod tests` last in
+            # the file; everything after it is test code and exempt.
+            nxt = next((l for l in lines[i + 1 : i + 3] if l.strip()), "")
+            if MOD_DECL.match(nxt):
+                in_tests = True
+        if in_tests:
+            continue
+        code = COMMENT.sub("", raw)
+        for rule, pat, why in RULES:
+            if pat.search(code) and (rule, relpath) not in allow:
+                findings.append((relpath, i + 1, rule, why, raw.strip()))
+    return findings
+
+
+def lint_tree(root, allow):
+    findings = []
+    for sub in ("rust/src", "rust/benches"):
+        top = os.path.join(root, sub)
+        for dirpath, _, names in sorted(os.walk(top)):
+            for name in sorted(names):
+                if not name.endswith(".rs"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, root).replace("\\", "/")
+                with open(path, encoding="utf-8") as f:
+                    findings += lint_file(rel, f.read().splitlines(), allow)
+    return findings
+
+
+SEEDED = """\
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn wait_for_peer(flag: &AtomicU64) {
+    while flag.load(Ordering::Acquire) == 0 {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        std::hint::spin_loop();
+    }
+}
+
+pub fn publish(cell: &AtomicU64, v: u64) {
+    cell.store(v, Ordering::Relaxed);
+}
+
+pub fn drain(rx: &std::sync::mpsc::Receiver<u64>) -> u64 {
+    rx.recv().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_sleep() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+"""
+
+
+def self_test():
+    with tempfile.TemporaryDirectory() as tmp:
+        src = os.path.join(tmp, "rust", "src")
+        os.makedirs(os.path.join(tmp, "rust", "benches"))
+        os.makedirs(src)
+        with open(os.path.join(src, "seeded.rs"), "w", encoding="utf-8") as f:
+            f.write(SEEDED)
+        findings = lint_tree(tmp, allow=set())
+        hit = {rule for (_, _, rule, _, _) in findings}
+        want = {rule for (rule, _, _) in RULES}
+        missed = want - hit
+        if missed:
+            print(f"loco_lint self-test: FAIL — rules never fired: {sorted(missed)}")
+            return 1
+        test_mod_hits = [f for f in findings if f[1] > 18]
+        if test_mod_hits:
+            print(f"loco_lint self-test: FAIL — fired inside #[cfg(test)]: {test_mod_hits}")
+            return 1
+        print(f"loco_lint self-test: OK — all {len(want)} rules fire on the "
+              f"seeded file ({len(findings)} finding(s)) and stay quiet in tests")
+        return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(os.path.dirname(__file__), ".."),
+                    help="repo root (default: the script's parent)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="seed violations in a temp tree; fail unless caught")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+
+    root = os.path.abspath(args.root)
+    allow = load_allowlist(os.path.join(root, "scripts", "lint_allowlist.txt"))
+    findings = lint_tree(root, allow)
+    for path, line, rule, why, text in findings:
+        print(f"{path}:{line}: [{rule}] {why}\n    {text}")
+    if findings:
+        print(f"\nloco_lint: {len(findings)} finding(s). Fix them, or — when the "
+              f"idiom is deliberate — add '<rule> <path> -- <reason>' to "
+              f"scripts/lint_allowlist.txt.")
+        return 1
+    print("loco_lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
