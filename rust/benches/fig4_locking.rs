@@ -6,7 +6,9 @@
 //! locks to windows and pays the NIC MR-cache penalty on its 341
 //! windows, while LOCO pools regions into huge pages.
 
-use loco::bench::fig4::{delegated_lock_mops, single_lock_mops, txn_mops, LockSystem};
+use loco::bench::fig4::{
+    delegated_lock_mops, engine_scaling_run, single_lock_mops, txn_mops, LockSystem,
+};
 use loco::bench::{geomean_runs, BenchJson, Scale};
 use loco::metrics::Table;
 
@@ -52,6 +54,28 @@ fn main() {
             nodes.to_string(),
             "-".into(),
             format!("{del:.4}"),
+            "-".into(),
+        ]);
+    }
+    // Per-node parallelism (PR-10): YCSB-A under the engine-occupancy
+    // model, one vs four striped NIC engines per node. The pinned axis
+    // is *structural* throughput — WQEs retired by the engine lanes —
+    // because local-memory ops complete at host speed regardless of
+    // engine count and would dilute an app-Mops ratio; app Mops rides
+    // along for context. The in-tree acceptance test enforces the same
+    // E4/E1 >= 1.5x floor on every `cargo test` run.
+    for engines in [1u32, 4] {
+        let (app, lanes) =
+            engine_scaling_run(engines, 2, 8, 1024, scale.secs, scale.latency.clone());
+        let wqes: u64 = lanes.iter().flatten().sum();
+        let structural = wqes as f64 / scale.secs / 1e6;
+        json.add("fig4_engine_scaling", &format!("E{engines} structural"), structural);
+        json.add("fig4_engine_scaling", &format!("E{engines} app"), app);
+        t.row(&[
+            format!("engines x{engines}"),
+            "2".into(),
+            "-".into(),
+            format!("{structural:.4}"),
             "-".into(),
         ]);
     }

@@ -162,11 +162,15 @@ pub enum AccessKind {
 
 /// Which logical actor is touching memory right now. Engine attribution
 /// is thread-local (the NIC engine sets a guard around `step`); an
-/// unguarded access is the arena owner's application actor.
+/// unguarded access is the arena owner's application actor. Engines
+/// carry their stripe lane: with `engines_per_node = E` a node's QPs
+/// are striped across `E` engine actors `engine(n, 0..E)`, each an
+/// independent timeline (HB edges stay per-QP, so per-QP FIFO keeps
+/// ordering exactly as in the serial model).
 #[derive(Clone, Copy, Debug)]
 enum Who {
     App(NodeId),
-    Engine(NodeId),
+    Engine(NodeId, u32),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -194,16 +198,29 @@ impl ActorGuard {
     }
 
     /// The NIC engine of `node` is running (threaded engine loop or a
-    /// sim `EngineCore::step`).
+    /// sim `EngineCore::step`). Lane 0 — the serial single-engine
+    /// configuration; striped engines use [`ActorGuard::engine_lane`].
     pub fn engine(node: NodeId) -> ActorGuard {
-        Self::install(ActorCtx { who: Who::Engine(node), wqe: None })
+        Self::engine_lane(node, 0)
+    }
+
+    /// Engine `lane` of `node` is running (one stripe of the node's
+    /// QPs when `engines_per_node > 1`).
+    pub fn engine_lane(node: NodeId, lane: u32) -> ActorGuard {
+        Self::install(ActorCtx { who: Who::Engine(node, lane), wqe: None })
     }
 
     /// The NIC engine of `engine` is executing (or placing) the WQE
     /// `wr_id` posted by `src` — arena accesses in scope carry that
-    /// provenance into diagnostics.
+    /// provenance into diagnostics. Inherits the stripe lane from an
+    /// enclosing engine guard (DMA scopes nest inside the engine's
+    /// step scope), lane 0 when there is none.
     pub fn dma(engine: NodeId, src: NodeId, wr_id: u64) -> ActorGuard {
-        Self::install(ActorCtx { who: Who::Engine(engine), wqe: Some((src, wr_id)) })
+        let lane = match ACTOR.with(|a| a.get()) {
+            Some(ActorCtx { who: Who::Engine(e, lane), .. }) if e == engine => lane,
+            _ => 0,
+        };
+        Self::install(ActorCtx { who: Who::Engine(engine, lane), wqe: Some((src, wr_id)) })
     }
 
     /// Inline-mode execution: the posting application thread itself is
@@ -373,6 +390,9 @@ struct State {
 /// whose arena-access fast path never takes it — see `on_access`).
 pub struct Checker {
     n: usize,
+    /// Engine stripes per node (`FabricConfig::engines_per_node`): the
+    /// actor set is `n` app actors followed by `n * epn` engine actors.
+    epn: usize,
     level: CheckLevel,
     seed: u64,
     /// Lock-free count of live dead-ranges: the `Structural` write fast
@@ -382,11 +402,22 @@ pub struct Checker {
 }
 
 impl Checker {
+    /// Single-engine-per-node checker (the serial seed actor model).
     pub fn new(n: usize, level: CheckLevel, seed: u64) -> Checker {
-        let actors = 2 * n;
+        Self::new_striped(n, 1, level, seed)
+    }
+
+    /// Checker for a cluster running `epn` striped NIC engines per
+    /// node: the engine actor set widens from `engine(n)` to
+    /// `engine(n, e)`, one vector-clock timeline per stripe. At
+    /// `epn = 1` this is exactly [`Checker::new`].
+    pub fn new_striped(n: usize, epn: usize, level: CheckLevel, seed: u64) -> Checker {
+        assert!(epn >= 1, "a node needs at least one engine actor");
+        let actors = n + n * epn;
         let full = level == CheckLevel::Full;
         Checker {
             n,
+            epn,
             level,
             seed,
             dead_count: AtomicU64::new(0),
@@ -416,16 +447,35 @@ impl Checker {
         node
     }
 
-    fn engine(&self, node: NodeId) -> u32 {
+    fn engine_lane(&self, node: NodeId, lane: u32) -> u32 {
         debug_assert!((node as usize) < self.n);
-        self.n as u32 + node
+        debug_assert!((lane as usize) < self.epn);
+        (self.n + node as usize * self.epn + lane as usize) as u32
+    }
+
+    /// The engine actor the calling thread is attributed to for `node`:
+    /// the enclosing engine guard's lane, or lane 0 unguarded (callers
+    /// outside an engine scope, e.g. inline-mode drains).
+    fn current_engine(&self, node: NodeId) -> u32 {
+        match ACTOR.with(|a| a.get()) {
+            Some(ActorCtx { who: Who::Engine(e, lane), .. }) if e == node => {
+                self.engine_lane(node, lane)
+            }
+            _ => self.engine_lane(node, 0),
+        }
     }
 
     fn actor_name(&self, actor: u32) -> String {
         if (actor as usize) < self.n {
             format!("app({actor})")
         } else {
-            format!("engine({})", actor as usize - self.n)
+            let idx = actor as usize - self.n;
+            let (node, lane) = (idx / self.epn, idx % self.epn);
+            if self.epn == 1 {
+                format!("engine({node})")
+            } else {
+                format!("engine({node}, {lane})")
+            }
         }
     }
 
@@ -433,7 +483,7 @@ impl Checker {
     /// accessed arena's owning application actor.
     fn current_actor(&self, owner: NodeId) -> (u32, Option<(NodeId, u64)>) {
         match ACTOR.with(|a| a.get()) {
-            Some(ActorCtx { who: Who::Engine(e), wqe }) => (self.engine(e), wqe),
+            Some(ActorCtx { who: Who::Engine(e, lane), wqe }) => (self.engine_lane(e, lane), wqe),
             Some(ActorCtx { who: Who::App(a), wqe }) => (self.app(a), wqe),
             None => (self.app(owner), None),
         }
@@ -669,9 +719,9 @@ impl Checker {
         if self.level != CheckLevel::Full {
             return;
         }
+        let ea = self.current_engine(node);
         let mut st = self.state.lock().unwrap();
-        let e = self.engine(node) as usize;
-        let ea = self.engine(node);
+        let e = ea as usize;
         st.clocks[e].tick(ea);
         if hb != 0 {
             let tok = st.wqe_tokens[hb as usize - 1].clone();
@@ -877,9 +927,10 @@ impl Checker {
         mr: u32,
         site: &'static str,
     ) {
+        let actor = self.current_engine(src);
         let mut st = self.state.lock().unwrap();
         let a = AccessSite {
-            actor: self.actor_name(self.engine(src)),
+            actor: self.actor_name(actor),
             site,
             wqe: Some((src, wr_id)),
         };
@@ -1048,6 +1099,60 @@ mod tests {
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].kind, DiagKind::RaceOnCheckedWord);
         assert_eq!(d[0].b.as_ref().unwrap().wqe, Some((1, 43)), "provenance carried");
+    }
+
+    #[test]
+    fn striped_engine_lanes_are_independent_actors() {
+        // Two stripes of the same node are distinct timelines: their
+        // unordered writes to a Checked word race, and the diagnostic
+        // names them engine(n, e).
+        let c = Checker::new_striped(2, 2, CheckLevel::Full, 7);
+        c.declare_region(1, 100, 8, RegionKind::Checked);
+        {
+            let _g = ActorGuard::engine_lane(0, 0);
+            c.on_access(1, 100, 1, AccessKind::Write, "lane0 dma");
+        }
+        {
+            let _g = ActorGuard::engine_lane(0, 1);
+            c.on_access(1, 100, 1, AccessKind::Write, "lane1 dma");
+        }
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].kind, DiagKind::RaceOnCheckedWord);
+        assert_eq!(d[0].a.actor, "engine(0, 1)");
+        assert_eq!(d[0].b.as_ref().unwrap().actor, "engine(0, 0)");
+        // A dma guard nested in an engine scope inherits the lane, so
+        // per-lane program order holds within a stripe: same lane, no
+        // race against its own prior write.
+        {
+            let _eng = ActorGuard::engine_lane(0, 1);
+            let _dma = ActorGuard::dma(0, 0, 42);
+            c.on_access(1, 101, 1, AccessKind::Write, "stripe write");
+        }
+        {
+            let _eng = ActorGuard::engine_lane(0, 1);
+            let _dma = ActorGuard::dma(0, 0, 43);
+            c.on_access(1, 101, 1, AccessKind::Write, "stripe write 2");
+        }
+        assert!(c.take_diagnostics().is_empty(), "one lane is one program order");
+    }
+
+    #[test]
+    fn striped_checker_degenerates_to_serial_at_one_engine() {
+        // new() is new_striped(.., 1, ..): names and indexing unchanged.
+        let c = full(2);
+        {
+            let _g = ActorGuard::engine_lane(1, 0);
+            c.declare_region(1, 10, 1, RegionKind::Checked);
+            c.on_access(1, 10, 1, AccessKind::Write, "w");
+        }
+        {
+            let _g = ActorGuard::app(0, 1);
+            c.on_access(1, 10, 1, AccessKind::Write, "w2");
+        }
+        let d = c.take_diagnostics();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].b.as_ref().unwrap().actor, "engine(1)");
     }
 
     #[test]

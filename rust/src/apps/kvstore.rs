@@ -130,7 +130,7 @@
 //! [`KvStore::activate`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Duration;
 
@@ -277,6 +277,40 @@ fn encode_inval(chunk: &[u64]) -> Vec<u64> {
     msg
 }
 
+/// Tracker shard of `key`: the key's ownership **range** (already a
+/// stable pure hash, see [`Membership::range_of`]) folded onto the
+/// configured shard count. A key maps to the same shard forever, so
+/// every broadcast about it rides one FIFO ring and per-key apply order
+/// survives sharding.
+fn shard_of(key: u64, shards: usize) -> usize {
+    Membership::range_of(key) % shards
+}
+
+/// Ring name of `node`'s shard-`shard` tracker ring. Shard 0 keeps the
+/// pre-sharding name, so `tracker_shards = 1` is byte-for-byte
+/// compatible with existing channel names (and sim schedules).
+fn tracker_ring_name(name: &str, node: NodeId, shard: usize) -> String {
+    if shard == 0 {
+        sub_name(name, &format!("trk{node}"))
+    } else {
+        sub_name(name, &format!("trk{node}s{shard}"))
+    }
+}
+
+/// Group `keys` by tracker shard, preserving within-shard order.
+/// Returns only non-empty groups, in ascending shard order (so the
+/// send sequence is a pure function of the key set — determinism).
+fn group_by_shard(keys: &[u64], shards: usize) -> Vec<(usize, Vec<u64>)> {
+    if shards == 1 {
+        return vec![(0, keys.to_vec())];
+    }
+    let mut groups: Vec<Vec<u64>> = vec![Vec::new(); shards];
+    for &k in keys {
+        groups[shard_of(k, shards)].push(k);
+    }
+    groups.into_iter().enumerate().filter(|(_, g)| !g.is_empty()).collect()
+}
+
 #[derive(Clone, Debug)]
 pub struct KvConfig {
     /// Value slots per node **per size class** (the slab geometry gives
@@ -292,6 +326,18 @@ pub struct KvConfig {
     pub num_locks: usize,
     /// Tracker ring capacity in words.
     pub tracker_words: u64,
+    /// Key-range-sharded tracker rings per node (default 1 = the
+    /// pre-sharding single ring, byte-for-byte compatible; env
+    /// `LOCO_TRACKER_SHARDS` overrides the default). A key's broadcasts
+    /// always ride shard `range_of(key) % tracker_shards` of its
+    /// sender's rings, so per-key apply order is untouched while
+    /// hot-insert and coalesced-invalidation apply parallelize across
+    /// `tracker_shards` receiver threads per node. Membership and
+    /// end-of-recovery ops (`OP_JOIN`/`OP_ALIVE`/`OP_EPOCH`) broadcast
+    /// on **every** shard so they order after each shard's keyed
+    /// traffic. Part of the cluster-wide config contract (ring
+    /// endpoints must pair up).
+    pub tracker_shards: usize,
     /// Fence updates before lock release (§7.2; ablation knob).
     pub fence_updates: bool,
     /// Use the local-handover lock fast path.
@@ -362,6 +408,7 @@ impl Default for KvConfig {
             value_words: 1,
             num_locks: 256,
             tracker_words: 1 << 14,
+            tracker_shards: default_tracker_shards(),
             fence_updates: true,
             lock_handover: true,
             read_cache_bytes: 0,
@@ -370,6 +417,29 @@ impl Default for KvConfig {
             routing: RouteMode::from_env(),
             check_races: None,
         }
+    }
+}
+
+/// `LOCO_TRACKER_SHARDS` (unset = 1): default shard count for
+/// [`KvConfig::tracker_shards`].
+fn default_tracker_shards() -> usize {
+    match parse_tracker_shards(std::env::var("LOCO_TRACKER_SHARDS").ok().as_deref()) {
+        Ok(n) => n,
+        Err(e) => panic!("invalid LOCO_TRACKER_SHARDS: {e}"),
+    }
+}
+
+fn parse_tracker_shards(raw: Option<&str>) -> std::result::Result<usize, String> {
+    match raw {
+        None => Ok(1),
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(0) => Err(format!(
+                "{v:?} — a node needs at least one tracker ring; use 1 for the \
+                 unsharded (default) configuration"
+            )),
+            Ok(n) => Ok(n),
+            Err(_) => Err(format!("{v:?} is not a positive integer (expected 1, 2, 4, ...)")),
+        },
     }
 }
 
@@ -418,7 +488,17 @@ struct KvShared {
     /// epoch-versioned ownership table behind [`KvStore::home_of`] and
     /// [`KvStore::rebalance`].
     membership: Arc<Membership>,
-    tracker_ready: AtomicBool,
+    /// Shard count this store was built with (mirrors
+    /// [`KvConfig::tracker_shards`] for the free-standing apply path).
+    tracker_shards: usize,
+    /// `OP_EPOCH` markers seen per dead node, across shard rings: the
+    /// leftover purge must wait for **every** shard's marker — the
+    /// recovered-location broadcasts ride per-key shards, and only the
+    /// same shard's marker is FIFO-after them (see `apply_tracker`).
+    epoch_marks: Mutex<HashMap<NodeId, usize>>,
+    /// Count of shard receiver groups that finished their ring
+    /// handshakes; the store is ready at `tracker_shards`.
+    tracker_ready: AtomicUsize,
     shutdown: AtomicBool,
 }
 
@@ -426,6 +506,23 @@ impl KvShared {
     fn invalidate(&self, key: u64) {
         if let Some(cache) = &self.cache {
             cache.invalidate(key);
+        }
+    }
+
+    /// Record one shard ring's `OP_EPOCH` marker for `dead`; true when
+    /// this was the last outstanding shard — only then may the leftover
+    /// purge run (with one shard this is every marker, the pre-sharding
+    /// behavior). The counter resets on trigger so a revived slot's
+    /// next crash counts afresh.
+    fn note_epoch_mark(&self, dead: NodeId) -> bool {
+        let mut marks = self.epoch_marks.lock().unwrap();
+        let c = marks.entry(dead).or_insert(0);
+        *c += 1;
+        if *c == self.tracker_shards {
+            marks.remove(&dead);
+            true
+        } else {
+            false
         }
     }
 
@@ -511,9 +608,14 @@ pub struct KvStore {
     /// (see [`EpochGate`]).
     cache_gate: EpochGate,
     locks: Vec<TicketLock>,
-    tracker_tx: Mutex<RingSender>,
-    /// Coalesced-`OP_INVAL` group commit (see [`InvalCoalescer`]).
-    inval: InvalCoalescer,
+    /// Per-shard tracker rings (we broadcast; peers receive). Index =
+    /// shard; key ops ride `shard_of(key, len)`, membership/epoch ops
+    /// ride all of them.
+    tracker_tx: Vec<Mutex<RingSender>>,
+    /// Coalesced-`OP_INVAL` group commit, one per tracker shard (a
+    /// snapshot's union ack wait covers exactly one shard ring's
+    /// receivers; see [`InvalCoalescer`]).
+    inval: Vec<InvalCoalescer>,
     /// Fabric handle for the routing observability counters
     /// (`Cluster::ops_shipped` / `Cluster::route_flips`).
     cluster: Arc<Cluster>,
@@ -523,7 +625,7 @@ pub struct KvStore {
     /// Per-key heat/contention tracker driving Adaptive decisions.
     heat: HeatTracker,
     shared: Arc<KvShared>,
-    tracker_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    tracker_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     ship_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
@@ -551,6 +653,7 @@ impl KvStore {
             "replicas >= 2 requires fence_updates: backup frames must be placed \
              before a mutation returns, or recovery could resurrect stale values"
         );
+        assert!(cfg.tracker_shards >= 1, "a node needs at least one tracker ring");
 
         let ep = Endpoint::new(name, me, n, Expect::AllPeers);
         let data = mgr.pool().alloc_named(&region_name(name, "data"), geo.total_words(), false);
@@ -591,8 +694,14 @@ impl KvStore {
             })
             .collect();
 
-        // Our tracker (we broadcast; peers receive).
-        let tracker_tx = RingSender::new(mgr, &sub_name(name, &format!("trk{me}")), cfg.tracker_words);
+        // Our tracker rings (we broadcast; peers receive), one per
+        // shard: keys route by `shard_of`, so apply parallelizes across
+        // shards without giving up per-key order.
+        let tracker_tx: Vec<Mutex<RingSender>> = (0..cfg.tracker_shards)
+            .map(|s| {
+                Mutex::new(RingSender::new(mgr, &tracker_ring_name(name, me, s), cfg.tracker_words))
+            })
+            .collect();
 
         // Op-shipping ring (§ Op routing): one served request ring per
         // node, created only when routing is on — with `OneSided` the
@@ -615,7 +724,9 @@ impl KvStore {
             slot_counter: (0..geo.total_slots()).map(|_| AtomicU64::new(0)).collect(),
             reloc_origins: Mutex::new(HashMap::new()),
             membership: mgr.membership().clone(),
-            tracker_ready: AtomicBool::new(false),
+            tracker_shards: cfg.tracker_shards,
+            epoch_marks: Mutex::new(HashMap::new()),
+            tracker_ready: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         });
 
@@ -653,6 +764,7 @@ impl KvStore {
             }));
         }
 
+        let cfg_shards = cfg.tracker_shards;
         let kv = Arc::new(KvStore {
             cfg,
             me,
@@ -662,77 +774,92 @@ impl KvStore {
             backup_hosted,
             cache_gate: EpochGate::new(),
             locks,
-            tracker_tx: Mutex::new(tracker_tx),
-            inval: InvalCoalescer::new(),
+            tracker_tx,
+            inval: (0..cfg_shards).map(|_| InvalCoalescer::new()).collect(),
             cluster: mgr.cluster().clone(),
             ship,
             heat: HeatTracker::new(),
             shared: shared.clone(),
-            tracker_thread: Mutex::new(None),
+            tracker_threads: Mutex::new(Vec::new()),
             ship_thread: Mutex::new(None),
         });
 
-        // Dedicated tracker (§6): receives peers' tracker rings, applies
-        // index updates, then acknowledges. It holds only KvShared and a
+        // Dedicated tracker (§6): receives peers' tracker rings — one
+        // receiver group per shard — applies index updates, then
+        // acknowledges. Each group holds only KvShared and a
         // Weak<KvStore> (upgraded transiently for crash recovery) so
-        // Drop/shutdown can run. Under the deterministic simulator the
-        // tracker is a scheduler *service* (stepped non-blockingly by
-        // the single-threaded executor) instead of a thread.
-        let mgr2 = mgr.clone();
-        let shared2 = shared;
-        let weak = Arc::downgrade(&kv);
+        // Drop/shutdown can run. Under the deterministic simulator each
+        // shard's tracker is a scheduler *service* (stepped
+        // non-blockingly by the single-threaded executor) instead of a
+        // thread. Shard 0 owns the crash-recovery reaction (one driver
+        // per node, as before sharding); the other shards only drain
+        // and keep their apply-side dead screen fresh.
         let words = kv.cfg.tracker_words;
         if mgr.cluster().config().delivery == crate::fabric::DeliveryMode::Sim {
-            let ctx = mgr.ctx();
-            let mut rxs: Vec<(NodeId, RingReceiver)> = (0..n as NodeId)
-                .filter(|&p| p != me)
-                .map(|p| {
-                    let mut rx =
-                        RingReceiver::new(mgr, &sub_name(name, &format!("trk{p}")), words);
-                    rx.set_manual_ack();
-                    (p, rx)
-                })
-                .collect();
-            let mut known_dead: u64 = 0;
-            crate::sim::register_service(
-                format!("kv-tracker-{me}"),
-                Box::new(move || {
-                    if shared2.shutdown.load(Ordering::Relaxed) {
-                        return false;
-                    }
-                    if !shared2.tracker_ready.load(Ordering::Acquire) {
-                        // Setup phase: probe readiness without blocking —
-                        // the manager's ctrl service completes the
-                        // join/connect exchange between our steps.
-                        if rxs.iter().all(|(_, rx)| rx.is_ready()) {
-                            shared2.tracker_ready.store(true, Ordering::Release);
-                            return true;
+            for shard in 0..cfg_shards {
+                let ctx = mgr.ctx();
+                let mgr2 = mgr.clone();
+                let shared2 = shared.clone();
+                let weak = Arc::downgrade(&kv);
+                let mut rxs: Vec<(NodeId, RingReceiver)> = (0..n as NodeId)
+                    .filter(|&p| p != me)
+                    .map(|p| {
+                        let mut rx =
+                            RingReceiver::new(mgr, &tracker_ring_name(name, p, shard), words);
+                        rx.set_manual_ack();
+                        (p, rx)
+                    })
+                    .collect();
+                let mut known_dead: u64 = 0;
+                let mut announced = false;
+                let svc = if shard == 0 {
+                    format!("kv-tracker-{me}")
+                } else {
+                    format!("kv-tracker-{me}s{shard}")
+                };
+                crate::sim::register_service(
+                    svc,
+                    Box::new(move || {
+                        if shared2.shutdown.load(Ordering::Relaxed) {
+                            return false;
                         }
-                        return false;
-                    }
-                    let mut did = false;
-                    for (from, rx) in &mut rxs {
-                        while let Some(msg) = rx.try_recv(&ctx) {
-                            apply_tracker(&shared2, me, *from, &msg, known_dead);
-                            rx.ack_now(&ctx); // apply THEN acknowledge (§6)
-                            did = true;
+                        if !announced {
+                            // Setup phase: probe readiness without blocking —
+                            // the manager's ctrl service completes the
+                            // join/connect exchange between our steps.
+                            if rxs.iter().all(|(_, rx)| rx.is_ready()) {
+                                announced = true;
+                                shared2.tracker_ready.fetch_add(1, Ordering::Release);
+                                return true;
+                            }
+                            return false;
                         }
-                    }
-                    let dead_mask = mgr2.membership().dead_mask();
-                    if dead_mask != known_dead {
-                        for node in 0..n as NodeId {
-                            if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
-                                if let Some(kv) = weak.upgrade() {
-                                    kv.on_peer_dead(&ctx, node);
-                                }
+                        let mut did = false;
+                        for (from, rx) in &mut rxs {
+                            while let Some(msg) = rx.try_recv(&ctx) {
+                                apply_tracker(&shared2, me, *from, &msg, known_dead);
+                                rx.ack_now(&ctx); // apply THEN acknowledge (§6)
+                                did = true;
                             }
                         }
-                        known_dead = dead_mask;
-                        did = true;
-                    }
-                    did
-                }),
-            );
+                        let dead_mask = mgr2.membership().dead_mask();
+                        if dead_mask != known_dead {
+                            if shard == 0 {
+                                for node in 0..n as NodeId {
+                                    if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
+                                        if let Some(kv) = weak.upgrade() {
+                                            kv.on_peer_dead(&ctx, node);
+                                        }
+                                    }
+                                }
+                            }
+                            known_dead = dead_mask;
+                            did = true;
+                        }
+                        did
+                    }),
+                );
+            }
             // The ship server is its own service: drains our request
             // ring and applies shipped updates under the key locks.
             if kv.ship.is_some() {
@@ -751,12 +878,22 @@ impl KvStore {
             }
             return kv;
         }
-        let name2 = name.to_string();
-        let handle = std::thread::Builder::new()
-            .name(format!("kv-tracker-{me}"))
-            .spawn(move || tracker_loop(mgr2, name2, words, me, n, shared2, weak))
-            .expect("spawn tracker");
-        *kv.tracker_thread.lock().unwrap() = Some(handle);
+        for shard in 0..cfg_shards {
+            let mgr2 = mgr.clone();
+            let name2 = name.to_string();
+            let shared2 = shared.clone();
+            let weak = Arc::downgrade(&kv);
+            let tname = if shard == 0 {
+                format!("kv-tracker-{me}")
+            } else {
+                format!("kv-tracker-{me}s{shard}")
+            };
+            let handle = std::thread::Builder::new()
+                .name(tname)
+                .spawn(move || tracker_loop(mgr2, name2, words, me, n, shard, shared2, weak))
+                .expect("spawn tracker");
+            kv.tracker_threads.lock().unwrap().push(handle);
+        }
         if kv.ship.is_some() {
             let weak = Arc::downgrade(&kv);
             let mgr3 = mgr.clone();
@@ -794,10 +931,12 @@ impl KvStore {
         if let Some(ring) = &self.ship {
             ring.wait_ready(timeout);
         }
-        self.tracker_tx.lock().unwrap().wait_ready(timeout);
+        for tx in &self.tracker_tx {
+            tx.lock().unwrap().wait_ready(timeout);
+        }
         let mut bo = Backoff::new();
         let mut budget = crate::util::WaitBudget::wedge(timeout);
-        while !self.shared.tracker_ready.load(Ordering::Acquire) {
+        while self.shared.tracker_ready.load(Ordering::Acquire) < self.tracker_tx.len() {
             assert!(!budget.expired(), "tracker not ready");
             bo.snooze();
         }
@@ -1004,6 +1143,38 @@ impl KvStore {
         tx.send(ctx, &stamped);
     }
 
+    /// The tracker ring `key`'s broadcasts ride: every op about one key
+    /// goes through the same shard, so per-key apply order survives
+    /// sharding.
+    #[inline]
+    fn tracker_shard(&self, key: u64) -> &Mutex<RingSender> {
+        &self.tracker_tx[shard_of(key, self.tracker_tx.len())]
+    }
+
+    /// Broadcast a key-routed op on the key's shard ring and wait until
+    /// every live peer acknowledged it.
+    fn send_tracker_keyed(&self, ctx: &ThreadCtx, key: u64, msg: &[u64]) {
+        let tx = self.tracker_shard(key).lock().unwrap();
+        self.send_tracker(ctx, &tx, msg);
+        let pos = tx.position();
+        tx.wait_all_acked(ctx, pos);
+    }
+
+    /// Broadcast a membership/epoch op on **every** shard ring, waiting
+    /// out each ring's acks: these ops must order after the keyed
+    /// traffic of all shards (per-ring FIFO is the only order the
+    /// tracker protocol has), so they ride all of them. Receivers apply
+    /// them idempotently — see `apply_tracker`'s `OP_JOIN`/`OP_ALIVE`
+    /// handling and `KvShared::note_epoch_mark`.
+    fn send_tracker_all_shards(&self, ctx: &ThreadCtx, msg: &[u64]) {
+        for txm in &self.tracker_tx {
+            let tx = txm.lock().unwrap();
+            self.send_tracker(ctx, &tx, msg);
+            let pos = tx.position();
+            tx.wait_all_acked(ctx, pos);
+        }
+    }
+
     /// The cache serves only *remote-homed* slots: local reads are
     /// already a couple of loads, and skipping them keeps the whole
     /// capacity for keys that actually cost a network round trip.
@@ -1087,12 +1258,7 @@ impl KvStore {
 
             // Our own index first, then broadcast to peers and await acks.
             self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
-            {
-                let tx = self.tracker_tx.lock().unwrap();
-                self.send_tracker(ctx, &tx, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
-                let pos = tx.position();
-                tx.wait_all_acked(ctx, pos);
-            }
+            self.send_tracker_keyed(ctx, key, &[OP_INSERT, key, self.me as u64, slot as u64, counter]);
             // All indices now hold the location: set valid (linearization pt).
             ctx.local_store(self.data, self.cv_off(slot), (counter << 1) | 1);
             return Ok(true);
@@ -1316,7 +1482,8 @@ impl KvStore {
     /// frame writes the riders no longer cost.
     fn serve_shipped(&self, ctx: &ThreadCtx) -> bool {
         let Some(ring) = &self.ship else { return false };
-        if !ring.is_ready() || !self.shared.tracker_ready.load(Ordering::Acquire) {
+        if !ring.is_ready() || self.shared.tracker_ready.load(Ordering::Acquire) < self.tracker_tx.len()
+        {
             return false;
         }
         if ctx.node_down(self.me) {
@@ -1501,28 +1668,23 @@ impl KvStore {
         }
         self.shared.invalidate(key);
         self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
-        {
-            // The 8-word relocation form: receivers record the origin
-            // so a crash of THIS node mid-protocol reverts the key to
-            // its old location instead of dropping it.
-            let tx = self.tracker_tx.lock().unwrap();
-            self.send_tracker(
-                ctx,
-                &tx,
-                &[
-                    OP_INSERT,
-                    key,
-                    self.me as u64,
-                    slot as u64,
-                    counter,
-                    old.node as u64,
-                    old.slot as u64,
-                    old.counter,
-                ],
-            );
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
-        }
+        // The 8-word relocation form: receivers record the origin so a
+        // crash of THIS node mid-protocol reverts the key to its old
+        // location instead of dropping it.
+        self.send_tracker_keyed(
+            ctx,
+            key,
+            &[
+                OP_INSERT,
+                key,
+                self.me as u64,
+                slot as u64,
+                counter,
+                old.node as u64,
+                old.slot as u64,
+                old.counter,
+            ],
+        );
         // Every index now names the new location: linearize.
         ctx.local_store(self.data, self.cv_off(slot), (counter << 1) | 1);
         // Retire the old slot. FIRST unset its valid bit and prove the
@@ -1560,12 +1722,10 @@ impl KvStore {
             // slots die with it either way.
             let _ = ctx.try_fence(FenceScope::Pair(old.node));
         }
-        {
-            let tx = self.tracker_tx.lock().unwrap();
-            self.send_tracker(ctx, &tx, &[OP_FREE, old.node as u64, old.slot as u64, key]);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
-        }
+        // Same shard as the relocation's OP_INSERT above (routed by the
+        // same key), so the old home learns the new location FIFO-before
+        // the free can let it reuse the slot.
+        self.send_tracker_keyed(ctx, key, &[OP_FREE, old.node as u64, old.slot as u64, key]);
         Ok(())
     }
 
@@ -1665,14 +1825,18 @@ impl KvStore {
             // harness must find and shrink this.
             return;
         }
+        let shards = self.tracker_tx.len();
         if !self.cfg.coalesce_invals {
             // Pre-coalescing baseline: one broadcast round (send + full
-            // ack wait) per chunk, per caller.
-            let tx = self.tracker_tx.lock().unwrap();
-            for chunk in keys.chunks(INVAL_CHUNK) {
-                self.send_tracker(ctx, &tx, &encode_inval(chunk));
-                let pos = tx.position();
-                tx.wait_all_acked(ctx, pos);
+            // ack wait) per chunk, per caller — chunks grouped per
+            // shard so each key rides its own ring.
+            for (shard, keys) in group_by_shard(keys, shards) {
+                let tx = self.tracker_tx[shard].lock().unwrap();
+                for chunk in keys.chunks(INVAL_CHUNK) {
+                    self.send_tracker(ctx, &tx, &encode_inval(chunk));
+                    let pos = tx.position();
+                    tx.wait_all_acked(ctx, pos);
+                }
             }
             return;
         }
@@ -1681,7 +1845,18 @@ impl KvStore {
         // itself may be shipped by a *different* thread, so the check
         // must anchor here, on the updater's own pending-fence state.
         ctx.note_publication("kvstore::invalidate_updated");
-        let mut st = self.inval.st.lock().unwrap();
+        for (shard, keys) in group_by_shard(keys, shards) {
+            self.coalesce_shard(ctx, shard, &keys);
+        }
+    }
+
+    /// One shard's coalesced-invalidation group commit (see
+    /// [`InvalCoalescer`]): enqueue this updater's keys — all already
+    /// routed to `shard` — and return once a snapshot that carries them
+    /// is fully acked, broadcasting it ourselves if we get there first.
+    fn coalesce_shard(&self, ctx: &ThreadCtx, shard: usize, keys: &[u64]) {
+        let co = &self.inval[shard];
+        let mut st = co.st.lock().unwrap();
         st.pending.extend_from_slice(keys);
         // The first snapshot taken after this enqueue carries our keys:
         // the one about to start (`next_batch`) — possibly by us.
@@ -1700,30 +1875,30 @@ impl KvStore {
                 drop(st);
                 batch.sort_unstable();
                 batch.dedup(); // concurrent updates of one key need one entry
-                self.send_inval_snapshot(ctx, &batch);
-                st = self.inval.st.lock().unwrap();
+                self.send_inval_snapshot(ctx, shard, &batch);
+                st = co.st.lock().unwrap();
                 st.done_batch = id + 1;
                 st.in_flight = false;
-                self.inval.cv.notify_all();
+                co.cv.notify_all();
             } else if crate::sim::active() {
                 // Single-threaded simulation: no other thread will ever
                 // signal the condvar — release the mutex and pump the
                 // scheduler instead.
                 drop(st);
                 Backoff::new().snooze();
-                st = self.inval.st.lock().unwrap();
+                st = co.st.lock().unwrap();
             } else {
-                st = self.inval.cv.wait(st).unwrap();
+                st = co.cv.wait(st).unwrap();
             }
         }
     }
 
-    /// Ship one coalesced invalidation snapshot: every chunk is sent
-    /// back to back on the tracker ring (the ring writes ride the
+    /// Ship one coalesced invalidation snapshot on `shard`'s ring:
+    /// every chunk is sent back to back (the ring writes ride the
     /// batched pipeline), then **one** ack wait at the final position
     /// covers the union — not one round per chunk.
-    fn send_inval_snapshot(&self, ctx: &ThreadCtx, keys: &[u64]) {
-        let tx = self.tracker_tx.lock().unwrap();
+    fn send_inval_snapshot(&self, ctx: &ThreadCtx, shard: usize, keys: &[u64]) {
+        let tx = self.tracker_tx[shard].lock().unwrap();
         for chunk in keys.chunks(INVAL_CHUNK) {
             self.send_tracker(ctx, &tx, &encode_inval(chunk));
         }
@@ -1953,12 +2128,7 @@ impl KvStore {
         }
         // Broadcast; peers invalidate their cache + drop their index
         // entries (the home peer also frees the slot); then drop ours.
-        {
-            let tx = self.tracker_tx.lock().unwrap();
-            self.send_tracker(ctx, &tx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
-        }
+        self.send_tracker_keyed(ctx, key, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
         self.shared.invalidate(key);
         self.shared.index.remove(key);
         if e.node == self.me {
@@ -2260,11 +2430,12 @@ impl KvStore {
         checksums: Option<&[u64]>,
     ) -> Result<()> {
         const BATCH: usize = 128;
+        let shards = self.tracker_tx.len();
         for (chunk_idx, chunk) in keys.chunks(BATCH).enumerate() {
-            let mut msg = Vec::with_capacity(3 + chunk.len() * 3);
-            msg.push(OP_BATCH);
-            msg.push(self.me as u64);
-            msg.push(chunk.len() as u64);
+            // One OP_BATCH frame per shard ring: a key's bulk insert
+            // must ride the same ring as its later ops (per-key order).
+            let mut msgs: Vec<Vec<u64>> =
+                (0..shards).map(|_| vec![OP_BATCH, self.me as u64, 0]).collect();
             for (i, &key) in chunk.iter().enumerate() {
                 let value = value_of(key);
                 self.check_value_len(&value);
@@ -2288,12 +2459,19 @@ impl KvStore {
                     self.write_backup_frame(ctx, slot, &frame, (counter << 1) | 1);
                 }
                 self.shared.index.insert(key, IndexEntry { node: self.me, slot, counter });
-                msg.extend_from_slice(&[key, slot as u64, counter]);
+                let m = &mut msgs[shard_of(key, shards)];
+                m[2] += 1;
+                m.extend_from_slice(&[key, slot as u64, counter]);
             }
-            let tx = self.tracker_tx.lock().unwrap();
-            self.send_tracker(ctx, &tx, &msg);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
+            for (shard, msg) in msgs.into_iter().enumerate() {
+                if msg[2] == 0 {
+                    continue;
+                }
+                let tx = self.tracker_tx[shard].lock().unwrap();
+                self.send_tracker(ctx, &tx, &msg);
+                let pos = tx.position();
+                tx.wait_all_acked(ctx, pos);
+            }
         }
         Ok(())
     }
@@ -2337,14 +2515,14 @@ impl KvStore {
                 let _ = h.join();
             }
         }
-        if let Some(h) = self.tracker_thread.lock().unwrap().take() {
+        for h in self.tracker_threads.lock().unwrap().drain(..) {
             if h.thread().id() == std::thread::current().id() {
-                // We ARE the tracker thread: the last external Arc was
+                // We ARE a tracker thread: the last external Arc was
                 // dropped while recovery held a transient Weak-upgrade,
                 // so Drop is running on the tracker itself. Joining
                 // ourselves would deadlock forever — detach instead;
                 // the loop observes the shutdown flag and exits.
-                return;
+                continue;
             }
             let _ = h.join();
         }
@@ -2372,20 +2550,14 @@ impl KvStore {
             ring.quiesce(ctx);
         }
         self.shared.membership.note_joining(self.me);
-        let tx = self.tracker_tx.lock().unwrap();
-        self.send_tracker(ctx, &tx, &[OP_JOIN, self.me as u64]);
-        let pos = tx.position();
-        tx.wait_all_acked(ctx, pos);
+        self.send_tracker_all_shards(ctx, &[OP_JOIN, self.me as u64]);
     }
 
     /// Complete this node's join (migration converged): broadcast
     /// `OP_ALIVE`, moving the slot from Joining to full membership.
     pub fn activate(&self, ctx: &ThreadCtx) {
         self.shared.membership.note_alive(self.me);
-        let tx = self.tracker_tx.lock().unwrap();
-        self.send_tracker(ctx, &tx, &[OP_ALIVE, self.me as u64]);
-        let pos = tx.position();
-        tx.wait_all_acked(ctx, pos);
+        self.send_tracker_all_shards(ctx, &[OP_ALIVE, self.me as u64]);
     }
 
     /// Live resharding driver: pull every key whose range the current
@@ -2549,16 +2721,13 @@ impl KvStore {
                 }
             }
         }
-        {
-            // End-of-recovery marker: FIFO-after every re-home broadcast
-            // above, so a receiver that has applied it has the complete
-            // recovered range and may drop any leftover dead-homed
-            // entries. One ack-wait covers the whole batch.
-            let tx = self.tracker_tx.lock().unwrap();
-            self.send_tracker(ctx, &tx, &[OP_EPOCH, dead as u64]);
-            let pos = tx.position();
-            tx.wait_all_acked(ctx, pos);
-        }
+        // End-of-recovery marker on EVERY shard ring: the re-home
+        // broadcasts above rode their keys' shards, and per-ring FIFO
+        // only orders the same shard's marker after them — so a
+        // receiver purges leftovers only once all shards' markers
+        // applied (see `KvShared::note_epoch_mark`). One ack-wait per
+        // ring covers that ring's whole batch.
+        self.send_tracker_all_shards(ctx, &[OP_EPOCH, dead as u64]);
         // Our own leftover check (peers get it from OP_EPOCH).
         self.shared.purge_homed_on(dead, true);
         if rehomed + dropped > 0 {
@@ -2644,7 +2813,10 @@ impl KvStore {
         if let Some(o) = origin {
             msg.extend_from_slice(&[o.node as u64, o.slot as u64, o.counter]);
         }
-        let tx = self.tracker_tx.lock().unwrap();
+        // No ack wait here: the OP_EPOCH markers' per-ring ack waits
+        // cover the whole recovery batch. Keyed shard, so the marker on
+        // this ring stays FIFO-after us.
+        let tx = self.tracker_shard(key).lock().unwrap();
         self.send_tracker(ctx, &tx, &msg);
         true
     }
@@ -2657,7 +2829,7 @@ impl KvStore {
         self.shared.invalidate(key);
         self.shared.reloc_origins.lock().unwrap().remove(&key);
         self.shared.index.remove_matching(key, e);
-        let tx = self.tracker_tx.lock().unwrap();
+        let tx = self.tracker_shard(key).lock().unwrap();
         self.send_tracker(ctx, &tx, &[OP_DELETE, key, e.node as u64, e.slot as u64, e.counter]);
     }
 }
@@ -2676,15 +2848,17 @@ fn tracker_loop(
     tracker_words: u64,
     me: NodeId,
     num_nodes: usize,
+    shard: usize,
     shared: Arc<KvShared>,
     kv: Weak<KvStore>,
 ) {
     let ctx = mgr.ctx();
-    // Receive every peer's tracker ring.
+    // Receive every peer's shard-`shard` tracker ring.
     let mut rxs: Vec<(NodeId, RingReceiver)> = (0..num_nodes as NodeId)
         .filter(|&p| p != me)
         .map(|p| {
-            let mut rx = RingReceiver::new(&mgr, &sub_name(&name, &format!("trk{p}")), tracker_words);
+            let mut rx =
+                RingReceiver::new(&mgr, &tracker_ring_name(&name, p, shard), tracker_words);
             rx.set_manual_ack();
             (p, rx)
         })
@@ -2692,7 +2866,7 @@ fn tracker_loop(
     for (_, rx) in &rxs {
         rx.wait_ready(Duration::from_secs(30));
     }
-    shared.tracker_ready.store(true, Ordering::Release);
+    shared.tracker_ready.fetch_add(1, Ordering::Release);
 
     let mut known_dead: u64 = 0;
     let mut bo = Backoff::new();
@@ -2710,14 +2884,18 @@ fn tracker_loop(
             }
         }
         // Crash recovery: the manager's polling thread mirrors the
-        // fabric's down mask into Membership; we react here, once per
-        // newly dead node, on the thread that owns index application.
+        // fabric's down mask into Membership; shard 0's thread reacts,
+        // once per newly dead node (one recovery driver per node, as
+        // before sharding); the other shard threads only refresh their
+        // apply-side dead screen.
         let dead_mask = mgr.membership().dead_mask();
         if dead_mask != known_dead {
-            for node in 0..num_nodes as NodeId {
-                if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
-                    if let Some(kv) = kv.upgrade() {
-                        kv.on_peer_dead(&ctx, node);
+            if shard == 0 {
+                for node in 0..num_nodes as NodeId {
+                    if dead_mask >> node & 1 == 1 && known_dead >> node & 1 == 0 {
+                        if let Some(kv) = kv.upgrade() {
+                            kv.on_peer_dead(&ctx, node);
+                        }
                     }
                 }
             }
@@ -2825,15 +3003,21 @@ fn apply_tracker(shared: &KvShared, me: NodeId, from: NodeId, msg: &[u64], dead_
             }
         }
         OP_EPOCH => {
-            // The dead node's backup finished re-homing (all recovered
-            // locations precede this on the same FIFO ring): any entry
-            // still homed on the corpse belongs to an insert that never
+            // The dead node's backup finished re-homing. The recovered
+            // locations rode their keys' shard rings, and the backup
+            // sent one marker per ring FIFO-after them — so only when
+            // the LAST shard's marker applies is every recovered
+            // location guaranteed applied here, and any entry still
+            // homed on the corpse belongs to an insert that never
             // completed — drop it — or to a relocation whose broadcast
             // never fully acked — revert it to its recorded origin.
             // OP_EPOCH is only ever sent by a backup, i.e. with
             // replication on, where the revert is safe (see
             // `purge_homed_on`).
-            shared.purge_homed_on(msg[1] as NodeId, true);
+            let dead = msg[1] as NodeId;
+            if shared.note_epoch_mark(dead) {
+                shared.purge_homed_on(dead, true);
+            }
         }
         OP_FREE => {
             // A relocation completed (the retire is sent only after the
@@ -3284,6 +3468,113 @@ mod tests {
         }
         for k in 10..14u64 {
             assert_eq!(kvs[1].get(&ctx1, k), Some(vec![k * 1000 + 50]), "key {k}");
+        }
+    }
+
+    #[test]
+    fn tracker_shards_env_is_validated() {
+        assert_eq!(parse_tracker_shards(None), Ok(1));
+        assert_eq!(parse_tracker_shards(Some("2")), Ok(2));
+        assert_eq!(parse_tracker_shards(Some(" 4 ")), Ok(4));
+        assert!(parse_tracker_shards(Some("0")).unwrap_err().contains("at least one"));
+        assert!(parse_tracker_shards(Some("two")).is_err());
+        assert!(parse_tracker_shards(Some("-2")).is_err());
+        assert!(parse_tracker_shards(Some("")).is_err());
+    }
+
+    /// Shard routing is a stable pure function (a key's ops must ride
+    /// one ring forever) and `group_by_shard` partitions losslessly in
+    /// ascending shard order.
+    #[test]
+    fn shard_routing_is_stable_and_total() {
+        for k in 0..1024u64 {
+            assert_eq!(shard_of(k, 1), 0);
+            let s = shard_of(k, 4);
+            assert!(s < 4);
+            assert_eq!(s, shard_of(k, 4), "a key's shard never changes");
+        }
+        let keys: Vec<u64> = (0..64).collect();
+        let groups = group_by_shard(&keys, 4);
+        assert_eq!(groups.iter().map(|(_, g)| g.len()).sum::<usize>(), 64);
+        let shards: Vec<usize> = groups.iter().map(|(s, _)| *s).collect();
+        let mut sorted = shards.clone();
+        sorted.sort_unstable();
+        assert_eq!(shards, sorted, "groups come out in shard order");
+        assert!(shards.len() > 1, "64 ranges spread across >1 of 4 shards");
+    }
+
+    /// Sharded tracker rings (PR-10): every op about one key rides the
+    /// same shard ring, so rapid same-key transitions — an insert from
+    /// one peer, then a delete + re-insert from another — apply in
+    /// broadcast order on every node. A routing bug that let a key's
+    /// delete and re-insert ride different rings could reorder them
+    /// into "insert, then delete" and lose the key.
+    #[test]
+    fn sharded_tracker_preserves_per_key_order() {
+        let cfg = KvConfig { tracker_shards: 3, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        for k in 0..32u64 {
+            assert!(kvs[0].insert(&ctxs[0], k, &[k + 1]).unwrap());
+            assert!(kvs[1].remove(&ctxs[1], k));
+            assert!(kvs[1].insert(&ctxs[1], k, &[k + 1000]).unwrap());
+        }
+        for k in 0..32u64 {
+            let e = kvs[1].index_entry(k).expect("key survived the delete + re-insert");
+            assert_eq!(e.node, 1, "key {k} homed on its re-inserter");
+            for (i, kv) in kvs.iter().enumerate() {
+                assert_eq!(kv.get(&ctxs[i], k), Some(vec![k + 1000]), "node {i} key {k}");
+                assert_eq!(kv.index_entry(k), Some(e), "node {i} key {k} index diverged");
+            }
+        }
+        for kv in &kvs {
+            kv.slab_audit().unwrap();
+        }
+    }
+
+    /// Bulk prefill with sharding on: each `OP_BATCH` chunk splits into
+    /// per-shard frames (a key's batch insert must ride the same ring
+    /// as its later ops), everything reads back from every node, and
+    /// the rings stay usable for follow-on keyed traffic.
+    #[test]
+    fn sharded_prefill_converges() {
+        let cfg = KvConfig { tracker_shards: 4, ..small_cfg() };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        let keys: Vec<u64> = (0..48).collect();
+        kvs[0].prefill_local(&ctxs[0], &keys, |k| vec![k * 3], None).unwrap();
+        for (i, kv) in kvs.iter().enumerate() {
+            for &k in &keys {
+                assert_eq!(kv.get(&ctxs[i], k), Some(vec![k * 3]), "node {i} key {k}");
+            }
+        }
+        assert!(kvs[2].remove(&ctxs[2], 7));
+        for (i, kv) in kvs.iter().enumerate() {
+            assert_eq!(kv.get(&ctxs[i], 7), None, "node {i} still serves the deleted key");
+        }
+    }
+
+    /// Crash-stop with sharded trackers: every shard's union-ack wait
+    /// (the coalesced-invalidation snapshot's release condition) drains
+    /// the dead peer's receivers — `PeerFailed` drops them from the ack
+    /// minimum — instead of wedging, and the live peer still observes
+    /// every invalidation. Keys are chosen so their lock hosts stay
+    /// alive; the dead node participates only as a tracker receiver.
+    #[test]
+    fn sharded_union_ack_survives_crash() {
+        let cfg = KvConfig { tracker_shards: 2, ..cached_cfg() };
+        let (mgrs, kvs) = setup_cfg(3, FabricConfig::threaded(LatencyModel::fast_sim()), cfg);
+        let ctxs: Vec<_> = mgrs.iter().map(|m| m.ctx()).collect();
+        let keys: Vec<u64> = (0..12).filter(|k| k % 3 != 2).collect(); // lock hosts 0/1 only
+        for &k in &keys {
+            kvs[0].insert(&ctxs[0], k, &[k]).unwrap();
+            let _ = kvs[1].get(&ctxs[1], k); // warm the live peer's cache
+            let _ = kvs[2].get(&ctxs[2], k); // and the one about to die
+        }
+        mgrs[0].cluster().crash(2);
+        for &k in &keys {
+            assert!(kvs[0].update(&ctxs[0], k, &[k + 500]), "update wedged on the dead peer");
+            assert_eq!(kvs[1].get(&ctxs[1], k), Some(vec![k + 500]), "key {k} stale on live peer");
         }
     }
 

@@ -123,6 +123,16 @@ pub struct LatencyModel {
     /// Extra latency for regions allocated in NIC device memory is
     /// *subtracted* (device memory avoids the PCIe hop): `device_mem_save_ns`.
     pub device_mem_save_ns: u64,
+    /// Per-**engine** execution occupancy: each engine lane retires at
+    /// most one WQE per this many nanoseconds, round-robin across the
+    /// QPs it owns. This is the processing-unit serialization that makes
+    /// `engines_per_node` a *modeled* throughput axis (Brock et al.'s
+    /// injection-rate parallelism) rather than a host-core artifact —
+    /// E lanes retire E WQEs per quantum. 0 (the default everywhere)
+    /// disables the term entirely: execution happens the instant an
+    /// arrival is due, byte-for-byte the pre-occupancy behavior. The
+    /// `fig4_engine_scaling` cell is the intended consumer.
+    pub engine_occupancy_ns: u64,
 }
 
 impl LatencyModel {
@@ -144,6 +154,7 @@ impl LatencyModel {
             mr_miss_ns: 0,
             mr_cache_entries: usize::MAX,
             device_mem_save_ns: 0,
+            engine_occupancy_ns: 0,
         }
     }
 
@@ -166,6 +177,7 @@ impl LatencyModel {
             mr_miss_ns: 900,
             mr_cache_entries: 64,
             device_mem_save_ns: 600,
+            engine_occupancy_ns: 0,
         }
     }
 
@@ -189,12 +201,22 @@ impl LatencyModel {
             mr_miss_ns: r.mr_miss_ns / 20,
             mr_cache_entries: r.mr_cache_entries,
             device_mem_save_ns: r.device_mem_save_ns / 20,
+            engine_occupancy_ns: r.engine_occupancy_ns,
         }
     }
 
     /// Override the inline threshold (builder style, for ablations).
     pub fn with_max_inline_words(mut self, words: usize) -> Self {
         self.max_inline_words = words;
+        self
+    }
+
+    /// Enable per-engine execution occupancy (builder style; see
+    /// [`LatencyModel::engine_occupancy_ns`]). The engine-scaling bench
+    /// uses this so E engines ⇒ E× structural WQE throughput is a
+    /// property of the model, independent of host core count.
+    pub fn with_engine_occupancy(mut self, ns: u64) -> Self {
+        self.engine_occupancy_ns = ns;
         self
     }
 }
@@ -233,6 +255,15 @@ pub struct FabricConfig {
     /// (`bench::micro::check_hook_overhead` pins it). Overridable per
     /// process via `LOCO_CHECK` (`off`, `structural`, `full`).
     pub check_races: crate::analysis::CheckMode,
+    /// NIC engines per node. QPs are striped across engines by stable
+    /// `qp_id % engines_per_node` assignment, so per-QP WQE/CQE FIFO —
+    /// and with it covered-chain retirement and fence semantics — is
+    /// untouched; only *cross-QP* parallelism grows. Threaded mode runs
+    /// this many engine threads per node; sim mode registers this many
+    /// steppable engine actors per node from the same seeded scheduler
+    /// stream. `1` (the default) is byte-for-byte the single-engine
+    /// behavior. Overridable per process via `LOCO_ENGINES`.
+    pub engines_per_node: u32,
 }
 
 /// Default selective-signaling chain length (overridable with
@@ -256,6 +287,32 @@ fn default_check_mode() -> crate::analysis::CheckMode {
     match crate::analysis::parse_check_mode(std::env::var("LOCO_CHECK").ok().as_deref()) {
         Ok(m) => m,
         Err(e) => panic!("invalid LOCO_CHECK: {e}"),
+    }
+}
+
+/// Default NIC-engine count per node (overridable with `LOCO_ENGINES`).
+/// Validated like `LOCO_SIGNAL_EVERY`: garbage aborts with a diagnosis
+/// instead of silently running single-engined.
+fn default_engines() -> u32 {
+    match parse_engines(std::env::var("LOCO_ENGINES").ok().as_deref()) {
+        Ok(n) => n,
+        Err(e) => panic!("invalid LOCO_ENGINES: {e}"),
+    }
+}
+
+/// Parse an optional `LOCO_ENGINES` override. `None` (unset) means one
+/// engine per node; anything set must parse to an integer ≥ 1.
+fn parse_engines(raw: Option<&str>) -> Result<u32, String> {
+    match raw {
+        None => Ok(1),
+        Some(v) => match v.trim().parse::<u32>() {
+            Ok(0) => Err(format!(
+                "{v:?} — a node needs at least one NIC engine to execute its QPs; \
+                 use 1 for the serial (default) configuration"
+            )),
+            Ok(n) => Ok(n),
+            Err(_) => Err(format!("{v:?} is not a positive integer (expected 1, 2, 4, ...)")),
+        },
     }
 }
 
@@ -288,6 +345,7 @@ impl FabricConfig {
             faults: None,
             signal_every: default_signal_every(),
             check_races: default_check_mode(),
+            engines_per_node: default_engines(),
         }
     }
 
@@ -303,6 +361,7 @@ impl FabricConfig {
             faults: None,
             signal_every: default_signal_every(),
             check_races: default_check_mode(),
+            engines_per_node: default_engines(),
         }
     }
 
@@ -326,6 +385,15 @@ impl FabricConfig {
     /// WQE, the pre-selective behavior).
     pub fn with_signal_every(mut self, n: u32) -> Self {
         self.signal_every = n;
+        self
+    }
+
+    /// Override the NIC-engine count per node (`1` = the serial
+    /// single-engine configuration); wins over the `LOCO_ENGINES`
+    /// default. QPs stripe across engines by `qp_id % n`.
+    pub fn with_engines(mut self, n: u32) -> Self {
+        assert!(n >= 1, "a node needs at least one NIC engine");
+        self.engines_per_node = n;
         self
     }
 
@@ -409,7 +477,24 @@ impl Default for Clock {
 
 #[cfg(test)]
 mod tests {
-    use super::parse_signal_every;
+    use super::{parse_engines, parse_signal_every};
+
+    #[test]
+    fn engines_override_is_validated() {
+        // Unset: one engine per node, the serial seed behavior.
+        assert_eq!(parse_engines(None), Ok(1));
+        // Any integer ≥ 1 is accepted (whitespace tolerated).
+        assert_eq!(parse_engines(Some("2")), Ok(2));
+        assert_eq!(parse_engines(Some(" 4 ")), Ok(4));
+        // 0 engines would leave every QP unowned — rejected with a
+        // diagnosis, not silently defaulted.
+        let err = parse_engines(Some("0")).unwrap_err();
+        assert!(err.contains("at least one"), "diagnosis should explain the 0 hazard: {err}");
+        // Typos must not silently fall back to 1.
+        assert!(parse_engines(Some("two")).is_err());
+        assert!(parse_engines(Some("-2")).is_err());
+        assert!(parse_engines(Some("")).is_err());
+    }
 
     #[test]
     fn signal_every_override_is_validated() {

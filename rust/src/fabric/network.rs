@@ -54,11 +54,19 @@ pub struct NodeFabric {
     /// Crash-stop flag (fault injection): once cleared the node never
     /// serves or transmits again. See [`Cluster::crash`].
     alive: AtomicBool,
-    /// Engine-executed op count, published by the NIC engine each step
-    /// so [`Cluster::crash_after_ops`] can arm a crash relative to
-    /// "now" (calibrated past bring-up, unlike the construction-time
-    /// [`FaultPlan::crash_after`](super::FaultPlan::crash_after)).
-    engine_ops: AtomicU64,
+    /// Engine-executed op counts, one slot per engine lane
+    /// (`FabricConfig::engines_per_node`), published by each NIC engine
+    /// every step so [`Cluster::crash_after_ops`] can arm a crash
+    /// relative to "now" (calibrated past bring-up, unlike the
+    /// construction-time
+    /// [`FaultPlan::crash_after`](super::FaultPlan::crash_after)) and
+    /// so tests can prove the QP stripes actually share load.
+    engine_ops: Vec<AtomicU64>,
+    /// Engine-loop iterations (threaded mode; all lanes summed). The
+    /// idle-cluster regression diffs this: parked engines must execute
+    /// ~zero steps per second, where the seed's 200 µs shutdown-poll
+    /// cap burned thousands.
+    engine_steps: AtomicU64,
     /// Engine-op count at which this node crash-stops (runtime-armed
     /// fault injection; `u64::MAX` = disarmed).
     crash_at_ops: AtomicU64,
@@ -82,7 +90,8 @@ impl NodeFabric {
             ship_fallbacks: AtomicU64::new(0),
             ship_fallbacks_confirmed: AtomicU64::new(0),
             alive: AtomicBool::new(true),
-            engine_ops: AtomicU64::new(0),
+            engine_ops: (0..cfg.engines_per_node.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            engine_steps: AtomicU64::new(0),
             crash_at_ops: AtomicU64::new(u64::MAX),
         }
     }
@@ -111,10 +120,22 @@ impl NodeFabric {
         self.ring();
     }
 
-    /// Engine-side: publish the executed-op count so
-    /// [`Cluster::crash_after_ops`] can arm thresholds relative to it.
-    pub(super) fn publish_engine_ops(&self, ops: u64) {
-        self.engine_ops.store(ops, Ordering::Relaxed);
+    /// Engine-side: publish lane `lane`'s executed-op count so
+    /// [`Cluster::crash_after_ops`] can arm thresholds relative to the
+    /// node total and tests can read the per-stripe split.
+    pub(super) fn publish_engine_ops(&self, lane: u32, ops: u64) {
+        self.engine_ops[lane as usize].store(ops, Ordering::Relaxed);
+    }
+
+    /// Executed-op count summed across this node's engine lanes (the
+    /// quantity crash thresholds are armed against).
+    pub(super) fn engine_ops_total(&self) -> u64 {
+        self.engine_ops.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Engine-side: one engine-loop iteration ran (threaded mode).
+    pub(super) fn note_engine_step(&self) {
+        self.engine_steps.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Engine-side: is a runtime-armed crash due at `ops` executed ops?
@@ -122,11 +143,14 @@ impl NodeFabric {
         ops >= self.crash_at_ops.load(Ordering::Relaxed)
     }
 
-    /// Ring the engine doorbell (submission or new QP).
+    /// Ring the engine doorbell (submission or new QP). All of the
+    /// node's engine lanes wait on the one condvar, so wake them all —
+    /// a QP's work belongs to exactly one lane, and `notify_one` could
+    /// rouse the wrong one and leave the owner parked.
     pub(super) fn ring(&self) {
         let (lock, cv) = &self.doorbell;
         *lock.lock().unwrap() += 1;
-        cv.notify_one();
+        cv.notify_all();
     }
 
     /// Engine-side: current doorbell value.
@@ -262,10 +286,14 @@ impl Cluster {
         };
         let nodes: Vec<Arc<NodeFabric>> =
             (0..n).map(|i| Arc::new(NodeFabric::new(i as NodeId, &cfg))).collect();
-        let checker = cfg
-            .check_races
-            .resolve(cfg.delivery == DeliveryMode::Sim)
-            .map(|level| Arc::new(crate::analysis::Checker::new(n, level, cfg.seed)));
+        let checker = cfg.check_races.resolve(cfg.delivery == DeliveryMode::Sim).map(|level| {
+            Arc::new(crate::analysis::Checker::new_striped(
+                n,
+                cfg.engines_per_node.max(1) as usize,
+                level,
+                cfg.seed,
+            ))
+        });
         if let Some(chk) = &checker {
             for node in &nodes {
                 node.arena.set_checker(node.id, chk.clone());
@@ -281,20 +309,28 @@ impl Cluster {
             checker,
         });
         if cfg.delivery == DeliveryMode::Threaded {
+            let epn = cfg.engines_per_node.max(1);
             let mut engines = cluster.engines.lock().unwrap();
             for i in 0..n {
-                let nodes = nodes.clone();
-                let cfg = cfg.clone();
-                let clock = clock.clone();
-                let shutdown = shutdown.clone();
-                engines.push(
-                    std::thread::Builder::new()
-                        .name(format!("nic-engine-{i}"))
-                        .spawn(move || {
-                            nic::engine_loop(nodes, i as NodeId, cfg, clock, shutdown)
-                        })
-                        .expect("spawn nic engine"),
-                );
+                for lane in 0..epn {
+                    let nodes = nodes.clone();
+                    let cfg = cfg.clone();
+                    let clock = clock.clone();
+                    let shutdown = shutdown.clone();
+                    let name = if epn == 1 {
+                        format!("nic-engine-{i}")
+                    } else {
+                        format!("nic-engine-{i}.{lane}")
+                    };
+                    engines.push(
+                        std::thread::Builder::new()
+                            .name(name)
+                            .spawn(move || {
+                                nic::engine_loop(nodes, i as NodeId, lane, cfg, clock, shutdown)
+                            })
+                            .expect("spawn nic engine"),
+                    );
+                }
             }
         }
         cluster
@@ -322,18 +358,30 @@ impl Cluster {
         self.checker.as_ref().map(|c| c.take_diagnostics()).unwrap_or_default()
     }
 
-    /// Build one steppable engine core per node (sim mode). The
-    /// `SimExecutor` owns and steps these; in `Threaded` mode the same
-    /// cores live inside the per-node engine threads instead.
+    /// Build the steppable engine cores (sim mode): `engines_per_node`
+    /// per node, node-major, so `engines_per_node = 1` yields exactly
+    /// the seed's one-core-per-node vector. The `SimExecutor` owns and
+    /// steps these; in `Threaded` mode the same cores live inside the
+    /// per-lane engine threads instead.
     pub(crate) fn engine_cores(&self) -> Vec<nic::EngineCore> {
         assert_eq!(
             self.cfg.delivery,
             DeliveryMode::Sim,
             "engine_cores is only meaningful for DeliveryMode::Sim"
         );
-        (0..self.nodes.len())
-            .map(|i| nic::EngineCore::new(self.nodes.clone(), i as NodeId, self.cfg.clone()))
-            .collect()
+        let epn = self.cfg.engines_per_node.max(1);
+        let mut cores = Vec::with_capacity(self.nodes.len() * epn as usize);
+        for i in 0..self.nodes.len() {
+            for lane in 0..epn {
+                cores.push(nic::EngineCore::new(
+                    self.nodes.clone(),
+                    i as NodeId,
+                    lane,
+                    self.cfg.clone(),
+                ));
+            }
+        }
+        cores
     }
 
     pub fn clock(&self) -> &Clock {
@@ -546,11 +594,32 @@ impl Cluster {
         }
     }
 
-    /// Engine-executed op count of `node` so far (monotonic). Pair with
+    /// Engine-executed op count of `node` so far (monotonic; summed
+    /// over the node's engine lanes). Pair with
     /// [`Cluster::crash_after_ops`] to calibrate a crash cut relative
     /// to a known point of the run rather than time zero.
     pub fn engine_ops(&self, node: NodeId) -> u64 {
-        self.nodes[node as usize].engine_ops.load(Ordering::Relaxed)
+        self.nodes[node as usize].engine_ops_total()
+    }
+
+    /// Per-engine executed-op counts of `node` (one entry per lane of
+    /// `FabricConfig::engines_per_node`). The engine-scaling acceptance
+    /// test asserts every lane is non-zero — striping that funnels all
+    /// work through one lane is a silent return to the serial engine.
+    pub fn engine_ops_by_engine(&self, node: NodeId) -> Vec<u64> {
+        self.nodes[node as usize]
+            .engine_ops
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Engine-loop iterations `node`'s engine threads have run
+    /// (threaded mode; all lanes summed, monotonic). An idle cluster's
+    /// delta over a sleep should be ~zero — parked engines wake only on
+    /// doorbells or due events.
+    pub fn engine_steps(&self, node: NodeId) -> u64 {
+        self.nodes[node as usize].engine_steps.load(Ordering::Relaxed)
     }
 
     /// Arm a crash-stop of `node` after it executes `delta` MORE engine
@@ -563,7 +632,7 @@ impl Cluster {
     /// and its reply). Re-arming overwrites any earlier threshold.
     pub fn crash_after_ops(&self, node: NodeId, delta: u64) {
         let n = &self.nodes[node as usize];
-        let due = n.engine_ops.load(Ordering::Relaxed).saturating_add(delta);
+        let due = n.engine_ops_total().saturating_add(delta);
         n.crash_at_ops.store(due, Ordering::Relaxed);
         // Wake the engines so an idle victim still observes the arm.
         for nf in &self.nodes {
@@ -612,6 +681,12 @@ impl Drop for Cluster {
         // (the Relaxed/Relaxed pair here was a genuine lint finding —
         // see scripts/loco_lint.py, rule `relaxed-publish`).
         self.shutdown.store(true, Ordering::Release);
+        // Idle engines park on their doorbells with no timeout (the
+        // 200 µs shutdown-poll cap is gone): wake them so they observe
+        // the flag and exit.
+        for n in &self.nodes {
+            n.ring();
+        }
         for h in self.engines.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -957,6 +1032,64 @@ mod tests {
         // Every op completed (ok before the crash landed, or failed
         // after); nothing was placed after the crash either way.
         assert!(got.iter().any(|e| e.status == CqeStatus::PeerFailed), "crash unseen");
+    }
+
+    /// Satellite regression for the engine-loop park fix: an idle
+    /// cluster's engines must execute ~zero steps per second. The seed
+    /// capped every doorbell wait at 200 µs as a shutdown poll, so each
+    /// engine woke ≥ ~5000 times/s doing nothing; now an idle engine
+    /// parks until a doorbell or its next due event, and shutdown rings
+    /// the doorbells itself.
+    #[test]
+    fn idle_engines_park_instead_of_polling() {
+        let c = Cluster::new(2, FabricConfig::threaded(LatencyModel::fast_sim()));
+        let dst = c.node(1).register_mr(4, false);
+        let qp = c.create_qp(0, 1);
+        c.post(qp, wqe(1, Verb::Write { remote: dst.at(0), data: Payload::one(7) }));
+        assert_eq!(c.node(0).cq().poll_one_blocking().wr_id, 1);
+        // Let placement retire and both engines reach their parked state.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let before: u64 = (0..2).map(|i| c.engine_steps(i)).sum();
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let woke = (0..2).map(|i| c.engine_steps(i)).sum::<u64>() - before;
+        // The old poll cap would show ≥ ~3000 iterations here (2 engines
+        // × 300 ms / 200 µs); allow a generous slack for stray wakeups.
+        assert!(woke < 100, "idle engines ran {woke} loop iterations in 300 ms");
+    }
+
+    /// Striped engines: QPs spread across lanes by `qp_id % E`, every
+    /// lane executes work, per-QP completion order is preserved, and
+    /// the per-lane counters sum to the node total.
+    #[test]
+    fn striped_engines_share_qps_and_preserve_per_qp_order() {
+        let c = Cluster::new(2, FabricConfig::threaded(LatencyModel::fast_sim()).with_engines(2));
+        let dst = c.node(1).register_mr(256, false);
+        let qps: Vec<QpId> = (0..4).map(|_| c.create_qp(0, 1)).collect();
+        for i in 0..64u64 {
+            let qp = qps[(i % 4) as usize];
+            c.post(qp, wqe(i, Verb::Write { remote: dst.at(i), data: Payload::one(i + 1) }));
+        }
+        let mut got = Vec::new();
+        let mut out = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while got.len() < 64 {
+            c.node(0).cq().poll(64, &mut out);
+            got.append(&mut out);
+            assert!(std::time::Instant::now() < deadline, "completions never drained");
+        }
+        // Per-QP FIFO: each QP's wr_ids complete in posting order.
+        for (q, qp) in qps.iter().enumerate() {
+            let ids: Vec<u64> = got.iter().filter(|e| e.qp == *qp).map(|e| e.wr_id).collect();
+            let want: Vec<u64> = (0..64).filter(|i| (i % 4) as usize == q).collect();
+            assert_eq!(ids, want, "QP {q} completions out of order");
+        }
+        let by_lane = c.engine_ops_by_engine(0);
+        assert_eq!(by_lane.len(), 2);
+        assert!(
+            by_lane.iter().all(|&ops| ops > 0),
+            "degenerate striping: per-lane ops {by_lane:?}"
+        );
+        assert_eq!(by_lane.iter().sum::<u64>(), c.engine_ops(0));
     }
 
     /// Threaded mode actually delivers pipelined ops and all complete.

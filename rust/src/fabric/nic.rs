@@ -85,6 +85,10 @@ struct QpState {
     qp: Arc<Qp>,
     rx: Arc<Queue<Submission>>,
     peer: NodeId,
+    /// The QP's node-wide index (`QpId::index`). With striped engines a
+    /// lane owns a subsequence of the node's QPs, so the position in
+    /// `EngineCore::qps` is not the QP id — this is.
+    global_idx: u32,
     inflight: VecDeque<InFlight>,
     placements: VecDeque<Placement>,
     last_arrival_ns: u64,
@@ -389,12 +393,30 @@ fn execute_arrival(
 pub(crate) struct EngineCore {
     nodes: Vec<Arc<NodeFabric>>,
     node: NodeId,
+    /// Which of the node's `engines_per_node` stripes this core is. A
+    /// QP with node-wide index `g` belongs to lane `g % engines_per_node`
+    /// — a stable assignment, so a QP's whole life (stamping, FIFO
+    /// execution, placement retirement) stays on one engine and per-QP
+    /// ordering is untouched by striping.
+    lane: u32,
+    /// `cfg.engines_per_node`, cached (the stripe modulus).
+    engines: u32,
+    /// Claim cursor over the node's QP table: node-wide indices
+    /// `< seen_global` have been examined (and claimed when ours).
+    seen_global: u32,
     cfg: FabricConfig,
     faults: Option<FaultPlan>,
     rng: Rng,
     fx: CqeFx,
     executed_ops: u64,
     qps: Vec<QpState>,
+    /// Occupancy model (`latency.engine_occupancy_ns > 0` only): no WQE
+    /// on this lane executes before this instant. Stays 0 when the term
+    /// is disabled, so the byte-compat fast paths below are untouched.
+    busy_until_ns: u64,
+    /// Occupancy model: round-robin cursor over `qps` so a saturating
+    /// QP cannot starve its lane-mates of execution quanta.
+    rr_exec: usize,
     /// Event-trace hash: folded over every executed arrival
     /// (node, qp, wr_id, verb tag, virtual timestamp). Two sim runs with
     /// the same seed must produce identical hashes on every engine — the
@@ -403,19 +425,34 @@ pub(crate) struct EngineCore {
 }
 
 impl EngineCore {
-    pub(crate) fn new(nodes: Vec<Arc<NodeFabric>>, node: NodeId, cfg: FabricConfig) -> Self {
+    pub(crate) fn new(nodes: Vec<Arc<NodeFabric>>, node: NodeId, lane: u32, cfg: FabricConfig) -> Self {
+        let engines = cfg.engines_per_node.max(1);
+        debug_assert!(lane < engines);
         let fault_seed = cfg.faults.as_ref().map(|f| f.seed).unwrap_or(0);
-        let rng = Rng::seeded(cfg.seed ^ ((node as u64) << 17) ^ fault_seed.rotate_left(31));
+        // Lane 0 keeps the exact single-engine stream (the XOR term is 0)
+        // so engines_per_node = 1 replays seed-era traces bit-for-bit;
+        // other lanes get independent streams.
+        let rng = Rng::seeded(
+            cfg.seed
+                ^ ((node as u64) << 17)
+                ^ fault_seed.rotate_left(31)
+                ^ (lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
         let faults = cfg.faults.clone();
         EngineCore {
             nodes,
             node,
+            lane,
+            engines,
+            seen_global: 0,
             cfg,
             faults,
             rng,
             fx: CqeFx { hold: None },
             executed_ops: 0,
             qps: Vec::new(),
+            busy_until_ns: 0,
+            rr_exec: 0,
             trace: 0,
         }
     }
@@ -426,15 +463,22 @@ impl EngineCore {
     }
 
     /// Pick up newly created QPs (submission queues appear after the
-    /// engine starts).
+    /// engine starts), claiming only this lane's stripe:
+    /// `qp_id % engines_per_node == lane`.
     pub(crate) fn pickup_qps(&mut self) {
-        let qp_count = self.me().qp_count();
-        while self.qps.len() < qp_count {
-            let qp = self.me().qp_engine_handle(self.qps.len() as u32);
+        let qp_count = self.me().qp_count() as u32;
+        while self.seen_global < qp_count {
+            let g = self.seen_global;
+            self.seen_global += 1;
+            if g % self.engines != self.lane {
+                continue;
+            }
+            let qp = self.me().qp_engine_handle(g);
             self.qps.push(QpState {
                 rx: qp.submission_queue(),
                 peer: qp.peer,
                 qp,
+                global_idx: g,
                 inflight: VecDeque::new(),
                 placements: VecDeque::new(),
                 last_arrival_ns: 0,
@@ -453,8 +497,23 @@ impl EngineCore {
     /// the scheduled crash-stop. Returns whether anything ran.
     pub(crate) fn step(&mut self, clock: &Clock) -> bool {
         self.pickup_qps();
-        let EngineCore { nodes, node, cfg, faults, rng, fx, executed_ops, qps, trace } = self;
+        let EngineCore {
+            nodes,
+            node,
+            lane,
+            cfg,
+            faults,
+            rng,
+            fx,
+            executed_ops,
+            qps,
+            busy_until_ns,
+            rr_exec,
+            trace,
+            ..
+        } = self;
         let node = *node;
+        let lane = *lane;
         let me = &nodes[node as usize];
         let mut did_work = false;
 
@@ -462,8 +521,8 @@ impl EngineCore {
             // Crash-stop: drain everything with error completions so the
             // dead node's local waiters (its service threads in the
             // simulation) unblock; execute nothing, transmit nothing.
-            for (idx, q) in qps.iter_mut().enumerate() {
-                let qpid = QpId { node, index: idx as u32 };
+            for q in qps.iter_mut() {
+                let qpid = QpId { node, index: q.global_idx };
                 while let Some(sub) = q.rx.try_pop() {
                     if sub.wqe.signaled {
                         q.qp.take_chain_error();
@@ -491,10 +550,11 @@ impl EngineCore {
                 }
             }
         } else {
-            // Mark this thread as the node's NIC engine for the checker
-            // (per-WQE DMA guards nest inside and restore this on drop).
-            let _engine = me.arena().checker().map(|_| ActorGuard::engine(node));
-            for (idx, q) in qps.iter_mut().enumerate() {
+            // Mark this thread as the node's NIC engine (this stripe's
+            // lane) for the checker — per-WQE DMA guards nest inside and
+            // restore this on drop.
+            let _engine = me.arena().checker().map(|_| ActorGuard::engine_lane(node, lane));
+            for q in qps.iter_mut() {
                 // 1. stamp new submissions
                 let now = clock.now_ns();
                 while let Some(sub) = q.rx.try_pop() {
@@ -545,11 +605,14 @@ impl EngineCore {
                     did_work = true;
                 }
                 // 2. execute due arrivals (FIFO per QP; a flapped QP
-                // executes nothing until it recovers)
-                if !q.qp.is_error() {
+                // executes nothing until it recovers). With the occupancy
+                // model on, execution instead happens in pass 2b below —
+                // this in-place loop is the zero-occupancy fast path,
+                // byte-for-byte the pre-occupancy behavior.
+                if !q.qp.is_error() && cfg.latency.engine_occupancy_ns == 0 {
                     while q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
                         let fl = q.inflight.pop_front().unwrap();
-                        let qpid = QpId { node, index: idx as u32 };
+                        let qpid = QpId { node, index: q.global_idx };
                         let tag = match &fl.wqe.verb {
                             Verb::Write { .. } => 1u64,
                             Verb::Read { .. } => 2,
@@ -561,7 +624,7 @@ impl EngineCore {
                         *trace = crate::util::mix64(
                             *trace
                                 ^ ((node as u64) << 48)
-                                ^ ((idx as u64) << 32)
+                                ^ ((q.global_idx as u64) << 32)
                                 ^ fl.wqe.wr_id.rotate_left(13)
                                 ^ (tag << 56)
                                 ^ now2,
@@ -585,16 +648,84 @@ impl EngineCore {
                 // 3. retire due placements
                 retire_due_placements(nodes, node, q, clock.now_ns(), cfg.chaotic_placement);
             }
+            // 2b. occupancy-modeled execution: the lane retires at most
+            // one due WQE per `engine_occupancy_ns`, round-robin across
+            // its QPs (per-QP FIFO still holds — only the front of each
+            // inflight queue is eligible). This makes engine count a
+            // modeled throughput axis: E lanes retire E WQEs per
+            // quantum, regardless of how many host cores back them.
+            let occ = cfg.latency.engine_occupancy_ns;
+            if occ > 0 && !qps.is_empty() {
+                loop {
+                    let now2 = clock.now_ns();
+                    if *busy_until_ns > now2 {
+                        break;
+                    }
+                    let k = qps.len();
+                    let mut ran = false;
+                    for i in 0..k {
+                        let qi = (*rr_exec + i) % k;
+                        let q = &mut qps[qi];
+                        if q.qp.is_error() {
+                            continue;
+                        }
+                        if q.inflight.front().map(|f| f.due_ns <= now2).unwrap_or(false) {
+                            let fl = q.inflight.pop_front().unwrap();
+                            let qpid = QpId { node, index: q.global_idx };
+                            let tag = match &fl.wqe.verb {
+                                Verb::Write { .. } => 1u64,
+                                Verb::Read { .. } => 2,
+                                Verb::ZeroLenRead => 3,
+                                Verb::FetchAdd { .. } => 4,
+                                Verb::CompareSwap { .. } => 5,
+                                Verb::Send { .. } => 6,
+                            };
+                            *trace = crate::util::mix64(
+                                *trace
+                                    ^ ((node as u64) << 48)
+                                    ^ ((q.global_idx as u64) << 32)
+                                    ^ fl.wqe.wr_id.rotate_left(13)
+                                    ^ (tag << 56)
+                                    ^ now2,
+                            );
+                            execute_arrival(
+                                nodes,
+                                cfg,
+                                faults.as_ref(),
+                                rng,
+                                fx,
+                                node,
+                                qpid,
+                                q,
+                                fl,
+                                now2,
+                            );
+                            *executed_ops += 1;
+                            *busy_until_ns = now2 + occ;
+                            *rr_exec = qi + 1;
+                            ran = true;
+                            break;
+                        }
+                    }
+                    if !ran {
+                        break;
+                    }
+                    did_work = true;
+                }
+            }
             // Scheduled crash-stop (fault injection): this node dies once
-            // its engine has executed the planned op count — either from
+            // its engines have executed the planned op count — either from
             // the construction-time plan or a runtime-armed threshold
-            // (`Cluster::crash_after_ops`).
-            nodes[node as usize].publish_engine_ops(*executed_ops);
+            // (`Cluster::crash_after_ops`). With striped engines the
+            // threshold is against the node *total* across lanes (equal
+            // to this lane's own count when engines_per_node = 1).
+            nodes[node as usize].publish_engine_ops(lane, *executed_ops);
+            let total = nodes[node as usize].engine_ops_total();
             let planned = faults
                 .as_ref()
                 .and_then(|f| f.crash_after)
-                .is_some_and(|(victim, after)| victim == node && *executed_ops >= after);
-            if planned || nodes[node as usize].crash_due(*executed_ops) {
+                .is_some_and(|(victim, after)| victim == node && total >= after);
+            if planned || nodes[node as usize].crash_due(total) {
                 nodes[node as usize].crash();
                 for n in nodes.iter() {
                     n.ring();
@@ -621,7 +752,7 @@ impl EngineCore {
         self.qps
             .iter()
             .all(|q| q.inflight.is_empty() && q.placements.is_empty() && q.rx.is_empty())
-            && self.me().qp_count() == self.qps.len()
+            && self.me().qp_count() == self.seen_global as usize
             && self.fx.hold.is_none()
     }
 
@@ -638,12 +769,16 @@ impl EngineCore {
                     || q.qp.is_error()
             });
         }
+        // Crash thresholds are against the node total across lanes (see
+        // `step`) — published counts, so every lane of the victim node
+        // sees the due crash and any one of them can apply it.
+        let total = me.engine_ops_total();
         if let Some((victim, after)) = self.faults.as_ref().and_then(|f| f.crash_after) {
-            if victim == self.node && self.executed_ops >= after {
+            if victim == self.node && total >= after {
                 return true;
             }
         }
-        if me.crash_due(self.executed_ops) {
+        if me.crash_due(total) {
             return true;
         }
         self.qps.iter().any(|q| {
@@ -658,7 +793,10 @@ impl EngineCore {
             if q.qp.is_error() {
                 return now >= q.flapped_until_ns;
             }
+            // Execution also waits out the lane's occupancy window
+            // (`busy_until_ns` is pinned to 0 when the term is off).
             q.inflight.front().map(|f| f.due_ns <= now).unwrap_or(false)
+                && now >= self.busy_until_ns
         })
     }
 
@@ -680,27 +818,32 @@ impl EngineCore {
                 continue;
             }
             if let Some(f) = q.inflight.front() {
-                fold(f.due_ns.max(q.flapped_until_ns));
+                // An arrival cannot execute inside the lane's occupancy
+                // window (0 when the term is off).
+                fold(f.due_ns.max(q.flapped_until_ns).max(self.busy_until_ns));
             }
         }
         next
     }
 }
 
-/// The per-node engine loop (threaded mode): drive an [`EngineCore`]
-/// against the wall clock, sleeping on the doorbell when idle.
+/// The per-node engine loop (threaded mode): drive one lane's
+/// [`EngineCore`] against the wall clock, sleeping on the doorbell when
+/// idle.
 pub(super) fn engine_loop(
     nodes: Vec<Arc<NodeFabric>>,
     node: NodeId,
+    lane: u32,
     cfg: FabricConfig,
     clock: Clock,
     shutdown: Arc<AtomicBool>,
 ) {
     let me = nodes[node as usize].clone();
-    let mut core = EngineCore::new(nodes, node, cfg);
+    let mut core = EngineCore::new(nodes, node, lane, cfg);
     let mut idle_iters: u32 = 0;
     loop {
         let doorbell = me.doorbell_value();
+        me.note_engine_step();
         let did_work = core.step(&clock);
         if !did_work {
             // A held-back completion must not outlive the burst that
@@ -713,13 +856,19 @@ pub(super) fn engine_loop(
             if shutdown.load(Ordering::Acquire) && core.fully_idle() {
                 break;
             }
-            // Nothing ran this pass: sleep until the next deadline (due
-            // arrival or placement) or until the doorbell rings. Burning
-            // a core spinning here starves application threads on small
+            // Nothing ran this pass: park until the next deadline (due
+            // arrival, placement, or flap recovery) or until a doorbell
+            // rings. An idle engine must not wake on its own: every
+            // state change that could give it work rings the doorbell
+            // (post, crash, revive, shutdown), so there is no polling
+            // cap here — the seed's 200 µs shutdown-poll cap burned
+            // ~5k wakeups/s per engine on an idle cluster. Burning a
+            // core spinning here starves application threads on small
             // hosts (EXPERIMENTS.md §Perf).
-            let now = clock.now_ns();
-            let next = core.next_due().unwrap_or(u64::MAX).min(now + 200_000); // 200 µs cap (shutdown poll)
-            let wait = next.saturating_sub(now);
+            let wait = core
+                .next_due()
+                .map(|t| t.saturating_sub(clock.now_ns()))
+                .unwrap_or(u64::MAX);
             if wait > 3_000 && idle_iters > 8 {
                 me.doorbell_wait(doorbell, wait);
             } else if idle_iters > 16 {

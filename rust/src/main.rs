@@ -19,7 +19,9 @@
 //! op-routing knob `--routing onesided|ship|adaptive` (how kvstore
 //! mutations reach a remote home: one-sided lock-and-write, shipped
 //! over the served request ring, or chosen per key by the heat
-//! tracker; see `docs/ARCHITECTURE.md § Op routing`).
+//! tracker; see `docs/ARCHITECTURE.md § Op routing`) and the per-node
+//! parallelism knob `--engines E` (E striped NIC engine threads per
+//! node, QPs assigned `qp_id % E`; also `LOCO_ENGINES`).
 //!
 //! `loco sim [--nodes N] [--rounds K] [--seed S]` runs a deterministic
 //! discrete-event schedule (single-threaded, virtual time) and prints
@@ -86,6 +88,12 @@ fn main() {
     // model directly.
     if args.iter().any(|a| a == "--signal-every") {
         std::env::set_var("LOCO_SIGNAL_EVERY", arg_u64(&args, "--signal-every", 16).to_string());
+    }
+    // Per-node parallelism knob (PR-10): --engines E flows through
+    // LOCO_ENGINES the same way (FabricConfig::threaded/sim read it);
+    // E NIC engine threads per node, QPs striped qp_id % E.
+    if args.iter().any(|a| a == "--engines") {
+        std::env::set_var("LOCO_ENGINES", arg_u64(&args, "--engines", 1).to_string());
     }
     // Op-routing knob (PR-8): --routing onesided|ship|adaptive flows
     // through LOCO_ROUTING the same way (KvConfig::default() reads it).
@@ -409,6 +417,7 @@ fn main() {
                 "loco — Library of Channel Objects (paper reproduction)\n\
                  usage: loco <barrier|fig4|fig5|fig7|micro|sim|join|check> [flags]\n\
                  write-path knobs (any subcommand): --signal-every N, --max-inline-words W\n\
+                 per-node parallelism (any subcommand): --engines E (or LOCO_ENGINES)\n\
                  op routing (fig5/chaos workloads): --routing onesided|ship|adaptive (or LOCO_ROUTING)\n\
                  replication (fig5/join): --replicas R (or LOCO_REPLICAS; --replicate = 2)\n\
                  sim: --nodes N --rounds K --seed S (or LOCO_SIM_SEED)\n\

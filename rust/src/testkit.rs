@@ -217,6 +217,10 @@ pub fn model_kv_config() -> KvConfig {
         // Sim delivery resolves `Auto` to full happens-before checking:
         // every model schedule runs under the race checker.
         check_races: None,
+        // Pinned unsharded: the mutation must-find calibrations assume
+        // one tracker ring; the kvstore's own shard tests and the
+        // multi-engine model schedule cover `tracker_shards > 1`.
+        tracker_shards: 1,
     }
 }
 
@@ -261,8 +265,23 @@ pub const MODEL_SPARE: NodeId = (MODEL_NODES - 1) as NodeId;
 /// `None` draws from the seeded RNG. The failure outcome is a pure
 /// function of `(ops, seed, plan)`.
 pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) -> ModelRun {
+    run_model_schedule_striped(ops, seed, plan, 1, model_kv_config())
+}
+
+/// [`run_model_schedule`] over `engines` striped NIC engines per node
+/// and an explicit kv config. The multi-engine determinism tier replays
+/// schedules at `engines = 2` (often with `tracker_shards > 1`): the
+/// reference-model agreement, the bit-identical trace, and checker
+/// silence must all survive striping.
+pub fn run_model_schedule_striped(
+    ops: &[ModelOp],
+    seed: u64,
+    plan: Option<Vec<u32>>,
+    engines: u32,
+    cfg: KvConfig,
+) -> ModelRun {
     let n = MODEL_NODES;
-    let cluster = Cluster::new(n, sim_fabric(seed));
+    let cluster = Cluster::new(n, sim_fabric(seed).with_engines(engines));
     let sim = crate::sim::SimExecutor::install(&cluster);
     if let Some(p) = plan {
         sim.force_plan(p);
@@ -273,7 +292,7 @@ pub fn run_model_schedule(ops: &[ModelOp], seed: u64, plan: Option<Vec<u32>>) ->
         m.membership().set_spares(1 << MODEL_SPARE);
     }
     let kvs: Vec<Arc<KvStore>> =
-        mgrs.iter().map(|m| KvStore::new(m, "kv", model_kv_config())).collect();
+        mgrs.iter().map(|m| KvStore::new(m, "kv", cfg.clone())).collect();
     for kv in &kvs {
         kv.wait_ready(Duration::from_secs(30));
     }

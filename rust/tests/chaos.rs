@@ -228,6 +228,13 @@ fn checker_clean(cluster: &Cluster, context: &str) {
 /// request-ring frames ride the same delay/reorder/dup/flap schedules
 /// as the one-sided path.
 fn run_seeded_history(seed: u64) {
+    run_seeded_history_striped(seed, 1, 1);
+}
+
+/// [`run_seeded_history`] with per-node parallelism knobs: `engines`
+/// striped NIC engine threads and `tracker_shards` tracker rings per
+/// node (PR-10's multi-engine chaos slice runs both at 2).
+fn run_seeded_history_striped(seed: u64, engines: u32, tracker_shards: usize) {
     let keys = 4u64;
     let ops_per_thread = 24u64;
     let cfg = KvConfig {
@@ -241,9 +248,10 @@ fn run_seeded_history(seed: u64) {
             1 => RouteMode::Adaptive,
             _ => RouteMode::OneSided,
         },
+        tracker_shards,
         ..Default::default()
     };
-    let (cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed), cfg);
+    let (cluster, mgrs, kvs) = kv_cluster(2, chaos_fabric(seed).with_engines(engines), cfg);
     let clock = Arc::new(Instant::now());
     let uid = Arc::new(AtomicU64::new(1));
 
@@ -334,6 +342,28 @@ fn chaos_linearizability_fault_matrix() {
         }
     }
     println!("chaos matrix: all {seeds} fault schedules linearizable");
+}
+
+/// PR-10: a chaos-tier seed slice at `engines_per_node = 2` with two
+/// tracker shards. The same contended histories, delay/reorder/dup/flap
+/// schedules, slab audits, and structural race checking (now over the
+/// widened `engine(node, lane)` actor set) must stay green when each
+/// node's WQE execution is striped across two engine threads and its
+/// tracker apply across two rings.
+#[test]
+fn chaos_multi_engine_seed_slice() {
+    if let Some(seed) = replay_seed() {
+        println!("LOCO_CHAOS_REPLAY: rerunning multi-engine schedule {seed} alone");
+        run_seeded_history_striped(seed, 2, 2);
+        return;
+    }
+    // A slice, not the full matrix: the E=1 matrix already sweeps the
+    // fault space; this pins that striping doesn't reintroduce races.
+    let seeds = (chaos_seeds() / 10).clamp(8, 24);
+    for seed in 0..seeds {
+        run_seeded_history_striped(seed, 2, 2);
+    }
+    println!("chaos multi-engine slice: all {seeds} schedules green at E=2");
 }
 
 /// Crash-stop + re-home under an active fault schedule: node D homes a

@@ -24,7 +24,7 @@ use loco::fabric::{Cluster, FabricConfig, LatencyModel, NodeId};
 use loco::sim::SimExecutor;
 use loco::testkit::{
     gen_model_ops, model_budget, model_kv_config, model_search, run_model_schedule,
-    save_counterexample, sim_fabric, sim_kv_cluster,
+    run_model_schedule_striped, save_counterexample, sim_fabric, sim_kv_cluster,
 };
 
 // ---- the model harness ------------------------------------------------
@@ -100,8 +100,9 @@ fn model_schedule_replay_is_bit_identical() {
 /// One seeded run: a 64-node simulated cluster under the chaos fault
 /// plan, every node hammering one shared remote counter. Returns the
 /// event-trace hash.
-fn run_counter_trace(seed: u64, n: usize, rounds: u64) -> u64 {
-    let cluster = Cluster::new(n, sim_fabric(seed).with_mem_words(1 << 16));
+fn run_counter_trace(seed: u64, n: usize, rounds: u64, engines: u32) -> u64 {
+    let cluster =
+        Cluster::new(n, sim_fabric(seed).with_mem_words(1 << 16).with_engines(engines));
     let sim = SimExecutor::install(&cluster);
     let mgrs: Vec<Arc<Manager>> =
         (0..n as NodeId).map(|i| Manager::new(cluster.clone(), i)).collect();
@@ -127,11 +128,18 @@ fn run_counter_trace(seed: u64, n: usize, rounds: u64) -> u64 {
 /// time), faults and all. Different seed ⇒ different trace.
 #[test]
 fn sim_64_nodes_same_seed_bit_identical() {
-    let a = run_counter_trace(42, 64, 3);
-    let b = run_counter_trace(42, 64, 3);
+    let a = run_counter_trace(42, 64, 3, 1);
+    let b = run_counter_trace(42, 64, 3, 1);
     assert_eq!(a, b, "same seed must replay a bit-identical event trace");
-    let c = run_counter_trace(43, 64, 3);
+    let c = run_counter_trace(43, 64, 3, 1);
     assert_ne!(a, c, "different seeds must explore different traces");
+    // PR-10: striped engines (two steppable engine actors per node, 128
+    // total) must preserve the same determinism contract.
+    let d = run_counter_trace(42, 64, 3, 2);
+    let e = run_counter_trace(42, 64, 3, 2);
+    assert_eq!(d, e, "same seed at engines_per_node = 2 must replay bit-identically");
+    let f = run_counter_trace(43, 64, 3, 2);
+    assert_ne!(d, f, "different seeds at engines_per_node = 2 must explore different traces");
 }
 
 // ---- virtual-time deadline regression ---------------------------------
@@ -371,6 +379,32 @@ fn checker_live_and_silent_on_green_schedules() {
             run.diagnostics[0]
         );
     }
+}
+
+/// PR-10: the multi-engine tier. One model schedule — inserts, updates,
+/// removes, a crash, a join — replayed on a cluster with two striped
+/// NIC engines per node and two tracker shards per node. The reference
+/// model must agree, the widened `engine(n, e)` actor set must produce
+/// zero race diagnostics, and the same seed must replay to the
+/// identical event-trace hash. (CI's model job runs this tier by name.)
+#[test]
+fn model_schedule_multi_engine_clean_and_deterministic() {
+    let ops = gen_model_ops(0xE2E2, 3, 30);
+    let cfg = KvConfig { tracker_shards: 2, ..model_kv_config() };
+    let a = run_model_schedule_striped(&ops, 0xE2E2, None, 2, cfg.clone());
+    if !any_mutant() {
+        assert_eq!(
+            a.failure, None,
+            "striped schedule must agree with the reference model and stay checker-clean"
+        );
+        assert!(
+            a.diagnostics.is_empty(),
+            "engines_per_node = 2 must stay race-checker-clean; first: {}",
+            a.diagnostics[0]
+        );
+    }
+    let b = run_model_schedule_striped(&ops, 0xE2E2, None, 2, cfg);
+    assert_eq!(a.trace, b.trace, "E=2 same seed must replay a bit-identical trace");
 }
 
 /// Mutation smoke-check for rule (c): `--cfg loco_mutant_fence` drops

@@ -84,6 +84,12 @@ PINNED_BARS = [
         "4 nodes LOCO",
         "4 nodes OpenMPI",
     ),
+    (
+        "PR-10: four striped engines over one (structural WQE throughput)",
+        "fig4_engine_scaling",
+        "E4 structural",
+        "E1 structural",
+    ),
     # BENCH_fig5.json
     (
         "fig5: fully-economized write path over the PR-4 baseline (YCSB-A)",

@@ -22,6 +22,9 @@ unset LOCO_FULL
 
 LOCO_BENCH_JSON=BENCH_fig5.json cargo bench --bench fig5_kvstore
 LOCO_BENCH_JSON=BENCH_micro.json cargo bench --bench micro_channels
+# fig4_locking also emits the PR-10 fig4_engine_scaling rows (E1/E4
+# structural + app throughput), replacing their hand-seeded ratio-floor
+# values with measured ones.
 LOCO_BENCH_JSON=BENCH_fig4.json cargo bench --bench fig4_locking
 
 echo "refreshed: BENCH_micro.json BENCH_fig4.json BENCH_fig5.json (provenance: measured)"
